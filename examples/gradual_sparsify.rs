@@ -1,0 +1,87 @@
+//! Gradual structure induction — the paper's §7 future-work experiment.
+//!
+//! Compares, at equal step budget and equal *final* RBGP4 structure:
+//!   (a) **predefined** — the mask is fixed before training (the paper's
+//!       main method), vs.
+//!   (b) **gradual**  — training starts dense and the mask tightens through
+//!       a nested chain of supersets (dense → intermediate → final RBGP4).
+//!
+//! The paper conjectures (b) "could lead to more accurate models"; this
+//! harness measures it on the CIFAR-like task across sparsities and seeds.
+//!
+//! Run: `cargo run --release --example gradual_sparsify`
+//! Env: RBGP_STEPS (default 250), RBGP_SEEDS (default 3).
+
+use rbgp::data::CifarLike;
+use rbgp::sparsity::rbgp4::Rbgp4Mask;
+use rbgp::train_native::masks::rbgp4_factorization;
+use rbgp::train_native::{train_gradual, GradualSchedule, MaskedMlp, NativeTrainConfig};
+use rbgp::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::var("RBGP_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(250);
+    let seeds: u64 = std::env::var("RBGP_SEEDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let (d, h, c) = (256usize, 256usize, 16usize);
+    let noise = 1.1f32;
+
+    println!("== Gradual RBGP4 structure induction (paper §7 future work)");
+    println!("   MLP {d}->{h}->{c}, {steps} steps, mean of {seeds} seeds, schedule dense→25%→60%→final\n");
+    println!(
+        "{:>22} {:>14} {:>12} {:>8}",
+        "final sparsity (o,i)", "predefined%", "gradual%", "Δ"
+    );
+
+    for total_sp in [0.5f64, 0.75, 0.875] {
+        let cfg = rbgp4_factorization(h, d, total_sp)?;
+        let (mut pre_sum, mut grad_sum) = (0.0f64, 0.0f64);
+        for seed in 0..seeds {
+            let tc = NativeTrainConfig {
+                steps,
+                batch: 64,
+                lr: 0.05,
+                seed,
+                ..Default::default()
+            };
+            // (a) predefined
+            let mut rng = Rng::new(900 + seed);
+            let mask = Rbgp4Mask::sample(cfg, &mut rng)?.dense();
+            let mut mlp = MaskedMlp::new(d, h, c, mask, &mut rng);
+            let mut data = CifarLike::new(d, c, 77 + seed).with_noise(noise);
+            let (_, acc) = mlp.train(&mut data, &tc);
+            pre_sum += acc;
+            // (b) gradual (same seeds → same data stream and final-mask RNG)
+            let mut rng = Rng::new(900 + seed);
+            let mut data = CifarLike::new(d, c, 77 + seed).with_noise(noise);
+            let (_, acc) = train_gradual(
+                d,
+                h,
+                c,
+                cfg,
+                &GradualSchedule::default(),
+                &tc,
+                &mut data,
+                &mut rng,
+            )?;
+            grad_sum += acc;
+        }
+        let (pre, grad) = (
+            100.0 * pre_sum / seeds as f64,
+            100.0 * grad_sum / seeds as f64,
+        );
+        println!(
+            "{:>22} {:>14.2} {:>12.2} {:>+8.2}",
+            format!("{:.3} ({},{})", cfg.sparsity(), cfg.go.sp, cfg.gi.sp),
+            pre,
+            grad,
+            grad - pre
+        );
+    }
+    println!("\ngradual_sparsify OK");
+    Ok(())
+}

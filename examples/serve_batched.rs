@@ -1,0 +1,68 @@
+//! Batched inference serving demo: multiple client threads fire single-
+//! sample requests at the L3 coordinator, whose dynamic batcher groups them
+//! into full batches for the AOT forward executable (the Pallas-kernel
+//! inference path). Reports throughput and latency percentiles.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_batched`
+
+use rbgp::coordinator::{InferenceServer, ServerConfig};
+use rbgp::data::CifarLike;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from(
+        std::env::var("RBGP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
+    );
+    let total: usize = std::env::var("RBGP_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(512);
+    let clients = 8usize;
+
+    println!("== RBGP batched inference server");
+    let server = InferenceServer::start(
+        dir,
+        ServerConfig {
+            max_wait: Duration::from_millis(4),
+            ..ServerConfig::default()
+        },
+    )?;
+    println!(
+        "   model: in_dim {}, classes {}, max batch {}",
+        server.in_dim, server.classes, server.batch
+    );
+
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let server = server.clone();
+            scope.spawn(move || {
+                let mut data = CifarLike::new(server.in_dim, server.classes, 1000 + c as u64);
+                for _ in 0..total / clients {
+                    let sample = data.test_batch(1);
+                    let logits = server.infer(sample.x).expect("inference failed");
+                    assert_eq!(logits.len(), server.classes);
+                    assert!(logits.iter().all(|v| v.is_finite()));
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let (reqs, batches) = server.counters();
+    let stats = server.latency_stats().expect("no latency samples");
+    println!("\nserved {reqs} requests in {batches} executed batches over {wall:.2}s");
+    println!("   mean batch occupancy: {:.1} samples", reqs as f64 / batches as f64);
+    println!("   throughput: {:.1} req/s", reqs as f64 / wall);
+    println!(
+        "   latency: p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  max {:.2} ms",
+        stats.p50 * 1e3,
+        stats.p95 * 1e3,
+        stats.p99 * 1e3,
+        stats.max * 1e3
+    );
+    assert_eq!(reqs, total / clients * clients);
+    println!("serve_batched OK");
+    Ok(())
+}

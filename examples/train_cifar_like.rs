@@ -1,0 +1,66 @@
+//! **End-to-end driver** (DESIGN.md §End-to-end validation).
+//!
+//! Proves all three layers compose: the L1 Pallas RBGP4MM kernel is inside
+//! the L2 JAX model, which was AOT-lowered to `artifacts/*.hlo.txt` by
+//! `make artifacts`; this Rust binary loads those executables via PJRT and
+//! trains the sparse MLP on the synthetic CIFAR-like task for a few hundred
+//! steps, logging the loss curve and held-out accuracy. Python never runs.
+//!
+//! Run: `make artifacts && cargo run --release --example train_cifar_like`
+//! Options via env: RBGP_STEPS (default 300), RBGP_SEED, RBGP_ARTIFACTS.
+//!
+//! The resulting loss curve / accuracy are recorded in EXPERIMENTS.md
+//! (§End-to-end training).
+
+use rbgp::coordinator::{TrainConfig, Trainer};
+use std::path::PathBuf;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from(
+        std::env::var("RBGP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
+    );
+    let steps = env_usize("RBGP_STEPS", 300);
+    let seed = env_usize("RBGP_SEED", 0) as u64;
+
+    let config = TrainConfig {
+        steps,
+        lr0: 0.1,
+        seed,
+        eval_every: (steps / 6).max(1),
+        eval_batches: 4,
+        ..TrainConfig::default()
+    };
+
+    println!("== RBGP end-to-end training driver");
+    println!("   artifacts: {}", dir.display());
+    let mut trainer = Trainer::new(&dir, config)?;
+    println!(
+        "   model: batch {}, {} parameter tensors (RBGP4 compact storage)",
+        trainer.batch_size(),
+        trainer.params.len()
+    );
+
+    let (final_loss, final_acc) = trainer.run()?;
+
+    // Loss curve (subsampled) for EXPERIMENTS.md.
+    println!("\nloss curve (step, loss):");
+    let losses = &trainer.metrics.losses;
+    let stride = (losses.len() / 20).max(1);
+    for (s, l) in losses.iter().step_by(stride) {
+        println!("  {s:>5}  {l:.4}");
+    }
+
+    let first_loss = losses.first().map(|&(_, l)| l).unwrap_or(f32::NAN);
+    println!("\nsummary: loss {first_loss:.4} → {final_loss:.4}, accuracy {:.2}%", final_acc * 100.0);
+    anyhow::ensure!(
+        final_loss < 0.5 * first_loss,
+        "training did not converge: {first_loss} -> {final_loss}"
+    );
+    anyhow::ensure!(final_acc > 0.5, "accuracy {final_acc} too low");
+    println!("train_cifar_like OK");
+    Ok(())
+}

@@ -1,0 +1,252 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Each artifact `<name>.hlo.txt` ships with `<name>.json` metadata describing
+the exact positional input/output signature (names, shapes, dtypes), the
+model spec, and the sampled masks — everything the Rust coordinator needs
+to drive the executable without Python.
+
+Artifacts (per model config):
+  forward        — Pallas-kernel inference: (params..., x) -> logits
+  train_step     — fused SGD-momentum step:
+                   (params..., velocities..., x, y, lr) ->
+                   (new_params..., new_velocities..., loss)
+  train_step_kd  — same plus teacher_logits input (knowledge distillation)
+  smoke          — tiny matmul+2 graph for runtime plumbing tests
+
+Usage: python -m compile.aot --out ../artifacts [--batch 256] [--seed 0]
+       [--sp-o 0.5] [--sp-i 0.5] [--hidden 1024,1024] [--in-dim 1024]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+__all__ = ["to_hlo_text", "export_artifacts"]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the Rust
+    side can uniformly `to_tuple`)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _sig(named_arrays: list[tuple[str, jnp.ndarray]]) -> list[dict]:
+    return [
+        {"name": n, "shape": list(a.shape), "dtype": str(a.dtype)}
+        for n, a in named_arrays
+    ]
+
+
+def _write(out_dir: str, name: str, hlo: str, meta: dict) -> None:
+    # Guard against XLA's default constant elision: without
+    # print_large_constants=True, big literals (e.g. the baked adjacency
+    # arrays) print as "...}" and the text parser silently materializes
+    # garbage — the executable then runs but computes the wrong function.
+    if "..." in hlo:
+        raise RuntimeError(
+            f"{name}: HLO text contains elided constants ('...'); "
+            "as_hlo_text must be called with print_large_constants=True"
+        )
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(hlo)
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+    print(f"  wrote {name}.hlo.txt ({len(hlo)} chars)")
+
+
+def _param_order(params: dict) -> list[str]:
+    """Canonical positional order: sorted names (stable contract with Rust)."""
+    return sorted(params.keys())
+
+
+def export_artifacts(
+    out_dir: str,
+    batch: int = 256,
+    in_dim: int = 1024,
+    hidden: tuple[int, ...] = (1024, 1024),
+    classes: int = 10,
+    sp_o: float = 0.5,
+    sp_i: float = 0.5,
+    seed: int = 0,
+) -> dict:
+    """Lower and write every artifact; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    spec = M.default_spec(
+        in_dim=in_dim, hidden=hidden, classes=classes, sp_o=sp_o, sp_i=sp_i, seed=seed
+    )
+    params = M.init_params(spec, seed)
+    order = _param_order(params)
+    pshapes = [(k, params[k]) for k in order]
+    x = jnp.zeros((batch, in_dim), jnp.float32)
+    y = jnp.zeros((batch, classes), jnp.float32)
+    lr = jnp.zeros((), jnp.float32)
+
+    common_meta = {
+        "batch": batch,
+        "in_dim": in_dim,
+        "hidden": list(hidden),
+        "classes": classes,
+        "sp_o": sp_o,
+        "sp_i": sp_i,
+        "overall_sparsity": 1.0 - (1.0 - sp_o) * (1.0 - sp_i),
+        "seed": seed,
+        "param_order": order,
+        "layer_configs": [c.to_json_dict() for c in spec.layer_configs],
+        "masks": [json.loads(m.to_json()) for m in spec.masks],
+    }
+
+    # ---- forward (Pallas inference path) --------------------------------
+    def fwd_flat(*args):
+        ps = dict(zip(order, args[: len(order)]))
+        xx = args[len(order)]
+        return (M.forward_pallas(ps, xx, spec),)
+
+    lowered = jax.jit(fwd_flat).lower(*[p for _, p in pshapes], x)
+    _write(
+        out_dir,
+        "forward",
+        to_hlo_text(lowered),
+        {
+            **common_meta,
+            "kind": "forward",
+            "inputs": _sig(pshapes + [("x", x)]),
+            "outputs": [{"name": "logits", "shape": [batch, classes], "dtype": "float32"}],
+        },
+    )
+
+    # ---- train_step (no KD) ---------------------------------------------
+    def step_flat(*args):
+        k = len(order)
+        ps = dict(zip(order, args[:k]))
+        vs = dict(zip(order, args[k : 2 * k]))
+        xx, yy, lrr = args[2 * k], args[2 * k + 1], args[2 * k + 2]
+        np_, nv_, loss = M.train_step(ps, vs, xx, yy, lrr, spec)
+        return tuple(np_[n] for n in order) + tuple(nv_[n] for n in order) + (loss,)
+
+    vel = {k: jnp.zeros_like(v) for k, v in params.items()}
+    vshapes = [(f"v_{k}", vel[k]) for k in order]
+    step_args = [p for _, p in pshapes] + [v for _, v in vshapes] + [x, y, lr]
+    lowered = jax.jit(step_flat).lower(*step_args)
+    _write(
+        out_dir,
+        "train_step",
+        to_hlo_text(lowered),
+        {
+            **common_meta,
+            "kind": "train_step",
+            "inputs": _sig(pshapes + vshapes + [("x", x), ("y", y), ("lr", lr)]),
+            "outputs": _sig(
+                [(f"new_{k}", params[k]) for k in order]
+                + [(f"new_v_{k}", vel[k]) for k in order]
+                + [("loss", lr)]
+            ),
+        },
+    )
+
+    # ---- train_step_kd (teacher logits input) ---------------------------
+    def step_kd_flat(*args):
+        k = len(order)
+        ps = dict(zip(order, args[:k]))
+        vs = dict(zip(order, args[k : 2 * k]))
+        xx, yy, tl, lrr = args[2 * k], args[2 * k + 1], args[2 * k + 2], args[2 * k + 3]
+        np_, nv_, loss = M.train_step(ps, vs, xx, yy, lrr, spec, teacher_logits=tl)
+        return tuple(np_[n] for n in order) + tuple(nv_[n] for n in order) + (loss,)
+
+    tl = jnp.zeros((batch, classes), jnp.float32)
+    kd_args = [p for _, p in pshapes] + [v for _, v in vshapes] + [x, y, tl, lr]
+    lowered = jax.jit(step_kd_flat).lower(*kd_args)
+    _write(
+        out_dir,
+        "train_step_kd",
+        to_hlo_text(lowered),
+        {
+            **common_meta,
+            "kind": "train_step_kd",
+            "inputs": _sig(
+                pshapes + vshapes + [("x", x), ("y", y), ("teacher_logits", tl), ("lr", lr)]
+            ),
+            "outputs": _sig(
+                [(f"new_{k}", params[k]) for k in order]
+                + [(f"new_v_{k}", vel[k]) for k in order]
+                + [("loss", lr)]
+            ),
+        },
+    )
+
+    # ---- smoke (runtime plumbing test) ----------------------------------
+    def smoke(a, b):
+        return (jnp.matmul(a, b) + 2.0,)
+
+    s = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    _write(
+        out_dir,
+        "smoke",
+        to_hlo_text(jax.jit(smoke).lower(s, s)),
+        {
+            "kind": "smoke",
+            "inputs": [
+                {"name": "a", "shape": [2, 2], "dtype": "float32"},
+                {"name": "b", "shape": [2, 2], "dtype": "float32"},
+            ],
+            "outputs": [{"name": "out", "shape": [2, 2], "dtype": "float32"}],
+        },
+    )
+
+    # ---- initial parameter values (so Rust starts from the same init) ---
+    init_blob = {k: np.asarray(v).reshape(-1).tolist() for k, v in params.items()}
+    with open(os.path.join(out_dir, "init_params.json"), "w") as f:
+        json.dump(init_blob, f)
+    print(f"  wrote init_params.json")
+
+    manifest = {"artifacts": ["forward", "train_step", "train_step_kd", "smoke"], **common_meta}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  wrote manifest.json")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--in-dim", type=int, default=1024)
+    ap.add_argument("--hidden", default="1024,1024")
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--sp-o", type=float, default=0.5)
+    ap.add_argument("--sp-i", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    hidden = tuple(int(h) for h in args.hidden.split(",") if h)
+    print(f"AOT: lowering artifacts to {args.out}")
+    export_artifacts(
+        args.out,
+        batch=args.batch,
+        in_dim=args.in_dim,
+        hidden=hidden,
+        classes=args.classes,
+        sp_o=args.sp_o,
+        sp_i=args.sp_i,
+        seed=args.seed,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,269 @@
+"""Ramanujan bipartite graph generation — build-time Python mirror.
+
+The Rust substrate (`rust/src/graph/`) is the production implementation;
+this module mirrors the same constructions (2-lifts of complete bipartite
+graphs, rejection sampling on the Ramanujan bound, RBGP4 mask layout) so
+that
+
+* `aot.py` can bake a mask's structure into AOT artifacts without a Rust
+  round-trip, and
+* pytest can cross-check the Pallas kernel against masks with the exact
+  compact layout the Rust side produces (ascending-column order per row).
+
+Masks serialize to the same JSON schema `rust/src/sparsity/rbgp4.rs` uses,
+so either side can generate and the other consume.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = [
+    "GraphSpec",
+    "Rbgp4Config",
+    "Rbgp4Mask",
+    "lift2",
+    "sparse_biregular_by_lifts",
+    "ramanujan_bound",
+    "is_ramanujan",
+    "generate_ramanujan",
+]
+
+
+def lift2(adj: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """One random 2-lift of a biregular bipartite graph.
+
+    `adj` is (nu, dl) int — sorted adjacency rows. Returns (2nu, dl).
+    Edge (u, v) keeps {(u,v),(u',v')} or crosses to {(u,v'),(u',v)} i.i.d.
+    """
+    nu, dl = adj.shape
+    nv = int(adj.max()) + 1 if adj.size else 0
+    cross = rng.integers(0, 2, size=adj.shape, dtype=np.int64).astype(bool)
+    top = np.where(cross, adj + nv, adj)
+    bot = np.where(cross, adj, adj + nv)
+    out = np.concatenate([top, bot], axis=0)
+    return np.sort(out, axis=1)
+
+
+def lifts_for_sparsity(sp: float) -> int:
+    """Number of 2-lifts for dyadic sparsity sp = 1 - 2^-k."""
+    if not 0.0 <= sp < 1.0:
+        raise ValueError(f"sparsity {sp} out of [0,1)")
+    k = round(math.log2(1.0 / (1.0 - sp)))
+    if abs((1.0 - 0.5**k) - sp) > 1e-9:
+        raise ValueError(f"sparsity {sp} is not dyadic (1 - 2^-k)")
+    return k
+
+
+def sparse_biregular_by_lifts(m: int, n: int, sp: float, rng: np.random.Generator) -> np.ndarray:
+    """(m × n) biregular graph of dyadic sparsity sp via repeated 2-lifts
+    of the complete bipartite graph (paper Appendix 8.1). Returns sorted
+    adjacency (m, dl) with dl = (1-sp)·n."""
+    k = lifts_for_sparsity(sp)
+    frac = 0.5**k
+    bm, bn = round(m * frac), round(n * frac)
+    if bm << k != m or bn << k != n:
+        raise ValueError(f"{m}x{n} not divisible by 2^{k} for sparsity {sp}")
+    if bm < 1 or bn < 1:
+        raise ValueError(f"sparsity {sp} too high for {m}x{n}")
+    adj = np.tile(np.arange(bn, dtype=np.int64), (bm, 1))
+    for _ in range(k):
+        adj = lift2(adj, rng)
+    return adj
+
+
+def ramanujan_bound(dl: int, dr: int) -> float:
+    return math.sqrt(max(dl - 1, 0)) + math.sqrt(max(dr - 1, 0))
+
+
+def _second_singular(adj: np.ndarray, nv: int) -> float:
+    nu, dl = adj.shape
+    ba = np.zeros((nu, nv), dtype=np.float64)
+    ba[np.arange(nu)[:, None], adj] = 1.0
+    s = np.linalg.svd(ba, compute_uv=False)
+    return float(s[1]) if len(s) > 1 else 0.0
+
+
+def is_ramanujan(adj: np.ndarray, nv: int) -> bool:
+    """Check λ₂ ≤ √(dl−1) + √(dr−1) for a biregular adjacency."""
+    nu, dl = adj.shape
+    dr = nu * dl // nv
+    lam2 = _second_singular(adj, nv)
+    return lam2 <= ramanujan_bound(dl, dr) + 1e-9
+
+
+def generate_ramanujan(
+    m: int, n: int, sp: float, rng: np.random.Generator, max_attempts: int = 64
+) -> np.ndarray:
+    """Rejection-sample 2-lift chains until Ramanujan; falls back to the
+    best-λ₂ sample (still an expander) after `max_attempts`."""
+    if sp == 0.0:
+        return np.tile(np.arange(n, dtype=np.int64), (m, 1))
+    best, best_lam = None, float("inf")
+    for _ in range(max_attempts):
+        adj = sparse_biregular_by_lifts(m, n, sp, rng)
+        lam2 = _second_singular(adj, n)
+        nu, dl = adj.shape
+        if lam2 <= ramanujan_bound(dl, nu * dl // n) + 1e-9:
+            return adj
+        if lam2 < best_lam:
+            best, best_lam = adj, lam2
+    return best
+
+
+@dataclass(frozen=True)
+class GraphSpec:
+    nu: int
+    nv: int
+    sp: float
+
+    @property
+    def dl(self) -> int:
+        return round((1.0 - self.sp) * self.nv)
+
+
+@dataclass(frozen=True)
+class Rbgp4Config:
+    """Mirror of rust Rbgp4Config: G = G_o ⊗ G_r ⊗ G_i ⊗ G_b."""
+
+    go: GraphSpec
+    gr: tuple[int, int]
+    gi: GraphSpec
+    gb: tuple[int, int]
+
+    @property
+    def rows(self) -> int:
+        return self.go.nu * self.gr[0] * self.gi.nu * self.gb[0]
+
+    @property
+    def cols(self) -> int:
+        return self.go.nv * self.gr[1] * self.gi.nv * self.gb[1]
+
+    @property
+    def tile_m(self) -> int:
+        return self.gr[0] * self.gi.nu * self.gb[0]
+
+    @property
+    def tile_k(self) -> int:
+        return self.gr[1] * self.gi.nv * self.gb[1]
+
+    @property
+    def d_o(self) -> int:
+        return self.go.dl
+
+    @property
+    def d_i(self) -> int:
+        return self.gi.dl
+
+    @property
+    def tile_row_nnz(self) -> int:
+        return self.gr[1] * self.d_i * self.gb[1]
+
+    @property
+    def row_nnz(self) -> int:
+        return self.d_o * self.tile_row_nnz
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - (1.0 - self.go.sp) * (1.0 - self.gi.sp)
+
+    def to_json_dict(self) -> dict:
+        return {
+            "go_nu": self.go.nu,
+            "go_nv": self.go.nv,
+            "go_sp": self.go.sp,
+            "gr_nu": self.gr[0],
+            "gr_nv": self.gr[1],
+            "gi_nu": self.gi.nu,
+            "gi_nv": self.gi.nv,
+            "gi_sp": self.gi.sp,
+            "gb_nu": self.gb[0],
+            "gb_nv": self.gb[1],
+        }
+
+    @staticmethod
+    def from_json_dict(d: dict) -> "Rbgp4Config":
+        return Rbgp4Config(
+            go=GraphSpec(int(d["go_nu"]), int(d["go_nv"]), float(d["go_sp"])),
+            gr=(int(d["gr_nu"]), int(d["gr_nv"])),
+            gi=GraphSpec(int(d["gi_nu"]), int(d["gi_nv"]), float(d["gi_sp"])),
+            gb=(int(d["gb_nu"]), int(d["gb_nv"])),
+        )
+
+
+@dataclass
+class Rbgp4Mask:
+    """A sampled RBGP4 mask: config + the two sparse base adjacencies.
+
+    Layout contract (identical to rust `Rbgp4Mask`):
+      row u = ((u_o·MR + u_r)·MI + u_i)·MB + u_b
+      non-zeros of row u, ascending column order, are
+      {((adj_o[u_o,ko]·NR + vr)·NI + adj_i[u_i,ki])·NB + vb}
+      iterated lexicographically over (ko, vr, ki, vb).
+    """
+
+    config: Rbgp4Config
+    adj_o: np.ndarray  # (m_o, d_o) int, sorted rows
+    adj_i: np.ndarray  # (m_i, d_i) int, sorted rows
+
+    @staticmethod
+    def sample(config: Rbgp4Config, seed: int) -> "Rbgp4Mask":
+        rng = np.random.default_rng(seed)
+        adj_o = generate_ramanujan(config.go.nu, config.go.nv, config.go.sp, rng)
+        adj_i = generate_ramanujan(config.gi.nu, config.gi.nv, config.gi.sp, rng)
+        return Rbgp4Mask(config, adj_o, adj_i)
+
+    def local_cols(self) -> np.ndarray:
+        """(m_i, tile_row_nnz) tile-local columns per u_i (ascending)."""
+        c = self.config
+        nr, ni, nb = c.gr[1], c.gi.nv, c.gb[1]
+        vr = np.arange(nr)[:, None, None]
+        vi = self.adj_i[:, None, :, None]  # (m_i, 1, d_i, 1)
+        vb = np.arange(nb)[None, None, :]
+        local = (vr * ni + vi) * nb + vb  # (m_i, nr, d_i, nb)
+        return local.reshape(c.gi.nu, c.tile_row_nnz)
+
+    def col_index(self) -> np.ndarray:
+        """(rows, row_nnz) absolute column index of every stored non-zero."""
+        c = self.config
+        lc = self.local_cols()  # (m_i, trn)
+        # Absolute col = adj_o[u_o, ko]*TK + local. Build per (u_o, u_i).
+        tiles = self.adj_o * c.tile_k  # (m_o, d_o) base offsets
+        # (m_o, m_i, d_o, trn)
+        cols = tiles[:, None, :, None] + lc[None, :, None, :]
+        cols = cols.reshape(c.go.nu, c.gi.nu, c.row_nnz)
+        # Expand to full row order (u_o, u_r, u_i, u_b).
+        cols = np.broadcast_to(
+            cols[:, None, :, None, :],
+            (c.go.nu, c.gr[0], c.gi.nu, c.gb[0], c.row_nnz),
+        )
+        return cols.reshape(c.rows, c.row_nnz).astype(np.int32)
+
+    def dense(self) -> np.ndarray:
+        """Dense 0/1 mask (rows × cols)."""
+        c = self.config
+        m = np.zeros((c.rows, c.cols), dtype=np.float32)
+        cols = self.col_index()
+        m[np.arange(c.rows)[:, None], cols] = 1.0
+        return m
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "config": self.config.to_json_dict(),
+                "adj_o": [int(x) for x in self.adj_o.reshape(-1)],
+                "adj_i": [int(x) for x in self.adj_i.reshape(-1)],
+            }
+        )
+
+    @staticmethod
+    def from_json(text: str) -> "Rbgp4Mask":
+        d = json.loads(text)
+        config = Rbgp4Config.from_json_dict(d["config"])
+        adj_o = np.array(d["adj_o"], dtype=np.int64).reshape(config.go.nu, config.d_o)
+        adj_i = np.array(d["adj_i"], dtype=np.int64).reshape(config.gi.nu, config.d_i)
+        return Rbgp4Mask(config, adj_o, adj_i)

@@ -1,0 +1,162 @@
+"""L1 — Pallas RBGP4MM kernel.
+
+`O = W_s · I` with `W_s` in RBGP4 compact storage, as a Pallas kernel whose
+grid/BlockSpec structure is the TPU adaptation of the paper's Algorithm 1
+(DESIGN.md §Hardware-Adaptation):
+
+* grid = (m_o, N/TN, d_o): one (TM × TN) output block per (u_o, jn) —
+  the "thread block" — stepped d_o times — the `G_o`-skipped steps. Zero
+  tiles of `W_s` are *never* visited: the step axis enumerates non-zero
+  tiles only.
+* `I` block index_map reads the scalar-prefetched `adj_o` to gather the
+  right (TK × TN) input tile per step — the HBM→VMEM analogue of Figure 1's
+  DRAM→shared-memory tile load.
+* inside the kernel one einsum contracts the compact (MR·MI·MB × trn)
+  weight block against the `adj_i`-gathered rows of the input tile: the MXU
+  sees a dense batched matmul; row repetition (`G_r`, `G_b`) appears as the
+  MR·MB batch dimensions reusing each gathered row — the register-reuse
+  analogue.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU efficiency is estimated from the VMEM footprint
+(see `vmem_footprint`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..graphs import Rbgp4Config, Rbgp4Mask
+
+__all__ = ["rbgp4mm_pallas", "make_rbgp4mm", "vmem_footprint"]
+
+
+def _kernel(adj_ref, data_ref, lc_ref, i_ref, o_ref, *, c: Rbgp4Config, tn: int):
+    """One (u_o, jn, ko) grid step: accumulate a packed step into o_ref."""
+    del adj_ref  # consumed by the index_maps, not the body
+    ko = pl.program_id(2)
+
+    @pl.when(ko == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    mr, mi, mb = c.gr[0], c.gi.nu, c.gb[0]
+    trn = c.tile_row_nnz
+    wk = data_ref[...]  # (TM, trn) — this step's compact panel
+    itile = i_ref[...]  # (TK, TN) — the adj_o-gathered input tile
+    lc = lc_ref[...]  # (m_i, trn) — intra-tile gather pattern
+    # adj_i gather: (m_i, trn, TN) rows of the input tile.
+    gathered = itile[lc.reshape(-1), :].reshape(mi, trn, tn)
+    # Compact weights in (u_r, u_i, u_b) row order -> batch by u_i.
+    w4 = wk.reshape(mr, mi, mb, trn).transpose(1, 0, 2, 3)  # (mi, mr, mb, trn)
+    part = jnp.einsum(
+        "mrbt,mtn->mrbn", w4, gathered, preferred_element_type=o_ref.dtype
+    )
+    o_ref[...] += part.transpose(1, 0, 2, 3).reshape(c.tile_m, tn)
+
+
+def _pick_tn(n: int) -> int:
+    """Largest power-of-two divisor of n, capped at 256."""
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if n % cand == 0:
+            return cand
+    return n
+
+
+@functools.partial(jax.jit, static_argnames=("config", "tn"))
+def rbgp4mm_pallas(
+    data: jnp.ndarray,
+    i: jnp.ndarray,
+    adj_o: jnp.ndarray,
+    local_cols: jnp.ndarray,
+    config: Rbgp4Config,
+    tn: int | None = None,
+) -> jnp.ndarray:
+    """RBGP4MM via Pallas (interpret mode).
+
+    data:       (rows, row_nnz) f32 compact weights
+    i:          (K, N) f32, N divisible by the chosen TN
+    adj_o:      (m_o·d_o,) i32 flattened tile adjacency (scalar-prefetch)
+    local_cols: (m_i, trn) i32
+    """
+    c = config
+    rows, k, n = c.rows, c.cols, i.shape[1]
+    assert data.shape == (rows, c.row_nnz), data.shape
+    assert i.shape[0] == k, (i.shape, k)
+    tn = tn or _pick_tn(n)
+    assert n % tn == 0, (n, tn)
+    trn, tm, tk = c.tile_row_nnz, c.tile_m, c.tile_k
+    grid = (c.go.nu, n // tn, c.d_o)
+
+    kernel = functools.partial(_kernel, c=c, tn=tn)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # Compact weight panel for (u_o, step ko).
+                pl.BlockSpec((tm, trn), lambda uo, jn, ko, adj: (uo, ko)),
+                # Intra-tile gather pattern: whole array each step.
+                pl.BlockSpec(
+                    (c.gi.nu, trn), lambda uo, jn, ko, adj: (0, 0)
+                ),
+                # Input tile: row index comes from the prefetched adjacency.
+                pl.BlockSpec(
+                    (tk, tn), lambda uo, jn, ko, adj: (adj[uo * c.d_o + ko], jn)
+                ),
+            ],
+            out_specs=pl.BlockSpec((tm, tn), lambda uo, jn, ko, adj: (uo, jn)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((rows, n), data.dtype),
+        interpret=True,
+    )(adj_o, data, local_cols, i)
+
+
+def make_rbgp4mm(mask: Rbgp4Mask, tn: int | None = None):
+    """Close over a mask's static index arrays; returns f(data, i) -> O."""
+    adj_o = jnp.asarray(mask.adj_o.reshape(-1), dtype=jnp.int32)
+    lc = jnp.asarray(mask.local_cols(), dtype=jnp.int32)
+
+    def f(data: jnp.ndarray, i: jnp.ndarray) -> jnp.ndarray:
+        return rbgp4mm_pallas(data, i, adj_o, lc, mask.config, tn)
+
+    return f
+
+
+def vmem_footprint(config: Rbgp4Config, tn: int, dtype_bytes: int = 4) -> dict:
+    """Estimated VMEM bytes per grid step and MXU utilization proxy.
+
+    Used by the perf pass (EXPERIMENTS.md §Perf) — interpret-mode wallclock
+    is *not* a TPU proxy, but the VMEM working set and the matmul shapes
+    feeding the MXU are compile-time facts of the BlockSpec choice.
+    """
+    c = config
+    w_block = c.tile_m * c.tile_row_nnz * dtype_bytes
+    i_block = c.tile_k * tn * dtype_bytes
+    o_block = c.tile_m * tn * dtype_bytes
+    lc_block = c.gi.nu * c.tile_row_nnz * 4
+    gathered = c.gi.nu * c.tile_row_nnz * tn * dtype_bytes
+    total = w_block + i_block + o_block + lc_block + gathered
+    # MXU proxy: the einsum is m_i batched (MR·MB × trn)·(trn × TN) matmuls;
+    # utilization of a 128×128 systolic array is limited by the smaller of
+    # the row-group and trn dimensions.
+    rows_per_mm = c.gr[0] * c.gb[0]
+    mxu_util = min(rows_per_mm, 128) / 128 * min(c.tile_row_nnz, 128) / 128
+    return {
+        "w_block_bytes": w_block,
+        "i_block_bytes": i_block,
+        "o_block_bytes": o_block,
+        "gathered_bytes": gathered,
+        "total_bytes": total,
+        "fits_16mib_vmem": total <= 16 * 1024 * 1024,
+        "matmul_shape": (rows_per_mm, c.tile_row_nnz, tn),
+        "mxu_batch": c.gi.nu,
+        "mxu_util_proxy": mxu_util,
+    }

@@ -1,0 +1,73 @@
+"""Pure-jnp correctness oracles for RBGP4MM.
+
+Two references:
+
+* `rbgp4mm_dense_ref` — scatter compact storage to a dense (M, K) matrix and
+  matmul: the gold standard the Pallas kernel (and the Rust kernels) are
+  checked against.
+* `rbgp4mm_gather_ref` — the differentiable gather-einsum formulation used
+  by the L2 model's training path (autodiff-friendly, no pallas_call).
+
+Both consume the compact contract format (data, adj_o, adj_i) defined in
+`graphs.Rbgp4Mask` / rust `sparsity::rbgp4`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs import Rbgp4Config, Rbgp4Mask
+
+
+def expand_dense(data: jnp.ndarray, col_index: np.ndarray, cols: int) -> jnp.ndarray:
+    """Scatter compact (rows, row_nnz) data into a dense (rows, cols) W."""
+    rows, _row_nnz = data.shape
+    w = jnp.zeros((rows, cols), dtype=data.dtype)
+    return w.at[jnp.arange(rows)[:, None], col_index].set(data)
+
+
+def rbgp4mm_dense_ref(data: jnp.ndarray, mask: Rbgp4Mask, i: jnp.ndarray) -> jnp.ndarray:
+    """O = W_s · I by explicit dense expansion (oracle)."""
+    w = expand_dense(data, mask.col_index(), mask.config.cols)
+    return w @ i
+
+
+def rbgp4mm_gather_ref(
+    data: jnp.ndarray,
+    i: jnp.ndarray,
+    adj_o: jnp.ndarray,
+    local_cols: jnp.ndarray,
+    config: Rbgp4Config,
+) -> jnp.ndarray:
+    """Differentiable gather-einsum RBGP4MM.
+
+    data:       (rows, row_nnz) compact weights
+    i:          (K, N) dense input
+    adj_o:      (m_o, d_o) int32 tile adjacency
+    local_cols: (m_i, trn) int32 intra-tile columns
+    Returns O:  (rows, N)
+
+    Per output-tile row u_o and step ko, the touched I rows are
+    `adj_o[u_o, ko]·TK + local_cols` — gathered once and contracted against
+    the (MR, MI, MB, trn) view of the compact data, mirroring the tiled GPU
+    schedule (and the Pallas kernel) exactly.
+    """
+    c = config
+    n = i.shape[1]
+    mo, mr, mi, mb = c.go.nu, c.gr[0], c.gi.nu, c.gb[0]
+    trn, d_o = c.tile_row_nnz, c.d_o
+    # Absolute gathered column index per (m_o, d_o, m_i, trn).
+    cols = adj_o[:, :, None, None] * c.tile_k + local_cols[None, None, :, :]
+    gathered = i[cols.reshape(-1), :].reshape(mo, d_o, mi, trn, n)
+    # Compact data viewed as (m_o, MR, MI, MB, d_o, trn); bring m_i forward.
+    w = data.reshape(mo, mr, mi, mb, d_o, trn)
+    out = jnp.einsum("omrbkt,okmtn->omrbn", w.transpose(0, 2, 1, 3, 4, 5), gathered)
+    # out: (m_o, m_i, MR, MB, n) -> row order (m_o, MR, m_i, MB).
+    out = out.transpose(0, 2, 1, 3, 4)
+    return out.reshape(c.rows, n)
+
+
+def masked_dense_matmul(w_dense: jnp.ndarray, mask01: jnp.ndarray, i: jnp.ndarray) -> jnp.ndarray:
+    """Baseline: (W ∘ mask) · I — what unstructured/block training computes."""
+    return (w_dense * mask01) @ i

@@ -1,0 +1,134 @@
+"""Tests for the build-time graph generator (mirror of rust/src/graph)."""
+
+import numpy as np
+import pytest
+
+from compile.graphs import (
+    GraphSpec,
+    Rbgp4Config,
+    Rbgp4Mask,
+    generate_ramanujan,
+    is_ramanujan,
+    lift2,
+    lifts_for_sparsity,
+    ramanujan_bound,
+    sparse_biregular_by_lifts,
+)
+
+SEEDS = [0, 1, 2, 3, 4]
+
+
+def degrees(adj: np.ndarray, nv: int):
+    nu, dl = adj.shape
+    counts = np.bincount(adj.reshape(-1), minlength=nv)
+    assert (counts == counts[0]).all(), "not right-regular"
+    return dl, int(counts[0])
+
+
+def test_lift2_doubles_and_preserves_degrees():
+    rng = np.random.default_rng(0)
+    adj = np.tile(np.arange(4), (3, 1))  # K_{3,4}
+    lifted = lift2(adj, rng)
+    assert lifted.shape == (6, 4)
+    dl, dr = degrees(lifted, 8)
+    assert (dl, dr) == (4, 3)
+    # Rows stay sorted and duplicate-free.
+    for row in lifted:
+        assert (np.diff(row) > 0).all()
+
+
+@pytest.mark.parametrize("sp,k", [(0.0, 0), (0.5, 1), (0.75, 2), (0.875, 3), (0.9375, 4)])
+def test_lifts_for_sparsity(sp, k):
+    assert lifts_for_sparsity(sp) == k
+
+
+def test_lifts_for_sparsity_rejects_nondyadic():
+    with pytest.raises(ValueError):
+        lifts_for_sparsity(0.6)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("m,n,sp", [(16, 16, 0.5), (32, 32, 0.75), (32, 128, 0.75), (64, 64, 0.875)])
+def test_sparse_biregular_by_lifts(seed, m, n, sp):
+    rng = np.random.default_rng(seed)
+    adj = sparse_biregular_by_lifts(m, n, sp, rng)
+    dl, dr = degrees(adj, n)
+    assert dl == round((1 - sp) * n)
+    assert dr == round((1 - sp) * m)
+    assert 1.0 - adj.size / (m * n) == pytest.approx(sp)
+
+
+def test_ramanujan_bound_values():
+    assert ramanujan_bound(1, 1) == 0.0
+    assert ramanujan_bound(4, 4) == pytest.approx(2 * np.sqrt(3))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_generate_ramanujan_certifies(seed):
+    rng = np.random.default_rng(seed)
+    adj = generate_ramanujan(32, 32, 0.75, rng)
+    assert is_ramanujan(adj, 32)
+
+
+def test_complete_graph_is_ramanujan():
+    rng = np.random.default_rng(0)
+    adj = generate_ramanujan(8, 4, 0.0, rng)
+    assert adj.shape == (8, 4)
+    assert is_ramanujan(adj, 4)
+
+
+SMALL = Rbgp4Config(go=GraphSpec(4, 4, 0.5), gr=(2, 1), gi=GraphSpec(4, 4, 0.5), gb=(2, 2))
+
+
+def test_config_arithmetic_matches_rust():
+    c = SMALL
+    assert (c.rows, c.cols) == (64, 32)
+    assert (c.tile_m, c.tile_k) == (16, 8)
+    assert (c.d_o, c.d_i) == (2, 2)
+    assert c.tile_row_nnz == 4
+    assert c.row_nnz == 8
+    assert c.sparsity == pytest.approx(0.75)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_mask_col_index_matches_brute_force(seed):
+    """The compact column layout must equal the sorted non-zeros of the
+    Kronecker-product mask — the contract shared with the Rust side."""
+    mask = Rbgp4Mask.sample(SMALL, seed)
+    c = mask.config
+    dense = mask.dense()
+    cols = mask.col_index()
+    for u in range(c.rows):
+        nz = np.flatnonzero(dense[u])
+        assert nz.size == c.row_nnz
+        np.testing.assert_array_equal(cols[u], nz)
+
+
+@pytest.mark.parametrize("seed", SEEDS[:3])
+def test_mask_dense_is_kronecker_product(seed):
+    mask = Rbgp4Mask.sample(SMALL, seed)
+    c = mask.config
+    ba_o = np.zeros((c.go.nu, c.go.nv), np.float32)
+    ba_o[np.arange(c.go.nu)[:, None], mask.adj_o] = 1
+    ba_i = np.zeros((c.gi.nu, c.gi.nv), np.float32)
+    ba_i[np.arange(c.gi.nu)[:, None], mask.adj_i] = 1
+    ba_r = np.ones(c.gr, np.float32)
+    ba_b = np.ones(c.gb, np.float32)
+    kron = np.kron(np.kron(np.kron(ba_o, ba_r), ba_i), ba_b)
+    np.testing.assert_array_equal(mask.dense(), kron)
+
+
+def test_mask_json_roundtrip():
+    mask = Rbgp4Mask.sample(SMALL, 7)
+    back = Rbgp4Mask.from_json(mask.to_json())
+    assert back.config == mask.config
+    np.testing.assert_array_equal(back.adj_o, mask.adj_o)
+    np.testing.assert_array_equal(back.adj_i, mask.adj_i)
+
+
+def test_local_cols_sorted_in_range():
+    mask = Rbgp4Mask.sample(SMALL, 9)
+    lc = mask.local_cols()
+    assert lc.shape == (4, 4)
+    assert (lc >= 0).all() and (lc < SMALL.tile_k).all()
+    assert (np.diff(lc, axis=1) > 0).all()

@@ -1,0 +1,118 @@
+"""L2 tests: model shapes, training dynamics, KD, pallas/ref agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.graphs import GraphSpec, Rbgp4Config
+
+
+@pytest.fixture(scope="module")
+def small_spec():
+    # 128 -> 128 -> 128 -> 4, tiny RBGP4 layers (fast under interpret mode).
+    cfg = Rbgp4Config(go=GraphSpec(4, 16, 0.5), gr=(4, 1), gi=GraphSpec(8, 8, 0.5), gb=(1, 1))
+    assert cfg.rows == 128 and cfg.cols == 128
+    masks = tuple(
+        __import__("compile.graphs", fromlist=["Rbgp4Mask"]).Rbgp4Mask.sample(cfg, s)
+        for s in (1, 2)
+    )
+    spec = M.ModelSpec(in_dim=128, classes=4, layer_configs=(cfg, cfg), masks=masks)
+    spec.validate()
+    return spec
+
+
+def batch_for(spec, seed, b=16):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, spec.in_dim)).astype(np.float32))
+    labels = rng.integers(0, spec.classes, size=b)
+    y = jnp.asarray(np.eye(spec.classes, dtype=np.float32)[labels])
+    return x, y
+
+
+def test_default_spec_validates_and_sizes():
+    spec = M.default_spec()
+    assert spec.hidden_dims == [1024, 1024]
+    assert spec.layer_configs[0].sparsity == pytest.approx(0.75)
+    spec.validate()
+
+
+def test_forward_shapes(small_spec):
+    params = M.init_params(small_spec, 0)
+    x, _ = batch_for(small_spec, 0)
+    logits = M.forward(params, x, small_spec)
+    assert logits.shape == (16, 4)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_forward_pallas_matches_gather(small_spec):
+    params = M.init_params(small_spec, 1)
+    x, _ = batch_for(small_spec, 1)
+    a = M.forward(params, x, small_spec)
+    b = M.forward_pallas(params, x, small_spec)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_loss_positive_and_near_log_classes_at_init(small_spec):
+    params = M.init_params(small_spec, 2)
+    x, y = batch_for(small_spec, 2)
+    loss = float(M.loss_fn(params, x, y, small_spec))
+    assert 0.5 * np.log(4) < loss < 3.0 * np.log(4)
+
+
+def test_train_step_decreases_loss(small_spec):
+    """Overfit one fixed batch for 40 steps: loss must drop substantially."""
+    params = M.init_params(small_spec, 3)
+    vel = {k: jnp.zeros_like(v) for k, v in params.items()}
+    x, y = batch_for(small_spec, 3, b=32)
+    step = jax.jit(lambda p, v, lr: M.train_step(p, v, x, y, lr, small_spec))
+    first = None
+    lr = jnp.float32(0.05)
+    for _ in range(40):
+        params, vel, loss = step(params, vel, lr)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < 0.5 * first, (first, float(loss))
+
+
+def test_train_step_preserves_shapes_and_finiteness(small_spec):
+    params = M.init_params(small_spec, 4)
+    vel = {k: jnp.zeros_like(v) for k, v in params.items()}
+    x, y = batch_for(small_spec, 4)
+    new_p, new_v, loss = M.train_step(params, vel, x, y, jnp.float32(0.1), small_spec)
+    for k in params:
+        assert new_p[k].shape == params[k].shape
+        assert new_v[k].shape == params[k].shape
+        assert bool(jnp.isfinite(new_p[k]).all())
+    assert bool(jnp.isfinite(loss))
+
+
+def test_kd_loss_interpolates(small_spec):
+    params = M.init_params(small_spec, 5)
+    x, y = batch_for(small_spec, 5)
+    teacher = M.forward(params, x, small_spec)  # self-teacher
+    ce = float(M.loss_fn(params, x, y, small_spec))
+    kd0 = float(M.loss_fn(params, x, y, small_spec, teacher_logits=teacher, kd_alpha=0.0))
+    assert kd0 == pytest.approx(ce, rel=1e-6)
+    kd = float(M.loss_fn(params, x, y, small_spec, teacher_logits=teacher, kd_alpha=0.5))
+    assert np.isfinite(kd)
+
+
+def test_momentum_actually_accumulates(small_spec):
+    params = M.init_params(small_spec, 6)
+    vel = {k: jnp.zeros_like(v) for k, v in params.items()}
+    x, y = batch_for(small_spec, 6)
+    _, v1, _ = M.train_step(params, vel, x, y, jnp.float32(0.01), small_spec)
+    _, v2, _ = M.train_step(params, v1, x, y, jnp.float32(0.01), small_spec)
+    # Second-step velocity magnitude grows (same batch, aligned grads).
+    n1 = float(sum(jnp.sum(v * v) for v in v1.values()))
+    n2 = float(sum(jnp.sum(v * v) for v in v2.values()))
+    assert n2 > n1
+
+
+def test_spec_validation_catches_mismatch():
+    cfg = Rbgp4Config(go=GraphSpec(4, 16, 0.5), gr=(4, 1), gi=GraphSpec(8, 8, 0.5), gb=(1, 1))
+    spec = M.ModelSpec(in_dim=64, classes=4, layer_configs=(cfg,))
+    with pytest.raises(ValueError):
+        spec.validate()

@@ -1,0 +1,101 @@
+//! Microbenchmarks of every SDMM kernel variant — the perf-iteration
+//! harness used for EXPERIMENTS.md §Perf (L3). Reports median ± MAD so
+//! before/after comparisons between optimization steps are meaningful.
+//!
+//! `cargo bench --bench kernels_microbench` (RBGP_BENCH_FAST=1 quick pass)
+
+use rbgp::kernels::bsr_sdmm::{bsr_sdmm, bsr_sdmm_parallel};
+use rbgp::kernels::csr_sdmm::{csr_sdmm, csr_sdmm_parallel};
+use rbgp::kernels::dense::{gemm_blocked, gemm_naive, gemm_parallel};
+use rbgp::kernels::rbgp4mm::{rbgp4mm, rbgp4mm_naive, rbgp4mm_parallel};
+use rbgp::sparsity::bsr::BsrMatrix;
+use rbgp::sparsity::csr::CsrMatrix;
+use rbgp::sparsity::rbgp4::{GraphSpec, Rbgp4Config, Rbgp4Mask, Rbgp4Matrix};
+use rbgp::util::rng::Rng;
+use rbgp::util::threadpool::default_threads;
+use rbgp::util::timing::{bench_fn, report_row, BenchConfig};
+
+fn main() {
+    let n = 1024usize; // square SDMM at n³
+    let sp = 0.875;
+    let threads = default_threads();
+    let cfg = BenchConfig::from_env();
+    let mut rng = Rng::new(3);
+
+    println!("kernels microbench — SDMM {n}³, sparsity {:.1}%, {threads} threads\n", sp * 100.0);
+
+    let i = rng.normal_vec_f32(n * n, 1.0);
+    let mut o = vec![0.0f32; n * n];
+
+    // Dense family.
+    let wd = rng.normal_vec_f32(n * n, 1.0);
+    if n <= 512 {
+        let s = bench_fn(&cfg, || {
+            gemm_naive(&wd, &i, &mut o, n, n, n);
+            std::hint::black_box(&o);
+        });
+        println!("{}", report_row("dense/naive", &s));
+    }
+    let s = bench_fn(&cfg, || {
+        gemm_blocked(&wd, &i, &mut o, n, n, n);
+        std::hint::black_box(&o);
+    });
+    println!("{}", report_row("dense/blocked (1 thread)", &s));
+    let s = bench_fn(&cfg, || {
+        gemm_parallel(&wd, &i, &mut o, n, n, n, threads);
+        std::hint::black_box(&o);
+    });
+    println!("{}", report_row("dense/parallel", &s));
+
+    // Unstructured CSR.
+    let csr = CsrMatrix::random_row_uniform(n, n, sp, &mut rng);
+    let s = bench_fn(&cfg, || {
+        csr_sdmm(&csr, &i, &mut o, n);
+        std::hint::black_box(&o);
+    });
+    println!("{}", report_row("csr/serial", &s));
+    let s = bench_fn(&cfg, || {
+        csr_sdmm_parallel(&csr, &i, &mut o, n, threads);
+        std::hint::black_box(&o);
+    });
+    println!("{}", report_row("csr/parallel", &s));
+
+    // Block BSR (4,4).
+    let bsr = BsrMatrix::random_block_uniform(n, n, 4, 4, sp, &mut rng);
+    let s = bench_fn(&cfg, || {
+        bsr_sdmm(&bsr, &i, &mut o, n);
+        std::hint::black_box(&o);
+    });
+    println!("{}", report_row("bsr/serial", &s));
+    let s = bench_fn(&cfg, || {
+        bsr_sdmm_parallel(&bsr, &i, &mut o, n, threads);
+        std::hint::black_box(&o);
+    });
+    println!("{}", report_row("bsr/parallel", &s));
+
+    // RBGP4 at the same total sparsity (best Table-2 split: G_o-heavy).
+    let rb_cfg = Rbgp4Config {
+        go: GraphSpec::new(8, 32, 0.75),
+        gr: (4, 1),
+        gi: GraphSpec::new(32, 32, 0.5),
+        gb: (1, 1),
+    };
+    assert!((rb_cfg.sparsity() - sp).abs() < 1e-9);
+    let mask = Rbgp4Mask::sample(rb_cfg, &mut rng).expect("mask");
+    let w = Rbgp4Matrix::random(mask, &mut rng);
+    let s = bench_fn(&cfg, || {
+        rbgp4mm_naive(&w, &i, &mut o, n);
+        std::hint::black_box(&o);
+    });
+    println!("{}", report_row("rbgp4mm/naive", &s));
+    let s = bench_fn(&cfg, || {
+        rbgp4mm(&w, &i, &mut o, n);
+        std::hint::black_box(&o);
+    });
+    println!("{}", report_row("rbgp4mm/packed (1 thread)", &s));
+    let s = bench_fn(&cfg, || {
+        rbgp4mm_parallel(&w, &i, &mut o, n, threads);
+        std::hint::black_box(&o);
+    });
+    println!("{}", report_row("rbgp4mm/parallel", &s));
+}

@@ -1,0 +1,89 @@
+//! Bench: regenerate the paper's **Table 1** memory + time columns for
+//! VGG19 and WideResNet-40-4, and *measure* the per-layer SDMM kernels on
+//! this CPU for the largest layers of each network (same ordering claim at
+//! local scale: unstructured > block > RBGP4).
+//!
+//! `cargo bench --bench table1_layers`   (RBGP_BENCH_FAST=1 for quick pass)
+
+use rbgp::bench_harness::report::{ms, Table};
+use rbgp::bench_harness::table1;
+use rbgp::kernels::{bsr_sdmm_parallel, csr_sdmm_parallel, rbgp4mm_parallel};
+use rbgp::models::vgg::vgg19;
+use rbgp::sparsity::bsr::BsrMatrix;
+use rbgp::sparsity::csr::CsrMatrix;
+use rbgp::sparsity::rbgp4::{GraphSpec, Rbgp4Config, Rbgp4Mask, Rbgp4Matrix};
+use rbgp::util::rng::Rng;
+use rbgp::util::threadpool::default_threads;
+use rbgp::util::timing::{bench_fn, BenchConfig};
+
+fn main() {
+    // Model columns (exact memory + V100 estimates) for both networks.
+    for t in table1::run() {
+        println!("{}", t.render());
+    }
+
+    // Measured pattern comparison on a representative VGG19 layer shape
+    // (conv10: 512x4608 weights; batch scaled down to keep CPU time sane).
+    let net = vgg19(10);
+    let layer = net.layers[9];
+    let batch = 4usize; // paper uses 256; N scales linearly for all kernels
+    let shape = layer.sdmm_shape(batch);
+    let (m, k, n) = (shape.m, shape.k, shape.n);
+    println!("## Measured per-layer SDMM on this CPU — {} (m={m}, k={k}, n={n})\n", layer.name);
+
+    let sp = 0.875;
+    let mut rng = Rng::new(11);
+    let threads = default_threads();
+    let cfg = BenchConfig::from_env();
+    let i = rng.normal_vec_f32(k * n, 1.0);
+    let mut o = vec![0.0f32; m * n];
+
+    let mut table = Table::new(
+        &format!("{} @ {:.1}% sparsity", layer.name, sp * 100.0),
+        &["pattern", "measured ms", "vs unstructured"],
+    );
+
+    let csr = CsrMatrix::random_row_uniform(m, k, sp, &mut rng);
+    let t_csr = bench_fn(&cfg, || {
+        csr_sdmm_parallel(&csr, &i, &mut o, n, threads);
+        std::hint::black_box(&o);
+    })
+    .median;
+
+    let bsr = BsrMatrix::random_block_uniform(m, k, 4, 4, sp, &mut rng);
+    let t_bsr = bench_fn(&cfg, || {
+        bsr_sdmm_parallel(&bsr, &i, &mut o, n, threads);
+        std::hint::black_box(&o);
+    })
+    .median;
+
+    // RBGP4 factorization of the same (m, k) at the same total sparsity.
+    let rb_cfg = Rbgp4Config {
+        go: GraphSpec::new(m / 128, k / 32, 0.75),
+        gr: (4, 1),
+        gi: GraphSpec::new(32, 32, 0.5),
+        gb: (1, 1),
+    };
+    assert_eq!((rb_cfg.rows(), rb_cfg.cols()), (m, k));
+    assert!((rb_cfg.sparsity() - sp).abs() < 1e-9);
+    let mask = Rbgp4Mask::sample(rb_cfg, &mut rng).expect("mask");
+    let w = Rbgp4Matrix::random(mask, &mut rng);
+    let t_rb = bench_fn(&cfg, || {
+        rbgp4mm_parallel(&w, &i, &mut o, n, threads);
+        std::hint::black_box(&o);
+    })
+    .median;
+
+    table.row(vec!["Unstructured (CSR)".into(), ms(t_csr), "1.0x".into()]);
+    table.row(vec![
+        "Block (BSR 4x4)".into(),
+        ms(t_bsr),
+        format!("{:.1}x", t_csr / t_bsr),
+    ]);
+    table.row(vec![
+        "RBGP4".into(),
+        ms(t_rb),
+        format!("{:.1}x", t_csr / t_rb),
+    ]);
+    println!("{}", table.render());
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate the paper's **Table 2** (runtime vs sparsity split
+//! between G_o and G_i). Prints paper / V100-model / measured columns.
+//!
+//! `cargo bench --bench table2_sparsity_distribution`
+//! Env: RBGP_MEASURE_N (default 1024; 4096 reproduces the paper's size but
+//! takes minutes on CPU), RBGP_BENCH_FAST=1 for a quick pass.
+
+use rbgp::bench_harness::table2;
+
+fn main() {
+    let n: usize = std::env::var("RBGP_MEASURE_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    println!("{}", table2::run(n, 0).render());
+}

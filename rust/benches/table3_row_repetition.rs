@@ -1,0 +1,15 @@
+//! Bench: regenerate the paper's **Table 3** (runtime vs row repetition
+//! from the complete graphs G_r and G_b, G_t fixed at (128, 32)).
+//!
+//! `cargo bench --bench table3_row_repetition`
+//! Env: RBGP_MEASURE_N (default 1024), RBGP_BENCH_FAST=1.
+
+use rbgp::bench_harness::table3;
+
+fn main() {
+    let n: usize = std::env::var("RBGP_MEASURE_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    println!("{}", table3::run(n, 0).render());
+}

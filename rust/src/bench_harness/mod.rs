@@ -1,0 +1,12 @@
+//! Benchmark harness: regenerates every table of the paper's evaluation
+//! (§6). Each table prints (a) the paper's reported numbers, (b) the V100
+//! cost-model estimate, and (c) where meaningful, *measured* times of the
+//! Rust CPU kernels — so both the absolute paper-vs-model comparison and
+//! the machine-local measured ratios are visible side by side.
+
+pub mod report;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+pub use report::Table;

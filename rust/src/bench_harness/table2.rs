@@ -1,0 +1,174 @@
+//! Table 2: effect of distributing sparsity between `G_o` and `G_i` on
+//! SDMM runtime (4096³, base sizes (32,128),(4,1),(32,32),(1,1)).
+//!
+//! Columns: the paper's V100 measurement, our V100 cost-model estimate, and
+//! the *measured* Rust CPU kernel (optionally at a reduced size — the
+//! relative ordering is the claim under test, not absolute milliseconds).
+
+use crate::bench_harness::report::{ms, speedup, Table};
+use crate::gpusim::{estimate, Device, KernelKind, SdmmShape};
+use crate::kernels::dense::gemm_parallel;
+use crate::kernels::rbgp4mm::rbgp4mm_parallel;
+use crate::sparsity::rbgp4::{GraphSpec, Rbgp4Config, Rbgp4Mask, Rbgp4Matrix};
+use crate::util::rng::Rng;
+use crate::util::threadpool::default_threads;
+use crate::util::timing::{bench_fn, BenchConfig};
+
+/// (total sparsity %, sp_o %, sp_i %, paper time ms)
+pub const PAPER_ROWS: &[(f64, f64, f64, f64)] = &[
+    (75.00, 0.00, 75.00, 5.64),
+    (75.00, 50.00, 50.00, 4.44),
+    (87.50, 0.00, 87.50, 4.31),
+    (87.50, 50.00, 75.00, 2.74),
+    (87.50, 75.00, 50.00, 2.29),
+    (93.75, 0.00, 93.75, 3.76),
+    (93.75, 50.00, 87.50, 1.93),
+    (93.75, 75.00, 75.00, 1.44),
+    (93.75, 87.50, 50.00, 1.22),
+];
+
+pub const PAPER_DENSE_MS: f64 = 11.2;
+
+/// The Table-2 RBGP4 config at `scale` ∈ {1 → 4096², 1/4 → 1024², …}:
+/// `G_o` shrinks with scale, per-tile structure fixed.
+pub fn config_at(sp_o: f64, sp_i: f64, scale: usize) -> Rbgp4Config {
+    Rbgp4Config {
+        go: GraphSpec::new(32 / scale, 128 / scale, sp_o),
+        gr: (4, 1),
+        gi: GraphSpec::new(32, 32, sp_i),
+        gb: (1, 1),
+    }
+}
+
+/// Run Table 2. `measure_n`: matrix size for the measured column (0 skips
+/// measurement and prints only the model).
+pub fn run(measure_n: usize, seed: u64) -> Table {
+    let dev = Device::v100();
+    let shape = SdmmShape {
+        m: 4096,
+        k: 4096,
+        n: 4096,
+    };
+    let mut table = Table::new(
+        "Table 2 — sparsity distribution between G_o and G_i (SDMM 4096³)",
+        &[
+            "Sp(G)%",
+            "Sp(Go)%",
+            "Sp(Gi)%",
+            "paper ms (x)",
+            "model ms (x)",
+            &format!("measured@{measure_n} ms (x)"),
+        ],
+    );
+
+    let dense_model = estimate(&dev, shape, &KernelKind::DenseCublas).t_total;
+    let (dense_meas, mut rng) = if measure_n > 0 {
+        let mut rng = Rng::new(seed);
+        let t = measure_dense(measure_n, &mut rng);
+        (Some(t), rng)
+    } else {
+        (None, Rng::new(seed))
+    };
+    table.row(vec![
+        "0".into(),
+        "0".into(),
+        "0".into(),
+        format!("{PAPER_DENSE_MS} (1x)"),
+        format!("{} (1x)", ms(dense_model)),
+        dense_meas
+            .map(|t| format!("{} (1x)", ms(t)))
+            .unwrap_or_else(|| "-".into()),
+    ]);
+
+    for &(sp, sp_o, sp_i, paper) in PAPER_ROWS {
+        let cfg = config_at(sp_o / 100.0, sp_i / 100.0, 1);
+        let model = estimate(&dev, shape, &KernelKind::Rbgp4 { config: cfg }).t_total;
+        let measured = if measure_n > 0 {
+            let scale = 4096 / measure_n;
+            let cfg_s = config_at(sp_o / 100.0, sp_i / 100.0, scale);
+            Some(measure_rbgp4(cfg_s, measure_n, &mut rng))
+        } else {
+            None
+        };
+        table.row(vec![
+            format!("{sp:.2}"),
+            format!("{sp_o:.2}"),
+            format!("{sp_i:.2}"),
+            format!("{paper} ({})", speedup(PAPER_DENSE_MS, paper)),
+            format!("{} ({})", ms(model), speedup(dense_model, model)),
+            match (measured, dense_meas) {
+                (Some(t), Some(d)) => format!("{} ({})", ms(t), speedup(d, t)),
+                _ => "-".into(),
+            },
+        ]);
+    }
+    table
+}
+
+/// Median time of the parallel blocked dense GEMM at n³ (cuBLAS stand-in).
+pub fn measure_dense(n: usize, rng: &mut Rng) -> f64 {
+    let w = rng.normal_vec_f32(n * n, 1.0);
+    let i = rng.normal_vec_f32(n * n, 1.0);
+    let mut o = vec![0.0f32; n * n];
+    let threads = default_threads();
+    let cfg = BenchConfig::from_env();
+    bench_fn(&cfg, || {
+        gemm_parallel(&w, &i, &mut o, n, n, n, threads);
+        std::hint::black_box(&o);
+    })
+    .median
+}
+
+/// Median time of the parallel RBGP4MM kernel for `cfg` tiled to (n × n)·(n × n).
+pub fn measure_rbgp4(cfg: Rbgp4Config, n: usize, rng: &mut Rng) -> f64 {
+    assert_eq!(cfg.rows(), n, "config rows {} != {n}", cfg.rows());
+    assert_eq!(cfg.cols(), n, "config cols {} != {n}", cfg.cols());
+    let mask = Rbgp4Mask::sample(cfg, rng).expect("valid config");
+    let w = Rbgp4Matrix::random(mask, rng);
+    let i = rng.normal_vec_f32(n * n, 1.0);
+    let mut o = vec![0.0f32; n * n];
+    let threads = default_threads();
+    let bench = BenchConfig::from_env();
+    bench_fn(&bench, || {
+        rbgp4mm_parallel(&w, &i, &mut o, n, threads);
+        std::hint::black_box(&o);
+    })
+    .median
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_shapes() {
+        let c = config_at(0.5, 0.5, 1);
+        assert_eq!((c.rows(), c.cols()), (4096, 4096));
+        let c4 = config_at(0.5, 0.5, 4);
+        assert_eq!((c4.rows(), c4.cols()), (1024, 1024));
+    }
+
+    #[test]
+    fn model_reproduces_paper_ordering() {
+        // Within each sparsity group, more G_o sparsity ⇒ faster (model).
+        let dev = Device::v100();
+        let shape = SdmmShape { m: 4096, k: 4096, n: 4096 };
+        for group in [&PAPER_ROWS[0..2], &PAPER_ROWS[2..5], &PAPER_ROWS[5..9]] {
+            let mut last = f64::INFINITY;
+            for &(_, sp_o, sp_i, _) in group {
+                let cfg = config_at(sp_o / 100.0, sp_i / 100.0, 1);
+                let t = estimate(&dev, shape, &KernelKind::Rbgp4 { config: cfg }).t_total;
+                assert!(t < last, "sp_o={sp_o}: {t} !< {last}");
+                last = t;
+            }
+        }
+    }
+
+    #[test]
+    fn table_renders_without_measurement() {
+        let t = run(0, 1);
+        let s = t.render();
+        assert!(s.contains("Table 2"));
+        assert_eq!(t.rows.len(), 1 + PAPER_ROWS.len());
+    }
+}

@@ -1,0 +1,131 @@
+//! Table 3: effect of row repetition (sizes of complete graphs `G_r`, `G_b`)
+//! on SDMM runtime. `G_t = G_r ⊗ G_i ⊗ G_b` is held at (128, 32) and
+//! `Sp(G_o)` at 50 %, as in the paper.
+
+use crate::bench_harness::report::{ms, Table};
+use crate::bench_harness::table2::measure_rbgp4;
+use crate::gpusim::{estimate, Device, KernelKind, SdmmShape};
+use crate::sparsity::rbgp4::{GraphSpec, Rbgp4Config};
+use crate::util::rng::Rng;
+
+/// (gr, gb, paper ms at Sp(G)% = 75 / 87.5 / 93.75)
+pub const PAPER_ROWS: &[((usize, usize), (usize, usize), [f64; 3])] = &[
+    ((1, 1), (1, 1), [7.07, 3.91, 2.45]),
+    ((2, 1), (1, 1), [4.89, 3.02, 1.97]),
+    ((4, 1), (1, 1), [4.47, 2.75, 1.92]),
+    ((1, 1), (2, 1), [4.85, 3.01, 2.03]),
+    ((1, 1), (4, 1), [4.47, 2.84, 2.02]),
+    ((2, 1), (2, 1), [4.41, 2.75, 1.98]),
+];
+
+pub const SPARSITIES: [f64; 3] = [0.75, 0.875, 0.9375];
+
+/// Build the Table-3 config: G_t fixed at (128, 32), G_o = (32, 128) @ 50 %,
+/// G_i absorbs what G_r/G_b don't cover; its sparsity sets the total.
+/// `scale` shrinks G_o for the measured column (scale 4 ⇒ 1024² matrices).
+pub fn config_for(
+    gr: (usize, usize),
+    gb: (usize, usize),
+    total_sp: f64,
+    scale: usize,
+) -> anyhow::Result<Rbgp4Config> {
+    let gi_u = 128 / (gr.0 * gb.0);
+    let gi_v = 32 / (gr.1 * gb.1);
+    // total = 1 - (1-0.5)(1-sp_i) => sp_i = 1 - (1-total)/0.5
+    let sp_i = 1.0 - (1.0 - total_sp) / 0.5;
+    let cfg = Rbgp4Config {
+        go: GraphSpec::new(32 / scale, 128 / scale, 0.5),
+        gr,
+        gi: GraphSpec::new(gi_u, gi_v, sp_i),
+        gb,
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Run Table 3. `measure_n` as in table2 (0 = model only).
+pub fn run(measure_n: usize, seed: u64) -> Table {
+    let dev = Device::v100();
+    let shape = SdmmShape {
+        m: 4096,
+        k: 4096,
+        n: 4096,
+    };
+    let mut headers: Vec<String> = vec!["G_r".into(), "G_b".into(), "rep".into()];
+    for sp in SPARSITIES {
+        headers.push(format!("paper {:.2}%", sp * 100.0));
+        headers.push(format!("model {:.2}%", sp * 100.0));
+        if measure_n > 0 {
+            headers.push(format!("meas@{measure_n} {:.2}%", sp * 100.0));
+        }
+    }
+    let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut table = Table::new(
+        "Table 3 — row repetition from complete graphs G_r, G_b (SDMM 4096³, Sp(G_o)=50%)",
+        &hdr_refs,
+    );
+    let mut rng = Rng::new(seed);
+    for &(gr, gb, paper) in PAPER_ROWS {
+        let mut cells = vec![
+            format!("({},{})", gr.0, gr.1),
+            format!("({},{})", gb.0, gb.1),
+            format!("{}", gr.0 * gb.0),
+        ];
+        for (si, &sp) in SPARSITIES.iter().enumerate() {
+            let cfg = config_for(gr, gb, sp, 1).expect("valid");
+            let model = estimate(&dev, shape, &KernelKind::Rbgp4 { config: cfg }).t_total;
+            cells.push(format!("{}", paper[si]));
+            cells.push(ms(model));
+            if measure_n > 0 {
+                let scale = 4096 / measure_n;
+                match config_for(gr, gb, sp, scale) {
+                    Ok(cfg_s) => {
+                        let t = measure_rbgp4(cfg_s, measure_n, &mut rng);
+                        cells.push(ms(t));
+                    }
+                    Err(_) => cells.push("-".into()),
+                }
+            }
+        }
+        table.row(cells);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn configs_keep_gt_fixed() {
+        for &(gr, gb, _) in PAPER_ROWS {
+            let cfg = config_for(gr, gb, 0.75, 1).unwrap();
+            assert_eq!(cfg.tile_m(), 128, "gr={gr:?} gb={gb:?}");
+            assert_eq!(cfg.tile_k(), 32);
+            assert_eq!((cfg.rows(), cfg.cols()), (4096, 4096));
+            assert!((cfg.sparsity() - 0.75).abs() < 1e-12);
+            assert_eq!(cfg.row_repetition(), gr.0 * gb.0);
+        }
+    }
+
+    #[test]
+    fn model_repetition_monotone_within_family() {
+        // (1,1)/(1,1) vs (2,1)/(1,1) vs (4,1)/(1,1): model time non-increasing.
+        let dev = Device::v100();
+        let shape = SdmmShape { m: 4096, k: 4096, n: 4096 };
+        let mut last = f64::INFINITY;
+        for gr0 in [1usize, 2, 4] {
+            let cfg = config_for((gr0, 1), (1, 1), 0.75, 1).unwrap();
+            let t = estimate(&dev, shape, &KernelKind::Rbgp4 { config: cfg }).t_total;
+            assert!(t <= last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn table_renders_model_only() {
+        let t = run(0, 2);
+        assert_eq!(t.rows.len(), PAPER_ROWS.len());
+        assert!(t.render().contains("Table 3"));
+    }
+}

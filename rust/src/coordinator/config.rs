@@ -1,0 +1,70 @@
+//! Training configuration (the paper's §6 recipe, step-based).
+
+/// Step-based training schedule mirroring the paper's epoch schedule
+/// (initial LR 0.1, decayed ×`lr_decay` at the listed milestones).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr0: f32,
+    pub lr_decay: f32,
+    /// Fractions of `steps` at which LR decays (paper: 60/120/160 of 160
+    /// epochs ≈ 0.375, 0.75, 1.0).
+    pub milestones: Vec<f64>,
+    pub seed: u64,
+    /// Use the knowledge-distillation artifact when available.
+    pub distill: bool,
+    /// Evaluate every `eval_every` steps (0 = only at the end).
+    pub eval_every: usize,
+    pub eval_batches: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 300,
+            lr0: 0.1,
+            lr_decay: 0.1,
+            milestones: vec![0.375, 0.75],
+            seed: 0,
+            distill: false,
+            eval_every: 50,
+            eval_batches: 8,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Learning rate at a given step.
+    pub fn lr_at(&self, step: usize) -> f32 {
+        let frac = step as f64 / self.steps.max(1) as f64;
+        let decays = self.milestones.iter().filter(|&&m| frac >= m).count();
+        self.lr0 * self.lr_decay.powi(decays as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_decays_at_milestones() {
+        let c = TrainConfig {
+            steps: 100,
+            lr0: 0.1,
+            lr_decay: 0.1,
+            milestones: vec![0.4, 0.8],
+            ..TrainConfig::default()
+        };
+        assert_eq!(c.lr_at(0), 0.1);
+        assert_eq!(c.lr_at(39), 0.1);
+        assert!((c.lr_at(40) - 0.01).abs() < 1e-9);
+        assert!((c.lr_at(80) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn default_is_sane() {
+        let c = TrainConfig::default();
+        assert!(c.steps > 0 && c.lr0 > 0.0);
+        assert!(c.lr_at(c.steps - 1) < c.lr0);
+    }
+}

@@ -1,0 +1,105 @@
+//! Lightweight metrics: loss history, latency percentiles, throughput.
+
+use std::time::Duration;
+
+/// Rolling metrics store shared by the trainer and server.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub losses: Vec<(usize, f32)>,
+    pub latencies: Vec<f64>,
+    pub requests: usize,
+    pub batches: usize,
+}
+
+impl Metrics {
+    pub fn record_loss(&mut self, step: usize, loss: f32) {
+        self.losses.push((step, loss));
+    }
+
+    pub fn record_latency(&mut self, d: Duration) {
+        self.latencies.push(d.as_secs_f64());
+        self.requests += 1;
+    }
+
+    pub fn record_batch(&mut self) {
+        self.batches += 1;
+    }
+
+    pub fn latency_stats(&self) -> Option<LatencyStats> {
+        LatencyStats::from_samples(&self.latencies)
+    }
+
+    /// Smoothed final loss: mean of the last `k` recorded losses.
+    pub fn final_loss(&self, k: usize) -> Option<f32> {
+        if self.losses.is_empty() {
+            return None;
+        }
+        let tail = &self.losses[self.losses.len().saturating_sub(k)..];
+        Some(tail.iter().map(|&(_, l)| l).sum::<f32>() / tail.len() as f32)
+    }
+}
+
+/// Latency percentile summary (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LatencyStats {
+    pub fn from_samples(samples: &[f64]) -> Option<LatencyStats> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            let rank = (p / 100.0 * (s.len() - 1) as f64).round() as usize;
+            s[rank.min(s.len() - 1)]
+        };
+        Some(LatencyStats {
+            count: s.len(),
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+            p50: pct(50.0),
+            p95: pct(95.0),
+            p99: pct(99.0),
+            max: *s.last().unwrap(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_history_and_smoothing() {
+        let mut m = Metrics::default();
+        for i in 0..10 {
+            m.record_loss(i, 10.0 - i as f32);
+        }
+        assert_eq!(m.losses.len(), 10);
+        // last 2: 2.0, 1.0 -> mean 1.5
+        assert_eq!(m.final_loss(2), Some(1.5));
+        assert_eq!(Metrics::default().final_loss(3), None);
+    }
+
+    #[test]
+    fn latency_percentiles_ordered() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64 / 1000.0).collect();
+        let s = LatencyStats::from_samples(&samples).unwrap();
+        assert_eq!(s.count, 100);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!((s.p50 - 0.050).abs() < 0.002);
+        assert_eq!(s.max, 0.1);
+    }
+
+    #[test]
+    fn empty_latency_is_none() {
+        assert!(LatencyStats::from_samples(&[]).is_none());
+    }
+}

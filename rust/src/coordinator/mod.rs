@@ -1,0 +1,13 @@
+//! L3 coordinator: the drivers that own the process — a training loop and a
+//! batched inference server — both executing AOT artifacts through
+//! [`crate::runtime`] with no Python anywhere near the request path.
+
+pub mod config;
+pub mod metrics;
+pub mod server;
+pub mod trainer;
+
+pub use config::TrainConfig;
+pub use metrics::{LatencyStats, Metrics};
+pub use server::{InferenceServer, ServerConfig};
+pub use trainer::Trainer;

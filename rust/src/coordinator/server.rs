@@ -1,0 +1,211 @@
+//! Batched inference server: the L3 request path.
+//!
+//! One worker thread owns the compiled `forward` executable (PJRT handles
+//! are not `Send`-safe to share); client handles submit single samples over
+//! an mpsc channel. The worker *dynamically batches*: it drains up to the
+//! artifact's batch size, waiting at most `max_wait` for stragglers, pads
+//! the final partial batch, executes once, and scatters per-sample logits
+//! back through per-request channels. Latency/throughput metrics accumulate
+//! in a shared store.
+
+use crate::coordinator::metrics::{LatencyStats, Metrics};
+use crate::runtime::executor::{Executor, HostTensor};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Server tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Max time the batcher waits to fill a batch before flushing.
+    pub max_wait: Duration,
+    /// Optional trained checkpoint to serve (JSON, `Trainer::save_checkpoint`
+    /// schema); defaults to the exported init parameters.
+    pub checkpoint: Option<std::path::PathBuf>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_wait: Duration::from_millis(5),
+            checkpoint: None,
+        }
+    }
+}
+
+struct Request {
+    x: Vec<f32>,
+    enqueued: Instant,
+    respond: mpsc::Sender<anyhow::Result<Vec<f32>>>,
+}
+
+/// Handle to a running server; cloneable across client threads.
+#[derive(Clone)]
+pub struct InferenceServer {
+    tx: mpsc::Sender<Request>,
+    pub in_dim: usize,
+    pub classes: usize,
+    pub batch: usize,
+    metrics: Arc<Mutex<Metrics>>,
+}
+
+impl InferenceServer {
+    /// Start the worker thread. PJRT handles are not `Send`, so the worker
+    /// compiles the artifact itself and reports readiness (or the compile
+    /// error) back over a oneshot channel before the constructor returns.
+    pub fn start(artifacts_dir: PathBuf, config: ServerConfig) -> anyhow::Result<InferenceServer> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<(usize, usize, usize)>>();
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let worker_metrics = Arc::clone(&metrics);
+        thread::Builder::new()
+            .name("rbgp-serve".into())
+            .spawn(move || {
+                let init = || -> anyhow::Result<(Executor, Vec<HostTensor>, usize, usize, usize)> {
+                    let exe = Executor::compile(&artifacts_dir, "forward")?;
+                    let meta = &exe.artifact.meta;
+                    let batch = meta
+                        .batch()
+                        .ok_or_else(|| anyhow::anyhow!("forward metadata missing batch"))?;
+                    let in_dim = meta.raw.req_usize("in_dim")?;
+                    let classes = meta.raw.req_usize("classes")?;
+                    // Parameters served: a trained checkpoint when given,
+                    // else the exported init values.
+                    let params_path = config
+                        .checkpoint
+                        .clone()
+                        .unwrap_or_else(|| artifacts_dir.join("init_params.json"));
+                    let init_text = std::fs::read_to_string(&params_path)?;
+                    let init = crate::util::json::Json::parse(&init_text)?;
+                    let mut params = Vec::new();
+                    for (idx, name) in meta.param_order.iter().enumerate() {
+                        let sig = &meta.inputs[idx];
+                        let vals: Vec<f32> = init
+                            .req_arr(name)?
+                            .iter()
+                            .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                            .collect();
+                        params.push(HostTensor::new(vals, &sig.shape));
+                    }
+                    Ok((exe, params, batch, in_dim, classes))
+                };
+                match init() {
+                    Ok((exe, params, batch, in_dim, classes)) => {
+                        let _ = ready_tx.send(Ok((batch, in_dim, classes)));
+                        worker_loop(exe, params, batch, in_dim, classes, config, rx, worker_metrics);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                }
+            })?;
+        let (batch, in_dim, classes) = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
+        Ok(InferenceServer {
+            tx,
+            in_dim,
+            classes,
+            batch,
+            metrics,
+        })
+    }
+
+    /// Submit one sample; returns a receiver that yields the logits.
+    pub fn submit(&self, x: Vec<f32>) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Vec<f32>>>> {
+        anyhow::ensure!(
+            x.len() == self.in_dim,
+            "sample has {} features, model wants {}",
+            x.len(),
+            self.in_dim
+        );
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                x,
+                enqueued: Instant::now(),
+                respond: rtx,
+            })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Blocking convenience: submit and wait for logits.
+    pub fn infer(&self, x: Vec<f32>) -> anyhow::Result<Vec<f32>> {
+        self.submit(x)?
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped request"))?
+    }
+
+    pub fn latency_stats(&self) -> Option<LatencyStats> {
+        self.metrics.lock().unwrap().latency_stats()
+    }
+
+    pub fn counters(&self) -> (usize, usize) {
+        let m = self.metrics.lock().unwrap();
+        (m.requests, m.batches)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    exe: Executor,
+    params: Vec<HostTensor>,
+    batch: usize,
+    in_dim: usize,
+    classes: usize,
+    config: ServerConfig,
+    rx: mpsc::Receiver<Request>,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    loop {
+        // Block for the first request; then drain greedily with deadline.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders dropped: shut down
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + config.max_wait;
+        while pending.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Pad to the artifact batch and execute.
+        let mut x = vec![0.0f32; batch * in_dim];
+        for (s, req) in pending.iter().enumerate() {
+            x[s * in_dim..(s + 1) * in_dim].copy_from_slice(&req.x);
+        }
+        let mut inputs = params.clone();
+        inputs.push(HostTensor::new(x, &[batch, in_dim]));
+        let result = exe.run(&inputs);
+
+        match result {
+            Ok(out) => {
+                let logits = &out[0];
+                let mut m = metrics.lock().unwrap();
+                m.record_batch();
+                for (s, req) in pending.into_iter().enumerate() {
+                    let row = logits.data[s * classes..(s + 1) * classes].to_vec();
+                    m.record_latency(req.enqueued.elapsed());
+                    let _ = req.respond.send(Ok(row));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batch execution failed: {e}");
+                for req in pending {
+                    let _ = req.respond.send(Err(anyhow::anyhow!(msg.clone())));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Synthetic datasets (DESIGN.md §Substitutions: CIFAR → CIFAR-like).
+//!
+//! The accuracy claim of Table 1 is about *mask connectivity*, which is
+//! scale-free; we exercise it with a separable-but-not-trivial synthetic
+//! task: class-conditional Gaussian clusters pushed through a fixed random
+//! nonlinear projection, normalized like image data. The generator is
+//! deterministic per seed, with disjoint train/test streams.
+
+pub mod synth;
+
+pub use synth::{Batch, CifarLike};

@@ -1,0 +1,52 @@
+//! Device descriptions for the cost model.
+
+/// A GPU-like device: the handful of numbers the roofline model needs.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    /// Peak FP32 throughput, FLOP/s.
+    pub fp32_flops: f64,
+    /// DRAM bandwidth, bytes/s.
+    pub dram_bw: f64,
+    /// L2 capacity, bytes.
+    pub l2_bytes: f64,
+    /// Aggregate shared-memory bandwidth, bytes/s.
+    pub smem_bw: f64,
+    /// Number of SMs (for per-step overhead amortization).
+    pub sms: f64,
+    /// Per-tile-step overhead (tile setup, barrier), seconds.
+    pub step_overhead: f64,
+    /// Kernel launch overhead, seconds.
+    pub launch_overhead: f64,
+}
+
+impl Device {
+    /// Tesla V100-SXM2 16 GB — the paper's testbed.
+    /// 15.7 TFLOP/s FP32, 900 GB/s HBM2, 6 MB L2, ~14 TB/s aggregate shared
+    /// memory (80 SMs × 128 B/clk × 1.38 GHz).
+    pub fn v100() -> Device {
+        Device {
+            name: "V100",
+            fp32_flops: 15.7e12,
+            dram_bw: 900e9,
+            l2_bytes: 6.0 * 1024.0 * 1024.0,
+            smem_bw: 14.1e12,
+            sms: 80.0,
+            step_overhead: 0.4e-6,
+            launch_overhead: 5e-6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v100_numbers_sane() {
+        let d = Device::v100();
+        assert!(d.fp32_flops > 1e13 && d.fp32_flops < 2e13);
+        assert!(d.dram_bw > 8e11 && d.dram_bw < 1e12);
+        assert!(d.smem_bw > d.dram_bw);
+    }
+}

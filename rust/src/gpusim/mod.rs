@@ -1,0 +1,28 @@
+//! GPU cost-model simulator — the V100 stand-in (DESIGN.md §Substitutions).
+//!
+//! The paper benchmarks SDMM kernels on a V100 with cuBLAS / cuSparse. We
+//! have no GPU, so Tables 1–3's *time* columns are regenerated from a
+//! mechanistic roofline model of the same memory hierarchy the paper's §5
+//! reasons about: DRAM ←→ L2 ←→ shared memory ←→ registers.
+//!
+//! The model is deliberately simple — four terms per kernel —
+//! and its constants are calibrated once against the paper's dense anchor
+//! (cuBLAS 4096³ ≈ 11.2 ms ⇒ 78 % of FP32 peak) and documented here:
+//!
+//! * `t_compute` — FLOPs / (peak · eff_kind). `eff` captures instruction
+//!   overhead of each kernel family (indexed loads, predication).
+//! * `t_dram`   — compulsory + re-fetch traffic at DRAM bandwidth, with
+//!   re-fetches waived when the working set fits in L2.
+//! * `t_smem`   — shared-memory→register traffic, divided by the register
+//!   reuse each pattern offers (row repetition `|G_r.U|·|G_b.U|` on the
+//!   W-side for RBGP4; fixed 8-wide N-register tiling on the I-side).
+//! * `t_step`   — per-tile-step overhead (tile setup + __syncthreads),
+//!   the term that makes `G_o` sparsity pay even at equal FLOPs.
+//!
+//! `t_total = max(t_compute, t_dram, t_smem) + t_step + launch`.
+
+pub mod costmodel;
+pub mod device;
+
+pub use costmodel::{estimate, explain_fig1, CostBreakdown, KernelKind, SdmmShape};
+pub use device::Device;

@@ -1,0 +1,295 @@
+//! Bipartite graph representation (§3 of the paper).
+//!
+//! A layer's connectivity is a bipartite graph `G = (U, V, E)` whose
+//! biadjacency matrix `BA` (|U| × |V|) is the layer's sparsity mask:
+//! left vertices = output neurons (rows), right vertices = input neurons
+//! (columns). Biregular graphs have constant left degree `d_l` and right
+//! degree `d_r`; biregularity requires `|U|·d_l == |V|·d_r`.
+
+use crate::util::rng::Rng;
+use std::collections::BTreeSet;
+
+/// An undirected bipartite graph stored as sorted left-adjacency lists.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BipartiteGraph {
+    /// Number of left vertices (|U|) — mask rows.
+    pub nu: usize,
+    /// Number of right vertices (|V|) — mask columns.
+    pub nv: usize,
+    /// `adj[u]` = sorted right-neighbours of left vertex `u`.
+    pub adj: Vec<Vec<usize>>,
+}
+
+impl BipartiteGraph {
+    /// Build from an explicit edge list; duplicates are rejected.
+    pub fn from_edges(nu: usize, nv: usize, edges: &[(usize, usize)]) -> anyhow::Result<Self> {
+        let mut adj = vec![Vec::new(); nu];
+        let mut seen = BTreeSet::new();
+        for &(u, v) in edges {
+            anyhow::ensure!(u < nu && v < nv, "edge ({u},{v}) out of range {nu}x{nv}");
+            anyhow::ensure!(seen.insert((u, v)), "duplicate edge ({u},{v})");
+            adj[u].push(v);
+        }
+        for a in &mut adj {
+            a.sort_unstable();
+        }
+        Ok(BipartiteGraph { nu, nv, adj })
+    }
+
+    /// The complete bipartite graph K_{nu,nv}.
+    pub fn complete(nu: usize, nv: usize) -> Self {
+        let adj = (0..nu).map(|_| (0..nv).collect()).collect();
+        BipartiteGraph { nu, nv, adj }
+    }
+
+    /// Identity-like graph: requires nu == nv, edge (i, i).
+    pub fn identity(n: usize) -> Self {
+        let adj = (0..n).map(|i| vec![i]).collect();
+        BipartiteGraph { nu: n, nv: n, adj }
+    }
+
+    /// A random `(d_l, d_r)`-biregular bipartite graph via random perfect
+    /// matchings on the edge-slot model: take `d_l` copies of the left slots
+    /// and `d_r` copies of the right slots, randomly match, resample on
+    /// collisions. Requires `nu*d_l == nv*d_r`, `d_l <= nv`, `d_r <= nu`.
+    pub fn random_biregular(
+        nu: usize,
+        nv: usize,
+        dl: usize,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(nu > 0 && nv > 0 && dl > 0, "empty graph");
+        anyhow::ensure!(dl <= nv, "left degree {dl} exceeds |V|={nv}");
+        anyhow::ensure!((nu * dl) % nv == 0, "degrees not integral: {nu}*{dl} % {nv} != 0");
+        let dr = nu * dl / nv;
+        anyhow::ensure!(dr <= nu, "right degree {dr} exceeds |U|={nu}");
+        // Configuration-model sampling with rejection on multi-edges; falls
+        // back to a randomly relabeled cyclic-window construction (always
+        // valid) when the rejection loop stalls at high density.
+        'attempt: for _ in 0..200 {
+            let mut right_slots: Vec<usize> = (0..nv).flat_map(|v| std::iter::repeat_n(v, dr)).collect();
+            rng.shuffle(&mut right_slots);
+            let mut adj = vec![Vec::with_capacity(dl); nu];
+            for (slot, &v) in right_slots.iter().enumerate() {
+                let u = slot / dl;
+                if adj[u].contains(&v) {
+                    continue 'attempt; // multi-edge: resample
+                }
+                adj[u].push(v);
+            }
+            for a in &mut adj {
+                a.sort_unstable();
+            }
+            return Ok(BipartiteGraph { nu, nv, adj });
+        }
+        // Cyclic-window construction: left vertex u connects to columns
+        // [u·dl, u·dl + dl) mod nv. Because nv | nu·dl the windows tile the
+        // cycle exactly dr times, giving a simple biregular graph for any
+        // valid (nu, nv, dl). Random left/right relabelings decorrelate it.
+        let pl = rng.permutation(nu);
+        let pr = rng.permutation(nv);
+        let mut adj = vec![Vec::with_capacity(dl); nu];
+        for u in 0..nu {
+            for j in 0..dl {
+                adj[pl[u]].push(pr[(u * dl + j) % nv]);
+            }
+        }
+        for a in &mut adj {
+            a.sort_unstable();
+        }
+        Ok(BipartiteGraph { nu, nv, adj })
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.adj.iter().map(Vec::len).sum()
+    }
+
+    /// Left degree if regular on the left, else None.
+    pub fn left_degree(&self) -> Option<usize> {
+        let d = self.adj.first()?.len();
+        self.adj.iter().all(|a| a.len() == d).then_some(d)
+    }
+
+    /// Right degree if regular on the right, else None.
+    pub fn right_degree(&self) -> Option<usize> {
+        let mut deg = vec![0usize; self.nv];
+        for a in &self.adj {
+            for &v in a {
+                deg[v] += 1;
+            }
+        }
+        let d = *deg.first()?;
+        deg.iter().all(|&x| x == d).then_some(d)
+    }
+
+    /// True iff the graph is (d_l, d_r)-biregular.
+    pub fn is_biregular(&self) -> bool {
+        self.left_degree().is_some() && self.right_degree().is_some()
+    }
+
+    /// Degrees `(d_l, d_r)`; errors if not biregular.
+    pub fn degrees(&self) -> anyhow::Result<(usize, usize)> {
+        match (self.left_degree(), self.right_degree()) {
+            (Some(dl), Some(dr)) => Ok((dl, dr)),
+            _ => anyhow::bail!("graph is not biregular"),
+        }
+    }
+
+    /// Fractional sparsity `1 − |E| / (|U|·|V|)`.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.num_edges() as f64 / (self.nu * self.nv) as f64
+    }
+
+    /// True iff this is the complete bipartite graph.
+    pub fn is_complete(&self) -> bool {
+        self.num_edges() == self.nu * self.nv
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.adj[u].binary_search(&v).is_ok()
+    }
+
+    /// Dense biadjacency matrix (row-major |U| × |V|, 0/1 as f32).
+    pub fn biadjacency(&self) -> Vec<f32> {
+        let mut ba = vec![0.0f32; self.nu * self.nv];
+        for (u, nbrs) in self.adj.iter().enumerate() {
+            for &v in nbrs {
+                ba[u * self.nv + v] = 1.0;
+            }
+        }
+        ba
+    }
+
+    /// Edge list in (u, v) lexicographic order.
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut e = Vec::with_capacity(self.num_edges());
+        for (u, nbrs) in self.adj.iter().enumerate() {
+            for &v in nbrs {
+                e.push((u, v));
+            }
+        }
+        e
+    }
+
+    /// Right-adjacency lists (`radj[v]` = sorted left-neighbours of v).
+    pub fn right_adj(&self) -> Vec<Vec<usize>> {
+        let mut radj = vec![Vec::new(); self.nv];
+        for (u, nbrs) in self.adj.iter().enumerate() {
+            for &v in nbrs {
+                radj[v].push(u);
+            }
+        }
+        radj // already sorted since u ascends
+    }
+
+    /// Is the graph connected (treating edges as undirected, over U ∪ V)?
+    /// Connectivity of the mask matters for information flow (§4).
+    pub fn is_connected(&self) -> bool {
+        if self.nu == 0 || self.nv == 0 {
+            return false;
+        }
+        let radj = self.right_adj();
+        let mut seen_u = vec![false; self.nu];
+        let mut seen_v = vec![false; self.nv];
+        let mut stack = vec![(true, 0usize)]; // (is_left, index)
+        seen_u[0] = true;
+        while let Some((left, i)) = stack.pop() {
+            if left {
+                for &v in &self.adj[i] {
+                    if !seen_v[v] {
+                        seen_v[v] = true;
+                        stack.push((false, v));
+                    }
+                }
+            } else {
+                for &u in &radj[i] {
+                    if !seen_u[u] {
+                        seen_u[u] = true;
+                        stack.push((true, u));
+                    }
+                }
+            }
+        }
+        seen_u.iter().all(|&b| b) && seen_v.iter().all(|&b| b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_graph_properties() {
+        let g = BipartiteGraph::complete(3, 5);
+        assert_eq!(g.num_edges(), 15);
+        assert_eq!(g.degrees().unwrap(), (5, 3));
+        assert!(g.is_complete());
+        assert_eq!(g.sparsity(), 0.0);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn from_edges_rejects_bad_input() {
+        assert!(BipartiteGraph::from_edges(2, 2, &[(0, 0), (0, 0)]).is_err());
+        assert!(BipartiteGraph::from_edges(2, 2, &[(2, 0)]).is_err());
+    }
+
+    #[test]
+    fn biadjacency_matches_edges() {
+        let g = BipartiteGraph::from_edges(2, 3, &[(0, 1), (1, 0), (1, 2)]).unwrap();
+        let ba = g.biadjacency();
+        assert_eq!(ba, vec![0., 1., 0., 1., 0., 1.]);
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(0, 0));
+    }
+
+    #[test]
+    fn random_biregular_is_biregular() {
+        let mut rng = Rng::new(42);
+        for &(nu, nv, dl) in &[(8, 8, 4), (16, 8, 2), (8, 16, 8), (32, 32, 4)] {
+            let g = BipartiteGraph::random_biregular(nu, nv, dl, &mut rng).unwrap();
+            let (gdl, gdr) = g.degrees().unwrap();
+            assert_eq!(gdl, dl);
+            assert_eq!(gdr, nu * dl / nv);
+            assert_eq!(g.num_edges(), nu * dl);
+        }
+    }
+
+    #[test]
+    fn random_biregular_rejects_impossible() {
+        let mut rng = Rng::new(1);
+        assert!(BipartiteGraph::random_biregular(3, 2, 1, &mut rng).is_err()); // 3*1 % 2 != 0
+        assert!(BipartiteGraph::random_biregular(2, 2, 3, &mut rng).is_err()); // dl > nv
+    }
+
+    #[test]
+    fn sparsity_of_half_graph() {
+        let mut rng = Rng::new(2);
+        let g = BipartiteGraph::random_biregular(8, 8, 4, &mut rng).unwrap();
+        assert!((g.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn right_adj_transposes() {
+        let g = BipartiteGraph::from_edges(2, 2, &[(0, 1), (1, 1)]).unwrap();
+        let r = g.right_adj();
+        assert_eq!(r[0], Vec::<usize>::new());
+        assert_eq!(r[1], vec![0, 1]);
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        // Two disjoint K_{1,1}'s: u0-v0, u1-v1.
+        let g = BipartiteGraph::from_edges(2, 2, &[(0, 0), (1, 1)]).unwrap();
+        assert!(!g.is_connected());
+        let c = BipartiteGraph::complete(2, 2);
+        assert!(c.is_connected());
+    }
+
+    #[test]
+    fn identity_graph() {
+        let g = BipartiteGraph::identity(4);
+        assert_eq!(g.degrees().unwrap(), (1, 1));
+        assert!(!g.is_connected()); // disjoint matchings
+    }
+}

@@ -1,0 +1,207 @@
+//! 2-lift operation (Appendix 8.1 / Bilu–Linial [3]).
+//!
+//! A 2-lift of `G` produces `G_L` twice as large in vertices and edges:
+//! clone the graph, then for each edge `(u, v)` independently keep either the
+//! identity pair `{(u,v), (u^c,v^c)}` or the crossover pair
+//! `{(u,v^c), (u^c,v)}`. Lifting preserves biregularity and left/right
+//! degrees, so repeated lifting of a complete bipartite graph
+//! `K_{(1−sp)·m, (1−sp)·n}` yields an `m × n` biregular graph with sparsity
+//! `sp` after `log2(1/(1−sp))` lifts.
+
+use crate::graph::bipartite::BipartiteGraph;
+use crate::util::rng::Rng;
+
+/// Which half a lifted vertex came from. Vertex `x` of `G` maps to `x`
+/// (original) and `x + n` (clone) in `G_L`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LiftSign {
+    /// Keep `{(u,v), (u^c,v^c)}`.
+    Identity,
+    /// Keep `{(u,v^c), (u^c,v)}`.
+    Crossover,
+}
+
+/// Apply a 2-lift with explicit per-edge signs (edge order =
+/// `g.edges()` lexicographic order). Exposed for deterministic tests; use
+/// [`lift2`] for random lifts.
+pub fn lift2_with_signs(g: &BipartiteGraph, signs: &[LiftSign]) -> anyhow::Result<BipartiteGraph> {
+    let edges = g.edges();
+    anyhow::ensure!(
+        signs.len() == edges.len(),
+        "need {} signs, got {}",
+        edges.len(),
+        signs.len()
+    );
+    let mut out = Vec::with_capacity(edges.len() * 2);
+    for (&(u, v), &sign) in edges.iter().zip(signs) {
+        let (uc, vc) = (u + g.nu, v + g.nv);
+        match sign {
+            LiftSign::Identity => {
+                out.push((u, v));
+                out.push((uc, vc));
+            }
+            LiftSign::Crossover => {
+                out.push((u, vc));
+                out.push((uc, v));
+            }
+        }
+    }
+    BipartiteGraph::from_edges(g.nu * 2, g.nv * 2, &out)
+}
+
+/// Apply one uniformly-random 2-lift.
+pub fn lift2(g: &BipartiteGraph, rng: &mut Rng) -> BipartiteGraph {
+    let signs: Vec<LiftSign> = (0..g.num_edges())
+        .map(|_| {
+            if rng.bool(0.5) {
+                LiftSign::Crossover
+            } else {
+                LiftSign::Identity
+            }
+        })
+        .collect();
+    lift2_with_signs(g, &signs).expect("lift of a valid graph is valid")
+}
+
+/// Number of 2-lifts needed to reach sparsity `sp` starting from a complete
+/// graph: `log2(1 / (1 − sp))`. Errors unless `1/(1−sp)` is a power of two
+/// (the paper's generator only supports dyadic sparsities: 0, 1/2, 3/4,
+/// 7/8, 15/16, …).
+pub fn lifts_for_sparsity(sp: f64) -> anyhow::Result<u32> {
+    anyhow::ensure!((0.0..1.0).contains(&sp), "sparsity {sp} out of [0,1)");
+    let inv = 1.0 / (1.0 - sp);
+    let k = inv.log2().round() as u32;
+    let back = 1.0 - 0.5f64.powi(k as i32);
+    anyhow::ensure!(
+        (back - sp).abs() < 1e-9,
+        "sparsity {sp} is not dyadic (1 - 2^-k); nearest is {back}"
+    );
+    Ok(k)
+}
+
+/// Generate a random `(m × n)` biregular bipartite graph of dyadic sparsity
+/// `sp` by repeatedly 2-lifting the complete graph
+/// `K_{(1−sp)·m, (1−sp)·n}` (Appendix 8.1, "Generating sparse biregular
+/// bipartite graph"). The result has `d_l = (1−sp)·n`, `d_r = (1−sp)·m`.
+pub fn sparse_biregular_by_lifts(
+    m: usize,
+    n: usize,
+    sp: f64,
+    rng: &mut Rng,
+) -> anyhow::Result<BipartiteGraph> {
+    let k = lifts_for_sparsity(sp)?;
+    let frac = 0.5f64.powi(k as i32); // = 1 - sp
+    let base_m = ((m as f64) * frac).round() as usize;
+    let base_n = ((n as f64) * frac).round() as usize;
+    anyhow::ensure!(
+        base_m >= 1 && base_n >= 1,
+        "sparsity {sp} too high for {m}x{n}: base graph would be empty"
+    );
+    anyhow::ensure!(
+        base_m << k == m && base_n << k == n,
+        "{m}x{n} not divisible by 2^{k}; cannot reach sparsity {sp} by 2-lifts"
+    );
+    let mut g = BipartiteGraph::complete(base_m, base_n);
+    for _ in 0..k {
+        g = lift2(&g, rng);
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lift_doubles_vertices_and_edges() {
+        let g = BipartiteGraph::complete(3, 4);
+        let mut rng = Rng::new(1);
+        let gl = lift2(&g, &mut rng);
+        assert_eq!(gl.nu, 6);
+        assert_eq!(gl.nv, 8);
+        assert_eq!(gl.num_edges(), 24);
+    }
+
+    #[test]
+    fn lift_preserves_biregularity_and_degrees() {
+        let mut rng = Rng::new(2);
+        let g = BipartiteGraph::random_biregular(8, 4, 2, &mut rng).unwrap();
+        let (dl, dr) = g.degrees().unwrap();
+        let gl = lift2(&g, &mut rng);
+        assert_eq!(gl.degrees().unwrap(), (dl, dr));
+    }
+
+    #[test]
+    fn identity_signs_give_two_disjoint_copies() {
+        let g = BipartiteGraph::complete(2, 2);
+        let signs = vec![LiftSign::Identity; 4];
+        let gl = lift2_with_signs(&g, &signs).unwrap();
+        // Edges stay within {orig} x {orig} or {clone} x {clone}.
+        for (u, v) in gl.edges() {
+            assert_eq!(u < 2, v < 2);
+        }
+        assert!(!gl.is_connected());
+    }
+
+    #[test]
+    fn crossover_signs_give_bipartite_double_cover_structure() {
+        let g = BipartiteGraph::complete(2, 2);
+        let signs = vec![LiftSign::Crossover; 4];
+        let gl = lift2_with_signs(&g, &signs).unwrap();
+        for (u, v) in gl.edges() {
+            assert_ne!(u < 2, v < 2); // all edges cross halves
+        }
+        assert_eq!(gl.num_edges(), 8);
+    }
+
+    #[test]
+    fn figure4_example_shape() {
+        // Figure 4: a graph where two edges cross over. Start from K_{2,2},
+        // cross edges (u1,v1)=(0,0) and (u2,v2)=(1,1) (paper's labels 1-based).
+        let g = BipartiteGraph::complete(2, 2);
+        let signs = vec![
+            LiftSign::Crossover, // (0,0)
+            LiftSign::Identity,  // (0,1)
+            LiftSign::Identity,  // (1,0)
+            LiftSign::Crossover, // (1,1)
+        ];
+        let gl = lift2_with_signs(&g, &signs).unwrap();
+        assert!(gl.has_edge(0, 2)); // u1 — v1^c
+        assert!(gl.has_edge(2, 0)); // u1^c — v1
+        assert!(gl.has_edge(0, 1)); // identity edge kept
+        assert!(gl.has_edge(1, 3)); // u2 — v2^c
+        assert!(gl.has_edge(3, 1)); // u2^c — v2
+        assert_eq!(gl.degrees().unwrap(), (2, 2));
+    }
+
+    #[test]
+    fn lifts_for_sparsity_dyadic() {
+        assert_eq!(lifts_for_sparsity(0.0).unwrap(), 0);
+        assert_eq!(lifts_for_sparsity(0.5).unwrap(), 1);
+        assert_eq!(lifts_for_sparsity(0.75).unwrap(), 2);
+        assert_eq!(lifts_for_sparsity(0.875).unwrap(), 3);
+        assert_eq!(lifts_for_sparsity(0.9375).unwrap(), 4);
+        assert!(lifts_for_sparsity(0.6).is_err());
+        assert!(lifts_for_sparsity(1.0).is_err());
+    }
+
+    #[test]
+    fn sparse_biregular_by_lifts_reaches_target() {
+        let mut rng = Rng::new(7);
+        for &(m, n, sp) in &[(32usize, 32usize, 0.5f64), (32, 128, 0.75), (64, 64, 0.875)] {
+            let g = sparse_biregular_by_lifts(m, n, sp, &mut rng).unwrap();
+            assert_eq!(g.nu, m);
+            assert_eq!(g.nv, n);
+            assert!((g.sparsity() - sp).abs() < 1e-12, "sp={}", g.sparsity());
+            let (dl, dr) = g.degrees().unwrap();
+            assert_eq!(dl, ((1.0 - sp) * n as f64).round() as usize);
+            assert_eq!(dr, ((1.0 - sp) * m as f64).round() as usize);
+        }
+    }
+
+    #[test]
+    fn sparse_biregular_rejects_nondivisible() {
+        let mut rng = Rng::new(3);
+        assert!(sparse_biregular_by_lifts(6, 6, 0.75, &mut rng).is_err());
+    }
+}

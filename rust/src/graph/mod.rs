@@ -1,0 +1,14 @@
+//! Graph-theory substrate: bipartite graphs, 2-lifts, spectral analysis,
+//! Ramanujan certification/generation, and the bipartite graph product —
+//! everything §3–§4 and Appendix 8.1 of the paper rely on.
+
+pub mod bipartite;
+pub mod lift;
+pub mod product;
+pub mod ramanujan;
+pub mod spectral;
+
+pub use bipartite::BipartiteGraph;
+pub use product::{product, product_many};
+pub use ramanujan::{certify, generate, ramanujan_bound, Certificate};
+pub use spectral::{spectrum, Spectrum};

@@ -1,0 +1,193 @@
+//! Bipartite graph product ⊗_b (§3, Figure 2).
+//!
+//! `G_p = G_1 ⊗_b G_2` has `U_p = U_1 × U_2`, `V_p = V_1 × V_2` and an edge
+//! `((u_1,u_2),(v_1,v_2))` iff `(u_1,v_1) ∈ E_1` and `(u_2,v_2) ∈ E_2`.
+//! Vertex `(a, b)` of the product is flattened to index `a·|·_2| + b`, which
+//! makes the biadjacency of the product exactly the tensor (Kronecker)
+//! product `BA_p = BA_1 ⊗ BA_2`.
+
+use crate::graph::bipartite::BipartiteGraph;
+
+/// Bipartite graph product of two graphs.
+pub fn product(g1: &BipartiteGraph, g2: &BipartiteGraph) -> BipartiteGraph {
+    let nu = g1.nu * g2.nu;
+    let nv = g1.nv * g2.nv;
+    let mut adj = vec![Vec::new(); nu];
+    for (u1, n1) in g1.adj.iter().enumerate() {
+        for (u2, n2) in g2.adj.iter().enumerate() {
+            let u = u1 * g2.nu + u2;
+            let lst = &mut adj[u];
+            lst.reserve(n1.len() * n2.len());
+            for &v1 in n1 {
+                for &v2 in n2 {
+                    lst.push(v1 * g2.nv + v2);
+                }
+            }
+            lst.sort_unstable();
+        }
+    }
+    BipartiteGraph { nu, nv, adj }
+}
+
+/// K-way product `G_1 ⊗_b … ⊗_b G_K` (left-associated; ⊗_b is associative
+/// under the flattening convention, which the tests verify).
+pub fn product_many(gs: &[&BipartiteGraph]) -> anyhow::Result<BipartiteGraph> {
+    anyhow::ensure!(!gs.is_empty(), "product of zero graphs");
+    let mut acc = gs[0].clone();
+    for g in &gs[1..] {
+        acc = product(&acc, g);
+    }
+    Ok(acc)
+}
+
+/// Tensor (Kronecker) product of two dense row-major matrices — the matrix
+/// view of ⊗_b. Used as the test oracle for [`product`] and by the sparsity
+/// pattern validators.
+pub fn kronecker(a: &[f32], (am, an): (usize, usize), b: &[f32], (bm, bn): (usize, usize)) -> Vec<f32> {
+    assert_eq!(a.len(), am * an);
+    assert_eq!(b.len(), bm * bn);
+    let (m, n) = (am * bm, an * bn);
+    let mut out = vec![0.0f32; m * n];
+    for i1 in 0..am {
+        for j1 in 0..an {
+            let aij = a[i1 * an + j1];
+            if aij == 0.0 {
+                continue;
+            }
+            for i2 in 0..bm {
+                let row = (i1 * bm + i2) * n + j1 * bn;
+                let brow = i2 * bn;
+                for j2 in 0..bn {
+                    out[row + j2] = aij * b[brow + j2];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::spectral::singular_values_dense_oracle;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn product_sizes_and_edges() {
+        let g1 = BipartiteGraph::complete(2, 3);
+        let g2 = BipartiteGraph::complete(4, 5);
+        let p = product(&g1, &g2);
+        assert_eq!((p.nu, p.nv), (8, 15));
+        assert_eq!(p.num_edges(), g1.num_edges() * g2.num_edges());
+    }
+
+    #[test]
+    fn product_biadjacency_is_kronecker() {
+        let mut rng = Rng::new(4);
+        let g1 = BipartiteGraph::random_biregular(4, 4, 2, &mut rng).unwrap();
+        let g2 = BipartiteGraph::random_biregular(4, 2, 1, &mut rng).unwrap();
+        let p = product(&g1, &g2);
+        let kron = kronecker(
+            &g1.biadjacency(),
+            (g1.nu, g1.nv),
+            &g2.biadjacency(),
+            (g2.nu, g2.nv),
+        );
+        assert_eq!(p.biadjacency(), kron);
+    }
+
+    #[test]
+    fn figure2_example() {
+        // Figure 2: G_1 is a 2x2 graph with edges forming an X-ish pattern,
+        // G_2 = K_{2,2}. Product biadjacency has CBS blocks of size (2,2):
+        // wherever BA_1 is 1, a full 2x2 block appears.
+        let g1 = BipartiteGraph::from_edges(2, 2, &[(0, 0), (1, 0), (1, 1)]).unwrap();
+        let g2 = BipartiteGraph::complete(2, 2);
+        let p = product(&g1, &g2);
+        let ba = p.biadjacency();
+        for bi in 0..2 {
+            for bj in 0..2 {
+                let expect = if g1.has_edge(bi, bj) { 1.0 } else { 0.0 };
+                for i in 0..2 {
+                    for j in 0..2 {
+                        assert_eq!(ba[(bi * 2 + i) * 4 + bj * 2 + j], expect);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn product_degrees_multiply() {
+        let mut rng = Rng::new(8);
+        let g1 = BipartiteGraph::random_biregular(8, 8, 2, &mut rng).unwrap();
+        let g2 = BipartiteGraph::random_biregular(4, 4, 2, &mut rng).unwrap();
+        let p = product(&g1, &g2);
+        assert_eq!(p.degrees().unwrap(), (4, 4));
+    }
+
+    #[test]
+    fn product_sparsity_composes() {
+        // sparsity(G) = 1 - (1-α1)(1-α2)
+        let mut rng = Rng::new(9);
+        let g1 = BipartiteGraph::random_biregular(8, 8, 4, &mut rng).unwrap(); // α=0.5
+        let g2 = BipartiteGraph::random_biregular(8, 8, 2, &mut rng).unwrap(); // α=0.75
+        let p = product(&g1, &g2);
+        assert!((p.sparsity() - (1.0 - 0.5 * 0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn product_associative_under_flattening() {
+        let mut rng = Rng::new(10);
+        let a = BipartiteGraph::random_biregular(2, 4, 2, &mut rng).unwrap();
+        let b = BipartiteGraph::random_biregular(4, 2, 1, &mut rng).unwrap();
+        let c = BipartiteGraph::complete(2, 2);
+        let left = product(&product(&a, &b), &c);
+        let right = product(&a, &product(&b, &c));
+        assert_eq!(left, right);
+    }
+
+    #[test]
+    fn product_many_matches_fold() {
+        let a = BipartiteGraph::complete(2, 2);
+        let b = BipartiteGraph::identity(2);
+        let c = BipartiteGraph::complete(1, 3);
+        let p = product_many(&[&a, &b, &c]).unwrap();
+        assert_eq!(p.nu, 4);
+        assert_eq!(p.nv, 12);
+        assert_eq!(p.num_edges(), 4 * 2 * 3);
+    }
+
+    #[test]
+    fn eigenvalues_of_product_are_products() {
+        // Theorem 1's engine: singular values of a Kronecker product are the
+        // pairwise products of singular values.
+        let mut rng = Rng::new(12);
+        let g1 = BipartiteGraph::random_biregular(6, 6, 3, &mut rng).unwrap();
+        let g2 = BipartiteGraph::random_biregular(4, 4, 2, &mut rng).unwrap();
+        let p = product(&g1, &g2);
+        let s1 = singular_values_dense_oracle(&g1);
+        let s2 = singular_values_dense_oracle(&g2);
+        let sp = singular_values_dense_oracle(&p);
+        let mut expect: Vec<f64> = s1.iter().flat_map(|a| s2.iter().map(move |b| a * b)).collect();
+        expect.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        for (i, (got, want)) in sp.iter().zip(expect.iter()).enumerate() {
+            assert!((got - want).abs() < 1e-6, "sv[{i}]: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn kronecker_small_oracle() {
+        let a = vec![1.0, 0.0, 0.0, 1.0]; // I2
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        let k = kronecker(&a, (2, 2), &b, (2, 2));
+        #[rustfmt::skip]
+        let expect = vec![
+            1., 2., 0., 0.,
+            3., 4., 0., 0.,
+            0., 0., 1., 2.,
+            0., 0., 3., 4.,
+        ];
+        assert_eq!(k, expect);
+    }
+}

@@ -1,0 +1,186 @@
+//! Dense GEMM baselines (the cuBLAS stand-in for Table 2's 0 %-sparsity row).
+//!
+//! `gemm_naive` is the correctness oracle; `gemm_blocked` is the
+//! cache-blocked implementation used for timing. All matrices are row-major
+//! f32: `O (M×N) = W (M×K) · I (K×N)`.
+
+use crate::util::threadpool::parallel_rows;
+
+/// Triple-loop reference GEMM (i-k-j order so the inner loop streams the
+/// output row — still the slow oracle, only for tests/small shapes).
+pub fn gemm_naive(w: &[f32], i: &[f32], o: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(w.len(), m * k);
+    assert_eq!(i.len(), k * n);
+    assert_eq!(o.len(), m * n);
+    o.fill(0.0);
+    for r in 0..m {
+        for kk in 0..k {
+            let a = w[r * k + kk];
+            if a == 0.0 {
+                continue;
+            }
+            let irow = &i[kk * n..(kk + 1) * n];
+            let orow = &mut o[r * n..(r + 1) * n];
+            for c in 0..n {
+                orow[c] += a * irow[c];
+            }
+        }
+    }
+}
+
+/// Cache-blocked GEMM: MC×KC panels of W against KC-row slabs of I, with a
+/// 4-row micro-kernel that keeps four output rows hot while streaming I.
+pub fn gemm_blocked(w: &[f32], inp: &[f32], o: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(w.len(), m * k);
+    assert_eq!(inp.len(), k * n);
+    assert_eq!(o.len(), m * n);
+    o.fill(0.0);
+    const MC: usize = 32;
+    const KC: usize = 256;
+    let mut r0 = 0;
+    while r0 < m {
+        let mb = MC.min(m - r0);
+        let mut k0 = 0;
+        while k0 < k {
+            let kb = KC.min(k - k0);
+            gemm_panel(w, inp, o, r0, mb, k0, kb, k, n);
+            k0 += kb;
+        }
+        r0 += mb;
+    }
+}
+
+/// One (mb × kb) panel of W times the corresponding slab of I, accumulated
+/// into O. Processes rows in groups of 4 for register reuse of I rows.
+#[inline]
+fn gemm_panel(
+    w: &[f32],
+    inp: &[f32],
+    o: &mut [f32],
+    r0: usize,
+    mb: usize,
+    k0: usize,
+    kb: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut r = 0;
+    while r + 4 <= mb {
+        let base = (r0 + r) * k + k0;
+        let (w0, w1, w2, w3) = (
+            &w[base..base + kb],
+            &w[base + k..base + k + kb],
+            &w[base + 2 * k..base + 2 * k + kb],
+            &w[base + 3 * k..base + 3 * k + kb],
+        );
+        for kk in 0..kb {
+            let (a0, a1, a2, a3) = (w0[kk], w1[kk], w2[kk], w3[kk]);
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                continue;
+            }
+            let irow = &inp[(k0 + kk) * n..(k0 + kk + 1) * n];
+            let ob = (r0 + r) * n;
+            for c in 0..n {
+                let x = irow[c];
+                o[ob + c] += a0 * x;
+                o[ob + n + c] += a1 * x;
+                o[ob + 2 * n + c] += a2 * x;
+                o[ob + 3 * n + c] += a3 * x;
+            }
+        }
+        r += 4;
+    }
+    while r < mb {
+        let wrow = &w[(r0 + r) * k + k0..(r0 + r) * k + k0 + kb];
+        for kk in 0..kb {
+            let a = wrow[kk];
+            if a == 0.0 {
+                continue;
+            }
+            let irow = &inp[(k0 + kk) * n..(k0 + kk + 1) * n];
+            let ob = (r0 + r) * n;
+            for c in 0..n {
+                o[ob + c] += a * irow[c];
+            }
+        }
+        r += 1;
+    }
+}
+
+/// Multi-threaded blocked GEMM: row-partitioned (disjoint output chunks).
+pub fn gemm_parallel(
+    w: &[f32],
+    inp: &[f32],
+    o: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    assert_eq!(o.len(), m * n);
+    parallel_rows(o, m, n, threads, |row0, chunk| {
+        let rows = chunk.len() / n;
+        gemm_blocked(&w[row0 * k..(row0 + rows) * k], inp, chunk, rows, k, n);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, len: usize) -> Vec<f32> {
+        rng.normal_vec_f32(len, 1.0)
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                "idx {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Rng::new(100);
+        for &(m, k, n) in &[(5usize, 7usize, 9usize), (64, 64, 32), (100, 300, 17), (130, 257, 65)] {
+            let w = rand_mat(&mut rng, m * k);
+            let i = rand_mat(&mut rng, k * n);
+            let mut o1 = vec![0.0; m * n];
+            let mut o2 = vec![0.0; m * n];
+            gemm_naive(&w, &i, &mut o1, m, k, n);
+            gemm_blocked(&w, &i, &mut o2, m, k, n);
+            assert_close(&o1, &o2, 1e-4);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_naive() {
+        let mut rng = Rng::new(101);
+        let (m, k, n) = (97, 128, 33);
+        let w = rand_mat(&mut rng, m * k);
+        let i = rand_mat(&mut rng, k * n);
+        let mut o1 = vec![0.0; m * n];
+        let mut o2 = vec![0.0; m * n];
+        gemm_naive(&w, &i, &mut o1, m, k, n);
+        gemm_parallel(&w, &i, &mut o2, m, k, n, 4);
+        assert_close(&o1, &o2, 1e-4);
+    }
+
+    #[test]
+    fn identity_weight_copies_input() {
+        let n = 8;
+        let mut w = vec![0.0f32; n * n];
+        for d in 0..n {
+            w[d * n + d] = 1.0;
+        }
+        let mut rng = Rng::new(102);
+        let i = rand_mat(&mut rng, n * 4);
+        let mut o = vec![0.0; n * 4];
+        gemm_blocked(&w, &i, &mut o, n, n, 4);
+        assert_close(&o, &i, 1e-6);
+    }
+}

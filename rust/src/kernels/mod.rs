@@ -1,0 +1,14 @@
+//! SDMM kernels: the dense (cuBLAS stand-in), unstructured CSR and block BSR
+//! baselines (cuSparse stand-ins), and the paper's RBGP4MM (Algorithm 1)
+//! adapted to the CPU cache hierarchy. These are the *measured* halves of
+//! Tables 1–3; the V100 estimates come from [`crate::gpusim`].
+
+pub mod bsr_sdmm;
+pub mod csr_sdmm;
+pub mod dense;
+pub mod rbgp4mm;
+
+pub use bsr_sdmm::{bsr_sdmm, bsr_sdmm_parallel};
+pub use csr_sdmm::{csr_sdmm, csr_sdmm_parallel};
+pub use dense::{gemm_blocked, gemm_naive, gemm_parallel};
+pub use rbgp4mm::{rbgp4mm, rbgp4mm_naive, rbgp4mm_parallel};

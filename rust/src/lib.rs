@@ -1,0 +1,28 @@
+//! # RBGP — Ramanujan Bipartite Graph Products for Block Sparse Networks
+//!
+//! Rust + JAX + Pallas reproduction of Vooturi, Varma & Kothapalli (2020).
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+//!
+//! Layer map:
+//! * [`graph`] / [`sparsity`] — the paper's §3–§4 theory: Ramanujan graph
+//!   generation by 2-lifts, graph products, RCUBS patterns, RBGP4 masks.
+//! * [`kernels`] — measured CPU SDMM kernels (dense/CSR/BSR/RBGP4MM).
+//! * [`gpusim`] — V100 roofline cost model (the paper's testbed stand-in).
+//! * [`models`] / [`data`] — VGG19 & WRN-40-4 shape descriptions, synthetic
+//!   CIFAR-like data.
+//! * [`runtime`] / [`coordinator`] — PJRT artifact execution and the
+//!   training/serving drivers (Python never runs at request time).
+//! * [`bench_harness`] — regenerates every table of the paper's evaluation.
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod data;
+pub mod gpusim;
+pub mod graph;
+pub mod kernels;
+pub mod models;
+pub mod runtime;
+pub mod sparsity;
+pub mod train_native;
+pub mod util;

@@ -1,0 +1,297 @@
+//! `rbgp` — CLI for the RBGP block-sparse neural network system.
+//!
+//! Subcommands map one-to-one onto the paper's artifacts:
+//!   gen-graph   sample + certify a Ramanujan bipartite graph (App. 8.1)
+//!   make-mask   sample an RBGP4 mask, write the succinct JSON form
+//!   spectral    Theorem-1 numeric check (spectral-gap ratio → 1)
+//!   memory      Table-1 memory accounting (+ --fig3 succinctness demo)
+//!   explain     Figure-1 tiling/reuse walkthrough for a config
+//!   table1/2/3  regenerate the paper's evaluation tables
+//!   train       run the AOT train-step artifact on CIFAR-like data
+//!   serve       batched inference server demo over the forward artifact
+
+use rbgp::bench_harness::{table1, table2, table3};
+use rbgp::coordinator::{InferenceServer, ServerConfig, TrainConfig, Trainer};
+use rbgp::data::CifarLike;
+use rbgp::graph::{product_many, ramanujan, spectral, BipartiteGraph};
+use rbgp::gpusim::explain_fig1;
+use rbgp::models::{vgg::vgg19, wideresnet::wrn40_4};
+use rbgp::sparsity::memory::{network_bytes, Pattern};
+use rbgp::sparsity::rbgp4::{Rbgp4Config, Rbgp4Mask};
+use rbgp::util::cli::Args;
+use rbgp::util::fmt_mb;
+use rbgp::util::rng::Rng;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+rbgp — Ramanujan Bipartite Graph Products for block sparse neural networks
+
+USAGE: rbgp <command> [options]
+
+COMMANDS
+  gen-graph  --m 32 --n 32 --sp 0.75 [--seed 0]        sample + certify an RBG
+  make-mask  [--config-json FILE | --sp-o .5 --sp-i .5] [--out mask.json]
+  spectral   --theorem1 [--sp 0.75] [--seed 0]          Thm-1 ratio vs size
+  memory     [--network vgg19|wrn40-4] [--fig3]         Table-1 Mem column
+  explain    [--sp-o .5 --sp-i .5]                      Fig-1 tiling walkthrough
+  table1                                                Table 1 (mem + time model)
+  table2     [--measure-n 1024] [--seed 0]              Table 2 (model + measured)
+  table3     [--measure-n 1024] [--seed 0]              Table 3 (model + measured)
+  train      [--artifacts DIR] [--steps 300] [--lr 0.1] [--seed 0] [--distill]
+             [--save ckpt.json] [--load ckpt.json]
+  serve      [--artifacts DIR] [--requests 512] [--clients 4]
+             [--checkpoint ckpt.json]
+
+Run `make artifacts` before train/serve.";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_str("artifacts", "artifacts"))
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.command() {
+        Some("gen-graph") => gen_graph(args),
+        Some("make-mask") => make_mask(args),
+        Some("spectral") => spectral_cmd(args),
+        Some("memory") => memory_cmd(args),
+        Some("explain") => explain_cmd(args),
+        Some("table1") => {
+            for t in table1::run() {
+                println!("{}", t.render());
+            }
+            Ok(())
+        }
+        Some("table2") => {
+            let n = args.get_usize("measure-n", 1024)?;
+            println!("{}", table2::run(n, args.get_u64("seed", 0)?).render());
+            Ok(())
+        }
+        Some("table3") => {
+            let n = args.get_usize("measure-n", 1024)?;
+            println!("{}", table3::run(n, args.get_u64("seed", 0)?).render());
+            Ok(())
+        }
+        Some("train") => train_cmd(args),
+        Some("serve") => serve_cmd(args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn gen_graph(args: &Args) -> anyhow::Result<()> {
+    let m = args.get_usize("m", 32)?;
+    let n = args.get_usize("n", 32)?;
+    let sp = args.get_f64("sp", 0.75)?;
+    let mut rng = Rng::new(args.get_u64("seed", 0)?);
+    let t0 = std::time::Instant::now();
+    let gen = ramanujan::generate(m, n, sp, &mut rng, 500)?;
+    let c = gen.cert;
+    println!("Ramanujan bipartite graph {m}x{n} @ sparsity {sp}");
+    println!("  degrees      (d_l, d_r) = ({}, {})", c.dl, c.dr);
+    println!("  λ1 = {:.4}   λ2 = {:.4}   bound = {:.4}", c.lambda1, c.lambda2, c.bound);
+    println!("  spectral gap = {:.4}", c.lambda1 - c.lambda2);
+    println!("  Ramanujan: {}  (attempt {} of sampling loop)", c.is_ramanujan, gen.attempts);
+    println!("  connected: {}", gen.graph.is_connected());
+    println!("  generated in {:.3}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn parse_config(args: &Args) -> anyhow::Result<Rbgp4Config> {
+    if let Some(path) = args.get("config-json") {
+        let text = std::fs::read_to_string(path)?;
+        return Rbgp4Config::from_json(&rbgp::util::json::Json::parse(&text)?);
+    }
+    let sp_o = args.get_f64("sp-o", 0.5)?;
+    let sp_i = args.get_f64("sp-i", 0.5)?;
+    Ok(Rbgp4Config::paper_default(sp_o, sp_i))
+}
+
+fn make_mask(args: &Args) -> anyhow::Result<()> {
+    let config = parse_config(args)?;
+    let mut rng = Rng::new(args.get_u64("seed", 0)?);
+    let mask = Rbgp4Mask::sample(config, &mut rng)?;
+    let out = args.get_str("out", "mask.json");
+    std::fs::write(&out, mask.to_json().to_string_pretty())?;
+    println!(
+        "wrote {out}: {}x{} sparsity {:.4}, row_nnz {}, succinct index {} elems ({}x smaller than adjacency)",
+        mask.rows(),
+        mask.cols(),
+        config.sparsity(),
+        config.row_nnz(),
+        mask.succinct_index_elems(),
+        mask.generic_index_elems() / mask.succinct_index_elems().max(1)
+    );
+    Ok(())
+}
+
+fn spectral_cmd(args: &Args) -> anyhow::Result<()> {
+    let sp = args.get_f64("sp", 0.75)?;
+    let seed = args.get_u64("seed", 0)?;
+    let mut rng = Rng::new(seed);
+    println!("Theorem 1 — spectral gap of G = G1 ⊗ G2 vs the ideal d²-regular gap");
+    println!("(ratio → 1 as n grows; both base graphs n x n @ sparsity {sp})\n");
+    println!("{:>6} {:>6} {:>12} {:>12} {:>10}", "n", "d", "gap(G)", "ideal gap", "ratio");
+    for n in [8usize, 16, 32, 64] {
+        let d = ((1.0 - sp) * n as f64).round() as usize;
+        if d < 4 {
+            // Ramanujan bound is vacuous at d ≤ 2 (λ2 ≤ 2 = λ1); skip.
+            continue;
+        }
+        let g1 = ramanujan::generate_best_effort(n, n, sp, &mut rng, 64)?.0.graph;
+        let g2 = ramanujan::generate_best_effort(n, n, sp, &mut rng, 64)?.0.graph;
+        let p = product_many(&[&g1, &g2])?;
+        let s = spectral::spectrum(&p, rng.next_u64());
+        let d2 = (d * d) as f64;
+        let ideal = d2 - 2.0 * (d2 - 1.0).sqrt();
+        let gap = s.gap();
+        println!(
+            "{n:>6} {d:>6} {gap:>12.4} {ideal:>12.4} {:>10.4}",
+            ideal / gap.max(1e-12)
+        );
+    }
+    println!("\n(λ2 of the product is the product of base λ's — see graph::product tests)");
+    Ok(())
+}
+
+fn memory_cmd(args: &Args) -> anyhow::Result<()> {
+    if args.flag("fig3") {
+        // Figure-3 succinctness example: 4 base graphs, 512 edges vs 22.
+        let mut rng = Rng::new(1);
+        let g1 = BipartiteGraph::random_biregular(4, 4, 2, &mut rng)?;
+        let g2 = BipartiteGraph::identity(2);
+        let g3 = BipartiteGraph::random_biregular(4, 4, 2, &mut rng)?;
+        let g4 = BipartiteGraph::complete(2, 2);
+        let p = product_many(&[&g1, &g2, &g3, &g4])?;
+        let base_edges = g1.num_edges() + g2.num_edges() + g3.num_edges() + g4.num_edges();
+        println!("Figure 3 — succinct connectivity storage");
+        println!("  product graph: {}x{} with {} edges", p.nu, p.nv, p.num_edges());
+        println!("  base-graph edges stored: {base_edges}");
+        println!("  reduction: {:.1}x", p.num_edges() as f64 / base_edges as f64);
+        return Ok(());
+    }
+    let which = args.get_str("network", "vgg19");
+    let net = match which.as_str() {
+        "vgg19" => vgg19(10),
+        "wrn40-4" | "wideresnet" => wrn40_4(10),
+        other => anyhow::bail!("unknown network '{other}' (vgg19|wrn40-4)"),
+    };
+    println!("{} — memory by pattern (MB), Table 1 Mem column", net.name);
+    let layers = net.memory_layers();
+    println!(
+        "{:>10} {:>10} {:>14} {:>12} {:>10}",
+        "Sparsity%", "Dense", "Unstructured", "Block(4,4)", "RBGP4"
+    );
+    for sp in [0.5, 0.75, 0.875, 0.9375] {
+        println!(
+            "{:>10.2} {:>10} {:>14} {:>12} {:>10}",
+            sp * 100.0,
+            fmt_mb(network_bytes(&layers, sp, Pattern::Dense)),
+            fmt_mb(network_bytes(&layers, sp, Pattern::Unstructured)),
+            fmt_mb(network_bytes(&layers, sp, Pattern::Block(4, 4))),
+            fmt_mb(network_bytes(&layers, sp, Pattern::Rbgp4)),
+        );
+    }
+    Ok(())
+}
+
+fn explain_cmd(args: &Args) -> anyhow::Result<()> {
+    let config = parse_config(args)?;
+    let e = explain_fig1(&config);
+    println!("Figure 1 — RBGP4 tiled SDMM decomposition");
+    println!("  W_s: {}x{}  sparsity {:.4}", config.rows(), config.cols(), config.sparsity());
+    println!("  tile (TM, TK) = ({}, {})", e.tile_m, e.tile_k);
+    println!(
+        "  steps per output tile: {} of {} (G_o skips {:.0}% of tiles)",
+        e.steps_skipped,
+        e.steps_dense,
+        100.0 * (1.0 - e.steps_skipped as f64 / e.steps_dense as f64)
+    );
+    println!("  row repetition (|G_r.U|·|G_b.U|): {}", e.row_repetition);
+    println!("  RegW reuse: {}x   RegI reuse: {}x", e.regw_reuse, e.regi_reuse);
+    Ok(())
+}
+
+fn train_cmd(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    let config = TrainConfig {
+        steps: args.get_usize("steps", 300)?,
+        lr0: args.get_f64("lr", 0.1)? as f32,
+        seed: args.get_u64("seed", 0)?,
+        distill: args.flag("distill"),
+        eval_every: args.get_usize("eval-every", 50)?,
+        ..TrainConfig::default()
+    };
+    println!("loading artifacts from {} …", dir.display());
+    let mut trainer = Trainer::new(&dir, config)?;
+    if let Some(load) = args.get("load") {
+        trainer.load_checkpoint(std::path::Path::new(load))?;
+        println!("loaded checkpoint {load}");
+    }
+    println!("batch {}, starting training", trainer.batch_size());
+    trainer.run()?;
+    if let Some(save) = args.get("save") {
+        trainer.save_checkpoint(std::path::Path::new(save))?;
+        println!("saved checkpoint {save}");
+    }
+    Ok(())
+}
+
+fn serve_cmd(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    let total = args.get_usize("requests", 512)?;
+    let clients = args.get_usize("clients", 4)?.max(1);
+    println!("starting inference server from {} …", dir.display());
+    let server = InferenceServer::start(
+        dir,
+        ServerConfig {
+            checkpoint: args.get("checkpoint").map(std::path::PathBuf::from),
+            ..ServerConfig::default()
+        },
+    )?;
+    println!(
+        "model: in_dim {}, classes {}, max batch {}",
+        server.in_dim, server.classes, server.batch
+    );
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let server = server.clone();
+            scope.spawn(move || {
+                let mut data = CifarLike::new(server.in_dim, server.classes, c as u64);
+                let per = total / clients;
+                for _ in 0..per {
+                    let b = data.test_batch(1);
+                    let logits = server.infer(b.x).expect("infer");
+                    assert_eq!(logits.len(), server.classes);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let (reqs, batches) = server.counters();
+    let stats = server.latency_stats().expect("stats");
+    println!("served {reqs} requests in {batches} batches over {wall:.2}s");
+    println!("  throughput: {:.1} req/s", reqs as f64 / wall);
+    println!(
+        "  latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}",
+        stats.p50 * 1e3,
+        stats.p95 * 1e3,
+        stats.p99 * 1e3,
+        stats.max * 1e3
+    );
+    Ok(())
+}

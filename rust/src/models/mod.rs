@@ -1,0 +1,113 @@
+//! Architecture descriptions for the paper's evaluation networks.
+//!
+//! Table 1 needs per-layer weight shapes for VGG19 (the Liu et al. CIFAR
+//! adaptation) and WideResNet-40-4 — memory is exact arithmetic over these,
+//! and runtime is the sum of per-layer SDMM estimates (im2col view: a conv
+//! `C_out × C_in × kh × kw` on a `H×W` map with batch `B` is an SDMM with
+//! `M = C_out`, `K = C_in·kh·kw`, `N = B·H·W`).
+
+pub mod vgg;
+pub mod wideresnet;
+
+/// One weight layer of a network.
+#[derive(Clone, Copy, Debug)]
+pub struct Layer {
+    pub name: &'static str,
+    /// Output channels (conv) or output features (fc).
+    pub c_out: usize,
+    /// Input channels × kernel area (conv) or input features (fc).
+    pub k: usize,
+    /// Spatial positions of the *output* map for one sample (1 for fc).
+    pub spatial: usize,
+    /// Whether the paper sparsifies this layer (first conv and final
+    /// classifier stay dense).
+    pub sparsified: bool,
+}
+
+impl Layer {
+    pub const fn conv(
+        name: &'static str,
+        c_in: usize,
+        c_out: usize,
+        ksize: usize,
+        out_hw: usize,
+        sparsified: bool,
+    ) -> Layer {
+        Layer {
+            name,
+            c_out,
+            k: c_in * ksize * ksize,
+            spatial: out_hw * out_hw,
+            sparsified,
+        }
+    }
+
+    pub const fn fc(name: &'static str, c_in: usize, c_out: usize, sparsified: bool) -> Layer {
+        Layer {
+            name,
+            c_out,
+            k: c_in,
+            spatial: 1,
+            sparsified,
+        }
+    }
+
+    /// Weight parameter count (biases/BN excluded, matching the paper's
+    /// sparsifiable-parameter accounting).
+    pub fn params(&self) -> usize {
+        self.c_out * self.k
+    }
+
+    /// SDMM shape for batch `b` (im2col view).
+    pub fn sdmm_shape(&self, b: usize) -> crate::gpusim::SdmmShape {
+        crate::gpusim::SdmmShape {
+            m: self.c_out,
+            k: self.k,
+            n: b * self.spatial,
+        }
+    }
+
+    /// FLOPs of one forward pass at batch `b`, dense.
+    pub fn flops_dense(&self, b: usize) -> f64 {
+        2.0 * (self.c_out * self.k * self.spatial * b) as f64
+    }
+}
+
+/// A whole network as a layer list.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: &'static str,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(Layer::params).sum()
+    }
+
+    /// `(params, sparsified)` pairs for the memory calculator.
+    pub fn memory_layers(&self) -> Vec<(usize, bool)> {
+        self.layers.iter().map(|l| (l.params(), l.sparsified)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_layer_arithmetic() {
+        let l = Layer::conv("c", 64, 128, 3, 16, true);
+        assert_eq!(l.params(), 128 * 64 * 9);
+        let s = l.sdmm_shape(4);
+        assert_eq!((s.m, s.k, s.n), (128, 576, 4 * 256));
+        assert_eq!(l.flops_dense(1), 2.0 * (128 * 576 * 256) as f64);
+    }
+
+    #[test]
+    fn fc_layer_arithmetic() {
+        let l = Layer::fc("fc", 512, 10, false);
+        assert_eq!(l.params(), 5120);
+        assert_eq!(l.sdmm_shape(8).n, 8);
+    }
+}

@@ -1,0 +1,105 @@
+//! WideResNet-40-4 (Zagoruyko & Komodakis [37]) for CIFAR: depth 40 ⇒
+//! n = 6 basic blocks per group, widen factor 4 ⇒ widths (64, 128, 256).
+//! First conv and classifier stay dense; every other conv (including the
+//! 1×1 projection shortcuts) is sparsified, as in the paper's §6 setup.
+
+use crate::models::{Layer, Network};
+
+/// Build WRN-40-4 with `num_classes` outputs.
+pub fn wrn40_4(num_classes: usize) -> Network {
+    let n = 6; // (40 - 4) / (6*2) blocks per group... depth = 6n+4
+    let widths = [64usize, 128, 256];
+    let spatial = [32usize, 16, 8];
+    let mut layers = Vec::new();
+    layers.push(Layer::conv("conv0", 3, 16, 3, 32, false));
+    let mut c_in = 16;
+    // Leaked names keep Layer's &'static str simple; the set of names is
+    // small and built once per process.
+    let name = |s: String| -> &'static str { Box::leak(s.into_boxed_str()) };
+    for (g, (&w, &hw)) in widths.iter().zip(spatial.iter()).enumerate() {
+        for b in 0..n {
+            let cin_blk = if b == 0 { c_in } else { w };
+            layers.push(Layer::conv(
+                name(format!("g{}b{}c1", g + 1, b)),
+                cin_blk,
+                w,
+                3,
+                hw,
+                true,
+            ));
+            layers.push(Layer::conv(
+                name(format!("g{}b{}c2", g + 1, b)),
+                w,
+                w,
+                3,
+                hw,
+                true,
+            ));
+            if b == 0 && cin_blk != w {
+                layers.push(Layer::conv(
+                    name(format!("g{}short", g + 1)),
+                    cin_blk,
+                    w,
+                    1,
+                    hw,
+                    true,
+                ));
+            }
+        }
+        c_in = w;
+    }
+    layers.push(Layer::fc(
+        if num_classes == 100 { "fc100" } else { "fc10" },
+        256,
+        num_classes,
+        false,
+    ));
+    Network {
+        name: "WideResnet-40-4",
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::memory::{network_bytes, Pattern};
+    use crate::util::fmt_mb;
+
+    #[test]
+    fn parameter_count_near_paper() {
+        // Paper Table 1: dense WRN-40-4 = 34.10 MB (≈ 8.94 M params).
+        let net = wrn40_4(10);
+        let bytes = network_bytes(&net.memory_layers(), 0.0, Pattern::Dense);
+        let mb: f64 = fmt_mb(bytes).parse().unwrap();
+        assert!((mb - 34.10).abs() / 34.10 < 0.02, "WRN-40-4 dense {mb} MB");
+    }
+
+    #[test]
+    fn structure_counts() {
+        let net = wrn40_4(10);
+        // conv0 + 3 groups * (6 blocks * 2 convs) + 3 shortcuts + fc = 41.
+        assert_eq!(net.layers.len(), 1 + 36 + 3 + 1);
+        assert!(!net.layers[0].sparsified);
+        assert!(!net.layers.last().unwrap().sparsified);
+    }
+
+    #[test]
+    fn table1_memory_column_shape() {
+        // Paper 87.5 %: unstructured 8.53, block 4.54, RBGP4 4.30 (MB).
+        let net = wrn40_4(10);
+        let layers = net.memory_layers();
+        for (pat, paper) in [
+            (Pattern::Unstructured, 8.53),
+            (Pattern::Block(4, 4), 4.54),
+            (Pattern::Rbgp4, 4.30),
+        ] {
+            let mb: f64 = fmt_mb(network_bytes(&layers, 0.875, pat)).parse().unwrap();
+            assert!(
+                (mb - paper).abs() / paper < 0.07,
+                "{}: model {mb} MB vs paper {paper} MB",
+                pat.name()
+            );
+        }
+    }
+}

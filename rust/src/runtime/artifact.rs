@@ -1,0 +1,167 @@
+//! Artifact metadata: the positional input/output contract emitted by
+//! `python/compile/aot.py` as `<name>.json` beside each `<name>.hlo.txt`.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<TensorSig> {
+        let shape = j
+            .req_arr("shape")?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(TensorSig {
+            name: j.req_str("name")?.to_string(),
+            shape,
+            dtype: j.req_str("dtype")?.to_string(),
+        })
+    }
+}
+
+/// Parsed `<name>.json` metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub kind: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    /// Canonical parameter name order (train/forward artifacts).
+    pub param_order: Vec<String>,
+    /// Raw JSON for anything consumers want to dig out (masks, configs…).
+    pub raw: Json,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> anyhow::Result<ArtifactMeta> {
+        let raw = Json::parse(text)?;
+        let sigs = |key: &str| -> anyhow::Result<Vec<TensorSig>> {
+            raw.req_arr(key)?.iter().map(TensorSig::from_json).collect()
+        };
+        let param_order = raw
+            .get("param_order")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|x| x.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(ArtifactMeta {
+            kind: raw.req_str("kind")?.to_string(),
+            inputs: sigs("inputs")?,
+            outputs: sigs("outputs")?,
+            param_order,
+            raw,
+        })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        ArtifactMeta::parse(&text)
+    }
+
+    pub fn input_index(&self, name: &str) -> anyhow::Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no input '{name}' in {} artifact", self.kind))
+    }
+
+    pub fn output_index(&self, name: &str) -> anyhow::Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no output '{name}' in {} artifact", self.kind))
+    }
+
+    /// Batch size declared by the exporter (if present).
+    pub fn batch(&self) -> Option<usize> {
+        self.raw.get("batch").and_then(Json::as_usize)
+    }
+}
+
+/// Paths for one artifact pair in a directory.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub meta: ArtifactMeta,
+}
+
+impl Artifact {
+    /// Load `<dir>/<name>.hlo.txt` + `<dir>/<name>.json`.
+    pub fn load(dir: &Path, name: &str) -> anyhow::Result<Artifact> {
+        let hlo_path = dir.join(format!("{name}.hlo.txt"));
+        anyhow::ensure!(
+            hlo_path.exists(),
+            "missing artifact {} — run `make artifacts`",
+            hlo_path.display()
+        );
+        let meta = ArtifactMeta::load(&dir.join(format!("{name}.json")))?;
+        Ok(Artifact {
+            name: name.to_string(),
+            hlo_path,
+            meta,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META: &str = r#"{
+        "kind": "forward",
+        "batch": 8,
+        "param_order": ["bc", "w0", "wc"],
+        "inputs": [
+            {"name": "w0", "shape": [128, 32], "dtype": "float32"},
+            {"name": "x", "shape": [8, 128], "dtype": "float32"}
+        ],
+        "outputs": [
+            {"name": "logits", "shape": [8, 4], "dtype": "float32"}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_meta() {
+        let m = ArtifactMeta::parse(META).unwrap();
+        assert_eq!(m.kind, "forward");
+        assert_eq!(m.batch(), Some(8));
+        assert_eq!(m.param_order, vec!["bc", "w0", "wc"]);
+        assert_eq!(m.inputs.len(), 2);
+        assert_eq!(m.inputs[0].elements(), 128 * 32);
+        assert_eq!(m.input_index("x").unwrap(), 1);
+        assert_eq!(m.output_index("logits").unwrap(), 0);
+        assert!(m.input_index("nope").is_err());
+    }
+
+    #[test]
+    fn scalar_sig_has_one_element() {
+        let s = TensorSig {
+            name: "lr".into(),
+            shape: vec![],
+            dtype: "float32".into(),
+        };
+        assert_eq!(s.elements(), 1);
+    }
+
+    #[test]
+    fn missing_artifact_errors_helpfully() {
+        let err = Artifact::load(Path::new("/nonexistent"), "forward").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

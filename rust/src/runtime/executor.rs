@@ -1,0 +1,197 @@
+//! Executor: compile an HLO-text artifact on the PJRT CPU client and run it
+//! with `Vec<f32>` host tensors, handling Literal packing/unpacking and the
+//! 1-tuple convention (`return_tuple=True` on the Python side).
+
+use crate::runtime::artifact::Artifact;
+use std::path::Path;
+
+/// A compiled artifact bound to a PJRT client.
+pub struct Executor {
+    pub artifact: Artifact,
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Host-side tensor: flat f32 data + shape. The only dtype our artifacts
+/// use at the boundary (masks/adjacency are baked into the HLO).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl HostTensor {
+    pub fn new(data: Vec<f32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>().max(1),
+            "data/shape mismatch"
+        );
+        HostTensor {
+            data,
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn scalar(v: f32) -> HostTensor {
+        HostTensor {
+            data: vec![v],
+            shape: vec![],
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        HostTensor {
+            data: vec![0.0; shape.iter().product::<usize>().max(1)],
+            shape: shape.to_vec(),
+        }
+    }
+
+    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        if self.shape.is_empty() {
+            return Ok(xla::Literal::scalar(self.data[0]));
+        }
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+impl Executor {
+    /// Compile `artifacts_dir/<name>.hlo.txt` on a fresh CPU client.
+    pub fn compile(artifacts_dir: &Path, name: &str) -> anyhow::Result<Executor> {
+        let artifact = Artifact::load(artifacts_dir, name)?;
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            artifact
+                .hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Executor {
+            artifact,
+            client,
+            exe,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute with positional inputs; returns outputs in artifact order.
+    ///
+    /// Validates input count and shapes against the artifact signature so a
+    /// stale artifact fails loudly instead of producing garbage.
+    pub fn run(&self, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        let sig = &self.artifact.meta.inputs;
+        anyhow::ensure!(
+            inputs.len() == sig.len(),
+            "{}: expected {} inputs, got {}",
+            self.artifact.name,
+            sig.len(),
+            inputs.len()
+        );
+        for (i, (t, s)) in inputs.iter().zip(sig).enumerate() {
+            anyhow::ensure!(
+                t.shape == s.shape,
+                "{}: input {i} ({}) shape {:?} != declared {:?}",
+                self.artifact.name,
+                s.name,
+                t.shape,
+                s.shape
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<anyhow::Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let outs = &self.artifact.meta.outputs;
+        anyhow::ensure!(
+            parts.len() == outs.len(),
+            "{}: executable returned {} outputs, metadata declares {}",
+            self.artifact.name,
+            parts.len(),
+            outs.len()
+        );
+        parts
+            .into_iter()
+            .zip(outs)
+            .map(|(lit, sig)| {
+                let data = lit.to_vec::<f32>()?;
+                anyhow::ensure!(
+                    data.len() == sig.elements(),
+                    "output {} length {} != {}",
+                    sig.name,
+                    data.len(),
+                    sig.elements()
+                );
+                Ok(HostTensor {
+                    data,
+                    shape: sig.shape.clone(),
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        let t = HostTensor::new(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.shape, vec![2, 2]);
+        let s = HostTensor::scalar(7.0);
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert_eq!(HostTensor::zeros(&[3]).data, vec![0.0; 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "data/shape mismatch")]
+    fn host_tensor_rejects_mismatch() {
+        HostTensor::new(vec![1.0], &[2, 2]);
+    }
+
+    /// End-to-end through PJRT using the `smoke` artifact — requires
+    /// `make artifacts` to have run (skipped otherwise).
+    #[test]
+    fn smoke_artifact_roundtrip() {
+        let dir = artifacts_dir();
+        if !dir.join("smoke.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let exe = Executor::compile(&dir, "smoke").unwrap();
+        let a = HostTensor::new(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = HostTensor::new(vec![1.0, 1.0, 1.0, 1.0], &[2, 2]);
+        let out = exe.run(&[a, b]).unwrap();
+        assert_eq!(out.len(), 1);
+        // matmul([[1,2],[3,4]], ones) + 2 = [[5,5],[9,9]]
+        assert_eq!(out[0].data, vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn run_rejects_wrong_arity_and_shape() {
+        let dir = artifacts_dir();
+        if !dir.join("smoke.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let exe = Executor::compile(&dir, "smoke").unwrap();
+        let a = HostTensor::new(vec![0.0; 4], &[2, 2]);
+        assert!(exe.run(&[a.clone()]).is_err());
+        let bad = HostTensor::new(vec![0.0; 2], &[2, 1]);
+        assert!(exe.run(&[a, bad]).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! PJRT client. After `make artifacts` the Rust binary is self-contained —
+//! Python never runs on the request path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see DESIGN.md).
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{Artifact, ArtifactMeta, TensorSig};
+pub use executor::Executor;

@@ -1,0 +1,144 @@
+//! CSR (compressed sparse row) format — the *unstructured* baseline.
+//!
+//! This is the stand-in for cuSparse's CSR: the format the paper benchmarks
+//! "Unstructured" rows of Table 1 against. Masks for unstructured baselines
+//! are sampled with row uniformity (equal non-zeros per row, matching how
+//! the paper's predefined approach assigns equal sparsity per layer).
+
+use crate::util::rng::Rng;
+
+/// CSR matrix with f32 values and usize indices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointers, length rows + 1.
+    pub indptr: Vec<usize>,
+    /// Column indices, ascending within each row.
+    pub indices: Vec<usize>,
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from a dense row-major matrix, keeping exact non-zeros.
+    pub fn from_dense(dense: &[f32], rows: usize, cols: usize) -> CsrMatrix {
+        assert_eq!(dense.len(), rows * cols);
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = dense[r * cols + c];
+                if v != 0.0 {
+                    indices.push(c);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Random unstructured mask with row uniformity: each row gets exactly
+    /// `round((1-sp)*cols)` non-zeros at uniformly random distinct columns,
+    /// with standard-normal values scaled like the RBGP init.
+    pub fn random_row_uniform(rows: usize, cols: usize, sp: f64, rng: &mut Rng) -> CsrMatrix {
+        let nnz_row = (((1.0 - sp) * cols as f64).round() as usize).max(1);
+        let scale = (2.0 / nnz_row as f64).sqrt() as f32;
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::with_capacity(rows * nnz_row);
+        let mut values = Vec::with_capacity(rows * nnz_row);
+        indptr.push(0);
+        for _ in 0..rows {
+            let mut cols_r = rng.sample_indices(cols, nnz_row);
+            cols_r.sort_unstable();
+            for c in cols_r {
+                indices.push(c);
+                values.push(rng.normal_f32() * scale);
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut d = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                d[r * self.cols + self.indices[k]] = self.values[k];
+            }
+        }
+        d
+    }
+
+    /// Storage bytes: values f32 + indices i32 + indptr i32 — the layout
+    /// cuSparse uses (and what the paper's Table 1 "Mem" column counts for
+    /// unstructured: 2·|E| with 4-byte value + 4-byte index per edge;
+    /// indptr is negligible and excluded to match the paper's accounting).
+    pub fn storage_bytes_paper(&self) -> u64 {
+        (self.nnz() * 8) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_dense_roundtrip() {
+        #[rustfmt::skip]
+        let d = vec![
+            1., 0., 2.,
+            0., 0., 0.,
+            0., 3., 0.,
+        ];
+        let m = CsrMatrix::from_dense(&d, 3, 3);
+        assert_eq!(m.indptr, vec![0, 2, 2, 3]);
+        assert_eq!(m.indices, vec![0, 2, 1]);
+        assert_eq!(m.values, vec![1., 2., 3.]);
+        assert_eq!(m.to_dense(), d);
+        assert_eq!(m.nnz(), 3);
+    }
+
+    #[test]
+    fn random_row_uniform_properties() {
+        let mut rng = Rng::new(5);
+        let m = CsrMatrix::random_row_uniform(16, 32, 0.75, &mut rng);
+        assert_eq!(m.nnz(), 16 * 8);
+        assert!((m.sparsity() - 0.75).abs() < 1e-12);
+        for r in 0..16 {
+            let row = &m.indices[m.indptr[r]..m.indptr[r + 1]];
+            assert_eq!(row.len(), 8);
+            assert!(row.windows(2).all(|w| w[0] < w[1]));
+            assert!(row.iter().all(|&c| c < 32));
+        }
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let mut rng = Rng::new(6);
+        let m = CsrMatrix::random_row_uniform(8, 8, 0.5, &mut rng);
+        assert_eq!(m.storage_bytes_paper(), (8 * 4 * 8) as u64);
+    }
+}

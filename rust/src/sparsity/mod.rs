@@ -1,0 +1,14 @@
+//! Sparse-matrix substrate: the §3 pattern taxonomy with validators, the
+//! RBGP4 contract format (compact storage + succinct index), the CSR/BSR
+//! baseline formats, and the Table-1 memory accounting.
+
+pub mod bsr;
+pub mod csr;
+pub mod memory;
+pub mod pattern;
+pub mod rbgp4;
+
+pub use bsr::BsrMatrix;
+pub use csr::CsrMatrix;
+pub use memory::Pattern;
+pub use rbgp4::{GraphSpec, Rbgp4Config, Rbgp4Mask, Rbgp4Matrix};

@@ -1,0 +1,293 @@
+//! Block sparsity pattern definitions and validators (§3 of the paper).
+//!
+//! These operate on dense 0/1 masks (row-major `f32`, nonzero = connected).
+//! They are the *specification* side of the library: property tests assert
+//! that every mask produced by the RBGP constructions satisfies the exact
+//! pattern class the paper claims (CBS/CUBS from one product, RCUBS from
+//! chains).
+
+/// A block size `(bh, bw)`.
+pub type Block = (usize, usize);
+
+fn block_grid(rows: usize, cols: usize, (bh, bw): Block) -> anyhow::Result<(usize, usize)> {
+    anyhow::ensure!(bh > 0 && bw > 0, "zero block size");
+    anyhow::ensure!(
+        rows % bh == 0 && cols % bw == 0,
+        "{rows}x{cols} not divisible by block {bh}x{bw}"
+    );
+    Ok((rows / bh, cols / bw))
+}
+
+/// Is block `(bi, bj)` entirely zero?
+fn block_is_zero(mask: &[f32], cols: usize, (bh, bw): Block, bi: usize, bj: usize) -> bool {
+    for i in 0..bh {
+        let row = (bi * bh + i) * cols + bj * bw;
+        if mask[row..row + bw].iter().any(|&x| x != 0.0) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Extract block `(bi, bj)` as a 0/1 pattern vector.
+fn block_pattern(mask: &[f32], cols: usize, (bh, bw): Block, bi: usize, bj: usize) -> Vec<bool> {
+    let mut p = Vec::with_capacity(bh * bw);
+    for i in 0..bh {
+        let row = (bi * bh + i) * cols + bj * bw;
+        p.extend(mask[row..row + bw].iter().map(|&x| x != 0.0));
+    }
+    p
+}
+
+/// **BS**: every matrix is trivially block sparse for a block size that
+/// divides it; this just checks divisibility (the paper's definition imposes
+/// no constraint beyond the block grid existing).
+pub fn is_bs(rows: usize, cols: usize, block: Block) -> bool {
+    block_grid(rows, cols, block).is_ok()
+}
+
+/// **UBS**: all row-blocks have the same number of non-zero blocks, and all
+/// column-blocks have the same number of non-zero blocks.
+pub fn is_ubs(mask: &[f32], rows: usize, cols: usize, block: Block) -> anyhow::Result<bool> {
+    let (gm, gn) = block_grid(rows, cols, block)?;
+    let mut row_counts = vec![0usize; gm];
+    let mut col_counts = vec![0usize; gn];
+    for bi in 0..gm {
+        for bj in 0..gn {
+            if !block_is_zero(mask, cols, block, bi, bj) {
+                row_counts[bi] += 1;
+                col_counts[bj] += 1;
+            }
+        }
+    }
+    Ok(row_counts.windows(2).all(|w| w[0] == w[1]) && col_counts.windows(2).all(|w| w[0] == w[1]))
+}
+
+/// **CBS**: all non-zero blocks share one identical non-zero pattern.
+pub fn is_cbs(mask: &[f32], rows: usize, cols: usize, block: Block) -> anyhow::Result<bool> {
+    let (gm, gn) = block_grid(rows, cols, block)?;
+    let mut clone: Option<Vec<bool>> = None;
+    for bi in 0..gm {
+        for bj in 0..gn {
+            if block_is_zero(mask, cols, block, bi, bj) {
+                continue;
+            }
+            let p = block_pattern(mask, cols, block, bi, bj);
+            match &clone {
+                None => clone = Some(p),
+                Some(c) => {
+                    if *c != p {
+                        return Ok(false);
+                    }
+                }
+            }
+        }
+    }
+    Ok(true)
+}
+
+/// **CUBS** = UBS ∧ CBS at the same block size.
+pub fn is_cubs(mask: &[f32], rows: usize, cols: usize, block: Block) -> anyhow::Result<bool> {
+    Ok(is_ubs(mask, rows, cols, block)? && is_cbs(mask, rows, cols, block)?)
+}
+
+/// **RCUBS** with blocking levels `B_1 > B_2 > … > B_K`: the mask is CUBS at
+/// `B_1`, and the (shared) non-zero block pattern at level `i` is itself CUBS
+/// at `B_{i+1}`, recursively. Because all non-zero blocks are clones, it
+/// suffices to recurse into *one* representative non-zero block per level.
+pub fn is_rcubs(
+    mask: &[f32],
+    rows: usize,
+    cols: usize,
+    levels: &[Block],
+) -> anyhow::Result<bool> {
+    anyhow::ensure!(!levels.is_empty(), "RCUBS needs at least one level");
+    // Validate level nesting: each level must divide the previous.
+    let mut prev = (rows, cols);
+    for &(bh, bw) in levels {
+        anyhow::ensure!(
+            prev.0 % bh == 0 && prev.1 % bw == 0,
+            "level ({bh},{bw}) does not divide enclosing ({},{})",
+            prev.0,
+            prev.1
+        );
+        prev = (bh, bw);
+    }
+
+    let block = levels[0];
+    if !is_cubs(mask, rows, cols, block)? {
+        return Ok(false);
+    }
+    if levels.len() == 1 {
+        return Ok(true);
+    }
+    // Find one non-zero block and recurse into it.
+    let (gm, gn) = block_grid(rows, cols, block)?;
+    for bi in 0..gm {
+        for bj in 0..gn {
+            if block_is_zero(mask, cols, block, bi, bj) {
+                continue;
+            }
+            let (bh, bw) = block;
+            let mut sub = vec![0.0f32; bh * bw];
+            for i in 0..bh {
+                let row = (bi * bh + i) * cols + bj * bw;
+                sub[i * bw..(i + 1) * bw].copy_from_slice(&mask[row..row + bw]);
+            }
+            return is_rcubs(&sub, bh, bw, &levels[1..]);
+        }
+    }
+    Ok(true) // all-zero mask is vacuously RCUBS
+}
+
+/// **Row repetition** (§5, "Row repetition"): rows split into `groups` groups
+/// of equal size where all rows in a group have non-zeros at identical
+/// locations. The RBGP4 grouping interleaves: row `u`'s group is determined
+/// by its `G_i`-coordinate, i.e. group id = `(u / m_b) % m_i` when rows
+/// factor as `(u_r, u_i, u_b)`. This checks the generic property: there
+/// exists a partition into `groups` classes by identical pattern, each of
+/// size `rows/groups`.
+pub fn row_repetition_groups(mask: &[f32], rows: usize, cols: usize) -> Vec<usize> {
+    use std::collections::HashMap;
+    let mut ids: HashMap<&[u8], usize> = HashMap::new();
+    let mut group_of = Vec::with_capacity(rows);
+    // Compare rows bytewise on the 0/1 pattern.
+    let patterns: Vec<Vec<u8>> = (0..rows)
+        .map(|r| {
+            mask[r * cols..(r + 1) * cols]
+                .iter()
+                .map(|&x| (x != 0.0) as u8)
+                .collect()
+        })
+        .collect();
+    for p in &patterns {
+        let next = ids.len();
+        let id = *ids.entry(p.as_slice()).or_insert(next);
+        group_of.push(id);
+    }
+    group_of
+}
+
+/// Number of distinct row patterns.
+pub fn num_row_groups(mask: &[f32], rows: usize, cols: usize) -> usize {
+    let g = row_repetition_groups(mask, rows, cols);
+    g.iter().copied().max().map(|m| m + 1).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::bipartite::BipartiteGraph;
+    use crate::graph::product::product_many;
+    use crate::util::rng::Rng;
+
+    /// 4x4 mask with 2x2 blocks: one zero block, others dense → UBS fails
+    /// (row 0 has 2 blocks, row 1 has 1), CBS holds (all non-zero blocks dense).
+    #[test]
+    fn ubs_cbs_disagree() {
+        #[rustfmt::skip]
+        let mask = vec![
+            1., 1., 1., 1.,
+            1., 1., 1., 1.,
+            1., 1., 0., 0.,
+            1., 1., 0., 0.,
+        ];
+        assert!(!is_ubs(&mask, 4, 4, (2, 2)).unwrap());
+        assert!(is_cbs(&mask, 4, 4, (2, 2)).unwrap());
+    }
+
+    #[test]
+    fn cbs_detects_pattern_mismatch() {
+        #[rustfmt::skip]
+        let mask = vec![
+            1., 0., 0., 1.,
+            0., 1., 1., 0.,
+            0., 0., 0., 0.,
+            0., 0., 0., 0.,
+        ];
+        // Two non-zero 2x2 blocks with different patterns.
+        assert!(!is_cbs(&mask, 4, 4, (2, 2)).unwrap());
+    }
+
+    #[test]
+    fn diagonal_blocks_are_cubs() {
+        #[rustfmt::skip]
+        let mask = vec![
+            1., 1., 0., 0.,
+            1., 1., 0., 0.,
+            0., 0., 1., 1.,
+            0., 0., 1., 1.,
+        ];
+        assert!(is_cubs(&mask, 4, 4, (2, 2)).unwrap());
+    }
+
+    #[test]
+    fn product_of_graphs_is_cbs_figure2() {
+        // §4 "Structured sparsity": BA_p = BA_1 ⊗ BA_2 is CBS with block
+        // size (|G_2.U|, |G_2.V|); CUBS when G_1 is biregular.
+        let mut rng = Rng::new(21);
+        let g1 = BipartiteGraph::random_biregular(4, 4, 2, &mut rng).unwrap();
+        let g2 = BipartiteGraph::random_biregular(4, 2, 1, &mut rng).unwrap();
+        let p = crate::graph::product::product(&g1, &g2);
+        let ba = p.biadjacency();
+        assert!(is_cbs(&ba, p.nu, p.nv, (g2.nu, g2.nv)).unwrap());
+        assert!(is_cubs(&ba, p.nu, p.nv, (g2.nu, g2.nv)).unwrap());
+    }
+
+    #[test]
+    fn figure3_rcubs_three_levels() {
+        // Figure 3: four base graphs, blocking levels (16,16), (8,8), (2,2).
+        // Base sizes: G1 (2x2, d=2? no) — paper: 512 edges = 8*2*8*4 with
+        // base edge counts 8+2+8+4. Use G1: 4x4 d_l=2 (8 edges),
+        // G2: 2x2 d=1 (2 edges), G3: 4x4 d=2 (8 edges), G4: 2x2 complete (4).
+        let mut rng = Rng::new(33);
+        let g1 = BipartiteGraph::random_biregular(4, 4, 2, &mut rng).unwrap();
+        let g2 = BipartiteGraph::identity(2);
+        let g3 = BipartiteGraph::random_biregular(4, 4, 2, &mut rng).unwrap();
+        let g4 = BipartiteGraph::complete(2, 2);
+        let p = product_many(&[&g1, &g2, &g3, &g4]).unwrap();
+        assert_eq!((p.nu, p.nv), (64, 64));
+        assert_eq!(p.num_edges(), 8 * 2 * 8 * 4); // 512 as in the paper
+        let ba = p.biadjacency();
+        // Levels B_j = (prod_{i>j} |G_i.U|, prod |G_i.V|): (16,16), (8,8), (2,2).
+        assert!(is_rcubs(&ba, 64, 64, &[(16, 16), (8, 8), (2, 2)]).unwrap());
+        // And a wrong level chain must fail on a sparse pattern: level (4,4)
+        // inside the (8,8) block of this chain is not CUBS in general; verify
+        // the validator can say "no" for a broken mask instead:
+        let mut broken = ba.clone();
+        // Find a nonzero and zero it — breaks clone uniformity at last level.
+        let idx = broken.iter().position(|&x| x != 0.0).unwrap();
+        broken[idx] = 0.0;
+        assert!(!is_rcubs(&broken, 64, 64, &[(16, 16), (8, 8), (2, 2)]).unwrap());
+    }
+
+    #[test]
+    fn rcubs_rejects_bad_level_nesting() {
+        let mask = vec![1.0; 16];
+        assert!(is_rcubs(&mask, 4, 4, &[(2, 2), (3, 3)]).is_err());
+        assert!(is_rcubs(&mask, 4, 4, &[]).is_err());
+    }
+
+    #[test]
+    fn row_groups_counts_distinct_patterns() {
+        #[rustfmt::skip]
+        let mask = vec![
+            1., 0.,
+            1., 0.,
+            0., 1.,
+            1., 0.,
+        ];
+        assert_eq!(num_row_groups(&mask, 4, 2), 2);
+        let g = row_repetition_groups(&mask, 4, 2);
+        assert_eq!(g, vec![0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn complete_mask_everything_holds() {
+        let mask = vec![1.0f32; 8 * 8];
+        assert!(is_ubs(&mask, 8, 8, (2, 2)).unwrap());
+        assert!(is_cbs(&mask, 8, 8, (2, 2)).unwrap());
+        assert!(is_rcubs(&mask, 8, 8, &[(4, 4), (2, 2)]).unwrap());
+        assert_eq!(num_row_groups(&mask, 8, 8), 1);
+    }
+}

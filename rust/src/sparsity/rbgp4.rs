@@ -1,0 +1,549 @@
+//! RBGP4 sparsity pattern (§5): `G = G_o ⊗_b G_r ⊗_b G_i ⊗_b G_b` with
+//! `G_o`, `G_i` sparse Ramanujan graphs and `G_r`, `G_b` complete.
+//!
+//! This module defines the *single* contract format every consumer uses:
+//! the Rust kernels, the GPU cost model, the Pallas kernel and the jnp
+//! oracle all read the same `(data, adj_o, adj_i)` compact representation:
+//!
+//! * `data` — `(rows, row_nnz)` row-major dense array holding, for each row,
+//!   its non-zero weights in ascending column order (possible because the
+//!   product graph is biregular — every row has exactly `row_nnz` non-zeros).
+//! * `adj_o` — `(m_o, d_o)` tile-level adjacency of `G_o`.
+//! * `adj_i` — `(m_i, d_i)` intra-tile adjacency of `G_i`.
+//!
+//! Index memory is therefore `Σ|E(G_i)|` (succinct representation of §4)
+//! instead of `|E(G)|`.
+
+use crate::graph::bipartite::BipartiteGraph;
+use crate::graph::product::product_many;
+use crate::graph::ramanujan;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Size + sparsity of one sparse base graph.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GraphSpec {
+    pub nu: usize,
+    pub nv: usize,
+    /// Dyadic sparsity in [0, 1): 0, 1/2, 3/4, 7/8, …
+    pub sp: f64,
+}
+
+impl GraphSpec {
+    pub fn new(nu: usize, nv: usize, sp: f64) -> GraphSpec {
+        GraphSpec { nu, nv, sp }
+    }
+
+    /// Left degree of the biregular graph this spec generates.
+    pub fn dl(&self) -> usize {
+        ((1.0 - self.sp) * self.nv as f64).round() as usize
+    }
+}
+
+/// Full RBGP4 configuration: sizes of the four base graphs and sparsities of
+/// the two sparse ones. `G_r` and `G_b` are complete by definition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Rbgp4Config {
+    pub go: GraphSpec,
+    /// (|G_r.U|, |G_r.V|) — complete.
+    pub gr: (usize, usize),
+    pub gi: GraphSpec,
+    /// (|G_b.U|, |G_b.V|) — complete.
+    pub gb: (usize, usize),
+}
+
+impl Rbgp4Config {
+    /// The paper's running example (§5 "RBGP4 runtime characteristics"):
+    /// sizes (32,128),(4,1),(32,32),(1,1) with the given (sp_o, sp_i).
+    pub fn paper_default(sp_o: f64, sp_i: f64) -> Rbgp4Config {
+        Rbgp4Config {
+            go: GraphSpec::new(32, 128, sp_o),
+            gr: (4, 1),
+            gi: GraphSpec::new(32, 32, sp_i),
+            gb: (1, 1),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.go.nu * self.gr.0 * self.gi.nu * self.gb.0
+    }
+
+    pub fn cols(&self) -> usize {
+        self.go.nv * self.gr.1 * self.gi.nv * self.gb.1
+    }
+
+    /// Tile height `TM = |G_t.U|` where `G_t = G_r ⊗ G_i ⊗ G_b`.
+    pub fn tile_m(&self) -> usize {
+        self.gr.0 * self.gi.nu * self.gb.0
+    }
+
+    /// Tile width `TK = |G_t.V|`.
+    pub fn tile_k(&self) -> usize {
+        self.gr.1 * self.gi.nv * self.gb.1
+    }
+
+    /// Tile-level left degree `d_o` (non-zero tiles per row of tiles).
+    pub fn d_o(&self) -> usize {
+        self.go.dl()
+    }
+
+    /// Intra-tile left degree of `G_i`.
+    pub fn d_i(&self) -> usize {
+        self.gi.dl()
+    }
+
+    /// Non-zeros per row *within* one non-zero tile: `n_r · d_i · n_b`.
+    pub fn tile_row_nnz(&self) -> usize {
+        self.gr.1 * self.d_i() * self.gb.1
+    }
+
+    /// Non-zeros per row of the whole matrix.
+    pub fn row_nnz(&self) -> usize {
+        self.d_o() * self.tile_row_nnz()
+    }
+
+    /// Overall fractional sparsity `1 − (1−sp_o)(1−sp_i)`.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - (1.0 - self.go.sp) * (1.0 - self.gi.sp)
+    }
+
+    /// Row-repetition amount `|G_r.U| · |G_b.U|` (§5 role of G_r, G_b).
+    pub fn row_repetition(&self) -> usize {
+        self.gr.0 * self.gb.0
+    }
+
+    /// RCUBS blocking levels `B_j = (Π_{i>j}|G_i.U|, Π_{i>j}|G_i.V|)`.
+    pub fn blocking_levels(&self) -> Vec<(usize, usize)> {
+        let us = [self.go.nu, self.gr.0, self.gi.nu, self.gb.0];
+        let vs = [self.go.nv, self.gr.1, self.gi.nv, self.gb.1];
+        (1..4)
+            .map(|j| (us[j..].iter().product(), vs[j..].iter().product()))
+            .collect()
+    }
+
+    /// Validate structural requirements before sampling.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, s) in [("G_o", self.go), ("G_i", self.gi)] {
+            anyhow::ensure!(s.nu > 0 && s.nv > 0, "{name} has zero side");
+            anyhow::ensure!((0.0..1.0).contains(&s.sp), "{name} sparsity {} out of range", s.sp);
+            crate::graph::lift::lifts_for_sparsity(s.sp)
+                .map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
+            anyhow::ensure!(s.dl() >= 1, "{name} degree would be zero at sp={}", s.sp);
+        }
+        anyhow::ensure!(self.gr.0 > 0 && self.gr.1 > 0, "G_r has zero side");
+        anyhow::ensure!(self.gb.0 > 0 && self.gb.1 > 0, "G_b has zero side");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("go_nu", self.go.nu)
+            .set("go_nv", self.go.nv)
+            .set("go_sp", self.go.sp)
+            .set("gr_nu", self.gr.0)
+            .set("gr_nv", self.gr.1)
+            .set("gi_nu", self.gi.nu)
+            .set("gi_nv", self.gi.nv)
+            .set("gi_sp", self.gi.sp)
+            .set("gb_nu", self.gb.0)
+            .set("gb_nv", self.gb.1);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Rbgp4Config> {
+        let f = |k: &str| -> anyhow::Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing {k}"))
+        };
+        Ok(Rbgp4Config {
+            go: GraphSpec::new(j.req_usize("go_nu")?, j.req_usize("go_nv")?, f("go_sp")?),
+            gr: (j.req_usize("gr_nu")?, j.req_usize("gr_nv")?),
+            gi: GraphSpec::new(j.req_usize("gi_nu")?, j.req_usize("gi_nv")?, f("gi_sp")?),
+            gb: (j.req_usize("gb_nu")?, j.req_usize("gb_nv")?),
+        })
+    }
+}
+
+/// A sampled RBGP4 mask: the two sparse base graphs (the complete ones are
+/// implicit). This is the connectivity object; weights live in
+/// [`Rbgp4Matrix`].
+#[derive(Clone, Debug)]
+pub struct Rbgp4Mask {
+    pub config: Rbgp4Config,
+    pub go: BipartiteGraph,
+    pub gi: BipartiteGraph,
+}
+
+impl Rbgp4Mask {
+    /// Sample a mask: both sparse base graphs drawn as Ramanujan graphs via
+    /// 2-lift rejection sampling (falls back to best-λ₂ expander after
+    /// `attempts`, which only matters for extreme shapes).
+    pub fn sample(config: Rbgp4Config, rng: &mut Rng) -> anyhow::Result<Rbgp4Mask> {
+        config.validate()?;
+        let (go, _) = ramanujan::generate_best_effort(config.go.nu, config.go.nv, config.go.sp, rng, 64)?;
+        let (gi, _) = ramanujan::generate_best_effort(config.gi.nu, config.gi.nv, config.gi.sp, rng, 64)?;
+        Ok(Rbgp4Mask {
+            config,
+            go: go.graph,
+            gi: gi.graph,
+        })
+    }
+
+    /// Build from explicit base graphs (tests / deserialization).
+    pub fn from_graphs(
+        config: Rbgp4Config,
+        go: BipartiteGraph,
+        gi: BipartiteGraph,
+    ) -> anyhow::Result<Rbgp4Mask> {
+        anyhow::ensure!(go.nu == config.go.nu && go.nv == config.go.nv, "G_o shape mismatch");
+        anyhow::ensure!(gi.nu == config.gi.nu && gi.nv == config.gi.nv, "G_i shape mismatch");
+        anyhow::ensure!(
+            go.left_degree() == Some(config.d_o()),
+            "G_o degree {:?} != {}",
+            go.left_degree(),
+            config.d_o()
+        );
+        anyhow::ensure!(
+            gi.left_degree() == Some(config.d_i()),
+            "G_i degree {:?} != {}",
+            gi.left_degree(),
+            config.d_i()
+        );
+        Ok(Rbgp4Mask { config, go, gi })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.config.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.config.cols()
+    }
+
+    /// Decompose a row index into `(u_o, u_r, u_i, u_b)`.
+    #[inline]
+    pub fn row_coords(&self, u: usize) -> (usize, usize, usize, usize) {
+        let c = &self.config;
+        let ub = u % c.gb.0;
+        let u = u / c.gb.0;
+        let ui = u % c.gi.nu;
+        let u = u / c.gi.nu;
+        let ur = u % c.gr.0;
+        let uo = u / c.gr.0;
+        (uo, ur, ui, ub)
+    }
+
+    /// Compose a column index from `(v_o, v_r, v_i, v_b)`.
+    #[inline]
+    pub fn col_index(&self, vo: usize, vr: usize, vi: usize, vb: usize) -> usize {
+        let c = &self.config;
+        ((vo * c.gr.1 + vr) * c.gi.nv + vi) * c.gb.1 + vb
+    }
+
+    /// Sorted non-zero column indices of row `u` (ascending — see module doc).
+    pub fn row_nonzero_cols(&self, u: usize) -> Vec<usize> {
+        let c = &self.config;
+        let (uo, _ur, ui, _ub) = self.row_coords(u);
+        let mut cols = Vec::with_capacity(c.row_nnz());
+        for &vo in &self.go.adj[uo] {
+            for vr in 0..c.gr.1 {
+                for &vi in &self.gi.adj[ui] {
+                    for vb in 0..c.gb.1 {
+                        cols.push(self.col_index(vo, vr, vi, vb));
+                    }
+                }
+            }
+        }
+        cols
+    }
+
+    /// Dense 0/1 mask (row-major rows × cols).
+    pub fn dense(&self) -> Vec<f32> {
+        let (rows, cols) = (self.rows(), self.cols());
+        let mut m = vec![0.0f32; rows * cols];
+        for u in 0..rows {
+            for v in self.row_nonzero_cols(u) {
+                m[u * cols + v] = 1.0;
+            }
+        }
+        m
+    }
+
+    /// The full product graph `G_o ⊗ G_r ⊗ G_i ⊗ G_b` (for spectral checks;
+    /// expensive for big configs).
+    pub fn product_graph(&self) -> BipartiteGraph {
+        let gr = BipartiteGraph::complete(self.config.gr.0, self.config.gr.1);
+        let gb = BipartiteGraph::complete(self.config.gb.0, self.config.gb.1);
+        product_many(&[&self.go, &gr, &self.gi, &gb]).expect("non-empty")
+    }
+
+    /// Flattened `(m_o, d_o)` adjacency of `G_o` as u32 (artifact input).
+    pub fn adj_o_flat(&self) -> Vec<u32> {
+        self.go.adj.iter().flatten().map(|&v| v as u32).collect()
+    }
+
+    /// Flattened `(m_i, d_i)` adjacency of `G_i` as u32.
+    pub fn adj_i_flat(&self) -> Vec<u32> {
+        self.gi.adj.iter().flatten().map(|&v| v as u32).collect()
+    }
+
+    /// Succinct index memory in *elements* (`Σ|E(base)|`, §4 Memory
+    /// efficiency). Complete graphs contribute their edge count too, per the
+    /// paper's Figure-3 accounting (8+2+8+4).
+    pub fn succinct_index_elems(&self) -> usize {
+        self.go.num_edges()
+            + self.config.gr.0 * self.config.gr.1
+            + self.gi.num_edges()
+            + self.config.gb.0 * self.config.gb.1
+    }
+
+    /// Generic adjacency-list index memory in elements (`|E(G)|`).
+    pub fn generic_index_elems(&self) -> usize {
+        self.rows() * self.config.row_nnz()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("config", self.config.to_json())
+            .set("adj_o", self.adj_o_flat().iter().map(|&x| x as usize).collect::<Vec<_>>())
+            .set("adj_i", self.adj_i_flat().iter().map(|&x| x as usize).collect::<Vec<_>>());
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Rbgp4Mask> {
+        let config = Rbgp4Config::from_json(
+            j.get("config").ok_or_else(|| anyhow::anyhow!("missing config"))?,
+        )?;
+        let parse_adj = |key: &str, nu: usize, d: usize| -> anyhow::Result<Vec<Vec<usize>>> {
+            let flat = j.req_arr(key)?;
+            anyhow::ensure!(flat.len() == nu * d, "{key} length {} != {}x{}", flat.len(), nu, d);
+            Ok((0..nu)
+                .map(|u| {
+                    flat[u * d..(u + 1) * d]
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(usize::MAX))
+                        .collect()
+                })
+                .collect())
+        };
+        let go = BipartiteGraph {
+            nu: config.go.nu,
+            nv: config.go.nv,
+            adj: parse_adj("adj_o", config.go.nu, config.d_o())?,
+        };
+        let gi = BipartiteGraph {
+            nu: config.gi.nu,
+            nv: config.gi.nv,
+            adj: parse_adj("adj_i", config.gi.nu, config.d_i())?,
+        };
+        Rbgp4Mask::from_graphs(config, go, gi)
+    }
+}
+
+/// RBGP4 weight matrix in compact storage: `data[(u, k)]` is the weight of
+/// the `k`-th non-zero of row `u` (ascending column order).
+#[derive(Clone, Debug)]
+pub struct Rbgp4Matrix {
+    pub mask: Rbgp4Mask,
+    /// `(rows, row_nnz)` row-major.
+    pub data: Vec<f32>,
+}
+
+impl Rbgp4Matrix {
+    /// Random weights (He-style scale 1/√fan_in over *non-zero* fan-in, the
+    /// right init for predefined-sparsity training).
+    pub fn random(mask: Rbgp4Mask, rng: &mut Rng) -> Rbgp4Matrix {
+        let n = mask.rows() * mask.config.row_nnz();
+        let scale = (2.0 / mask.config.row_nnz() as f64).sqrt() as f32;
+        let data = rng.normal_vec_f32(n, scale);
+        Rbgp4Matrix { mask, data }
+    }
+
+    /// Gather compact storage from a dense matrix (entries off the mask are
+    /// ignored).
+    pub fn from_dense(mask: Rbgp4Mask, dense: &[f32]) -> anyhow::Result<Rbgp4Matrix> {
+        let (rows, cols) = (mask.rows(), mask.cols());
+        anyhow::ensure!(dense.len() == rows * cols, "dense shape mismatch");
+        let rn = mask.config.row_nnz();
+        let mut data = vec![0.0f32; rows * rn];
+        for u in 0..rows {
+            for (k, v) in mask.row_nonzero_cols(u).into_iter().enumerate() {
+                data[u * rn + k] = dense[u * cols + v];
+            }
+        }
+        Ok(Rbgp4Matrix { mask, data })
+    }
+
+    /// Scatter back to a dense rows × cols matrix.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let (rows, cols) = (self.mask.rows(), self.mask.cols());
+        let rn = self.mask.config.row_nnz();
+        let mut dense = vec![0.0f32; rows * cols];
+        for u in 0..rows {
+            for (k, v) in self.mask.row_nonzero_cols(u).into_iter().enumerate() {
+                dense[u * cols + v] = self.data[u * rn + k];
+            }
+        }
+        dense
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::pattern;
+
+    fn small_config() -> Rbgp4Config {
+        Rbgp4Config {
+            go: GraphSpec::new(4, 4, 0.5),
+            gr: (2, 1),
+            gi: GraphSpec::new(4, 4, 0.5),
+            gb: (2, 2),
+        }
+    }
+
+    #[test]
+    fn config_arithmetic() {
+        let c = small_config();
+        assert_eq!(c.rows(), 4 * 2 * 4 * 2);
+        assert_eq!(c.cols(), 4 * 1 * 4 * 2);
+        assert_eq!(c.tile_m(), 16);
+        assert_eq!(c.tile_k(), 8);
+        assert_eq!(c.d_o(), 2);
+        assert_eq!(c.d_i(), 2);
+        assert_eq!(c.tile_row_nnz(), 1 * 2 * 2);
+        assert_eq!(c.row_nnz(), 8);
+        assert!((c.sparsity() - 0.75).abs() < 1e-12);
+        assert_eq!(c.row_repetition(), 4);
+        assert_eq!(c.blocking_levels(), vec![(16, 8), (8, 8), (2, 2)]);
+    }
+
+    #[test]
+    fn paper_default_shape() {
+        let c = Rbgp4Config::paper_default(0.5, 0.5);
+        assert_eq!(c.rows(), 32 * 4 * 32);
+        assert_eq!(c.cols(), 128 * 32);
+        assert_eq!(c.tile_m(), 128);
+        assert_eq!(c.tile_k(), 32);
+        assert!((c.sparsity() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mask_sparsity_matches_config() {
+        let mut rng = Rng::new(77);
+        let mask = Rbgp4Mask::sample(small_config(), &mut rng).unwrap();
+        let dense = mask.dense();
+        let nnz = dense.iter().filter(|&&x| x != 0.0).count();
+        let total = mask.rows() * mask.cols();
+        assert_eq!(nnz, mask.rows() * mask.config.row_nnz());
+        assert!((1.0 - nnz as f64 / total as f64 - mask.config.sparsity()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mask_dense_matches_product_graph() {
+        let mut rng = Rng::new(78);
+        let mask = Rbgp4Mask::sample(small_config(), &mut rng).unwrap();
+        assert_eq!(mask.dense(), mask.product_graph().biadjacency());
+    }
+
+    #[test]
+    fn mask_is_rcubs_at_config_levels() {
+        let mut rng = Rng::new(79);
+        let mask = Rbgp4Mask::sample(small_config(), &mut rng).unwrap();
+        let dense = mask.dense();
+        let levels = mask.config.blocking_levels();
+        assert!(pattern::is_rcubs(&dense, mask.rows(), mask.cols(), &levels).unwrap());
+    }
+
+    #[test]
+    fn row_repetition_matches_config() {
+        let mut rng = Rng::new(80);
+        let mask = Rbgp4Mask::sample(small_config(), &mut rng).unwrap();
+        let dense = mask.dense();
+        let group_of = pattern::row_repetition_groups(&dense, mask.rows(), mask.cols());
+        let groups = group_of.iter().copied().max().unwrap() + 1;
+        // Rows with equal (adj_o[u_o], adj_i[u_i]) repeat; there are at most
+        // m_o·m_i distinct patterns (fewer if base vertices coincide), and
+        // every pattern class size is a multiple of m_r·m_b = row_repetition.
+        assert!(groups <= mask.rows() / mask.config.row_repetition());
+        let mut sizes = vec![0usize; groups];
+        for &g in &group_of {
+            sizes[g] += 1;
+        }
+        for s in sizes {
+            assert_eq!(s % mask.config.row_repetition(), 0);
+        }
+    }
+
+    #[test]
+    fn row_nonzero_cols_sorted_and_on_mask() {
+        let mut rng = Rng::new(81);
+        let mask = Rbgp4Mask::sample(small_config(), &mut rng).unwrap();
+        let dense = mask.dense();
+        for u in 0..mask.rows() {
+            let cols = mask.row_nonzero_cols(u);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {u} not sorted");
+            for &v in &cols {
+                assert_eq!(dense[u * mask.cols() + v], 1.0);
+            }
+            assert_eq!(cols.len(), mask.config.row_nnz());
+        }
+    }
+
+    #[test]
+    fn compact_roundtrip() {
+        let mut rng = Rng::new(82);
+        let mask = Rbgp4Mask::sample(small_config(), &mut rng).unwrap();
+        let w = Rbgp4Matrix::random(mask, &mut rng);
+        let dense = w.to_dense();
+        let back = Rbgp4Matrix::from_dense(w.mask.clone(), &dense).unwrap();
+        assert_eq!(w.data, back.data);
+    }
+
+    #[test]
+    fn succinct_memory_figure3_ratio() {
+        // Paper Figure 3: 512 edges vs 22 stored base-graph edges ≈ 23x.
+        // With our accounting on the small config: |E| = rows·row_nnz.
+        let mut rng = Rng::new(83);
+        let mask = Rbgp4Mask::sample(small_config(), &mut rng).unwrap();
+        let succinct = mask.succinct_index_elems();
+        let generic = mask.generic_index_elems();
+        assert_eq!(succinct, 8 + 2 + 8 + 4);
+        assert_eq!(generic, 64 * 8);
+        assert!(generic / succinct > 20);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut rng = Rng::new(84);
+        let mask = Rbgp4Mask::sample(small_config(), &mut rng).unwrap();
+        let j = mask.to_json();
+        let back = Rbgp4Mask::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.config, mask.config);
+        assert_eq!(back.go, mask.go);
+        assert_eq!(back.gi, mask.gi);
+    }
+
+    #[test]
+    fn validate_rejects_bad_sparsity() {
+        let mut c = small_config();
+        c.go.sp = 0.6;
+        assert!(c.validate().is_err());
+        c.go.sp = 0.5;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn dense_config_has_no_zeroes() {
+        let c = Rbgp4Config {
+            go: GraphSpec::new(2, 2, 0.0),
+            gr: (2, 2),
+            gi: GraphSpec::new(2, 2, 0.0),
+            gb: (1, 1),
+        };
+        let mut rng = Rng::new(85);
+        let mask = Rbgp4Mask::sample(c, &mut rng).unwrap();
+        assert!(mask.dense().iter().all(|&x| x == 1.0));
+    }
+}

@@ -1,0 +1,187 @@
+//! Gradual RBGP4 structure induction — the paper's §7 future-work item:
+//! *"generating combinatorial structured sparsity patterns like RBGP4
+//! during the training process could lead to more accurate models as
+//! structure is induced in a gradual manner."*
+//!
+//! Implementation: the *final* RBGP4 mask is sampled up front; intermediate
+//! masks are nested supersets of it (each row of each sparse base graph
+//! keeps its final edges and carries extra random edges that are removed at
+//! the next milestone). Training starts dense and tightens the mask on a
+//! step schedule; because every mask contains the next one, weights are
+//! only ever zeroed, never revived — the structure *emerges* rather than
+//! being imposed at initialization.
+
+use crate::sparsity::rbgp4::{Rbgp4Config, Rbgp4Mask};
+use crate::train_native::mlp::MaskedMlp;
+use crate::util::rng::Rng;
+
+/// One milestone: at `at_frac`·steps, tighten to `mask_index`.
+#[derive(Clone, Debug)]
+pub struct GradualSchedule {
+    /// Fractions of total steps at which the mask tightens; the mask chain
+    /// is dense → supersets → final, one entry per fraction.
+    pub fractions: Vec<f64>,
+}
+
+impl Default for GradualSchedule {
+    fn default() -> Self {
+        // Dense for the first quarter, half-tight until 60 %, final after.
+        GradualSchedule {
+            fractions: vec![0.25, 0.6],
+        }
+    }
+}
+
+/// Build the nested mask chain for `config`: returns masks of increasing
+/// sparsity, ending at the exact RBGP4 mask; every mask is a superset of
+/// its successor.
+///
+/// Intermediate masks relax the two sparse base graphs: each left vertex
+/// keeps its final adjacency plus `extra` random additional neighbours.
+/// (Intermediates are row-regular but not exactly biregular — they exist
+/// only during training; the *final* structure is a true RBGP4 mask.)
+pub fn nested_masks(
+    config: Rbgp4Config,
+    levels: usize,
+    rng: &mut Rng,
+) -> anyhow::Result<Vec<Vec<f32>>> {
+    let final_mask = Rbgp4Mask::sample(config, rng)?;
+    let (rows, cols) = (final_mask.rows(), final_mask.cols());
+    let final_dense = final_mask.dense();
+    let mut chain = Vec::with_capacity(levels + 1);
+    // Interpolate the number of *extra* non-zeros per row from full density
+    // down to zero across the chain. One shuffled extra-column order per
+    // row, shared by all levels (each level takes a shrinking prefix), so
+    // the chain is nested by construction.
+    let full_extra = cols - config.row_nnz();
+    let extra_order: Vec<Vec<usize>> = (0..rows)
+        .map(|u| {
+            let row = &final_dense[u * cols..(u + 1) * cols];
+            let mut off: Vec<usize> = (0..cols).filter(|&c| row[c] == 0.0).collect();
+            rng.shuffle(&mut off);
+            off
+        })
+        .collect();
+    for level in 0..levels {
+        // level 0 = densest intermediate.
+        let frac = 1.0 - (level as f64 + 1.0) / (levels as f64 + 1.0);
+        let extra = ((full_extra as f64) * frac).round() as usize;
+        let mut mask = final_dense.clone();
+        for u in 0..rows {
+            let row = &mut mask[u * cols..(u + 1) * cols];
+            for &c in extra_order[u].iter().take(extra) {
+                row[c] = 1.0;
+            }
+        }
+        chain.push(mask);
+    }
+    chain.push(final_dense);
+    Ok(chain)
+}
+
+/// Verify the nesting invariant: every mask is a superset of the next.
+pub fn is_nested(chain: &[Vec<f32>]) -> bool {
+    chain.windows(2).all(|w| {
+        w[0].iter()
+            .zip(&w[1])
+            .all(|(&outer, &inner)| inner == 0.0 || outer != 0.0)
+    })
+}
+
+/// Train `mlp`-style model with gradual tightening toward `config`'s mask.
+/// Returns (final loss, held-out accuracy). The model starts fully dense;
+/// at each schedule fraction the next mask in the chain is applied.
+pub fn train_gradual(
+    d: usize,
+    h: usize,
+    c: usize,
+    config: Rbgp4Config,
+    schedule: &GradualSchedule,
+    train_cfg: &crate::train_native::mlp::NativeTrainConfig,
+    data: &mut crate::data::synth::CifarLike,
+    rng: &mut Rng,
+) -> anyhow::Result<(f32, f64)> {
+    anyhow::ensure!(config.rows() == h && config.cols() == d, "config/shape mismatch");
+    let chain = nested_masks(config, schedule.fractions.len(), rng)?;
+    debug_assert!(is_nested(&chain));
+    let dense_mask = vec![1.0f32; h * d];
+    let mut mlp = MaskedMlp::new(d, h, c, dense_mask, rng);
+
+    let mut next_mask = 0usize;
+    let mut loss = f32::NAN;
+    for step in 0..train_cfg.steps {
+        let frac = step as f64 / train_cfg.steps as f64;
+        while next_mask < schedule.fractions.len() && frac >= schedule.fractions[next_mask] {
+            mlp.tighten_mask(chain[next_mask].clone());
+            next_mask += 1;
+        }
+        // Final tightening near the end if the schedule didn't reach it.
+        if next_mask == schedule.fractions.len() && frac >= *schedule.fractions.last().unwrap_or(&0.0)
+        {
+            mlp.tighten_mask(chain.last().unwrap().clone());
+            next_mask += 1;
+        }
+        let batch = data.train_batch(train_cfg.batch);
+        let xt = crate::train_native::mlp::transpose(&batch.x, train_cfg.batch, d);
+        let yt = crate::train_native::mlp::transpose(&batch.y, train_cfg.batch, c);
+        loss = mlp.train_step(&xt, &yt, train_cfg.batch, train_cfg);
+    }
+    // Ensure the final structure is in place even for degenerate schedules.
+    mlp.tighten_mask(chain.last().unwrap().clone());
+
+    let mut acc = 0.0;
+    let evals = 8;
+    for _ in 0..evals {
+        let tb = data.test_batch(train_cfg.batch);
+        let xt = crate::train_native::mlp::transpose(&tb.x, train_cfg.batch, d);
+        acc += mlp.accuracy(&xt, &tb.labels, train_cfg.batch);
+    }
+    Ok((loss, acc / evals as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::rbgp4::GraphSpec;
+
+    fn cfg() -> Rbgp4Config {
+        Rbgp4Config {
+            go: GraphSpec::new(4, 16, 0.5),
+            gr: (4, 1),
+            gi: GraphSpec::new(8, 8, 0.5),
+            gb: (1, 1),
+        }
+    }
+
+    #[test]
+    fn chain_is_nested_and_ends_at_final_sparsity() {
+        let mut rng = Rng::new(41);
+        let chain = nested_masks(cfg(), 2, &mut rng).unwrap();
+        assert_eq!(chain.len(), 3);
+        assert!(is_nested(&chain));
+        let sp = |m: &Vec<f32>| 1.0 - m.iter().filter(|&&v| v != 0.0).count() as f64 / m.len() as f64;
+        // Strictly increasing sparsity along the chain.
+        assert!(sp(&chain[0]) < sp(&chain[1]));
+        assert!(sp(&chain[1]) < sp(&chain[2]));
+        assert!((sp(&chain[2]) - cfg().sparsity()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gradual_training_reaches_final_structure_and_learns() {
+        let mut rng = Rng::new(42);
+        let config = cfg();
+        let (d, h, c) = (128usize, 128usize, 4usize);
+        let mut data = crate::data::synth::CifarLike::new(d, c, 11);
+        let tc = crate::train_native::mlp::NativeTrainConfig {
+            steps: 120,
+            batch: 32,
+            lr: 0.05,
+            ..Default::default()
+        };
+        let (loss, acc) =
+            train_gradual(d, h, c, config, &GradualSchedule::default(), &tc, &mut data, &mut rng)
+                .unwrap();
+        assert!(loss.is_finite());
+        assert!(acc > 0.7, "gradual acc {acc}");
+    }
+}

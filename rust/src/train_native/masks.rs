@@ -1,0 +1,164 @@
+//! Mask generators for every pattern Table 1 compares, on one (rows × cols)
+//! weight matrix at a common sparsity.
+
+use crate::sparsity::bsr::BsrMatrix;
+use crate::sparsity::csr::CsrMatrix;
+use crate::sparsity::memory::Pattern;
+use crate::sparsity::rbgp4::{GraphSpec, Rbgp4Config, Rbgp4Mask};
+use crate::util::rng::Rng;
+
+/// Sample a 0/1 mask (row-major rows × cols) of the given pattern at
+/// dyadic sparsity `sp`. RBGP4 picks a feasible factorization automatically
+/// (G_r = (4,1), G_i square, G_o absorbs the rest — the Table-2 shape).
+pub fn pattern_mask(
+    pattern: Pattern,
+    rows: usize,
+    cols: usize,
+    sp: f64,
+    rng: &mut Rng,
+) -> anyhow::Result<Vec<f32>> {
+    match pattern {
+        Pattern::Dense => Ok(vec![1.0; rows * cols]),
+        Pattern::Unstructured => {
+            let csr = CsrMatrix::random_row_uniform(rows, cols, sp, rng);
+            Ok(csr
+                .to_dense()
+                .iter()
+                .map(|&v| if v != 0.0 { 1.0 } else { 0.0 })
+                .collect())
+        }
+        Pattern::Block(bh, bw) => {
+            let bsr = BsrMatrix::random_block_uniform(rows, cols, bh, bw, sp, rng);
+            // Blocks are dense inside: any stored position is on the mask.
+            let mut mask = vec![0.0f32; rows * cols];
+            for bi in 0..bsr.block_rows() {
+                for k in bsr.indptr[bi]..bsr.indptr[bi + 1] {
+                    let bj = bsr.indices[k];
+                    for i in 0..bh {
+                        let row = (bi * bh + i) * cols + bj * bw;
+                        for v in &mut mask[row..row + bw] {
+                            *v = 1.0;
+                        }
+                    }
+                }
+            }
+            Ok(mask)
+        }
+        Pattern::Rbgp4 => {
+            let cfg = rbgp4_factorization(rows, cols, sp)?;
+            let mask = Rbgp4Mask::sample(cfg, rng)?;
+            Ok(mask.dense())
+        }
+    }
+}
+
+/// Feasible RBGP4 factorization of (rows × cols) at total sparsity `sp`,
+/// splitting evenly between G_o and G_i when possible (the paper's default
+/// benchmarking split), else putting everything on one sparse graph.
+pub fn rbgp4_factorization(rows: usize, cols: usize, sp: f64) -> anyhow::Result<Rbgp4Config> {
+    // Candidate (sp_o, sp_i) splits whose product of densities matches sp.
+    let splits: &[(f64, f64)] = match sp {
+        x if (x - 0.5).abs() < 1e-9 => &[(0.5, 0.0), (0.0, 0.5)],
+        x if (x - 0.75).abs() < 1e-9 => &[(0.5, 0.5), (0.75, 0.0), (0.0, 0.75)],
+        x if (x - 0.875).abs() < 1e-9 => &[(0.75, 0.5), (0.5, 0.75), (0.875, 0.0)],
+        x if (x - 0.9375).abs() < 1e-9 => &[(0.75, 0.75), (0.875, 0.5), (0.5, 0.875)],
+        x if x == 0.0 => &[(0.0, 0.0)],
+        _ => anyhow::bail!("non-dyadic sparsity {sp}"),
+    };
+    for &(sp_o, sp_i) in splits {
+        for gi in [32usize, 16, 8, 4] {
+            for gr_u in [4usize, 2, 1] {
+                if rows % (gr_u * gi) != 0 || cols % gi != 0 {
+                    continue;
+                }
+                let cfg = Rbgp4Config {
+                    go: GraphSpec::new(rows / (gr_u * gi), cols / gi, sp_o),
+                    gr: (gr_u, 1),
+                    gi: GraphSpec::new(gi, gi, sp_i),
+                    gb: (1, 1),
+                };
+                if cfg.validate().is_ok()
+                    && crate::graph::lift::sparse_biregular_by_lifts(
+                        cfg.go.nu, cfg.go.nv, sp_o, &mut Rng::new(0),
+                    )
+                    .is_ok()
+                    && crate::graph::lift::sparse_biregular_by_lifts(
+                        gi, gi, sp_i, &mut Rng::new(0),
+                    )
+                    .is_ok()
+                {
+                    return Ok(cfg);
+                }
+            }
+        }
+    }
+    anyhow::bail!("no feasible RBGP4 factorization for {rows}x{cols} at sp={sp}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sparsity_of(mask: &[f32]) -> f64 {
+        1.0 - mask.iter().filter(|&&v| v != 0.0).count() as f64 / mask.len() as f64
+    }
+
+    #[test]
+    fn all_patterns_hit_target_sparsity() {
+        let mut rng = Rng::new(17);
+        for &sp in &[0.5, 0.75, 0.875] {
+            for pat in [
+                Pattern::Unstructured,
+                Pattern::Block(4, 4),
+                Pattern::Rbgp4,
+            ] {
+                let m = pattern_mask(pat, 256, 256, sp, &mut rng).unwrap();
+                assert!(
+                    (sparsity_of(&m) - sp).abs() < 0.02,
+                    "{:?} sp={sp}: got {}",
+                    pat.name(),
+                    sparsity_of(&m)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_mask_is_all_ones() {
+        let mut rng = Rng::new(18);
+        let m = pattern_mask(Pattern::Dense, 8, 8, 0.0, &mut rng).unwrap();
+        assert!(m.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn rbgp4_factorization_shapes() {
+        for &(r, c, sp) in &[(256usize, 256usize, 0.75f64), (512, 256, 0.875), (128, 128, 0.5)] {
+            let cfg = rbgp4_factorization(r, c, sp).unwrap();
+            assert_eq!(cfg.rows(), r);
+            assert_eq!(cfg.cols(), c);
+            assert!((cfg.sparsity() - sp).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn block_mask_is_blocky() {
+        // Blocks are all-or-nothing and each block row holds the same
+        // number of blocks (row-uniform; columns are free, like cuSparse).
+        let mut rng = Rng::new(19);
+        let m = pattern_mask(Pattern::Block(4, 4), 64, 64, 0.75, &mut rng).unwrap();
+        for bi in 0..16 {
+            let mut blocks_in_row = 0;
+            for bj in 0..16 {
+                let mut ones = 0;
+                for i in 0..4 {
+                    for j in 0..4 {
+                        ones += (m[(bi * 4 + i) * 64 + bj * 4 + j] != 0.0) as usize;
+                    }
+                }
+                assert!(ones == 0 || ones == 16, "partial block ({bi},{bj})");
+                blocks_in_row += (ones == 16) as usize;
+            }
+            assert_eq!(blocks_in_row, 4, "block row {bi} not uniform");
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! Masked two-layer MLP with hand-written backprop (pure Rust).
+//!
+//! Architecture: `x (D×B) → W1∘M (H×D) → ReLU → W2 (C×H) → softmax CE`.
+//! The hidden weight carries a fixed 0/1 mask `M` (predefined sparsity, as
+//! in the paper's §6 setup); gradients are masked so pruned weights stay
+//! exactly zero. Optimizer: SGD + momentum 0.9 + weight decay 1e-4.
+
+use crate::data::synth::CifarLike;
+use crate::kernels::dense::gemm_blocked;
+use crate::util::rng::Rng;
+
+/// Training hyper-parameters for the native trainer.
+#[derive(Clone, Debug)]
+pub struct NativeTrainConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+}
+
+impl Default for NativeTrainConfig {
+    fn default() -> Self {
+        NativeTrainConfig {
+            steps: 200,
+            batch: 64,
+            lr: 0.05,
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            seed: 0,
+        }
+    }
+}
+
+/// The model + optimizer state.
+pub struct MaskedMlp {
+    pub d: usize,
+    pub h: usize,
+    pub c: usize,
+    /// Hidden-layer mask (H × D), 0/1.
+    pub mask: Vec<f32>,
+    w1: Vec<f32>, // (H, D)
+    b1: Vec<f32>,
+    w2: Vec<f32>, // (C, H)
+    b2: Vec<f32>,
+    v_w1: Vec<f32>,
+    v_b1: Vec<f32>,
+    v_w2: Vec<f32>,
+    v_b2: Vec<f32>,
+}
+
+impl MaskedMlp {
+    /// He-init scaled by the *unmasked* fan-in of each row (matching the
+    /// compact-storage init the AOT model uses).
+    pub fn new(d: usize, h: usize, c: usize, mask: Vec<f32>, rng: &mut Rng) -> MaskedMlp {
+        assert_eq!(mask.len(), h * d);
+        let mut w1 = vec![0.0f32; h * d];
+        for r in 0..h {
+            let fan_in = mask[r * d..(r + 1) * d].iter().filter(|&&m| m != 0.0).count().max(1);
+            let scale = (2.0 / fan_in as f64).sqrt() as f32;
+            for col in 0..d {
+                w1[r * d + col] = rng.normal_f32() * scale * mask[r * d + col];
+            }
+        }
+        let w2scale = (1.0 / h as f64).sqrt() as f32;
+        let w2 = rng.normal_vec_f32(c * h, w2scale);
+        MaskedMlp {
+            d,
+            h,
+            c,
+            mask,
+            w1,
+            b1: vec![0.0; h],
+            w2,
+            b2: vec![0.0; c],
+            v_w1: vec![0.0; h * d],
+            v_b1: vec![0.0; h],
+            v_w2: vec![0.0; c * h],
+            v_b2: vec![0.0; c],
+        }
+    }
+
+    /// Replace the mask with a (sub)mask, zeroing weights and momenta that
+    /// fall off it — the gradual-induction primitive. Panics (debug) if the
+    /// new mask is not a subset of the current one.
+    pub fn tighten_mask(&mut self, new_mask: Vec<f32>) {
+        assert_eq!(new_mask.len(), self.mask.len());
+        debug_assert!(
+            new_mask
+                .iter()
+                .zip(&self.mask)
+                .all(|(&n, &o)| n == 0.0 || o != 0.0),
+            "tighten_mask: new mask is not nested in the old one"
+        );
+        for i in 0..new_mask.len() {
+            if new_mask[i] == 0.0 {
+                self.w1[i] = 0.0;
+                self.v_w1[i] = 0.0;
+            }
+        }
+        self.mask = new_mask;
+    }
+
+    /// Forward: returns (hidden (H×B), probs (C×B)). `x` is (D×B).
+    fn forward(&self, x: &[f32], b: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut hid = vec![0.0f32; self.h * b];
+        gemm_blocked(&self.w1, x, &mut hid, self.h, self.d, b);
+        for r in 0..self.h {
+            for j in 0..b {
+                let v = hid[r * b + j] + self.b1[r];
+                hid[r * b + j] = v.max(0.0);
+            }
+        }
+        let mut logits = vec![0.0f32; self.c * b];
+        gemm_blocked(&self.w2, &hid, &mut logits, self.c, self.h, b);
+        // softmax per column
+        for j in 0..b {
+            let mut mx = f32::NEG_INFINITY;
+            for r in 0..self.c {
+                logits[r * b + j] += self.b2[r];
+                mx = mx.max(logits[r * b + j]);
+            }
+            let mut z = 0.0f32;
+            for r in 0..self.c {
+                let e = (logits[r * b + j] - mx).exp();
+                logits[r * b + j] = e;
+                z += e;
+            }
+            for r in 0..self.c {
+                logits[r * b + j] /= z;
+            }
+        }
+        (hid, logits)
+    }
+
+    /// One SGD step on a batch; returns the mean CE loss.
+    pub fn train_step(&mut self, x: &[f32], y: &[f32], b: usize, cfg: &NativeTrainConfig) -> f32 {
+        let (hid, probs) = self.forward(x, b);
+        // Loss + dlogits = (probs - y)/B    (both C×B)
+        let mut loss = 0.0f32;
+        let mut dlogits = vec![0.0f32; self.c * b];
+        for j in 0..b {
+            for r in 0..self.c {
+                let p = probs[r * b + j];
+                let t = y[r * b + j];
+                if t > 0.0 {
+                    loss -= (p.max(1e-12)).ln() * t;
+                }
+                dlogits[r * b + j] = (p - t) / b as f32;
+            }
+        }
+        loss /= b as f32;
+
+        // dW2 = dlogits · hidᵀ ; db2 = Σ dlogits
+        let mut dw2 = vec![0.0f32; self.c * self.h];
+        gemm_nt(&dlogits, &hid, &mut dw2, self.c, b, self.h);
+        let mut db2 = vec![0.0f32; self.c];
+        for r in 0..self.c {
+            db2[r] = dlogits[r * b..(r + 1) * b].iter().sum();
+        }
+        // dhid = W2ᵀ · dlogits, gated by ReLU
+        let mut dhid = vec![0.0f32; self.h * b];
+        gemm_tn(&self.w2, &dlogits, &mut dhid, self.c, self.h, b);
+        for idx in 0..self.h * b {
+            if hid[idx] <= 0.0 {
+                dhid[idx] = 0.0;
+            }
+        }
+        // dW1 = dhid · xᵀ (masked); db1 = Σ dhid
+        let mut dw1 = vec![0.0f32; self.h * self.d];
+        gemm_nt(&dhid, x, &mut dw1, self.h, b, self.d);
+        let mut db1 = vec![0.0f32; self.h];
+        for r in 0..self.h {
+            db1[r] = dhid[r * b..(r + 1) * b].iter().sum();
+        }
+
+        // SGD momentum + weight decay; W1 gradient masked.
+        let upd = |p: &mut [f32], v: &mut [f32], g: &[f32], mask: Option<&[f32]>, cfg: &NativeTrainConfig| {
+            for i in 0..p.len() {
+                let m = mask.map(|m| m[i]).unwrap_or(1.0);
+                if m == 0.0 {
+                    continue;
+                }
+                let grad = g[i] + cfg.weight_decay * p[i];
+                v[i] = cfg.momentum * v[i] + grad;
+                p[i] -= cfg.lr * v[i];
+            }
+        };
+        upd(&mut self.w1, &mut self.v_w1, &dw1, Some(&self.mask), cfg);
+        upd(&mut self.b1, &mut self.v_b1, &db1, None, cfg);
+        upd(&mut self.w2, &mut self.v_w2, &dw2, None, cfg);
+        upd(&mut self.b2, &mut self.v_b2, &db2, None, cfg);
+        loss
+    }
+
+    /// Accuracy over a (D×B) batch with integer labels.
+    pub fn accuracy(&self, x: &[f32], labels: &[usize], b: usize) -> f64 {
+        let (_, probs) = self.forward(x, b);
+        let mut correct = 0usize;
+        for (j, &lbl) in labels.iter().enumerate() {
+            let mut best = (0usize, f32::NEG_INFINITY);
+            for r in 0..self.c {
+                if probs[r * b + j] > best.1 {
+                    best = (r, probs[r * b + j]);
+                }
+            }
+            correct += (best.0 == lbl) as usize;
+        }
+        correct as f64 / b as f64
+    }
+
+    /// Train on `data` per `cfg`; returns (final loss, held-out accuracy).
+    pub fn train(&mut self, data: &mut CifarLike, cfg: &NativeTrainConfig) -> (f32, f64) {
+        let mut loss = f32::NAN;
+        for _ in 0..cfg.steps {
+            let batch = data.train_batch(cfg.batch);
+            let xt = transpose(&batch.x, cfg.batch, self.d);
+            let yt = transpose(&batch.y, cfg.batch, self.c);
+            loss = self.train_step(&xt, &yt, cfg.batch, cfg);
+        }
+        let mut acc = 0.0;
+        let evals = 8;
+        for _ in 0..evals {
+            let tb = data.test_batch(cfg.batch);
+            let xt = transpose(&tb.x, cfg.batch, self.d);
+            acc += self.accuracy(&xt, &tb.labels, cfg.batch);
+        }
+        (loss, acc / evals as f64)
+    }
+}
+
+/// out (M×N) = a (M×K) · bᵀ where b is (N×K).
+fn gemm_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for r in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f32;
+            let ar = &a[r * k..(r + 1) * k];
+            let br = &b[j * k..(j + 1) * k];
+            for kk in 0..k {
+                s += ar[kk] * br[kk];
+            }
+            out[r * n + j] = s;
+        }
+    }
+}
+
+/// out (K×N) = aᵀ · b where a is (M×K), b is (M×N).
+fn gemm_tn(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(out.len(), k * n);
+    out.fill(0.0);
+    for row in 0..m {
+        for kk in 0..k {
+            let av = a[row * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[row * n..(row + 1) * n];
+            let orow = &mut out[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// (rows × cols) row-major → (cols × rows).
+pub fn transpose(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut t = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            t[c * rows + r] = x[r * cols + c];
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::memory::Pattern;
+    use crate::train_native::masks::pattern_mask;
+
+    #[test]
+    fn gemm_helpers_match_naive() {
+        let mut rng = Rng::new(30);
+        let (m, k, n) = (5, 7, 4);
+        let a = rng.normal_vec_f32(m * k, 1.0);
+        let b = rng.normal_vec_f32(n * k, 1.0);
+        let mut out = vec![0.0; m * n];
+        gemm_nt(&a, &b, &mut out, m, k, n);
+        for r in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|kk| a[r * k + kk] * b[j * k + kk]).sum();
+                assert!((out[r * n + j] - want).abs() < 1e-4);
+            }
+        }
+        let b2 = rng.normal_vec_f32(m * n, 1.0);
+        let mut out2 = vec![0.0; k * n];
+        gemm_tn(&a, &b2, &mut out2, m, k, n);
+        for kk in 0..k {
+            for j in 0..n {
+                let want: f32 = (0..m).map(|r| a[r * k + kk] * b2[r * n + j]).sum();
+                assert!((out2[kk * n + j] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let x: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let t = transpose(&x, 3, 4);
+        assert_eq!(transpose(&t, 4, 3), x);
+        assert_eq!(t[0], 0.0);
+        assert_eq!(t[1], 4.0); // (0,1) of transposed = (1,0) of original
+    }
+
+    #[test]
+    fn masked_weights_stay_zero() {
+        let mut rng = Rng::new(31);
+        let mask = pattern_mask(Pattern::Unstructured, 32, 16, 0.75, &mut rng).unwrap();
+        let mut mlp = MaskedMlp::new(16, 32, 4, mask.clone(), &mut rng);
+        let cfg = NativeTrainConfig {
+            steps: 5,
+            batch: 8,
+            ..NativeTrainConfig::default()
+        };
+        let mut data = CifarLike::new(16, 4, 3);
+        mlp.train(&mut data, &cfg);
+        for (w, m) in mlp.w1.iter().zip(&mask) {
+            if *m == 0.0 {
+                assert_eq!(*w, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn native_training_learns_the_task() {
+        let mut rng = Rng::new(32);
+        let mask = pattern_mask(Pattern::Rbgp4, 128, 128, 0.75, &mut rng).unwrap();
+        let mut mlp = MaskedMlp::new(128, 128, 4, mask, &mut rng);
+        let cfg = NativeTrainConfig {
+            steps: 120,
+            batch: 32,
+            lr: 0.05,
+            ..NativeTrainConfig::default()
+        };
+        let mut data = CifarLike::new(128, 4, 5);
+        let (loss, acc) = mlp.train(&mut data, &cfg);
+        assert!(loss < 0.8, "loss {loss}");
+        assert!(acc > 0.8, "acc {acc}");
+    }
+}

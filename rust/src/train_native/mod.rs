@@ -1,0 +1,17 @@
+//! Native (pure-Rust) masked training — the accuracy-parity substrate.
+//!
+//! Table 1's accuracy claim is that at equal sparsity, RBGP4 masks match
+//! unstructured and block masks. The AOT path trains only the RBGP4 model
+//! (its mask is baked into the artifact), so this module provides a small
+//! self-contained trainer where the mask is a runtime input: a two-layer
+//! MLP with hand-written forward/backward over *masked dense* weights,
+//! trained with the paper's SGD-momentum recipe. `examples/accuracy_parity.rs`
+//! sweeps all four patterns at the paper's sparsities.
+
+pub mod gradual;
+pub mod masks;
+pub mod mlp;
+
+pub use gradual::{nested_masks, train_gradual, GradualSchedule};
+pub use masks::pattern_mask;
+pub use mlp::{MaskedMlp, NativeTrainConfig};

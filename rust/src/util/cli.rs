@@ -1,0 +1,161 @@
+//! Tiny command-line argument parser (no `clap` in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional arguments.
+//! Subcommand dispatch is done by the caller (`main.rs`) on the first
+//! positional token.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: named options plus positionals, in order.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (typically `std::env::args().skip(1)`).
+    ///
+    /// A `--key` followed by a token that does not start with `--` consumes it
+    /// as the value; a bare trailing `--key` is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(body) = t.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.opts.insert(body.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+
+    /// True when `--name` appeared at all (bare, `--name=x`, or `--name x`).
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Parse `--name a,b,c` into a list (empty if absent).
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Parse a pair like `--size 128x32` (separator `x` or `,`).
+    pub fn get_pair(&self, name: &str) -> anyhow::Result<Option<(usize, usize)>> {
+        let Some(v) = self.get(name) else {
+            return Ok(None);
+        };
+        let sep = if v.contains('x') { 'x' } else { ',' };
+        let parts: Vec<&str> = v.split(sep).collect();
+        if parts.len() != 2 {
+            anyhow::bail!("--{name} expects AxB, got '{v}'");
+        }
+        Ok(Some((parts[0].trim().parse()?, parts[1].trim().parse()?)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB: a bare `--flag value` pair is ambiguous in this mini-parser
+        // (value gets consumed); boolean flags go last or use `=`.
+        let a = parse("train data.bin --steps 100 --lr=0.1 --verbose");
+        assert_eq!(a.command(), Some("train"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.1);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["train", "data.bin"]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("bench --n x");
+        assert!(a.get_usize("n", 1).is_err());
+        assert_eq!(a.get_usize("m", 7).unwrap(), 7);
+        assert_eq!(a.get_str("who", "d"), "d");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn lists_and_pairs() {
+        let a = parse("t --sp 0.5,0.75 --size 128x32");
+        assert_eq!(a.get_list("sp"), vec!["0.5", "0.75"]);
+        assert_eq!(a.get_pair("size").unwrap(), Some((128, 32)));
+        assert_eq!(a.get_pair("nope").unwrap(), None);
+    }
+}

@@ -1,0 +1,39 @@
+//! Foundation utilities, hand-rolled because the offline vendor set contains
+//! only the `xla` crate closure (no rand / serde / clap / criterion /
+//! proptest / rayon / tokio).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+pub mod timing;
+
+/// Human-friendly byte formatting (MB with 2 decimals, as the paper's
+/// Table 1 reports memory in MB).
+pub fn fmt_mb(bytes: u64) -> String {
+    format!("{:.2}", bytes as f64 / (1024.0 * 1024.0))
+}
+
+/// `a/b` rounded up.
+#[inline]
+pub const fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_mb_matches_paper_convention() {
+        assert_eq!(fmt_mb(1024 * 1024), "1.00");
+        assert_eq!(fmt_mb(81_146_470), "77.39"); // VGG19 dense params ≈ paper's 77.39 MB
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+    }
+}

@@ -1,0 +1,157 @@
+//! Minimal property-based testing harness (no `proptest` in the vendor set).
+//!
+//! `check(name, cases, |rng| ...)` runs a property closure over `cases`
+//! independently-seeded RNGs; on failure it reports the failing seed so the
+//! case can be replayed deterministically with `replay(seed, ...)`.
+//! There is no shrinking — generators are written to produce small cases by
+//! construction (sizes drawn from small ranges).
+
+use crate::util::rng::Rng;
+
+/// Outcome of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Assert a condition inside a property, with context formatting.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Assert equality inside a property.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($fmt:tt)*) => {{
+        let (av, bv) = (&$a, &$b);
+        if av != bv {
+            return Err(format!(
+                "{} — left={:?} right={:?}",
+                format!($($fmt)*), av, bv
+            ));
+        }
+    }};
+}
+
+/// Run `prop` over `cases` cases. Seeds are derived from `base_seed` so the
+/// whole suite is deterministic; set env `RBGP_PROP_SEED` to reproduce a CI
+/// run locally.
+pub fn check_seeded<F>(name: &str, base_seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let mut meta = Rng::new(base_seed);
+    for case in 0..cases {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {seed:#x}):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Run with the default or env-provided base seed.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let base = std::env::var("RBGP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE_F00Du64);
+    check_seeded(name, base, cases, prop)
+}
+
+/// Replay one failing case by exact seed.
+pub fn replay<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replay seed {seed:#x} failed:\n  {msg}");
+    }
+}
+
+/// Generator helpers for common shapes used across the test suite.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// A power of two in `[lo, hi]` (both must be powers of two).
+    pub fn pow2(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo.is_power_of_two() && hi.is_power_of_two() && lo <= hi);
+        let lo_log = lo.trailing_zeros();
+        let hi_log = hi.trailing_zeros();
+        1usize << (lo_log + rng.below((hi_log - lo_log + 1) as u64) as u32)
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn range(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below_usize(hi - lo + 1)
+    }
+
+    /// A divisor of `n`, uniform over divisors.
+    pub fn divisor(rng: &mut Rng, n: usize) -> usize {
+        let divs: Vec<usize> = (1..=n).filter(|d| n % d == 0).collect();
+        divs[rng.below_usize(divs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 25, |rng| {
+            n += 1;
+            let x = rng.below(100);
+            prop_assert!(x < 100, "x={x} out of range");
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        check("fails", 10, |rng| {
+            let x = rng.below(10);
+            prop_assert!(x < 5, "x={x} too big");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        check_seeded("det", 99, 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check_seeded("det", 99, 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn gen_helpers() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..100 {
+            let p = gen::pow2(&mut rng, 2, 64);
+            assert!(p.is_power_of_two() && (2..=64).contains(&p));
+            let r = gen::range(&mut rng, 3, 9);
+            assert!((3..=9).contains(&r));
+            let d = gen::divisor(&mut rng, 24);
+            assert_eq!(24 % d, 0);
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! A small scoped thread pool (no `rayon` in the offline vendor set).
+//!
+//! Two entry points:
+//!  * [`ThreadPool`] — long-lived workers fed closures over a channel; used by
+//!    the coordinator for request handling.
+//!  * [`parallel_for`] — scoped fork-join over an index range with static
+//!    chunking; used by the parallel SDMM kernels.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Long-lived worker pool. Jobs are `FnOnce() + Send`; results flow through
+/// whatever channel the caller closes over.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        assert!(threads > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("rbgp-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            sender: Some(tx),
+            workers,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Number of worker threads to default to: available parallelism, capped so
+/// benches stay stable on oversubscribed machines.
+pub fn default_threads() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Scoped fork-join parallel loop: calls `f(i)` for every `i in 0..n`, using
+/// `threads` OS threads with dynamic (atomic counter) chunking of size
+/// `chunk`. `f` only needs to live for the call (scoped threads).
+pub fn parallel_for<F>(n: usize, threads: usize, chunk: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let chunk = chunk.max(1);
+    let next = AtomicUsize::new(0);
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Split a mutable slice into `n` disjoint row-chunks and process them in
+/// parallel: `f(chunk_index, rows_start, chunk_slice)`. Used by kernels that
+/// write disjoint row ranges of the output.
+pub fn parallel_rows<T: Send, F>(data: &mut [T], rows: usize, row_len: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert_eq!(data.len(), rows * row_len);
+    let threads = threads.max(1).min(rows.max(1));
+    if threads <= 1 || rows == 0 {
+        f(0, data);
+        return;
+    }
+    let per = rows.div_ceil(threads);
+    thread::scope(|scope| {
+        let mut rest = data;
+        let mut row0 = 0usize;
+        while row0 < rows {
+            let take = per.min(rows - row0);
+            let (head, tail) = rest.split_at_mut(take * row_len);
+            let start_row = row0;
+            let fr = &f;
+            scope.spawn(move || fr(start_row, head));
+            rest = tail;
+            row0 += take;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..100 {
+            rx.recv().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_drop_joins() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(n, 8, 7, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_for_single_thread_and_empty() {
+        parallel_for(0, 4, 8, |_| panic!("should not run"));
+        let mut sum = AtomicUsize::new(0);
+        parallel_for(10, 1, 3, |i| {
+            sum.fetch_add(i, Ordering::SeqCst);
+        });
+        assert_eq!(*sum.get_mut(), 45);
+    }
+
+    #[test]
+    fn parallel_rows_disjoint_writes() {
+        let rows = 37;
+        let cols = 5;
+        let mut data = vec![0u32; rows * cols];
+        parallel_rows(&mut data, rows, cols, 4, |row0, chunk| {
+            for (r, row) in chunk.chunks_mut(cols).enumerate() {
+                for v in row.iter_mut() {
+                    *v = (row0 + r) as u32;
+                }
+            }
+        });
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(data[r * cols + c], r as u32);
+            }
+        }
+    }
+}

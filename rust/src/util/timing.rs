@@ -1,0 +1,165 @@
+//! Benchmark timing harness.
+//!
+//! The vendor set has no `criterion`, so benches (`harness = false`) use this
+//! small harness: warmup iterations, then `n` timed samples, reporting
+//! median / mean / MAD / min. Deterministic output format so bench logs diff
+//! cleanly between perf iterations.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over timed samples, in seconds.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub samples: Vec<f64>,
+    pub median: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Median absolute deviation — robust spread estimate.
+    pub mad: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut samples: Vec<f64>) -> BenchStats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = percentile_sorted(&samples, 50.0);
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let min = samples[0];
+        let max = *samples.last().unwrap();
+        let mut dev: Vec<f64> = samples.iter().map(|x| (x - median).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = percentile_sorted(&dev, 50.0);
+        BenchStats {
+            samples,
+            median,
+            mean,
+            min,
+            max,
+            mad,
+        }
+    }
+
+    /// Milliseconds, for report rows.
+    pub fn median_ms(&self) -> f64 {
+        self.median * 1e3
+    }
+}
+
+fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Configuration for `bench_fn`.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    /// Hard cap on total measurement time; sampling stops early past this.
+    pub max_total: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            samples: 15,
+            max_total: Duration::from_secs(10),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for smoke runs / CI (`RBGP_BENCH_FAST=1`).
+    pub fn from_env() -> BenchConfig {
+        if std::env::var("RBGP_BENCH_FAST").map(|v| v == "1").unwrap_or(false) {
+            BenchConfig {
+                warmup_iters: 1,
+                samples: 5,
+                max_total: Duration::from_secs(2),
+            }
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// Time `f` under `cfg`. `f` must perform one complete operation per call;
+/// use `std::hint::black_box` inside for anything the optimizer might drop.
+pub fn bench_fn<F: FnMut()>(cfg: &BenchConfig, mut f: F) -> BenchStats {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.samples);
+    let start = Instant::now();
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if start.elapsed() > cfg.max_total && !samples.is_empty() {
+            break;
+        }
+    }
+    BenchStats::from_samples(samples)
+}
+
+/// One formatted bench row: `name  median  mad  min` (ms).
+pub fn report_row(name: &str, stats: &BenchStats) -> String {
+    format!(
+        "{:<44} {:>10.3} ms  ±{:>7.3}  min {:>10.3}",
+        name,
+        stats.median * 1e3,
+        stats.mad * 1e3,
+        stats.min * 1e3
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_median_mean() {
+        let s = BenchStats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn mad_robust_to_outlier() {
+        let s = BenchStats::from_samples(vec![1.0, 1.0, 1.0, 1.0, 100.0]);
+        assert_eq!(s.median, 1.0);
+        assert_eq!(s.mad, 0.0);
+    }
+
+    #[test]
+    fn bench_fn_runs_and_counts() {
+        let mut count = 0usize;
+        let cfg = BenchConfig {
+            warmup_iters: 2,
+            samples: 5,
+            max_total: Duration::from_secs(5),
+        };
+        let stats = bench_fn(&cfg, || {
+            count += 1;
+        });
+        assert_eq!(count, 7);
+        assert_eq!(stats.samples.len(), 5);
+        assert!(stats.median >= 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = vec![0.0, 10.0];
+        assert_eq!(percentile_sorted(&v, 50.0), 5.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Integration tests over the runtime + coordinator against real AOT
+//! artifacts. These require `make artifacts`; each test skips (with a
+//! message) when artifacts are absent so `cargo test` stays green in a
+//! fresh checkout.
+
+use rbgp::coordinator::{InferenceServer, ServerConfig, TrainConfig, Trainer};
+use rbgp::runtime::executor::{Executor, HostTensor};
+use rbgp::runtime::ArtifactMeta;
+use std::path::{Path, PathBuf};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn forward_artifact_is_deterministic_and_finite() {
+    let Some(dir) = artifacts() else { return };
+    let exe = Executor::compile(&dir, "forward").unwrap();
+    let meta = &exe.artifact.meta;
+    let inputs: Vec<HostTensor> = meta
+        .inputs
+        .iter()
+        .map(|sig| HostTensor::new(vec![0.01; sig.elements()], &sig.shape))
+        .collect();
+    let a = exe.run(&inputs).unwrap();
+    let b = exe.run(&inputs).unwrap();
+    assert_eq!(a[0].data, b[0].data, "same inputs → same logits");
+    assert!(a[0].data.iter().all(|v| v.is_finite()));
+    let batch = meta.batch().unwrap();
+    let classes = meta.raw.req_usize("classes").unwrap();
+    assert_eq!(a[0].data.len(), batch * classes);
+}
+
+#[test]
+fn train_step_artifact_reduces_loss_on_fixed_batch() {
+    let Some(dir) = artifacts() else { return };
+    let config = TrainConfig {
+        steps: 8,
+        lr0: 0.05,
+        lr_decay: 1.0,
+        milestones: vec![],
+        seed: 123,
+        eval_every: 0,
+        eval_batches: 1,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(&dir, config).unwrap();
+    let mut losses = Vec::new();
+    for s in 0..8 {
+        losses.push(trainer.step(s).unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    // Fresh batches each step, but 8 steps at lr .05 on this task must cut
+    // the loss substantially (the E2E example reaches ~0 by step 20).
+    assert!(
+        losses[7] < 0.8 * losses[0],
+        "loss did not drop: {losses:?}"
+    );
+}
+
+#[test]
+fn trainer_eval_improves_over_chance() {
+    let Some(dir) = artifacts() else { return };
+    let config = TrainConfig {
+        steps: 12,
+        lr0: 0.05,
+        lr_decay: 1.0,
+        milestones: vec![],
+        seed: 7,
+        eval_every: 0,
+        eval_batches: 2,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(&dir, config).unwrap();
+    let before = trainer.evaluate(2).unwrap();
+    for s in 0..12 {
+        trainer.step(s).unwrap();
+    }
+    let after = trainer.evaluate(2).unwrap();
+    assert!(
+        after > before + 0.2,
+        "accuracy {before:.3} → {after:.3} did not improve"
+    );
+}
+
+#[test]
+fn kd_train_step_runs_when_present() {
+    let Some(dir) = artifacts() else { return };
+    if !dir.join("train_step_kd.hlo.txt").exists() {
+        eprintln!("skipping: no KD artifact");
+        return;
+    }
+    let config = TrainConfig {
+        steps: 2,
+        distill: true,
+        eval_every: 0,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(&dir, config).unwrap();
+    let l0 = trainer.step(0).unwrap();
+    let l1 = trainer.step(1).unwrap();
+    assert!(l0.is_finite() && l1.is_finite());
+}
+
+#[test]
+fn server_roundtrip_with_concurrent_clients() {
+    let Some(dir) = artifacts() else { return };
+    let server = InferenceServer::start(dir, ServerConfig::default()).unwrap();
+    let n = 24;
+    std::thread::scope(|scope| {
+        for c in 0..3 {
+            let server = server.clone();
+            scope.spawn(move || {
+                for r in 0..n / 3 {
+                    let x = vec![0.1 * (c as f32 + 1.0) + r as f32 * 1e-3; server.in_dim];
+                    let logits = server.infer(x).unwrap();
+                    assert_eq!(logits.len(), server.classes);
+                    assert!(logits.iter().all(|v| v.is_finite()));
+                }
+            });
+        }
+    });
+    let (reqs, batches) = server.counters();
+    assert_eq!(reqs, n);
+    assert!(batches <= n, "batching never exceeds request count");
+    assert!(server.latency_stats().unwrap().p50 > 0.0);
+}
+
+#[test]
+fn server_rejects_wrong_dim() {
+    let Some(dir) = artifacts() else { return };
+    let server = InferenceServer::start(dir, ServerConfig::default()).unwrap();
+    assert!(server.submit(vec![0.0; 3]).is_err());
+}
+
+#[test]
+fn metadata_matches_manifest() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = ArtifactMeta::load(&dir.join("forward.json")).unwrap();
+    assert_eq!(manifest.kind, "forward");
+    let step = ArtifactMeta::load(&dir.join("train_step.json")).unwrap();
+    assert_eq!(step.param_order, manifest.param_order);
+    // train inputs = params + velocities + x, y, lr
+    assert_eq!(
+        step.inputs.len(),
+        2 * step.param_order.len() + 3,
+        "train_step signature"
+    );
+    assert_eq!(
+        step.outputs.len(),
+        2 * step.param_order.len() + 1,
+        "train_step outputs"
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_trained_params() {
+    let Some(dir) = artifacts() else { return };
+    let config = TrainConfig {
+        steps: 3,
+        lr0: 0.05,
+        eval_every: 0,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(&dir, config.clone()).unwrap();
+    for s in 0..3 {
+        trainer.step(s).unwrap();
+    }
+    let tmp = std::env::temp_dir().join("rbgp_ckpt_test.json");
+    trainer.save_checkpoint(&tmp).unwrap();
+    let trained = trainer.params.clone();
+    let mut fresh = Trainer::new(&dir, config).unwrap();
+    assert_ne!(fresh.params[1].data, trained[1].data, "fresh != trained");
+    fresh.load_checkpoint(&tmp).unwrap();
+    for (a, b) in fresh.params.iter().zip(&trained) {
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+    let _ = std::fs::remove_file(tmp);
+}

@@ -1,0 +1,151 @@
+//! Cross-module integration tests for the paper's theory claims: Theorem 1,
+//! the Figure-3 succinctness example, connectivity of RBGP masks, and the
+//! cost-model ↔ measured-kernel agreement on orderings.
+
+use rbgp::gpusim::{estimate, Device, KernelKind, SdmmShape};
+use rbgp::graph::{product_many, ramanujan, spectral};
+use rbgp::kernels::dense::gemm_blocked;
+use rbgp::kernels::rbgp4mm::rbgp4mm;
+use rbgp::sparsity::rbgp4::{GraphSpec, Rbgp4Config, Rbgp4Mask, Rbgp4Matrix};
+use rbgp::util::rng::Rng;
+use rbgp::util::timing::{bench_fn, BenchConfig};
+
+/// Theorem 1: ideal-gap / product-gap ratio approaches 1 as n grows.
+#[test]
+fn theorem1_ratio_improves_with_n() {
+    let mut rng = Rng::new(2026);
+    let sp = 0.5;
+    let mut ratios = Vec::new();
+    for n in [8usize, 16, 32] {
+        let d = ((1.0 - sp) * n as f64).round() as usize;
+        let g1 = ramanujan::generate_best_effort(n, n, sp, &mut rng, 64)
+            .unwrap()
+            .0
+            .graph;
+        let g2 = ramanujan::generate_best_effort(n, n, sp, &mut rng, 64)
+            .unwrap()
+            .0
+            .graph;
+        let p = product_many(&[&g1, &g2]).unwrap();
+        let s = spectral::spectrum(&p, rng.next_u64());
+        let d2 = (d * d) as f64;
+        let ideal = d2 - 2.0 * (d2 - 1.0).sqrt();
+        ratios.push(ideal / s.gap());
+        // λ1 of the product is exactly d² (biregular product).
+        assert!((s.lambda1 - d2).abs() < 1e-9 * d2);
+        // λ2(product) = d · λ2(base_max) ≤ product of bound-level λ2's —
+        // the gap is within a constant of ideal at every size.
+        assert!(
+            ratios.last().unwrap() > &0.3,
+            "gap ratio collapsed at n={n}: {ratios:?}"
+        );
+    }
+    // The ratio approaches 1 *from above* as n grows (Theorem 1's limit).
+    assert!(
+        ratios[2] < ratios[0],
+        "ratio did not improve with n: {ratios:?}"
+    );
+    assert!(*ratios.last().unwrap() >= 1.0 - 1e-9, "ratio below 1: {ratios:?}");
+}
+
+/// The eigenvalue-product identity used in Theorem 1's proof.
+#[test]
+fn product_lambda2_is_product_of_spectra() {
+    let mut rng = Rng::new(9);
+    let g1 = ramanujan::generate_best_effort(16, 16, 0.5, &mut rng, 64)
+        .unwrap()
+        .0
+        .graph;
+    let g2 = ramanujan::generate_best_effort(16, 16, 0.5, &mut rng, 64)
+        .unwrap()
+        .0
+        .graph;
+    let s1 = spectral::spectrum(&g1, 1);
+    let s2 = spectral::spectrum(&g2, 2);
+    let p = product_many(&[&g1, &g2]).unwrap();
+    let sp = spectral::spectrum(&p, 3);
+    // λ2(G) = max(λ1·λ2', λ2·λ1') for the product of two bipartite graphs.
+    let expect = (s1.lambda1 * s2.lambda2).max(s1.lambda2 * s2.lambda1);
+    assert!(
+        (sp.lambda2 - expect).abs() < 1e-4 * expect.max(1.0),
+        "λ2(product) {} vs expected {}",
+        sp.lambda2,
+        expect
+    );
+}
+
+/// RBGP masks with sparse-but-Ramanujan base graphs stay connected —
+/// the §4 information-flow property.
+#[test]
+fn rbgp4_mask_is_connected() {
+    let mut rng = Rng::new(55);
+    let cfg = Rbgp4Config {
+        // Degrees must exceed 2: at d = 2 the Ramanujan bound is vacuous
+        // (λ2 ≤ 2 = λ1) and disconnected unions of cycles can pass it.
+        go: GraphSpec::new(8, 8, 0.5),
+        gr: (2, 2),
+        gi: GraphSpec::new(8, 8, 0.5),
+        gb: (1, 1),
+    };
+    let mask = Rbgp4Mask::sample(cfg, &mut rng).unwrap();
+    assert!(mask.product_graph().is_connected());
+}
+
+/// The measured CPU kernels and the V100 cost model must agree on the
+/// *direction* of the Table-2 headline: at high sparsity RBGP4 beats dense.
+#[test]
+fn measured_and_model_agree_rbgp4_beats_dense_at_high_sparsity() {
+    let n = 512usize;
+    let cfg = Rbgp4Config {
+        go: GraphSpec::new(4, 16, 0.75),
+        gr: (4, 1),
+        gi: GraphSpec::new(32, 32, 0.5),
+        gb: (1, 1),
+    };
+    assert_eq!((cfg.rows(), cfg.cols()), (n, n));
+    let mut rng = Rng::new(77);
+    let mask = Rbgp4Mask::sample(cfg, &mut rng).unwrap();
+    let w = Rbgp4Matrix::random(mask, &mut rng);
+    let i = rng.normal_vec_f32(n * n, 1.0);
+    let mut o = vec![0.0f32; n * n];
+    let bench = BenchConfig {
+        warmup_iters: 1,
+        samples: 5,
+        max_total: std::time::Duration::from_secs(10),
+    };
+    let t_sparse = bench_fn(&bench, || {
+        rbgp4mm(&w, &i, &mut o, n);
+        std::hint::black_box(&o);
+    })
+    .median;
+    let wd = rng.normal_vec_f32(n * n, 1.0);
+    let t_dense = bench_fn(&bench, || {
+        gemm_blocked(&wd, &i, &mut o, n, n, n);
+        std::hint::black_box(&o);
+    })
+    .median;
+    assert!(
+        t_sparse < t_dense,
+        "measured: rbgp4mm {t_sparse} !< dense {t_dense} at 87.5% sparsity"
+    );
+    let dev = Device::v100();
+    let shape = SdmmShape { m: n, k: n, n };
+    let m_sparse = estimate(&dev, shape, &KernelKind::Rbgp4 { config: cfg }).t_total;
+    let m_dense = estimate(&dev, shape, &KernelKind::DenseCublas).t_total;
+    assert!(m_sparse < m_dense, "model disagrees with measurement");
+}
+
+/// Figure 3's exact numbers through the public API.
+#[test]
+fn figure3_exact_succinctness() {
+    let mut rng = Rng::new(1);
+    let g1 = rbgp::graph::BipartiteGraph::random_biregular(4, 4, 2, &mut rng).unwrap();
+    let g2 = rbgp::graph::BipartiteGraph::identity(2);
+    let g3 = rbgp::graph::BipartiteGraph::random_biregular(4, 4, 2, &mut rng).unwrap();
+    let g4 = rbgp::graph::BipartiteGraph::complete(2, 2);
+    let p = product_many(&[&g1, &g2, &g3, &g4]).unwrap();
+    assert_eq!(p.num_edges(), 512);
+    let base = g1.num_edges() + g2.num_edges() + g3.num_edges() + g4.num_edges();
+    assert_eq!(base, 22);
+    assert!(512 / base >= 23);
+}

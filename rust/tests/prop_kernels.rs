@@ -1,0 +1,189 @@
+//! Property-based tests over the kernel and sparsity substrates using the
+//! in-house harness (`util::prop`): randomized RBGP4 configs, shapes, and
+//! seeds, each case checked against the dense oracle or a structural
+//! invariant.
+
+use rbgp::graph::product_many;
+use rbgp::graph::BipartiteGraph;
+use rbgp::kernels::bsr_sdmm::bsr_sdmm;
+use rbgp::kernels::csr_sdmm::csr_sdmm;
+use rbgp::kernels::dense::gemm_naive;
+use rbgp::kernels::rbgp4mm::{rbgp4mm, rbgp4mm_parallel};
+use rbgp::sparsity::bsr::BsrMatrix;
+use rbgp::sparsity::csr::CsrMatrix;
+use rbgp::sparsity::pattern;
+use rbgp::sparsity::rbgp4::{GraphSpec, Rbgp4Config, Rbgp4Mask, Rbgp4Matrix};
+use rbgp::util::prop::{check, gen};
+use rbgp::util::rng::Rng;
+use rbgp::{prop_assert, prop_assert_eq};
+
+/// A feasible dyadic sparsity for an (nu × nv) base graph.
+fn feasible_sp(rng: &mut Rng, nu: usize, nv: usize) -> f64 {
+    let mut opts = vec![0.0];
+    for (k, sp) in [(1u32, 0.5), (2, 0.75)] {
+        if nu % (1 << k) == 0 && nv % (1 << k) == 0 {
+            opts.push(sp);
+        }
+    }
+    opts[rng.below_usize(opts.len())]
+}
+
+fn random_config(rng: &mut Rng) -> Rbgp4Config {
+    let go_u = gen::pow2(rng, 2, 8);
+    let go_v = gen::pow2(rng, 2, 8);
+    let gi_u = gen::pow2(rng, 4, 8);
+    let gi_v = gen::pow2(rng, 4, 8);
+    Rbgp4Config {
+        go: GraphSpec::new(go_u, go_v, feasible_sp(rng, go_u, go_v)),
+        gr: (gen::pow2(rng, 1, 4), gen::pow2(rng, 1, 2)),
+        gi: GraphSpec::new(gi_u, gi_v, feasible_sp(rng, gi_u, gi_v)),
+        gb: (gen::pow2(rng, 1, 2), gen::pow2(rng, 1, 2)),
+    }
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol * (1.0 + y.abs()) {
+            return Err(format!("idx {i}: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_rbgp4mm_matches_dense_oracle() {
+    check("rbgp4mm == dense oracle", 30, |rng| {
+        let cfg = random_config(rng);
+        let mask = Rbgp4Mask::sample(cfg, rng).map_err(|e| e.to_string())?;
+        let w = Rbgp4Matrix::random(mask, rng);
+        let (m, k) = (w.mask.rows(), w.mask.cols());
+        let n = gen::range(rng, 1, 40);
+        let i = rng.normal_vec_f32(k * n, 1.0);
+        let mut o = vec![0.0; m * n];
+        rbgp4mm(&w, &i, &mut o, n);
+        let mut oracle = vec![0.0; m * n];
+        gemm_naive(&w.to_dense(), &i, &mut oracle, m, k, n);
+        close(&o, &oracle, 1e-3)?;
+        // Parallel agrees too (tolerance: different summation order).
+        let mut op = vec![0.0; m * n];
+        rbgp4mm_parallel(&w, &i, &mut op, n, 1 + rng.below_usize(8));
+        close(&op, &oracle, 1e-3)
+    });
+}
+
+#[test]
+fn prop_csr_bsr_match_dense_oracle() {
+    check("csr/bsr == dense oracle", 30, |rng| {
+        let m = 4 * gen::range(rng, 2, 12);
+        let k = 4 * gen::range(rng, 2, 12);
+        let n = gen::range(rng, 1, 24);
+        let sp = [0.5, 0.75][rng.below_usize(2)];
+        let i = rng.normal_vec_f32(k * n, 1.0);
+
+        let csr = CsrMatrix::random_row_uniform(m, k, sp, rng);
+        let mut o = vec![0.0; m * n];
+        csr_sdmm(&csr, &i, &mut o, n);
+        let mut oracle = vec![0.0; m * n];
+        gemm_naive(&csr.to_dense(), &i, &mut oracle, m, k, n);
+        close(&o, &oracle, 1e-3)?;
+
+        let bsr = BsrMatrix::random_block_uniform(m, k, 4, 4, sp, rng);
+        let mut o2 = vec![0.0; m * n];
+        bsr_sdmm(&bsr, &i, &mut o2, n);
+        let mut oracle2 = vec![0.0; m * n];
+        gemm_naive(&bsr.to_dense(), &i, &mut oracle2, m, k, n);
+        close(&o2, &oracle2, 1e-3)
+    });
+}
+
+#[test]
+fn prop_mask_is_rcubs_with_correct_counts() {
+    check("RBGP4 mask structure", 20, |rng| {
+        let cfg = random_config(rng);
+        let mask = Rbgp4Mask::sample(cfg, rng).map_err(|e| e.to_string())?;
+        let dense = mask.dense();
+        let (rows, cols) = (mask.rows(), mask.cols());
+        // Exactly row_nnz non-zeros per row (biregular product).
+        for u in 0..rows {
+            let nnz = dense[u * cols..(u + 1) * cols]
+                .iter()
+                .filter(|&&v| v != 0.0)
+                .count();
+            prop_assert_eq!(nnz, cfg.row_nnz(), "row {u} nnz");
+        }
+        // RCUBS at the config's blocking levels.
+        let levels = cfg.blocking_levels();
+        prop_assert!(
+            pattern::is_rcubs(&dense, rows, cols, &levels).map_err(|e| e.to_string())?,
+            "not RCUBS at {levels:?}"
+        );
+        // Compact round trip is lossless.
+        let w = Rbgp4Matrix::random(mask.clone(), rng);
+        let back = Rbgp4Matrix::from_dense(mask, &w.to_dense()).map_err(|e| e.to_string())?;
+        prop_assert_eq!(&w.data, &back.data, "compact roundtrip");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_product_edge_count_and_degrees_multiply() {
+    check("⊗ multiplies edges and degrees", 25, |rng| {
+        let mk = |rng: &mut Rng| -> Result<BipartiteGraph, String> {
+            // Powers of two with dl a multiple of nv/nu guarantee
+            // integral right degree.
+            let nu = gen::pow2(rng, 2, 8);
+            let nv = gen::pow2(rng, 2, 8);
+            let dl = ((nv / nu).max(1) * gen::pow2(rng, 1, 2)).min(nv);
+            BipartiteGraph::random_biregular(nu, nv, dl, rng).map_err(|e| e.to_string())
+        };
+        let g1 = mk(rng)?;
+        let g2 = mk(rng)?;
+        let p = product_many(&[&g1, &g2]).map_err(|e| e.to_string())?;
+        prop_assert_eq!(p.num_edges(), g1.num_edges() * g2.num_edges(), "edges");
+        let (d1l, d1r) = g1.degrees().map_err(|e| e.to_string())?;
+        let (d2l, d2r) = g2.degrees().map_err(|e| e.to_string())?;
+        prop_assert_eq!(
+            p.degrees().map_err(|e| e.to_string())?,
+            (d1l * d2l, d1r * d2r),
+            "degrees"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lift_preserves_biregularity() {
+    check("2-lift invariants", 25, |rng| {
+        let nu = gen::pow2(rng, 2, 8);
+        let nv = gen::pow2(rng, 2, 8);
+        let dl = [1usize, 2][rng.below_usize(2)].min(nv);
+        if (nu * dl) % nv != 0 {
+            return Ok(()); // infeasible draw, skip
+        }
+        let g = BipartiteGraph::random_biregular(nu, nv, dl, rng).map_err(|e| e.to_string())?;
+        let gl = rbgp::graph::lift::lift2(&g, rng);
+        prop_assert_eq!(gl.nu, 2 * g.nu, "nu doubles");
+        prop_assert_eq!(gl.num_edges(), 2 * g.num_edges(), "edges double");
+        prop_assert_eq!(
+            gl.degrees().map_err(|e| e.to_string())?,
+            g.degrees().map_err(|e| e.to_string())?,
+            "degrees preserved"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_succinct_index_always_smaller() {
+    check("succinct index < generic adjacency", 20, |rng| {
+        let cfg = random_config(rng);
+        let mask = Rbgp4Mask::sample(cfg, rng).map_err(|e| e.to_string())?;
+        prop_assert!(
+            mask.succinct_index_elems() <= mask.generic_index_elems(),
+            "succinct {} > generic {}",
+            mask.succinct_index_elems(),
+            mask.generic_index_elems()
+        );
+        Ok(())
+    });
+}
