@@ -1,78 +1,143 @@
-//! Microbenchmarks of every SDMM kernel variant — the perf-iteration
-//! harness used for EXPERIMENTS.md §Perf (L3). Reports median ± MAD so
-//! before/after comparisons between optimization steps are meaningful.
+//! Microbenchmarks of every SDMM kernel family through the `SparseKernel`
+//! trait — the perf-iteration harness used for EXPERIMENTS.md §Perf.
+//!
+//! For each registered family × batch size × thread count the harness
+//! reports three numbers (median ± MAD):
+//!
+//! * **plan**    — time to build the execution plan (`build_plan`), i.e.
+//!   the cost the plan cache amortizes away;
+//! * **execute** — time to run from a prebuilt plan (the cached hot path);
+//! * **per-call** — the historical free-function path that re-derives
+//!   structure and reallocates scratch every call (the seed baseline).
+//!
+//! Results are also written to `BENCH_kernels.json` (in the cargo package
+//! root, where `cargo bench` runs) so future PRs have a perf trajectory:
+//! each row records plan-build ms, execute ms, per-call ms, GFLOP/s of the
+//! cached path, and the cached-vs-per-call speedup.
 //!
 //! `cargo bench --bench kernels_microbench` (RBGP_BENCH_FAST=1 quick pass)
 
-use rbgp::kernels::bsr_sdmm::{bsr_sdmm, bsr_sdmm_parallel};
-use rbgp::kernels::csr_sdmm::{csr_sdmm, csr_sdmm_parallel};
-use rbgp::kernels::dense::{gemm_blocked, gemm_naive, gemm_parallel};
-use rbgp::kernels::rbgp4mm::{rbgp4mm, rbgp4mm_naive, rbgp4mm_parallel};
+use rbgp::kernels::plan::{PlanRequest, SparseMatrix};
+use rbgp::kernels::registry::KernelRegistry;
+use rbgp::kernels::{
+    bsr_sdmm, bsr_sdmm_parallel, csr_sdmm, csr_sdmm_parallel, gemm_blocked, gemm_parallel,
+    rbgp4mm, rbgp4mm_parallel,
+};
 use rbgp::sparsity::bsr::BsrMatrix;
 use rbgp::sparsity::csr::CsrMatrix;
 use rbgp::sparsity::rbgp4::{GraphSpec, Rbgp4Config, Rbgp4Mask, Rbgp4Matrix};
+use rbgp::util::json::Json;
 use rbgp::util::rng::Rng;
 use rbgp::util::threadpool::default_threads;
-use rbgp::util::timing::{bench_fn, report_row, BenchConfig};
+use rbgp::util::timing::{bench_fn, BenchConfig, BenchStats};
+
+const OUT_PATH: &str = "BENCH_kernels.json";
+
+struct Row {
+    kernel: &'static str,
+    threads: usize,
+    n: usize,
+    plan_build: BenchStats,
+    execute: BenchStats,
+    percall: BenchStats,
+    gflops: f64,
+    speedup_vs_percall: f64,
+}
+
+impl Row {
+    fn to_json(&self, m: usize, k: usize, sparsity: f64) -> Json {
+        let mut j = Json::obj();
+        j.set("kernel", self.kernel)
+            .set("threads", self.threads)
+            .set("m", m)
+            .set("k", k)
+            .set("n", self.n)
+            .set("sparsity", sparsity)
+            .set("plan_build_ms", self.plan_build.median_ms())
+            .set("execute_ms", self.execute.median_ms())
+            .set("execute_mad_ms", self.execute.mad * 1e3)
+            .set("percall_ms", self.percall.median_ms())
+            .set("gflops", self.gflops)
+            .set("speedup_vs_percall", self.speedup_vs_percall);
+        j
+    }
+
+    fn print(&self) {
+        println!(
+            "{:<10} t={:<2} n={:<5} plan {:>9.4} ms   execute {:>9.3} ms ±{:>7.3}   \
+             per-call {:>9.3} ms   {:>7.2} GFLOP/s   cached {:>5.2}x vs per-call",
+            self.kernel,
+            self.threads,
+            self.n,
+            self.plan_build.median_ms(),
+            self.execute.median_ms(),
+            self.execute.mad * 1e3,
+            self.percall.median_ms(),
+            self.gflops,
+            self.speedup_vs_percall,
+        );
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bench_family(
+    registry: &KernelRegistry,
+    cfg: &BenchConfig,
+    w: &SparseMatrix,
+    i: &[f32],
+    o: &mut [f32],
+    n: usize,
+    threads: usize,
+    percall: &mut dyn FnMut(&[f32], &mut [f32]),
+) -> Row {
+    let kernel = registry.for_matrix(w).expect("registered kernel");
+    let req = PlanRequest { n, threads };
+
+    let plan_build = bench_fn(cfg, || {
+        let plan = kernel.build_plan(w, &req).expect("plan");
+        std::hint::black_box(&plan);
+    });
+
+    let mut plan = kernel.build_plan(w, &req).expect("plan");
+    let execute = bench_fn(cfg, || {
+        kernel.execute(w, &mut plan, i, o, n).expect("execute");
+        std::hint::black_box(&o);
+    });
+
+    let percall = bench_fn(cfg, || {
+        percall(i, o);
+        std::hint::black_box(&o);
+    });
+
+    Row {
+        kernel: kernel.name(),
+        threads,
+        n,
+        gflops: w.flops(n) / execute.median / 1e9,
+        speedup_vs_percall: percall.median / execute.median,
+        plan_build,
+        execute,
+        percall,
+    }
+}
 
 fn main() {
-    let n = 1024usize; // square SDMM at n³
+    let (m, k) = (1024usize, 1024usize);
     let sp = 0.875;
-    let threads = default_threads();
+    let par = default_threads();
     let cfg = BenchConfig::from_env();
     let mut rng = Rng::new(3);
 
-    println!("kernels microbench — SDMM {n}³, sparsity {:.1}%, {threads} threads\n", sp * 100.0);
+    println!(
+        "kernels microbench — SDMM ({m}×{k})·({k}×n), sparsity {:.1}%, parallel = {par} threads\n",
+        sp * 100.0
+    );
 
-    let i = rng.normal_vec_f32(n * n, 1.0);
-    let mut o = vec![0.0f32; n * n];
-
-    // Dense family.
-    let wd = rng.normal_vec_f32(n * n, 1.0);
-    if n <= 512 {
-        let s = bench_fn(&cfg, || {
-            gemm_naive(&wd, &i, &mut o, n, n, n);
-            std::hint::black_box(&o);
-        });
-        println!("{}", report_row("dense/naive", &s));
-    }
-    let s = bench_fn(&cfg, || {
-        gemm_blocked(&wd, &i, &mut o, n, n, n);
-        std::hint::black_box(&o);
-    });
-    println!("{}", report_row("dense/blocked (1 thread)", &s));
-    let s = bench_fn(&cfg, || {
-        gemm_parallel(&wd, &i, &mut o, n, n, n, threads);
-        std::hint::black_box(&o);
-    });
-    println!("{}", report_row("dense/parallel", &s));
-
-    // Unstructured CSR.
-    let csr = CsrMatrix::random_row_uniform(n, n, sp, &mut rng);
-    let s = bench_fn(&cfg, || {
-        csr_sdmm(&csr, &i, &mut o, n);
-        std::hint::black_box(&o);
-    });
-    println!("{}", report_row("csr/serial", &s));
-    let s = bench_fn(&cfg, || {
-        csr_sdmm_parallel(&csr, &i, &mut o, n, threads);
-        std::hint::black_box(&o);
-    });
-    println!("{}", report_row("csr/parallel", &s));
-
-    // Block BSR (4,4).
-    let bsr = BsrMatrix::random_block_uniform(n, n, 4, 4, sp, &mut rng);
-    let s = bench_fn(&cfg, || {
-        bsr_sdmm(&bsr, &i, &mut o, n);
-        std::hint::black_box(&o);
-    });
-    println!("{}", report_row("bsr/serial", &s));
-    let s = bench_fn(&cfg, || {
-        bsr_sdmm_parallel(&bsr, &i, &mut o, n, threads);
-        std::hint::black_box(&o);
-    });
-    println!("{}", report_row("bsr/parallel", &s));
-
+    // Weight operands, one per family, all at the same shape/sparsity
+    // (dense ignores sparsity, as cuBLAS computes every element).
+    let dense = SparseMatrix::dense(rng.normal_vec_f32(m * k, 1.0), m, k);
+    let csr = SparseMatrix::Csr(CsrMatrix::random_row_uniform(m, k, sp, &mut rng));
+    let bsr = SparseMatrix::Bsr(BsrMatrix::random_block_uniform(m, k, 4, 4, sp, &mut rng));
     // RBGP4 at the same total sparsity (best Table-2 split: G_o-heavy).
     let rb_cfg = Rbgp4Config {
         go: GraphSpec::new(8, 32, 0.75),
@@ -82,20 +147,79 @@ fn main() {
     };
     assert!((rb_cfg.sparsity() - sp).abs() < 1e-9);
     let mask = Rbgp4Mask::sample(rb_cfg, &mut rng).expect("mask");
-    let w = Rbgp4Matrix::random(mask, &mut rng);
-    let s = bench_fn(&cfg, || {
-        rbgp4mm_naive(&w, &i, &mut o, n);
-        std::hint::black_box(&o);
-    });
-    println!("{}", report_row("rbgp4mm/naive", &s));
-    let s = bench_fn(&cfg, || {
-        rbgp4mm(&w, &i, &mut o, n);
-        std::hint::black_box(&o);
-    });
-    println!("{}", report_row("rbgp4mm/packed (1 thread)", &s));
-    let s = bench_fn(&cfg, || {
-        rbgp4mm_parallel(&w, &i, &mut o, n, threads);
-        std::hint::black_box(&o);
-    });
-    println!("{}", report_row("rbgp4mm/parallel", &s));
+    let rbgp = SparseMatrix::Rbgp4(Rbgp4Matrix::random(mask, &mut rng));
+
+    let registry = KernelRegistry::builtin();
+    let ns = [256usize, 1024];
+    let thread_counts = [1usize, par];
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &n in &ns {
+        let i = rng.normal_vec_f32(k * n, 1.0);
+        let mut o = vec![0.0f32; m * n];
+        for &t in &thread_counts {
+            for w in [&dense, &csr, &bsr, &rbgp] {
+                // The per-call baseline: the seed's free-function path that
+                // re-derives structure / reallocates scratch every call.
+                let mut percall: Box<dyn FnMut(&[f32], &mut [f32])> = match w {
+                    SparseMatrix::Dense { data, rows, cols } => {
+                        let (data, rows, cols) = (data.clone(), *rows, *cols);
+                        if t > 1 {
+                            Box::new(move |i, o| gemm_parallel(&data, i, o, rows, cols, n, t))
+                        } else {
+                            Box::new(move |i, o| gemm_blocked(&data, i, o, rows, cols, n))
+                        }
+                    }
+                    SparseMatrix::Csr(mtx) => {
+                        let mtx = mtx.clone();
+                        if t > 1 {
+                            Box::new(move |i, o| csr_sdmm_parallel(&mtx, i, o, n, t))
+                        } else {
+                            Box::new(move |i, o| csr_sdmm(&mtx, i, o, n))
+                        }
+                    }
+                    SparseMatrix::Bsr(mtx) => {
+                        let mtx = mtx.clone();
+                        if t > 1 {
+                            Box::new(move |i, o| bsr_sdmm_parallel(&mtx, i, o, n, t))
+                        } else {
+                            Box::new(move |i, o| bsr_sdmm(&mtx, i, o, n))
+                        }
+                    }
+                    SparseMatrix::Rbgp4(mtx) => {
+                        let mtx = mtx.clone();
+                        if t > 1 {
+                            Box::new(move |i, o| rbgp4mm_parallel(&mtx, i, o, n, t))
+                        } else {
+                            Box::new(move |i, o| rbgp4mm(&mtx, i, o, n))
+                        }
+                    }
+                };
+                let row = bench_family(&registry, &cfg, w, &i, &mut o, n, t, percall.as_mut());
+                row.print();
+                rows.push(row);
+            }
+            println!();
+        }
+    }
+
+    // Persist the trajectory for future PRs.
+    let mut doc = Json::obj();
+    let mut meta = Json::obj();
+    meta.set("m", m)
+        .set("k", k)
+        .set("sparsity", sp)
+        .set("parallel_threads", par)
+        .set(
+            "fast_mode",
+            std::env::var("RBGP_BENCH_FAST").map(|v| v == "1").unwrap_or(false),
+        );
+    doc.set("bench", "kernels_microbench").set("config", meta).set(
+        "rows",
+        Json::Arr(rows.iter().map(|r| r.to_json(m, k, sp)).collect()),
+    );
+    match std::fs::write(OUT_PATH, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote {OUT_PATH} ({} rows)", rows.len()),
+        Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),
+    }
 }

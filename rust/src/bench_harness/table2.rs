@@ -4,11 +4,15 @@
 //! Columns: the paper's V100 measurement, our V100 cost-model estimate, and
 //! the *measured* Rust CPU kernel (optionally at a reduced size — the
 //! relative ordering is the claim under test, not absolute milliseconds).
+//! Measured cells execute through the `SparseKernel` plan layer with the
+//! plan built outside the timed region (see [`measure_kernel`]); model and
+//! measurement dispatch off the same `Pattern` key
+//! ([`KernelKind::pattern`]).
 
 use crate::bench_harness::report::{ms, speedup, Table};
 use crate::gpusim::{estimate, Device, KernelKind, SdmmShape};
-use crate::kernels::dense::gemm_parallel;
-use crate::kernels::rbgp4mm::rbgp4mm_parallel;
+use crate::kernels::plan::{PlanRequest, SparseMatrix};
+use crate::kernels::registry::KernelRegistry;
 use crate::sparsity::rbgp4::{GraphSpec, Rbgp4Config, Rbgp4Mask, Rbgp4Matrix};
 use crate::util::rng::Rng;
 use crate::util::threadpool::default_threads;
@@ -105,18 +109,32 @@ pub fn run(measure_n: usize, seed: u64) -> Table {
     table
 }
 
-/// Median time of the parallel blocked dense GEMM at n³ (cuBLAS stand-in).
-pub fn measure_dense(n: usize, rng: &mut Rng) -> f64 {
-    let w = rng.normal_vec_f32(n * n, 1.0);
-    let i = rng.normal_vec_f32(n * n, 1.0);
-    let mut o = vec![0.0f32; n * n];
+/// Median *execute* time of `w` against an (n-col) input through the
+/// `SparseKernel` trait: the plan is built once outside the timed region —
+/// what the serving hot path pays per call — and the measured column of
+/// Tables 2/3 therefore reports the amortized number the paper's claim is
+/// about, not per-call structure rebuilds.
+pub fn measure_kernel(w: &SparseMatrix, n: usize, rng: &mut Rng) -> f64 {
+    let registry = KernelRegistry::builtin();
+    let kernel = registry.for_matrix(w).expect("registered kernel");
     let threads = default_threads();
-    let cfg = BenchConfig::from_env();
-    bench_fn(&cfg, || {
-        gemm_parallel(&w, &i, &mut o, n, n, n, threads);
+    let i = rng.normal_vec_f32(w.cols() * n, 1.0);
+    let mut o = vec![0.0f32; w.rows() * n];
+    let mut plan = kernel
+        .build_plan(w, &PlanRequest { n, threads })
+        .expect("plan");
+    let bench = BenchConfig::from_env();
+    bench_fn(&bench, || {
+        kernel.execute(w, &mut plan, &i, &mut o, n).expect("execute");
         std::hint::black_box(&o);
     })
     .median
+}
+
+/// Median time of the parallel blocked dense GEMM at n³ (cuBLAS stand-in).
+pub fn measure_dense(n: usize, rng: &mut Rng) -> f64 {
+    let w = SparseMatrix::dense(rng.normal_vec_f32(n * n, 1.0), n, n);
+    measure_kernel(&w, n, rng)
 }
 
 /// Median time of the parallel RBGP4MM kernel for `cfg` tiled to (n × n)·(n × n).
@@ -124,16 +142,8 @@ pub fn measure_rbgp4(cfg: Rbgp4Config, n: usize, rng: &mut Rng) -> f64 {
     assert_eq!(cfg.rows(), n, "config rows {} != {n}", cfg.rows());
     assert_eq!(cfg.cols(), n, "config cols {} != {n}", cfg.cols());
     let mask = Rbgp4Mask::sample(cfg, rng).expect("valid config");
-    let w = Rbgp4Matrix::random(mask, rng);
-    let i = rng.normal_vec_f32(n * n, 1.0);
-    let mut o = vec![0.0f32; n * n];
-    let threads = default_threads();
-    let bench = BenchConfig::from_env();
-    bench_fn(&bench, || {
-        rbgp4mm_parallel(&w, &i, &mut o, n, threads);
-        std::hint::black_box(&o);
-    })
-    .median
+    let w = SparseMatrix::Rbgp4(Rbgp4Matrix::random(mask, rng));
+    measure_kernel(&w, n, rng)
 }
 
 #[cfg(test)]

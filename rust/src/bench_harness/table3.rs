@@ -1,6 +1,11 @@
 //! Table 3: effect of row repetition (sizes of complete graphs `G_r`, `G_b`)
 //! on SDMM runtime. `G_t = G_r ⊗ G_i ⊗ G_b` is held at (128, 32) and
 //! `Sp(G_o)` at 50 %, as in the paper.
+//!
+//! The measured column goes through [`measure_rbgp4`], i.e. the
+//! `SparseKernel` plan path: each configuration's execution plan is built
+//! once outside the timed region, so the row-repetition effect is measured
+//! on the amortized hot path.
 
 use crate::bench_harness::report::{ms, Table};
 use crate::bench_harness::table2::measure_rbgp4;

@@ -1,6 +1,8 @@
-//! L3 coordinator: the drivers that own the process — a training loop and a
-//! batched inference server — both executing AOT artifacts through
-//! [`crate::runtime`] with no Python anywhere near the request path.
+//! L3 coordinator: the drivers that own the process — training loops and a
+//! batched inference server. The native paths execute through the
+//! plan-cached [`crate::kernels`] layer; the `xla` feature adds the
+//! PJRT-backed trainer and serving backend that execute AOT artifacts
+//! through [`crate::runtime`] (Python never runs at request time).
 
 pub mod config;
 pub mod metrics;
@@ -9,5 +11,7 @@ pub mod trainer;
 
 pub use config::TrainConfig;
 pub use metrics::{LatencyStats, Metrics};
-pub use server::{InferenceServer, ServerConfig};
+pub use server::{BatchModel, InferenceServer, NativeSparseModel, ServerConfig};
+pub use trainer::NativeTrainer;
+#[cfg(feature = "xla")]
 pub use trainer::Trainer;

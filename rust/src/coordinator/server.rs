@@ -1,16 +1,25 @@
 //! Batched inference server: the L3 request path.
 //!
-//! One worker thread owns the compiled `forward` executable (PJRT handles
-//! are not `Send`-safe to share); client handles submit single samples over
-//! an mpsc channel. The worker *dynamically batches*: it drains up to the
-//! artifact's batch size, waiting at most `max_wait` for stragglers, pads
+//! One worker thread owns the model; client handles submit single samples
+//! over an mpsc channel. The worker *dynamically batches*: it drains up to
+//! the model's batch size, waiting at most `max_wait` for stragglers, pads
 //! the final partial batch, executes once, and scatters per-sample logits
 //! back through per-request channels. Latency/throughput metrics accumulate
 //! in a shared store.
+//!
+//! The batcher is generic over [`BatchModel`]. Two backends exist:
+//!
+//! * [`NativeSparseModel`] — the default build's backend: a sparse MLP
+//!   executed through the [`SparseKernel`](crate::kernels::registry::SparseKernel)
+//!   plan layer. Plans come from a shared [`PlanCache`], so every flush —
+//!   full or padded — reuses the structure derived once at warm-up instead
+//!   of rebuilding `local_cols`/scratch per batch.
+//! * the XLA backend (feature `xla`) — compiles an AOT artifact on a PJRT
+//!   client (handles are not `Send`, so the worker compiles it itself).
 
 use crate::coordinator::metrics::{LatencyStats, Metrics};
-use crate::runtime::executor::{Executor, HostTensor};
-use std::path::PathBuf;
+use crate::kernels::plan::{KernelPlan, PlanCache, PlanRequest, SparseMatrix};
+use crate::kernels::registry::KernelRegistry;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -22,7 +31,7 @@ pub struct ServerConfig {
     /// Max time the batcher waits to fill a batch before flushing.
     pub max_wait: Duration,
     /// Optional trained checkpoint to serve (JSON, `Trainer::save_checkpoint`
-    /// schema); defaults to the exported init parameters.
+    /// schema); defaults to the exported init parameters. XLA backend only.
     pub checkpoint: Option<std::path::PathBuf>,
 }
 
@@ -33,6 +42,16 @@ impl Default for ServerConfig {
             checkpoint: None,
         }
     }
+}
+
+/// What the batcher needs from a model: fixed batch geometry plus a
+/// full-batch forward. `x` is `(batch × in_dim)` row-major; the result is
+/// `(batch × classes)` row-major.
+pub trait BatchModel: Send {
+    fn batch(&self) -> usize;
+    fn in_dim(&self) -> usize;
+    fn classes(&self) -> usize;
+    fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>>;
 }
 
 struct Request {
@@ -52,53 +71,28 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Start the worker thread. PJRT handles are not `Send`, so the worker
-    /// compiles the artifact itself and reports readiness (or the compile
-    /// error) back over a oneshot channel before the constructor returns.
-    pub fn start(artifacts_dir: PathBuf, config: ServerConfig) -> anyhow::Result<InferenceServer> {
+    /// Start the worker thread around any [`BatchModel`]. The factory runs
+    /// *on* the worker thread (some backends — PJRT — own handles that are
+    /// not `Send`); its result (or error) is reported back before this
+    /// constructor returns.
+    pub fn start_model<F>(factory: F, config: ServerConfig) -> anyhow::Result<InferenceServer>
+    where
+        F: FnOnce() -> anyhow::Result<Box<dyn BatchModel>> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<(usize, usize, usize)>>();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let worker_metrics = Arc::clone(&metrics);
         thread::Builder::new()
             .name("rbgp-serve".into())
-            .spawn(move || {
-                let init = || -> anyhow::Result<(Executor, Vec<HostTensor>, usize, usize, usize)> {
-                    let exe = Executor::compile(&artifacts_dir, "forward")?;
-                    let meta = &exe.artifact.meta;
-                    let batch = meta
-                        .batch()
-                        .ok_or_else(|| anyhow::anyhow!("forward metadata missing batch"))?;
-                    let in_dim = meta.raw.req_usize("in_dim")?;
-                    let classes = meta.raw.req_usize("classes")?;
-                    // Parameters served: a trained checkpoint when given,
-                    // else the exported init values.
-                    let params_path = config
-                        .checkpoint
-                        .clone()
-                        .unwrap_or_else(|| artifacts_dir.join("init_params.json"));
-                    let init_text = std::fs::read_to_string(&params_path)?;
-                    let init = crate::util::json::Json::parse(&init_text)?;
-                    let mut params = Vec::new();
-                    for (idx, name) in meta.param_order.iter().enumerate() {
-                        let sig = &meta.inputs[idx];
-                        let vals: Vec<f32> = init
-                            .req_arr(name)?
-                            .iter()
-                            .map(|v| v.as_f64().unwrap_or(0.0) as f32)
-                            .collect();
-                        params.push(HostTensor::new(vals, &sig.shape));
-                    }
-                    Ok((exe, params, batch, in_dim, classes))
-                };
-                match init() {
-                    Ok((exe, params, batch, in_dim, classes)) => {
-                        let _ = ready_tx.send(Ok((batch, in_dim, classes)));
-                        worker_loop(exe, params, batch, in_dim, classes, config, rx, worker_metrics);
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                    }
+            .spawn(move || match factory() {
+                Ok(mut model) => {
+                    let dims = (model.batch(), model.in_dim(), model.classes());
+                    let _ = ready_tx.send(Ok(dims));
+                    worker_loop(model.as_mut(), config, rx, worker_metrics);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
                 }
             })?;
         let (batch, in_dim, classes) = ready_rx
@@ -111,6 +105,24 @@ impl InferenceServer {
             batch,
             metrics,
         })
+    }
+
+    /// Start serving a compiled AOT artifact on the PJRT client (feature
+    /// `xla`). The worker compiles the artifact itself and reports
+    /// readiness (or the compile error) back before the constructor returns.
+    #[cfg(feature = "xla")]
+    pub fn start(
+        artifacts_dir: std::path::PathBuf,
+        config: ServerConfig,
+    ) -> anyhow::Result<InferenceServer> {
+        let checkpoint = config.checkpoint.clone();
+        InferenceServer::start_model(
+            move || {
+                let model = xla_backend::XlaModel::load(&artifacts_dir, checkpoint)?;
+                Ok(Box::new(model) as Box<dyn BatchModel>)
+            },
+            config,
+        )
     }
 
     /// Submit one sample; returns a receiver that yields the logits.
@@ -149,17 +161,16 @@ impl InferenceServer {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    exe: Executor,
-    params: Vec<HostTensor>,
-    batch: usize,
-    in_dim: usize,
-    classes: usize,
+    model: &mut dyn BatchModel,
     config: ServerConfig,
     rx: mpsc::Receiver<Request>,
     metrics: Arc<Mutex<Metrics>>,
 ) {
+    let (batch, in_dim, classes) = (model.batch(), model.in_dim(), model.classes());
+    // One padded batch buffer reused across flushes (the model executes
+    // from cached plans; the batcher should not allocate per flush either).
+    let mut x = vec![0.0f32; batch * in_dim];
     loop {
         // Block for the first request; then drain greedily with deadline.
         let first = match rx.recv() {
@@ -180,22 +191,17 @@ fn worker_loop(
             }
         }
 
-        // Pad to the artifact batch and execute.
-        let mut x = vec![0.0f32; batch * in_dim];
+        // Pad to the model batch and execute.
+        x.fill(0.0);
         for (s, req) in pending.iter().enumerate() {
             x[s * in_dim..(s + 1) * in_dim].copy_from_slice(&req.x);
         }
-        let mut inputs = params.clone();
-        inputs.push(HostTensor::new(x, &[batch, in_dim]));
-        let result = exe.run(&inputs);
-
-        match result {
-            Ok(out) => {
-                let logits = &out[0];
+        match model.forward(&x) {
+            Ok(logits) => {
                 let mut m = metrics.lock().unwrap();
                 m.record_batch();
                 for (s, req) in pending.into_iter().enumerate() {
-                    let row = logits.data[s * classes..(s + 1) * classes].to_vec();
+                    let row = logits[s * classes..(s + 1) * classes].to_vec();
                     m.record_latency(req.enqueued.elapsed());
                     let _ = req.respond.send(Ok(row));
                 }
@@ -207,5 +213,371 @@ fn worker_loop(
                 }
             }
         }
+    }
+}
+
+/// The native serving backend: a two-layer sparse MLP
+/// (`x → W1 (sparse) → ReLU → W2 → logits`) executed through the
+/// [`SparseKernel`](crate::kernels::registry::SparseKernel) plan layer.
+/// All scratch is preallocated; both layers execute from the shared
+/// [`PlanCache`], so a warmed model's forward performs no allocation and no
+/// structure derivation regardless of how the batcher flushes.
+pub struct NativeSparseModel {
+    w1: SparseMatrix,
+    b1: Vec<f32>,
+    w2: SparseMatrix,
+    b2: Vec<f32>,
+    batch: usize,
+    threads: usize,
+    registry: KernelRegistry,
+    cache: Arc<PlanCache>,
+    // Plan handles resolved once (lazily, or eagerly via `warm`) so the
+    // per-flush forward neither re-hashes the matrix structure nor takes
+    // the cache map lock — it goes straight to the plans.
+    plan1: Option<Arc<Mutex<KernelPlan>>>,
+    plan2: Option<Arc<Mutex<KernelPlan>>>,
+    // Preallocated scratch: transposed input, hidden, logits.
+    xt: Vec<f32>,
+    hid: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl NativeSparseModel {
+    /// Build from explicit weights. `w1` is (hidden × in_dim), `w2` is
+    /// (classes × hidden); biases match the row counts.
+    pub fn new(
+        w1: SparseMatrix,
+        b1: Vec<f32>,
+        w2: SparseMatrix,
+        b2: Vec<f32>,
+        batch: usize,
+        threads: usize,
+        cache: Arc<PlanCache>,
+    ) -> anyhow::Result<NativeSparseModel> {
+        anyhow::ensure!(batch > 0, "batch must be positive");
+        anyhow::ensure!(
+            w2.cols() == w1.rows(),
+            "layer shapes disagree: W2 cols {} != W1 rows {}",
+            w2.cols(),
+            w1.rows()
+        );
+        anyhow::ensure!(b1.len() == w1.rows(), "b1 length mismatch");
+        anyhow::ensure!(b2.len() == w2.rows(), "b2 length mismatch");
+        let (h, d, c) = (w1.rows(), w1.cols(), w2.rows());
+        Ok(NativeSparseModel {
+            w1,
+            b1,
+            w2,
+            b2,
+            batch,
+            threads: threads.max(1),
+            registry: KernelRegistry::builtin(),
+            cache,
+            plan1: None,
+            plan2: None,
+            xt: vec![0.0; d * batch],
+            hid: vec![0.0; h * batch],
+            logits: vec![0.0; c * batch],
+        })
+    }
+
+    /// A self-contained demo model on a small RBGP4 hidden layer (256→256
+    /// at 75 % sparsity) — the featureless `rbgp serve` backend and the
+    /// test fixture. Deterministic in `seed`.
+    pub fn rbgp4_demo(
+        classes: usize,
+        batch: usize,
+        threads: usize,
+        seed: u64,
+        cache: Arc<PlanCache>,
+    ) -> anyhow::Result<NativeSparseModel> {
+        use crate::sparsity::rbgp4::{GraphSpec, Rbgp4Config, Rbgp4Mask, Rbgp4Matrix};
+        use crate::util::rng::Rng;
+        let cfg = Rbgp4Config {
+            go: GraphSpec::new(8, 16, 0.5),
+            gr: (2, 1),
+            gi: GraphSpec::new(16, 16, 0.5),
+            gb: (1, 1),
+        };
+        let mut rng = Rng::new(seed);
+        let mask = Rbgp4Mask::sample(cfg, &mut rng)?;
+        let w1 = Rbgp4Matrix::random(mask, &mut rng);
+        let h = w1.mask.rows();
+        let w2scale = (1.0 / h as f64).sqrt() as f32;
+        let w2 = rng.normal_vec_f32(classes * h, w2scale);
+        NativeSparseModel::new(
+            SparseMatrix::Rbgp4(w1),
+            vec![0.0; h],
+            SparseMatrix::dense(w2, classes, h),
+            vec![0.0; classes],
+            batch,
+            threads,
+            cache,
+        )
+    }
+
+    /// Pre-build both layers' plans for this model's batch class so the
+    /// first request pays no plan-construction latency.
+    pub fn warm(&mut self) -> anyhow::Result<()> {
+        self.resolve_plans()
+    }
+
+    /// Resolve (and retain) the two layer-plan handles from the shared
+    /// cache. Idempotent; called lazily by `forward` if `warm` wasn't.
+    fn resolve_plans(&mut self) -> anyhow::Result<()> {
+        let req = PlanRequest {
+            n: self.batch,
+            threads: self.threads,
+        };
+        if self.plan1.is_none() {
+            self.plan1 = Some(self.cache.plan_for(&self.registry, &self.w1, &req)?);
+        }
+        if self.plan2.is_none() {
+            self.plan2 = Some(self.cache.plan_for(&self.registry, &self.w2, &req)?);
+        }
+        Ok(())
+    }
+
+    /// The plan cache this model executes from (shared; inspect for stats).
+    pub fn cache(&self) -> &Arc<PlanCache> {
+        &self.cache
+    }
+}
+
+impl BatchModel for NativeSparseModel {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn in_dim(&self) -> usize {
+        self.w1.cols()
+    }
+
+    fn classes(&self) -> usize {
+        self.w2.rows()
+    }
+
+    fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let (b, d) = (self.batch, self.w1.cols());
+        let (h, c) = (self.w1.rows(), self.w2.rows());
+        anyhow::ensure!(x.len() == b * d, "batch input length mismatch");
+        self.resolve_plans()?;
+        // (batch × d) → (d × batch): kernels consume column-major batches.
+        for r in 0..b {
+            for col in 0..d {
+                self.xt[col * b + r] = x[r * d + col];
+            }
+        }
+        // Execute straight from the retained plan handles: no structure
+        // re-hash, no cache-map lock on the flush path.
+        let plan1 = Arc::clone(self.plan1.as_ref().expect("resolved above"));
+        let plan2 = Arc::clone(self.plan2.as_ref().expect("resolved above"));
+        self.registry.for_matrix(&self.w1)?.execute(
+            &self.w1,
+            &mut plan1.lock().unwrap(),
+            &self.xt,
+            &mut self.hid,
+            b,
+        )?;
+        for r in 0..h {
+            let bias = self.b1[r];
+            for j in 0..b {
+                let v = self.hid[r * b + j] + bias;
+                self.hid[r * b + j] = if v > 0.0 { v } else { 0.0 };
+            }
+        }
+        self.registry.for_matrix(&self.w2)?.execute(
+            &self.w2,
+            &mut plan2.lock().unwrap(),
+            &self.hid,
+            &mut self.logits,
+            b,
+        )?;
+        // (c × batch) + bias → (batch × c) row-major for the batcher.
+        let mut out = vec![0.0f32; b * c];
+        for j in 0..b {
+            for r in 0..c {
+                out[j * c + r] = self.logits[r * b + j] + self.b2[r];
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(feature = "xla")]
+mod xla_backend {
+    use super::BatchModel;
+    use crate::runtime::executor::{Executor, HostTensor};
+    use std::path::{Path, PathBuf};
+
+    /// The PJRT-backed model: a compiled `forward` artifact plus its served
+    /// parameters.
+    pub struct XlaModel {
+        exe: Executor,
+        params: Vec<HostTensor>,
+        batch: usize,
+        in_dim: usize,
+        classes: usize,
+    }
+
+    impl XlaModel {
+        pub fn load(artifacts_dir: &Path, checkpoint: Option<PathBuf>) -> anyhow::Result<XlaModel> {
+            let exe = Executor::compile(artifacts_dir, "forward")?;
+            let meta = &exe.artifact.meta;
+            let batch = meta
+                .batch()
+                .ok_or_else(|| anyhow::anyhow!("forward metadata missing batch"))?;
+            let in_dim = meta.raw.req_usize("in_dim")?;
+            let classes = meta.raw.req_usize("classes")?;
+            // Parameters served: a trained checkpoint when given, else the
+            // exported init values.
+            let params_path =
+                checkpoint.unwrap_or_else(|| artifacts_dir.join("init_params.json"));
+            let init_text = std::fs::read_to_string(&params_path)?;
+            let init = crate::util::json::Json::parse(&init_text)?;
+            let mut params = Vec::new();
+            for (idx, name) in meta.param_order.iter().enumerate() {
+                let sig = &meta.inputs[idx];
+                let vals: Vec<f32> = init
+                    .req_arr(name)?
+                    .iter()
+                    .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                    .collect();
+                params.push(HostTensor::new(vals, &sig.shape));
+            }
+            Ok(XlaModel {
+                exe,
+                params,
+                batch,
+                in_dim,
+                classes,
+            })
+        }
+    }
+
+    impl BatchModel for XlaModel {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+
+        fn in_dim(&self) -> usize {
+            self.in_dim
+        }
+
+        fn classes(&self) -> usize {
+            self.classes
+        }
+
+        fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+            let mut inputs = self.params.clone();
+            inputs.push(HostTensor::new(x.to_vec(), &[self.batch, self.in_dim]));
+            let out = self.exe.run(&inputs)?;
+            Ok(out[0].data.clone())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo(seed: u64, cache: Arc<PlanCache>) -> NativeSparseModel {
+        NativeSparseModel::rbgp4_demo(10, 8, 2, seed, cache).unwrap()
+    }
+
+    #[test]
+    fn native_model_shapes_and_determinism() {
+        let cache = Arc::new(PlanCache::new());
+        let mut m = demo(42, Arc::clone(&cache));
+        assert_eq!(m.in_dim(), 256);
+        assert_eq!(m.classes(), 10);
+        assert_eq!(m.batch(), 8);
+        m.warm().unwrap();
+        let (_, misses) = cache.stats();
+        assert_eq!(misses, 2, "warm builds one plan per layer");
+        let x: Vec<f32> = (0..8 * 256).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+        let a = m.forward(&x).unwrap();
+        let b = m.forward(&x).unwrap();
+        assert_eq!(a, b, "same input, same plan → same logits");
+        assert_eq!(a.len(), 8 * 10);
+        assert!(a.iter().all(|v| v.is_finite()));
+        // The flush path holds the plan handles: after warm-up, forward
+        // generates no cache traffic at all (no re-hash, no map lock).
+        let (hits, misses) = cache.stats();
+        assert_eq!(misses, 2, "forward never rebuilds plans");
+        assert_eq!(hits, 0, "forward bypasses the cache map entirely");
+        // A second model on the same cache shares the warmed plans.
+        let mut m2 = demo(42, Arc::clone(&cache));
+        m2.warm().unwrap();
+        let (hits, misses) = cache.stats();
+        assert_eq!(misses, 2, "same structure → no new plan builds");
+        assert_eq!(hits, 2, "second model resolves both plans from cache");
+    }
+
+    #[test]
+    fn native_server_serves_and_batches() {
+        let cache = Arc::new(PlanCache::new());
+        let mut reference = demo(7, Arc::new(PlanCache::new()));
+        let model = demo(7, Arc::clone(&cache));
+        let server = InferenceServer::start_model(
+            move || {
+                let mut m = model;
+                m.warm()?;
+                Ok(Box::new(m) as Box<dyn BatchModel>)
+            },
+            ServerConfig {
+                max_wait: std::time::Duration::from_millis(2),
+                checkpoint: None,
+            },
+        )
+        .unwrap();
+        assert_eq!(server.in_dim, 256);
+
+        // Single request: result equals a padded direct forward.
+        let x: Vec<f32> = (0..256).map(|i| (i as f32 / 256.0) - 0.5).collect();
+        let got = server.infer(x.clone()).unwrap();
+        let mut xb = vec![0.0f32; 8 * 256];
+        xb[..256].copy_from_slice(&x);
+        let want = reference.forward(&xb).unwrap();
+        for (a, b) in got.iter().zip(&want[..10]) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+
+        // A burst from several clients all gets answered; the batcher
+        // groups them into ≤ ceil(32/1) and ≥ ceil(32/8) flushes.
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let server = server.clone();
+                let x = x.clone();
+                scope.spawn(move || {
+                    for _ in 0..8 {
+                        let out = server.infer(x.clone()).unwrap();
+                        assert_eq!(out.len(), 10);
+                        let _ = t;
+                    }
+                });
+            }
+        });
+        let (requests, batches) = server.counters();
+        assert_eq!(requests, 33);
+        assert!(batches >= 5, "at least ceil(33/8) flushes, got {batches}");
+        assert!(server.latency_stats().is_some());
+
+        // Every flush of the burst reused cached plans: exactly the two
+        // warm-time builds, never more.
+        let (_, misses) = cache.stats();
+        assert_eq!(misses, 2, "batcher must execute from cached plans");
+    }
+
+    #[test]
+    fn submit_rejects_wrong_width() {
+        let cache = Arc::new(PlanCache::new());
+        let model = demo(3, cache);
+        let server = InferenceServer::start_model(
+            move || Ok(Box::new(model) as Box<dyn BatchModel>),
+            ServerConfig::default(),
+        )
+        .unwrap();
+        assert!(server.submit(vec![0.0; 3]).is_err());
     }
 }

@@ -1,141 +1,129 @@
-//! Trainer: drives the AOT `train_step` artifact over synthetic CIFAR-like
-//! batches, holding parameters and momenta as host tensors between steps.
+//! Trainers: the drivers that own model state between steps.
 //!
-//! The entire compute graph (forward → loss → backward → SGD-momentum
-//! update) is one fused HLO executable; this loop only moves data and logs.
+//! Two backends share this module:
+//!
+//! * [`NativeTrainer`] (always available) — the pure-Rust masked MLP
+//!   trained through the shared `kernels::dense` GEMMs, with evaluation and
+//!   checkpoint-to-serving handoff running through the
+//!   [`SparseKernel`](crate::kernels::registry::SparseKernel) plan layer: a
+//!   [`PlanCache`] is threaded from the trainer into the
+//!   [`NativeSparseModel`] it exports, so the plans built during evaluation
+//!   are the very plans the inference server reuses.
+//! * [`Trainer`] (feature `xla`) — drives the AOT `train_step` artifact
+//!   over synthetic CIFAR-like batches; the entire compute graph (forward →
+//!   loss → backward → SGD-momentum update) is one fused HLO executable and
+//!   this loop only moves data and logs.
 
-use crate::coordinator::config::TrainConfig;
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::NativeSparseModel;
 use crate::data::synth::CifarLike;
-use crate::runtime::executor::{Executor, HostTensor};
-use crate::util::json::Json;
+use crate::kernels::dense::transpose;
+use crate::kernels::plan::{PlanCache, SparseMatrix};
+use crate::sparsity::csr::CsrMatrix;
+use crate::sparsity::memory::Pattern;
+use crate::train_native::masks::pattern_mask;
+use crate::train_native::mlp::{MaskedMlp, NativeTrainConfig};
 use crate::util::rng::Rng;
-use std::path::Path;
+use std::sync::Arc;
 
-/// Owns the compiled step/forward executables and the model state.
-pub struct Trainer {
-    step_exe: Executor,
-    forward_exe: Executor,
-    /// Parameters in `param_order`.
-    pub params: Vec<HostTensor>,
-    /// Momentum buffers, same order.
-    pub velocity: Vec<HostTensor>,
-    pub config: TrainConfig,
+/// Native trainer: masked-MLP SGD on the CIFAR-like task, plan-cached
+/// evaluation/serving. The default build's training path.
+pub struct NativeTrainer {
+    pub mlp: MaskedMlp,
+    pub config: NativeTrainConfig,
     pub metrics: Metrics,
     data: CifarLike,
-    batch: usize,
-    in_dim: usize,
-    classes: usize,
-    n_params: usize,
-    use_kd: bool,
+    cache: Arc<PlanCache>,
+    threads: usize,
 }
 
-impl Trainer {
-    /// Load artifacts from `dir`; initial parameter values come from
-    /// `init_params.json` (written by aot.py) so Rust and Python training
-    /// are bit-identical at step 0.
-    pub fn new(dir: &Path, config: TrainConfig) -> anyhow::Result<Trainer> {
-        let use_kd = config.distill && dir.join("train_step_kd.hlo.txt").exists();
-        let step_name = if use_kd { "train_step_kd" } else { "train_step" };
-        let step_exe = Executor::compile(dir, step_name)?;
-        let forward_exe = Executor::compile(dir, "forward")?;
-        let meta = &step_exe.artifact.meta;
-        let n_params = meta.param_order.len();
-        anyhow::ensure!(n_params > 0, "train_step artifact lacks param_order");
-        let batch = meta
-            .batch()
-            .ok_or_else(|| anyhow::anyhow!("train_step metadata missing batch"))?;
-        let in_dim = meta.raw.req_usize("in_dim")?;
-        let classes = meta.raw.req_usize("classes")?;
-
-        // Initial parameter values.
-        let init_text = std::fs::read_to_string(dir.join("init_params.json"))?;
-        let init = Json::parse(&init_text)?;
-        let mut params = Vec::with_capacity(n_params);
-        let mut velocity = Vec::with_capacity(n_params);
-        for (idx, name) in meta.param_order.iter().enumerate() {
-            let sig = &meta.inputs[idx];
-            anyhow::ensure!(&sig.name == name, "param order / signature mismatch");
-            let vals = init
-                .req_arr(name)?
-                .iter()
-                .map(|v| v.as_f64().unwrap_or(0.0) as f32)
-                .collect::<Vec<f32>>();
-            anyhow::ensure!(
-                vals.len() == sig.elements(),
-                "init {name}: {} values, signature wants {}",
-                vals.len(),
-                sig.elements()
-            );
-            params.push(HostTensor::new(vals, &sig.shape));
-            velocity.push(HostTensor::zeros(&sig.shape));
-        }
-
-        let data = CifarLike::new(in_dim, classes, config.seed);
-        Ok(Trainer {
-            step_exe,
-            forward_exe,
-            params,
-            velocity,
+impl NativeTrainer {
+    /// Build a `in_dim → hidden → classes` MLP whose hidden layer carries a
+    /// fresh mask of `pattern` at `sparsity`, on the synthetic task seeded
+    /// from `config.seed`.
+    pub fn new(
+        in_dim: usize,
+        hidden: usize,
+        classes: usize,
+        pattern: Pattern,
+        sparsity: f64,
+        config: NativeTrainConfig,
+    ) -> anyhow::Result<NativeTrainer> {
+        let mut rng = Rng::new(config.seed);
+        let mask = pattern_mask(pattern, hidden, in_dim, sparsity, &mut rng)?;
+        let mlp = MaskedMlp::new(in_dim, hidden, classes, mask, &mut rng);
+        let data = CifarLike::new(in_dim, classes, config.seed ^ 0x0005_ca1e);
+        Ok(NativeTrainer {
+            mlp,
             config,
             metrics: Metrics::default(),
             data,
-            batch,
-            in_dim,
-            classes,
-            n_params,
-            use_kd,
+            cache: Arc::new(PlanCache::new()),
+            threads: crate::util::threadpool::default_threads(),
         })
     }
 
-    pub fn batch_size(&self) -> usize {
-        self.batch
+    /// Share an external plan cache (e.g. the serving process's) so plans
+    /// built during evaluation are warm when the model is served.
+    pub fn with_cache(mut self, cache: Arc<PlanCache>) -> NativeTrainer {
+        self.cache = cache;
+        self
     }
 
-    /// One optimizer step; returns the loss.
-    pub fn step(&mut self, step_idx: usize) -> anyhow::Result<f32> {
-        let b = self.data.train_batch(self.batch);
-        let lr = self.config.lr_at(step_idx);
-        let mut inputs: Vec<HostTensor> =
-            Vec::with_capacity(2 * self.n_params + if self.use_kd { 4 } else { 3 });
-        inputs.extend(self.params.iter().cloned());
-        inputs.extend(self.velocity.iter().cloned());
-        inputs.push(HostTensor::new(b.x, &[self.batch, self.in_dim]));
-        inputs.push(HostTensor::new(b.y.clone(), &[self.batch, self.classes]));
-        if self.use_kd {
-            // Teacher logits: sharpened one-hot targets stand in for a dense
-            // teacher when none is provided (see DESIGN.md §Substitutions).
-            let teacher: Vec<f32> = b.y.iter().map(|&v| v * 10.0).collect();
-            inputs.push(HostTensor::new(teacher, &[self.batch, self.classes]));
-        }
-        inputs.push(HostTensor::scalar(lr));
+    /// Worker threads for the plan-based evaluation path.
+    pub fn with_threads(mut self, threads: usize) -> NativeTrainer {
+        self.threads = threads.max(1);
+        self
+    }
 
-        let mut outputs = self.step_exe.run(&inputs)?;
-        let loss = outputs
-            .pop()
-            .ok_or_else(|| anyhow::anyhow!("no loss output"))?
-            .data[0];
-        let vel_new = outputs.split_off(self.n_params);
-        self.params = outputs;
-        self.velocity = vel_new;
+    /// One SGD step; returns the batch loss.
+    pub fn step(&mut self, step_idx: usize) -> f32 {
+        let b = self.data.train_batch(self.config.batch);
+        let xt = transpose(&b.x, self.config.batch, self.mlp.d);
+        let yt = transpose(&b.y, self.config.batch, self.mlp.c);
+        let cfg = self.config.clone();
+        let loss = self.mlp.train_step(&xt, &yt, cfg.batch, &cfg);
         self.metrics.record_loss(step_idx, loss);
         self.metrics.record_batch();
-        Ok(loss)
+        loss
     }
 
-    /// Held-out accuracy over `n_batches` test batches via the forward
-    /// (Pallas-kernel) artifact.
+    /// Export the current weights as a plan-cached serving model: the
+    /// masked hidden layer in CSR compact storage, the classifier dense —
+    /// both executed through the shared [`PlanCache`].
+    pub fn serving_model(
+        &self,
+        batch: usize,
+        threads: usize,
+    ) -> anyhow::Result<NativeSparseModel> {
+        let (d, h, c) = (self.mlp.d, self.mlp.h, self.mlp.c);
+        // Gradients are masked, so w1 is exactly zero off the mask; CSR
+        // compaction keeps precisely the surviving weights.
+        let w1 = CsrMatrix::from_dense(&self.mlp.w1, h, d);
+        NativeSparseModel::new(
+            SparseMatrix::Csr(w1),
+            self.mlp.b1.clone(),
+            SparseMatrix::dense(self.mlp.w2.clone(), c, h),
+            self.mlp.b2.clone(),
+            batch,
+            threads,
+            Arc::clone(&self.cache),
+        )
+    }
+
+    /// Held-out accuracy over `n_batches` test batches, computed through
+    /// the plan-based serving path (the same kernels inference uses).
     pub fn evaluate(&mut self, n_batches: usize) -> anyhow::Result<f64> {
+        let batch = self.config.batch;
+        let mut model = self.serving_model(batch, self.threads)?;
+        let classes = self.mlp.c;
         let mut correct = 0usize;
         let mut total = 0usize;
-        for _ in 0..n_batches {
-            let b = self.data.test_batch(self.batch);
-            let mut inputs: Vec<HostTensor> = self.params.clone();
-            inputs.push(HostTensor::new(b.x, &[self.batch, self.in_dim]));
-            let out = self.forward_exe.run(&inputs)?;
-            let logits = &out[0];
+        for _ in 0..n_batches.max(1) {
+            let b = self.data.test_batch(batch);
+            let logits = model.forward(&b.x)?;
             for (s, &label) in b.labels.iter().enumerate() {
-                let row = &logits.data[s * self.classes..(s + 1) * self.classes];
+                let row = &logits[s * classes..(s + 1) * classes];
                 let pred = row
                     .iter()
                     .enumerate()
@@ -149,29 +137,23 @@ impl Trainer {
         Ok(correct as f64 / total.max(1) as f64)
     }
 
-    /// Full training run; logs to stdout, returns (final smoothed loss,
-    /// final accuracy).
+    /// Full training run; returns (final loss, held-out accuracy).
     pub fn run(&mut self) -> anyhow::Result<(f32, f64)> {
         let steps = self.config.steps;
         let t0 = std::time::Instant::now();
+        let mut loss = f32::NAN;
         for s in 0..steps {
-            let loss = self.step(s)?;
-            let should_eval =
-                self.config.eval_every > 0 && (s + 1) % self.config.eval_every == 0;
-            if should_eval || s == 0 {
-                let acc = self.evaluate(self.config.eval_batches)?;
+            loss = self.step(s);
+            if steps >= 10 && (s + 1) % (steps / 10).max(1) == 0 {
                 println!(
-                    "step {:>5}  loss {:>8.4}  acc {:>6.2}%  lr {:.4}  {:>6.1}s",
+                    "step {:>5}  loss {:>8.4}  {:>6.1}s",
                     s + 1,
                     loss,
-                    acc * 100.0,
-                    self.config.lr_at(s),
                     t0.elapsed().as_secs_f64()
                 );
             }
         }
-        let acc = self.evaluate(self.config.eval_batches)?;
-        let loss = self.metrics.final_loss(10).unwrap_or(f32::NAN);
+        let acc = self.evaluate(8)?;
         println!(
             "done: {} steps in {:.1}s — final loss {:.4}, accuracy {:.2}%",
             steps,
@@ -182,50 +164,307 @@ impl Trainer {
         Ok((loss, acc))
     }
 
-    /// A fresh RNG derived from the config seed (for callers needing
-    /// auxiliary randomness that must not disturb the data streams).
-    pub fn fork_rng(&self) -> Rng {
-        Rng::new(self.config.seed ^ 0x7261_6E64)
+    /// The plan cache the evaluation/serving path executes from.
+    pub fn cache(&self) -> &Arc<PlanCache> {
+        &self.cache
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use xla_trainer::Trainer;
+
+#[cfg(feature = "xla")]
+mod xla_trainer {
+    use crate::coordinator::config::TrainConfig;
+    use crate::coordinator::metrics::Metrics;
+    use crate::data::synth::CifarLike;
+    use crate::runtime::executor::{Executor, HostTensor};
+    use crate::util::json::Json;
+    use crate::util::rng::Rng;
+    use std::path::Path;
+
+    /// Owns the compiled step/forward executables and the model state.
+    pub struct Trainer {
+        step_exe: Executor,
+        forward_exe: Executor,
+        /// Parameters in `param_order`.
+        pub params: Vec<HostTensor>,
+        /// Momentum buffers, same order.
+        pub velocity: Vec<HostTensor>,
+        pub config: TrainConfig,
+        pub metrics: Metrics,
+        data: CifarLike,
+        batch: usize,
+        in_dim: usize,
+        classes: usize,
+        n_params: usize,
+        use_kd: bool,
     }
 
-    /// Save trained parameters as a JSON checkpoint (same schema as
-    /// `init_params.json`, so it can also be served — see
-    /// `InferenceServer`/`rbgp serve --checkpoint`).
-    pub fn save_checkpoint(&self, path: &Path) -> anyhow::Result<()> {
-        let mut j = Json::obj();
-        let order = &self.step_exe.artifact.meta.param_order;
-        for (name, tensor) in order.iter().zip(&self.params) {
-            j.set(
-                name,
-                Json::Arr(tensor.data.iter().map(|&v| Json::Num(v as f64)).collect()),
-            );
+    impl Trainer {
+        /// Load artifacts from `dir`; initial parameter values come from
+        /// `init_params.json` (written by aot.py) so Rust and Python training
+        /// are bit-identical at step 0.
+        pub fn new(dir: &Path, config: TrainConfig) -> anyhow::Result<Trainer> {
+            let use_kd = config.distill && dir.join("train_step_kd.hlo.txt").exists();
+            let step_name = if use_kd { "train_step_kd" } else { "train_step" };
+            let step_exe = Executor::compile(dir, step_name)?;
+            let forward_exe = Executor::compile(dir, "forward")?;
+            let meta = &step_exe.artifact.meta;
+            let n_params = meta.param_order.len();
+            anyhow::ensure!(n_params > 0, "train_step artifact lacks param_order");
+            let batch = meta
+                .batch()
+                .ok_or_else(|| anyhow::anyhow!("train_step metadata missing batch"))?;
+            let in_dim = meta.raw.req_usize("in_dim")?;
+            let classes = meta.raw.req_usize("classes")?;
+
+            // Initial parameter values.
+            let init_text = std::fs::read_to_string(dir.join("init_params.json"))?;
+            let init = Json::parse(&init_text)?;
+            let mut params = Vec::with_capacity(n_params);
+            let mut velocity = Vec::with_capacity(n_params);
+            for (idx, name) in meta.param_order.iter().enumerate() {
+                let sig = &meta.inputs[idx];
+                anyhow::ensure!(&sig.name == name, "param order / signature mismatch");
+                let vals = init
+                    .req_arr(name)?
+                    .iter()
+                    .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                    .collect::<Vec<f32>>();
+                anyhow::ensure!(
+                    vals.len() == sig.elements(),
+                    "init {name}: {} values, signature wants {}",
+                    vals.len(),
+                    sig.elements()
+                );
+                params.push(HostTensor::new(vals, &sig.shape));
+                velocity.push(HostTensor::zeros(&sig.shape));
+            }
+
+            let data = CifarLike::new(in_dim, classes, config.seed);
+            Ok(Trainer {
+                step_exe,
+                forward_exe,
+                params,
+                velocity,
+                config,
+                metrics: Metrics::default(),
+                data,
+                batch,
+                in_dim,
+                classes,
+                n_params,
+                use_kd,
+            })
         }
-        std::fs::write(path, j.to_string())?;
-        Ok(())
+
+        pub fn batch_size(&self) -> usize {
+            self.batch
+        }
+
+        /// One optimizer step; returns the loss.
+        pub fn step(&mut self, step_idx: usize) -> anyhow::Result<f32> {
+            let b = self.data.train_batch(self.batch);
+            let lr = self.config.lr_at(step_idx);
+            let mut inputs: Vec<HostTensor> =
+                Vec::with_capacity(2 * self.n_params + if self.use_kd { 4 } else { 3 });
+            inputs.extend(self.params.iter().cloned());
+            inputs.extend(self.velocity.iter().cloned());
+            inputs.push(HostTensor::new(b.x, &[self.batch, self.in_dim]));
+            inputs.push(HostTensor::new(b.y.clone(), &[self.batch, self.classes]));
+            if self.use_kd {
+                // Teacher logits: sharpened one-hot targets stand in for a dense
+                // teacher when none is provided (see DESIGN.md §Substitutions).
+                let teacher: Vec<f32> = b.y.iter().map(|&v| v * 10.0).collect();
+                inputs.push(HostTensor::new(teacher, &[self.batch, self.classes]));
+            }
+            inputs.push(HostTensor::scalar(lr));
+
+            let mut outputs = self.step_exe.run(&inputs)?;
+            let loss = outputs
+                .pop()
+                .ok_or_else(|| anyhow::anyhow!("no loss output"))?
+                .data[0];
+            let vel_new = outputs.split_off(self.n_params);
+            self.params = outputs;
+            self.velocity = vel_new;
+            self.metrics.record_loss(step_idx, loss);
+            self.metrics.record_batch();
+            Ok(loss)
+        }
+
+        /// Held-out accuracy over `n_batches` test batches via the forward
+        /// (Pallas-kernel) artifact.
+        pub fn evaluate(&mut self, n_batches: usize) -> anyhow::Result<f64> {
+            let mut correct = 0usize;
+            let mut total = 0usize;
+            for _ in 0..n_batches {
+                let b = self.data.test_batch(self.batch);
+                let mut inputs: Vec<HostTensor> = self.params.clone();
+                inputs.push(HostTensor::new(b.x, &[self.batch, self.in_dim]));
+                let out = self.forward_exe.run(&inputs)?;
+                let logits = &out[0];
+                for (s, &label) in b.labels.iter().enumerate() {
+                    let row = &logits.data[s * self.classes..(s + 1) * self.classes];
+                    let pred = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    correct += (pred == label) as usize;
+                    total += 1;
+                }
+            }
+            Ok(correct as f64 / total.max(1) as f64)
+        }
+
+        /// Full training run; logs to stdout, returns (final smoothed loss,
+        /// final accuracy).
+        pub fn run(&mut self) -> anyhow::Result<(f32, f64)> {
+            let steps = self.config.steps;
+            let t0 = std::time::Instant::now();
+            for s in 0..steps {
+                let loss = self.step(s)?;
+                let should_eval =
+                    self.config.eval_every > 0 && (s + 1) % self.config.eval_every == 0;
+                if should_eval || s == 0 {
+                    let acc = self.evaluate(self.config.eval_batches)?;
+                    println!(
+                        "step {:>5}  loss {:>8.4}  acc {:>6.2}%  lr {:.4}  {:>6.1}s",
+                        s + 1,
+                        loss,
+                        acc * 100.0,
+                        self.config.lr_at(s),
+                        t0.elapsed().as_secs_f64()
+                    );
+                }
+            }
+            let acc = self.evaluate(self.config.eval_batches)?;
+            let loss = self.metrics.final_loss(10).unwrap_or(f32::NAN);
+            println!(
+                "done: {} steps in {:.1}s — final loss {:.4}, accuracy {:.2}%",
+                steps,
+                t0.elapsed().as_secs_f64(),
+                loss,
+                acc * 100.0
+            );
+            Ok((loss, acc))
+        }
+
+        /// A fresh RNG derived from the config seed (for callers needing
+        /// auxiliary randomness that must not disturb the data streams).
+        pub fn fork_rng(&self) -> Rng {
+            Rng::new(self.config.seed ^ 0x7261_6E64)
+        }
+
+        /// Save trained parameters as a JSON checkpoint (same schema as
+        /// `init_params.json`, so it can also be served — see
+        /// `InferenceServer`/`rbgp serve --checkpoint`).
+        pub fn save_checkpoint(&self, path: &Path) -> anyhow::Result<()> {
+            let mut j = Json::obj();
+            let order = &self.step_exe.artifact.meta.param_order;
+            for (name, tensor) in order.iter().zip(&self.params) {
+                j.set(
+                    name,
+                    Json::Arr(tensor.data.iter().map(|&v| Json::Num(v as f64)).collect()),
+                );
+            }
+            std::fs::write(path, j.to_string())?;
+            Ok(())
+        }
+
+        /// Load parameters from a checkpoint (shapes validated against the
+        /// artifact signature); momenta reset to zero.
+        pub fn load_checkpoint(&mut self, path: &Path) -> anyhow::Result<()> {
+            let text = std::fs::read_to_string(path)?;
+            let j = Json::parse(&text)?;
+            let meta = &self.step_exe.artifact.meta;
+            for (idx, name) in meta.param_order.iter().enumerate() {
+                let sig = &meta.inputs[idx];
+                let vals: Vec<f32> = j
+                    .req_arr(name)?
+                    .iter()
+                    .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                    .collect();
+                anyhow::ensure!(
+                    vals.len() == sig.elements(),
+                    "checkpoint {name}: {} values, expected {}",
+                    vals.len(),
+                    sig.elements()
+                );
+                self.params[idx] = HostTensor::new(vals, &sig.shape);
+                self.velocity[idx] = HostTensor::zeros(&sig.shape);
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_config(steps: usize) -> NativeTrainConfig {
+        NativeTrainConfig {
+            steps,
+            batch: 16,
+            lr: 0.05,
+            seed: 9,
+            ..NativeTrainConfig::default()
+        }
     }
 
-    /// Load parameters from a checkpoint (shapes validated against the
-    /// artifact signature); momenta reset to zero.
-    pub fn load_checkpoint(&mut self, path: &Path) -> anyhow::Result<()> {
-        let text = std::fs::read_to_string(path)?;
-        let j = Json::parse(&text)?;
-        let meta = &self.step_exe.artifact.meta;
-        for (idx, name) in meta.param_order.iter().enumerate() {
-            let sig = &meta.inputs[idx];
-            let vals: Vec<f32> = j
-                .req_arr(name)?
+    #[test]
+    fn native_trainer_learns_and_evaluates_through_plans() {
+        let mut t = NativeTrainer::new(64, 64, 4, Pattern::Rbgp4, 0.75, quick_config(80))
+            .unwrap()
+            .with_threads(2);
+        let first = t.step(0);
+        for s in 1..80 {
+            t.step(s);
+        }
+        let last = t.metrics.final_loss(5).unwrap();
+        assert!(last < first, "loss should fall: {first} → {last}");
+        let acc = t.evaluate(4).unwrap();
+        assert!(acc > 0.5, "accuracy {acc}");
+        // Evaluation executed through the shared plan cache.
+        let (_, misses) = t.cache().stats();
+        assert!(misses >= 2, "both layers planned");
+    }
+
+    #[test]
+    fn serving_model_matches_training_forward() {
+        let mut t = NativeTrainer::new(64, 64, 4, Pattern::Unstructured, 0.75, quick_config(30))
+            .unwrap()
+            .with_threads(1);
+        for s in 0..30 {
+            t.step(s);
+        }
+        let batch = t.config.batch;
+        let mut model = t.serving_model(batch, 1).unwrap();
+        let b = t.data.test_batch(batch);
+        // Plan-path logits → argmax must equal the training-path softmax
+        // argmax (softmax is monotone).
+        let logits = model.forward(&b.x).unwrap();
+        let xt = transpose(&b.x, batch, t.mlp.d);
+        let direct_acc = t.mlp.accuracy(&xt, &b.labels, batch);
+        let mut correct = 0usize;
+        for (s, &label) in b.labels.iter().enumerate() {
+            let row = &logits[s * t.mlp.c..(s + 1) * t.mlp.c];
+            let pred = row
                 .iter()
-                .map(|v| v.as_f64().unwrap_or(0.0) as f32)
-                .collect();
-            anyhow::ensure!(
-                vals.len() == sig.elements(),
-                "checkpoint {name}: {} values, expected {}",
-                vals.len(),
-                sig.elements()
-            );
-            self.params[idx] = HostTensor::new(vals, &sig.shape);
-            self.velocity[idx] = HostTensor::zeros(&sig.shape);
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            correct += (pred == label) as usize;
         }
-        Ok(())
+        let plan_acc = correct as f64 / batch as f64;
+        assert!(
+            (plan_acc - direct_acc).abs() < 1e-12,
+            "plan path {plan_acc} vs direct {direct_acc}"
+        );
     }
 }

@@ -29,6 +29,23 @@ pub enum KernelKind {
     Rbgp4 { config: Rbgp4Config },
 }
 
+impl KernelKind {
+    /// The [`Pattern`](crate::sparsity::memory::Pattern) key this kernel
+    /// family shares with the measured-kernel registry
+    /// ([`crate::kernels::registry::KernelRegistry`]): the cost model and
+    /// the CPU kernels dispatch off the same key, so a bench row can pair a
+    /// model estimate with the measured kernel for one matrix value.
+    pub fn pattern(&self) -> crate::sparsity::memory::Pattern {
+        use crate::sparsity::memory::Pattern;
+        match self {
+            KernelKind::DenseCublas => Pattern::Dense,
+            KernelKind::UnstructuredCsr { .. } => Pattern::Unstructured,
+            KernelKind::BlockBsr { bh, bw, .. } => Pattern::Block(*bh, *bw),
+            KernelKind::Rbgp4 { .. } => Pattern::Rbgp4,
+        }
+    }
+}
+
 /// Per-term cost decomposition, seconds.
 #[derive(Clone, Copy, Debug)]
 pub struct CostBreakdown {
@@ -296,6 +313,24 @@ mod tests {
             assert!(vs_csr > 3.0, "sp={sp}: vs_csr {vs_csr}");
             assert!(vs_bsr > 1.5, "sp={sp}: vs_bsr {vs_bsr}");
         }
+    }
+
+    #[test]
+    fn kernel_kind_exposes_registry_pattern() {
+        use crate::sparsity::memory::Pattern;
+        assert_eq!(KernelKind::DenseCublas.pattern(), Pattern::Dense);
+        assert_eq!(
+            KernelKind::UnstructuredCsr { sp: 0.5 }.pattern(),
+            Pattern::Unstructured
+        );
+        assert_eq!(
+            KernelKind::BlockBsr { sp: 0.5, bh: 4, bw: 4 }.pattern(),
+            Pattern::Block(4, 4)
+        );
+        assert_eq!(
+            KernelKind::Rbgp4 { config: paper_cfg(0.5, 0.5) }.pattern(),
+            Pattern::Rbgp4
+        );
     }
 
     #[test]

@@ -54,6 +54,40 @@ pub fn bsr_sdmm_parallel(w: &BsrMatrix, i: &[f32], o: &mut [f32], n: usize, thre
     });
 }
 
+/// Parallel BSR SDMM over precomputed contiguous block-row `ranges` (one
+/// worker per range) — the plan-based execute path with block-balanced
+/// partitions. `ranges` must be ascending, contiguous, and cover
+/// `0..w.block_rows()`.
+pub fn bsr_sdmm_ranges(
+    w: &BsrMatrix,
+    i: &[f32],
+    o: &mut [f32],
+    n: usize,
+    ranges: &[(usize, usize)],
+) {
+    assert_eq!(o.len(), w.rows * n);
+    if ranges.len() <= 1 {
+        bsr_sdmm(w, i, o, n);
+        return;
+    }
+    let row_len = w.bh * n;
+    std::thread::scope(|scope| {
+        let mut rest = o;
+        let mut row = 0usize;
+        for &(br0, br1) in ranges {
+            assert_eq!(br0, row, "ranges must be contiguous");
+            let (chunk, tail) = rest.split_at_mut((br1 - br0) * row_len);
+            scope.spawn(move || {
+                chunk.fill(0.0);
+                bsr_block_rows(w, i, chunk, n, br0, br1);
+            });
+            rest = tail;
+            row = br1;
+        }
+        assert_eq!(row, w.block_rows(), "ranges must cover all block rows");
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,6 +120,20 @@ mod tests {
         let mut o2 = vec![0.0; m * n];
         bsr_sdmm(&w, &i, &mut o1, n);
         bsr_sdmm_parallel(&w, &i, &mut o2, n, 5);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn ranges_match_serial() {
+        let mut rng = Rng::new(303);
+        let (m, k, n) = (48, 32, 9);
+        let w = BsrMatrix::random_block_uniform(m, k, 4, 4, 0.5, &mut rng);
+        let i = rng.normal_vec_f32(k * n, 1.0);
+        let mut o1 = vec![0.0; m * n];
+        let mut o2 = vec![0.0; m * n];
+        bsr_sdmm(&w, &i, &mut o1, n);
+        let ranges = crate::kernels::plan::balanced_row_ranges(&w.indptr, 3);
+        bsr_sdmm_ranges(&w, &i, &mut o2, n, &ranges);
         assert_eq!(o1, o2);
     }
 

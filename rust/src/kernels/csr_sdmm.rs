@@ -24,23 +24,59 @@ pub fn csr_sdmm(w: &CsrMatrix, i: &[f32], o: &mut [f32], n: usize) {
     }
 }
 
-/// Parallel CSR SDMM over disjoint output-row chunks.
+/// Rows `[row0, row0+rows)` of the product, written into `chunk`
+/// (`rows × n`, already zeroed by the caller or zeroed here).
+fn csr_rows_into(w: &CsrMatrix, i: &[f32], chunk: &mut [f32], n: usize, row0: usize) {
+    chunk.fill(0.0);
+    let rows = chunk.len() / n.max(1);
+    for r in 0..rows {
+        let orow = &mut chunk[r * n..(r + 1) * n];
+        let wr = row0 + r;
+        for k in w.indptr[wr]..w.indptr[wr + 1] {
+            let a = w.values[k];
+            let irow = &i[w.indices[k] * n..w.indices[k] * n + n];
+            for c in 0..n {
+                orow[c] += a * irow[c];
+            }
+        }
+    }
+}
+
+/// Parallel CSR SDMM over disjoint output-row chunks (even row split).
 pub fn csr_sdmm_parallel(w: &CsrMatrix, i: &[f32], o: &mut [f32], n: usize, threads: usize) {
     assert_eq!(o.len(), w.rows * n);
     parallel_rows(o, w.rows, n, threads, |row0, chunk| {
-        chunk.fill(0.0);
-        let rows = chunk.len() / n;
-        for r in 0..rows {
-            let orow = &mut chunk[r * n..(r + 1) * n];
-            let wr = row0 + r;
-            for k in w.indptr[wr]..w.indptr[wr + 1] {
-                let a = w.values[k];
-                let irow = &i[w.indices[k] * n..w.indices[k] * n + n];
-                for c in 0..n {
-                    orow[c] += a * irow[c];
-                }
-            }
+        csr_rows_into(w, i, chunk, n, row0);
+    });
+}
+
+/// Parallel CSR SDMM over precomputed contiguous row `ranges` (one worker
+/// per range) — the plan-based execute path, where ranges were balanced by
+/// non-zero count at plan-build time instead of split evenly per call.
+/// `ranges` must be ascending, contiguous, and cover `0..w.rows`.
+pub fn csr_sdmm_ranges(
+    w: &CsrMatrix,
+    i: &[f32],
+    o: &mut [f32],
+    n: usize,
+    ranges: &[(usize, usize)],
+) {
+    assert_eq!(o.len(), w.rows * n);
+    if ranges.len() <= 1 {
+        csr_sdmm(w, i, o, n);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = o;
+        let mut row = 0usize;
+        for &(r0, r1) in ranges {
+            assert_eq!(r0, row, "ranges must be contiguous");
+            let (chunk, tail) = rest.split_at_mut((r1 - r0) * n);
+            scope.spawn(move || csr_rows_into(w, i, chunk, n, r0));
+            rest = tail;
+            row = r1;
         }
+        assert_eq!(row, w.rows, "ranges must cover all rows");
     });
 }
 
@@ -76,6 +112,20 @@ mod tests {
         let mut o2 = vec![0.0; m * n];
         csr_sdmm(&w, &i, &mut o1, n);
         csr_sdmm_parallel(&w, &i, &mut o2, n, 3);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn ranges_match_serial() {
+        let mut rng = Rng::new(202);
+        let (m, k, n) = (37, 48, 11);
+        let w = CsrMatrix::random_row_uniform(m, k, 0.75, &mut rng);
+        let i = rng.normal_vec_f32(k * n, 1.0);
+        let mut o1 = vec![0.0; m * n];
+        let mut o2 = vec![0.0; m * n];
+        csr_sdmm(&w, &i, &mut o1, n);
+        let ranges = crate::kernels::plan::balanced_row_ranges(&w.indptr, 4);
+        csr_sdmm_ranges(&w, &i, &mut o2, n, &ranges);
         assert_eq!(o1, o2);
     }
 

@@ -107,6 +107,61 @@ fn gemm_panel(
     }
 }
 
+/// `out (M×N) = a (M×K) · bᵀ` where `b` is (N×K) — the gradient-side GEMM
+/// (`dW = dY · Xᵀ`) shared by every native training consumer.
+pub fn gemm_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for r in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f32;
+            let ar = &a[r * k..(r + 1) * k];
+            let br = &b[j * k..(j + 1) * k];
+            for kk in 0..k {
+                s += ar[kk] * br[kk];
+            }
+            out[r * n + j] = s;
+        }
+    }
+}
+
+/// `out (K×N) = aᵀ · b` where `a` is (M×K), `b` is (M×N) — the backprop
+/// input-gradient GEMM (`dX = Wᵀ · dY`), zero-skipping on `a` so masked
+/// weights cost nothing.
+pub fn gemm_tn(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(out.len(), k * n);
+    out.fill(0.0);
+    for row in 0..m {
+        for kk in 0..k {
+            let av = a[row * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[row * n..(row + 1) * n];
+            let orow = &mut out[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// (rows × cols) row-major → (cols × rows).
+pub fn transpose(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(x.len(), rows * cols);
+    let mut t = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            t[c * rows + r] = x[r * cols + c];
+        }
+    }
+    t
+}
+
 /// Multi-threaded blocked GEMM: row-partitioned (disjoint output chunks).
 pub fn gemm_parallel(
     w: &[f32],
@@ -168,6 +223,40 @@ mod tests {
         gemm_naive(&w, &i, &mut o1, m, k, n);
         gemm_parallel(&w, &i, &mut o2, m, k, n, 4);
         assert_close(&o1, &o2, 1e-4);
+    }
+
+    #[test]
+    fn gemm_helpers_match_naive() {
+        let mut rng = Rng::new(30);
+        let (m, k, n) = (5, 7, 4);
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, n * k);
+        let mut out = vec![0.0; m * n];
+        gemm_nt(&a, &b, &mut out, m, k, n);
+        for r in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|kk| a[r * k + kk] * b[j * k + kk]).sum();
+                assert!((out[r * n + j] - want).abs() < 1e-4);
+            }
+        }
+        let b2 = rand_mat(&mut rng, m * n);
+        let mut out2 = vec![0.0; k * n];
+        gemm_tn(&a, &b2, &mut out2, m, k, n);
+        for kk in 0..k {
+            for j in 0..n {
+                let want: f32 = (0..m).map(|r| a[r * k + kk] * b2[r * n + j]).sum();
+                assert!((out2[kk * n + j] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let x: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let t = transpose(&x, 3, 4);
+        assert_eq!(transpose(&t, 4, 3), x);
+        assert_eq!(t[0], 0.0);
+        assert_eq!(t[1], 4.0); // (0,1) of transposed = (1,0) of original
     }
 
     #[test]

@@ -2,13 +2,24 @@
 //! baselines (cuSparse stand-ins), and the paper's RBGP4MM (Algorithm 1)
 //! adapted to the CPU cache hierarchy. These are the *measured* halves of
 //! Tables 1–3; the V100 estimates come from [`crate::gpusim`].
+//!
+//! All four families are unified behind the [`registry::SparseKernel`]
+//! trait: [`plan`] holds the execution-plan layer (build once per
+//! `(matrix, batch class, threads)`, execute allocation-free), [`registry`]
+//! holds the `Pattern`-keyed family registry shared with the cost model's
+//! [`crate::gpusim::KernelKind`]. The historical free functions remain as
+//! per-call wrappers.
 
 pub mod bsr_sdmm;
 pub mod csr_sdmm;
 pub mod dense;
+pub mod plan;
 pub mod rbgp4mm;
+pub mod registry;
 
 pub use bsr_sdmm::{bsr_sdmm, bsr_sdmm_parallel};
 pub use csr_sdmm::{csr_sdmm, csr_sdmm_parallel};
 pub use dense::{gemm_blocked, gemm_naive, gemm_parallel};
-pub use rbgp4mm::{rbgp4mm, rbgp4mm_naive, rbgp4mm_parallel};
+pub use plan::{batch_class, KernelPlan, PlanCache, PlanKey, PlanRequest, SparseMatrix};
+pub use rbgp4mm::{rbgp4mm, rbgp4mm_naive, rbgp4mm_parallel, Rbgp4Plan};
+pub use registry::{KernelRegistry, SparseKernel};

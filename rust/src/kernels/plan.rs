@@ -1,0 +1,420 @@
+//! Execution plans: the "build once, execute many" layer (§4–§5 of the
+//! paper, and the architectural point of the Sparsity Roofline literature).
+//!
+//! The paper's RBGP4 speed claim rests on the succinct index being *derived
+//! structure*: tile adjacency, intra-tile column offsets, pack layouts and
+//! scratch memory depend only on the mask and the batch-size class — never
+//! on the input values — so they can be computed once per
+//! `(matrix, batch class, threads)` and reused on every call. A
+//! [`KernelPlan`] captures exactly that derived structure; executing from a
+//! plan is allocation-free on the hot path.
+//!
+//! Layer map:
+//! * [`SparseMatrix`] — one weight operand in any of the four storage
+//!   formats the evaluation compares (dense / CSR / BSR / RBGP4 compact).
+//! * [`crate::kernels::registry::SparseKernel`] — the per-family trait that
+//!   builds plans and executes from them.
+//! * [`PlanCache`] — concurrent map from [`PlanKey`] (structure hash +
+//!   shape + batch class + threads) to built plans, shared by the server
+//!   batcher, the native trainer and the bench harness.
+
+use crate::sparsity::bsr::BsrMatrix;
+use crate::sparsity::csr::CsrMatrix;
+use crate::sparsity::memory::Pattern;
+use crate::sparsity::rbgp4::Rbgp4Matrix;
+use crate::util::Fnv;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One SDMM weight operand `W (rows × cols)` in a concrete storage format.
+/// This is the value every consumer (kernels, cost model, server, trainer,
+/// benches) dispatches on, keyed by [`Pattern`].
+#[derive(Clone, Debug)]
+pub enum SparseMatrix {
+    /// Row-major dense storage (the cuBLAS stand-in).
+    Dense {
+        data: Vec<f32>,
+        rows: usize,
+        cols: usize,
+    },
+    /// Unstructured CSR (the cuSparse-CSR stand-in).
+    Csr(CsrMatrix),
+    /// Block BSR (the cuSparse-BSR stand-in).
+    Bsr(BsrMatrix),
+    /// RBGP4 compact storage (the paper's format).
+    Rbgp4(Rbgp4Matrix),
+}
+
+impl SparseMatrix {
+    pub fn dense(data: Vec<f32>, rows: usize, cols: usize) -> SparseMatrix {
+        assert_eq!(data.len(), rows * cols, "dense data/shape mismatch");
+        SparseMatrix::Dense { data, rows, cols }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            SparseMatrix::Dense { rows, .. } => *rows,
+            SparseMatrix::Csr(w) => w.rows,
+            SparseMatrix::Bsr(w) => w.rows,
+            SparseMatrix::Rbgp4(w) => w.mask.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            SparseMatrix::Dense { cols, .. } => *cols,
+            SparseMatrix::Csr(w) => w.cols,
+            SparseMatrix::Bsr(w) => w.cols,
+            SparseMatrix::Rbgp4(w) => w.mask.cols(),
+        }
+    }
+
+    /// The [`Pattern`] key this matrix dispatches under — shared with
+    /// [`crate::gpusim::KernelKind::pattern`] so the cost model and the
+    /// measured kernels select by the same key.
+    pub fn pattern(&self) -> Pattern {
+        match self {
+            SparseMatrix::Dense { .. } => Pattern::Dense,
+            SparseMatrix::Csr(_) => Pattern::Unstructured,
+            SparseMatrix::Bsr(w) => Pattern::Block(w.bh, w.bw),
+            SparseMatrix::Rbgp4(_) => Pattern::Rbgp4,
+        }
+    }
+
+    /// Stored non-zeros (dense counts every element, as cuBLAS computes all).
+    pub fn nnz(&self) -> usize {
+        match self {
+            SparseMatrix::Dense { rows, cols, .. } => rows * cols,
+            SparseMatrix::Csr(w) => w.nnz(),
+            SparseMatrix::Bsr(w) => w.nnz_stored(),
+            SparseMatrix::Rbgp4(w) => w.mask.rows() * w.mask.config.row_nnz(),
+        }
+    }
+
+    /// Fractional sparsity of the stored pattern (dense = 0).
+    pub fn sparsity(&self) -> f64 {
+        match self {
+            SparseMatrix::Dense { .. } => 0.0,
+            SparseMatrix::Csr(w) => w.sparsity(),
+            SparseMatrix::Bsr(w) => w.sparsity(),
+            SparseMatrix::Rbgp4(w) => w.mask.config.sparsity(),
+        }
+    }
+
+    /// FLOPs of one SDMM against an `n`-column input (2·nnz·n).
+    pub fn flops(&self, n: usize) -> f64 {
+        2.0 * self.nnz() as f64 * n as f64
+    }
+
+    /// Scatter to a dense row-major matrix (oracle side of property tests).
+    pub fn to_dense(&self) -> Vec<f32> {
+        match self {
+            SparseMatrix::Dense { data, .. } => data.clone(),
+            SparseMatrix::Csr(w) => w.to_dense(),
+            SparseMatrix::Bsr(w) => w.to_dense(),
+            SparseMatrix::Rbgp4(w) => w.to_dense(),
+        }
+    }
+
+    /// Hash of the *structure* (shape + connectivity, not values): two
+    /// matrices with equal structure hashes can share an execution plan.
+    /// Dense plans depend only on the shape, so dense hashes ignore values —
+    /// which is what lets a trainer update weights in place without
+    /// invalidating its cached plans.
+    pub fn structure_hash(&self) -> u64 {
+        let mut h = Fnv::new();
+        match self {
+            SparseMatrix::Dense { rows, cols, .. } => {
+                h.push(1);
+                h.push(*rows as u64);
+                h.push(*cols as u64);
+            }
+            SparseMatrix::Csr(w) => {
+                h.push(2);
+                h.push(w.rows as u64);
+                h.push(w.cols as u64);
+                h.push_all(w.indptr.iter().map(|&x| x as u64));
+                h.push_all(w.indices.iter().map(|&x| x as u64));
+            }
+            SparseMatrix::Bsr(w) => {
+                h.push(3);
+                h.push(w.rows as u64);
+                h.push(w.cols as u64);
+                h.push(w.bh as u64);
+                h.push(w.bw as u64);
+                h.push_all(w.indptr.iter().map(|&x| x as u64));
+                h.push_all(w.indices.iter().map(|&x| x as u64));
+            }
+            SparseMatrix::Rbgp4(w) => {
+                h.push(4);
+                h.push(w.mask.structure_hash());
+            }
+        }
+        h.finish()
+    }
+}
+
+/// Batch-size class a plan is built for: the next power of two, so nearby
+/// batch sizes (the dynamic batcher's partial flushes) share one plan.
+pub fn batch_class(n: usize) -> usize {
+    n.max(1).next_power_of_two()
+}
+
+/// What a caller asks of `build_plan`.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanRequest {
+    /// Expected input columns (batch size); the plan is sized for
+    /// `batch_class(n)` and stays valid — merely sub-optimal — beyond it.
+    pub n: usize,
+    /// Worker threads the execute path may use (clamped per family).
+    pub threads: usize,
+}
+
+/// Family-specific prepared state (the part of a plan the kernels read).
+pub(crate) enum PlanState {
+    /// Dense needs no derived structure beyond the thread count.
+    Dense,
+    /// CSR/BSR: nnz-balanced contiguous (block-)row ranges, one per worker.
+    Ranges(Vec<(usize, usize)>),
+    /// RBGP4: the full succinct-index derivation (see `rbgp4mm::Rbgp4Plan`).
+    Rbgp4(Box<crate::kernels::rbgp4mm::Rbgp4Plan>),
+}
+
+/// A built execution plan: everything derivable from `(structure, batch
+/// class, threads)`, including reusable scratch arenas. Executing from a
+/// plan performs no allocation and no index derivation.
+pub struct KernelPlan {
+    pub pattern: Pattern,
+    pub rows: usize,
+    pub cols: usize,
+    pub batch_class: usize,
+    pub threads: usize,
+    /// Wall-clock cost of building this plan (reported by benches so the
+    /// amortization claim stays measurable).
+    pub build_seconds: f64,
+    pub(crate) state: PlanState,
+}
+
+/// Cache key: structure + shape + batch class + threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub family: u8,
+    pub structure: u64,
+    pub rows: usize,
+    pub cols: usize,
+    pub batch_class: usize,
+    pub threads: usize,
+}
+
+impl PlanKey {
+    pub fn of(w: &SparseMatrix, req: &PlanRequest) -> PlanKey {
+        let family = match w.pattern() {
+            Pattern::Dense => 0,
+            Pattern::Unstructured => 1,
+            Pattern::Block(_, _) => 2,
+            Pattern::Rbgp4 => 3,
+        };
+        PlanKey {
+            family,
+            structure: w.structure_hash(),
+            rows: w.rows(),
+            cols: w.cols(),
+            batch_class: batch_class(req.n),
+            threads: req.threads.max(1),
+        }
+    }
+}
+
+/// Concurrent plan cache shared across the system: the server batcher, the
+/// native trainer, the bench harness and ad-hoc callers all pull plans from
+/// here instead of re-deriving structure per call.
+#[derive(Default)]
+pub struct PlanCache {
+    plans: Mutex<HashMap<PlanKey, Arc<Mutex<KernelPlan>>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Fetch (or build and insert) the plan for `(w, req)`.
+    pub fn plan_for(
+        &self,
+        registry: &crate::kernels::registry::KernelRegistry,
+        w: &SparseMatrix,
+        req: &PlanRequest,
+    ) -> anyhow::Result<Arc<Mutex<KernelPlan>>> {
+        let key = PlanKey::of(w, req);
+        if let Some(plan) = self.plans.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(plan));
+        }
+        // Build outside the map lock: plan construction can be slow and
+        // must not serialize unrelated lookups. Two threads racing on the
+        // same key may both build; the loser's plan is dropped and its
+        // call counts as a hit (benign duplicated work, consistent stats).
+        let kernel = registry.for_matrix(w)?;
+        let built = kernel.build_plan(
+            w,
+            &PlanRequest {
+                n: key.batch_class,
+                threads: req.threads,
+            },
+        )?;
+        let arc = Arc::new(Mutex::new(built));
+        let mut map = self.plans.lock().unwrap();
+        match map.entry(key) {
+            std::collections::hash_map::Entry::Occupied(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Ok(Arc::clone(e.get()))
+            }
+            std::collections::hash_map::Entry::Vacant(v) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Ok(Arc::clone(v.insert(arc)))
+            }
+        }
+    }
+
+    /// One-call convenience: plan lookup + execute.
+    ///
+    /// Note two costs a latency-critical caller can avoid by holding the
+    /// `Arc` from [`PlanCache::plan_for`] instead (as
+    /// [`crate::coordinator::server::NativeSparseModel`] does after
+    /// warm-up): the key computation re-hashes the matrix structure
+    /// (O(nnz index words) for CSR/BSR), and the plan's mutex is held for
+    /// the whole execution — correct because RBGP4 plans carry mutable
+    /// scratch arenas, but it serializes concurrent users of one plan.
+    pub fn execute(
+        &self,
+        registry: &crate::kernels::registry::KernelRegistry,
+        w: &SparseMatrix,
+        input: &[f32],
+        output: &mut [f32],
+        n: usize,
+        threads: usize,
+    ) -> anyhow::Result<()> {
+        let kernel = registry.for_matrix(w)?;
+        let plan = self.plan_for(registry, w, &PlanRequest { n, threads })?;
+        let mut plan = plan.lock().unwrap();
+        kernel.execute(w, &mut plan, input, output, n)
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn stats(&self) -> (usize, usize) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Split `indptr`-described rows into at most `threads` contiguous ranges
+/// with approximately equal non-zero counts (work-balanced partition for
+/// CSR rows / BSR block rows). Ranges are ascending, non-empty, and cover
+/// `0..rows` exactly.
+pub fn balanced_row_ranges(indptr: &[usize], threads: usize) -> Vec<(usize, usize)> {
+    let rows = indptr.len().saturating_sub(1);
+    if rows == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(rows);
+    let total = indptr[rows];
+    let mut ranges = Vec::with_capacity(threads);
+    let mut r0 = 0usize;
+    for t in 0..threads {
+        if r0 >= rows {
+            break;
+        }
+        // Cumulative-nnz boundary this chunk should reach.
+        let target = total * (t + 1) / threads;
+        let mut r1 = r0 + 1;
+        while r1 < rows && indptr[r1] < target {
+            r1 += 1;
+        }
+        if t + 1 == threads {
+            r1 = rows;
+        }
+        ranges.push((r0, r1));
+        r0 = r1;
+    }
+    if let Some(last) = ranges.last_mut() {
+        last.1 = rows;
+    }
+    ranges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn batch_class_rounds_up() {
+        assert_eq!(batch_class(0), 1);
+        assert_eq!(batch_class(1), 1);
+        assert_eq!(batch_class(3), 4);
+        assert_eq!(batch_class(256), 256);
+        assert_eq!(batch_class(257), 512);
+    }
+
+    #[test]
+    fn balanced_ranges_cover_and_balance() {
+        // 6 rows, nnz = [10, 0, 0, 0, 0, 10].
+        let indptr = vec![0, 10, 10, 10, 10, 10, 20];
+        let r = balanced_row_ranges(&indptr, 2);
+        assert_eq!(r.first().unwrap().0, 0);
+        assert_eq!(r.last().unwrap().1, 6);
+        for w in r.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "ranges contiguous");
+        }
+        for &(a, b) in &r {
+            assert!(a < b, "non-empty range");
+        }
+        // The heavy first row ends the first chunk quickly.
+        assert!(r[0].1 <= 5);
+    }
+
+    #[test]
+    fn balanced_ranges_degenerate_cases() {
+        assert!(balanced_row_ranges(&[0], 4).is_empty());
+        let r = balanced_row_ranges(&[0, 3], 8);
+        assert_eq!(r, vec![(0, 1)]);
+        // All-empty rows still get covered.
+        let r = balanced_row_ranges(&[0, 0, 0, 0], 2);
+        assert_eq!(r.first().unwrap().0, 0);
+        assert_eq!(r.last().unwrap().1, 3);
+    }
+
+    #[test]
+    fn structure_hash_ignores_dense_values_but_not_shape() {
+        let a = SparseMatrix::dense(vec![1.0; 12], 3, 4);
+        let b = SparseMatrix::dense(vec![2.0; 12], 3, 4);
+        let c = SparseMatrix::dense(vec![1.0; 12], 4, 3);
+        assert_eq!(a.structure_hash(), b.structure_hash());
+        assert_ne!(a.structure_hash(), c.structure_hash());
+    }
+
+    #[test]
+    fn structure_hash_sees_csr_pattern() {
+        let mut rng = Rng::new(11);
+        let a = crate::sparsity::csr::CsrMatrix::random_row_uniform(16, 16, 0.5, &mut rng);
+        let b = crate::sparsity::csr::CsrMatrix::random_row_uniform(16, 16, 0.5, &mut rng);
+        let (ha, hb) = (
+            SparseMatrix::Csr(a).structure_hash(),
+            SparseMatrix::Csr(b).structure_hash(),
+        );
+        assert_ne!(ha, hb, "independent samples should differ");
+    }
+}

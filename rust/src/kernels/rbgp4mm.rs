@@ -11,9 +11,19 @@
 //!   dense micro-GEMM over all `|G_r.U|·|G_b.U|` repeated rows, so every
 //!   packed element is reused `row_repetition` times from L1
 //!
-//! Pack reuse is maximized by iterating `(v_o, u_i)` on the outside and
-//! walking `G_o`'s *right* adjacency: one packed panel serves every tile row
-//! `u_o` adjacent to `v_o` (d_r(G_o) tile rows × row_repetition rows each).
+//! All derived structure — flattened intra-tile column offsets, the
+//! `v_o → (u_o, k_o)` reverse adjacency, the pack-panel layout, and one
+//! scratch arena per worker thread — lives in an [`Rbgp4Plan`] built once
+//! per `(mask, batch class, threads)` (see [`crate::kernels::plan`]).
+//! `rbgp4mm_with_plan` / `rbgp4mm_parallel_with_plan` run allocation-free
+//! from a plan; the historical free functions build a transient plan per
+//! call and remain the "per-call" baseline the benches compare against.
+//!
+//! Pack reuse is maximized by iterating `(v_o, u_i)` on the outside: one
+//! packed panel serves every tile row `u_o` adjacent to `v_o`
+//! (`d_r(G_o)` tile rows × `row_repetition` rows each), and the repetition
+//! group is processed two output rows at a time so each packed element is
+//! read once per *pair* of rows.
 
 use crate::sparsity::rbgp4::{Rbgp4Mask, Rbgp4Matrix};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -68,34 +78,123 @@ pub fn rbgp4mm_naive(w: &Rbgp4Matrix, i: &[f32], o: &mut [f32], n: usize) {
     }
 }
 
-/// Column-block size for the packed panel: chosen so (tile_row_nnz + group)
-/// rows of NC f32 stay L1/L2-resident for the paper's configs. Perf §L3
-/// iter 2 swept {128, 256, 512, 1024}: 512 is 17 % faster than 256 on the
-/// Table-2 config (2 KiB per panel row amortizes the pack copy without
-/// spilling L2).
+/// Maximum column-block size for the packed panel: chosen so (tile_row_nnz
+/// + group) rows of NC f32 stay L1/L2-resident for the paper's configs.
+/// Perf §L3 iter 2 swept {128, 256, 512, 1024}: 512 is 17 % faster than 256
+/// on the Table-2 config (2 KiB per panel row amortizes the pack copy
+/// without spilling L2). Plans tighten the panel stride to the batch class
+/// when it is smaller, which keeps the pack footprint minimal at small n.
 const NC: usize = 512;
 
-/// Optimized serial kernel: gather-pack + grouped micro-GEMM (see module
-/// docs). Iterates `(v_o, u_i)`, packs once, reuses the panel across all
-/// adjacent tile rows and all repeated rows.
-pub fn rbgp4mm(w: &Rbgp4Matrix, i: &[f32], o: &mut [f32], n: usize) {
+/// Execution plan for one RBGP4 mask at one batch class / thread count:
+/// everything `rbgp4mm` derives from the succinct index, computed once.
+pub struct Rbgp4Plan {
+    /// Flattened `(m_i × tile_row_nnz)` intra-tile column offsets.
+    pub(crate) local_cols: Vec<u32>,
+    pub(crate) trn: usize,
+    /// For each `v_o`: the `(u_o, k_o)` pairs whose tile row consumes this
+    /// tile column — `G_o`'s right adjacency with the compact k-offset
+    /// precomputed (replaces a per-call binary search).
+    pub(crate) vo_targets: Vec<Vec<(u32, u32)>>,
+    /// Column stride of the packed panel (≤ NC, tightened to the batch
+    /// class so small batches keep a small L1 footprint).
+    pub(crate) stride: usize,
+    /// One pack arena per worker thread, each `trn × stride` floats.
+    pub(crate) arenas: Vec<Vec<f32>>,
+}
+
+impl Rbgp4Plan {
+    /// Derive the plan for `mask`, an expected batch size `n` (the plan is
+    /// correct for any `n`; the panel stride is merely tuned for this one),
+    /// and up to `threads` workers (clamped to the `m_o` tile rows).
+    pub fn build(mask: &Rbgp4Mask, n: usize, threads: usize) -> Rbgp4Plan {
+        let c = &mask.config;
+        let trn = c.tile_row_nnz();
+        let mut lc = Vec::with_capacity(c.gi.nu * trn);
+        for ui in 0..c.gi.nu {
+            for vr in 0..c.gr.1 {
+                for &vi in &mask.gi.adj[ui] {
+                    for vb in 0..c.gb.1 {
+                        lc.push(((vr * c.gi.nv + vi) * c.gb.1 + vb) as u32);
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(lc.len(), c.gi.nu * trn);
+        let mut vo_targets = vec![Vec::new(); c.go.nv];
+        for uo in 0..c.go.nu {
+            for (ko, &vo) in mask.go.adj[uo].iter().enumerate() {
+                vo_targets[vo].push((uo as u32, ko as u32));
+            }
+        }
+        let stride = NC.min(n.max(1).next_power_of_two());
+        let workers = threads.max(1).min(c.go.nu);
+        let arenas = (0..workers).map(|_| vec![0.0f32; trn * stride]).collect();
+        Rbgp4Plan {
+            local_cols: lc,
+            trn,
+            vo_targets,
+            stride,
+            arenas,
+        }
+    }
+
+    /// Worker threads this plan provisions arenas for.
+    pub fn threads(&self) -> usize {
+        self.arenas.len()
+    }
+
+    /// Packed-panel column stride.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+}
+
+/// Optimized serial kernel executing from a prebuilt plan: gather-pack +
+/// pair-wise grouped micro-GEMM, no allocation, no index derivation.
+pub fn rbgp4mm_with_plan(w: &Rbgp4Matrix, plan: &mut Rbgp4Plan, i: &[f32], o: &mut [f32], n: usize) {
     let mask = &w.mask;
     assert_eq!(i.len(), mask.cols() * n);
     assert_eq!(o.len(), mask.rows() * n);
+    let c = &mask.config;
+    assert_eq!(plan.vo_targets.len(), c.go.nv, "plan built for another mask");
     o.fill(0.0);
-    let radj_o = mask.go.right_adj();
-    let lc = local_cols(mask);
-    let mut pack = vec![0.0f32; mask.config.tile_row_nnz() * NC];
+    let Rbgp4Plan {
+        ref local_cols,
+        trn,
+        ref vo_targets,
+        stride,
+        ref mut arenas,
+    } = *plan;
+    let (mr, mi, mb) = (c.gr.0, c.gi.nu, c.gb.0);
+    let rn = c.row_nnz();
+    let rep = c.row_repetition();
+    let pack = &mut arenas[0];
     let mut n0 = 0;
     while n0 < n {
-        let nb = NC.min(n - n0);
-        for vo in 0..mask.config.go.nv {
-            for (ui, lci) in lc.iter().enumerate() {
-                pack_panel(mask, i, n, n0, nb, vo, lci, &mut pack);
-                for &uo in &radj_o[vo] {
-                    // ko = position of vo within adj_o[uo] (compact k offset).
-                    let ko = mask.go.adj[uo].binary_search(&vo).expect("vo adjacent");
-                    group_micro_gemm(w, o, n, n0, nb, uo, ui, ko, &pack);
+        let nb = stride.min(n - n0);
+        for (vo, targets) in vo_targets.iter().enumerate() {
+            for ui in 0..mi {
+                let lci = &local_cols[ui * trn..(ui + 1) * trn];
+                pack_panel(mask, i, n, n0, nb, vo, lci, pack, stride);
+                for &(uo, ko) in targets {
+                    let uo = uo as usize;
+                    let row_of = |g: usize| ((uo * mr + g / mb) * mi + ui) * mb + g % mb;
+                    rep_group_gemm(
+                        &w.data,
+                        rn,
+                        ko as usize * trn,
+                        trn,
+                        o,
+                        n,
+                        n0,
+                        nb,
+                        rep,
+                        &row_of,
+                        &row_of,
+                        pack,
+                        stride,
+                    );
                 }
             }
         }
@@ -103,8 +202,19 @@ pub fn rbgp4mm(w: &Rbgp4Matrix, i: &[f32], o: &mut [f32], n: usize) {
     }
 }
 
+/// Serial kernel, per-call form: builds a transient plan and executes. This
+/// re-derives `local_cols` and allocates the pack buffer every call — kept
+/// as the baseline the plan cache is benchmarked against (and for one-shot
+/// callers).
+pub fn rbgp4mm(w: &Rbgp4Matrix, i: &[f32], o: &mut [f32], n: usize) {
+    let mut plan = Rbgp4Plan::build(&w.mask, n, 1);
+    rbgp4mm_with_plan(w, &mut plan, i, o, n);
+}
+
 /// Gather the `tile_row_nnz` rows of `I` that tile column `v_o` and intra-
-/// tile pattern `u_i` touch, restricted to columns [n0, n0+nb), into `pack`.
+/// tile pattern `u_i` touch, restricted to columns [n0, n0+nb), into `pack`
+/// (panel row stride `stride`).
+#[allow(clippy::too_many_arguments)]
 #[inline]
 fn pack_panel(
     mask: &Rbgp4Mask,
@@ -113,110 +223,179 @@ fn pack_panel(
     n0: usize,
     nb: usize,
     vo: usize,
-    lci: &[usize],
+    lci: &[u32],
     pack: &mut [f32],
+    stride: usize,
 ) {
     let tk = mask.config.tile_k();
     let tile_base = vo * tk;
     for (p, &off) in lci.iter().enumerate() {
-        let src = (tile_base + off) * n + n0;
-        pack[p * NC..p * NC + nb].copy_from_slice(&i[src..src + nb]);
+        let src = (tile_base + off as usize) * n + n0;
+        pack[p * stride..p * stride + nb].copy_from_slice(&i[src..src + nb]);
     }
 }
 
-/// Accumulate the contribution of step `ko` into every row of the
-/// `(u_o, u_i)` repetition group: a dense (group × tile_row_nnz)·(tile_row_nnz
-/// × nb) micro-GEMM against the packed panel.
-#[inline]
-fn group_micro_gemm(
-    w: &Rbgp4Matrix,
+/// Accumulate the contribution of one packed step into every row of a
+/// repetition group, two output rows at a time so each packed element is
+/// loaded once per row *pair*. `wrow_of`/`orow_of` map the group index
+/// `g ∈ [0, rep)` to the weight row (global) and the output row (global or
+/// chunk-local); both must be strictly increasing in `g`.
+#[allow(clippy::too_many_arguments)]
+fn rep_group_gemm(
+    wdata: &[f32],
+    rn: usize,
+    kbase: usize,
+    trn: usize,
     o: &mut [f32],
-    n: usize,
+    ostride: usize,
     n0: usize,
     nb: usize,
-    uo: usize,
-    ui: usize,
-    ko: usize,
+    rep: usize,
+    wrow_of: &dyn Fn(usize) -> usize,
+    orow_of: &dyn Fn(usize) -> usize,
     pack: &[f32],
+    pstride: usize,
 ) {
-    let c = &w.mask.config;
-    let (mr, mi, mb) = (c.gr.0, c.gi.nu, c.gb.0);
-    let trn = c.tile_row_nnz();
-    let rn = c.row_nnz();
-    let kbase = ko * trn;
-    for ur in 0..mr {
-        for ub in 0..mb {
-            let u = ((uo * mr + ur) * mi + ui) * mb + ub;
-            let wrow = &w.data[u * rn + kbase..u * rn + kbase + trn];
-            let orow = &mut o[u * n + n0..u * n + n0 + nb];
-            // One output row vs the whole packed panel; 4-wide panel
-            // unroll (perf §L3 iter 1: within noise of 2-wide — kept for
-            // fewer orow passes at large tile_row_nnz).
-            let mut p = 0;
-            while p + 4 <= trn {
-                let (a0, a1, a2, a3) = (wrow[p], wrow[p + 1], wrow[p + 2], wrow[p + 3]);
-                let r0 = &pack[p * NC..p * NC + nb];
-                let r1 = &pack[(p + 1) * NC..(p + 1) * NC + nb];
-                let r2 = &pack[(p + 2) * NC..(p + 2) * NC + nb];
-                let r3 = &pack[(p + 3) * NC..(p + 3) * NC + nb];
-                for cix in 0..nb {
-                    orow[cix] += a0 * r0[cix] + a1 * r1[cix] + a2 * r2[cix] + a3 * r3[cix];
-                }
-                p += 4;
-            }
-            while p < trn {
-                let a = wrow[p];
-                let r = &pack[p * NC..p * NC + nb];
-                for cix in 0..nb {
-                    orow[cix] += a * r[cix];
-                }
-                p += 1;
-            }
+    let mut g = 0;
+    while g + 2 <= rep {
+        let (uw0, uw1) = (wrow_of(g), wrow_of(g + 1));
+        let (ou0, ou1) = (orow_of(g), orow_of(g + 1));
+        debug_assert!(ou0 < ou1, "orow_of must be increasing");
+        let w0 = &wdata[uw0 * rn + kbase..uw0 * rn + kbase + trn];
+        let w1 = &wdata[uw1 * rn + kbase..uw1 * rn + kbase + trn];
+        let (lo, hi) = o.split_at_mut(ou1 * ostride);
+        let orow0 = &mut lo[ou0 * ostride + n0..ou0 * ostride + n0 + nb];
+        let orow1 = &mut hi[n0..n0 + nb];
+        micro_2row(w0, w1, orow0, orow1, trn, nb, pack, pstride);
+        g += 2;
+    }
+    if g < rep {
+        let uw = wrow_of(g);
+        let ou = orow_of(g);
+        let wrow = &wdata[uw * rn + kbase..uw * rn + kbase + trn];
+        let orow = &mut o[ou * ostride + n0..ou * ostride + n0 + nb];
+        micro_1row(wrow, orow, trn, nb, pack, pstride);
+    }
+}
+
+/// Two output rows against the whole packed panel, 2-wide panel unroll.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_2row(
+    w0: &[f32],
+    w1: &[f32],
+    o0: &mut [f32],
+    o1: &mut [f32],
+    trn: usize,
+    nb: usize,
+    pack: &[f32],
+    pstride: usize,
+) {
+    let mut p = 0;
+    while p + 2 <= trn {
+        let (a0, a1) = (w0[p], w0[p + 1]);
+        let (b0, b1) = (w1[p], w1[p + 1]);
+        let r0 = &pack[p * pstride..p * pstride + nb];
+        let r1 = &pack[(p + 1) * pstride..(p + 1) * pstride + nb];
+        for cix in 0..nb {
+            let (x0, x1) = (r0[cix], r1[cix]);
+            o0[cix] += a0 * x0 + a1 * x1;
+            o1[cix] += b0 * x0 + b1 * x1;
+        }
+        p += 2;
+    }
+    if p < trn {
+        let (a, b) = (w0[p], w1[p]);
+        let r = &pack[p * pstride..p * pstride + nb];
+        for cix in 0..nb {
+            o0[cix] += a * r[cix];
+            o1[cix] += b * r[cix];
         }
     }
 }
 
-/// Parallel kernel: output tile rows `u_o` are distributed across threads
-/// (disjoint output), each with a private pack buffer. Pack reuse inside a
-/// thread is per-(u_o): `d_o · m_i` packs serving `row_repetition` rows each.
-pub fn rbgp4mm_parallel(w: &Rbgp4Matrix, i: &[f32], o: &mut [f32], n: usize, threads: usize) {
+/// One output row against the whole packed panel, 4-wide panel unroll
+/// (perf §L3 iter 1: fewer orow passes at large tile_row_nnz).
+#[inline]
+fn micro_1row(wrow: &[f32], orow: &mut [f32], trn: usize, nb: usize, pack: &[f32], pstride: usize) {
+    let mut p = 0;
+    while p + 4 <= trn {
+        let (a0, a1, a2, a3) = (wrow[p], wrow[p + 1], wrow[p + 2], wrow[p + 3]);
+        let r0 = &pack[p * pstride..p * pstride + nb];
+        let r1 = &pack[(p + 1) * pstride..(p + 1) * pstride + nb];
+        let r2 = &pack[(p + 2) * pstride..(p + 2) * pstride + nb];
+        let r3 = &pack[(p + 3) * pstride..(p + 3) * pstride + nb];
+        for cix in 0..nb {
+            orow[cix] += a0 * r0[cix] + a1 * r1[cix] + a2 * r2[cix] + a3 * r3[cix];
+        }
+        p += 4;
+    }
+    while p < trn {
+        let a = wrow[p];
+        let r = &pack[p * pstride..p * pstride + nb];
+        for cix in 0..nb {
+            orow[cix] += a * r[cix];
+        }
+        p += 1;
+    }
+}
+
+/// Parallel kernel executing from a prebuilt plan: output tile rows `u_o`
+/// are distributed across the plan's workers (disjoint output), each with
+/// its private pack arena. Pack reuse inside a thread is per-(u_o):
+/// `d_o · m_i` packs serving `row_repetition` rows each.
+pub fn rbgp4mm_parallel_with_plan(
+    w: &Rbgp4Matrix,
+    plan: &mut Rbgp4Plan,
+    i: &[f32],
+    o: &mut [f32],
+    n: usize,
+) {
+    if plan.arenas.len() <= 1 {
+        rbgp4mm_with_plan(w, plan, i, o, n);
+        return;
+    }
     let mask = &w.mask;
     assert_eq!(i.len(), mask.cols() * n);
     assert_eq!(o.len(), mask.rows() * n);
     let c = &mask.config;
+    assert_eq!(plan.vo_targets.len(), c.go.nv, "plan built for another mask");
     let m_o = c.go.nu;
-    let threads = threads.max(1).min(m_o);
-    if threads == 1 {
-        rbgp4mm(w, i, o, n);
-        return;
-    }
-    let lc = local_cols(mask);
     let tile_rows = c.tile_m() * n; // output elems per tile row
+    let Rbgp4Plan {
+        ref local_cols,
+        trn,
+        vo_targets: _,
+        stride,
+        ref mut arenas,
+    } = *plan;
     let next = AtomicUsize::new(0);
     // Hand out tile rows dynamically; each chunk writes a disjoint region.
     let o_ptr = SendPtr(o.as_mut_ptr());
     std::thread::scope(|scope| {
-        for _ in 0..threads {
-            let lc = &lc;
+        for pack in arenas.iter_mut() {
             let next = &next;
             let o_ptr = &o_ptr;
-            scope.spawn(move || {
-                let mut pack = vec![0.0f32; c.tile_row_nnz() * NC];
-                loop {
-                    let uo = next.fetch_add(1, Ordering::Relaxed);
-                    if uo >= m_o {
-                        break;
-                    }
-                    // Safety: each uo owns rows [uo*TM, (uo+1)*TM) — disjoint.
-                    let ochunk = unsafe {
-                        std::slice::from_raw_parts_mut(o_ptr.0.add(uo * tile_rows), tile_rows)
-                    };
-                    ochunk.fill(0.0);
-                    tile_row_worker(w, i, ochunk, n, uo, lc, &mut pack);
+            scope.spawn(move || loop {
+                let uo = next.fetch_add(1, Ordering::Relaxed);
+                if uo >= m_o {
+                    break;
                 }
+                // Safety: each uo owns rows [uo*TM, (uo+1)*TM) — disjoint.
+                let ochunk = unsafe {
+                    std::slice::from_raw_parts_mut(o_ptr.0.add(uo * tile_rows), tile_rows)
+                };
+                ochunk.fill(0.0);
+                tile_row_worker(w, i, ochunk, n, uo, local_cols, trn, stride, pack);
             });
         }
     });
+}
+
+/// Parallel kernel, per-call form: builds a transient plan and executes.
+pub fn rbgp4mm_parallel(w: &Rbgp4Matrix, i: &[f32], o: &mut [f32], n: usize, threads: usize) {
+    let mut plan = Rbgp4Plan::build(&w.mask, n, threads);
+    rbgp4mm_parallel_with_plan(w, &mut plan, i, o, n);
 }
 
 struct SendPtr(*mut f32);
@@ -224,41 +403,48 @@ unsafe impl Sync for SendPtr {}
 
 /// Compute one output tile row (all rows with this `u_o`) into `ochunk`
 /// (length tile_m × n, starting at global row `uo·tile_m`).
+#[allow(clippy::too_many_arguments)]
 fn tile_row_worker(
     w: &Rbgp4Matrix,
     i: &[f32],
     ochunk: &mut [f32],
     n: usize,
     uo: usize,
-    lc: &[Vec<usize>],
+    local_cols: &[u32],
+    trn: usize,
+    stride: usize,
     pack: &mut [f32],
 ) {
     let mask = &w.mask;
     let c = &mask.config;
-    let (mr, mi, mb) = (c.gr.0, c.gi.nu, c.gb.0);
-    let trn = c.tile_row_nnz();
+    let (mi, mb) = (c.gi.nu, c.gb.0);
     let rn = c.row_nnz();
+    let rep = c.row_repetition();
+    let tm = c.tile_m();
     let mut n0 = 0;
     while n0 < n {
-        let nb = NC.min(n - n0);
+        let nb = stride.min(n - n0);
         for (ko, &vo) in mask.go.adj[uo].iter().enumerate() {
-            for (ui, lci) in lc.iter().enumerate() {
-                pack_panel(mask, i, n, n0, nb, vo, lci, pack);
-                let kbase = ko * trn;
-                for ur in 0..mr {
-                    for ub in 0..mb {
-                        let local_u = (ur * mi + ui) * mb + ub;
-                        let global_u = uo * c.tile_m() + local_u;
-                        let wrow = &w.data[global_u * rn + kbase..global_u * rn + kbase + trn];
-                        let orow = &mut ochunk[local_u * n + n0..local_u * n + n0 + nb];
-                        for (p, &a) in wrow.iter().enumerate() {
-                            let r = &pack[p * NC..p * NC + nb];
-                            for cix in 0..nb {
-                                orow[cix] += a * r[cix];
-                            }
-                        }
-                    }
-                }
+            for ui in 0..mi {
+                let lci = &local_cols[ui * trn..(ui + 1) * trn];
+                pack_panel(mask, i, n, n0, nb, vo, lci, pack, stride);
+                let local_row = |g: usize| ((g / mb) * mi + ui) * mb + g % mb;
+                let global_row = |g: usize| uo * tm + local_row(g);
+                rep_group_gemm(
+                    &w.data,
+                    rn,
+                    ko * trn,
+                    trn,
+                    ochunk,
+                    n,
+                    n0,
+                    nb,
+                    rep,
+                    &global_row,
+                    &local_row,
+                    pack,
+                    stride,
+                );
             }
         }
         n0 += nb;
@@ -300,6 +486,15 @@ mod tests {
             ("parallel", {
                 let mut o = vec![0.0; m * n];
                 rbgp4mm_parallel(&w, &i, &mut o, n, 4);
+                o
+            }),
+            ("cached-plan", {
+                let mut plan = Rbgp4Plan::build(&w.mask, n, 1);
+                let mut o = vec![0.0; m * n];
+                // Execute twice from the same plan: the second run must not
+                // be perturbed by scratch left over from the first.
+                rbgp4mm_with_plan(&w, &mut plan, &i, &mut o, n);
+                rbgp4mm_with_plan(&w, &mut plan, &i, &mut o, n);
                 o
             }),
         ] {
@@ -371,6 +566,18 @@ mod tests {
     }
 
     #[test]
+    fn batch_of_one() {
+        // n = 1: the panel stride degenerates to a single column.
+        let c = Rbgp4Config {
+            go: GraphSpec::new(4, 4, 0.5),
+            gr: (2, 1),
+            gi: GraphSpec::new(4, 4, 0.5),
+            gb: (1, 2),
+        };
+        check_all_kernels(c, 1, 1007);
+    }
+
+    #[test]
     fn parallel_thread_counts_agree() {
         let c = Rbgp4Config {
             go: GraphSpec::new(8, 8, 0.5),
@@ -394,6 +601,49 @@ mod tests {
     }
 
     #[test]
+    fn plan_reuses_across_inputs_and_threads() {
+        let c = Rbgp4Config {
+            go: GraphSpec::new(4, 8, 0.5),
+            gr: (2, 1),
+            gi: GraphSpec::new(4, 4, 0.5),
+            gb: (2, 1),
+        };
+        let (w, mut rng) = mk(c, 1008);
+        let (m, k, n) = (w.mask.rows(), w.mask.cols(), 13);
+        let mut plan = Rbgp4Plan::build(&w.mask, n, 4);
+        assert_eq!(plan.threads(), 4);
+        for trial in 0..3 {
+            let i = rng.normal_vec_f32(k * n, 1.0);
+            let mut o = vec![0.0; m * n];
+            rbgp4mm_parallel_with_plan(&w, &mut plan, &i, &mut o, n);
+            let mut oracle = vec![0.0; m * n];
+            gemm_naive(&w.to_dense(), &i, &mut oracle, m, k, n);
+            for (a, b) in o.iter().zip(&oracle) {
+                assert!(
+                    (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                    "trial {trial}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_stride_tracks_batch_class() {
+        let c = Rbgp4Config {
+            go: GraphSpec::new(4, 4, 0.5),
+            gr: (2, 1),
+            gi: GraphSpec::new(4, 4, 0.5),
+            gb: (2, 2),
+        };
+        let mut rng = Rng::new(1009);
+        let mask = Rbgp4Mask::sample(c, &mut rng).unwrap();
+        assert_eq!(Rbgp4Plan::build(&mask, 1, 1).stride(), 1);
+        assert_eq!(Rbgp4Plan::build(&mask, 9, 1).stride(), 16);
+        assert_eq!(Rbgp4Plan::build(&mask, 256, 1).stride(), 256);
+        assert_eq!(Rbgp4Plan::build(&mask, 4096, 1).stride(), NC);
+    }
+
+    #[test]
     fn local_cols_sorted_and_sized() {
         let c = Rbgp4Config {
             go: GraphSpec::new(4, 4, 0.5),
@@ -408,6 +658,12 @@ mod tests {
             assert_eq!(cols.len(), c.tile_row_nnz());
             assert!(cols.windows(2).all(|x| x[0] < x[1]));
             assert!(cols.iter().all(|&x| x < c.tile_k()));
+        }
+        // The plan's flattened offsets agree with the reference derivation.
+        let plan = Rbgp4Plan::build(&w.mask, 8, 1);
+        for (ui, cols) in lc.iter().enumerate() {
+            let flat = &plan.local_cols[ui * plan.trn..(ui + 1) * plan.trn];
+            assert!(flat.iter().map(|&x| x as usize).eq(cols.iter().copied()));
         }
     }
 }

@@ -1,0 +1,523 @@
+//! The [`SparseKernel`] trait and the [`Pattern`]-keyed kernel registry.
+//!
+//! Every kernel family (dense / CSR / BSR / RBGP4) is one implementation of
+//! [`SparseKernel`]: `build_plan` derives the reusable structure once,
+//! `execute` runs allocation-free from that plan, and `execute_naive` is the
+//! family's reference path (the oracle side of the property tests and the
+//! per-call baseline of the benches). The naive / blocked / parallel
+//! variants that used to be separate free functions are *plan strategies*:
+//! the plan's thread count and precomputed partitions select among them.
+//!
+//! The registry is keyed by [`Pattern`] — the same key
+//! [`crate::gpusim::KernelKind::pattern`] exposes — so the V100 cost model
+//! and the measured CPU kernels dispatch off one shared key, and
+//! [`KernelRegistry::kind_for`] maps a concrete matrix to the cost-model
+//! kind for apples-to-apples model-vs-measured rows in the bench harness.
+
+use crate::gpusim::KernelKind;
+use crate::kernels::plan::{
+    balanced_row_ranges, batch_class, KernelPlan, PlanRequest, PlanState, SparseMatrix,
+};
+use crate::kernels::{bsr_sdmm, csr_sdmm, dense, rbgp4mm};
+use crate::sparsity::memory::Pattern;
+use std::time::Instant;
+
+/// One kernel family, dispatchable by [`Pattern`].
+pub trait SparseKernel: Send + Sync {
+    /// The registry key this family serves (block sizes are ignored when
+    /// matching — `Pattern::Block(4,4)` and `Pattern::Block(2,3)` are one
+    /// family).
+    fn pattern(&self) -> Pattern;
+
+    /// Stable display name (bench rows, error messages).
+    fn name(&self) -> &'static str;
+
+    /// Derive the execution plan for `(w, batch class, threads)`. Called
+    /// once per cache key; everything input-independent happens here.
+    fn build_plan(&self, w: &SparseMatrix, req: &PlanRequest) -> anyhow::Result<KernelPlan>;
+
+    /// Hot path: `o = W · i` from a prebuilt plan. `i` is (cols × n)
+    /// row-major, `o` is (rows × n). No allocation, no index derivation.
+    fn execute(
+        &self,
+        w: &SparseMatrix,
+        plan: &mut KernelPlan,
+        i: &[f32],
+        o: &mut [f32],
+        n: usize,
+    ) -> anyhow::Result<()>;
+
+    /// Reference path (oracle / per-call baseline) without a plan.
+    fn execute_naive(
+        &self,
+        w: &SparseMatrix,
+        i: &[f32],
+        o: &mut [f32],
+        n: usize,
+    ) -> anyhow::Result<()>;
+}
+
+fn check_shapes(w: &SparseMatrix, i: &[f32], o: &[f32], n: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        i.len() == w.cols() * n,
+        "input length {} != cols {} × n {}",
+        i.len(),
+        w.cols(),
+        n
+    );
+    anyhow::ensure!(
+        o.len() == w.rows() * n,
+        "output length {} != rows {} × n {}",
+        o.len(),
+        w.rows(),
+        n
+    );
+    Ok(())
+}
+
+fn plan_header(w: &SparseMatrix, req: &PlanRequest, t0: Instant, state: PlanState) -> KernelPlan {
+    KernelPlan {
+        pattern: w.pattern(),
+        rows: w.rows(),
+        cols: w.cols(),
+        batch_class: batch_class(req.n),
+        threads: req.threads.max(1),
+        build_seconds: t0.elapsed().as_secs_f64(),
+        state,
+    }
+}
+
+/// Dense GEMM family (cuBLAS stand-in). Plan: thread count only — the
+/// blocked kernel's panels are computed from the shape on the fly.
+pub struct DenseKernel;
+
+impl SparseKernel for DenseKernel {
+    fn pattern(&self) -> Pattern {
+        Pattern::Dense
+    }
+
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn build_plan(&self, w: &SparseMatrix, req: &PlanRequest) -> anyhow::Result<KernelPlan> {
+        let t0 = Instant::now();
+        match w {
+            SparseMatrix::Dense { .. } => Ok(plan_header(w, req, t0, PlanState::Dense)),
+            _ => anyhow::bail!("dense kernel got a {} matrix", w.pattern().name()),
+        }
+    }
+
+    fn execute(
+        &self,
+        w: &SparseMatrix,
+        plan: &mut KernelPlan,
+        i: &[f32],
+        o: &mut [f32],
+        n: usize,
+    ) -> anyhow::Result<()> {
+        check_shapes(w, i, o, n)?;
+        match w {
+            SparseMatrix::Dense { data, rows, cols } => {
+                if plan.threads > 1 {
+                    dense::gemm_parallel(data, i, o, *rows, *cols, n, plan.threads);
+                } else {
+                    dense::gemm_blocked(data, i, o, *rows, *cols, n);
+                }
+                Ok(())
+            }
+            _ => anyhow::bail!("dense kernel got a {} matrix", w.pattern().name()),
+        }
+    }
+
+    fn execute_naive(
+        &self,
+        w: &SparseMatrix,
+        i: &[f32],
+        o: &mut [f32],
+        n: usize,
+    ) -> anyhow::Result<()> {
+        check_shapes(w, i, o, n)?;
+        match w {
+            SparseMatrix::Dense { data, rows, cols } => {
+                dense::gemm_naive(data, i, o, *rows, *cols, n);
+                Ok(())
+            }
+            _ => anyhow::bail!("dense kernel got a {} matrix", w.pattern().name()),
+        }
+    }
+}
+
+/// Unstructured CSR family (cuSparse-CSR stand-in). Plan: contiguous row
+/// ranges balanced by non-zero count, one per worker.
+pub struct CsrKernel;
+
+impl SparseKernel for CsrKernel {
+    fn pattern(&self) -> Pattern {
+        Pattern::Unstructured
+    }
+
+    fn name(&self) -> &'static str {
+        "csr"
+    }
+
+    fn build_plan(&self, w: &SparseMatrix, req: &PlanRequest) -> anyhow::Result<KernelPlan> {
+        let t0 = Instant::now();
+        match w {
+            SparseMatrix::Csr(m) => {
+                let ranges = balanced_row_ranges(&m.indptr, req.threads.max(1));
+                Ok(plan_header(w, req, t0, PlanState::Ranges(ranges)))
+            }
+            _ => anyhow::bail!("csr kernel got a {} matrix", w.pattern().name()),
+        }
+    }
+
+    fn execute(
+        &self,
+        w: &SparseMatrix,
+        plan: &mut KernelPlan,
+        i: &[f32],
+        o: &mut [f32],
+        n: usize,
+    ) -> anyhow::Result<()> {
+        check_shapes(w, i, o, n)?;
+        match (w, &plan.state) {
+            (SparseMatrix::Csr(m), PlanState::Ranges(ranges)) => {
+                csr_sdmm::csr_sdmm_ranges(m, i, o, n, ranges);
+                Ok(())
+            }
+            _ => anyhow::bail!("csr kernel/plan mismatch"),
+        }
+    }
+
+    fn execute_naive(
+        &self,
+        w: &SparseMatrix,
+        i: &[f32],
+        o: &mut [f32],
+        n: usize,
+    ) -> anyhow::Result<()> {
+        check_shapes(w, i, o, n)?;
+        match w {
+            SparseMatrix::Csr(m) => {
+                csr_sdmm::csr_sdmm(m, i, o, n);
+                Ok(())
+            }
+            _ => anyhow::bail!("csr kernel got a {} matrix", w.pattern().name()),
+        }
+    }
+}
+
+/// Block BSR family (cuSparse-BSR stand-in). Plan: contiguous block-row
+/// ranges balanced by stored-block count.
+pub struct BsrKernel;
+
+impl SparseKernel for BsrKernel {
+    fn pattern(&self) -> Pattern {
+        Pattern::Block(4, 4)
+    }
+
+    fn name(&self) -> &'static str {
+        "bsr"
+    }
+
+    fn build_plan(&self, w: &SparseMatrix, req: &PlanRequest) -> anyhow::Result<KernelPlan> {
+        let t0 = Instant::now();
+        match w {
+            SparseMatrix::Bsr(m) => {
+                let ranges = balanced_row_ranges(&m.indptr, req.threads.max(1));
+                Ok(plan_header(w, req, t0, PlanState::Ranges(ranges)))
+            }
+            _ => anyhow::bail!("bsr kernel got a {} matrix", w.pattern().name()),
+        }
+    }
+
+    fn execute(
+        &self,
+        w: &SparseMatrix,
+        plan: &mut KernelPlan,
+        i: &[f32],
+        o: &mut [f32],
+        n: usize,
+    ) -> anyhow::Result<()> {
+        check_shapes(w, i, o, n)?;
+        match (w, &plan.state) {
+            (SparseMatrix::Bsr(m), PlanState::Ranges(ranges)) => {
+                bsr_sdmm::bsr_sdmm_ranges(m, i, o, n, ranges);
+                Ok(())
+            }
+            _ => anyhow::bail!("bsr kernel/plan mismatch"),
+        }
+    }
+
+    fn execute_naive(
+        &self,
+        w: &SparseMatrix,
+        i: &[f32],
+        o: &mut [f32],
+        n: usize,
+    ) -> anyhow::Result<()> {
+        check_shapes(w, i, o, n)?;
+        match w {
+            SparseMatrix::Bsr(m) => {
+                bsr_sdmm::bsr_sdmm(m, i, o, n);
+                Ok(())
+            }
+            _ => anyhow::bail!("bsr kernel got a {} matrix", w.pattern().name()),
+        }
+    }
+}
+
+/// RBGP4 family (the paper's Algorithm 1). Plan: the full succinct-index
+/// derivation — flattened local columns, reverse tile adjacency with
+/// k-offsets, pack layout and per-worker arenas.
+pub struct Rbgp4Kernel;
+
+impl SparseKernel for Rbgp4Kernel {
+    fn pattern(&self) -> Pattern {
+        Pattern::Rbgp4
+    }
+
+    fn name(&self) -> &'static str {
+        "rbgp4mm"
+    }
+
+    fn build_plan(&self, w: &SparseMatrix, req: &PlanRequest) -> anyhow::Result<KernelPlan> {
+        let t0 = Instant::now();
+        match w {
+            SparseMatrix::Rbgp4(m) => {
+                let plan = rbgp4mm::Rbgp4Plan::build(&m.mask, batch_class(req.n), req.threads);
+                Ok(plan_header(w, req, t0, PlanState::Rbgp4(Box::new(plan))))
+            }
+            _ => anyhow::bail!("rbgp4 kernel got a {} matrix", w.pattern().name()),
+        }
+    }
+
+    fn execute(
+        &self,
+        w: &SparseMatrix,
+        plan: &mut KernelPlan,
+        i: &[f32],
+        o: &mut [f32],
+        n: usize,
+    ) -> anyhow::Result<()> {
+        check_shapes(w, i, o, n)?;
+        match (w, &mut plan.state) {
+            (SparseMatrix::Rbgp4(m), PlanState::Rbgp4(p)) => {
+                rbgp4mm::rbgp4mm_parallel_with_plan(m, p, i, o, n);
+                Ok(())
+            }
+            _ => anyhow::bail!("rbgp4 kernel/plan mismatch"),
+        }
+    }
+
+    fn execute_naive(
+        &self,
+        w: &SparseMatrix,
+        i: &[f32],
+        o: &mut [f32],
+        n: usize,
+    ) -> anyhow::Result<()> {
+        check_shapes(w, i, o, n)?;
+        match w {
+            SparseMatrix::Rbgp4(m) => {
+                rbgp4mm::rbgp4mm_naive(m, i, o, n);
+                Ok(())
+            }
+            _ => anyhow::bail!("rbgp4 kernel got a {} matrix", w.pattern().name()),
+        }
+    }
+}
+
+/// Do two patterns name the same kernel family (block sizes disregarded)?
+fn same_family(a: Pattern, b: Pattern) -> bool {
+    std::mem::discriminant(&a) == std::mem::discriminant(&b)
+}
+
+/// The set of registered kernel families, looked up by [`Pattern`].
+pub struct KernelRegistry {
+    kernels: Vec<Box<dyn SparseKernel>>,
+}
+
+impl KernelRegistry {
+    /// All four built-in families.
+    pub fn builtin() -> KernelRegistry {
+        KernelRegistry {
+            kernels: vec![
+                Box::new(DenseKernel),
+                Box::new(CsrKernel),
+                Box::new(BsrKernel),
+                Box::new(Rbgp4Kernel),
+            ],
+        }
+    }
+
+    /// Look up the family serving `pattern`.
+    pub fn get(&self, pattern: Pattern) -> anyhow::Result<&dyn SparseKernel> {
+        self.kernels
+            .iter()
+            .map(|k| k.as_ref())
+            .find(|k| same_family(k.pattern(), pattern))
+            .ok_or_else(|| anyhow::anyhow!("no kernel registered for pattern {}", pattern.name()))
+    }
+
+    /// Look up the family serving a concrete matrix.
+    pub fn for_matrix(&self, w: &SparseMatrix) -> anyhow::Result<&dyn SparseKernel> {
+        self.get(w.pattern())
+    }
+
+    /// Look up the family serving a cost-model kind — cost model and
+    /// measured kernels share the `Pattern` key.
+    pub fn for_kind(&self, kind: &KernelKind) -> anyhow::Result<&dyn SparseKernel> {
+        self.get(kind.pattern())
+    }
+
+    /// The cost-model [`KernelKind`] describing `w` (for model-vs-measured
+    /// table rows driven from one matrix value).
+    pub fn kind_for(&self, w: &SparseMatrix) -> KernelKind {
+        match w {
+            SparseMatrix::Dense { .. } => KernelKind::DenseCublas,
+            SparseMatrix::Csr(m) => KernelKind::UnstructuredCsr { sp: m.sparsity() },
+            SparseMatrix::Bsr(m) => KernelKind::BlockBsr {
+                sp: m.sparsity(),
+                bh: m.bh,
+                bw: m.bw,
+            },
+            SparseMatrix::Rbgp4(m) => KernelKind::Rbgp4 {
+                config: m.mask.config,
+            },
+        }
+    }
+
+    /// Registered family names, registry order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.kernels.iter().map(|k| k.name()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.kernels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kernels.is_empty()
+    }
+}
+
+impl Default for KernelRegistry {
+    fn default() -> Self {
+        KernelRegistry::builtin()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::plan::PlanCache;
+    use crate::sparsity::bsr::BsrMatrix;
+    use crate::sparsity::csr::CsrMatrix;
+    use crate::sparsity::rbgp4::{GraphSpec, Rbgp4Config, Rbgp4Mask, Rbgp4Matrix};
+    use crate::util::rng::Rng;
+
+    fn sample_matrices(rng: &mut Rng) -> Vec<SparseMatrix> {
+        let cfg = Rbgp4Config {
+            go: GraphSpec::new(4, 4, 0.5),
+            gr: (2, 1),
+            gi: GraphSpec::new(4, 4, 0.5),
+            gb: (2, 2),
+        };
+        let mask = Rbgp4Mask::sample(cfg, rng).unwrap();
+        let rb = Rbgp4Matrix::random(mask, rng);
+        let (m, k) = (rb.mask.rows(), rb.mask.cols());
+        vec![
+            SparseMatrix::dense(rng.normal_vec_f32(m * k, 1.0), m, k),
+            SparseMatrix::Csr(CsrMatrix::random_row_uniform(m, k, 0.75, rng)),
+            SparseMatrix::Bsr(BsrMatrix::random_block_uniform(m, k, 4, 4, 0.5, rng)),
+            SparseMatrix::Rbgp4(rb),
+        ]
+    }
+
+    #[test]
+    fn registry_covers_all_families() {
+        let reg = KernelRegistry::builtin();
+        assert_eq!(reg.len(), 4);
+        for p in [
+            Pattern::Dense,
+            Pattern::Unstructured,
+            Pattern::Block(2, 3),
+            Pattern::Rbgp4,
+        ] {
+            assert!(reg.get(p).is_ok(), "missing kernel for {}", p.name());
+        }
+    }
+
+    #[test]
+    fn plans_execute_and_match_naive() {
+        let reg = KernelRegistry::builtin();
+        let mut rng = Rng::new(400);
+        let n = 6;
+        for w in sample_matrices(&mut rng) {
+            let kernel = reg.for_matrix(&w).unwrap();
+            let i = rng.normal_vec_f32(w.cols() * n, 1.0);
+            let mut o_plan = vec![0.0; w.rows() * n];
+            let mut o_naive = vec![0.0; w.rows() * n];
+            let mut plan = kernel
+                .build_plan(&w, &PlanRequest { n, threads: 3 })
+                .unwrap();
+            kernel.execute(&w, &mut plan, &i, &mut o_plan, n).unwrap();
+            kernel.execute_naive(&w, &i, &mut o_naive, n).unwrap();
+            for (idx, (a, b)) in o_plan.iter().zip(&o_naive).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                    "{} idx {idx}: {a} vs {b}",
+                    kernel.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_matrix_is_rejected() {
+        let reg = KernelRegistry::builtin();
+        let mut rng = Rng::new(401);
+        let w = SparseMatrix::dense(rng.normal_vec_f32(16, 1.0), 4, 4);
+        let kernel = reg.get(Pattern::Rbgp4).unwrap();
+        assert!(kernel.build_plan(&w, &PlanRequest { n: 4, threads: 1 }).is_err());
+    }
+
+    #[test]
+    fn cache_hits_on_second_call() {
+        let reg = KernelRegistry::builtin();
+        let cache = PlanCache::new();
+        let mut rng = Rng::new(402);
+        let w = SparseMatrix::Csr(CsrMatrix::random_row_uniform(16, 16, 0.5, &mut rng));
+        let n = 4;
+        let i = rng.normal_vec_f32(w.cols() * n, 1.0);
+        let mut o = vec![0.0; w.rows() * n];
+        cache.execute(&reg, &w, &i, &mut o, n, 2).unwrap();
+        cache.execute(&reg, &w, &i, &mut o, n, 2).unwrap();
+        // Batch 3 shares the class-4 plan; batch 5 builds a new one.
+        let i3 = rng.normal_vec_f32(w.cols() * 3, 1.0);
+        let mut o3 = vec![0.0; w.rows() * 3];
+        cache.execute(&reg, &w, &i3, &mut o3, 3, 2).unwrap();
+        let i5 = rng.normal_vec_f32(w.cols() * 5, 1.0);
+        let mut o5 = vec![0.0; w.rows() * 5];
+        cache.execute(&reg, &w, &i5, &mut o5, 5, 2).unwrap();
+        let (hits, misses) = cache.stats();
+        assert_eq!(hits, 2);
+        assert_eq!(misses, 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn kind_for_round_trips_through_pattern() {
+        let reg = KernelRegistry::builtin();
+        let mut rng = Rng::new(403);
+        for w in sample_matrices(&mut rng) {
+            let kind = reg.kind_for(&w);
+            assert!(same_family(kind.pattern(), w.pattern()));
+            let via_kind = reg.for_kind(&kind).unwrap();
+            let via_matrix = reg.for_matrix(&w).unwrap();
+            assert_eq!(via_kind.name(), via_matrix.name());
+        }
+    }
+}

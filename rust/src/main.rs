@@ -11,7 +11,7 @@
 //!   serve       batched inference server demo over the forward artifact
 
 use rbgp::bench_harness::{table1, table2, table3};
-use rbgp::coordinator::{InferenceServer, ServerConfig, TrainConfig, Trainer};
+use rbgp::coordinator::{InferenceServer, ServerConfig};
 use rbgp::data::CifarLike;
 use rbgp::graph::{product_many, ramanujan, spectral, BipartiteGraph};
 use rbgp::gpusim::explain_fig1;
@@ -22,6 +22,13 @@ use rbgp::util::cli::Args;
 use rbgp::util::fmt_mb;
 use rbgp::util::rng::Rng;
 use std::path::PathBuf;
+
+#[cfg(not(feature = "xla"))]
+use rbgp::coordinator::{BatchModel, NativeSparseModel, NativeTrainer};
+#[cfg(not(feature = "xla"))]
+use rbgp::train_native::NativeTrainConfig;
+#[cfg(feature = "xla")]
+use rbgp::coordinator::{TrainConfig, Trainer};
 
 const USAGE: &str = "\
 rbgp — Ramanujan Bipartite Graph Products for block sparse neural networks
@@ -42,7 +49,10 @@ COMMANDS
   serve      [--artifacts DIR] [--requests 512] [--clients 4]
              [--checkpoint ckpt.json]
 
-Run `make artifacts` before train/serve.";
+With the `xla` feature, train/serve execute AOT artifacts on PJRT (run
+`make artifacts` first). Without it, they run the native plan-cached
+backends: `train` fits the masked MLP on the synthetic task, `serve`
+serves the RBGP4 demo model from the kernel plan cache.";
 
 fn main() {
     let args = Args::from_env();
@@ -225,6 +235,7 @@ fn explain_cmd(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn train_cmd(args: &Args) -> anyhow::Result<()> {
     let dir = artifacts_dir(args);
     let config = TrainConfig {
@@ -250,18 +261,80 @@ fn train_cmd(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn train_cmd(args: &Args) -> anyhow::Result<()> {
+    for flag in ["save", "load"] {
+        anyhow::ensure!(
+            args.get(flag).is_none(),
+            "--{flag} requires the `xla` feature (checkpointing is part of the AOT trainer); \
+             rebuild with `--features xla`"
+        );
+    }
+    anyhow::ensure!(
+        !args.flag("distill"),
+        "--distill requires the `xla` feature (the KD artifact runs on PJRT); \
+         rebuild with `--features xla`"
+    );
+    let config = NativeTrainConfig {
+        steps: args.get_usize("steps", 300)?,
+        batch: args.get_usize("batch", 64)?,
+        lr: args.get_f64("lr", 0.05)? as f32,
+        seed: args.get_u64("seed", 0)?,
+        ..NativeTrainConfig::default()
+    };
+    let in_dim = args.get_usize("in-dim", 256)?;
+    let hidden = args.get_usize("hidden", 256)?;
+    let classes = args.get_usize("classes", 16)?;
+    let sp = args.get_f64("sp", 0.75)?;
+    println!(
+        "xla feature disabled — native plan-cached trainer \
+         (MLP {in_dim}->{hidden}->{classes}, RBGP4 mask @ {:.1}% sparsity)",
+        sp * 100.0
+    );
+    let mut trainer = NativeTrainer::new(in_dim, hidden, classes, Pattern::Rbgp4, sp, config)?;
+    trainer.run()?;
+    let (hits, misses) = trainer.cache().stats();
+    println!("plan cache: {hits} hits, {misses} builds");
+    Ok(())
+}
+
 fn serve_cmd(args: &Args) -> anyhow::Result<()> {
-    let dir = artifacts_dir(args);
     let total = args.get_usize("requests", 512)?;
     let clients = args.get_usize("clients", 4)?.max(1);
-    println!("starting inference server from {} …", dir.display());
-    let server = InferenceServer::start(
-        dir,
-        ServerConfig {
-            checkpoint: args.get("checkpoint").map(std::path::PathBuf::from),
-            ..ServerConfig::default()
-        },
-    )?;
+    #[cfg(feature = "xla")]
+    let server = {
+        let dir = artifacts_dir(args);
+        println!("starting inference server from {} …", dir.display());
+        InferenceServer::start(
+            dir,
+            ServerConfig {
+                checkpoint: args.get("checkpoint").map(std::path::PathBuf::from),
+                ..ServerConfig::default()
+            },
+        )?
+    };
+    #[cfg(not(feature = "xla"))]
+    let server = {
+        let _ = artifacts_dir(args); // artifacts unused without PJRT
+        anyhow::ensure!(
+            args.get("checkpoint").is_none(),
+            "--checkpoint requires the `xla` feature (checkpoints target the AOT artifact); \
+             the native backend serves the demo model — rebuild with `--features xla`"
+        );
+        println!("xla feature disabled — serving the native RBGP4 demo model from the plan cache");
+        let seed = args.get_u64("seed", 0)?;
+        let batch = args.get_usize("batch", 16)?;
+        let threads = rbgp::util::threadpool::default_threads();
+        InferenceServer::start_model(
+            move || {
+                let cache = std::sync::Arc::new(rbgp::kernels::PlanCache::new());
+                let mut model = NativeSparseModel::rbgp4_demo(16, batch, threads, seed, cache)?;
+                model.warm()?;
+                Ok(Box::new(model) as Box<dyn BatchModel>)
+            },
+            ServerConfig::default(),
+        )?
+    };
     println!(
         "model: in_dim {}, classes {}, max batch {}",
         server.in_dim, server.classes, server.batch

@@ -5,9 +5,17 @@
 //! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
 //! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids (see DESIGN.md).
+//!
+//! The artifact metadata layer ([`artifact`]) is always available; the
+//! executor needs the `xla` PJRT binding and is gated behind the `xla`
+//! feature so the default build is self-contained (the native plan-based
+//! serving/training paths in [`crate::coordinator`] cover the featureless
+//! build).
 
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod executor;
 
 pub use artifact::{Artifact, ArtifactMeta, TensorSig};
+#[cfg(feature = "xla")]
 pub use executor::Executor;

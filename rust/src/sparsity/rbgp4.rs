@@ -288,6 +288,35 @@ impl Rbgp4Mask {
         self.gi.adj.iter().flatten().map(|&v| v as u32).collect()
     }
 
+    /// Deterministic hash of the mask *structure* (config + both base-graph
+    /// adjacencies). Two masks with equal hashes describe the same sparsity
+    /// pattern, so kernel execution plans built for one are valid for the
+    /// other — this is the plan-cache key ingredient
+    /// ([`crate::kernels::plan::PlanKey`]).
+    pub fn structure_hash(&self) -> u64 {
+        let c = &self.config;
+        let mut h = crate::util::Fnv::new();
+        h.push_all(
+            [
+                c.go.nu,
+                c.go.nv,
+                c.gr.0,
+                c.gr.1,
+                c.gi.nu,
+                c.gi.nv,
+                c.gb.0,
+                c.gb.1,
+            ]
+            .into_iter()
+            .map(|x| x as u64),
+        );
+        h.push(c.go.sp.to_bits());
+        h.push(c.gi.sp.to_bits());
+        h.push_all(self.go.adj.iter().flatten().map(|&v| v as u64));
+        h.push_all(self.gi.adj.iter().flatten().map(|&v| v as u64));
+        h.finish()
+    }
+
     /// Succinct index memory in *elements* (`Σ|E(base)|`, §4 Memory
     /// efficiency). Complete graphs contribute their edge count too, per the
     /// paper's Figure-3 accounting (8+2+8+4).
@@ -512,6 +541,20 @@ mod tests {
         assert_eq!(succinct, 8 + 2 + 8 + 4);
         assert_eq!(generic, 64 * 8);
         assert!(generic / succinct > 20);
+    }
+
+    #[test]
+    fn structure_hash_tracks_pattern_not_values() {
+        let mut rng = Rng::new(86);
+        let a = Rbgp4Mask::sample(small_config(), &mut rng).unwrap();
+        let b = Rbgp4Mask::sample(small_config(), &mut rng).unwrap();
+        assert_eq!(a.structure_hash(), a.clone().structure_hash());
+        // Independent samples of the same config almost surely differ.
+        assert_ne!(a.structure_hash(), b.structure_hash());
+        // Weights don't enter the hash: two matrices on one mask share it.
+        let w1 = Rbgp4Matrix::random(a.clone(), &mut rng);
+        let w2 = Rbgp4Matrix::random(a.clone(), &mut rng);
+        assert_eq!(w1.mask.structure_hash(), w2.mask.structure_hash());
     }
 
     #[test]

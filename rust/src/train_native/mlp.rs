@@ -6,8 +6,13 @@
 //! exactly zero. Optimizer: SGD + momentum 0.9 + weight decay 1e-4.
 
 use crate::data::synth::CifarLike;
-use crate::kernels::dense::gemm_blocked;
+use crate::kernels::dense::{gemm_blocked, gemm_nt, gemm_tn};
 use crate::util::rng::Rng;
+
+// The GEMM helpers this trainer needs are the shared `kernels::dense` entry
+// points (one implementation serves the trainer, the plan layer and the
+// benches); `transpose` is re-exported for historical callers.
+pub use crate::kernels::dense::transpose;
 
 /// Training hyper-parameters for the native trainer.
 #[derive(Clone, Debug)]
@@ -40,10 +45,10 @@ pub struct MaskedMlp {
     pub c: usize,
     /// Hidden-layer mask (H × D), 0/1.
     pub mask: Vec<f32>,
-    w1: Vec<f32>, // (H, D)
-    b1: Vec<f32>,
-    w2: Vec<f32>, // (C, H)
-    b2: Vec<f32>,
+    pub(crate) w1: Vec<f32>, // (H, D)
+    pub(crate) b1: Vec<f32>,
+    pub(crate) w2: Vec<f32>, // (C, H)
+    pub(crate) b2: Vec<f32>,
     v_w1: Vec<f32>,
     v_b1: Vec<f32>,
     v_w2: Vec<f32>,
@@ -230,96 +235,11 @@ impl MaskedMlp {
     }
 }
 
-/// out (M×N) = a (M×K) · bᵀ where b is (N×K).
-fn gemm_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), n * k);
-    assert_eq!(out.len(), m * n);
-    out.fill(0.0);
-    for r in 0..m {
-        for j in 0..n {
-            let mut s = 0.0f32;
-            let ar = &a[r * k..(r + 1) * k];
-            let br = &b[j * k..(j + 1) * k];
-            for kk in 0..k {
-                s += ar[kk] * br[kk];
-            }
-            out[r * n + j] = s;
-        }
-    }
-}
-
-/// out (K×N) = aᵀ · b where a is (M×K), b is (M×N).
-fn gemm_tn(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), m * n);
-    assert_eq!(out.len(), k * n);
-    out.fill(0.0);
-    for row in 0..m {
-        for kk in 0..k {
-            let av = a[row * k + kk];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[row * n..(row + 1) * n];
-            let orow = &mut out[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
-        }
-    }
-}
-
-/// (rows × cols) row-major → (cols × rows).
-pub fn transpose(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
-    let mut t = vec![0.0f32; x.len()];
-    for r in 0..rows {
-        for c in 0..cols {
-            t[c * rows + r] = x[r * cols + c];
-        }
-    }
-    t
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sparsity::memory::Pattern;
     use crate::train_native::masks::pattern_mask;
-
-    #[test]
-    fn gemm_helpers_match_naive() {
-        let mut rng = Rng::new(30);
-        let (m, k, n) = (5, 7, 4);
-        let a = rng.normal_vec_f32(m * k, 1.0);
-        let b = rng.normal_vec_f32(n * k, 1.0);
-        let mut out = vec![0.0; m * n];
-        gemm_nt(&a, &b, &mut out, m, k, n);
-        for r in 0..m {
-            for j in 0..n {
-                let want: f32 = (0..k).map(|kk| a[r * k + kk] * b[j * k + kk]).sum();
-                assert!((out[r * n + j] - want).abs() < 1e-4);
-            }
-        }
-        let b2 = rng.normal_vec_f32(m * n, 1.0);
-        let mut out2 = vec![0.0; k * n];
-        gemm_tn(&a, &b2, &mut out2, m, k, n);
-        for kk in 0..k {
-            for j in 0..n {
-                let want: f32 = (0..m).map(|r| a[r * k + kk] * b2[r * n + j]).sum();
-                assert!((out2[kk * n + j] - want).abs() < 1e-4);
-            }
-        }
-    }
-
-    #[test]
-    fn transpose_roundtrip() {
-        let x: Vec<f32> = (0..12).map(|v| v as f32).collect();
-        let t = transpose(&x, 3, 4);
-        assert_eq!(transpose(&t, 4, 3), x);
-        assert_eq!(t[0], 0.0);
-        assert_eq!(t[1], 4.0); // (0,1) of transposed = (1,0) of original
-    }
 
     #[test]
     fn masked_weights_stay_zero() {

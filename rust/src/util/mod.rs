@@ -21,6 +21,44 @@ pub const fn ceil_div(a: usize, b: usize) -> usize {
     a.div_ceil(b)
 }
 
+/// FNV-1a over u64 words — cheap, deterministic, dependency-free. Used for
+/// structure hashes (plan-cache keys) where stability across runs matters
+/// and cryptographic strength does not.
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Mix all 8 bytes of `word`.
+    #[inline]
+    pub fn push(&mut self, word: u64) {
+        let mut x = word;
+        for _ in 0..8 {
+            self.0 ^= x & 0xff;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+            x >>= 8;
+        }
+    }
+
+    pub fn push_all(&mut self, words: impl Iterator<Item = u64>) {
+        for w in words {
+            self.push(w);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -35,5 +73,17 @@ mod tests {
     fn ceil_div_basic() {
         assert_eq!(ceil_div(10, 3), 4);
         assert_eq!(ceil_div(9, 3), 3);
+    }
+
+    #[test]
+    fn fnv_is_deterministic_and_order_sensitive() {
+        let mut a = Fnv::new();
+        a.push_all([1u64, 2, 3].into_iter());
+        let mut b = Fnv::new();
+        b.push_all([1u64, 2, 3].into_iter());
+        assert_eq!(a.finish(), b.finish());
+        let mut c = Fnv::new();
+        c.push_all([3u64, 2, 1].into_iter());
+        assert_ne!(a.finish(), c.finish());
     }
 }

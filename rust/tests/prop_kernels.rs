@@ -8,6 +8,8 @@ use rbgp::graph::BipartiteGraph;
 use rbgp::kernels::bsr_sdmm::bsr_sdmm;
 use rbgp::kernels::csr_sdmm::csr_sdmm;
 use rbgp::kernels::dense::gemm_naive;
+use rbgp::kernels::plan::{PlanCache, PlanRequest, SparseMatrix};
+use rbgp::kernels::registry::KernelRegistry;
 use rbgp::kernels::rbgp4mm::{rbgp4mm, rbgp4mm_parallel};
 use rbgp::sparsity::bsr::BsrMatrix;
 use rbgp::sparsity::csr::CsrMatrix;
@@ -93,6 +95,80 @@ fn prop_csr_bsr_match_dense_oracle() {
         let mut oracle2 = vec![0.0; m * n];
         gemm_naive(&bsr.to_dense(), &i, &mut oracle2, m, k, n);
         close(&o2, &oracle2, 1e-3)
+    });
+}
+
+/// The acceptance property of the plan layer: every registered kernel
+/// family, invoked through the `SparseKernel` trait from cached plans at
+/// 1, 4 and 7 threads, matches the dense naive oracle — over randomized
+/// RBGP4 configs and batch sizes including n = 1 and non-multiples of the
+/// panel tile.
+#[test]
+fn prop_trait_kernels_match_oracle_across_threads() {
+    let registry = KernelRegistry::builtin();
+    check("SparseKernel plans == dense oracle", 12, |rng| {
+        let cfg = random_config(rng);
+        let mask = Rbgp4Mask::sample(cfg, rng).map_err(|e| e.to_string())?;
+        let rbgp = Rbgp4Matrix::random(mask, rng);
+        let (m, k) = (rbgp.mask.rows(), rbgp.mask.cols());
+        // n = 1 and odd sizes exercise the degenerate / non-tile-multiple
+        // panel paths.
+        let n = [1usize, 3, gen::range(rng, 2, 40)][rng.below_usize(3)];
+        let i = rng.normal_vec_f32(k * n, 1.0);
+
+        // All four families at this shape (random_config keeps m, k
+        // multiples of 4, so the 4×4 BSR grid always exists).
+        let matrices = [
+            SparseMatrix::dense(rng.normal_vec_f32(m * k, 1.0), m, k),
+            SparseMatrix::Csr(CsrMatrix::random_row_uniform(m, k, 0.75, rng)),
+            SparseMatrix::Bsr(BsrMatrix::random_block_uniform(m, k, 4, 4, 0.5, rng)),
+            SparseMatrix::Rbgp4(rbgp),
+        ];
+        let cache = PlanCache::new();
+        for w in &matrices {
+            let kernel = registry.for_matrix(w).map_err(|e| e.to_string())?;
+            let mut oracle = vec![0.0; m * n];
+            gemm_naive(&w.to_dense(), &i, &mut oracle, m, k, n);
+            for threads in [1usize, 4, 7] {
+                // Direct trait path.
+                let mut plan = kernel
+                    .build_plan(w, &PlanRequest { n, threads })
+                    .map_err(|e| e.to_string())?;
+                let mut o = vec![0.0; m * n];
+                kernel
+                    .execute(w, &mut plan, &i, &mut o, n)
+                    .map_err(|e| e.to_string())?;
+                close(&o, &oracle, 1e-3)
+                    .map_err(|e| format!("{} t={threads}: {e}", kernel.name()))?;
+                // Cached path (second execution re-uses the plan).
+                let mut o2 = vec![0.0; m * n];
+                cache
+                    .execute(&registry, w, &i, &mut o2, n, threads)
+                    .map_err(|e| e.to_string())?;
+                cache
+                    .execute(&registry, w, &i, &mut o2, n, threads)
+                    .map_err(|e| e.to_string())?;
+                close(&o2, &oracle, 1e-3)
+                    .map_err(|e| format!("{} cached t={threads}: {e}", kernel.name()))?;
+            }
+            // The naive trait path is the oracle for its own family.
+            let mut o3 = vec![0.0; m * n];
+            kernel
+                .execute_naive(w, &i, &mut o3, n)
+                .map_err(|e| e.to_string())?;
+            close(&o3, &oracle, 1e-3)
+                .map_err(|e| format!("{} naive: {e}", kernel.name()))?;
+        }
+        // Re-executions above must have come from the cache: one build per
+        // (family, batch-class, threads), everything else a hit.
+        let (hits, misses) = cache.stats();
+        prop_assert!(
+            misses == matrices.len() * 3,
+            "expected {} plan builds, saw {misses} ({hits} hits)",
+            matrices.len() * 3
+        );
+        prop_assert!(hits >= misses, "every plan must be re-used at least once");
+        Ok(())
     });
 }
 

@@ -1,0 +1,159 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this vendored crate
+//! implements the subset of `anyhow` the repository uses: [`Error`],
+//! [`Result`], and the `anyhow!` / `bail!` / `ensure!` macros. Semantics
+//! match upstream for that subset:
+//!
+//! * any `std::error::Error + Send + Sync + 'static` converts into [`Error`]
+//!   via `?` (blanket `From`, which is why [`Error`] itself deliberately
+//!   does *not* implement `std::error::Error`);
+//! * `{:#}` formatting prints the full source chain (`a: b: c`).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error with an optional source chain.
+pub struct Error(Box<dyn StdError + Send + Sync + 'static>);
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Wrap any displayable message as an error.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error(Box::new(MessageError(message.to_string())))
+    }
+
+    /// Create from a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error(Box::new(error))
+    }
+
+    /// Iterate the source chain starting at this error's root cause side.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.0.source()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)?;
+        if f.alternate() {
+            let mut source = self.0.source();
+            while let Some(cause) = source {
+                write!(f, ": {cause}")?;
+                source = cause.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)?;
+        let mut source = self.0.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(cause) = source {
+            write!(f, "\n    {cause}")?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error(Box::new(error))
+    }
+}
+
+/// Message-only error (what `anyhow!("...")` produces).
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(!flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn message_and_ensure() {
+        assert_eq!(fails(false).unwrap(), 7);
+        let e = fails(true).unwrap_err();
+        assert_eq!(format!("{e}"), "flag was true");
+    }
+
+    #[test]
+    fn std_errors_convert_and_chain_prints() {
+        fn open() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        let e = open().unwrap_err();
+        assert!(!format!("{e:#}").is_empty());
+    }
+
+    #[test]
+    fn expr_form_accepts_strings() {
+        let msg = String::from("already formatted");
+        let e: Error = anyhow!(msg.clone());
+        assert_eq!(format!("{e}"), "already formatted");
+    }
+}

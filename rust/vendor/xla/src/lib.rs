@@ -1,0 +1,134 @@
+//! Offline stub of the `xla` PJRT binding.
+//!
+//! The production deployment links a real PJRT CPU/GPU client; this vendored
+//! stub provides the same API surface used by `rbgp::runtime::executor` so
+//! the `xla` feature still type-checks in environments without the XLA
+//! toolchain. Every entry point that would touch PJRT returns an error
+//! explaining how to enable the real runtime (replace this crate in
+//! `rust/vendor/xla` with the actual binding; the API is call-compatible).
+
+use std::fmt;
+
+const STUB_MSG: &str =
+    "xla stub: PJRT runtime not available in this build (replace rust/vendor/xla with a real \
+     PJRT binding to execute artifacts)";
+
+/// Error type mirroring the binding's error enum.
+pub struct Error(String);
+
+impl Error {
+    fn stub() -> Error {
+        Error(STUB_MSG.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host literal (flat f32 buffer in the real binding; opaque here).
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn scalar(_v: f32) -> Literal {
+        Literal
+    }
+
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::stub())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::stub())
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::stub())
+    }
+}
+
+/// An XLA computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub())
+    }
+}
+
+/// Compiled executable bound to a client.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub())
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_missing_runtime() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err}").contains("PJRT runtime not available"));
+    }
+}
