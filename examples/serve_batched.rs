@@ -1,9 +1,11 @@
 //! Batched inference serving demo: multiple client threads fire single-
-//! sample requests at the L3 coordinator, whose dynamic batcher groups them
+//! sample requests at the L3 coordinator, whose worker pool groups them
 //! into full batches for the AOT forward executable (the Pallas-kernel
-//! inference path). Reports throughput and latency percentiles.
+//! inference path; each worker compiles its own PJRT executable). Reports
+//! throughput, latency percentiles and real batch occupancy.
 //!
 //! Run: `make artifacts && cargo run --release --example serve_batched`
+//! (`RBGP_WORKERS=4` to scale the pool)
 
 use rbgp::coordinator::{InferenceServer, ServerConfig};
 use rbgp::data::CifarLike;
@@ -18,6 +20,10 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(512);
+    let workers: usize = std::env::var("RBGP_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
     let clients = 8usize;
 
     println!("== RBGP batched inference server");
@@ -25,12 +31,16 @@ fn main() -> anyhow::Result<()> {
         dir,
         ServerConfig {
             max_wait: Duration::from_millis(4),
+            workers,
             ..ServerConfig::default()
         },
     )?;
     println!(
-        "   model: in_dim {}, classes {}, max batch {}",
-        server.in_dim, server.classes, server.batch
+        "   model: in_dim {}, classes {}, max batch {} × {} workers",
+        server.in_dim,
+        server.classes,
+        server.batch,
+        server.workers()
     );
 
     let t0 = std::time::Instant::now();
@@ -53,7 +63,11 @@ fn main() -> anyhow::Result<()> {
     let (reqs, batches) = server.counters();
     let stats = server.latency_stats().expect("no latency samples");
     println!("\nserved {reqs} requests in {batches} executed batches over {wall:.2}s");
-    println!("   mean batch occupancy: {:.1} samples", reqs as f64 / batches as f64);
+    println!(
+        "   batch occupancy: {:.1}% real samples (peak queue depth {})",
+        stats.occupancy * 100.0,
+        server.peak_queue_depth()
+    );
     println!("   throughput: {:.1} req/s", reqs as f64 / wall);
     println!(
         "   latency: p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  max {:.2} ms",

@@ -1,0 +1,169 @@
+//! Serving throughput/latency vs worker count at fixed offered load — the
+//! scale-out trajectory for the multi-worker `InferenceServer`.
+//!
+//! For each worker count (1 / 2 / 4) the harness starts a server over the
+//! native RBGP4 demo model (all workers sharing one `PlanCache`), drives a
+//! fixed closed-loop load (`CLIENTS` client threads, `total` requests in
+//! all), and reports wall time, throughput, latency percentiles, batch
+//! occupancy and plan-cache traffic.
+//!
+//! Results are written to `BENCH_server.json` (in the cargo package root,
+//! where `cargo bench` runs) so future serving PRs — NUMA-sharded
+//! `BatchModel`, cache sharding, smarter batching — can diff against this
+//! trajectory the same way kernel PRs diff against `BENCH_kernels.json`.
+//!
+//! `cargo bench --bench serving_bench` (RBGP_BENCH_FAST=1 quick pass)
+
+use rbgp::coordinator::{BatchModel, InferenceServer, NativeSparseModel, ServerConfig};
+use rbgp::data::CifarLike;
+use rbgp::kernels::PlanCache;
+use rbgp::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const OUT_PATH: &str = "BENCH_server.json";
+const CLIENTS: usize = 8;
+const BATCH: usize = 16;
+const CLASSES: usize = 16;
+const SEED: u64 = 7;
+
+struct Row {
+    workers: usize,
+    requests: usize,
+    batches: usize,
+    wall_s: f64,
+    throughput_rps: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    occupancy: f64,
+    cache_hits: usize,
+    cache_misses: usize,
+}
+
+impl Row {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("workers", self.workers)
+            .set("clients", CLIENTS)
+            .set("batch", BATCH)
+            .set("requests", self.requests)
+            .set("batches", self.batches)
+            .set("wall_s", self.wall_s)
+            .set("throughput_rps", self.throughput_rps)
+            .set("p50_ms", self.p50_ms)
+            .set("p95_ms", self.p95_ms)
+            .set("p99_ms", self.p99_ms)
+            .set("occupancy", self.occupancy)
+            .set("cache_hits", self.cache_hits)
+            .set("cache_misses", self.cache_misses);
+        j
+    }
+
+    fn print(&self) {
+        println!(
+            "workers={:<2} {:>6} reqs in {:>5} batches  {:>8.1} req/s   \
+             p50 {:>7.3} ms  p95 {:>7.3} ms  p99 {:>7.3} ms   occ {:>5.1}%   \
+             cache {}h/{}m",
+            self.workers,
+            self.requests,
+            self.batches,
+            self.throughput_rps,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.occupancy * 100.0,
+            self.cache_hits,
+            self.cache_misses,
+        );
+    }
+}
+
+fn run_load(workers: usize, total: usize) -> Row {
+    // One shared cache per pool: structure is derived once (two plans),
+    // every additional worker warms from cache.
+    let cache = Arc::new(PlanCache::new());
+    let model_cache = Arc::clone(&cache);
+    let server = InferenceServer::start_model(
+        move || {
+            let mut m =
+                NativeSparseModel::rbgp4_demo(CLASSES, BATCH, 1, SEED, Arc::clone(&model_cache))?;
+            m.warm()?;
+            Ok(Box::new(m) as Box<dyn BatchModel>)
+        },
+        ServerConfig {
+            workers,
+            queue_cap: 4 * total.max(1),
+            max_wait: Duration::from_millis(2),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("server start");
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let server = server.clone();
+            scope.spawn(move || {
+                let mut data = CifarLike::new(server.in_dim, server.classes, 100 + c as u64);
+                for _ in 0..total / CLIENTS {
+                    let b = data.test_batch(1);
+                    let logits = server.infer(b.x).expect("infer");
+                    assert_eq!(logits.len(), server.classes);
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let (requests, batches) = server.counters();
+    let stats = server.latency_stats().expect("latency samples");
+    let (cache_hits, cache_misses) = cache.stats();
+    server.shutdown();
+    Row {
+        workers,
+        requests,
+        batches,
+        wall_s,
+        throughput_rps: requests as f64 / wall_s.max(1e-9),
+        p50_ms: stats.p50 * 1e3,
+        p95_ms: stats.p95 * 1e3,
+        p99_ms: stats.p99 * 1e3,
+        occupancy: stats.occupancy,
+        cache_hits,
+        cache_misses,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("RBGP_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let total = if fast { 256 } else { 4096 };
+    println!(
+        "serving bench — RBGP4 demo model, batch {BATCH}, {CLIENTS} closed-loop clients, \
+         {total} requests per worker count\n"
+    );
+
+    let mut rows = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let row = run_load(workers, total);
+        row.print();
+        rows.push(row);
+    }
+
+    let mut doc = Json::obj();
+    let mut meta = Json::obj();
+    meta.set("batch", BATCH)
+        .set("classes", CLASSES)
+        .set("clients", CLIENTS)
+        .set("requests_per_point", total)
+        .set("seed", SEED)
+        .set("fast_mode", fast);
+    doc.set("bench", "serving_bench").set("config", meta).set(
+        "rows",
+        Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
+    );
+    match std::fs::write(OUT_PATH, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {OUT_PATH} ({} rows)", rows.len()),
+        Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),
+    }
+}

@@ -1,14 +1,40 @@
-//! Lightweight metrics: loss history, latency percentiles, throughput.
+//! Lightweight metrics: loss history, latency percentiles, throughput, and
+//! the lock-free serving counters.
+//!
+//! Two stores live here:
+//!
+//! * [`Metrics`] — the single-owner store the trainers mutate directly
+//!   (`&mut self` methods; loss history, eval latencies).
+//! * [`ServingMetrics`] — the shared store the multi-worker inference
+//!   server records into. All counters are atomics; latency samples live
+//!   in one *bounded* ring per worker (no pool-wide lock on the request
+//!   hot path, O(1) memory for a long-lived server), and every lock goes
+//!   through [`lock_recover`], so a worker that dies mid-record degrades
+//!   the metrics instead of poisoning them and panicking every client
+//!   that later asks for stats.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
 
-/// Rolling metrics store shared by the trainer and server.
+/// Lock a mutex, recovering the guard when a previous holder panicked.
+/// Metrics are advisory: a torn sample from a crashed worker is strictly
+/// better than propagating its panic into every client that reads stats.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Single-owner metrics store used by the trainers.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub losses: Vec<(usize, f32)>,
     pub latencies: Vec<f64>,
     pub requests: usize,
     pub batches: usize,
+    /// Real samples in recorded batches (see [`Metrics::record_batch_occupancy`]).
+    pub occupied_slots: usize,
+    /// Total slots in recorded batches; 0 when the recorder never pads.
+    pub batch_slots: usize,
 }
 
 impl Metrics {
@@ -21,12 +47,33 @@ impl Metrics {
         self.requests += 1;
     }
 
+    /// Count one executed batch with no padding accounting (training steps,
+    /// which always run full batches).
     pub fn record_batch(&mut self) {
         self.batches += 1;
     }
 
+    /// Count one executed batch of `slots` capacity carrying `occupied`
+    /// real samples — the padded remainder is what a dynamic batcher
+    /// silently wastes, so it must be recorded, not counted as throughput.
+    pub fn record_batch_occupancy(&mut self, occupied: usize, slots: usize) {
+        self.batches += 1;
+        self.occupied_slots += occupied.min(slots);
+        self.batch_slots += slots;
+    }
+
+    /// Mean fraction of batch slots holding real samples (1.0 when the
+    /// recorder never tracked occupancy).
+    pub fn occupancy(&self) -> f64 {
+        if self.batch_slots == 0 {
+            1.0
+        } else {
+            self.occupied_slots as f64 / self.batch_slots as f64
+        }
+    }
+
     pub fn latency_stats(&self) -> Option<LatencyStats> {
-        LatencyStats::from_samples(&self.latencies)
+        LatencyStats::from_samples(&self.latencies).map(|s| s.with_occupancy(self.occupancy()))
     }
 
     /// Smoothed final loss: mean of the last `k` recorded losses.
@@ -39,7 +86,8 @@ impl Metrics {
     }
 }
 
-/// Latency percentile summary (seconds).
+/// Latency percentile summary (seconds) plus the batch-occupancy gauge of
+/// the path that produced the samples.
 #[derive(Clone, Copy, Debug)]
 pub struct LatencyStats {
     pub count: usize,
@@ -48,6 +96,10 @@ pub struct LatencyStats {
     pub p95: f64,
     pub p99: f64,
     pub max: f64,
+    /// Mean fraction of executed batch slots that carried real samples —
+    /// 1.0 means every flush was full; a padded partial flush pulls it
+    /// below 1.0. Paths that never pad report 1.0.
+    pub occupancy: f64,
 }
 
 impl LatencyStats {
@@ -68,13 +120,208 @@ impl LatencyStats {
             p95: pct(95.0),
             p99: pct(99.0),
             max: *s.last().unwrap(),
+            occupancy: 1.0,
         })
+    }
+
+    pub fn with_occupancy(mut self, occupancy: f64) -> LatencyStats {
+        self.occupancy = occupancy;
+        self
+    }
+}
+
+/// Per-worker atomic counters (one slot per worker thread, no sharing).
+#[derive(Default)]
+struct WorkerCounters {
+    requests: AtomicUsize,
+    batches: AtomicUsize,
+    occupied_slots: AtomicUsize,
+    batch_slots: AtomicUsize,
+    errors: AtomicUsize,
+}
+
+/// Snapshot of one worker's counters.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerStats {
+    pub worker: usize,
+    /// Requests this worker answered successfully.
+    pub requests: usize,
+    /// Batches this worker executed.
+    pub batches: usize,
+    /// Real samples across those batches.
+    pub occupied_slots: usize,
+    /// Total slots across those batches (occupied + padding).
+    pub batch_slots: usize,
+    /// Batch executions that failed.
+    pub errors: usize,
+}
+
+impl WorkerStats {
+    /// Mean fraction of this worker's batch slots holding real samples.
+    pub fn occupancy(&self) -> f64 {
+        if self.batch_slots == 0 {
+            1.0
+        } else {
+            self.occupied_slots as f64 / self.batch_slots as f64
+        }
+    }
+}
+
+/// Cap on retained latency samples *per worker*: percentiles are computed
+/// over a sliding window so a long-lived server's stats cost stays O(1)
+/// in memory and sort time instead of growing with every request ever
+/// served.
+const LATENCY_WINDOW: usize = 4096;
+
+/// Fixed-capacity ring of the most recent latency samples.
+#[derive(Default)]
+struct LatencyRing {
+    samples: Vec<f64>,
+    next: usize,
+}
+
+impl LatencyRing {
+    fn push(&mut self, v: f64) {
+        if self.samples.len() < LATENCY_WINDOW {
+            self.samples.push(v);
+        } else {
+            self.samples[self.next] = v;
+        }
+        self.next = (self.next + 1) % LATENCY_WINDOW;
+    }
+}
+
+/// Shared metrics store for the multi-worker inference server: per-worker
+/// atomic counters, queue gauges, rejection counters, and one bounded
+/// latency ring *per worker* (so the request hot path never contends on a
+/// pool-wide lock), each locked through the recovering guard.
+pub struct ServingMetrics {
+    workers: Vec<WorkerCounters>,
+    latencies: Vec<Mutex<LatencyRing>>,
+    rejected_full: AtomicUsize,
+    rejected_deadline: AtomicUsize,
+    peak_queue_depth: AtomicUsize,
+}
+
+impl ServingMetrics {
+    pub fn new(workers: usize) -> ServingMetrics {
+        let workers = workers.max(1);
+        ServingMetrics {
+            workers: (0..workers).map(|_| WorkerCounters::default()).collect(),
+            latencies: (0..workers).map(|_| Mutex::new(LatencyRing::default())).collect(),
+            rejected_full: AtomicUsize::new(0),
+            rejected_deadline: AtomicUsize::new(0),
+            peak_queue_depth: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// One executed batch on `worker`: `occupied` real samples in `slots`
+    /// total slots (padding = `slots - occupied`).
+    pub(crate) fn record_flush(&self, worker: usize, occupied: usize, slots: usize) {
+        let w = &self.workers[worker];
+        w.batches.fetch_add(1, Ordering::Relaxed);
+        w.occupied_slots.fetch_add(occupied.min(slots), Ordering::Relaxed);
+        w.batch_slots.fetch_add(slots, Ordering::Relaxed);
+    }
+
+    /// One answered request on `worker` with its queue→response latency.
+    /// Only this worker's ring is locked — workers never contend here.
+    pub(crate) fn record_latency(&self, worker: usize, d: Duration) {
+        self.workers[worker].requests.fetch_add(1, Ordering::Relaxed);
+        lock_recover(&self.latencies[worker]).push(d.as_secs_f64());
+    }
+
+    pub(crate) fn record_error(&self, worker: usize) {
+        self.workers[worker].errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_rejected_full(&self) {
+        self.rejected_full.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_rejected_deadline(&self) {
+        self.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Track the deepest queue observed at submit time.
+    pub(crate) fn observe_queue_depth(&self, depth: usize) {
+        self.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// `(answered requests, executed batches)` summed over workers.
+    pub fn totals(&self) -> (usize, usize) {
+        let mut requests = 0;
+        let mut batches = 0;
+        for w in &self.workers {
+            requests += w.requests.load(Ordering::Relaxed);
+            batches += w.batches.load(Ordering::Relaxed);
+        }
+        (requests, batches)
+    }
+
+    /// `(queue-full rejects, deadline-expired rejects)`.
+    pub fn rejected(&self) -> (usize, usize) {
+        (
+            self.rejected_full.load(Ordering::Relaxed),
+            self.rejected_deadline.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn peak_queue_depth(&self) -> usize {
+        self.peak_queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Mean batch occupancy over every executed batch, all workers.
+    pub fn occupancy(&self) -> f64 {
+        let mut occupied = 0;
+        let mut slots = 0;
+        for w in &self.workers {
+            occupied += w.occupied_slots.load(Ordering::Relaxed);
+            slots += w.batch_slots.load(Ordering::Relaxed);
+        }
+        if slots == 0 {
+            1.0
+        } else {
+            occupied as f64 / slots as f64
+        }
+    }
+
+    /// Latency percentiles over the merged per-worker sample windows, with
+    /// the occupancy gauge; never panics, even if a worker died while
+    /// recording.
+    pub fn latency_stats(&self) -> Option<LatencyStats> {
+        let mut samples = Vec::new();
+        for ring in &self.latencies {
+            samples.extend_from_slice(&lock_recover(ring).samples);
+        }
+        LatencyStats::from_samples(&samples).map(|s| s.with_occupancy(self.occupancy()))
+    }
+
+    /// Per-worker counter snapshots, worker order.
+    pub fn worker_stats(&self) -> Vec<WorkerStats> {
+        self.workers
+            .iter()
+            .enumerate()
+            .map(|(worker, w)| WorkerStats {
+                worker,
+                requests: w.requests.load(Ordering::Relaxed),
+                batches: w.batches.load(Ordering::Relaxed),
+                occupied_slots: w.occupied_slots.load(Ordering::Relaxed),
+                batch_slots: w.batch_slots.load(Ordering::Relaxed),
+                errors: w.errors.load(Ordering::Relaxed),
+            })
+            .collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::{Arc, Mutex};
 
     #[test]
     fn loss_history_and_smoothing() {
@@ -96,10 +343,87 @@ mod tests {
         assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
         assert!((s.p50 - 0.050).abs() < 0.002);
         assert_eq!(s.max, 0.1);
+        assert_eq!(s.occupancy, 1.0, "from_samples defaults to full batches");
     }
 
     #[test]
     fn empty_latency_is_none() {
         assert!(LatencyStats::from_samples(&[]).is_none());
+    }
+
+    #[test]
+    fn occupancy_tracks_padding() {
+        let mut m = Metrics::default();
+        m.record_batch(); // occupancy-less batch: neutral
+        assert_eq!(m.occupancy(), 1.0);
+        m.record_batch_occupancy(2, 8);
+        m.record_batch_occupancy(8, 8);
+        assert_eq!(m.batches, 3);
+        assert!((m.occupancy() - 10.0 / 16.0).abs() < 1e-12);
+        m.record_latency(Duration::from_millis(1));
+        let s = m.latency_stats().unwrap();
+        assert!((s.occupancy - 10.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serving_metrics_aggregate_per_worker() {
+        let m = ServingMetrics::new(2);
+        m.record_flush(0, 3, 8);
+        m.record_flush(1, 8, 8);
+        for _ in 0..3 {
+            m.record_latency(0, Duration::from_millis(2));
+        }
+        for _ in 0..8 {
+            m.record_latency(1, Duration::from_millis(4));
+        }
+        m.record_rejected_full();
+        m.record_rejected_deadline();
+        m.record_rejected_deadline();
+        m.observe_queue_depth(5);
+        m.observe_queue_depth(3);
+
+        assert_eq!(m.totals(), (11, 2));
+        assert_eq!(m.rejected(), (1, 2));
+        assert_eq!(m.peak_queue_depth(), 5);
+        assert!((m.occupancy() - 11.0 / 16.0).abs() < 1e-12);
+
+        let ws = m.worker_stats();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].requests, 3);
+        assert_eq!(ws[0].batches, 1);
+        assert!((ws[0].occupancy() - 3.0 / 8.0).abs() < 1e-12);
+        assert_eq!(ws[1].errors, 0);
+        assert!((ws[1].occupancy() - 1.0).abs() < 1e-12);
+
+        let s = m.latency_stats().unwrap();
+        assert_eq!(s.count, 11);
+        assert!((s.occupancy - 11.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_window_is_bounded() {
+        let m = ServingMetrics::new(1);
+        for i in 0..LATENCY_WINDOW + 10 {
+            m.record_latency(0, Duration::from_micros(i as u64 + 1));
+        }
+        let s = m.latency_stats().unwrap();
+        assert_eq!(s.count, LATENCY_WINDOW, "ring retains a bounded window");
+        // The oldest samples were overwritten: the window minimum is the
+        // 11th sample, not the 1st.
+        assert!(s.p50 > 10e-6, "old samples evicted from the window");
+        assert_eq!(m.totals().0, LATENCY_WINDOW + 10, "counters still exact");
+    }
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_recover(&m), 7, "recovered guard still reads");
     }
 }

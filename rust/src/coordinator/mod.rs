@@ -1,17 +1,24 @@
 //! L3 coordinator: the drivers that own the process — training loops and a
-//! batched inference server. The native paths execute through the
-//! plan-cached [`crate::kernels`] layer; the `xla` feature adds the
+//! multi-worker batched inference server. The native paths execute through
+//! the plan-cached [`crate::kernels`] layer; the `xla` feature adds the
 //! PJRT-backed trainer and serving backend that execute AOT artifacts
 //! through [`crate::runtime`] (Python never runs at request time).
+//!
+//! Serving lives in [`serving`]: a pool of worker threads (one
+//! [`BatchModel`] each) behind a bounded priority queue, all resolving
+//! plans from one shared [`PlanCache`](crate::kernels::plan::PlanCache).
 
 pub mod config;
 pub mod metrics;
-pub mod server;
+pub mod serving;
 pub mod trainer;
 
 pub use config::TrainConfig;
-pub use metrics::{LatencyStats, Metrics};
-pub use server::{BatchModel, InferenceServer, NativeSparseModel, ServerConfig};
+pub use metrics::{LatencyStats, Metrics, ServingMetrics, WorkerStats};
+pub use serving::{
+    BatchModel, InferenceServer, NativeSparseModel, Priority, ServeError, ServerConfig,
+    SubmitOptions,
+};
 pub use trainer::NativeTrainer;
 #[cfg(feature = "xla")]
 pub use trainer::Trainer;

@@ -1,0 +1,344 @@
+//! The bounded priority request queue between client handles and workers.
+//!
+//! * **Bounded** — `push` never blocks and never grows the queue past its
+//!   capacity; an over-capacity submit is rejected with
+//!   [`ServeError::QueueFull`] so overload surfaces as backpressure at the
+//!   caller instead of unbounded memory growth and latency collapse.
+//! * **Priority** — entries pop in `(priority, arrival)` order: all
+//!   [`Priority::High`] before [`Priority::Normal`] before
+//!   [`Priority::Low`], FIFO within a class (a sequence number breaks ties
+//!   so equal-priority requests cannot starve each other).
+//! * **Deadlines** — a request may carry an absolute expiry [`Instant`].
+//!   The queue stores it; *workers* check it at pop time (see
+//!   `worker::next_live`), so an expired request is answered with a typed
+//!   error and never occupies a batch slot.
+//!
+//! Closing the queue ([`RequestQueue::close`]) rejects new pushes with
+//! [`ServeError::Stopped`] but keeps handing out already-queued entries —
+//! that is what lets shutdown drain in-flight requests before joining.
+
+use super::ServeError;
+use crate::coordinator::metrics::lock_recover;
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::sync::{mpsc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Scheduling class of a request; classes pop strictly in this order.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Served before everything else (health probes, latency-critical).
+    High,
+    /// The default class.
+    #[default]
+    Normal,
+    /// Served only when no higher class is waiting (batch/offline traffic).
+    Low,
+}
+
+impl Priority {
+    fn rank(self) -> u8 {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+}
+
+/// Per-request submit options (see `InferenceServer::submit_with`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOptions {
+    pub priority: Priority,
+    /// Time budget from submit; once exceeded the request is rejected with
+    /// [`ServeError::DeadlineExceeded`] instead of being executed. `None`
+    /// falls back to the server's `default_deadline` (which may be `None`:
+    /// wait forever).
+    pub deadline: Option<std::time::Duration>,
+}
+
+impl SubmitOptions {
+    pub fn with_priority(mut self, priority: Priority) -> SubmitOptions {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: std::time::Duration) -> SubmitOptions {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// One queued sample plus its response channel.
+pub(crate) struct QueuedRequest {
+    pub x: Vec<f32>,
+    pub enqueued: Instant,
+    /// Absolute expiry; `None` waits indefinitely.
+    pub deadline: Option<Instant>,
+    pub respond: mpsc::Sender<Result<Vec<f32>, ServeError>>,
+}
+
+struct Entry {
+    rank: u8,
+    seq: u64,
+    req: QueuedRequest,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Entry) -> bool {
+        self.rank == other.rank && self.seq == other.seq
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Entry) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    // BinaryHeap is a max-heap; invert so the smallest `(rank, seq)` —
+    // most urgent class, earliest arrival — pops first.
+    fn cmp(&self, other: &Entry) -> CmpOrdering {
+        (other.rank, other.seq).cmp(&(self.rank, self.seq))
+    }
+}
+
+struct QueueState {
+    heap: BinaryHeap<Entry>,
+    next_seq: u64,
+    closed: bool,
+}
+
+/// Bounded, closable priority queue shared by every client handle and every
+/// worker. All locking goes through [`lock_recover`]: a worker that panics
+/// elsewhere must not wedge the queue for the rest of the fleet.
+pub(crate) struct RequestQueue {
+    state: Mutex<QueueState>,
+    available: Condvar,
+    cap: usize,
+}
+
+impl RequestQueue {
+    pub fn new(cap: usize) -> RequestQueue {
+        RequestQueue {
+            state: Mutex::new(QueueState {
+                heap: BinaryHeap::new(),
+                next_seq: 0,
+                closed: false,
+            }),
+            available: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        lock_recover(&self.state).heap.len()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        lock_recover(&self.state).closed
+    }
+
+    /// Enqueue `req`; returns the queue depth after the push. Fails with
+    /// [`ServeError::Stopped`] once closed and [`ServeError::QueueFull`] at
+    /// capacity — never blocks, never grows past `cap`.
+    pub fn push(&self, req: QueuedRequest, priority: Priority) -> Result<usize, ServeError> {
+        let depth = {
+            let mut s = lock_recover(&self.state);
+            if s.closed {
+                return Err(ServeError::Stopped);
+            }
+            if s.heap.len() >= self.cap {
+                return Err(ServeError::QueueFull { cap: self.cap });
+            }
+            let seq = s.next_seq;
+            s.next_seq += 1;
+            s.heap.push(Entry {
+                rank: priority.rank(),
+                seq,
+                req,
+            });
+            s.heap.len()
+        };
+        self.available.notify_one();
+        Ok(depth)
+    }
+
+    /// Block until an entry is available. Returns `None` only once the
+    /// queue is closed *and* drained (the shutdown exit condition).
+    pub fn pop_blocking(&self) -> Option<QueuedRequest> {
+        let mut s = lock_recover(&self.state);
+        loop {
+            if let Some(e) = s.heap.pop() {
+                return Some(e.req);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self
+                .available
+                .wait(s)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    /// Pop, waiting at most until `until`; `None` on timeout or on
+    /// closed-and-drained. Used by workers to fill a batch with stragglers.
+    pub fn pop_until(&self, until: Instant) -> Option<QueuedRequest> {
+        let mut s = lock_recover(&self.state);
+        loop {
+            if let Some(e) = s.heap.pop() {
+                return Some(e.req);
+            }
+            if s.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= until {
+                return None;
+            }
+            let (guard, _timeout) = self
+                .available
+                .wait_timeout(s, until - now)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            s = guard;
+        }
+    }
+
+    /// Reject future pushes; wake every waiter. Queued entries remain
+    /// poppable so workers can drain before exiting.
+    pub fn close(&self) {
+        lock_recover(&self.state).closed = true;
+        self.available.notify_all();
+    }
+
+    /// Close *and* answer every still-queued request with
+    /// [`ServeError::Stopped`] — the last live worker's exit path. Without
+    /// this, a pool whose every worker died would leave queued clients
+    /// blocked on receivers nobody will ever serve.
+    pub fn close_and_fail_pending(&self) {
+        let drained: Vec<Entry> = {
+            let mut s = lock_recover(&self.state);
+            s.closed = true;
+            s.heap.drain().collect()
+        };
+        self.available.notify_all();
+        for e in drained {
+            let _ = e.req.respond.send(Err(ServeError::Stopped));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    fn req(id: f32) -> (QueuedRequest, mpsc::Receiver<Result<Vec<f32>, ServeError>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            QueuedRequest {
+                x: vec![id],
+                enqueued: Instant::now(),
+                deadline: None,
+                respond: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn pops_by_priority_then_fifo() {
+        let q = RequestQueue::new(16);
+        for (id, p) in [
+            (1.0, Priority::Normal),
+            (2.0, Priority::Low),
+            (3.0, Priority::High),
+            (4.0, Priority::Normal),
+            (5.0, Priority::High),
+        ] {
+            let (r, _rx) = req(id);
+            q.push(r, p).unwrap();
+        }
+        let order: Vec<f32> = (0..5).map(|_| q.pop_blocking().unwrap().x[0]).collect();
+        assert_eq!(order, vec![3.0, 5.0, 1.0, 4.0, 2.0]);
+    }
+
+    #[test]
+    fn bounded_push_rejects_when_full() {
+        let q = RequestQueue::new(2);
+        let (r1, _x1) = req(1.0);
+        let (r2, _x2) = req(2.0);
+        assert_eq!(q.push(r1, Priority::Normal).unwrap(), 1);
+        assert_eq!(q.push(r2, Priority::Normal).unwrap(), 2);
+        let (r3, _x3) = req(3.0);
+        match q.push(r3, Priority::High) {
+            Err(ServeError::QueueFull { cap }) => assert_eq!(cap, 2),
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        // Popping frees capacity again.
+        assert_eq!(q.pop_blocking().unwrap().x[0], 1.0);
+        let (r4, _x4) = req(4.0);
+        assert!(q.push(r4, Priority::Normal).is_ok());
+    }
+
+    #[test]
+    fn close_rejects_pushes_but_drains_pops() {
+        let q = RequestQueue::new(4);
+        let (r1, _x1) = req(1.0);
+        q.push(r1, Priority::Normal).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        let (r2, _x2) = req(2.0);
+        assert!(matches!(
+            q.push(r2, Priority::Normal),
+            Err(ServeError::Stopped)
+        ));
+        // The queued entry is still served, then pops report drained.
+        assert_eq!(q.pop_blocking().unwrap().x[0], 1.0);
+        assert!(q.pop_blocking().is_none());
+        assert!(q.pop_until(Instant::now() + Duration::from_millis(5)).is_none());
+    }
+
+    #[test]
+    fn pop_until_times_out_empty() {
+        let q = RequestQueue::new(4);
+        let t0 = Instant::now();
+        assert!(q.pop_until(t0 + Duration::from_millis(10)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q = std::sync::Arc::new(RequestQueue::new(8));
+        let q2 = std::sync::Arc::clone(&q);
+        let popper = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(r) = q2.pop_blocking() {
+                got.push(r.x[0]);
+            }
+            got
+        });
+        let mut rxs = Vec::new();
+        for id in 0..6 {
+            let (r, rx) = req(id as f32);
+            q.push(r, Priority::Normal).unwrap();
+            rxs.push(rx);
+        }
+        // Give the popper a chance to drain, then close to let it exit.
+        while q.len() > 0 {
+            std::thread::yield_now();
+        }
+        q.close();
+        let got = popper.join().unwrap();
+        assert_eq!(got.len(), 6);
+    }
+}

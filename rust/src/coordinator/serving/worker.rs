@@ -1,0 +1,274 @@
+//! The per-worker serving loop: pop → batch → pad → execute → scatter.
+//!
+//! Each worker thread owns one [`BatchModel`] instance and pulls from the
+//! shared [`RequestQueue`]. It *dynamically batches*: block for the first
+//! live request, then drain greedily — waiting at most `max_wait` for
+//! stragglers — up to the model's batch size, pad the remainder with zero
+//! rows, execute once, and scatter per-sample logits back through the
+//! per-request channels.
+//!
+//! Deadline enforcement happens here, at pop time: an expired request is
+//! answered with [`ServeError::DeadlineExceeded`] and *never occupies a
+//! batch slot* — under overload the worker burns microseconds rejecting
+//! stale work instead of milliseconds computing answers nobody is waiting
+//! for.
+//!
+//! Metrics record *real* occupancy per flush (`pending.len()` of `batch`
+//! slots), so padded partial batches are visible in the stats instead of
+//! silently inflating throughput.
+
+use super::backend::BatchModel;
+use super::queue::{QueuedRequest, RequestQueue};
+use super::ServeError;
+use crate::coordinator::metrics::ServingMetrics;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Everything a worker thread needs besides its model. Doubles as the
+/// worker's liveness guard: it is dropped when the worker exits — normal
+/// shutdown, factory failure, *or panic unwind* — and the last drop closes
+/// the queue and fails every still-queued request with
+/// [`ServeError::Stopped`], so a pool whose workers have all died rejects
+/// clients fast instead of letting them block on receivers forever.
+pub(crate) struct WorkerContext {
+    pub id: usize,
+    pub queue: Arc<RequestQueue>,
+    pub metrics: Arc<ServingMetrics>,
+    /// Max time to wait for stragglers after the first request of a batch.
+    pub max_wait: Duration,
+    /// Count of workers still alive (shared across the pool).
+    pub live: Arc<AtomicUsize>,
+}
+
+impl Drop for WorkerContext {
+    fn drop(&mut self) {
+        if self.live.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.queue.close_and_fail_pending();
+        }
+    }
+}
+
+/// Run until the queue is closed and drained.
+pub(crate) fn worker_loop(model: &mut dyn BatchModel, ctx: WorkerContext) {
+    let (batch, in_dim, classes) = (model.batch(), model.in_dim(), model.classes());
+    // One padded batch buffer reused across flushes (the model executes
+    // from cached plans; the batcher should not allocate per flush either).
+    let mut x = vec![0.0f32; batch * in_dim];
+    let mut pending: Vec<QueuedRequest> = Vec::with_capacity(batch);
+    loop {
+        // Block for the first live request; then drain greedily until the
+        // batch is full or the straggler window closes.
+        let Some(first) = next_live(&ctx, None) else {
+            return; // queue closed and drained: shut down
+        };
+        pending.push(first);
+        let flush_by = Instant::now() + ctx.max_wait;
+        while pending.len() < batch {
+            match next_live(&ctx, Some(flush_by)) {
+                Some(r) => pending.push(r),
+                None => break,
+            }
+        }
+        flush(model, &ctx, &mut pending, &mut x, (batch, in_dim, classes));
+    }
+}
+
+/// Pad, execute and scatter one batch. `pending` is drained either way.
+fn flush(
+    model: &mut dyn BatchModel,
+    ctx: &WorkerContext,
+    pending: &mut Vec<QueuedRequest>,
+    x: &mut [f32],
+    (batch, in_dim, classes): (usize, usize, usize),
+) {
+    x.fill(0.0);
+    for (s, req) in pending.iter().enumerate() {
+        x[s * in_dim..(s + 1) * in_dim].copy_from_slice(&req.x);
+    }
+    match model.forward(x) {
+        Ok(logits) => {
+            ctx.metrics.record_flush(ctx.id, pending.len(), batch);
+            for (s, req) in pending.drain(..).enumerate() {
+                let row = logits[s * classes..(s + 1) * classes].to_vec();
+                ctx.metrics.record_latency(ctx.id, req.enqueued.elapsed());
+                let _ = req.respond.send(Ok(row));
+            }
+        }
+        Err(e) => {
+            ctx.metrics.record_error(ctx.id);
+            let msg = format!("batch execution failed: {e}");
+            for req in pending.drain(..) {
+                let _ = req.respond.send(Err(ServeError::Backend(msg.clone())));
+            }
+        }
+    }
+}
+
+/// Pop the next request whose deadline is still live. Expired requests are
+/// answered with the typed error immediately — they never reach
+/// [`BatchModel::forward`] and never occupy a batch slot. With
+/// `until = None` this blocks until the queue closes; otherwise it gives up
+/// at `until` (straggler collection).
+fn next_live(ctx: &WorkerContext, until: Option<Instant>) -> Option<QueuedRequest> {
+    loop {
+        let req = match until {
+            None => ctx.queue.pop_blocking()?,
+            Some(t) => ctx.queue.pop_until(t)?,
+        };
+        match req.deadline {
+            Some(dl) if Instant::now() >= dl => {
+                ctx.metrics.record_rejected_deadline();
+                let _ = req.respond.send(Err(ServeError::DeadlineExceeded {
+                    waited: req.enqueued.elapsed(),
+                }));
+            }
+            _ => return Some(req),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serving::queue::Priority;
+    use std::sync::mpsc;
+
+    /// Identity model: logits = the (single-feature) input, call log kept
+    /// so tests can assert what reached `forward`.
+    struct IdentityModel {
+        batch: usize,
+        seen: Vec<f32>,
+    }
+
+    impl BatchModel for IdentityModel {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+        fn in_dim(&self) -> usize {
+            1
+        }
+        fn classes(&self) -> usize {
+            1
+        }
+        fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+            self.seen.extend_from_slice(x);
+            Ok(x.to_vec())
+        }
+    }
+
+    fn ctx(queue: &Arc<RequestQueue>, metrics: &Arc<ServingMetrics>) -> WorkerContext {
+        WorkerContext {
+            id: 0,
+            queue: Arc::clone(queue),
+            metrics: Arc::clone(metrics),
+            max_wait: Duration::from_millis(1),
+            live: Arc::new(AtomicUsize::new(1)),
+        }
+    }
+
+    fn push(
+        q: &RequestQueue,
+        id: f32,
+        deadline: Option<Duration>,
+    ) -> mpsc::Receiver<Result<Vec<f32>, ServeError>> {
+        let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
+        q.push(
+            QueuedRequest {
+                x: vec![id],
+                enqueued: now,
+                deadline: deadline.map(|d| now + d),
+                respond: tx,
+            },
+            Priority::Normal,
+        )
+        .unwrap();
+        rx
+    }
+
+    #[test]
+    fn expired_requests_never_reach_forward() {
+        let queue = Arc::new(RequestQueue::new(16));
+        let metrics = Arc::new(ServingMetrics::new(1));
+        let rx_dead = push(&queue, 5.0, Some(Duration::ZERO));
+        let rx_live = push(&queue, 7.0, None);
+        queue.close(); // worker drains then exits
+        let mut model = IdentityModel {
+            batch: 4,
+            seen: Vec::new(),
+        };
+        worker_loop(&mut model, ctx(&queue, &metrics));
+        match rx_dead.recv().unwrap() {
+            Err(ServeError::DeadlineExceeded { .. }) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(rx_live.recv().unwrap().unwrap(), vec![7.0]);
+        assert!(
+            !model.seen.contains(&5.0),
+            "expired sample must not reach forward: {:?}",
+            model.seen
+        );
+        assert_eq!(metrics.rejected(), (0, 1));
+        assert_eq!(metrics.totals(), (1, 1), "one served request, one batch");
+    }
+
+    #[test]
+    fn partial_batch_records_real_occupancy() {
+        let queue = Arc::new(RequestQueue::new(16));
+        let metrics = Arc::new(ServingMetrics::new(1));
+        let rx1 = push(&queue, 1.0, None);
+        let rx2 = push(&queue, 2.0, None);
+        queue.close();
+        let mut model = IdentityModel {
+            batch: 8,
+            seen: Vec::new(),
+        };
+        worker_loop(&mut model, ctx(&queue, &metrics));
+        assert!(rx1.recv().unwrap().is_ok());
+        assert!(rx2.recv().unwrap().is_ok());
+        let ws = metrics.worker_stats();
+        assert_eq!(ws[0].batches, 1);
+        assert_eq!(ws[0].occupied_slots, 2, "two real samples");
+        assert_eq!(ws[0].batch_slots, 8, "eight slots executed");
+        assert!((metrics.occupancy() - 0.25).abs() < 1e-12);
+        let stats = metrics.latency_stats().unwrap();
+        assert!((stats.occupancy - 0.25).abs() < 1e-12);
+    }
+
+    /// Model that fails every forward: clients get the typed backend error.
+    struct FailingModel;
+
+    impl BatchModel for FailingModel {
+        fn batch(&self) -> usize {
+            2
+        }
+        fn in_dim(&self) -> usize {
+            1
+        }
+        fn classes(&self) -> usize {
+            1
+        }
+        fn forward(&mut self, _x: &[f32]) -> anyhow::Result<Vec<f32>> {
+            anyhow::bail!("kernel exploded")
+        }
+    }
+
+    #[test]
+    fn backend_errors_reach_every_request_in_batch() {
+        let queue = Arc::new(RequestQueue::new(16));
+        let metrics = Arc::new(ServingMetrics::new(1));
+        let rx1 = push(&queue, 1.0, None);
+        let rx2 = push(&queue, 2.0, None);
+        queue.close();
+        worker_loop(&mut FailingModel, ctx(&queue, &metrics));
+        for rx in [rx1, rx2] {
+            match rx.recv().unwrap() {
+                Err(ServeError::Backend(msg)) => assert!(msg.contains("kernel exploded")),
+                other => panic!("expected Backend error, got {other:?}"),
+            }
+        }
+        assert_eq!(metrics.worker_stats()[0].errors, 1);
+        assert_eq!(metrics.totals(), (0, 0), "failed batches are not throughput");
+    }
+}

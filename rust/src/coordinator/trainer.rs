@@ -15,7 +15,7 @@
 //!   this loop only moves data and logs.
 
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::server::NativeSparseModel;
+use crate::coordinator::serving::{BatchModel, InferenceServer, NativeSparseModel, ServerConfig};
 use crate::data::synth::CifarLike;
 use crate::kernels::dense::transpose;
 use crate::kernels::plan::{PlanCache, SparseMatrix};
@@ -88,27 +88,71 @@ impl NativeTrainer {
         loss
     }
 
-    /// Export the current weights as a plan-cached serving model: the
-    /// masked hidden layer in CSR compact storage, the classifier dense —
-    /// both executed through the shared [`PlanCache`].
+    /// Snapshot the current weights in serving form: the masked hidden
+    /// layer CSR-compacted (gradients are masked, so `w1` is exactly zero
+    /// off the mask — compaction keeps precisely the surviving weights),
+    /// the classifier dense. Single source of truth for the export recipe:
+    /// `serving_model` (single-shot eval) and `serving_factory` (worker
+    /// pool) must never diverge.
+    fn export_weights(&self) -> (SparseMatrix, Vec<f32>, SparseMatrix, Vec<f32>) {
+        let (d, h, c) = (self.mlp.d, self.mlp.h, self.mlp.c);
+        (
+            SparseMatrix::Csr(CsrMatrix::from_dense(&self.mlp.w1, h, d)),
+            self.mlp.b1.clone(),
+            SparseMatrix::dense(self.mlp.w2.clone(), c, h),
+            self.mlp.b2.clone(),
+        )
+    }
+
+    /// Export the current weights as a plan-cached serving model
+    /// (see [`NativeTrainer::export_weights`] for the storage choices).
     pub fn serving_model(
         &self,
         batch: usize,
         threads: usize,
     ) -> anyhow::Result<NativeSparseModel> {
-        let (d, h, c) = (self.mlp.d, self.mlp.h, self.mlp.c);
-        // Gradients are masked, so w1 is exactly zero off the mask; CSR
-        // compaction keeps precisely the surviving weights.
-        let w1 = CsrMatrix::from_dense(&self.mlp.w1, h, d);
-        NativeSparseModel::new(
-            SparseMatrix::Csr(w1),
-            self.mlp.b1.clone(),
-            SparseMatrix::dense(self.mlp.w2.clone(), c, h),
-            self.mlp.b2.clone(),
-            batch,
-            threads,
-            Arc::clone(&self.cache),
-        )
+        let (w1, b1, w2, b2) = self.export_weights();
+        NativeSparseModel::new(w1, b1, w2, b2, batch, threads, Arc::clone(&self.cache))
+    }
+
+    /// A thread-safe factory producing identical serving models that all
+    /// share this trainer's [`PlanCache`] — the shape
+    /// [`InferenceServer::start_model`] wants for a multi-worker pool. Each
+    /// worker builds (and warms) its own [`NativeSparseModel`] on its own
+    /// thread; because every instance resolves plans from the one shared
+    /// cache, the structure derivation happens once and the plans built
+    /// during this trainer's evaluation are already warm.
+    pub fn serving_factory(
+        &self,
+        batch: usize,
+        threads: usize,
+    ) -> impl Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static {
+        let (w1, b1, w2, b2) = self.export_weights();
+        let cache = Arc::clone(&self.cache);
+        move || {
+            let mut model = NativeSparseModel::new(
+                w1.clone(),
+                b1.clone(),
+                w2.clone(),
+                b2.clone(),
+                batch,
+                threads,
+                Arc::clone(&cache),
+            )?;
+            model.warm()?;
+            Ok(Box::new(model) as Box<dyn BatchModel>)
+        }
+    }
+
+    /// Spin up a multi-worker inference server on the current weights
+    /// (`config.workers` workers, all sharing this trainer's plan cache).
+    pub fn serve(
+        &self,
+        batch: usize,
+        threads: usize,
+        config: ServerConfig,
+    ) -> anyhow::Result<InferenceServer> {
+        InferenceServer::start_model(self.serving_factory(batch, threads), config)
     }
 
     /// Held-out accuracy over `n_batches` test batches, computed through
@@ -432,6 +476,35 @@ mod tests {
         // Evaluation executed through the shared plan cache.
         let (_, misses) = t.cache().stats();
         assert!(misses >= 2, "both layers planned");
+    }
+
+    #[test]
+    fn trainer_serves_multi_worker_from_shared_cache() {
+        let mut t = NativeTrainer::new(64, 64, 4, Pattern::Rbgp4, 0.75, quick_config(10))
+            .unwrap()
+            .with_threads(1);
+        for s in 0..10 {
+            t.step(s);
+        }
+        let server = t
+            .serve(
+                8,
+                1,
+                ServerConfig {
+                    workers: 2,
+                    ..ServerConfig::default()
+                },
+            )
+            .unwrap();
+        let b = t.data.test_batch(1);
+        let logits = server.infer(b.x).unwrap();
+        assert_eq!(logits.len(), 4);
+        // Both workers warmed their two layer plans from the trainer's one
+        // cache: two structure builds ever, the other worker's resolves hit.
+        let (hits, misses) = t.cache().stats();
+        assert_eq!(misses, 2, "structure derived once across the pool");
+        assert_eq!(hits, 2, "second worker warms from cache");
+        server.shutdown();
     }
 
     #[test]

@@ -172,6 +172,7 @@ pub struct PlanRequest {
 }
 
 /// Family-specific prepared state (the part of a plan the kernels read).
+#[derive(Clone)]
 pub(crate) enum PlanState {
     /// Dense needs no derived structure beyond the thread count.
     Dense,
@@ -184,6 +185,11 @@ pub(crate) enum PlanState {
 /// A built execution plan: everything derivable from `(structure, batch
 /// class, threads)`, including reusable scratch arenas. Executing from a
 /// plan performs no allocation and no index derivation.
+///
+/// `Clone` copies the derived structure *and* the scratch — executors that
+/// run concurrently (the serving worker pool) each detach a working copy
+/// from the shared cache entry instead of serializing on its mutex.
+#[derive(Clone)]
 pub struct KernelPlan {
     pub pattern: Pattern,
     pub rows: usize,
@@ -282,12 +288,13 @@ impl PlanCache {
     /// One-call convenience: plan lookup + execute.
     ///
     /// Note two costs a latency-critical caller can avoid by holding the
-    /// `Arc` from [`PlanCache::plan_for`] instead (as
-    /// [`crate::coordinator::server::NativeSparseModel`] does after
-    /// warm-up): the key computation re-hashes the matrix structure
-    /// (O(nnz index words) for CSR/BSR), and the plan's mutex is held for
-    /// the whole execution — correct because RBGP4 plans carry mutable
-    /// scratch arenas, but it serializes concurrent users of one plan.
+    /// `Arc` from [`PlanCache::plan_for`] — or, like
+    /// [`crate::coordinator::serving::NativeSparseModel`], by detaching a
+    /// private clone of the built plan: the key computation re-hashes the
+    /// matrix structure (O(nnz index words) for CSR/BSR), and the plan's
+    /// mutex is held for the whole execution — correct because RBGP4 plans
+    /// carry mutable scratch arenas, but it serializes concurrent users of
+    /// one plan.
     pub fn execute(
         &self,
         registry: &crate::kernels::registry::KernelRegistry,

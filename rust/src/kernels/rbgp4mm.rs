@@ -88,6 +88,9 @@ const NC: usize = 512;
 
 /// Execution plan for one RBGP4 mask at one batch class / thread count:
 /// everything `rbgp4mm` derives from the succinct index, computed once.
+/// `Clone` lets an executor detach a private working copy (the arenas are
+/// mutable scratch, so concurrent executors each need their own).
+#[derive(Clone)]
 pub struct Rbgp4Plan {
     /// Flattened `(m_i × tile_row_nnz)` intra-tile column offsets.
     pub(crate) local_cols: Vec<u32>,

@@ -11,7 +11,7 @@
 //!   serve       batched inference server demo over the forward artifact
 
 use rbgp::bench_harness::{table1, table2, table3};
-use rbgp::coordinator::{InferenceServer, ServerConfig};
+use rbgp::coordinator::{InferenceServer, ServeError, ServerConfig};
 use rbgp::data::CifarLike;
 use rbgp::graph::{product_many, ramanujan, spectral, BipartiteGraph};
 use rbgp::gpusim::explain_fig1;
@@ -22,6 +22,7 @@ use rbgp::util::cli::Args;
 use rbgp::util::fmt_mb;
 use rbgp::util::rng::Rng;
 use std::path::PathBuf;
+use std::time::Duration;
 
 #[cfg(not(feature = "xla"))]
 use rbgp::coordinator::{BatchModel, NativeSparseModel, NativeTrainer};
@@ -46,8 +47,8 @@ COMMANDS
   table3     [--measure-n 1024] [--seed 0]              Table 3 (model + measured)
   train      [--artifacts DIR] [--steps 300] [--lr 0.1] [--seed 0] [--distill]
              [--save ckpt.json] [--load ckpt.json]
-  serve      [--artifacts DIR] [--requests 512] [--clients 4]
-             [--checkpoint ckpt.json]
+  serve      [--requests 512] [--clients 4] [--workers 2] [--queue-cap 1024]
+             [--deadline-ms 0] [--artifacts DIR] [--checkpoint ckpt.json]
 
 With the `xla` feature, train/serve execute AOT artifacts on PJRT (run
 `make artifacts` first). Without it, they run the native plan-cached
@@ -301,6 +302,18 @@ fn train_cmd(args: &Args) -> anyhow::Result<()> {
 fn serve_cmd(args: &Args) -> anyhow::Result<()> {
     let total = args.get_usize("requests", 512)?;
     let clients = args.get_usize("clients", 4)?.max(1);
+    let workers = args.get_usize("workers", 2)?.max(1);
+    let queue_cap = args.get_usize("queue-cap", 1024)?;
+    let deadline = match args.get_u64("deadline-ms", 0)? {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    };
+    let base_config = ServerConfig {
+        workers,
+        queue_cap,
+        default_deadline: deadline,
+        ..ServerConfig::default()
+    };
     #[cfg(feature = "xla")]
     let server = {
         let dir = artifacts_dir(args);
@@ -309,7 +322,7 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
             dir,
             ServerConfig {
                 checkpoint: args.get("checkpoint").map(std::path::PathBuf::from),
-                ..ServerConfig::default()
+                ..base_config
             },
         )?
     };
@@ -324,20 +337,36 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
         println!("xla feature disabled — serving the native RBGP4 demo model from the plan cache");
         let seed = args.get_u64("seed", 0)?;
         let batch = args.get_usize("batch", 16)?;
-        let threads = rbgp::util::threadpool::default_threads();
+        // Divide the cores across the pool: N workers each running an
+        // all-cores kernel would oversubscribe the CPU N-fold (and carry
+        // N× the per-thread pack arenas in their detached plans).
+        let threads = (rbgp::util::threadpool::default_threads() / workers).max(1);
+        // One plan cache for the whole pool: every worker's model resolves
+        // the same two layer plans (structure derived once).
+        let cache = std::sync::Arc::new(rbgp::kernels::PlanCache::new());
+        let model_cache = std::sync::Arc::clone(&cache);
         InferenceServer::start_model(
             move || {
-                let cache = std::sync::Arc::new(rbgp::kernels::PlanCache::new());
-                let mut model = NativeSparseModel::rbgp4_demo(16, batch, threads, seed, cache)?;
+                let mut model = NativeSparseModel::rbgp4_demo(
+                    16,
+                    batch,
+                    threads,
+                    seed,
+                    std::sync::Arc::clone(&model_cache),
+                )?;
                 model.warm()?;
                 Ok(Box::new(model) as Box<dyn BatchModel>)
             },
-            ServerConfig::default(),
+            base_config,
         )?
     };
     println!(
-        "model: in_dim {}, classes {}, max batch {}",
-        server.in_dim, server.classes, server.batch
+        "model: in_dim {}, classes {}, max batch {} × {} workers, queue cap {}",
+        server.in_dim,
+        server.classes,
+        server.batch,
+        server.workers(),
+        server.queue_capacity()
     );
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| {
@@ -348,23 +377,49 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
                 let per = total / clients;
                 for _ in 0..per {
                     let b = data.test_batch(1);
-                    let logits = server.infer(b.x).expect("infer");
-                    assert_eq!(logits.len(), server.classes);
+                    match server.infer(b.x) {
+                        Ok(logits) => assert_eq!(logits.len(), server.classes),
+                        // Under a --deadline-ms budget, expiry is expected
+                        // load-shedding, not a failure; rejected() reports it.
+                        Err(ServeError::DeadlineExceeded { .. }) => {}
+                        Err(e) => panic!("infer failed: {e}"),
+                    }
                 }
             });
         }
     });
     let wall = t0.elapsed().as_secs_f64();
     let (reqs, batches) = server.counters();
-    let stats = server.latency_stats().expect("stats");
     println!("served {reqs} requests in {batches} batches over {wall:.2}s");
     println!("  throughput: {:.1} req/s", reqs as f64 / wall);
-    println!(
-        "  latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}",
-        stats.p50 * 1e3,
-        stats.p95 * 1e3,
-        stats.p99 * 1e3,
-        stats.max * 1e3
-    );
+    // All-rejected runs (tight --deadline-ms) have no latency samples.
+    if let Some(stats) = server.latency_stats() {
+        println!(
+            "  latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}",
+            stats.p50 * 1e3,
+            stats.p95 * 1e3,
+            stats.p99 * 1e3,
+            stats.max * 1e3
+        );
+        println!(
+            "  batch occupancy: {:.1}%  peak queue depth: {}",
+            stats.occupancy * 100.0,
+            server.peak_queue_depth()
+        );
+    }
+    let (rej_full, rej_late) = server.rejected();
+    if rej_full + rej_late > 0 {
+        println!("  rejected: {rej_full} backpressure, {rej_late} deadline-expired");
+    }
+    for w in server.worker_stats() {
+        println!(
+            "    worker {}: {} reqs in {} batches (occupancy {:.1}%)",
+            w.worker,
+            w.requests,
+            w.batches,
+            w.occupancy() * 100.0
+        );
+    }
+    server.shutdown();
     Ok(())
 }

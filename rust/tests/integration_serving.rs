@@ -1,0 +1,219 @@
+//! Integration tests for the multi-worker serving subsystem over the
+//! public API: many client threads hammering a worker pool, per-request
+//! correctness against a single-shot forward, typed deadline/backpressure
+//! errors, shared-plan-cache verification, and graceful shutdown.
+//!
+//! These run on the default (native) build — no artifacts, no `xla`.
+
+use rbgp::coordinator::{
+    BatchModel, InferenceServer, NativeSparseModel, Priority, ServeError, ServerConfig,
+    SubmitOptions,
+};
+use rbgp::kernels::PlanCache;
+use std::sync::Arc;
+use std::time::Duration;
+
+const CLASSES: usize = 10;
+const BATCH: usize = 8;
+const IN_DIM: usize = 256;
+
+/// Deterministic per-(client, request) sample.
+fn sample(client: usize, req: usize) -> Vec<f32> {
+    (0..IN_DIM)
+        .map(|i| {
+            let v = (i * 31 + client * 7 + req * 13) % 23;
+            (v as f32 - 11.0) / 11.0
+        })
+        .collect()
+}
+
+fn demo_server(seed: u64, cache: &Arc<PlanCache>, config: ServerConfig) -> InferenceServer {
+    let cache = Arc::clone(cache);
+    InferenceServer::start_model(
+        move || {
+            let mut m = NativeSparseModel::rbgp4_demo(CLASSES, BATCH, 1, seed, Arc::clone(&cache))?;
+            m.warm()?;
+            Ok(Box::new(m) as Box<dyn BatchModel>)
+        },
+        config,
+    )
+    .expect("server start")
+}
+
+#[test]
+fn worker_pool_matches_single_shot_forward_and_shares_plans() {
+    let workers = 3;
+    let cache = Arc::new(PlanCache::new());
+    let server = demo_server(
+        7,
+        &cache,
+        ServerConfig {
+            workers,
+            max_wait: Duration::from_millis(2),
+            ..ServerConfig::default()
+        },
+    );
+    assert_eq!(server.workers(), workers);
+    assert_eq!(server.in_dim, IN_DIM);
+
+    // Reference model on its own cache (so its plan traffic is separate).
+    let mut reference =
+        NativeSparseModel::rbgp4_demo(CLASSES, BATCH, 1, 7, Arc::new(PlanCache::new())).unwrap();
+
+    // Many clients hammer the pool; every response must equal the
+    // single-shot forward of its own sample (rows are independent, padding
+    // is zero), regardless of which worker served it or how it batched.
+    let clients = 6;
+    let per_client = 16;
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let server = server.clone();
+            scope.spawn(move || {
+                for r in 0..per_client {
+                    let got = server.infer(sample(c, r)).unwrap();
+                    assert_eq!(got.len(), CLASSES);
+                }
+            });
+        }
+    });
+
+    // Spot-check logits equality against the reference forward.
+    for (c, r) in [(0usize, 0usize), (3, 5), (5, 15)] {
+        let x = sample(c, r);
+        let got = server.infer(x.clone()).unwrap();
+        let mut xb = vec![0.0f32; BATCH * IN_DIM];
+        xb[..IN_DIM].copy_from_slice(&x);
+        let want = reference.forward(&xb).unwrap();
+        for (a, b) in got.iter().zip(&want[..CLASSES]) {
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+                "pool logits {a} != single-shot {b}"
+            );
+        }
+    }
+
+    let (requests, batches) = server.counters();
+    assert_eq!(requests, clients * per_client + 3);
+    assert!(batches >= requests / BATCH, "batches cover all requests");
+
+    // The acceptance check: N workers, one Arc<PlanCache>. Exactly two
+    // structure builds ever (one per layer); every other worker's warm-up
+    // resolved from cache.
+    let (hits, misses) = cache.stats();
+    assert_eq!(misses, 2, "structure derived once for the whole pool");
+    assert_eq!(hits, 2 * (workers - 1), "remaining workers warm from cache");
+
+    // Per-worker counters add up to the totals.
+    let ws = server.worker_stats();
+    assert_eq!(ws.len(), workers);
+    assert_eq!(ws.iter().map(|w| w.requests).sum::<usize>(), requests);
+    assert_eq!(ws.iter().map(|w| w.batches).sum::<usize>(), batches);
+    let stats = server.latency_stats().unwrap();
+    assert_eq!(stats.count, requests);
+    assert!(stats.occupancy > 0.0 && stats.occupancy <= 1.0);
+    server.shutdown();
+}
+
+#[test]
+fn expired_deadlines_get_typed_error_not_batch_slots() {
+    let cache = Arc::new(PlanCache::new());
+    let server = demo_server(
+        21,
+        &cache,
+        ServerConfig {
+            workers: 2,
+            ..ServerConfig::default()
+        },
+    );
+    // Zero-deadline requests are expired by the time any worker pops them.
+    let opts = SubmitOptions::default().with_deadline(Duration::ZERO);
+    let receivers: Vec<_> = (0..5)
+        .map(|r| server.submit_with(sample(0, r), opts).unwrap())
+        .collect();
+    for rx in receivers {
+        match rx.recv().unwrap() {
+            Err(ServeError::DeadlineExceeded { .. }) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+    // Live traffic is unaffected.
+    assert_eq!(server.infer(sample(0, 99)).unwrap().len(), CLASSES);
+    let (rejected_full, rejected_deadline) = server.rejected();
+    assert_eq!(rejected_full, 0);
+    assert_eq!(rejected_deadline, 5);
+    let (requests, _) = server.counters();
+    assert_eq!(requests, 1, "expired requests are not counted as served");
+    let occupied: usize = server.worker_stats().iter().map(|w| w.occupied_slots).sum();
+    assert_eq!(occupied, 1, "expired requests never occupied a batch slot");
+    server.shutdown();
+}
+
+#[test]
+fn priorities_and_default_deadline_are_accepted() {
+    let cache = Arc::new(PlanCache::new());
+    let server = demo_server(
+        33,
+        &cache,
+        ServerConfig {
+            workers: 2,
+            // Generous default deadline: everything should still be served.
+            default_deadline: Some(Duration::from_secs(30)),
+            ..ServerConfig::default()
+        },
+    );
+    for (r, priority) in [Priority::High, Priority::Normal, Priority::Low]
+        .into_iter()
+        .enumerate()
+    {
+        let got = server
+            .infer_with(sample(1, r), SubmitOptions::default().with_priority(priority))
+            .unwrap();
+        assert_eq!(got.len(), CLASSES);
+    }
+    assert_eq!(server.rejected(), (0, 0));
+    assert_eq!(server.counters().0, 3);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_then_rejects() {
+    let cache = Arc::new(PlanCache::new());
+    let server = demo_server(
+        5,
+        &cache,
+        ServerConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(1),
+            ..ServerConfig::default()
+        },
+    );
+    // Queue a burst, then shut down: every submitted request must still be
+    // answered (drain), and later submits must fail with the typed error.
+    let receivers: Vec<_> = (0..20)
+        .map(|r| server.submit(sample(2, r)).unwrap())
+        .collect();
+    server.shutdown();
+    for rx in receivers {
+        let logits = rx.recv().unwrap().unwrap();
+        assert_eq!(logits.len(), CLASSES);
+    }
+    assert!(matches!(
+        server.submit(sample(2, 999)),
+        Err(ServeError::Stopped)
+    ));
+    assert!(matches!(server.infer(sample(2, 1000)), Err(ServeError::Stopped)));
+    // Stats remain readable after shutdown.
+    assert_eq!(server.counters().0, 20);
+    assert!(server.latency_stats().is_some());
+}
+
+#[test]
+fn wrong_width_is_rejected_synchronously() {
+    let cache = Arc::new(PlanCache::new());
+    let server = demo_server(9, &cache, ServerConfig::default());
+    match server.submit(vec![0.0; 3]) {
+        Err(ServeError::WrongInputWidth { got: 3, want }) => assert_eq!(want, IN_DIM),
+        other => panic!("expected WrongInputWidth, got {:?}", other.map(|_| ())),
+    }
+    server.shutdown();
+}

@@ -263,3 +263,60 @@ fn prop_succinct_index_always_smaller() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_plan_cache_concurrent_resolve_is_consistent() {
+    let registry = KernelRegistry::builtin();
+    check("PlanCache under concurrent resolve", 8, |rng| {
+        // A few distinct structures at one shape (dense + two CSR patterns).
+        let m = 4 * gen::range(rng, 2, 8);
+        let k = 4 * gen::range(rng, 2, 8);
+        let matrices = [
+            SparseMatrix::dense(rng.normal_vec_f32(m * k, 1.0), m, k),
+            SparseMatrix::Csr(CsrMatrix::random_row_uniform(m, k, 0.75, rng)),
+            SparseMatrix::Csr(CsrMatrix::random_row_uniform(m, k, 0.5, rng)),
+        ];
+        let n = gen::range(rng, 1, 16);
+        let req = PlanRequest { n, threads: 2 };
+        let cache = PlanCache::new();
+        let n_threads = 8;
+        let rounds = 4;
+        // N threads race to resolve every structure's plan `rounds` times
+        // (the multi-worker server's warm-up pattern).
+        let ptrs: Vec<Vec<usize>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_threads)
+                .map(|_| {
+                    let cache = &cache;
+                    let registry = &registry;
+                    let matrices = &matrices;
+                    scope.spawn(move || {
+                        let mut seen = Vec::new();
+                        for _ in 0..rounds {
+                            for w in matrices {
+                                let plan = cache.plan_for(registry, w, &req).unwrap();
+                                seen.push(std::sync::Arc::as_ptr(&plan) as usize);
+                            }
+                        }
+                        seen
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Hit/miss accounting must be exact even when builders race: a
+        // miss is counted only for the plan that won insertion, so misses
+        // equal the distinct structures and everything else is a hit.
+        let (hits, misses) = cache.stats();
+        let total = n_threads * rounds * matrices.len();
+        prop_assert_eq!(misses, matrices.len(), "one build per structure");
+        prop_assert_eq!(hits, total - matrices.len(), "every other resolve hits");
+        prop_assert_eq!(cache.len(), matrices.len(), "no duplicate entries survive");
+        // Every thread got the same canonical Arc per structure — racing
+        // losers adopt the winner's plan instead of keeping their own.
+        let mut distinct: Vec<usize> = ptrs.into_iter().flatten().collect();
+        distinct.sort_unstable();
+        distinct.dedup();
+        prop_assert_eq!(distinct.len(), matrices.len(), "one shared plan per structure");
+        Ok(())
+    });
+}
