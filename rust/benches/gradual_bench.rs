@@ -1,0 +1,140 @@
+//! Gradual structure induction: per-milestone plan-rebuild cost vs
+//! steady-state execution — the trajectory for the mutable-structure
+//! lifecycle (mask chain → structure hash → plan generation → eviction).
+//!
+//! A gradual run pays, at every milestone, what a fixed-mask run pays
+//! once: evict the outgoing structure's plans and derive the incoming
+//! structure's. This bench runs a full gradual training
+//! (`NativeTrainer::run_gradual`), records each milestone's rebuild time
+//! and eviction count, then measures the steady-state plan-path forward at
+//! the final structure, so the rebuild cost can be read as "N forwards'
+//! worth of work per milestone".
+//!
+//! Results go to `BENCH_gradual.json` (cargo package root, like
+//! `BENCH_kernels.json` / `BENCH_server.json`) for future PRs to diff.
+//!
+//! `cargo bench --bench gradual_bench` (RBGP_BENCH_FAST=1 quick pass)
+
+use rbgp::coordinator::{BatchModel, NativeTrainer};
+use rbgp::train_native::{GradualSchedule, NativeTrainConfig};
+use rbgp::util::json::Json;
+use std::time::Instant;
+
+const OUT_PATH: &str = "BENCH_gradual.json";
+const IN_DIM: usize = 256;
+const HIDDEN: usize = 256;
+const CLASSES: usize = 16;
+const BATCH: usize = 64;
+const THREADS: usize = 2;
+const SPARSITY: f64 = 0.75;
+const SEED: u64 = 11;
+
+fn main() {
+    let fast = std::env::var("RBGP_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let steps = if fast { 80 } else { 400 };
+    let schedule = GradualSchedule::default();
+    println!(
+        "gradual bench — MLP {IN_DIM}->{HIDDEN}->{CLASSES}, dense start → RBGP4 @ \
+         {:.0}% sparsity, {} steps, milestones {:?}\n",
+        SPARSITY * 100.0,
+        steps,
+        schedule.fractions
+    );
+
+    let config = NativeTrainConfig {
+        steps,
+        batch: BATCH,
+        lr: 0.05,
+        seed: SEED,
+        ..NativeTrainConfig::default()
+    };
+    let mut trainer =
+        NativeTrainer::new_gradual(IN_DIM, HIDDEN, CLASSES, SPARSITY, &schedule, config)
+            .expect("gradual trainer")
+            .with_threads(THREADS);
+    let report = trainer.run_gradual().expect("gradual run");
+
+    // Steady-state: the plan-path forward at the final structure, plans
+    // already cached — the baseline a milestone's rebuild cost is paid
+    // against.
+    let mut model = trainer.serving_model(BATCH, THREADS).expect("serving model");
+    model.warm().expect("warm");
+    let x: Vec<f32> = (0..BATCH * IN_DIM)
+        .map(|i| ((i % 23) as f32 - 11.0) / 11.0)
+        .collect();
+    let iters = if fast { 20 } else { 200 };
+    for _ in 0..3 {
+        model.forward(&x).expect("warm-up forward");
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        model.forward(&x).expect("forward");
+    }
+    let execute_s = t0.elapsed().as_secs_f64() / iters as f64;
+
+    println!("\nsteady-state execute: {:.3} ms / batch-{BATCH} forward", execute_s * 1e3);
+    println!(
+        "{:>9} {:>6} {:>10} {:>10} {:>9} {:>13} {:>16}",
+        "milestone", "step", "loss", "sparsity", "evicted", "rebuild ms", "≈ forwards"
+    );
+    let mut rows = Vec::new();
+    for r in &report.milestones {
+        let forwards_equiv = r.plan_rebuild_s / execute_s.max(1e-12);
+        println!(
+            "{:>9} {:>6} {:>10.4} {:>10.4} {:>9} {:>13.3} {:>16.1}",
+            r.milestone,
+            r.step + 1,
+            r.loss,
+            r.sparsity,
+            r.evicted_plans,
+            r.plan_rebuild_s * 1e3,
+            forwards_equiv
+        );
+        let mut j = Json::obj();
+        j.set("milestone", r.milestone)
+            .set("step", r.step)
+            .set("loss", r.loss as f64)
+            .set("sparsity", r.sparsity)
+            .set("structure_hash", format!("{:016x}", r.structure_hash))
+            .set("evicted_plans", r.evicted_plans)
+            .set("plan_rebuild_ms", r.plan_rebuild_s * 1e3)
+            .set("rebuild_over_execute", forwards_equiv);
+        rows.push(j);
+    }
+
+    let (hits, misses) = trainer.cache().stats();
+    let (invalidations, evicted) = trainer.cache().eviction_stats();
+    let mut doc = Json::obj();
+    let mut meta = Json::obj();
+    meta.set("in_dim", IN_DIM)
+        .set("hidden", HIDDEN)
+        .set("classes", CLASSES)
+        .set("batch", BATCH)
+        .set("threads", THREADS)
+        .set("sparsity", SPARSITY)
+        .set("steps", steps)
+        .set("seed", SEED)
+        .set("fast_mode", fast)
+        .set(
+            "milestone_fractions",
+            Json::Arr(schedule.fractions.iter().map(|&f| Json::Num(f)).collect()),
+        );
+    let mut cache = Json::obj();
+    cache
+        .set("hits", hits)
+        .set("misses", misses)
+        .set("invalidations", invalidations)
+        .set("evicted_plans", evicted)
+        .set("live_structures", trainer.cache().structures().len());
+    doc.set("bench", "gradual_bench")
+        .set("config", meta)
+        .set("final_loss", report.final_loss as f64)
+        .set("accuracy", report.accuracy)
+        .set("steady_execute_ms", execute_s * 1e3)
+        .set("cache", cache)
+        .set("milestones", Json::Arr(rows));
+    match std::fs::write(OUT_PATH, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {OUT_PATH} ({} milestones)", report.milestones.len()),
+        Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),
+    }
+}

@@ -14,15 +14,13 @@
 //!   that later asks for stats.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::Mutex;
 use std::time::Duration;
 
-/// Lock a mutex, recovering the guard when a previous holder panicked.
-/// Metrics are advisory: a torn sample from a crashed worker is strictly
-/// better than propagating its panic into every client that reads stats.
-pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
-}
+// The poison-recovering lock guard now lives in `util` so the plan cache
+// (a lower layer) can share it; re-exported here for the serving modules
+// that adopted it in the metrics refactor.
+pub(crate) use crate::util::lock_recover;
 
 /// Single-owner metrics store used by the trainers.
 #[derive(Clone, Debug, Default)]

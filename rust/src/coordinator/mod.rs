@@ -19,6 +19,6 @@ pub use serving::{
     BatchModel, InferenceServer, NativeSparseModel, Priority, ServeError, ServerConfig,
     SubmitOptions,
 };
-pub use trainer::NativeTrainer;
+pub use trainer::{GradualReport, MilestoneRecord, NativeTrainer};
 #[cfg(feature = "xla")]
 pub use trainer::Trainer;

@@ -149,10 +149,7 @@ impl NativeSparseModel {
             threads: self.threads,
         };
         let detach = |shared: Arc<Mutex<KernelPlan>>| -> KernelPlan {
-            shared
-                .lock()
-                .unwrap_or_else(std::sync::PoisonError::into_inner)
-                .clone()
+            crate::util::lock_recover(&shared).clone()
         };
         if self.plan1.is_none() {
             self.plan1 = Some(detach(self.cache.plan_for(&self.registry, &self.w1, &req)?));

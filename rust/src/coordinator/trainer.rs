@@ -21,10 +21,55 @@ use crate::kernels::dense::transpose;
 use crate::kernels::plan::{PlanCache, SparseMatrix};
 use crate::sparsity::csr::CsrMatrix;
 use crate::sparsity::memory::Pattern;
-use crate::train_native::masks::pattern_mask;
+use crate::sparsity::rbgp4::Rbgp4Mask;
+use crate::train_native::gradual::{is_nested, nested_masks_from, GradualSchedule};
+use crate::train_native::masks::{pattern_mask, rbgp4_factorization};
 use crate::train_native::mlp::{MaskedMlp, NativeTrainConfig};
 use crate::util::rng::Rng;
 use std::sync::Arc;
+use std::time::Instant;
+
+/// Telemetry of one gradual-induction milestone: the mask tightened, the
+/// outgoing structure's plans were evicted from the shared cache, and the
+/// incoming structure's plans were rebuilt (warmed) — the whole mutable
+/// part of the structure lifecycle, measured.
+#[derive(Clone, Debug)]
+pub struct MilestoneRecord {
+    /// 0-based milestone index (position in the schedule).
+    pub milestone: usize,
+    /// Training step after which the mask tightened.
+    pub step: usize,
+    /// That step's training loss.
+    pub loss: f32,
+    /// Mask sparsity after tightening.
+    pub sparsity: f64,
+    /// Structure hash of the hidden layer *after* tightening — the new
+    /// plan-cache namespace.
+    pub structure_hash: u64,
+    /// Plans evicted for the outgoing structure at the re-key.
+    pub evicted_plans: usize,
+    /// Seconds to rebuild (warm) the incoming structure's plans.
+    pub plan_rebuild_s: f64,
+}
+
+/// Result of a full gradual run: the milestone trace plus the usual
+/// (loss, accuracy) outcome.
+#[derive(Clone, Debug, Default)]
+pub struct GradualReport {
+    pub milestones: Vec<MilestoneRecord>,
+    pub final_loss: f32,
+    pub accuracy: f64,
+}
+
+/// Internal bookkeeping of a gradual run: the nested mask chain (one entry
+/// per schedule fraction, ending at the exact RBGP4 mask) and the cursor
+/// of the next mask to apply.
+struct GradualState {
+    fractions: Vec<f64>,
+    chain: Vec<Vec<f32>>,
+    final_mask: Rbgp4Mask,
+    next: usize,
+}
 
 /// Native trainer: masked-MLP SGD on the CIFAR-like task, plan-cached
 /// evaluation/serving. The default build's training path.
@@ -35,6 +80,7 @@ pub struct NativeTrainer {
     data: CifarLike,
     cache: Arc<PlanCache>,
     threads: usize,
+    gradual: Option<GradualState>,
 }
 
 impl NativeTrainer {
@@ -60,6 +106,51 @@ impl NativeTrainer {
             data,
             cache: Arc::new(PlanCache::new()),
             threads: crate::util::threadpool::default_threads(),
+            gradual: None,
+        })
+    }
+
+    /// Build a trainer for *gradual* structure induction (§7 future work):
+    /// training starts on a fully dense hidden layer and, at each schedule
+    /// fraction, tightens the mask along a nested superset chain that ends
+    /// at an exact RBGP4 mask of the given total `sparsity`
+    /// (factorized by [`rbgp4_factorization`], sampled once from
+    /// `config.seed`). Every tightening re-keys the shared [`PlanCache`]:
+    /// the outgoing structure's plans are evicted, the incoming structure's
+    /// are rebuilt — see [`NativeTrainer::run_gradual`].
+    pub fn new_gradual(
+        in_dim: usize,
+        hidden: usize,
+        classes: usize,
+        sparsity: f64,
+        schedule: &GradualSchedule,
+        config: NativeTrainConfig,
+    ) -> anyhow::Result<NativeTrainer> {
+        let schedule = GradualSchedule::from_fractions(schedule.fractions.clone())?;
+        let rbgp = rbgp4_factorization(hidden, in_dim, sparsity)?;
+        let mut rng = Rng::new(config.seed);
+        let final_mask = Rbgp4Mask::sample(rbgp, &mut rng)?;
+        // One mask per schedule fraction: fractions.len() - 1 intermediates
+        // plus the final mask, so the *last* milestone lands on the exact
+        // RBGP4 structure and trains there until the end of the run.
+        let chain = nested_masks_from(&final_mask, schedule.fractions.len() - 1, &mut rng);
+        debug_assert!(is_nested(&chain));
+        debug_assert_eq!(chain.len(), schedule.fractions.len());
+        let mlp = MaskedMlp::new(in_dim, hidden, classes, vec![1.0; hidden * in_dim], &mut rng);
+        let data = CifarLike::new(in_dim, classes, config.seed ^ 0x0005_ca1e);
+        Ok(NativeTrainer {
+            mlp,
+            config,
+            metrics: Metrics::default(),
+            data,
+            cache: Arc::new(PlanCache::new()),
+            threads: crate::util::threadpool::default_threads(),
+            gradual: Some(GradualState {
+                fractions: schedule.fractions,
+                chain,
+                final_mask,
+                next: 0,
+            }),
         })
     }
 
@@ -88,16 +179,35 @@ impl NativeTrainer {
         loss
     }
 
+    /// The hidden layer in serving form: CSR whose *pattern comes from the
+    /// mask* (an on-mask weight that is transiently `0.0` is stored
+    /// explicitly), so the structure hash — the plan-cache namespace — is a
+    /// pure function of the mask: stable within a gradual milestone,
+    /// changed exactly at one.
+    fn export_w1(&self) -> SparseMatrix {
+        SparseMatrix::Csr(CsrMatrix::from_dense_with_pattern(
+            &self.mlp.w1,
+            &self.mlp.mask,
+            self.mlp.h,
+            self.mlp.d,
+        ))
+    }
+
+    /// Structure hash of the current hidden layer as it would be served —
+    /// the namespace under which this trainer's plans live in the cache.
+    pub fn structure_hash(&self) -> u64 {
+        self.export_w1().structure_hash()
+    }
+
     /// Snapshot the current weights in serving form: the masked hidden
-    /// layer CSR-compacted (gradients are masked, so `w1` is exactly zero
-    /// off the mask — compaction keeps precisely the surviving weights),
-    /// the classifier dense. Single source of truth for the export recipe:
-    /// `serving_model` (single-shot eval) and `serving_factory` (worker
-    /// pool) must never diverge.
+    /// layer CSR-compacted on the mask pattern (see
+    /// [`NativeTrainer::export_w1`]), the classifier dense. Single source
+    /// of truth for the export recipe: `serving_model` (single-shot eval)
+    /// and `serving_factory` (worker pool) must never diverge.
     fn export_weights(&self) -> (SparseMatrix, Vec<f32>, SparseMatrix, Vec<f32>) {
-        let (d, h, c) = (self.mlp.d, self.mlp.h, self.mlp.c);
+        let (h, c) = (self.mlp.h, self.mlp.c);
         (
-            SparseMatrix::Csr(CsrMatrix::from_dense(&self.mlp.w1, h, d)),
+            self.export_w1(),
             self.mlp.b1.clone(),
             SparseMatrix::dense(self.mlp.w2.clone(), c, h),
             self.mlp.b2.clone(),
@@ -181,8 +291,165 @@ impl NativeTrainer {
         Ok(correct as f64 / total.max(1) as f64)
     }
 
-    /// Full training run; returns (final loss, held-out accuracy).
+    // ---- gradual structure induction -------------------------------------
+
+    /// The nested mask chain of a gradual trainer (one mask per schedule
+    /// fraction, ending at the exact RBGP4 mask); `None` for fixed-mask
+    /// trainers.
+    pub fn gradual_chain(&self) -> Option<&[Vec<f32>]> {
+        self.gradual.as_ref().map(|g| g.chain.as_slice())
+    }
+
+    /// The sampled final RBGP4 mask a gradual run converges to.
+    pub fn gradual_final_mask(&self) -> Option<&Rbgp4Mask> {
+        self.gradual.as_ref().map(|g| &g.final_mask)
+    }
+
+    /// Milestones applied so far (`Some(0)` before the first tightening).
+    pub fn gradual_milestones_applied(&self) -> Option<usize> {
+        self.gradual.as_ref().map(|g| g.next)
+    }
+
+    /// Apply the next mask in the chain and re-key the plan cache:
+    /// 1. hash the *outgoing* structure,
+    /// 2. tighten the mask (weights and momenta off the new mask zeroed),
+    /// 3. evict the outgoing structure's plans ([`PlanCache::invalidate_structure`]),
+    /// 4. rebuild (warm) the incoming structure's plans, timed.
+    fn apply_next_milestone(&mut self, step: usize, loss: f32) -> anyhow::Result<MilestoneRecord> {
+        let old_hash = self.structure_hash();
+        let (milestone, mask) = {
+            let g = self
+                .gradual
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("trainer was not built with new_gradual"))?;
+            anyhow::ensure!(g.next < g.chain.len(), "gradual chain exhausted");
+            let m = g.next;
+            g.next += 1;
+            (m, g.chain[m].clone())
+        };
+        self.mlp.tighten_mask(mask);
+        // The outgoing structure is dead: its plans must not linger for the
+        // rest of a long run (zero stale-structure plans is asserted by the
+        // integration suite via the eviction counters).
+        let evicted_plans = self.cache.invalidate_structure(old_hash);
+        // Warm the incoming structure — the per-milestone cost a gradual
+        // run pays that a fixed-mask run does not; reported so the bench
+        // can compare it against steady-state execution.
+        let t0 = Instant::now();
+        self.serving_model(self.config.batch, self.threads)?.warm()?;
+        let plan_rebuild_s = t0.elapsed().as_secs_f64();
+        Ok(MilestoneRecord {
+            milestone,
+            step,
+            loss,
+            sparsity: self.mlp.mask_sparsity(),
+            structure_hash: self.structure_hash(),
+            evicted_plans,
+            plan_rebuild_s,
+        })
+    }
+
+    /// One gradual training step: an SGD step, then any schedule milestones
+    /// that came due at the completed-step fraction (each tightening the
+    /// mask and re-keying the plan cache). Returns the step loss and the
+    /// milestone records fired (usually zero or one).
+    pub fn step_gradual(&mut self, step_idx: usize) -> anyhow::Result<(f32, Vec<MilestoneRecord>)> {
+        anyhow::ensure!(
+            self.gradual.is_some(),
+            "trainer was not built with new_gradual"
+        );
+        let loss = self.step(step_idx);
+        let frac = (step_idx + 1) as f64 / self.config.steps.max(1) as f64;
+        let mut records = Vec::new();
+        loop {
+            let due = {
+                let g = self.gradual.as_ref().expect("checked above");
+                g.next < g.chain.len() && frac >= g.fractions[g.next]
+            };
+            if !due {
+                break;
+            }
+            records.push(self.apply_next_milestone(step_idx, loss)?);
+        }
+        Ok((loss, records))
+    }
+
+    /// Full gradual run: dense start, schedule-driven tightening with plan
+    /// re-keying at every milestone, final evaluation through the plan
+    /// path. The starting structure's plans are warmed up front so the
+    /// first milestone has real plans to evict and the serving path is
+    /// live from step 0.
+    pub fn run_gradual(&mut self) -> anyhow::Result<GradualReport> {
+        anyhow::ensure!(
+            self.gradual.is_some(),
+            "trainer was not built with new_gradual"
+        );
+        let steps = self.config.steps;
+        let t0 = Instant::now();
+        self.serving_model(self.config.batch, self.threads)?.warm()?;
+        let mut report = GradualReport::default();
+        let mut loss = f32::NAN;
+        for s in 0..steps {
+            let (step_loss, records) = self.step_gradual(s)?;
+            loss = step_loss;
+            for r in &records {
+                println!(
+                    "milestone {} @ step {:>5}: loss {:>8.4}  sparsity {:.4}  \
+                     structure {:016x}  evicted {}  rebuild {:.3} ms",
+                    r.milestone,
+                    r.step + 1,
+                    r.loss,
+                    r.sparsity,
+                    r.structure_hash,
+                    r.evicted_plans,
+                    r.plan_rebuild_s * 1e3
+                );
+            }
+            report.milestones.extend(records);
+            if steps >= 10 && (s + 1) % (steps / 10).max(1) == 0 {
+                println!(
+                    "step {:>5}  loss {:>8.4}  {:>6.1}s",
+                    s + 1,
+                    loss,
+                    t0.elapsed().as_secs_f64()
+                );
+            }
+        }
+        // Degenerate budgets (steps == 0) never reach frac 1.0; force the
+        // chain to its end so the final structure always holds.
+        while self.gradual.as_ref().expect("checked above").next
+            < self.gradual.as_ref().expect("checked above").chain.len()
+        {
+            let r = self.apply_next_milestone(steps.saturating_sub(1), loss)?;
+            report.milestones.push(r);
+        }
+        report.accuracy = self.evaluate(8)?;
+        report.final_loss = self.metrics.final_loss(10).unwrap_or(loss);
+        let (invalidations, evicted) = self.cache.eviction_stats();
+        println!(
+            "gradual done: {} steps in {:.1}s — final loss {:.4}, accuracy {:.2}%, \
+             {} milestones, {} re-keys, {} plans evicted, {} structures live",
+            steps,
+            t0.elapsed().as_secs_f64(),
+            report.final_loss,
+            report.accuracy * 100.0,
+            report.milestones.len(),
+            invalidations,
+            evicted,
+            self.cache.structures().len()
+        );
+        Ok(report)
+    }
+
+    /// Full training run; returns (final loss, held-out accuracy). A
+    /// trainer built with [`NativeTrainer::new_gradual`] runs the gradual
+    /// schedule ([`NativeTrainer::run_gradual`]) — a fixed-mask `run` on it
+    /// would silently never tighten.
     pub fn run(&mut self) -> anyhow::Result<(f32, f64)> {
+        if self.gradual.is_some() {
+            let report = self.run_gradual()?;
+            return Ok((report.final_loss, report.accuracy));
+        }
         let steps = self.config.steps;
         let t0 = std::time::Instant::now();
         let mut loss = f32::NAN;
@@ -505,6 +772,63 @@ mod tests {
         assert_eq!(misses, 2, "structure derived once across the pool");
         assert_eq!(hits, 2, "second worker warms from cache");
         server.shutdown();
+    }
+
+    #[test]
+    fn gradual_trainer_rekeys_cache_per_milestone() {
+        let schedule = GradualSchedule::from_fractions(vec![0.3, 0.6]).unwrap();
+        let mut t = NativeTrainer::new_gradual(64, 64, 4, 0.75, &schedule, quick_config(60))
+            .unwrap()
+            .with_threads(1);
+        let report = t.run_gradual().unwrap();
+        assert_eq!(report.milestones.len(), 2);
+        assert_eq!(t.gradual_milestones_applied(), Some(2));
+        for r in &report.milestones {
+            assert!(r.loss.is_finite(), "milestone {} loss", r.milestone);
+            assert!(r.evicted_plans >= 1, "each re-key evicts the old plans");
+        }
+        // Sparsity tightens monotonically toward the config target.
+        assert!(report.milestones[0].sparsity < report.milestones[1].sparsity);
+        let cfg_sp = t.gradual_final_mask().unwrap().config.sparsity();
+        assert!((report.milestones[1].sparsity - cfg_sp).abs() < 1e-9);
+        // Final mask is the exact RBGP4 mask.
+        assert_eq!(t.mlp.mask, t.gradual_final_mask().unwrap().dense());
+        // One invalidation per milestone; only the final w1 structure and
+        // the (stable) dense classifier structure remain cached.
+        let (invalidations, evicted) = t.cache().eviction_stats();
+        assert_eq!(invalidations, 2);
+        assert_eq!(
+            evicted,
+            report.milestones.iter().map(|r| r.evicted_plans).sum::<usize>()
+        );
+        let structures = t.cache().structures();
+        assert_eq!(structures.len(), 2, "final w1 + dense w2 only: {structures:?}");
+        assert!(structures.contains(&t.structure_hash()));
+        assert!(t.cache().structure_plan_count(t.structure_hash()) >= 1);
+    }
+
+    #[test]
+    fn fixed_mask_trainer_rejects_gradual_stepping() {
+        let mut t =
+            NativeTrainer::new(64, 64, 4, Pattern::Rbgp4, 0.75, quick_config(5)).unwrap();
+        assert!(t.step_gradual(0).is_err());
+        assert!(t.run_gradual().is_err());
+        assert!(t.gradual_chain().is_none());
+        assert!(t.gradual_final_mask().is_none());
+    }
+
+    #[test]
+    fn run_delegates_to_gradual_schedule() {
+        let schedule = GradualSchedule::from_fractions(vec![0.5]).unwrap();
+        let mut t = NativeTrainer::new_gradual(64, 64, 4, 0.75, &schedule, quick_config(20))
+            .unwrap()
+            .with_threads(1);
+        let (loss, acc) = t.run().unwrap();
+        assert!(loss.is_finite());
+        assert!(acc > 0.0);
+        // The schedule actually fired: the final structure is in place.
+        assert_eq!(t.mlp.mask, t.gradual_final_mask().unwrap().dense());
+        assert_eq!(t.cache().eviction_stats().0, 1);
     }
 
     #[test]

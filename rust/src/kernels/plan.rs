@@ -22,7 +22,7 @@ use crate::sparsity::bsr::BsrMatrix;
 use crate::sparsity::csr::CsrMatrix;
 use crate::sparsity::memory::Pattern;
 use crate::sparsity::rbgp4::Rbgp4Matrix;
-use crate::util::Fnv;
+use crate::util::{lock_recover, Fnv};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -235,11 +235,32 @@ impl PlanKey {
 /// Concurrent plan cache shared across the system: the server batcher, the
 /// native trainer, the bench harness and ad-hoc callers all pull plans from
 /// here instead of re-deriving structure per call.
+///
+/// The cache is *namespaced by structure hash*: every key carries the hash
+/// of the connectivity it was derived from, so a caller whose structure
+/// changes (the gradual trainer tightening its mask at a milestone, a
+/// serving pool retiring a checkpoint) can evict exactly the plans of the
+/// dead structure with [`PlanCache::invalidate_structure`] — or keep a
+/// live set with [`PlanCache::retain_structures`] — without touching plans
+/// other models still execute from. Eviction is accounted
+/// ([`PlanCache::eviction_stats`]) so a long gradual run can assert it
+/// leaks no plans for dead structures.
+///
+/// Every lock here is taken through the poison-recovering guard: a thread
+/// that panics while holding a plan (or mid-insert) degrades one entry
+/// instead of poisoning the whole cache for every other worker.
 #[derive(Default)]
 pub struct PlanCache {
     plans: Mutex<HashMap<PlanKey, Arc<Mutex<KernelPlan>>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    /// Calls to `invalidate_structure` (one per structure re-key).
+    invalidations: AtomicUsize,
+    /// Plans removed by invalidation/retention, total.
+    evicted_plans: AtomicUsize,
+    /// Bumped on every invalidation/retention — a cheap "the structure set
+    /// changed" signal for callers that cache derived state of their own.
+    generation: AtomicUsize,
 }
 
 impl PlanCache {
@@ -255,7 +276,7 @@ impl PlanCache {
         req: &PlanRequest,
     ) -> anyhow::Result<Arc<Mutex<KernelPlan>>> {
         let key = PlanKey::of(w, req);
-        if let Some(plan) = self.plans.lock().unwrap().get(&key) {
+        if let Some(plan) = lock_recover(&self.plans).get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(plan));
         }
@@ -272,7 +293,7 @@ impl PlanCache {
             },
         )?;
         let arc = Arc::new(Mutex::new(built));
-        let mut map = self.plans.lock().unwrap();
+        let mut map = lock_recover(&self.plans);
         match map.entry(key) {
             std::collections::hash_map::Entry::Occupied(e) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -306,8 +327,70 @@ impl PlanCache {
     ) -> anyhow::Result<()> {
         let kernel = registry.for_matrix(w)?;
         let plan = self.plan_for(registry, w, &PlanRequest { n, threads })?;
-        let mut plan = plan.lock().unwrap();
+        // Recover a poisoned plan lock: a peer that panicked mid-execute
+        // left scratch (not derived structure) torn; the next execute
+        // overwrites scratch entirely.
+        let mut plan = lock_recover(&plan);
         kernel.execute(w, &mut plan, input, output, n)
+    }
+
+    /// Evict every plan derived from `structure` (all shapes, batch
+    /// classes and thread counts), returning how many were removed. This
+    /// is the re-key primitive: when a mask tightens (gradual training) or
+    /// a served checkpoint is retired, its structure hash dies and its
+    /// plans must not linger for the lifetime of a long run.
+    ///
+    /// Callers must quiesce their own builders for the dead structure
+    /// first — a `plan_for` racing this call may re-insert a plan it
+    /// started building before the eviction (it stays correct, merely
+    /// resurrected; the next invalidation removes it).
+    pub fn invalidate_structure(&self, structure: u64) -> usize {
+        let removed = {
+            let mut map = lock_recover(&self.plans);
+            let before = map.len();
+            map.retain(|key, _| key.structure != structure);
+            before - map.len()
+        };
+        self.invalidations.fetch_add(1, Ordering::Relaxed);
+        self.evicted_plans.fetch_add(removed, Ordering::Relaxed);
+        self.generation.fetch_add(1, Ordering::Relaxed);
+        removed
+    }
+
+    /// Keep only plans whose structure hash appears in `keep`, evicting
+    /// everything else; returns how many were removed. The multi-model
+    /// serving shape: one pool serving several checkpoints retires all
+    /// dead namespaces in one sweep.
+    pub fn retain_structures(&self, keep: &[u64]) -> usize {
+        let removed = {
+            let mut map = lock_recover(&self.plans);
+            let before = map.len();
+            map.retain(|key, _| keep.contains(&key.structure));
+            before - map.len()
+        };
+        self.evicted_plans.fetch_add(removed, Ordering::Relaxed);
+        self.generation.fetch_add(1, Ordering::Relaxed);
+        removed
+    }
+
+    /// Distinct structure hashes currently cached (sorted, deduped).
+    pub fn structures(&self) -> Vec<u64> {
+        let mut s: Vec<u64> = lock_recover(&self.plans)
+            .keys()
+            .map(|k| k.structure)
+            .collect();
+        s.sort_unstable();
+        s.dedup();
+        s
+    }
+
+    /// Plans currently cached for one structure hash (over all shapes,
+    /// batch classes and thread counts).
+    pub fn structure_plan_count(&self, structure: u64) -> usize {
+        lock_recover(&self.plans)
+            .keys()
+            .filter(|k| k.structure == structure)
+            .count()
     }
 
     /// `(hits, misses)` since construction.
@@ -318,8 +401,23 @@ impl PlanCache {
         )
     }
 
+    /// `(invalidate_structure calls, plans evicted)` since construction —
+    /// the counters a gradual run checks to prove it re-keyed once per
+    /// milestone and retained nothing for dead structures.
+    pub fn eviction_stats(&self) -> (usize, usize) {
+        (
+            self.invalidations.load(Ordering::Relaxed),
+            self.evicted_plans.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Monotone counter bumped by every invalidation/retention sweep.
+    pub fn generation(&self) -> usize {
+        self.generation.load(Ordering::Relaxed)
+    }
+
     pub fn len(&self) -> usize {
-        self.plans.lock().unwrap().len()
+        lock_recover(&self.plans).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -423,5 +521,104 @@ mod tests {
             SparseMatrix::Csr(b).structure_hash(),
         );
         assert_ne!(ha, hb, "independent samples should differ");
+    }
+
+    fn two_structures(rng: &mut Rng) -> (SparseMatrix, SparseMatrix) {
+        (
+            SparseMatrix::Csr(crate::sparsity::csr::CsrMatrix::random_row_uniform(
+                16, 16, 0.5, rng,
+            )),
+            SparseMatrix::Csr(crate::sparsity::csr::CsrMatrix::random_row_uniform(
+                16, 16, 0.75, rng,
+            )),
+        )
+    }
+
+    #[test]
+    fn invalidate_structure_evicts_exactly_one_namespace() {
+        let registry = crate::kernels::registry::KernelRegistry::builtin();
+        let cache = PlanCache::new();
+        let mut rng = Rng::new(21);
+        let (a, b) = two_structures(&mut rng);
+        // Structure `a` at two batch classes + two thread counts, `b` at one.
+        for (n, threads) in [(4usize, 1usize), (16, 1), (4, 3)] {
+            cache.plan_for(&registry, &a, &PlanRequest { n, threads }).unwrap();
+        }
+        cache.plan_for(&registry, &b, &PlanRequest { n: 4, threads: 1 }).unwrap();
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.structures().len(), 2);
+        assert_eq!(cache.structure_plan_count(a.structure_hash()), 3);
+
+        let gen0 = cache.generation();
+        let removed = cache.invalidate_structure(a.structure_hash());
+        assert_eq!(removed, 3, "all of a's plans gone, b's untouched");
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.structures(), vec![b.structure_hash()]);
+        assert_eq!(cache.structure_plan_count(a.structure_hash()), 0);
+        assert_eq!(cache.eviction_stats(), (1, 3));
+        assert_eq!(cache.generation(), gen0 + 1);
+
+        // Invalidating a dead (or never-seen) structure is a counted no-op.
+        assert_eq!(cache.invalidate_structure(a.structure_hash()), 0);
+        assert_eq!(cache.eviction_stats(), (2, 3));
+
+        // Rebuilding after the re-key is a fresh miss, not a stale hit.
+        let (_, misses0) = cache.stats();
+        cache.plan_for(&registry, &a, &PlanRequest { n: 4, threads: 1 }).unwrap();
+        let (_, misses1) = cache.stats();
+        assert_eq!(misses1, misses0 + 1, "evicted structure rebuilds");
+    }
+
+    #[test]
+    fn retain_structures_sweeps_dead_namespaces() {
+        let registry = crate::kernels::registry::KernelRegistry::builtin();
+        let cache = PlanCache::new();
+        let mut rng = Rng::new(22);
+        let (a, b) = two_structures(&mut rng);
+        let c = SparseMatrix::dense(vec![1.0; 16 * 16], 16, 16);
+        for w in [&a, &b, &c] {
+            cache.plan_for(&registry, w, &PlanRequest { n: 8, threads: 2 }).unwrap();
+        }
+        assert_eq!(cache.len(), 3);
+        let keep = [b.structure_hash(), c.structure_hash()];
+        assert_eq!(cache.retain_structures(&keep), 1);
+        assert_eq!(cache.structure_plan_count(a.structure_hash()), 0);
+        assert_eq!(cache.structures().len(), 2);
+        let (invalidations, evicted) = cache.eviction_stats();
+        assert_eq!(invalidations, 0, "retain is not an invalidate call");
+        assert_eq!(evicted, 1);
+    }
+
+    #[test]
+    fn poisoned_plan_lock_does_not_poison_the_cache() {
+        let registry = crate::kernels::registry::KernelRegistry::builtin();
+        let cache = PlanCache::new();
+        let mut rng = Rng::new(23);
+        let w = SparseMatrix::Csr(crate::sparsity::csr::CsrMatrix::random_row_uniform(
+            16, 16, 0.5, &mut rng,
+        ));
+        let req = PlanRequest { n: 4, threads: 1 };
+        let shared = cache.plan_for(&registry, &w, &req).unwrap();
+        // A builder/executor dies while holding the plan lock.
+        let poisoner = Arc::clone(&shared);
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.lock().unwrap();
+            panic!("die mid-execute");
+        })
+        .join();
+        assert!(shared.lock().is_err(), "plan mutex must be poisoned");
+        // The cache keeps working through the recovering guard: the cached
+        // execute path re-locks the same poisoned plan …
+        let input = rng.normal_vec_f32(16 * 4, 1.0);
+        let mut out = vec![0.0f32; 16 * 4];
+        cache.execute(&registry, &w, &input, &mut out, 4, 1).unwrap();
+        let mut oracle = vec![0.0f32; 16 * 4];
+        crate::kernels::dense::gemm_naive(&w.to_dense(), &input, &mut oracle, 16, 16, 4);
+        assert_eq!(out, oracle, "execute from the recovered plan is correct");
+        // … and the namespace API still answers (map lock untouched by the
+        // dead executor, but every accessor goes through recovery anyway).
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.invalidate_structure(w.structure_hash()), 1);
+        assert!(cache.is_empty());
     }
 }

@@ -47,12 +47,15 @@ COMMANDS
   table3     [--measure-n 1024] [--seed 0]              Table 3 (model + measured)
   train      [--artifacts DIR] [--steps 300] [--lr 0.1] [--seed 0] [--distill]
              [--save ckpt.json] [--load ckpt.json]
+             [--gradual] [--milestones 0.25,0.6] [--sp 0.75]   (native only)
   serve      [--requests 512] [--clients 4] [--workers 2] [--queue-cap 1024]
              [--deadline-ms 0] [--artifacts DIR] [--checkpoint ckpt.json]
 
 With the `xla` feature, train/serve execute AOT artifacts on PJRT (run
 `make artifacts` first). Without it, they run the native plan-cached
-backends: `train` fits the masked MLP on the synthetic task, `serve`
+backends: `train` fits the masked MLP on the synthetic task (add
+--gradual to start dense and tighten toward the RBGP4 mask at the
+--milestones fractions, re-keying the plan cache at each), `serve`
 serves the RBGP4 demo model from the kernel plan cache.";
 
 fn main() {
@@ -238,6 +241,13 @@ fn explain_cmd(args: &Args) -> anyhow::Result<()> {
 
 #[cfg(feature = "xla")]
 fn train_cmd(args: &Args) -> anyhow::Result<()> {
+    for flag in ["gradual", "milestones"] {
+        anyhow::ensure!(
+            !args.flag(flag),
+            "--{flag} runs on the native trainer (the AOT artifact's mask is \
+             baked in at lowering time); rebuild without `--features xla`"
+        );
+    }
     let dir = artifacts_dir(args);
     let config = TrainConfig {
         steps: args.get_usize("steps", 300)?,
@@ -287,6 +297,38 @@ fn train_cmd(args: &Args) -> anyhow::Result<()> {
     let hidden = args.get_usize("hidden", 256)?;
     let classes = args.get_usize("classes", 16)?;
     let sp = args.get_f64("sp", 0.75)?;
+    if args.flag("gradual") {
+        let schedule = match args.get("milestones") {
+            Some(text) => rbgp::train_native::GradualSchedule::parse(text)?,
+            None => rbgp::train_native::GradualSchedule::default(),
+        };
+        println!(
+            "xla feature disabled — native gradual-induction trainer \
+             (MLP {in_dim}->{hidden}->{classes}, dense start → RBGP4 @ {:.1}% \
+             sparsity, milestones {:?})",
+            sp * 100.0,
+            schedule.fractions
+        );
+        let mut trainer =
+            NativeTrainer::new_gradual(in_dim, hidden, classes, sp, &schedule, config)?;
+        // run_gradual prints each milestone (loss/sparsity/structure
+        // hash/eviction/rebuild) as it fires; only the totals remain here.
+        let report = trainer.run_gradual()?;
+        let rebuild_ms: f64 = report.milestones.iter().map(|r| r.plan_rebuild_s * 1e3).sum();
+        println!("total plan-rebuild time across milestones: {rebuild_ms:.3} ms");
+        let (hits, misses) = trainer.cache().stats();
+        let (invalidations, evicted) = trainer.cache().eviction_stats();
+        println!(
+            "plan cache: {hits} hits, {misses} builds, {invalidations} re-keys, \
+             {evicted} plans evicted, {} structures live",
+            trainer.cache().structures().len()
+        );
+        return Ok(());
+    }
+    anyhow::ensure!(
+        args.get("milestones").is_none(),
+        "--milestones only applies with --gradual"
+    );
     println!(
         "xla feature disabled — native plan-cached trainer \
          (MLP {in_dim}->{hidden}->{classes}, RBGP4 mask @ {:.1}% sparsity)",

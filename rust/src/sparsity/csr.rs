@@ -46,6 +46,44 @@ impl CsrMatrix {
         }
     }
 
+    /// Build from a dense row-major matrix, taking the *pattern* from a 0/1
+    /// `mask` (same shape) and the values from `dense`. Unlike
+    /// [`CsrMatrix::from_dense`], an on-mask weight that happens to be
+    /// exactly `0.0` is stored explicitly, so the CSR pattern — and hence
+    /// the structure hash the plan cache keys on — is a function of the
+    /// mask alone, not of transient weight values. This is what keeps a
+    /// trainer's structure hash stable *within* a mask milestone and makes
+    /// it change exactly *at* one.
+    pub fn from_dense_with_pattern(
+        dense: &[f32],
+        mask: &[f32],
+        rows: usize,
+        cols: usize,
+    ) -> CsrMatrix {
+        assert_eq!(dense.len(), rows * cols);
+        assert_eq!(mask.len(), rows * cols);
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for r in 0..rows {
+            for c in 0..cols {
+                if mask[r * cols + c] != 0.0 {
+                    indices.push(c);
+                    values.push(dense[r * cols + c]);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
     /// Random unstructured mask with row uniformity: each row gets exactly
     /// `round((1-sp)*cols)` non-zeros at uniformly random distinct columns,
     /// with standard-normal values scaled like the RBGP init.
@@ -119,6 +157,35 @@ mod tests {
         assert_eq!(m.values, vec![1., 2., 3.]);
         assert_eq!(m.to_dense(), d);
         assert_eq!(m.nnz(), 3);
+    }
+
+    #[test]
+    fn from_dense_with_pattern_keeps_explicit_zeros() {
+        #[rustfmt::skip]
+        let dense = vec![
+            1., 0., 2.,
+            0., 0., 0.,
+            0., 3., 0.,
+        ];
+        #[rustfmt::skip]
+        let mask = vec![
+            1., 0., 1.,
+            1., 0., 0.,
+            0., 1., 0.,
+        ];
+        let m = CsrMatrix::from_dense_with_pattern(&dense, &mask, 3, 3);
+        // The zero weight at (1,0) is on the mask → stored explicitly.
+        assert_eq!(m.indptr, vec![0, 2, 3, 4]);
+        assert_eq!(m.indices, vec![0, 2, 0, 1]);
+        assert_eq!(m.values, vec![1., 2., 0., 3.]);
+        assert_eq!(m.to_dense(), dense, "explicit zeros scatter back to zero");
+        // Pattern is mask-determined: zeroing a masked-in value changes the
+        // values, never the indices (the structure hash's input).
+        let mut d2 = dense.clone();
+        d2[0] = 0.0;
+        let m2 = CsrMatrix::from_dense_with_pattern(&d2, &mask, 3, 3);
+        assert_eq!(m2.indptr, m.indptr);
+        assert_eq!(m2.indices, m.indices);
     }
 
     #[test]

@@ -32,6 +32,45 @@ impl Default for GradualSchedule {
     }
 }
 
+impl GradualSchedule {
+    /// A validated schedule: fractions strictly increasing, each in (0, 1).
+    pub fn from_fractions(fractions: Vec<f64>) -> anyhow::Result<GradualSchedule> {
+        anyhow::ensure!(
+            !fractions.is_empty(),
+            "gradual schedule needs at least one milestone fraction"
+        );
+        for &f in &fractions {
+            anyhow::ensure!(
+                f > 0.0 && f < 1.0,
+                "milestone fraction {f} out of (0, 1)"
+            );
+        }
+        anyhow::ensure!(
+            fractions.windows(2).all(|w| w[0] < w[1]),
+            "milestone fractions must be strictly increasing: {fractions:?}"
+        );
+        Ok(GradualSchedule { fractions })
+    }
+
+    /// Parse a CLI-style `"0.25,0.6"` list.
+    pub fn parse(text: &str) -> anyhow::Result<GradualSchedule> {
+        let fractions = text
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad milestone fraction '{s}'"))
+            })
+            .collect::<anyhow::Result<Vec<f64>>>()?;
+        GradualSchedule::from_fractions(fractions)
+    }
+
+    /// Number of mask-tightening milestones this schedule fires.
+    pub fn milestones(&self) -> usize {
+        self.fractions.len()
+    }
+}
+
 /// Build the nested mask chain for `config`: returns masks of increasing
 /// sparsity, ending at the exact RBGP4 mask; every mask is a superset of
 /// its successor.
@@ -46,6 +85,15 @@ pub fn nested_masks(
     rng: &mut Rng,
 ) -> anyhow::Result<Vec<Vec<f32>>> {
     let final_mask = Rbgp4Mask::sample(config, rng)?;
+    Ok(nested_masks_from(&final_mask, levels, rng))
+}
+
+/// [`nested_masks`] from an already-sampled final mask — the trainer's
+/// entry point: it keeps the [`Rbgp4Mask`] (for structure hashes and final
+/// exactness checks) and derives the chain from it, so the mask is sampled
+/// once per run.
+pub fn nested_masks_from(final_mask: &Rbgp4Mask, levels: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+    let config = final_mask.config;
     let (rows, cols) = (final_mask.rows(), final_mask.cols());
     let final_dense = final_mask.dense();
     let mut chain = Vec::with_capacity(levels + 1);
@@ -62,10 +110,22 @@ pub fn nested_masks(
             off
         })
         .collect();
-    for level in 0..levels {
-        // level 0 = densest intermediate.
+    // Per-level extra counts, enforced *strictly* decreasing toward the
+    // final mask wherever capacity allows (when `full_extra >= levels`
+    // every level is a strict superset of its successor; tighter shapes
+    // saturate at full density and may repeat the densest level).
+    let mut extras = vec![0usize; levels];
+    let mut prev = 0usize; // the final mask carries zero extras
+    for level in (0..levels).rev() {
         let frac = 1.0 - (level as f64 + 1.0) / (levels as f64 + 1.0);
-        let extra = ((full_extra as f64) * frac).round() as usize;
+        let mut e = ((full_extra as f64) * frac).round() as usize;
+        if e <= prev {
+            e = prev + 1;
+        }
+        extras[level] = e.min(full_extra);
+        prev = extras[level];
+    }
+    for &extra in &extras {
         let mut mask = final_dense.clone();
         for u in 0..rows {
             let row = &mut mask[u * cols..(u + 1) * cols];
@@ -76,7 +136,12 @@ pub fn nested_masks(
         chain.push(mask);
     }
     chain.push(final_dense);
-    Ok(chain)
+    chain
+}
+
+/// Non-zero count of a dense 0/1 mask.
+pub fn mask_nnz(mask: &[f32]) -> usize {
+    mask.iter().filter(|&&v| v != 0.0).count()
 }
 
 /// Verify the nesting invariant: every mask is a superset of the next.
@@ -164,6 +229,39 @@ mod tests {
         assert!(sp(&chain[0]) < sp(&chain[1]));
         assert!(sp(&chain[1]) < sp(&chain[2]));
         assert!((sp(&chain[2]) - cfg().sparsity()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedule_parse_and_validation() {
+        let s = GradualSchedule::parse("0.25, 0.6").unwrap();
+        assert_eq!(s.fractions, vec![0.25, 0.6]);
+        assert_eq!(s.milestones(), 2);
+        assert!(GradualSchedule::parse("").is_err());
+        assert!(GradualSchedule::parse("0.6,0.25").is_err(), "must increase");
+        assert!(GradualSchedule::parse("0.0,0.5").is_err(), "open interval");
+        assert!(GradualSchedule::parse("0.5,1.0").is_err(), "open interval");
+        assert!(GradualSchedule::parse("0.5,x").is_err());
+        assert!(GradualSchedule::from_fractions(vec![0.3]).is_ok());
+    }
+
+    #[test]
+    fn chain_is_strictly_nested_with_ample_capacity() {
+        // cols - row_nnz is large here, so every level must be a *strict*
+        // superset of its successor (strictly decreasing nnz).
+        let mut rng = Rng::new(43);
+        let final_mask = Rbgp4Mask::sample(cfg(), &mut rng).unwrap();
+        let chain = nested_masks_from(&final_mask, 3, &mut rng);
+        assert_eq!(chain.len(), 4);
+        assert!(is_nested(&chain));
+        for w in chain.windows(2) {
+            assert!(
+                mask_nnz(&w[0]) > mask_nnz(&w[1]),
+                "levels must strictly tighten: {} vs {}",
+                mask_nnz(&w[0]),
+                mask_nnz(&w[1])
+            );
+        }
+        assert_eq!(chain.last().unwrap(), &final_mask.dense());
     }
 
     #[test]

@@ -107,6 +107,25 @@ impl MaskedMlp {
         self.mask = new_mask;
     }
 
+    /// All parameters flattened in a fixed order (`w1, b1, w2, b2`) — the
+    /// bit-identity witness for determinism regression tests: two runs with
+    /// one seed must agree on every one of these f32s exactly.
+    pub fn flat_params(&self) -> Vec<f32> {
+        let mut p = Vec::with_capacity(
+            self.w1.len() + self.b1.len() + self.w2.len() + self.b2.len(),
+        );
+        p.extend_from_slice(&self.w1);
+        p.extend_from_slice(&self.b1);
+        p.extend_from_slice(&self.w2);
+        p.extend_from_slice(&self.b2);
+        p
+    }
+
+    /// Fractional sparsity of the current mask.
+    pub fn mask_sparsity(&self) -> f64 {
+        1.0 - self.mask.iter().filter(|&&m| m != 0.0).count() as f64 / self.mask.len() as f64
+    }
+
     /// Forward: returns (hidden (H×B), probs (C×B)). `x` is (D×B).
     fn forward(&self, x: &[f32], b: usize) -> (Vec<f32>, Vec<f32>) {
         let mut hid = vec![0.0f32; self.h * b];

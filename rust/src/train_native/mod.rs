@@ -12,6 +12,8 @@ pub mod gradual;
 pub mod masks;
 pub mod mlp;
 
-pub use gradual::{nested_masks, train_gradual, GradualSchedule};
+pub use gradual::{
+    is_nested, mask_nnz, nested_masks, nested_masks_from, train_gradual, GradualSchedule,
+};
 pub use masks::pattern_mask;
 pub use mlp::{MaskedMlp, NativeTrainConfig};

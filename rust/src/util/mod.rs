@@ -9,6 +9,14 @@ pub mod rng;
 pub mod threadpool;
 pub mod timing;
 
+/// Lock a mutex, recovering the guard when a previous holder panicked.
+/// For advisory shared state (metrics rings, plan caches): a torn value
+/// from a crashed thread is strictly better than propagating its panic
+/// into every other thread that later takes the lock.
+pub fn lock_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Human-friendly byte formatting (MB with 2 decimals, as the paper's
 /// Table 1 reports memory in MB).
 pub fn fmt_mb(bytes: u64) -> String {

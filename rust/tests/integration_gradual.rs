@@ -1,0 +1,246 @@
+//! Integration tests for gradual structure induction through
+//! `NativeTrainer`: the full mutable-structure lifecycle (nested mask
+//! chain → structure hash → plan generation → eviction), the determinism
+//! regression, and train→serve conformance for mid-schedule checkpoints.
+//!
+//! These run on the default (native) build — no artifacts, no `xla`.
+
+use rbgp::coordinator::{MilestoneRecord, NativeTrainer, ServerConfig};
+use rbgp::kernels::SparseMatrix;
+use rbgp::train_native::{is_nested, GradualSchedule, NativeTrainConfig};
+
+const IN_DIM: usize = 64;
+const HIDDEN: usize = 64;
+const CLASSES: usize = 4;
+const SPARSITY: f64 = 0.75;
+
+fn train_config(steps: usize, seed: u64) -> NativeTrainConfig {
+    NativeTrainConfig {
+        steps,
+        batch: 16,
+        lr: 0.05,
+        seed,
+        ..NativeTrainConfig::default()
+    }
+}
+
+/// Deterministic probe sample `i` (independent of the trainer's data RNG).
+fn sample(i: usize) -> Vec<f32> {
+    (0..IN_DIM)
+        .map(|j| (((i * 13 + j * 31) % 23) as f32 - 11.0) / 11.0)
+        .collect()
+}
+
+#[test]
+fn gradual_run_reaches_exact_final_structure_with_zero_stale_plans() {
+    let schedule = GradualSchedule::from_fractions(vec![0.3, 0.6]).unwrap();
+    let mut t = NativeTrainer::new_gradual(
+        IN_DIM,
+        HIDDEN,
+        CLASSES,
+        SPARSITY,
+        &schedule,
+        train_config(80, 7),
+    )
+    .unwrap()
+    .with_threads(1);
+    let initial_hash = t.structure_hash();
+
+    let report = t.run_gradual().unwrap();
+
+    // The mask chain is nested (every mask a superset of its successor)
+    // and one milestone fired per schedule fraction, each with finite loss.
+    let chain = t.gradual_chain().unwrap();
+    assert_eq!(chain.len(), schedule.milestones());
+    assert!(is_nested(chain), "mask chain must be nested");
+    assert_eq!(report.milestones.len(), schedule.milestones());
+    for r in &report.milestones {
+        assert!(r.loss.is_finite(), "milestone {} loss not finite", r.milestone);
+        assert!(r.plan_rebuild_s >= 0.0);
+    }
+    assert!(
+        report.milestones[0].sparsity < report.milestones[1].sparsity,
+        "sparsity must tighten across milestones"
+    );
+
+    // The final mask is an *exact* RBGP4 mask: equal to the sampled target,
+    // biregular (every row carries exactly row_nnz non-zeros), at the
+    // config's block sparsity.
+    let final_mask = t.gradual_final_mask().unwrap().clone();
+    let cfg = final_mask.config;
+    assert_eq!(t.mlp.mask, final_mask.dense(), "final mask is the RBGP4 target");
+    for u in 0..HIDDEN {
+        let nnz = t.mlp.mask[u * IN_DIM..(u + 1) * IN_DIM]
+            .iter()
+            .filter(|&&v| v != 0.0)
+            .count();
+        assert_eq!(nnz, cfg.row_nnz(), "row {u} must be biregular");
+    }
+    assert!(
+        (t.mlp.mask_sparsity() - cfg.sparsity()).abs() < 1e-9,
+        "final sparsity {} != config {}",
+        t.mlp.mask_sparsity(),
+        cfg.sparsity()
+    );
+
+    // Cache end state: plans exist only for the final hidden-layer
+    // structure plus the (shape-stable) dense classifier — nothing from
+    // dead milestones survives.
+    let w2_hash =
+        SparseMatrix::dense(vec![0.0; CLASSES * HIDDEN], CLASSES, HIDDEN).structure_hash();
+    let mut expected = vec![t.structure_hash(), w2_hash];
+    expected.sort_unstable();
+    assert_eq!(t.cache().structures(), expected, "only live structures cached");
+
+    // Eviction counters match the milestone count exactly: one re-key per
+    // milestone, each evicting the outgoing structure's plans.
+    let (invalidations, evicted) = t.cache().eviction_stats();
+    assert_eq!(invalidations, report.milestones.len(), "one re-key per milestone");
+    assert_eq!(
+        evicted,
+        report.milestones.iter().map(|r| r.evicted_plans).sum::<usize>(),
+        "eviction counter equals the per-milestone sum"
+    );
+    assert!(
+        report.milestones.iter().all(|r| r.evicted_plans >= 1),
+        "every re-key had warmed plans to evict"
+    );
+
+    // Every dead structure hash is distinct and retains zero plans.
+    let m0 = report.milestones[0].structure_hash;
+    let m1 = report.milestones[1].structure_hash;
+    assert_ne!(initial_hash, m0, "hash must change at milestone 0");
+    assert_ne!(m0, m1, "hash must change at milestone 1");
+    assert_eq!(t.cache().structure_plan_count(initial_hash), 0, "stale start plans");
+    assert_eq!(t.cache().structure_plan_count(m0), 0, "stale milestone-0 plans");
+    assert!(t.cache().structure_plan_count(m1) >= 1, "final structure stays warm");
+}
+
+#[test]
+fn mid_schedule_checkpoint_serves_the_current_structure() {
+    let schedule = GradualSchedule::from_fractions(vec![0.4, 0.8]).unwrap();
+    let mut t = NativeTrainer::new_gradual(
+        IN_DIM,
+        HIDDEN,
+        CLASSES,
+        SPARSITY,
+        &schedule,
+        train_config(50, 3),
+    )
+    .unwrap()
+    .with_threads(1);
+
+    // Train until the first milestone fires, then stop mid-schedule.
+    let mut fired: Option<MilestoneRecord> = None;
+    for s in 0..t.config.steps {
+        let (_, records) = t.step_gradual(s).unwrap();
+        if let Some(r) = records.into_iter().next() {
+            fired = Some(r);
+            break;
+        }
+    }
+    let record = fired.expect("first milestone fires mid-run");
+    assert_eq!(t.gradual_milestones_applied(), Some(1), "paused mid-schedule");
+    assert_eq!(
+        t.structure_hash(),
+        record.structure_hash,
+        "checkpoint is at the milestone's structure"
+    );
+
+    // Trainer-side logits through the evaluate/serving path (single shot).
+    let batch = t.config.batch;
+    let xs: Vec<Vec<f32>> = (0..batch).map(sample).collect();
+    let xb: Vec<f32> = xs.iter().flatten().copied().collect();
+    let mut model = t.serving_model(batch, 1).unwrap();
+    let want = model.forward(&xb).unwrap();
+
+    // Serving the checkpoint through the worker pool resolves the *current*
+    // structure's plans from the trainer's cache — zero new builds.
+    let (hits_before, misses_before) = t.cache().stats();
+    let server = t
+        .serve(
+            batch,
+            1,
+            ServerConfig {
+                workers: 2,
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+    let (hits_after, misses_after) = t.cache().stats();
+    assert_eq!(
+        misses_after, misses_before,
+        "mid-schedule serving must not rebuild structure"
+    );
+    assert_eq!(
+        hits_after,
+        hits_before + 4,
+        "both workers warm both layer plans from cache"
+    );
+
+    // Train→serve conformance: pool logits equal the single-shot forward
+    // bit-for-bit (same plans, same kernels, columns are independent).
+    for (i, x) in xs.iter().enumerate() {
+        let got = server.infer(x.clone()).unwrap();
+        assert_eq!(
+            got.as_slice(),
+            &want[i * CLASSES..(i + 1) * CLASSES],
+            "sample {i}: served logits must equal trainer-side logits"
+        );
+    }
+    server.shutdown();
+}
+
+#[allow(clippy::type_complexity)]
+fn gradual_run_once(seed: u64) -> (Vec<u32>, rbgp::coordinator::GradualReport, u64, Vec<f32>) {
+    let schedule = GradualSchedule::from_fractions(vec![0.25, 0.5, 0.75]).unwrap();
+    let mut t = NativeTrainer::new_gradual(
+        IN_DIM,
+        HIDDEN,
+        CLASSES,
+        SPARSITY,
+        &schedule,
+        train_config(60, seed),
+    )
+    .unwrap()
+    .with_threads(2);
+    let report = t.run_gradual().unwrap();
+    let bits = t.mlp.flat_params().iter().map(|v| v.to_bits()).collect();
+    let hash = t.structure_hash();
+    // Logits of a fixed probe batch through the serving path.
+    let batch = t.config.batch;
+    let xb: Vec<f32> = (0..batch).flat_map(sample).collect();
+    let logits = t.serving_model(batch, 2).unwrap().forward(&xb).unwrap();
+    (bits, report, hash, logits)
+}
+
+#[test]
+fn gradual_runs_are_deterministic_and_conformant() {
+    let (bits_a, report_a, hash_a, logits_a) = gradual_run_once(42);
+    let (bits_b, report_b, hash_b, logits_b) = gradual_run_once(42);
+
+    // Bit-identical final weights and identical milestone traces.
+    assert_eq!(bits_a, bits_b, "final weights must be bit-identical");
+    assert_eq!(hash_a, hash_b, "final structure hash must agree");
+    assert_eq!(report_a.milestones.len(), report_b.milestones.len());
+    for (a, b) in report_a.milestones.iter().zip(&report_b.milestones) {
+        assert_eq!(a.milestone, b.milestone);
+        assert_eq!(a.step, b.step, "milestones must fire at the same steps");
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss trace must match");
+        assert_eq!(a.sparsity.to_bits(), b.sparsity.to_bits());
+        assert_eq!(a.structure_hash, b.structure_hash);
+        assert_eq!(a.evicted_plans, b.evicted_plans);
+    }
+    assert_eq!(report_a.final_loss.to_bits(), report_b.final_loss.to_bits());
+    assert_eq!(report_a.accuracy.to_bits(), report_b.accuracy.to_bits());
+    // Serving logits are part of the contract too.
+    assert_eq!(
+        logits_a.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+        logits_b.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+        "serving logits must be bit-identical across runs"
+    );
+
+    // The witness is meaningful: a different seed changes the weights.
+    let (bits_c, _, _, _) = gradual_run_once(43);
+    assert_ne!(bits_a, bits_c, "different seeds must differ");
+}

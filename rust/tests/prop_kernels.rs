@@ -15,6 +15,7 @@ use rbgp::sparsity::bsr::BsrMatrix;
 use rbgp::sparsity::csr::CsrMatrix;
 use rbgp::sparsity::pattern;
 use rbgp::sparsity::rbgp4::{GraphSpec, Rbgp4Config, Rbgp4Mask, Rbgp4Matrix};
+use rbgp::train_native::{is_nested, mask_nnz, nested_masks_from};
 use rbgp::util::prop::{check, gen};
 use rbgp::util::rng::Rng;
 use rbgp::{prop_assert, prop_assert_eq};
@@ -259,6 +260,155 @@ fn prop_succinct_index_always_smaller() {
             "succinct {} > generic {}",
             mask.succinct_index_elems(),
             mask.generic_index_elems()
+        );
+        Ok(())
+    });
+}
+
+/// Gradual-induction chain invariants over randomized RBGP4 configs and
+/// seeds: nested by construction, monotone nnz, strict supersets whenever
+/// the shape has the capacity for distinct levels, exact final mask.
+#[test]
+fn prop_gradual_chain_nested_with_monotone_nnz() {
+    check("gradual chain nesting", 15, |rng| {
+        let cfg = random_config(rng);
+        let mask = Rbgp4Mask::sample(cfg, rng).map_err(|e| e.to_string())?;
+        let levels = 1 + rng.below_usize(3);
+        let chain = nested_masks_from(&mask, levels, rng);
+        prop_assert_eq!(chain.len(), levels + 1, "chain length");
+        prop_assert!(is_nested(&chain), "chain must be nested");
+        for (i, w) in chain.windows(2).enumerate() {
+            prop_assert!(
+                mask_nnz(&w[0]) >= mask_nnz(&w[1]),
+                "nnz must be monotone at level {i}"
+            );
+        }
+        // With enough off-mask capacity, every intermediate is a *strict*
+        // superset of its successor (see nested_masks_from's extra
+        // enforcement; the bound covers rounding plus bump slack).
+        let full_extra = cfg.cols() - cfg.row_nnz();
+        if full_extra >= (levels + 1) * (levels + 1) {
+            for (i, w) in chain.windows(2).enumerate() {
+                prop_assert!(
+                    mask_nnz(&w[0]) > mask_nnz(&w[1]),
+                    "level {i} must strictly tighten ({} vs {})",
+                    mask_nnz(&w[0]),
+                    mask_nnz(&w[1])
+                );
+            }
+        }
+        prop_assert_eq!(
+            chain.last().unwrap(),
+            &mask.dense(),
+            "chain must end at the exact RBGP4 mask"
+        );
+        Ok(())
+    });
+}
+
+/// The re-key contract of the structure hash: for each milestone mask,
+/// the exported-CSR structure hash is (a) stable within the milestone —
+/// recomputation and weight-value changes don't move it — and (b) changed
+/// across every milestone that actually tightened the mask.
+#[test]
+fn prop_milestone_structure_hashes_rekey_exactly() {
+    check("structure hash per milestone", 15, |rng| {
+        let cfg = random_config(rng);
+        let mask = Rbgp4Mask::sample(cfg, rng).map_err(|e| e.to_string())?;
+        let levels = 1 + rng.below_usize(3);
+        let chain = nested_masks_from(&mask, levels, rng);
+        let (rows, cols) = (cfg.rows(), cfg.cols());
+        let hash_of = |values: &[f32], m: &[f32]| {
+            SparseMatrix::Csr(CsrMatrix::from_dense_with_pattern(values, m, rows, cols))
+                .structure_hash()
+        };
+        let hashes: Vec<u64> = chain.iter().map(|m| hash_of(m, m)).collect();
+        // (a) stable within one milestone: recomputation agrees, and the
+        // hash is a function of the mask alone, not the weight values.
+        for (i, m) in chain.iter().enumerate() {
+            prop_assert_eq!(hashes[i], hash_of(m, m), "hash must be stable (level {i})");
+            let values = rng.normal_vec_f32(rows * cols, 1.0);
+            prop_assert_eq!(
+                hashes[i],
+                hash_of(&values, m),
+                "hash must ignore weight values (level {i})"
+            );
+        }
+        // (b) changes across every milestone whose mask actually changed
+        // (saturated shapes may repeat the densest level).
+        for (i, w) in chain.windows(2).enumerate() {
+            if w[0] != w[1] {
+                prop_assert!(
+                    hashes[i] != hashes[i + 1],
+                    "hash must change at milestone {i}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// PlanCache hit/miss/eviction accounting stays exact across a structure
+/// re-key with 8 threads racing on the resolve path: one build per
+/// (structure, thread-class), eviction removes exactly the dead
+/// structure's plans, and the next structure rebuilds fresh.
+#[test]
+fn prop_plan_cache_rekey_accounting_is_exact_under_races() {
+    let registry = KernelRegistry::builtin();
+    check("PlanCache re-key accounting", 6, |rng| {
+        let m = 4 * gen::range(rng, 2, 8);
+        let k = 4 * gen::range(rng, 2, 8);
+        let a = SparseMatrix::Csr(CsrMatrix::random_row_uniform(m, k, 0.5, rng));
+        let b = SparseMatrix::Csr(CsrMatrix::random_row_uniform(m, k, 0.75, rng));
+        let n = gen::range(rng, 1, 16);
+        let cache = PlanCache::new();
+        let n_threads = 8;
+        let rounds = 4;
+        // 8 threads race on one structure; odd/even threads use different
+        // thread-class keys, so each phase caches exactly two plans.
+        let hammer = |w: &SparseMatrix| {
+            std::thread::scope(|scope| {
+                for t in 0..n_threads {
+                    let cache = &cache;
+                    let registry = &registry;
+                    scope.spawn(move || {
+                        for _ in 0..rounds {
+                            let req = PlanRequest {
+                                n,
+                                threads: 1 + (t % 2),
+                            };
+                            cache.plan_for(registry, w, &req).unwrap();
+                        }
+                    });
+                }
+            });
+        };
+
+        hammer(&a);
+        let calls = n_threads * rounds;
+        let (hits, misses) = cache.stats();
+        prop_assert_eq!(misses, 2, "one build per (structure, thread class)");
+        prop_assert_eq!(hits, calls - 2, "every other racing resolve hits");
+        prop_assert_eq!(
+            cache.structure_plan_count(a.structure_hash()),
+            2,
+            "phase-1 plans live under a's namespace"
+        );
+
+        // Re-key: structure `a` dies.
+        let evicted = cache.invalidate_structure(a.structure_hash());
+        prop_assert_eq!(evicted, 2, "exactly the dead structure's plans evicted");
+        prop_assert_eq!(cache.eviction_stats(), (1, 2), "eviction accounting exact");
+        prop_assert!(cache.is_empty(), "nothing else was cached");
+
+        hammer(&b);
+        let (hits, misses) = cache.stats();
+        prop_assert_eq!(misses, 4, "the new structure rebuilds fresh, no stale hits");
+        prop_assert_eq!(hits, 2 * (calls - 2), "hit accounting continues exactly");
+        prop_assert_eq!(
+            cache.structures(),
+            vec![b.structure_hash()],
+            "only the live structure remains"
         );
         Ok(())
     });
