@@ -1,0 +1,209 @@
+//! Multi-model serving throughput vs co-resident model count at fixed
+//! offered load — the registry trajectory for the multi-tenant
+//! `InferenceServer`.
+//!
+//! For each model count (1 / 2 / 4) the harness starts one worker pool,
+//! registers that many RBGP4 demo models (distinct seeds → distinct
+//! hidden-layer structures; the dense classifier structure is shared by
+//! all), drives a fixed closed-loop load round-robining across the
+//! models, and reports wall time, throughput, latency percentiles and —
+//! the paper's amortization claim at the serving layer — plan-cache
+//! builds, which must equal the number of **distinct structures**
+//! (`models + 1`), not models × workers × layers.
+//!
+//! Results are written to `BENCH_registry.json` (in the cargo package
+//! root, where `cargo bench` runs) so future multi-tenant PRs — cache
+//! sharding, per-model admission control, NUMA-aware placement — can diff
+//! against this trajectory the same way serving PRs diff against
+//! `BENCH_server.json`.
+//!
+//! `cargo bench --bench registry_bench` (RBGP_BENCH_FAST=1 quick pass)
+
+use rbgp::coordinator::{
+    BatchModel, InferenceServer, NativeSparseModel, ServerConfig, SubmitOptions,
+};
+use rbgp::data::CifarLike;
+use rbgp::kernels::PlanCache;
+use rbgp::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const OUT_PATH: &str = "BENCH_registry.json";
+const CLIENTS: usize = 8;
+const WORKERS: usize = 2;
+const BATCH: usize = 16;
+const CLASSES: usize = 16;
+
+struct Row {
+    models: usize,
+    requests: usize,
+    batches: usize,
+    wall_s: f64,
+    throughput_rps: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    occupancy: f64,
+    cache_builds: usize,
+    cache_hits: usize,
+    structures: usize,
+}
+
+impl Row {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("models", self.models)
+            .set("workers", WORKERS)
+            .set("clients", CLIENTS)
+            .set("batch", BATCH)
+            .set("requests", self.requests)
+            .set("batches", self.batches)
+            .set("wall_s", self.wall_s)
+            .set("throughput_rps", self.throughput_rps)
+            .set("p50_ms", self.p50_ms)
+            .set("p95_ms", self.p95_ms)
+            .set("p99_ms", self.p99_ms)
+            .set("occupancy", self.occupancy)
+            .set("cache_builds", self.cache_builds)
+            .set("cache_hits", self.cache_hits)
+            .set("structures", self.structures);
+        j
+    }
+
+    fn print(&self) {
+        println!(
+            "models={:<2} {:>6} reqs in {:>5} batches  {:>8.1} req/s   \
+             p50 {:>7.3} ms  p95 {:>7.3} ms  p99 {:>7.3} ms   occ {:>5.1}%   \
+             {} builds for {} structures ({} hits)",
+            self.models,
+            self.requests,
+            self.batches,
+            self.throughput_rps,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.occupancy * 100.0,
+            self.cache_builds,
+            self.structures,
+            self.cache_hits,
+        );
+    }
+}
+
+fn demo_factory(
+    seed: u64,
+    cache: Arc<PlanCache>,
+) -> impl Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static {
+    move || {
+        let mut m = NativeSparseModel::rbgp4_demo(CLASSES, BATCH, 1, seed, Arc::clone(&cache))?;
+        m.warm()?;
+        Ok(Box::new(m) as Box<dyn BatchModel>)
+    }
+}
+
+fn run_load(models: usize, total: usize) -> Row {
+    // One shared cache for the whole pool *and* every model: each model's
+    // hidden structure is derived once, the dense classifier once ever.
+    let cache = Arc::new(PlanCache::new());
+    let server = InferenceServer::start_model_as(
+        "m0",
+        demo_factory(0, Arc::clone(&cache)),
+        ServerConfig {
+            workers: WORKERS,
+            queue_cap: 4 * total.max(1),
+            max_wait: Duration::from_millis(2),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("server start");
+    for k in 1..models {
+        server
+            .register_model(&format!("m{k}"), demo_factory(k as u64, Arc::clone(&cache)))
+            .expect("register model");
+    }
+    let ids: Vec<String> = (0..models).map(|k| format!("m{k}")).collect();
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let server = server.clone();
+            let ids = &ids;
+            scope.spawn(move || {
+                let mut data = CifarLike::new(server.in_dim, server.classes, 100 + c as u64);
+                for r in 0..total / CLIENTS {
+                    let b = data.test_batch(1);
+                    let id = &ids[(c + r) % ids.len()];
+                    let logits = server
+                        .infer_with(b.x, SubmitOptions::default().with_model(id.clone()))
+                        .expect("infer");
+                    assert_eq!(logits.len(), server.classes);
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let (requests, batches) = server.counters();
+    let stats = server.latency_stats().expect("latency samples");
+    let (cache_hits, cache_builds) = cache.stats();
+    let structures = cache.structures().len();
+    // The registry acceptance invariant, asserted on every bench run: one
+    // hidden structure per model plus the shared dense classifier.
+    assert_eq!(
+        structures,
+        models + 1,
+        "distinct structures: one hidden layer per model + shared classifier"
+    );
+    assert_eq!(
+        cache_builds, structures,
+        "plan builds must equal structures, not models × workers"
+    );
+    server.shutdown();
+    Row {
+        models,
+        requests,
+        batches,
+        wall_s,
+        throughput_rps: requests as f64 / wall_s.max(1e-9),
+        p50_ms: stats.p50 * 1e3,
+        p95_ms: stats.p95 * 1e3,
+        p99_ms: stats.p99 * 1e3,
+        occupancy: stats.occupancy,
+        cache_builds,
+        cache_hits,
+        structures,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("RBGP_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let total = if fast { 256 } else { 4096 };
+    println!(
+        "registry bench — RBGP4 demo models, batch {BATCH}, {WORKERS} workers, \
+         {CLIENTS} closed-loop clients, {total} requests per model count\n"
+    );
+
+    let mut rows = Vec::new();
+    for models in [1usize, 2, 4] {
+        let row = run_load(models, total);
+        row.print();
+        rows.push(row);
+    }
+
+    let mut doc = Json::obj();
+    let mut meta = Json::obj();
+    meta.set("batch", BATCH)
+        .set("classes", CLASSES)
+        .set("workers", WORKERS)
+        .set("clients", CLIENTS)
+        .set("requests_per_point", total)
+        .set("fast_mode", fast);
+    doc.set("bench", "registry_bench").set("config", meta).set(
+        "rows",
+        Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
+    );
+    match std::fs::write(OUT_PATH, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {OUT_PATH} ({} rows)", rows.len()),
+        Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),
+    }
+}

@@ -13,14 +13,11 @@
 //!   the metrics instead of poisoning them and panicking every client
 //!   that later asks for stats.
 
+use crate::util::lock_recover;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
-
-// The poison-recovering lock guard now lives in `util` so the plan cache
-// (a lower layer) can share it; re-exported here for the serving modules
-// that adopted it in the metrics refactor.
-pub(crate) use crate::util::lock_recover;
 
 /// Single-owner metrics store used by the trainers.
 #[derive(Clone, Debug, Default)]
@@ -189,13 +186,59 @@ impl LatencyRing {
     }
 }
 
+/// Running tallies for one served model (registry id). Plain counters
+/// behind the store's model-map mutex: they are bumped once per *flush*
+/// (and per rejection), not per request, so the map lock is off the
+/// per-request hot path.
+#[derive(Clone, Debug, Default)]
+struct ModelTally {
+    requests: usize,
+    batches: usize,
+    occupied_slots: usize,
+    batch_slots: usize,
+    rejected_deadline: usize,
+    errors: usize,
+}
+
+/// Snapshot of one model's serving counters (multi-model registry view —
+/// the per-*model* axis next to [`WorkerStats`]' per-*worker* axis).
+#[derive(Clone, Debug)]
+pub struct ModelStats {
+    pub model: String,
+    /// Requests answered successfully for this model.
+    pub requests: usize,
+    /// Batches flushed for this model (never mixing models).
+    pub batches: usize,
+    /// Real samples across those batches.
+    pub occupied_slots: usize,
+    /// Total slots across those batches (occupied + padding).
+    pub batch_slots: usize,
+    /// Requests for this model rejected because their deadline expired.
+    pub rejected_deadline: usize,
+    /// Batch executions for this model that failed.
+    pub errors: usize,
+}
+
+impl ModelStats {
+    /// Mean fraction of this model's batch slots holding real samples.
+    pub fn occupancy(&self) -> f64 {
+        if self.batch_slots == 0 {
+            1.0
+        } else {
+            self.occupied_slots as f64 / self.batch_slots as f64
+        }
+    }
+}
+
 /// Shared metrics store for the multi-worker inference server: per-worker
-/// atomic counters, queue gauges, rejection counters, and one bounded
-/// latency ring *per worker* (so the request hot path never contends on a
-/// pool-wide lock), each locked through the recovering guard.
+/// atomic counters, per-model tallies, queue gauges, rejection counters,
+/// and one bounded latency ring *per worker* (so the request hot path
+/// never contends on a pool-wide lock), each locked through the
+/// recovering guard.
 pub struct ServingMetrics {
     workers: Vec<WorkerCounters>,
     latencies: Vec<Mutex<LatencyRing>>,
+    models: Mutex<HashMap<String, ModelTally>>,
     rejected_full: AtomicUsize,
     rejected_deadline: AtomicUsize,
     peak_queue_depth: AtomicUsize,
@@ -207,6 +250,7 @@ impl ServingMetrics {
         ServingMetrics {
             workers: (0..workers).map(|_| WorkerCounters::default()).collect(),
             latencies: (0..workers).map(|_| Mutex::new(LatencyRing::default())).collect(),
+            models: Mutex::new(HashMap::new()),
             rejected_full: AtomicUsize::new(0),
             rejected_deadline: AtomicUsize::new(0),
             peak_queue_depth: AtomicUsize::new(0),
@@ -243,6 +287,31 @@ impl ServingMetrics {
 
     pub(crate) fn record_rejected_deadline(&self) {
         self.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One executed batch attributed to `model`: `occupied` answered
+    /// requests in `slots` total slots.
+    pub(crate) fn record_model_flush(&self, model: &str, occupied: usize, slots: usize) {
+        let mut map = lock_recover(&self.models);
+        let t = map.entry(model.to_string()).or_default();
+        t.requests += occupied.min(slots);
+        t.batches += 1;
+        t.occupied_slots += occupied.min(slots);
+        t.batch_slots += slots;
+    }
+
+    pub(crate) fn record_model_rejected_deadline(&self, model: &str) {
+        lock_recover(&self.models)
+            .entry(model.to_string())
+            .or_default()
+            .rejected_deadline += 1;
+    }
+
+    pub(crate) fn record_model_error(&self, model: &str) {
+        lock_recover(&self.models)
+            .entry(model.to_string())
+            .or_default()
+            .errors += 1;
     }
 
     /// Track the deepest queue observed at submit time.
@@ -297,6 +366,26 @@ impl ServingMetrics {
             samples.extend_from_slice(&lock_recover(ring).samples);
         }
         LatencyStats::from_samples(&samples).map(|s| s.with_occupancy(self.occupancy()))
+    }
+
+    /// Per-model counter snapshots, sorted by model id. Counters survive
+    /// `unregister_model` (a retired model's history stays reportable).
+    pub fn model_stats(&self) -> Vec<ModelStats> {
+        let map = lock_recover(&self.models);
+        let mut stats: Vec<ModelStats> = map
+            .iter()
+            .map(|(model, t)| ModelStats {
+                model: model.clone(),
+                requests: t.requests,
+                batches: t.batches,
+                occupied_slots: t.occupied_slots,
+                batch_slots: t.batch_slots,
+                rejected_deadline: t.rejected_deadline,
+                errors: t.errors,
+            })
+            .collect();
+        stats.sort_by(|a, b| a.model.cmp(&b.model));
+        stats
     }
 
     /// Per-worker counter snapshots, worker order.
@@ -396,6 +485,26 @@ mod tests {
         let s = m.latency_stats().unwrap();
         assert_eq!(s.count, 11);
         assert!((s.occupancy - 11.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn model_stats_track_per_model_axis() {
+        let m = ServingMetrics::new(2);
+        m.record_model_flush("a", 3, 8);
+        m.record_model_flush("a", 8, 8);
+        m.record_model_flush("b", 2, 4);
+        m.record_model_rejected_deadline("b");
+        m.record_model_error("a");
+        let stats = m.model_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].model, "a");
+        assert_eq!(stats[0].requests, 11);
+        assert_eq!(stats[0].batches, 2);
+        assert!((stats[0].occupancy() - 11.0 / 16.0).abs() < 1e-12);
+        assert_eq!(stats[0].errors, 1);
+        assert_eq!(stats[1].model, "b");
+        assert_eq!(stats[1].rejected_deadline, 1);
+        assert!((stats[1].occupancy() - 0.5).abs() < 1e-12);
     }
 
     #[test]

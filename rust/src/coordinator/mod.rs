@@ -14,11 +14,11 @@ pub mod serving;
 pub mod trainer;
 
 pub use config::TrainConfig;
-pub use metrics::{LatencyStats, Metrics, ServingMetrics, WorkerStats};
+pub use metrics::{LatencyStats, Metrics, ModelStats, ServingMetrics, WorkerStats};
 pub use serving::{
     BatchModel, InferenceServer, NativeSparseModel, Priority, ServeError, ServerConfig,
-    SubmitOptions,
+    SubmitOptions, UnregisterReport, DEFAULT_MODEL,
 };
-pub use trainer::{GradualReport, MilestoneRecord, NativeTrainer};
+pub use trainer::{GradualReport, MilestoneRecord, NativeCheckpoint, NativeTrainer};
 #[cfg(feature = "xla")]
 pub use trainer::Trainer;

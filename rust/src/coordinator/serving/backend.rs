@@ -20,11 +20,30 @@ use std::sync::{Arc, Mutex};
 /// What the batcher needs from a model: fixed batch geometry plus a
 /// full-batch forward. `x` is `(batch × in_dim)` row-major; the result is
 /// `(batch × classes)` row-major.
+///
+/// The two namespace accessors tie a model to the plan-cache lifecycle:
+/// a plan-cached backend reports which structure hashes its plans live
+/// under and which shared [`PlanCache`] they live in, so the serving
+/// registry can evict exactly a retired model's namespaces (and nothing a
+/// surviving model still claims) on `unregister_model`. Backends without
+/// cached plans keep the defaults.
 pub trait BatchModel: Send {
     fn batch(&self) -> usize;
     fn in_dim(&self) -> usize;
     fn classes(&self) -> usize;
     fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>>;
+
+    /// Structure-hash namespaces this model's plans occupy in
+    /// [`BatchModel::plan_cache`] (deduplicated; empty when not
+    /// plan-cached).
+    fn structures(&self) -> Vec<u64> {
+        Vec::new()
+    }
+
+    /// The shared plan cache this model resolves plans from, if any.
+    fn plan_cache(&self) -> Option<Arc<PlanCache>> {
+        None
+    }
 }
 
 /// The native serving backend: a two-layer sparse MLP
@@ -179,6 +198,17 @@ impl BatchModel for NativeSparseModel {
         self.w2.rows()
     }
 
+    fn structures(&self) -> Vec<u64> {
+        let mut s = vec![self.w1.structure_hash(), self.w2.structure_hash()];
+        s.sort_unstable();
+        s.dedup();
+        s
+    }
+
+    fn plan_cache(&self) -> Option<Arc<PlanCache>> {
+        Some(Arc::clone(&self.cache))
+    }
+
     fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
         let (b, d) = (self.batch, self.w1.cols());
         let (h, c) = (self.w1.rows(), self.w2.rows());
@@ -325,5 +355,21 @@ mod tests {
         let (hits, misses) = cache.stats();
         assert_eq!(misses, 2, "same structure → no new plan builds");
         assert_eq!(hits, 2, "second model resolves both plans from cache");
+    }
+
+    #[test]
+    fn native_model_reports_its_plan_namespaces() {
+        let cache = Arc::new(PlanCache::new());
+        let mut m = demo(5, Arc::clone(&cache));
+        m.warm().unwrap();
+        let structures = m.structures();
+        assert_eq!(structures.len(), 2, "w1 + w2 namespaces: {structures:?}");
+        // Every reported namespace is live in the reported cache — the
+        // invariant the serving registry's unregister eviction relies on.
+        let reported = m.plan_cache().expect("native backend is plan-cached");
+        assert!(Arc::ptr_eq(&reported, &cache));
+        for s in structures {
+            assert!(cache.structure_plan_count(s) >= 1, "structure {s:016x}");
+        }
     }
 }

@@ -1,48 +1,65 @@
-//! Multi-worker batched inference serving: the L3 request path.
+//! Multi-worker, **multi-model** batched inference serving: the L3
+//! request path.
 //!
 //! ```text
-//!  clients ──submit──▶ RequestQueue (bounded, priority+deadline)
-//!                          │ pop (priority order, expired rejected)
+//!  clients ──submit(model?, priority, deadline)──▶ RequestQueue (bounded)
+//!                          │ pop (priority + age promotion, per-model stragglers)
 //!          ┌───────────────┼───────────────┐
-//!      worker 0         worker 1   …   worker N-1     (one BatchModel each)
-//!          └───────┬───────┴───────┬───────┘
+//!      worker 0         worker 1   …   worker N-1
+//!   {model A, model B}  {model A, model B}        (one instance of every
+//!          │                │                      registered model each)
+//!          └───────┬────────┴───────┬──────┘
+//!            ModelRegistry (id → factory/spec/namespaces)
 //!            Arc<PlanCache> (structure derived once, executed everywhere)
 //! ```
 //!
 //! [`InferenceServer::start_model`] spawns N worker threads from one model
-//! *factory*; each worker owns its own [`BatchModel`] instance (weights,
-//! scratch and detached plan copies are per-worker, so flushes run truly
-//! in parallel with no shared lock on the hot path), while all
-//! [`NativeSparseModel`]s built from one shared
+//! *factory*; [`InferenceServer::register_model`] adds further models to
+//! the same pool at runtime. Each worker owns its own instance of every
+//! registered model (weights, scratch and detached plan copies are
+//! per-worker, so flushes run truly in parallel with no shared lock on the
+//! hot path), while all plan-cached models built from one shared
 //! [`PlanCache`](crate::kernels::plan::PlanCache) resolve the *same*
-//! cached derivation — the structure work the paper amortizes happens once
-//! per structure, not once per worker.
+//! cached derivations — cache builds scale with distinct *structures*, not
+//! models × workers. [`InferenceServer::unregister_model`] drains a
+//! model's in-flight requests, drops its worker instances, and evicts
+//! exactly the plan namespaces no surviving model claims ([`registry`]).
 //!
 //! Requests flow through a **bounded priority queue** ([`queue`]):
 //! * a full queue rejects the submit with [`ServeError::QueueFull`]
 //!   (backpressure at the caller, not unbounded memory growth);
 //! * [`Priority::High`] pops before [`Priority::Normal`] before
-//!   [`Priority::Low`], FIFO within a class;
+//!   [`Priority::Low`], FIFO within a class — but an entry older than
+//!   [`ServerConfig::max_starvation`] is promoted one class per period,
+//!   so Low traffic is delayed, never starved;
 //! * an expired deadline gets [`ServeError::DeadlineExceeded`] at pop time
-//!   and never occupies a batch slot ([`worker`]).
+//!   *and again at flush time* (the straggler window can outlive a short
+//!   deadline) and is never executed ([`worker`]);
+//! * an unregistered model id is rejected synchronously with
+//!   [`ServeError::UnknownModel`].
 //!
-//! Each worker *dynamically batches*: it drains up to the model's batch
-//! size, waiting at most `max_wait` for stragglers, pads the final partial
-//! batch, executes once, and scatters per-sample logits back through
-//! per-request channels. Metrics ([`ServingMetrics`]) are per-worker
-//! atomics plus real batch-occupancy accounting, and keep working even if
+//! Each worker *dynamically batches per model*: the first popped request
+//! picks the model, stragglers are drained for that model only (a flush
+//! never mixes models), the final partial batch is padded, executed once,
+//! and per-sample logits scatter back through per-request channels.
+//! Metrics ([`ServingMetrics`]) are per-worker atomics plus per-model
+//! tallies and real batch-occupancy accounting, and keep working even if
 //! a worker dies mid-record. [`InferenceServer::shutdown`] closes the
 //! queue, lets workers drain every queued request, and joins them.
 
 pub mod backend;
 pub mod queue;
+pub mod registry;
 mod worker;
 
 pub use backend::{BatchModel, NativeSparseModel};
 pub use queue::{Priority, SubmitOptions};
+pub use registry::{UnregisterReport, DEFAULT_MODEL};
 
-use crate::coordinator::metrics::{lock_recover, LatencyStats, ServingMetrics, WorkerStats};
+use crate::coordinator::metrics::{LatencyStats, ModelStats, ServingMetrics, WorkerStats};
+use crate::util::lock_recover;
 use queue::{QueuedRequest, RequestQueue};
+use registry::{ModelFactory, ModelInfo, ModelRegistry, ModelSpec};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -56,8 +73,11 @@ pub enum ServeError {
     QueueFull { cap: usize },
     /// The request's deadline expired before a worker could serve it.
     DeadlineExceeded { waited: Duration },
-    /// The sample width does not match the model's input dimension.
+    /// The sample width does not match the target model's input dimension.
     WrongInputWidth { got: usize, want: usize },
+    /// The submit named a model id that is not registered (or was
+    /// unregistered).
+    UnknownModel { model: String },
     /// The server has been shut down (or every worker exited).
     Stopped,
     /// The backend failed executing the batch this request rode in.
@@ -75,6 +95,9 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::WrongInputWidth { got, want } => {
                 write!(f, "sample has {got} features, model wants {want}")
+            }
+            ServeError::UnknownModel { model } => {
+                write!(f, "model '{model}' is not registered with this server")
             }
             ServeError::Stopped => write!(f, "server stopped"),
             ServeError::Backend(msg) => write!(f, "{msg}"),
@@ -100,6 +123,12 @@ pub struct ServerConfig {
     /// Deadline applied to requests that don't carry their own
     /// ([`SubmitOptions::deadline`] wins); `None` waits indefinitely.
     pub default_deadline: Option<Duration>,
+    /// Age-promotion period for queued requests: an entry waiting longer
+    /// than this is promoted one priority class per elapsed period
+    /// (Low → Normal → High), bounding starvation under sustained
+    /// higher-class load. `None` restores strict priority (Low can starve
+    /// forever).
+    pub max_starvation: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -110,6 +139,7 @@ impl Default for ServerConfig {
             workers: 1,
             queue_cap: 1024,
             default_deadline: None,
+            max_starvation: Some(Duration::from_secs(1)),
         }
     }
 }
@@ -117,6 +147,7 @@ impl Default for ServerConfig {
 struct ServerInner {
     queue: Arc<RequestQueue>,
     metrics: Arc<ServingMetrics>,
+    registry: Arc<ModelRegistry>,
     workers: usize,
     default_deadline: Option<Duration>,
     handles: Mutex<Vec<thread::JoinHandle<()>>>,
@@ -151,11 +182,12 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Start `config.workers` worker threads around any [`BatchModel`].
-    /// The factory runs once *on each* worker thread (some backends — PJRT
-    /// — own handles that are not `Send`); every instance's result (or
-    /// error) is reported back before this constructor returns, and all
-    /// instances must agree on batch geometry.
+    /// Start `config.workers` worker threads around any [`BatchModel`],
+    /// registered under [`DEFAULT_MODEL`]. The factory runs once *on each*
+    /// worker thread (some backends — PJRT — own handles that are not
+    /// `Send`); every instance's result (or error) is reported back before
+    /// this constructor returns, and all instances must agree on batch
+    /// geometry.
     ///
     /// To share one [`PlanCache`](crate::kernels::plan::PlanCache) across
     /// the pool, capture the `Arc` in the factory and clone it into each
@@ -164,37 +196,61 @@ impl InferenceServer {
     where
         F: Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static,
     {
+        InferenceServer::start_model_as(DEFAULT_MODEL, factory, config)
+    }
+
+    /// [`InferenceServer::start_model`] with an explicit id for the
+    /// initial (default) model — requests without a
+    /// [`SubmitOptions::model`] route to it. Further models join the same
+    /// pool through [`InferenceServer::register_model`].
+    pub fn start_model_as<F>(
+        default_id: &str,
+        factory: F,
+        config: ServerConfig,
+    ) -> anyhow::Result<InferenceServer>
+    where
+        F: Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static,
+    {
         let workers = config.workers.max(1);
-        let queue = Arc::new(RequestQueue::new(config.queue_cap.max(1)));
+        let queue = Arc::new(RequestQueue::new(
+            config.queue_cap.max(1),
+            config.max_starvation,
+        ));
         let metrics = Arc::new(ServingMetrics::new(workers));
-        let factory = Arc::new(factory);
+        let registry = Arc::new(ModelRegistry::new(default_id));
+        // The default model's info (geometry, plan namespaces) is reported
+        // by the first worker instance below — before this constructor
+        // returns, so no submit can observe the entry without it.
+        let default_entry = registry.register(default_id, Arc::new(factory), None)?;
         // Liveness counter for the whole pool: each worker's context
         // decrements it on exit (including panic unwind); the last one out
         // closes the queue and fails pending requests with `Stopped`.
         let live = Arc::new(std::sync::atomic::AtomicUsize::new(workers));
-        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<(usize, usize, usize)>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<worker::ReadyReport>>();
         let mut handles = Vec::with_capacity(workers);
         for id in 0..workers {
-            let factory = Arc::clone(&factory);
             let ready_tx = ready_tx.clone();
             let ctx = worker::WorkerContext {
                 id,
                 queue: Arc::clone(&queue),
                 metrics: Arc::clone(&metrics),
+                registry: Arc::clone(&registry),
                 max_wait: config.max_wait,
                 live: Arc::clone(&live),
             };
             let spawned = thread::Builder::new()
                 .name(format!("rbgp-serve-{id}"))
-                .spawn(move || match factory() {
-                    Ok(mut model) => {
-                        let dims = (model.batch(), model.in_dim(), model.classes());
-                        let _ = ready_tx.send(Ok(dims));
-                        drop(ready_tx);
-                        worker::worker_loop(model.as_mut(), ctx);
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
+                .spawn(move || {
+                    let mut set = worker::ModelSet::default();
+                    match set.build_initial(&ctx.registry) {
+                        Ok(report) => {
+                            let _ = ready_tx.send(Ok(report));
+                            drop(ready_tx);
+                            worker::worker_loop(&mut set, ctx);
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                        }
                     }
                 });
             match spawned {
@@ -216,17 +272,31 @@ impl InferenceServer {
         let mut startup_err: Option<anyhow::Error> = None;
         for _ in 0..workers {
             match ready_rx.recv() {
-                Ok(Ok(d)) => match dims {
-                    None => dims = Some(d),
-                    Some(prev) if prev != d => {
-                        startup_err.get_or_insert_with(|| {
-                            anyhow::anyhow!(
-                                "workers disagree on model geometry: {prev:?} vs {d:?}"
-                            )
-                        });
+                Ok(Ok(report)) => {
+                    let d = (report.batch, report.in_dim, report.classes);
+                    match dims {
+                        None => {
+                            dims = Some(d);
+                            default_entry.set_info(ModelInfo {
+                                spec: ModelSpec {
+                                    batch: report.batch,
+                                    in_dim: report.in_dim,
+                                    classes: report.classes,
+                                },
+                                structures: report.structures,
+                                cache: report.cache,
+                            });
+                        }
+                        Some(prev) if prev != d => {
+                            startup_err.get_or_insert_with(|| {
+                                anyhow::anyhow!(
+                                    "workers disagree on model geometry: {prev:?} vs {d:?}"
+                                )
+                            });
+                        }
+                        Some(_) => {}
                     }
-                    Some(_) => {}
-                },
+                }
                 Ok(Err(e)) => {
                     startup_err.get_or_insert(e);
                 }
@@ -249,6 +319,7 @@ impl InferenceServer {
             inner: Arc::new(ServerInner {
                 queue,
                 metrics,
+                registry,
                 workers,
                 default_deadline: config.default_deadline,
                 handles: Mutex::new(handles),
@@ -257,6 +328,72 @@ impl InferenceServer {
             classes,
             batch,
         })
+    }
+
+    /// Register another model with the running pool under `id`. The
+    /// factory is probed once on the calling thread — validating it,
+    /// capturing geometry and plan namespaces, and (for factories that
+    /// warm) pre-building the structure's plans in the shared cache so
+    /// each worker's own build resolves as a cache hit. Workers
+    /// materialize their instances lazily at the next request; a
+    /// worker-side build failure degrades that worker's answers for this
+    /// model to [`ServeError::Backend`] instead of killing the pool.
+    pub fn register_model<F>(&self, id: &str, factory: F) -> anyhow::Result<()>
+    where
+        F: Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(
+            !self.inner.queue.is_closed(),
+            "cannot register '{id}': server is stopped"
+        );
+        // Reject a taken id before probing: the probe warms plans into the
+        // shared cache, and plans built for a registration that then fails
+        // would belong to no entry — unevictable until process exit. (A
+        // concurrent same-id race can still reach the probe; the atomic
+        // check in `register` below stays authoritative.)
+        anyhow::ensure!(
+            !self.inner.registry.is_registered(id),
+            "model '{id}' is already registered"
+        );
+        let factory: ModelFactory = Arc::new(factory);
+        let probe = factory()?;
+        let info = ModelInfo {
+            spec: ModelSpec {
+                batch: probe.batch(),
+                in_dim: probe.in_dim(),
+                classes: probe.classes(),
+            },
+            structures: probe.structures(),
+            cache: probe.plan_cache(),
+        };
+        drop(probe);
+        self.inner.registry.register(id, factory, Some(info))?;
+        Ok(())
+    }
+
+    /// Retire a model: stop accepting submits for `id` (they get
+    /// [`ServeError::UnknownModel`]), **drain** every in-flight request
+    /// for it (each is answered), drop the per-worker instances, and evict
+    /// exactly the plan-cache namespaces no surviving model still claims —
+    /// closing the structure lifecycle the gradual trainer opened. The
+    /// report carries exact eviction counters.
+    pub fn unregister_model(&self, id: &str) -> anyhow::Result<UnregisterReport> {
+        let entry = self.inner.registry.begin_retire(id)?;
+        let drained_requests = entry.in_flight();
+        entry.wait_drained();
+        let mut report = self.inner.registry.finish_retire(&entry);
+        report.drained_requests = drained_requests;
+        Ok(report)
+    }
+
+    /// Ids of the currently registered models, sorted.
+    pub fn models(&self) -> Vec<String> {
+        self.inner.registry.models()
+    }
+
+    /// Per-model serving counters (includes retired models' history).
+    pub fn model_stats(&self) -> Vec<ModelStats> {
+        self.inner.metrics.model_stats()
     }
 
     /// Start serving a compiled AOT artifact on the PJRT client (feature
@@ -287,19 +424,21 @@ impl InferenceServer {
         self.submit_with(x, SubmitOptions::default())
     }
 
-    /// Submit one sample with explicit priority / deadline. Backpressure
-    /// ([`ServeError::QueueFull`]) and shutdown ([`ServeError::Stopped`])
-    /// are reported synchronously; deadline expiry arrives on the receiver.
+    /// Submit one sample with explicit priority / deadline / target model.
+    /// Backpressure ([`ServeError::QueueFull`]), shutdown
+    /// ([`ServeError::Stopped`]), an unknown model id
+    /// ([`ServeError::UnknownModel`]) and a width mismatch against the
+    /// *target model's* input dimension are reported synchronously;
+    /// deadline expiry arrives on the receiver.
     pub fn submit_with(
         &self,
         x: Vec<f32>,
         opts: SubmitOptions,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>, ServeError>>, ServeError> {
-        if x.len() != self.in_dim {
-            return Err(ServeError::WrongInputWidth {
-                got: x.len(),
-                want: self.in_dim,
-            });
+        let claim = self.inner.registry.resolve(opts.model.as_deref())?;
+        let want = claim.spec().in_dim;
+        if x.len() != want {
+            return Err(ServeError::WrongInputWidth { got: x.len(), want });
         }
         let now = Instant::now();
         let deadline = opts
@@ -313,6 +452,7 @@ impl InferenceServer {
                 enqueued: now,
                 deadline,
                 respond: rtx,
+                claim,
             },
             opts.priority,
         );
@@ -478,6 +618,76 @@ mod tests {
     }
 
     #[test]
+    fn register_route_and_unregister_second_model() {
+        let cache = Arc::new(PlanCache::new());
+        let server = demo_server(
+            1,
+            &cache,
+            ServerConfig {
+                workers: 2,
+                max_wait: Duration::from_millis(1),
+                ..ServerConfig::default()
+            },
+        );
+        assert_eq!(server.models(), vec![DEFAULT_MODEL.to_string()]);
+        let model_cache = Arc::clone(&cache);
+        server
+            .register_model("second", move || {
+                let mut m = demo(2, Arc::clone(&model_cache));
+                m.warm()?;
+                Ok(Box::new(m) as Box<dyn BatchModel>)
+            })
+            .unwrap();
+        assert_eq!(
+            server.models(),
+            vec![DEFAULT_MODEL.to_string(), "second".to_string()]
+        );
+        // Duplicate ids are rejected.
+        assert!(server
+            .register_model("second", || anyhow::bail!("never built"))
+            .is_err());
+
+        // Traffic routes by id; both models answer.
+        let x = vec![0.25f32; 256];
+        for _ in 0..4 {
+            assert_eq!(server.infer(x.clone()).unwrap().len(), 10);
+            let got = server
+                .infer_with(x.clone(), SubmitOptions::default().with_model("second"))
+                .unwrap();
+            assert_eq!(got.len(), 10);
+        }
+        let stats = server.model_stats();
+        assert_eq!(stats.len(), 2);
+        assert!(stats.iter().all(|m| m.requests == 4), "{stats:?}");
+
+        // An unknown id is rejected synchronously.
+        match server.infer_with(x.clone(), SubmitOptions::default().with_model("ghost")) {
+            Err(ServeError::UnknownModel { model }) => assert_eq!(model, "ghost"),
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+
+        // Unregister: two demo seeds share the dense-classifier structure
+        // but own distinct RBGP4 hidden structures — exactly the retired
+        // hidden namespace is evicted.
+        let structures_before = cache.structures().len();
+        let report = server.unregister_model("second").unwrap();
+        assert_eq!(report.model, "second");
+        assert_eq!(report.evicted_structures.len(), 1, "{report:?}");
+        assert_eq!(report.retained_structures.len(), 1, "{report:?}");
+        assert!(report.evicted_plans >= 1);
+        assert_eq!(cache.structures().len(), structures_before - 1);
+        assert_eq!(cache.structure_plan_count(report.evicted_structures[0]), 0);
+        match server.infer_with(x.clone(), SubmitOptions::default().with_model("second")) {
+            Err(ServeError::UnknownModel { .. }) => {}
+            other => panic!("expected UnknownModel after unregister, got {other:?}"),
+        }
+        // The default model is untouched.
+        assert_eq!(server.infer(x).unwrap().len(), 10);
+        assert!(server.unregister_model("second").is_err(), "already gone");
+        server.shutdown();
+    }
+
+    #[test]
     fn zero_deadline_gets_typed_error_and_skips_forward() {
         let cache = Arc::new(PlanCache::new());
         let server = demo_server(
@@ -493,7 +703,7 @@ mod tests {
         let opts = SubmitOptions::default().with_deadline(Duration::ZERO);
         let mut receivers = Vec::new();
         for _ in 0..3 {
-            receivers.push(server.submit_with(x.clone(), opts).unwrap());
+            receivers.push(server.submit_with(x.clone(), opts.clone()).unwrap());
         }
         for rx in receivers {
             match rx.recv().unwrap() {
@@ -555,6 +765,9 @@ mod tests {
                 workers: 1,
                 queue_cap: cap,
                 max_wait: Duration::from_millis(1),
+                // These tests assert *strict* class order; age promotion
+                // would reorder under a slow scheduler.
+                max_starvation: None,
                 ..ServerConfig::default()
             },
         )

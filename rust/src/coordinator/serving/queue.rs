@@ -4,27 +4,37 @@
 //!   capacity; an over-capacity submit is rejected with
 //!   [`ServeError::QueueFull`] so overload surfaces as backpressure at the
 //!   caller instead of unbounded memory growth and latency collapse.
-//! * **Priority** — entries pop in `(priority, arrival)` order: all
-//!   [`Priority::High`] before [`Priority::Normal`] before
-//!   [`Priority::Low`], FIFO within a class (a sequence number breaks ties
-//!   so equal-priority requests cannot starve each other).
+//! * **Priority with bounded starvation** — entries live in one FIFO
+//!   deque per class and pop in `(effective rank, arrival)` order. The
+//!   *effective* rank is the class rank minus one per full
+//!   `max_starvation` of queue wait: a [`Priority::Low`] entry competes as
+//!   `Normal` after one period and as `High` — where FIFO arrival order
+//!   then favors it over younger High traffic — after two, so sustained
+//!   higher-class load delays Low work by a bounded amount instead of
+//!   starving it forever. `max_starvation: None` restores strict priority.
+//! * **Multi-model aware** — every request carries a
+//!   [`ModelClaim`](super::registry::ModelClaim); workers use
+//!   [`RequestQueue::pop_model_until`] to collect stragglers *of one
+//!   model only*, so a flush never mixes models while other models'
+//!   requests keep their queue positions.
 //! * **Deadlines** — a request may carry an absolute expiry [`Instant`].
-//!   The queue stores it; *workers* check it at pop time (see
-//!   `worker::next_live`), so an expired request is answered with a typed
-//!   error and never occupies a batch slot.
+//!   The queue stores it; *workers* check it at pop time and again
+//!   immediately before flushing (see `worker`), so an expired request is
+//!   answered with a typed error and never executed.
 //!
 //! Closing the queue ([`RequestQueue::close`]) rejects new pushes with
 //! [`ServeError::Stopped`] but keeps handing out already-queued entries —
 //! that is what lets shutdown drain in-flight requests before joining.
 
+use super::registry::ModelClaim;
 use super::ServeError;
-use crate::coordinator::metrics::lock_recover;
-use std::cmp::Ordering as CmpOrdering;
-use std::collections::BinaryHeap;
+use crate::util::lock_recover;
+use std::collections::VecDeque;
 use std::sync::{mpsc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-/// Scheduling class of a request; classes pop strictly in this order.
+/// Scheduling class of a request; classes pop in this order, subject to
+/// age promotion (see the module docs).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Priority {
     /// Served before everything else (health probes, latency-critical).
@@ -32,12 +42,13 @@ pub enum Priority {
     /// The default class.
     #[default]
     Normal,
-    /// Served only when no higher class is waiting (batch/offline traffic).
+    /// Served only when no higher class is waiting (batch/offline traffic),
+    /// but never starved: see `max_starvation`.
     Low,
 }
 
 impl Priority {
-    fn rank(self) -> u8 {
+    fn rank(self) -> usize {
         match self {
             Priority::High => 0,
             Priority::Normal => 1,
@@ -46,15 +57,21 @@ impl Priority {
     }
 }
 
+const CLASSES: usize = 3;
+
 /// Per-request submit options (see `InferenceServer::submit_with`).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct SubmitOptions {
     pub priority: Priority,
     /// Time budget from submit; once exceeded the request is rejected with
     /// [`ServeError::DeadlineExceeded`] instead of being executed. `None`
     /// falls back to the server's `default_deadline` (which may be `None`:
     /// wait forever).
-    pub deadline: Option<std::time::Duration>,
+    pub deadline: Option<Duration>,
+    /// Registered model to route to; `None` targets the server's default
+    /// model. An id that is not registered is rejected synchronously with
+    /// [`ServeError::UnknownModel`].
+    pub model: Option<String>,
 }
 
 impl SubmitOptions {
@@ -63,53 +80,48 @@ impl SubmitOptions {
         self
     }
 
-    pub fn with_deadline(mut self, deadline: std::time::Duration) -> SubmitOptions {
+    pub fn with_deadline(mut self, deadline: Duration) -> SubmitOptions {
         self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_model(mut self, model: impl Into<String>) -> SubmitOptions {
+        self.model = Some(model.into());
         self
     }
 }
 
-/// One queued sample plus its response channel.
+/// One queued sample plus its response channel and model routing claim.
 pub(crate) struct QueuedRequest {
     pub x: Vec<f32>,
     pub enqueued: Instant,
     /// Absolute expiry; `None` waits indefinitely.
     pub deadline: Option<Instant>,
     pub respond: mpsc::Sender<Result<Vec<f32>, ServeError>>,
+    /// Which model serves this request. Holding the claim keeps that
+    /// model's in-flight count exact until the request is answered or
+    /// discarded (RAII), which is what lets `unregister_model` drain.
+    pub claim: ModelClaim,
 }
 
 struct Entry {
-    rank: u8,
     seq: u64,
     req: QueuedRequest,
 }
 
-impl PartialEq for Entry {
-    fn eq(&self, other: &Entry) -> bool {
-        self.rank == other.rank && self.seq == other.seq
-    }
-}
-
-impl Eq for Entry {}
-
-impl PartialOrd for Entry {
-    fn partial_cmp(&self, other: &Entry) -> Option<CmpOrdering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Entry {
-    // BinaryHeap is a max-heap; invert so the smallest `(rank, seq)` —
-    // most urgent class, earliest arrival — pops first.
-    fn cmp(&self, other: &Entry) -> CmpOrdering {
-        (other.rank, other.seq).cmp(&(self.rank, self.seq))
-    }
-}
-
 struct QueueState {
-    heap: BinaryHeap<Entry>,
+    /// One FIFO per class, indexed by `Priority::rank` — FIFO within a
+    /// class is arrival order, and the front of each deque is both its
+    /// oldest (most promoted) and lowest-seq entry.
+    classes: [VecDeque<Entry>; CLASSES],
     next_seq: u64,
     closed: bool,
+}
+
+impl QueueState {
+    fn len(&self) -> usize {
+        self.classes.iter().map(VecDeque::len).sum()
+    }
 }
 
 /// Bounded, closable priority queue shared by every client handle and every
@@ -119,18 +131,21 @@ pub(crate) struct RequestQueue {
     state: Mutex<QueueState>,
     available: Condvar,
     cap: usize,
+    /// Age-promotion period; `None` disables promotion (strict priority).
+    max_starvation: Option<Duration>,
 }
 
 impl RequestQueue {
-    pub fn new(cap: usize) -> RequestQueue {
+    pub fn new(cap: usize, max_starvation: Option<Duration>) -> RequestQueue {
         RequestQueue {
             state: Mutex::new(QueueState {
-                heap: BinaryHeap::new(),
+                classes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
                 next_seq: 0,
                 closed: false,
             }),
             available: Condvar::new(),
             cap: cap.max(1),
+            max_starvation: max_starvation.filter(|s| !s.is_zero()),
         }
     }
 
@@ -139,7 +154,7 @@ impl RequestQueue {
     }
 
     pub fn len(&self) -> usize {
-        lock_recover(&self.state).heap.len()
+        lock_recover(&self.state).len()
     }
 
     pub fn is_closed(&self) -> bool {
@@ -155,61 +170,112 @@ impl RequestQueue {
             if s.closed {
                 return Err(ServeError::Stopped);
             }
-            if s.heap.len() >= self.cap {
+            if s.len() >= self.cap {
                 return Err(ServeError::QueueFull { cap: self.cap });
             }
             let seq = s.next_seq;
             s.next_seq += 1;
-            s.heap.push(Entry {
-                rank: priority.rank(),
-                seq,
-                req,
-            });
-            s.heap.len()
+            s.classes[priority.rank()].push_back(Entry { seq, req });
+            s.len()
         };
-        self.available.notify_one();
+        // Wake every waiter: some may be model-filtered straggler waits
+        // that this push does not satisfy, and the one it does satisfy
+        // must not sleep through it.
+        self.available.notify_all();
         Ok(depth)
+    }
+
+    /// Class rank after age promotion: one class per full `max_starvation`
+    /// waited, saturating at High.
+    fn effective_rank(&self, class: usize, now: Instant, enqueued: Instant) -> usize {
+        match self.max_starvation {
+            Some(period) => {
+                let waited = now.saturating_duration_since(enqueued);
+                class.saturating_sub((waited.as_nanos() / period.as_nanos()) as usize)
+            }
+            None => class,
+        }
+    }
+
+    /// Remove and return the most urgent entry — smallest
+    /// `(effective rank, seq)` — optionally restricted to one model. With
+    /// a filter, the candidate per class is its earliest *matching* entry,
+    /// so other models' requests keep their positions untouched.
+    fn take_next(&self, s: &mut QueueState, model: Option<&str>) -> Option<QueuedRequest> {
+        let now = Instant::now();
+        let mut best: Option<(usize, u64, usize, usize)> = None; // (eff, seq, class, idx)
+        for class in 0..CLASSES {
+            let candidate = match model {
+                None => s.classes[class].front().map(|e| (0, e)),
+                Some(m) => s.classes[class]
+                    .iter()
+                    .enumerate()
+                    .find(|(_, e)| e.req.claim.id() == m),
+            };
+            if let Some((idx, e)) = candidate {
+                let eff = self.effective_rank(class, now, e.req.enqueued);
+                if best.is_none_or(|(be, bs, _, _)| (eff, e.seq) < (be, bs)) {
+                    best = Some((eff, e.seq, class, idx));
+                }
+            }
+        }
+        best.map(|(_, _, class, idx)| {
+            s.classes[class]
+                .remove(idx)
+                .expect("candidate index is in range under the lock")
+                .req
+        })
+    }
+
+    fn pop_inner(&self, model: Option<&str>, until: Option<Instant>) -> Option<QueuedRequest> {
+        let mut s = lock_recover(&self.state);
+        loop {
+            if let Some(req) = self.take_next(&mut s, model) {
+                return Some(req);
+            }
+            if s.closed {
+                return None;
+            }
+            match until {
+                None => {
+                    s = self
+                        .available
+                        .wait(s)
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                }
+                Some(t) => {
+                    let now = Instant::now();
+                    if now >= t {
+                        return None;
+                    }
+                    let (guard, _timeout) = self
+                        .available
+                        .wait_timeout(s, t - now)
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                    s = guard;
+                }
+            }
+        }
     }
 
     /// Block until an entry is available. Returns `None` only once the
     /// queue is closed *and* drained (the shutdown exit condition).
     pub fn pop_blocking(&self) -> Option<QueuedRequest> {
-        let mut s = lock_recover(&self.state);
-        loop {
-            if let Some(e) = s.heap.pop() {
-                return Some(e.req);
-            }
-            if s.closed {
-                return None;
-            }
-            s = self
-                .available
-                .wait(s)
-                .unwrap_or_else(std::sync::PoisonError::into_inner);
-        }
+        self.pop_inner(None, None)
     }
 
     /// Pop, waiting at most until `until`; `None` on timeout or on
-    /// closed-and-drained. Used by workers to fill a batch with stragglers.
+    /// closed-and-drained.
     pub fn pop_until(&self, until: Instant) -> Option<QueuedRequest> {
-        let mut s = lock_recover(&self.state);
-        loop {
-            if let Some(e) = s.heap.pop() {
-                return Some(e.req);
-            }
-            if s.closed {
-                return None;
-            }
-            let now = Instant::now();
-            if now >= until {
-                return None;
-            }
-            let (guard, _timeout) = self
-                .available
-                .wait_timeout(s, until - now)
-                .unwrap_or_else(std::sync::PoisonError::into_inner);
-            s = guard;
-        }
+        self.pop_inner(None, Some(until))
+    }
+
+    /// Pop the earliest entry *for one model*, waiting at most until
+    /// `until`. The straggler-collection primitive: a worker filling a
+    /// batch for `model` takes only that model's requests, so a flush
+    /// never mixes models and other models' entries stay queued in order.
+    pub fn pop_model_until(&self, model: &str, until: Instant) -> Option<QueuedRequest> {
+        self.pop_inner(Some(model), Some(until))
     }
 
     /// Reject future pushes; wake every waiter. Queued entries remain
@@ -227,7 +293,10 @@ impl RequestQueue {
         let drained: Vec<Entry> = {
             let mut s = lock_recover(&self.state);
             s.closed = true;
-            s.heap.drain().collect()
+            s.classes
+                .iter_mut()
+                .flat_map(std::mem::take)
+                .collect()
         };
         self.available.notify_all();
         for e in drained {
@@ -239,10 +308,22 @@ impl RequestQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::serving::registry::test_claim;
     use std::sync::mpsc;
-    use std::time::Duration;
+
+    fn q(cap: usize) -> RequestQueue {
+        // Promotion period far beyond test runtimes: strict priority.
+        RequestQueue::new(cap, Some(Duration::from_secs(3600)))
+    }
 
     fn req(id: f32) -> (QueuedRequest, mpsc::Receiver<Result<Vec<f32>, ServeError>>) {
+        req_for("m", id)
+    }
+
+    fn req_for(
+        model: &str,
+        id: f32,
+    ) -> (QueuedRequest, mpsc::Receiver<Result<Vec<f32>, ServeError>>) {
         let (tx, rx) = mpsc::channel();
         (
             QueuedRequest {
@@ -250,6 +331,7 @@ mod tests {
                 enqueued: Instant::now(),
                 deadline: None,
                 respond: tx,
+                claim: test_claim(model, 1, 1, 1),
             },
             rx,
         )
@@ -257,7 +339,7 @@ mod tests {
 
     #[test]
     fn pops_by_priority_then_fifo() {
-        let q = RequestQueue::new(16);
+        let q = q(16);
         for (id, p) in [
             (1.0, Priority::Normal),
             (2.0, Priority::Low),
@@ -274,7 +356,7 @@ mod tests {
 
     #[test]
     fn bounded_push_rejects_when_full() {
-        let q = RequestQueue::new(2);
+        let q = q(2);
         let (r1, _x1) = req(1.0);
         let (r2, _x2) = req(2.0);
         assert_eq!(q.push(r1, Priority::Normal).unwrap(), 1);
@@ -292,7 +374,7 @@ mod tests {
 
     #[test]
     fn close_rejects_pushes_but_drains_pops() {
-        let q = RequestQueue::new(4);
+        let q = q(4);
         let (r1, _x1) = req(1.0);
         q.push(r1, Priority::Normal).unwrap();
         q.close();
@@ -310,15 +392,87 @@ mod tests {
 
     #[test]
     fn pop_until_times_out_empty() {
-        let q = RequestQueue::new(4);
+        let q = q(4);
         let t0 = Instant::now();
         assert!(q.pop_until(t0 + Duration::from_millis(10)).is_none());
         assert!(t0.elapsed() >= Duration::from_millis(10));
     }
 
     #[test]
+    fn model_filtered_pop_skips_other_models_in_order() {
+        let q = q(16);
+        let mut rxs = Vec::new();
+        for (model, id, p) in [
+            ("a", 1.0, Priority::Normal),
+            ("b", 2.0, Priority::Normal),
+            ("a", 3.0, Priority::Low),
+            ("b", 4.0, Priority::High),
+            ("a", 5.0, Priority::Normal),
+        ] {
+            let (r, rx) = req_for(model, id);
+            q.push(r, p).unwrap();
+            rxs.push(rx);
+        }
+        let until = Instant::now() + Duration::from_millis(5);
+        // Model-a entries come out in (priority, arrival) order…
+        let a1 = q.pop_model_until("a", until).unwrap();
+        assert_eq!((a1.claim.id(), a1.x[0]), ("a", 1.0));
+        assert_eq!(q.pop_model_until("a", until).unwrap().x[0], 5.0);
+        assert_eq!(q.pop_model_until("a", until).unwrap().x[0], 3.0);
+        // …a drained model times out…
+        assert!(q.pop_model_until("a", Instant::now() + Duration::from_millis(5)).is_none());
+        // …and model-b entries kept their own order throughout.
+        assert_eq!(q.pop_model_until("b", until).unwrap().x[0], 4.0);
+        assert_eq!(q.pop_blocking().map(|r| r.x[0]), Some(2.0));
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn aged_low_entry_is_promoted_past_sustained_high_traffic() {
+        let period = Duration::from_millis(25);
+        let q = RequestQueue::new(64, Some(period));
+        let (low, _rx_low) = req(1.0);
+        q.push(low, Priority::Low).unwrap();
+        // Sustained High traffic: a fresh High entry arrives before every
+        // pop. Strict priority would starve the Low entry forever; with
+        // age promotion it must surface within ~2 promotion periods.
+        let mut served_low_after = None;
+        let mut rxs = Vec::new();
+        for i in 0..40 {
+            let (high, rx) = req(100.0 + i as f32);
+            q.push(high, Priority::High).unwrap();
+            rxs.push(rx);
+            std::thread::sleep(Duration::from_millis(5));
+            if q.pop_blocking().unwrap().x[0] == 1.0 {
+                served_low_after = Some(i);
+                break;
+            }
+        }
+        let rounds = served_low_after.expect("aged Low entry must be served under High load");
+        // Promotion to High takes 2 × 25 ms; at ≥5 ms per round the Low
+        // entry must win well before the traffic stops.
+        assert!(rounds < 39, "promoted far too late: {rounds} rounds");
+
+        // Control: with promotion disabled the same pattern starves Low.
+        let strict = RequestQueue::new(64, None);
+        let (low, _rx_low2) = req(1.0);
+        strict.push(low, Priority::Low).unwrap();
+        for i in 0..10 {
+            let (high, rx) = req(200.0 + i as f32);
+            strict.push(high, Priority::High).unwrap();
+            rxs.push(rx);
+            std::thread::sleep(Duration::from_millis(5));
+            assert_ne!(
+                strict.pop_blocking().unwrap().x[0],
+                1.0,
+                "strict priority must not promote"
+            );
+        }
+    }
+
+    #[test]
     fn cross_thread_handoff() {
-        let q = std::sync::Arc::new(RequestQueue::new(8));
+        let q = std::sync::Arc::new(self::q(8));
         let q2 = std::sync::Arc::clone(&q);
         let popper = std::thread::spawn(move || {
             let mut got = Vec::new();

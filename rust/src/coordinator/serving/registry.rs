@@ -1,0 +1,467 @@
+//! The model registry: one worker pool serving **many models** concurrently.
+//!
+//! The paper's point is that RBGP4 structure is derived once and executed
+//! everywhere; PR 3 made the shared [`PlanCache`] *namespaced by structure
+//! hash* so dead structures are evictable. This module is the production
+//! consumer of that namespace API: a registry maps model ids to factories,
+//! every request resolves to a registered model before it is queued, each
+//! worker materializes its own instance of every registered model (all
+//! sharing one plan cache, so cache builds scale with *structures*, not
+//! models × workers), and retiring a model drains its in-flight requests
+//! and then evicts exactly the plan namespaces no surviving model still
+//! claims.
+//!
+//! Lifecycle of a request: `submit_with(model: Some(id))` →
+//! [`ModelRegistry::resolve`] hands back a [`ModelClaim`] (an RAII token
+//! that keeps the entry's in-flight count exact) → the claim rides inside
+//! the queued request → a worker batches it with same-model requests only
+//! → the response is sent and the claim drops. `unregister_model` flips
+//! the entry to *retired* (new submits get
+//! [`ServeError::UnknownModel`]), waits for the in-flight count to reach
+//! zero, removes the entry (workers drop their instances at the next
+//! sync), and invalidates the retired structures in the entry's plan
+//! cache — reporting exact eviction counters.
+
+use super::backend::BatchModel;
+use super::ServeError;
+use crate::kernels::plan::PlanCache;
+use crate::util::lock_recover;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// The id [`super::InferenceServer::start_model`] registers its initial
+/// model under, and the id requests without an explicit
+/// [`super::SubmitOptions::model`] route to.
+pub const DEFAULT_MODEL: &str = "default";
+
+/// A model constructor, run once per worker thread (and once as a probe on
+/// the registering thread): some backends own handles that are not `Send`,
+/// and per-worker instances keep flushes lock-free.
+pub(crate) type ModelFactory =
+    Arc<dyn Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync>;
+
+/// Batch geometry of a registered model, captured from its probe (or
+/// first worker) instance; what submit validates widths against and the
+/// batcher sizes flushes by.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct ModelSpec {
+    pub batch: usize,
+    pub in_dim: usize,
+    pub classes: usize,
+}
+
+/// What the registry knows about a model once an instance has existed.
+pub(crate) struct ModelInfo {
+    pub spec: ModelSpec,
+    /// Structure-hash namespaces this model's plans occupy in `cache`
+    /// (empty for backends that are not plan-cached).
+    pub structures: Vec<u64>,
+    /// The shared plan cache the model resolves plans from, if any — the
+    /// handle `unregister` evicts retired namespaces through.
+    pub cache: Option<Arc<PlanCache>>,
+}
+
+/// One registered model: id, factory, geometry, and the in-flight
+/// accounting that makes unregistration a *drain*, not a drop.
+pub(crate) struct ModelEntry {
+    pub id: String,
+    pub factory: ModelFactory,
+    info: OnceLock<ModelInfo>,
+    /// Accepted-but-unanswered requests holding a [`ModelClaim`] on this
+    /// entry.
+    in_flight: AtomicUsize,
+    /// Set by `begin_retire`: resolves are rejected, queued requests keep
+    /// draining.
+    retired: AtomicBool,
+    drain_lock: Mutex<()>,
+    drained: Condvar,
+}
+
+impl ModelEntry {
+    fn new(id: &str, factory: ModelFactory) -> ModelEntry {
+        ModelEntry {
+            id: id.to_string(),
+            factory,
+            info: OnceLock::new(),
+            in_flight: AtomicUsize::new(0),
+            retired: AtomicBool::new(false),
+            drain_lock: Mutex::new(()),
+            drained: Condvar::new(),
+        }
+    }
+
+    /// Record the probe/first-instance report; first write wins (workers
+    /// all report the same geometry — disagreement aborts startup).
+    pub fn set_info(&self, info: ModelInfo) {
+        let _ = self.info.set(info);
+    }
+
+    pub fn info(&self) -> Option<&ModelInfo> {
+        self.info.get()
+    }
+
+    pub fn spec(&self) -> ModelSpec {
+        self.info
+            .get()
+            .expect("model info is set before the entry can serve requests")
+            .spec
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Block until every claim on this entry has dropped — requests were
+    /// answered (by a worker) or discarded (queue failed them). Claims
+    /// drop on every exit path including worker panic unwind, so this
+    /// cannot wedge on a dead pool.
+    pub fn wait_drained(&self) {
+        let mut g = lock_recover(&self.drain_lock);
+        while self.in_flight.load(Ordering::Acquire) != 0 {
+            g = self
+                .drained
+                .wait(g)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+}
+
+/// RAII routing token: which model a request targets, plus the in-flight
+/// count that lets `unregister_model` drain exactly. Created under the
+/// registry lock (so it cannot race a retire) and dropped whenever the
+/// request is answered or discarded — including a worker's panic unwind.
+pub(crate) struct ModelClaim {
+    entry: Arc<ModelEntry>,
+}
+
+impl ModelClaim {
+    fn new(entry: Arc<ModelEntry>) -> ModelClaim {
+        entry.in_flight.fetch_add(1, Ordering::AcqRel);
+        ModelClaim { entry }
+    }
+
+    pub fn id(&self) -> &str {
+        &self.entry.id
+    }
+
+    pub fn spec(&self) -> ModelSpec {
+        self.entry.spec()
+    }
+}
+
+impl Drop for ModelClaim {
+    fn drop(&mut self) {
+        if self.entry.in_flight.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Take the drain lock before notifying so a waiter between its
+            // count check and its wait cannot miss the wakeup.
+            let _g = lock_recover(&self.entry.drain_lock);
+            self.entry.drained.notify_all();
+        }
+    }
+}
+
+/// Outcome of `unregister_model`: what was drained and exactly which plan
+/// namespaces were evicted vs. retained (shared with a surviving model).
+#[derive(Clone, Debug, Default)]
+pub struct UnregisterReport {
+    pub model: String,
+    /// Requests still in flight when unregistration began; all were
+    /// answered before the model was dropped.
+    pub drained_requests: usize,
+    /// Structure hashes whose plans were evicted (no surviving model
+    /// claims them).
+    pub evicted_structures: Vec<u64>,
+    /// Structure hashes kept because a surviving model still claims them
+    /// (e.g. a dense classifier shape shared across checkpoints).
+    pub retained_structures: Vec<u64>,
+    /// Plans removed from the shared cache, summed over
+    /// `evicted_structures`.
+    pub evicted_plans: usize,
+}
+
+/// The registry proper: model id → entry, plus a generation counter the
+/// workers poll to keep their local instance sets in sync.
+pub(crate) struct ModelRegistry {
+    state: Mutex<HashMap<String, Arc<ModelEntry>>>,
+    /// Bumped on register and on retire *completion*; a worker whose local
+    /// generation matches has an exact mirror of the entry map.
+    generation: AtomicUsize,
+    default_id: String,
+}
+
+impl ModelRegistry {
+    pub fn new(default_id: &str) -> ModelRegistry {
+        ModelRegistry {
+            state: Mutex::new(HashMap::new()),
+            generation: AtomicUsize::new(0),
+            default_id: default_id.to_string(),
+        }
+    }
+
+    pub fn generation(&self) -> usize {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    pub fn default_id(&self) -> &str {
+        &self.default_id
+    }
+
+    /// Add a model. `info` is `None` only for the startup default model,
+    /// whose first worker instance reports it before the server constructor
+    /// returns (no submit can race that window).
+    pub fn register(
+        &self,
+        id: &str,
+        factory: ModelFactory,
+        info: Option<ModelInfo>,
+    ) -> anyhow::Result<Arc<ModelEntry>> {
+        anyhow::ensure!(!id.is_empty(), "model id must be non-empty");
+        let entry = {
+            let mut map = lock_recover(&self.state);
+            anyhow::ensure!(
+                !map.contains_key(id),
+                "model '{id}' is already registered"
+            );
+            let entry = Arc::new(ModelEntry::new(id, factory));
+            if let Some(info) = info {
+                entry.set_info(info);
+            }
+            map.insert(id.to_string(), Arc::clone(&entry));
+            entry
+        };
+        self.generation.fetch_add(1, Ordering::AcqRel);
+        Ok(entry)
+    }
+
+    /// Resolve a submit's target (`None` → the default id) to a claim.
+    /// Claim creation happens under the registry lock, so a request either
+    /// resolves before a retire begins (and is drained) or is rejected.
+    pub fn resolve(&self, id: Option<&str>) -> Result<ModelClaim, ServeError> {
+        let map = lock_recover(&self.state);
+        let id = id.unwrap_or(self.default_id.as_str());
+        match map.get(id) {
+            Some(e) if !e.retired.load(Ordering::Acquire) => {
+                Ok(ModelClaim::new(Arc::clone(e)))
+            }
+            _ => Err(ServeError::UnknownModel {
+                model: id.to_string(),
+            }),
+        }
+    }
+
+    /// Whether `id` currently has an entry (live or draining). Used to
+    /// fail duplicate registrations *before* the expensive factory probe —
+    /// a probe for a doomed registration would warm orphan plan namespaces
+    /// into the shared cache that no entry (and so no unregister) owns.
+    pub fn is_registered(&self, id: &str) -> bool {
+        lock_recover(&self.state).contains_key(id)
+    }
+
+    /// Every entry, including retired-but-draining ones (workers must keep
+    /// serving those until the drain completes).
+    pub fn snapshot(&self) -> Vec<Arc<ModelEntry>> {
+        lock_recover(&self.state).values().map(Arc::clone).collect()
+    }
+
+    /// Live (non-retired) model ids, sorted.
+    pub fn models(&self) -> Vec<String> {
+        let mut ids: Vec<String> = lock_recover(&self.state)
+            .values()
+            .filter(|e| !e.retired.load(Ordering::Acquire))
+            .map(|e| e.id.clone())
+            .collect();
+        ids.sort();
+        ids
+    }
+
+    /// Phase 1 of unregistration: stop new submits resolving to `id`.
+    /// Queued requests keep draining through the workers.
+    pub fn begin_retire(&self, id: &str) -> anyhow::Result<Arc<ModelEntry>> {
+        let map = lock_recover(&self.state);
+        let entry = map
+            .get(id)
+            .ok_or_else(|| anyhow::anyhow!("model '{id}' is not registered"))?;
+        anyhow::ensure!(
+            !entry.retired.swap(true, Ordering::AcqRel),
+            "model '{id}' is already being unregistered"
+        );
+        Ok(Arc::clone(entry))
+    }
+
+    /// Phase 2, after the drain: remove the entry (workers drop their
+    /// instances at the next sync) and evict exactly the plan namespaces
+    /// no surviving model still claims.
+    pub fn finish_retire(&self, entry: &Arc<ModelEntry>) -> UnregisterReport {
+        let live: Vec<u64> = {
+            let mut map = lock_recover(&self.state);
+            map.remove(&entry.id);
+            map.values()
+                .filter_map(|e| e.info())
+                .flat_map(|i| i.structures.iter().copied())
+                .collect()
+        };
+        self.generation.fetch_add(1, Ordering::AcqRel);
+        let mut report = UnregisterReport {
+            model: entry.id.clone(),
+            ..UnregisterReport::default()
+        };
+        if let Some(info) = entry.info() {
+            for &s in &info.structures {
+                if live.contains(&s) {
+                    report.retained_structures.push(s);
+                } else if let Some(cache) = &info.cache {
+                    report.evicted_plans += cache.invalidate_structure(s);
+                    report.evicted_structures.push(s);
+                }
+            }
+        }
+        report
+    }
+}
+
+/// Test fixture: a detached claim (no registry) with the given geometry,
+/// for queue/worker unit tests that construct requests by hand.
+#[cfg(test)]
+pub(crate) fn test_claim(id: &str, batch: usize, in_dim: usize, classes: usize) -> ModelClaim {
+    let entry = Arc::new(ModelEntry::new(
+        id,
+        Arc::new(|| anyhow::bail!("test claim has no factory")),
+    ));
+    entry.set_info(ModelInfo {
+        spec: ModelSpec {
+            batch,
+            in_dim,
+            classes,
+        },
+        structures: Vec::new(),
+        cache: None,
+    });
+    ModelClaim::new(entry)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noop_factory() -> ModelFactory {
+        Arc::new(|| anyhow::bail!("never built in these tests"))
+    }
+
+    fn info(batch: usize, structures: Vec<u64>) -> ModelInfo {
+        ModelInfo {
+            spec: ModelSpec {
+                batch,
+                in_dim: 4,
+                classes: 2,
+            },
+            structures,
+            cache: None,
+        }
+    }
+
+    #[test]
+    fn register_resolve_and_duplicate_rejection() {
+        let r = ModelRegistry::new(DEFAULT_MODEL);
+        let gen0 = r.generation();
+        r.register(DEFAULT_MODEL, noop_factory(), Some(info(8, vec![1]))).unwrap();
+        r.register("b", noop_factory(), Some(info(4, vec![2]))).unwrap();
+        assert_eq!(r.generation(), gen0 + 2);
+        assert!(r.register("b", noop_factory(), None).is_err());
+        assert_eq!(r.models(), vec!["b".to_string(), DEFAULT_MODEL.to_string()]);
+
+        let claim = r.resolve(None).unwrap();
+        assert_eq!(claim.id(), DEFAULT_MODEL);
+        assert_eq!(claim.spec().batch, 8);
+        let claim_b = r.resolve(Some("b")).unwrap();
+        assert_eq!(claim_b.spec().batch, 4);
+        match r.resolve(Some("nope")) {
+            Err(ServeError::UnknownModel { model }) => assert_eq!(model, "nope"),
+            other => panic!("expected UnknownModel, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn claims_gate_the_drain_and_retire_blocks_resolves() {
+        let r = ModelRegistry::new(DEFAULT_MODEL);
+        let entry = r
+            .register("m", noop_factory(), Some(info(2, vec![7, 9])))
+            .unwrap();
+        let c1 = r.resolve(Some("m")).unwrap();
+        let c2 = r.resolve(Some("m")).unwrap();
+        assert_eq!(entry.in_flight(), 2);
+
+        let retired = r.begin_retire("m").unwrap();
+        assert!(r.resolve(Some("m")).is_err(), "retired: no new claims");
+        assert!(r.begin_retire("m").is_err(), "double retire rejected");
+        // Still visible to workers (snapshot) so the drain can be served,
+        // but gone from the public model list.
+        assert_eq!(r.snapshot().len(), 1);
+        assert!(r.models().is_empty());
+
+        // Drain completes from another thread while we wait.
+        let h = std::thread::spawn(move || {
+            drop(c1);
+            drop(c2);
+        });
+        retired.wait_drained();
+        h.join().unwrap();
+        assert_eq!(retired.in_flight(), 0);
+
+        let report = r.finish_retire(&retired);
+        assert_eq!(report.model, "m");
+        // No cache attached: nothing evictable, nothing retained.
+        assert!(report.evicted_structures.is_empty());
+        assert_eq!(report.evicted_plans, 0);
+        assert!(r.snapshot().is_empty());
+        // The id is free again.
+        r.register("m", noop_factory(), Some(info(2, vec![7]))).unwrap();
+    }
+
+    #[test]
+    fn finish_retire_spares_structures_shared_with_survivors() {
+        use crate::kernels::plan::{PlanRequest, SparseMatrix};
+        use crate::kernels::registry::KernelRegistry;
+
+        let cache = Arc::new(PlanCache::new());
+        let kernels = KernelRegistry::builtin();
+        let shared = SparseMatrix::dense(vec![0.0; 8], 2, 4);
+        let own = SparseMatrix::dense(vec![0.0; 12], 3, 4);
+        let req = PlanRequest { n: 4, threads: 1 };
+        cache.plan_for(&kernels, &shared, &req).unwrap();
+        cache.plan_for(&kernels, &own, &req).unwrap();
+
+        let r = ModelRegistry::new(DEFAULT_MODEL);
+        let mk_info = |structures: Vec<u64>| ModelInfo {
+            spec: ModelSpec {
+                batch: 2,
+                in_dim: 4,
+                classes: 2,
+            },
+            structures,
+            cache: Some(Arc::clone(&cache)),
+        };
+        r.register(
+            "keep",
+            noop_factory(),
+            Some(mk_info(vec![shared.structure_hash()])),
+        )
+        .unwrap();
+        let retired = r
+            .register(
+                "kill",
+                noop_factory(),
+                Some(mk_info(vec![shared.structure_hash(), own.structure_hash()])),
+            )
+            .unwrap();
+
+        let entry = r.begin_retire("kill").unwrap();
+        entry.wait_drained(); // nothing in flight
+        let report = r.finish_retire(&retired);
+        assert_eq!(report.evicted_structures, vec![own.structure_hash()]);
+        assert_eq!(report.retained_structures, vec![shared.structure_hash()]);
+        assert_eq!(report.evicted_plans, 1);
+        assert_eq!(cache.structure_plan_count(own.structure_hash()), 0);
+        assert_eq!(cache.structure_plan_count(shared.structure_hash()), 1);
+    }
+}

@@ -1,31 +1,42 @@
-//! The per-worker serving loop: pop → batch → pad → execute → scatter.
+//! The per-worker serving loop: pop → route → batch (one model) → pad →
+//! execute → scatter.
 //!
-//! Each worker thread owns one [`BatchModel`] instance and pulls from the
-//! shared [`RequestQueue`]. It *dynamically batches*: block for the first
-//! live request, then drain greedily — waiting at most `max_wait` for
-//! stragglers — up to the model's batch size, pad the remainder with zero
-//! rows, execute once, and scatter per-sample logits back through the
-//! per-request channels.
+//! Each worker thread owns one instance of *every* registered model (a
+//! [`ModelSet`]), kept in sync with the [`ModelRegistry`] through its
+//! generation counter, and pulls from the shared [`RequestQueue`]. It
+//! *dynamically batches per model*: block for the first live request, let
+//! that request's model claim pick the flush target, then drain greedily —
+//! waiting at most `max_wait` for stragglers **of the same model**
+//! ([`RequestQueue::pop_model_until`]) — up to that model's batch size.
+//! A flush therefore never mixes models, and other models' requests keep
+//! their queue positions while a batch forms.
 //!
-//! Deadline enforcement happens here, at pop time: an expired request is
-//! answered with [`ServeError::DeadlineExceeded`] and *never occupies a
-//! batch slot* — under overload the worker burns microseconds rejecting
-//! stale work instead of milliseconds computing answers nobody is waiting
-//! for.
+//! Deadline enforcement happens twice: at pop time (an expired request
+//! never occupies a batch slot) and again immediately before the flush —
+//! the straggler window (`max_wait`) can outlive a short deadline, and a
+//! request that expired while sitting in `pending` must be answered with
+//! [`ServeError::DeadlineExceeded`], not executed late. Sample width is
+//! also re-validated at flush time: a width-mismatched request that
+//! reaches the queue through any future submit path gets a typed
+//! [`ServeError::WrongInputWidth`] instead of panicking the worker on
+//! `copy_from_slice`.
 //!
-//! Metrics record *real* occupancy per flush (`pending.len()` of `batch`
-//! slots), so padded partial batches are visible in the stats instead of
-//! silently inflating throughput.
+//! Metrics record *real* occupancy per flush (`live.len()` of `batch`
+//! slots), per worker *and* per model, so padded partial batches are
+//! visible in the stats instead of silently inflating throughput.
 
 use super::backend::BatchModel;
 use super::queue::{QueuedRequest, RequestQueue};
+use super::registry::ModelRegistry;
 use super::ServeError;
 use crate::coordinator::metrics::ServingMetrics;
+use crate::kernels::plan::PlanCache;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Everything a worker thread needs besides its model. Doubles as the
+/// Everything a worker thread needs besides its models. Doubles as the
 /// worker's liveness guard: it is dropped when the worker exits — normal
 /// shutdown, factory failure, *or panic unwind* — and the last drop closes
 /// the queue and fails every still-queued request with
@@ -35,6 +46,7 @@ pub(crate) struct WorkerContext {
     pub id: usize,
     pub queue: Arc<RequestQueue>,
     pub metrics: Arc<ServingMetrics>,
+    pub registry: Arc<ModelRegistry>,
     /// Max time to wait for stragglers after the first request of a batch.
     pub max_wait: Duration,
     /// Count of workers still alive (shared across the pool).
@@ -49,76 +61,287 @@ impl Drop for WorkerContext {
     }
 }
 
+/// What one worker reports back on its readiness channel: the default
+/// model's geometry (the constructor checks all workers agree) plus its
+/// structure namespaces and plan cache, which fill the default registry
+/// entry before the constructor returns.
+pub(crate) struct ReadyReport {
+    pub batch: usize,
+    pub in_dim: usize,
+    pub classes: usize,
+    pub structures: Vec<u64>,
+    pub cache: Option<Arc<PlanCache>>,
+}
+
+/// One worker-resident model instance plus its padded batch buffer.
+struct WorkerModel {
+    model: Box<dyn BatchModel>,
+    x: Vec<f32>,
+}
+
+impl WorkerModel {
+    fn new(model: Box<dyn BatchModel>) -> WorkerModel {
+        let len = model.batch() * model.in_dim();
+        WorkerModel {
+            model,
+            x: vec![0.0; len],
+        }
+    }
+}
+
+/// This worker's mirror of the registry: one instance per registered
+/// model, built on this thread (some backends are not `Send`). A model
+/// whose factory failed *after startup* is held as the error message and
+/// answers its requests with [`ServeError::Backend`] instead of taking
+/// the worker down.
+#[derive(Default)]
+pub(crate) struct ModelSet {
+    models: HashMap<String, Result<WorkerModel, String>>,
+    generation: usize,
+}
+
+impl ModelSet {
+    /// Startup build: instantiate every registered model, failing the
+    /// whole worker (and therefore server startup) on the first factory
+    /// error. Returns the default model's readiness report.
+    pub fn build_initial(&mut self, registry: &ModelRegistry) -> anyhow::Result<ReadyReport> {
+        self.generation = registry.generation();
+        let mut report = None;
+        for entry in registry.snapshot() {
+            let model = (entry.factory)()?;
+            if entry.id == registry.default_id() {
+                report = Some(ReadyReport {
+                    batch: model.batch(),
+                    in_dim: model.in_dim(),
+                    classes: model.classes(),
+                    structures: model.structures(),
+                    cache: model.plan_cache(),
+                });
+            }
+            self.models.insert(entry.id.clone(), Ok(WorkerModel::new(model)));
+        }
+        report.ok_or_else(|| anyhow::anyhow!("default model is not registered at startup"))
+    }
+
+    /// Mirror the registry after a register/unregister: drop instances of
+    /// removed models, build instances of new ones (keeping retired-but-
+    /// draining entries resident so their queued requests are still
+    /// served). Build failures degrade to per-model errors — post-startup,
+    /// one bad factory must not kill a worker serving other models.
+    fn sync(&mut self, registry: &ModelRegistry) {
+        let generation = registry.generation();
+        if generation == self.generation {
+            return;
+        }
+        self.generation = generation;
+        let entries = registry.snapshot();
+        let live: HashSet<&str> = entries.iter().map(|e| e.id.as_str()).collect();
+        self.models.retain(|id, _| live.contains(id.as_str()));
+        for entry in &entries {
+            if self.models.contains_key(&entry.id) {
+                continue;
+            }
+            let built = (entry.factory)().map(WorkerModel::new).map_err(|e| {
+                format!("model '{}' failed to build on this worker: {e:#}", entry.id)
+            });
+            self.models.insert(entry.id.clone(), built);
+        }
+    }
+
+    #[cfg(test)]
+    pub fn with_models(
+        models: Vec<(&str, Box<dyn BatchModel>)>,
+        generation: usize,
+    ) -> ModelSet {
+        ModelSet {
+            models: models
+                .into_iter()
+                .map(|(id, m)| (id.to_string(), Ok(WorkerModel::new(m))))
+                .collect(),
+            generation,
+        }
+    }
+}
+
+/// How long an idle worker waits before re-checking the registry: bounds
+/// how long an unregistered model's per-worker instances (weights +
+/// detached plans) can outlive the unregistration on a pool with no
+/// traffic to trigger a sync.
+const IDLE_SYNC: Duration = Duration::from_millis(500);
+
 /// Run until the queue is closed and drained.
-pub(crate) fn worker_loop(model: &mut dyn BatchModel, ctx: WorkerContext) {
-    let (batch, in_dim, classes) = (model.batch(), model.in_dim(), model.classes());
-    // One padded batch buffer reused across flushes (the model executes
-    // from cached plans; the batcher should not allocate per flush either).
-    let mut x = vec![0.0f32; batch * in_dim];
-    let mut pending: Vec<QueuedRequest> = Vec::with_capacity(batch);
+pub(crate) fn worker_loop(set: &mut ModelSet, ctx: WorkerContext) {
+    let mut pending: Vec<QueuedRequest> = Vec::new();
     loop {
-        // Block for the first live request; then drain greedily until the
-        // batch is full or the straggler window closes.
-        let Some(first) = next_live(&ctx, None) else {
-            return; // queue closed and drained: shut down
+        // Wait for the first live request; its claim picks the model this
+        // flush serves. The wait is bounded so an idle worker still syncs
+        // the registry (dropping instances of unregistered models). Then
+        // drain greedily — same model only — until the batch is full or
+        // the straggler window closes.
+        let first = loop {
+            match next_live(&ctx, Some(Instant::now() + IDLE_SYNC), None) {
+                Some(r) => break r,
+                None if ctx.queue.is_closed() => {
+                    // A timeout `None` raced the close: re-enter the pop.
+                    // With the queue closed it returns the verdict
+                    // atomically — an entry pushed before the close, or
+                    // `None` only once closed *and* drained.
+                    match next_live(&ctx, Some(Instant::now() + IDLE_SYNC), None) {
+                        Some(r) => break r,
+                        None => return, // closed and drained: shut down
+                    }
+                }
+                None => set.sync(&ctx.registry), // idle tick
+            }
         };
+        set.sync(&ctx.registry);
+        let model_id = first.claim.id().to_string();
+        let batch = first.claim.spec().batch;
         pending.push(first);
         let flush_by = Instant::now() + ctx.max_wait;
         while pending.len() < batch {
-            match next_live(&ctx, Some(flush_by)) {
+            match next_live(&ctx, Some(flush_by), Some(&model_id)) {
                 Some(r) => pending.push(r),
                 None => break,
             }
         }
-        flush(model, &ctx, &mut pending, &mut x, (batch, in_dim, classes));
+        flush(set, &ctx, &model_id, &mut pending);
     }
 }
 
-/// Pad, execute and scatter one batch. `pending` is drained either way.
-fn flush(
-    model: &mut dyn BatchModel,
-    ctx: &WorkerContext,
-    pending: &mut Vec<QueuedRequest>,
-    x: &mut [f32],
-    (batch, in_dim, classes): (usize, usize, usize),
-) {
-    x.fill(0.0);
-    for (s, req) in pending.iter().enumerate() {
-        x[s * in_dim..(s + 1) * in_dim].copy_from_slice(&req.x);
+/// Validate, pad, execute and scatter one single-model batch. `pending` is
+/// drained either way.
+fn flush(set: &mut ModelSet, ctx: &WorkerContext, model_id: &str, pending: &mut Vec<QueuedRequest>) {
+    let Some(first) = pending.first() else {
+        return;
+    };
+    let spec = first.claim.spec();
+    // Deadline re-check: a request popped live can expire while waiting
+    // out the straggler window. Executing it anyway would return a stale
+    // `Ok` past its deadline — reject it here instead, with the same typed
+    // error and counter as a pop-time rejection. Width re-check: a
+    // mismatched sample would panic `copy_from_slice` and take the whole
+    // worker down.
+    // Reject in place (the rejected entries are answered and dropped, the
+    // rest keep their order): the one `pending` buffer is reused across
+    // flushes, so the batcher hot path stays allocation-free.
+    let now = Instant::now();
+    pending.retain(|req| {
+        if req.deadline.is_some_and(|dl| now >= dl) {
+            ctx.metrics.record_rejected_deadline();
+            ctx.metrics.record_model_rejected_deadline(model_id);
+            let waited = req.enqueued.elapsed();
+            let _ = req
+                .respond
+                .send(Err(ServeError::DeadlineExceeded { waited }));
+            false
+        } else if req.x.len() != spec.in_dim {
+            let _ = req.respond.send(Err(ServeError::WrongInputWidth {
+                got: req.x.len(),
+                want: spec.in_dim,
+            }));
+            false
+        } else {
+            true
+        }
+    });
+    if pending.is_empty() {
+        return;
     }
-    match model.forward(x) {
-        Ok(logits) => {
+    let wm = match set.models.get_mut(model_id) {
+        Some(Ok(wm)) => wm,
+        Some(Err(msg)) => {
+            let msg = msg.clone();
+            fail_batch(ctx, model_id, pending, msg);
+            return;
+        }
+        None => {
+            fail_batch(
+                ctx,
+                model_id,
+                pending,
+                format!("model '{model_id}' is not resident on worker {}", ctx.id),
+            );
+            return;
+        }
+    };
+    let (batch, in_dim, classes) = (spec.batch, spec.in_dim, spec.classes);
+    // A worker instance must agree with the registered spec (factories are
+    // deterministic); if one ever doesn't, answer typed errors instead of
+    // unwinding on an out-of-bounds copy.
+    if wm.x.len() != batch * in_dim {
+        fail_batch(
+            ctx,
+            model_id,
+            pending,
+            format!("model '{model_id}' instance disagrees with its registered geometry"),
+        );
+        return;
+    }
+    wm.x.fill(0.0);
+    for (s, req) in pending.iter().enumerate() {
+        wm.x[s * in_dim..(s + 1) * in_dim].copy_from_slice(&req.x);
+    }
+    match wm.model.forward(&wm.x) {
+        Ok(logits) if logits.len() >= batch * classes => {
             ctx.metrics.record_flush(ctx.id, pending.len(), batch);
+            ctx.metrics.record_model_flush(model_id, pending.len(), batch);
             for (s, req) in pending.drain(..).enumerate() {
                 let row = logits[s * classes..(s + 1) * classes].to_vec();
                 ctx.metrics.record_latency(ctx.id, req.enqueued.elapsed());
                 let _ = req.respond.send(Ok(row));
             }
         }
+        Ok(logits) => {
+            let msg = format!(
+                "model '{model_id}' returned {} logits for a {batch}×{classes} batch",
+                logits.len()
+            );
+            fail_batch(ctx, model_id, pending, msg);
+        }
         Err(e) => {
-            ctx.metrics.record_error(ctx.id);
-            let msg = format!("batch execution failed: {e}");
-            for req in pending.drain(..) {
-                let _ = req.respond.send(Err(ServeError::Backend(msg.clone())));
-            }
+            fail_batch(ctx, model_id, pending, format!("batch execution failed: {e}"));
         }
     }
 }
 
-/// Pop the next request whose deadline is still live. Expired requests are
+/// Answer every request in a failed batch with the typed backend error;
+/// `pending` is drained.
+fn fail_batch(
+    ctx: &WorkerContext,
+    model_id: &str,
+    pending: &mut Vec<QueuedRequest>,
+    msg: String,
+) {
+    ctx.metrics.record_error(ctx.id);
+    ctx.metrics.record_model_error(model_id);
+    for req in pending.drain(..) {
+        let _ = req.respond.send(Err(ServeError::Backend(msg.clone())));
+    }
+}
+
+/// Pop the next request whose deadline is still live, optionally
+/// restricted to one model (straggler collection). Expired requests are
 /// answered with the typed error immediately — they never reach
 /// [`BatchModel::forward`] and never occupy a batch slot. With
-/// `until = None` this blocks until the queue closes; otherwise it gives up
-/// at `until` (straggler collection).
-fn next_live(ctx: &WorkerContext, until: Option<Instant>) -> Option<QueuedRequest> {
+/// `until = None` this blocks until the queue closes; otherwise it gives
+/// up at `until`.
+fn next_live(
+    ctx: &WorkerContext,
+    until: Option<Instant>,
+    model: Option<&str>,
+) -> Option<QueuedRequest> {
     loop {
-        let req = match until {
-            None => ctx.queue.pop_blocking()?,
-            Some(t) => ctx.queue.pop_until(t)?,
+        let req = match (model, until) {
+            (None, None) => ctx.queue.pop_blocking()?,
+            (None, Some(t)) => ctx.queue.pop_until(t)?,
+            (Some(m), Some(t)) => ctx.queue.pop_model_until(m, t)?,
+            (Some(_), None) => unreachable!("model-filtered pops are always bounded"),
         };
         match req.deadline {
             Some(dl) if Instant::now() >= dl => {
                 ctx.metrics.record_rejected_deadline();
+                ctx.metrics.record_model_rejected_deadline(req.claim.id());
                 let _ = req.respond.send(Err(ServeError::DeadlineExceeded {
                     waited: req.enqueued.elapsed(),
                 }));
@@ -132,13 +355,14 @@ fn next_live(ctx: &WorkerContext, until: Option<Instant>) -> Option<QueuedReques
 mod tests {
     use super::*;
     use crate::coordinator::serving::queue::Priority;
+    use crate::coordinator::serving::registry::test_claim;
     use std::sync::mpsc;
 
     /// Identity model: logits = the (single-feature) input, call log kept
     /// so tests can assert what reached `forward`.
     struct IdentityModel {
         batch: usize,
-        seen: Vec<f32>,
+        seen: Arc<std::sync::Mutex<Vec<f32>>>,
     }
 
     impl BatchModel for IdentityModel {
@@ -152,9 +376,18 @@ mod tests {
             1
         }
         fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
-            self.seen.extend_from_slice(x);
+            self.seen.lock().unwrap().extend_from_slice(x);
             Ok(x.to_vec())
         }
+    }
+
+    fn identity_set(batch: usize) -> (ModelSet, Arc<std::sync::Mutex<Vec<f32>>>) {
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let model = IdentityModel {
+            batch,
+            seen: Arc::clone(&seen),
+        };
+        (ModelSet::with_models(vec![("m", Box::new(model))], 0), seen)
     }
 
     fn ctx(queue: &Arc<RequestQueue>, metrics: &Arc<ServingMetrics>) -> WorkerContext {
@@ -162,9 +395,16 @@ mod tests {
             id: 0,
             queue: Arc::clone(queue),
             metrics: Arc::clone(metrics),
+            // Generation 0 matches the test ModelSet: sync is a no-op and
+            // the dummy factories are never invoked.
+            registry: Arc::new(ModelRegistry::new("m")),
             max_wait: Duration::from_millis(1),
             live: Arc::new(AtomicUsize::new(1)),
         }
+    }
+
+    fn queue() -> Arc<RequestQueue> {
+        Arc::new(RequestQueue::new(16, None))
     }
 
     fn push(
@@ -172,14 +412,24 @@ mod tests {
         id: f32,
         deadline: Option<Duration>,
     ) -> mpsc::Receiver<Result<Vec<f32>, ServeError>> {
+        push_sample(q, vec![id], deadline, 4)
+    }
+
+    fn push_sample(
+        q: &RequestQueue,
+        x: Vec<f32>,
+        deadline: Option<Duration>,
+        batch: usize,
+    ) -> mpsc::Receiver<Result<Vec<f32>, ServeError>> {
         let (tx, rx) = mpsc::channel();
         let now = Instant::now();
         q.push(
             QueuedRequest {
-                x: vec![id],
+                x,
                 enqueued: now,
                 deadline: deadline.map(|d| now + d),
                 respond: tx,
+                claim: test_claim("m", batch, 1, 1),
             },
             Priority::Normal,
         )
@@ -189,42 +439,96 @@ mod tests {
 
     #[test]
     fn expired_requests_never_reach_forward() {
-        let queue = Arc::new(RequestQueue::new(16));
+        let queue = queue();
         let metrics = Arc::new(ServingMetrics::new(1));
         let rx_dead = push(&queue, 5.0, Some(Duration::ZERO));
         let rx_live = push(&queue, 7.0, None);
         queue.close(); // worker drains then exits
-        let mut model = IdentityModel {
-            batch: 4,
-            seen: Vec::new(),
-        };
-        worker_loop(&mut model, ctx(&queue, &metrics));
+        let (mut set, seen) = identity_set(4);
+        worker_loop(&mut set, ctx(&queue, &metrics));
         match rx_dead.recv().unwrap() {
             Err(ServeError::DeadlineExceeded { .. }) => {}
             other => panic!("expected DeadlineExceeded, got {other:?}"),
         }
         assert_eq!(rx_live.recv().unwrap().unwrap(), vec![7.0]);
         assert!(
-            !model.seen.contains(&5.0),
+            !seen.lock().unwrap().contains(&5.0),
             "expired sample must not reach forward: {:?}",
-            model.seen
+            seen.lock().unwrap()
         );
         assert_eq!(metrics.rejected(), (0, 1));
         assert_eq!(metrics.totals(), (1, 1), "one served request, one batch");
+        let ms = metrics.model_stats();
+        assert_eq!(ms.len(), 1);
+        assert_eq!((ms[0].requests, ms[0].rejected_deadline), (1, 1));
+    }
+
+    #[test]
+    fn deadline_expiring_inside_straggler_window_is_rejected_at_flush() {
+        // The regression this covers: `next_live` pops the request while
+        // its deadline is still live, the batch then waits out `max_wait`
+        // (longer than the deadline), and the old flush executed it anyway.
+        let queue = queue();
+        let metrics = Arc::new(ServingMetrics::new(1));
+        let rx = push(&queue, 3.0, Some(Duration::from_millis(20)));
+        let mut ctx = ctx(&queue, &metrics);
+        ctx.max_wait = Duration::from_millis(120); // straggler window ≫ deadline
+        let (mut set, seen) = identity_set(4);
+        let handle = std::thread::spawn({
+            let queue = Arc::clone(&queue);
+            move || {
+                worker_loop(&mut set, ctx);
+                drop(queue);
+                seen
+            }
+        });
+        // The worker pops the live request immediately, then sits in the
+        // straggler window while the deadline lapses.
+        match rx.recv().unwrap() {
+            Err(ServeError::DeadlineExceeded { waited }) => {
+                assert!(waited >= Duration::from_millis(20), "waited {waited:?}");
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        queue.close();
+        let seen = handle.join().unwrap();
+        assert!(seen.lock().unwrap().is_empty(), "expired request must not execute");
+        assert_eq!(metrics.rejected(), (0, 1));
+        assert_eq!(metrics.totals(), (0, 0), "no batch was executed");
+    }
+
+    #[test]
+    fn wrong_width_sample_gets_typed_error_not_a_worker_panic() {
+        let queue = queue();
+        let metrics = Arc::new(ServingMetrics::new(1));
+        // Bypasses the submit-time width check, as a buggy future submit
+        // path might: in_dim is 1, this sample is 3 wide.
+        let rx_bad = push_sample(&queue, vec![1.0, 2.0, 3.0], None, 4);
+        let rx_ok = push(&queue, 9.0, None);
+        queue.close();
+        let (mut set, seen) = identity_set(4);
+        worker_loop(&mut set, ctx(&queue, &metrics));
+        match rx_bad.recv().unwrap() {
+            Err(ServeError::WrongInputWidth { got, want }) => {
+                assert_eq!((got, want), (3, 1));
+            }
+            other => panic!("expected WrongInputWidth, got {other:?}"),
+        }
+        // The worker survived and served the well-formed request.
+        assert_eq!(rx_ok.recv().unwrap().unwrap(), vec![9.0]);
+        assert!(!seen.lock().unwrap().contains(&2.0));
+        assert_eq!(metrics.totals(), (1, 1));
     }
 
     #[test]
     fn partial_batch_records_real_occupancy() {
-        let queue = Arc::new(RequestQueue::new(16));
+        let queue = queue();
         let metrics = Arc::new(ServingMetrics::new(1));
-        let rx1 = push(&queue, 1.0, None);
-        let rx2 = push(&queue, 2.0, None);
+        let rx1 = push_sample(&queue, vec![1.0], None, 8);
+        let rx2 = push_sample(&queue, vec![2.0], None, 8);
         queue.close();
-        let mut model = IdentityModel {
-            batch: 8,
-            seen: Vec::new(),
-        };
-        worker_loop(&mut model, ctx(&queue, &metrics));
+        let (mut set, _seen) = identity_set(8);
+        worker_loop(&mut set, ctx(&queue, &metrics));
         assert!(rx1.recv().unwrap().is_ok());
         assert!(rx2.recv().unwrap().is_ok());
         let ws = metrics.worker_stats();
@@ -234,6 +538,9 @@ mod tests {
         assert!((metrics.occupancy() - 0.25).abs() < 1e-12);
         let stats = metrics.latency_stats().unwrap();
         assert!((stats.occupancy - 0.25).abs() < 1e-12);
+        let ms = metrics.model_stats();
+        assert_eq!(ms[0].model, "m");
+        assert!((ms[0].occupancy() - 0.25).abs() < 1e-12);
     }
 
     /// Model that fails every forward: clients get the typed backend error.
@@ -256,12 +563,13 @@ mod tests {
 
     #[test]
     fn backend_errors_reach_every_request_in_batch() {
-        let queue = Arc::new(RequestQueue::new(16));
+        let queue = queue();
         let metrics = Arc::new(ServingMetrics::new(1));
-        let rx1 = push(&queue, 1.0, None);
-        let rx2 = push(&queue, 2.0, None);
+        let rx1 = push_sample(&queue, vec![1.0], None, 2);
+        let rx2 = push_sample(&queue, vec![2.0], None, 2);
         queue.close();
-        worker_loop(&mut FailingModel, ctx(&queue, &metrics));
+        let mut set = ModelSet::with_models(vec![("m", Box::new(FailingModel))], 0);
+        worker_loop(&mut set, ctx(&queue, &metrics));
         for rx in [rx1, rx2] {
             match rx.recv().unwrap() {
                 Err(ServeError::Backend(msg)) => assert!(msg.contains("kernel exploded")),
@@ -270,5 +578,6 @@ mod tests {
         }
         assert_eq!(metrics.worker_stats()[0].errors, 1);
         assert_eq!(metrics.totals(), (0, 0), "failed batches are not throughput");
+        assert_eq!(metrics.model_stats()[0].errors, 1);
     }
 }

@@ -71,6 +71,151 @@ struct GradualState {
     next: usize,
 }
 
+/// A serveable snapshot of a native model: geometry, hidden-layer mask and
+/// all parameters. This is the unit the multi-model serving registry
+/// consumes — two checkpoints of one gradual run (different masks, so
+/// different plan-cache namespaces) can be registered side by side on one
+/// pool. JSON round-trips are bit-exact for every `f32` (numbers are
+/// printed in shortest-roundtrip form), so a checkpoint served from disk
+/// produces logits identical to the trainer that saved it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NativeCheckpoint {
+    pub in_dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    /// Hidden-layer mask (hidden × in_dim), 0/1.
+    pub mask: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+impl NativeCheckpoint {
+    /// The hidden layer in serving form — the same recipe as
+    /// `NativeTrainer::export_w1` (pattern from the *mask*, explicit
+    /// zeros kept), so the structure hash is a pure function of the mask.
+    fn export_w1(&self) -> SparseMatrix {
+        SparseMatrix::Csr(CsrMatrix::from_dense_with_pattern(
+            &self.w1,
+            &self.mask,
+            self.hidden,
+            self.in_dim,
+        ))
+    }
+
+    /// Structure hash of the hidden layer as served — the plan-cache
+    /// namespace this checkpoint's plans live under.
+    pub fn structure_hash(&self) -> u64 {
+        self.export_w1().structure_hash()
+    }
+
+    /// Build a plan-cached serving model for this checkpoint.
+    pub fn serving_model(
+        &self,
+        batch: usize,
+        threads: usize,
+        cache: Arc<PlanCache>,
+    ) -> anyhow::Result<NativeSparseModel> {
+        NativeSparseModel::new(
+            self.export_w1(),
+            self.b1.clone(),
+            SparseMatrix::dense(self.w2.clone(), self.classes, self.hidden),
+            self.b2.clone(),
+            batch,
+            threads,
+            cache,
+        )
+    }
+
+    /// A thread-safe factory producing identical warmed serving models on
+    /// `cache` — the shape `InferenceServer::{start_model_as,
+    /// register_model}` want. The hidden layer is compacted once here;
+    /// workers clone the compact form.
+    pub fn serving_factory(
+        &self,
+        batch: usize,
+        threads: usize,
+        cache: Arc<PlanCache>,
+    ) -> impl Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static {
+        let w1 = self.export_w1();
+        let b1 = self.b1.clone();
+        let w2 = SparseMatrix::dense(self.w2.clone(), self.classes, self.hidden);
+        let b2 = self.b2.clone();
+        move || {
+            let mut model = NativeSparseModel::new(
+                w1.clone(),
+                b1.clone(),
+                w2.clone(),
+                b2.clone(),
+                batch,
+                threads,
+                Arc::clone(&cache),
+            )?;
+            model.warm()?;
+            Ok(Box::new(model) as Box<dyn BatchModel>)
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let arr = |v: &[f32]| Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
+        let mut j = Json::obj();
+        j.set("in_dim", self.in_dim)
+            .set("hidden", self.hidden)
+            .set("classes", self.classes)
+            .set("mask", arr(&self.mask))
+            .set("w1", arr(&self.w1))
+            .set("b1", arr(&self.b1))
+            .set("w2", arr(&self.w2))
+            .set("b2", arr(&self.b2));
+        j
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<NativeCheckpoint> {
+        // Strict parsing: a malformed element must fail the load, not
+        // silently become a zero weight the server would then serve.
+        let floats = |key: &str| -> anyhow::Result<Vec<f32>> {
+            j.req_arr(key)?
+                .iter()
+                .enumerate()
+                .map(|(i, v)| {
+                    v.as_f64().map(|x| x as f32).ok_or_else(|| {
+                        anyhow::anyhow!("checkpoint field '{key}'[{i}] is not a number")
+                    })
+                })
+                .collect()
+        };
+        let ckpt = NativeCheckpoint {
+            in_dim: j.req_usize("in_dim")?,
+            hidden: j.req_usize("hidden")?,
+            classes: j.req_usize("classes")?,
+            mask: floats("mask")?,
+            w1: floats("w1")?,
+            b1: floats("b1")?,
+            w2: floats("w2")?,
+            b2: floats("b2")?,
+        };
+        let (h, d, c) = (ckpt.hidden, ckpt.in_dim, ckpt.classes);
+        anyhow::ensure!(ckpt.mask.len() == h * d, "checkpoint mask shape mismatch");
+        anyhow::ensure!(ckpt.w1.len() == h * d, "checkpoint w1 shape mismatch");
+        anyhow::ensure!(ckpt.b1.len() == h, "checkpoint b1 shape mismatch");
+        anyhow::ensure!(ckpt.w2.len() == c * h, "checkpoint w2 shape mismatch");
+        anyhow::ensure!(ckpt.b2.len() == c, "checkpoint b2 shape mismatch");
+        Ok(ckpt)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<NativeCheckpoint> {
+        let text = std::fs::read_to_string(path)?;
+        NativeCheckpoint::from_json(&crate::util::json::Json::parse(&text)?)
+    }
+}
+
 /// Native trainer: masked-MLP SGD on the CIFAR-like task, plan-cached
 /// evaluation/serving. The default build's training path.
 pub struct NativeTrainer {
@@ -252,6 +397,63 @@ impl NativeTrainer {
             model.warm()?;
             Ok(Box::new(model) as Box<dyn BatchModel>)
         }
+    }
+
+    /// Snapshot the current weights as a serveable [`NativeCheckpoint`] —
+    /// the multi-model unit: snapshots taken at different gradual
+    /// milestones carry different masks (different plan-cache namespaces)
+    /// and can be registered side by side on one serving pool.
+    pub fn checkpoint(&self) -> NativeCheckpoint {
+        NativeCheckpoint {
+            in_dim: self.mlp.d,
+            hidden: self.mlp.h,
+            classes: self.mlp.c,
+            mask: self.mlp.mask.clone(),
+            w1: self.mlp.w1.clone(),
+            b1: self.mlp.b1.clone(),
+            w2: self.mlp.w2.clone(),
+            b2: self.mlp.b2.clone(),
+        }
+    }
+
+    /// Save the current weights as a JSON checkpoint servable by
+    /// `rbgp serve --model name=ckpt.json` (bit-exact round trip).
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        self.checkpoint().save(path)
+    }
+
+    /// Restore weights and mask from a checkpoint (geometry validated
+    /// against this trainer); momenta reset to zero.
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> anyhow::Result<()> {
+        let ckpt = NativeCheckpoint::load(path)?;
+        anyhow::ensure!(
+            (ckpt.in_dim, ckpt.hidden, ckpt.classes) == (self.mlp.d, self.mlp.h, self.mlp.c),
+            "checkpoint geometry {}→{}→{} does not match trainer {}→{}→{}",
+            ckpt.in_dim,
+            ckpt.hidden,
+            ckpt.classes,
+            self.mlp.d,
+            self.mlp.h,
+            self.mlp.c
+        );
+        self.mlp
+            .load_params(ckpt.mask, ckpt.w1, ckpt.b1, ckpt.w2, ckpt.b2);
+        Ok(())
+    }
+
+    /// The model-id/checkpoint variant of [`NativeTrainer::serving_factory`]:
+    /// a factory for an arbitrary checkpoint (e.g. a gradual-run milestone
+    /// snapshot) that shares **this trainer's** plan cache, so several
+    /// checkpoints registered on one pool amortize their shared structures
+    /// (the dense classifier, any common mask) and each adds only its own
+    /// namespace.
+    pub fn checkpoint_factory(
+        &self,
+        ckpt: &NativeCheckpoint,
+        batch: usize,
+        threads: usize,
+    ) -> impl Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static {
+        ckpt.serving_factory(batch, threads, Arc::clone(&self.cache))
     }
 
     /// Spin up a multi-worker inference server on the current weights
@@ -805,6 +1007,45 @@ mod tests {
         assert_eq!(structures.len(), 2, "final w1 + dense w2 only: {structures:?}");
         assert!(structures.contains(&t.structure_hash()));
         assert!(t.cache().structure_plan_count(t.structure_hash()) >= 1);
+    }
+
+    #[test]
+    fn checkpoint_round_trips_bit_exact_and_serves_identically() {
+        let mut t = NativeTrainer::new(64, 64, 4, Pattern::Rbgp4, 0.75, quick_config(10))
+            .unwrap()
+            .with_threads(1);
+        for s in 0..10 {
+            t.step(s);
+        }
+        let ckpt = t.checkpoint();
+        assert_eq!(ckpt.structure_hash(), t.structure_hash());
+
+        let path = std::env::temp_dir().join(format!("rbgp_ckpt_{}.json", std::process::id()));
+        ckpt.save(&path).unwrap();
+        let loaded = NativeCheckpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(ckpt, loaded, "JSON round trip is bit-exact");
+
+        // The loaded checkpoint's serving model computes bit-identical
+        // logits to the trainer's own serving model.
+        let batch = t.config.batch;
+        let mut from_trainer = t.serving_model(batch, 1).unwrap();
+        let mut from_ckpt = loaded
+            .serving_model(batch, 1, Arc::new(PlanCache::new()))
+            .unwrap();
+        let b = t.data.test_batch(batch);
+        assert_eq!(
+            from_trainer.forward(&b.x).unwrap(),
+            from_ckpt.forward(&b.x).unwrap()
+        );
+
+        // Restoring into a trainer reproduces the exact parameters.
+        let params = t.mlp.flat_params();
+        ckpt.save(&path).unwrap();
+        t.load_checkpoint(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(t.mlp.flat_params(), params);
+        assert_eq!(t.structure_hash(), ckpt.structure_hash());
     }
 
     #[test]

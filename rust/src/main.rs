@@ -11,7 +11,7 @@
 //!   serve       batched inference server demo over the forward artifact
 
 use rbgp::bench_harness::{table1, table2, table3};
-use rbgp::coordinator::{InferenceServer, ServeError, ServerConfig};
+use rbgp::coordinator::{InferenceServer, ServeError, ServerConfig, SubmitOptions};
 use rbgp::data::CifarLike;
 use rbgp::graph::{product_many, ramanujan, spectral, BipartiteGraph};
 use rbgp::gpusim::explain_fig1;
@@ -49,14 +49,19 @@ COMMANDS
              [--save ckpt.json] [--load ckpt.json]
              [--gradual] [--milestones 0.25,0.6] [--sp 0.75]   (native only)
   serve      [--requests 512] [--clients 4] [--workers 2] [--queue-cap 1024]
-             [--deadline-ms 0] [--artifacts DIR] [--checkpoint ckpt.json]
+             [--deadline-ms 0] [--max-starvation-ms 1000]
+             [--model name=ckpt.json]...                       (native only)
+             [--artifacts DIR] [--checkpoint ckpt.json]        (xla only)
 
 With the `xla` feature, train/serve execute AOT artifacts on PJRT (run
 `make artifacts` first). Without it, they run the native plan-cached
 backends: `train` fits the masked MLP on the synthetic task (add
 --gradual to start dense and tighten toward the RBGP4 mask at the
---milestones fractions, re-keying the plan cache at each), `serve`
-serves the RBGP4 demo model from the kernel plan cache.";
+--milestones fractions, re-keying the plan cache at each; --save/--load
+round-trip JSON checkpoints), `serve` serves the RBGP4 demo model from
+the kernel plan cache — or, with one `--model name=ckpt.json` per model,
+serves several trained checkpoints concurrently from one worker pool
+sharing one plan cache (per-model plan namespaces).";
 
 fn main() {
     let args = Args::from_env();
@@ -274,13 +279,6 @@ fn train_cmd(args: &Args) -> anyhow::Result<()> {
 
 #[cfg(not(feature = "xla"))]
 fn train_cmd(args: &Args) -> anyhow::Result<()> {
-    for flag in ["save", "load"] {
-        anyhow::ensure!(
-            args.get(flag).is_none(),
-            "--{flag} requires the `xla` feature (checkpointing is part of the AOT trainer); \
-             rebuild with `--features xla`"
-        );
-    }
     anyhow::ensure!(
         !args.flag("distill"),
         "--distill requires the `xla` feature (the KD artifact runs on PJRT); \
@@ -298,6 +296,11 @@ fn train_cmd(args: &Args) -> anyhow::Result<()> {
     let classes = args.get_usize("classes", 16)?;
     let sp = args.get_f64("sp", 0.75)?;
     if args.flag("gradual") {
+        anyhow::ensure!(
+            args.get("load").is_none(),
+            "--load conflicts with --gradual (a restored mask need not nest \
+             in the gradual chain); start the schedule fresh"
+        );
         let schedule = match args.get("milestones") {
             Some(text) => rbgp::train_native::GradualSchedule::parse(text)?,
             None => rbgp::train_native::GradualSchedule::default(),
@@ -323,6 +326,7 @@ fn train_cmd(args: &Args) -> anyhow::Result<()> {
              {evicted} plans evicted, {} structures live",
             trainer.cache().structures().len()
         );
+        save_native_checkpoint(args, &trainer)?;
         return Ok(());
     }
     anyhow::ensure!(
@@ -335,9 +339,27 @@ fn train_cmd(args: &Args) -> anyhow::Result<()> {
         sp * 100.0
     );
     let mut trainer = NativeTrainer::new(in_dim, hidden, classes, Pattern::Rbgp4, sp, config)?;
+    if let Some(load) = args.get("load") {
+        trainer.load_checkpoint(std::path::Path::new(load))?;
+        println!("loaded checkpoint {load}");
+    }
     trainer.run()?;
     let (hits, misses) = trainer.cache().stats();
     println!("plan cache: {hits} hits, {misses} builds");
+    save_native_checkpoint(args, &trainer)?;
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn save_native_checkpoint(args: &Args, trainer: &NativeTrainer) -> anyhow::Result<()> {
+    if let Some(save) = args.get("save") {
+        trainer.save_checkpoint(std::path::Path::new(save))?;
+        println!(
+            "saved checkpoint {save} (structure {:016x}; serve it with \
+             `rbgp serve --model name={save}`)",
+            trainer.structure_hash()
+        );
+    }
     Ok(())
 }
 
@@ -350,14 +372,28 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
         0 => None,
         ms => Some(Duration::from_millis(ms)),
     };
+    let max_starvation = match args.get_u64("max-starvation-ms", 1000)? {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    };
     let base_config = ServerConfig {
         workers,
         queue_cap,
         default_deadline: deadline,
+        max_starvation,
         ..ServerConfig::default()
     };
+    let model_flags = args.get_all("model");
+    // One route per served model: the id clients submit under (None = the
+    // default model) plus that model's input width and class count.
+    let mut routes: Vec<(Option<String>, usize, usize)> = Vec::new();
     #[cfg(feature = "xla")]
     let server = {
+        anyhow::ensure!(
+            model_flags.is_empty(),
+            "--model requires the native backend (the xla path serves one AOT \
+             artifact); rebuild without `--features xla`"
+        );
         let dir = artifacts_dir(args);
         println!("starting inference server from {} …", dir.display());
         InferenceServer::start(
@@ -374,36 +410,85 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
         anyhow::ensure!(
             args.get("checkpoint").is_none(),
             "--checkpoint requires the `xla` feature (checkpoints target the AOT artifact); \
-             the native backend serves the demo model — rebuild with `--features xla`"
+             the native backend serves trained models via --model name=ckpt.json"
         );
-        println!("xla feature disabled — serving the native RBGP4 demo model from the plan cache");
-        let seed = args.get_u64("seed", 0)?;
         let batch = args.get_usize("batch", 16)?;
         // Divide the cores across the pool: N workers each running an
         // all-cores kernel would oversubscribe the CPU N-fold (and carry
         // N× the per-thread pack arenas in their detached plans).
         let threads = (rbgp::util::threadpool::default_threads() / workers).max(1);
-        // One plan cache for the whole pool: every worker's model resolves
-        // the same two layer plans (structure derived once).
+        // One plan cache for the whole pool and every registered model:
+        // plan builds scale with distinct structures, not models × workers.
         let cache = std::sync::Arc::new(rbgp::kernels::PlanCache::new());
-        let model_cache = std::sync::Arc::clone(&cache);
-        InferenceServer::start_model(
-            move || {
-                let mut model = NativeSparseModel::rbgp4_demo(
-                    16,
-                    batch,
-                    threads,
-                    seed,
-                    std::sync::Arc::clone(&model_cache),
+        if model_flags.is_empty() {
+            println!(
+                "xla feature disabled — serving the native RBGP4 demo model from the plan cache"
+            );
+            let seed = args.get_u64("seed", 0)?;
+            let model_cache = std::sync::Arc::clone(&cache);
+            InferenceServer::start_model(
+                move || {
+                    let mut model = NativeSparseModel::rbgp4_demo(
+                        16,
+                        batch,
+                        threads,
+                        seed,
+                        std::sync::Arc::clone(&model_cache),
+                    )?;
+                    model.warm()?;
+                    Ok(Box::new(model) as Box<dyn BatchModel>)
+                },
+                base_config,
+            )?
+        } else {
+            // Multi-model registry path: every `--model name=ckpt.json`
+            // joins the same pool; the first named model doubles as the
+            // default route.
+            let mut checkpoints = Vec::new();
+            for spec in &model_flags {
+                let (name, path) = spec.split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!("--model expects name=checkpoint.json, got '{spec}'")
+                })?;
+                let ckpt = rbgp::coordinator::NativeCheckpoint::load(std::path::Path::new(path))?;
+                println!(
+                    "model '{name}': {}→{}→{} from {path} (structure {:016x})",
+                    ckpt.in_dim,
+                    ckpt.hidden,
+                    ckpt.classes,
+                    ckpt.structure_hash()
+                );
+                checkpoints.push((name.to_string(), ckpt));
+            }
+            let (first_name, first) = &checkpoints[0];
+            let server = InferenceServer::start_model_as(
+                first_name,
+                first.serving_factory(batch, threads, std::sync::Arc::clone(&cache)),
+                base_config,
+            )?;
+            for (name, ckpt) in &checkpoints[1..] {
+                server.register_model(
+                    name,
+                    ckpt.serving_factory(batch, threads, std::sync::Arc::clone(&cache)),
                 )?;
-                model.warm()?;
-                Ok(Box::new(model) as Box<dyn BatchModel>)
-            },
-            base_config,
-        )?
+            }
+            for (name, ckpt) in &checkpoints {
+                routes.push((Some(name.clone()), ckpt.in_dim, ckpt.classes));
+            }
+            let (hits, misses) = cache.stats();
+            println!(
+                "registered {} models on one pool: {} structures live, \
+                 {misses} plan builds, {hits} cache hits",
+                checkpoints.len(),
+                cache.structures().len()
+            );
+            server
+        }
     };
+    if routes.is_empty() {
+        routes.push((None, server.in_dim, server.classes));
+    }
     println!(
-        "model: in_dim {}, classes {}, max batch {} × {} workers, queue cap {}",
+        "default model: in_dim {}, classes {}, max batch {} × {} workers, queue cap {}",
         server.in_dim,
         server.classes,
         server.batch,
@@ -414,13 +499,25 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
     std::thread::scope(|scope| {
         for c in 0..clients {
             let server = server.clone();
+            let routes = &routes;
             scope.spawn(move || {
-                let mut data = CifarLike::new(server.in_dim, server.classes, c as u64);
+                let mut data: Vec<CifarLike> = routes
+                    .iter()
+                    .map(|(_, in_dim, classes)| CifarLike::new(*in_dim, *classes, c as u64))
+                    .collect();
                 let per = total / clients;
-                for _ in 0..per {
-                    let b = data.test_batch(1);
-                    match server.infer(b.x) {
-                        Ok(logits) => assert_eq!(logits.len(), server.classes),
+                for r in 0..per {
+                    // Round-robin across the served models, offset per
+                    // client so mixed-model traffic hits every worker.
+                    let route = (c + r) % routes.len();
+                    let (model, _, classes) = &routes[route];
+                    let b = data[route].test_batch(1);
+                    let opts = match model {
+                        Some(m) => SubmitOptions::default().with_model(m.clone()),
+                        None => SubmitOptions::default(),
+                    };
+                    match server.infer_with(b.x, opts) {
+                        Ok(logits) => assert_eq!(logits.len(), *classes),
                         // Under a --deadline-ms budget, expiry is expected
                         // load-shedding, not a failure; rejected() reports it.
                         Err(ServeError::DeadlineExceeded { .. }) => {}
@@ -461,6 +558,20 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
             w.batches,
             w.occupancy() * 100.0
         );
+    }
+    if routes.len() > 1 {
+        for m in server.model_stats() {
+            println!(
+                "    model '{}': {} reqs in {} batches (occupancy {:.1}%, \
+                 {} deadline-rejected, {} errors)",
+                m.model,
+                m.requests,
+                m.batches,
+                m.occupancy() * 100.0,
+                m.rejected_deadline,
+                m.errors
+            );
+        }
     }
     server.shutdown();
     Ok(())

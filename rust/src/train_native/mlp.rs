@@ -107,6 +107,40 @@ impl MaskedMlp {
         self.mask = new_mask;
     }
 
+    /// Replace mask and parameters wholesale (checkpoint restore),
+    /// resetting momenta. Unlike [`MaskedMlp::tighten_mask`] the new mask
+    /// need not nest in the old one; off-mask weights are forced to zero
+    /// so the `w1 = w1 ⊙ mask` invariant survives arbitrary checkpoint
+    /// data.
+    pub fn load_params(
+        &mut self,
+        mask: Vec<f32>,
+        mut w1: Vec<f32>,
+        b1: Vec<f32>,
+        w2: Vec<f32>,
+        b2: Vec<f32>,
+    ) {
+        assert_eq!(mask.len(), self.h * self.d, "mask shape mismatch");
+        assert_eq!(w1.len(), self.h * self.d, "w1 shape mismatch");
+        assert_eq!(b1.len(), self.h, "b1 shape mismatch");
+        assert_eq!(w2.len(), self.c * self.h, "w2 shape mismatch");
+        assert_eq!(b2.len(), self.c, "b2 shape mismatch");
+        for (w, &m) in w1.iter_mut().zip(&mask) {
+            if m == 0.0 {
+                *w = 0.0;
+            }
+        }
+        self.mask = mask;
+        self.w1 = w1;
+        self.b1 = b1;
+        self.w2 = w2;
+        self.b2 = b2;
+        self.v_w1.fill(0.0);
+        self.v_b1.fill(0.0);
+        self.v_w2.fill(0.0);
+        self.v_b2.fill(0.0);
+    }
+
     /// All parameters flattened in a fixed order (`w1, b1, w2, b2`) — the
     /// bit-identity witness for determinism regression tests: two runs with
     /// one seed must agree on every one of these f32s exactly.

@@ -1,15 +1,16 @@
 //! Tiny command-line argument parser (no `clap` in the offline vendor set).
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, and positional arguments.
-//! Subcommand dispatch is done by the caller (`main.rs`) on the first
-//! positional token.
+//! A repeated `--key` accumulates every value in order ([`Args::get_all`]);
+//! the single-value accessors return the last occurrence. Subcommand
+//! dispatch is done by the caller (`main.rs`) on the first positional token.
 
 use std::collections::BTreeMap;
 
 /// Parsed arguments: named options plus positionals, in order.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
-    opts: BTreeMap<String, String>,
+    opts: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     positional: Vec<String>,
 }
@@ -27,9 +28,12 @@ impl Args {
             let t = &toks[i];
             if let Some(body) = t.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
-                    args.opts.insert(k.to_string(), v.to_string());
+                    args.opts.entry(k.to_string()).or_default().push(v.to_string());
                 } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
-                    args.opts.insert(body.to_string(), toks[i + 1].clone());
+                    args.opts
+                        .entry(body.to_string())
+                        .or_default()
+                        .push(toks[i + 1].clone());
                     i += 1;
                 } else {
                     args.flags.push(body.to_string());
@@ -60,8 +64,21 @@ impl Args {
         self.flags.iter().any(|f| f == name) || self.opts.contains_key(name)
     }
 
+    /// Last value of `--name` (repeated options: the final one wins).
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.opts.get(name).map(String::as_str)
+        self.opts
+            .get(name)
+            .and_then(|v| v.last())
+            .map(String::as_str)
+    }
+
+    /// Every value of a repeated `--name`, in appearance order (empty when
+    /// absent) — e.g. `serve --model a=a.json --model b=b.json`.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.opts
+            .get(name)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
     }
 
     pub fn get_str(&self, name: &str, default: &str) -> String {
@@ -149,6 +166,15 @@ mod tests {
         let a = parse("run --fast");
         assert!(a.flag("fast"));
         assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let a = parse("serve --model a=a.json --model b=b.json --workers 2");
+        assert_eq!(a.get_all("model"), vec!["a=a.json", "b=b.json"]);
+        assert_eq!(a.get("model"), Some("b=b.json"), "single-value get: last wins");
+        assert_eq!(a.get_all("nope"), Vec::<&str>::new());
+        assert_eq!(a.get_usize("workers", 0).unwrap(), 2);
     }
 
     #[test]

@@ -1,0 +1,390 @@
+//! Integration tests for the multi-model serving registry over the public
+//! API: several checkpoints served concurrently from one worker pool, all
+//! sharing one plan cache (builds scale with distinct structures, not
+//! models × workers); bit-identical logits against single-model serving;
+//! batches that never mix models; and `unregister_model` draining a model
+//! and evicting exactly its plan namespaces.
+//!
+//! These run on the default (native) build — no artifacts, no `xla`.
+
+use rbgp::coordinator::{
+    BatchModel, InferenceServer, NativeCheckpoint, NativeTrainer, ServeError, ServerConfig,
+    SubmitOptions, DEFAULT_MODEL,
+};
+use rbgp::kernels::plan::SparseMatrix;
+use rbgp::kernels::PlanCache;
+use rbgp::sparsity::memory::Pattern;
+use rbgp::train_native::{GradualSchedule, NativeTrainConfig};
+use std::sync::Arc;
+use std::time::Duration;
+
+const IN_DIM: usize = 64;
+const HIDDEN: usize = 64;
+const CLASSES: usize = 4;
+const BATCH: usize = 8;
+
+fn quick_config(seed: u64, steps: usize) -> NativeTrainConfig {
+    NativeTrainConfig {
+        steps,
+        batch: 16,
+        lr: 0.05,
+        seed,
+        ..NativeTrainConfig::default()
+    }
+}
+
+/// Train a small RBGP4-masked model for a few steps and snapshot it.
+fn trained_checkpoint(seed: u64) -> NativeCheckpoint {
+    let mut t = NativeTrainer::new(
+        IN_DIM,
+        HIDDEN,
+        CLASSES,
+        Pattern::Rbgp4,
+        0.75,
+        quick_config(seed, 5),
+    )
+    .unwrap()
+    .with_threads(1);
+    for s in 0..5 {
+        t.step(s);
+    }
+    t.checkpoint()
+}
+
+/// Deterministic per-(client, request) sample.
+fn sample(client: usize, req: usize) -> Vec<f32> {
+    (0..IN_DIM)
+        .map(|i| {
+            let v = (i * 31 + client * 7 + req * 13) % 23;
+            (v as f32 - 11.0) / 11.0
+        })
+        .collect()
+}
+
+/// Single-model reference logits on a private cache: forward the sample in
+/// slot 0 of a zero-padded batch, exactly as the pool's batcher does.
+fn reference_logits(ckpt: &NativeCheckpoint, x: &[f32]) -> Vec<f32> {
+    let mut model = ckpt
+        .serving_model(BATCH, 1, Arc::new(PlanCache::new()))
+        .unwrap();
+    let mut xb = vec![0.0f32; BATCH * IN_DIM];
+    xb[..IN_DIM].copy_from_slice(x);
+    model.forward(&xb).unwrap()[..CLASSES].to_vec()
+}
+
+#[test]
+fn two_models_share_one_pool_and_one_cache_with_bit_identical_logits() {
+    let ca = trained_checkpoint(1);
+    let cb = trained_checkpoint(2);
+    assert_ne!(
+        ca.structure_hash(),
+        cb.structure_hash(),
+        "different seeds sample different masks"
+    );
+
+    let cache = Arc::new(PlanCache::new());
+    let workers = 2;
+    let server = InferenceServer::start_model_as(
+        "a",
+        ca.serving_factory(BATCH, 1, Arc::clone(&cache)),
+        ServerConfig {
+            workers,
+            max_wait: Duration::from_millis(2),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    server
+        .register_model("b", cb.serving_factory(BATCH, 1, Arc::clone(&cache)))
+        .unwrap();
+    assert_eq!(server.models(), vec!["a".to_string(), "b".to_string()]);
+
+    // Mixed concurrent traffic: every response must be bit-identical to
+    // the single-model forward of its own checkpoint, regardless of which
+    // worker served it or what else was in flight.
+    let clients = 4;
+    let per_client = 12;
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let server = server.clone();
+            let (ca, cb) = (&ca, &cb);
+            scope.spawn(move || {
+                for r in 0..per_client {
+                    let x = sample(c, r);
+                    let (id, ckpt) = if (c + r) % 2 == 0 { ("a", ca) } else { ("b", cb) };
+                    let got = server
+                        .infer_with(x.clone(), SubmitOptions::default().with_model(id))
+                        .unwrap();
+                    assert_eq!(
+                        got,
+                        reference_logits(ckpt, &x),
+                        "model '{id}' logits diverged from single-model serving"
+                    );
+                }
+            });
+        }
+    });
+
+    // A request without a model id routes to the default ("a").
+    let x = sample(9, 9);
+    assert_eq!(server.infer(x.clone()).unwrap(), reference_logits(&ca, &x));
+
+    // The acceptance invariant: cache builds == number of distinct
+    // structures (two RBGP4 hidden layers + the shared dense classifier),
+    // NOT models × workers × layers.
+    let (hits, misses) = cache.stats();
+    assert_eq!(misses, 3, "one build per structure, pool- and model-wide");
+    // Guaranteed floor: the second worker's startup build of "a" (2 layer
+    // plans) and the register-time probe of "b" resolving the shared dense
+    // classifier all hit; lazy worker builds of "b" only add more.
+    assert!(hits >= 3, "warm resolves must hit the cache (got {hits} hits)");
+    assert_eq!(cache.structures().len(), 3);
+
+    // Per-model counters cover the traffic exactly.
+    let stats = server.model_stats();
+    assert_eq!(stats.len(), 2);
+    let total: usize = stats.iter().map(|m| m.requests).sum();
+    assert_eq!(total, clients * per_client + 1);
+    assert!(stats.iter().all(|m| m.batches >= 1));
+    server.shutdown();
+}
+
+#[test]
+fn unregister_drains_and_evicts_exactly_the_retired_namespace() {
+    let ca = trained_checkpoint(3);
+    let cb = trained_checkpoint(4);
+    let cache = Arc::new(PlanCache::new());
+    let server = InferenceServer::start_model_as(
+        "a",
+        ca.serving_factory(BATCH, 1, Arc::clone(&cache)),
+        ServerConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(1),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    server
+        .register_model("b", cb.serving_factory(BATCH, 1, Arc::clone(&cache)))
+        .unwrap();
+
+    // Serve some traffic on both so worker instances exist everywhere.
+    for r in 0..8 {
+        let x = sample(0, r);
+        server
+            .infer_with(x.clone(), SubmitOptions::default().with_model("b"))
+            .unwrap();
+        server
+            .infer_with(x, SubmitOptions::default().with_model("a"))
+            .unwrap();
+    }
+
+    let dense_w2 = SparseMatrix::dense(vec![0.0; CLASSES * HIDDEN], CLASSES, HIDDEN);
+    let plans_a = cache.structure_plan_count(ca.structure_hash());
+    let plans_w2 = cache.structure_plan_count(dense_w2.structure_hash());
+    assert!(plans_a >= 1 && plans_w2 >= 1);
+    let (_, evicted_before) = cache.eviction_stats();
+
+    let report = server.unregister_model("b").unwrap();
+    assert_eq!(report.model, "b");
+    // Exactly b's hidden-layer namespace dies; the dense classifier
+    // structure is shared with the surviving model and must be retained.
+    assert_eq!(report.evicted_structures, vec![cb.structure_hash()]);
+    assert_eq!(report.retained_structures, vec![dense_w2.structure_hash()]);
+    assert!(report.evicted_plans >= 1);
+    assert_eq!(
+        cache.structure_plan_count(cb.structure_hash()),
+        0,
+        "zero plans may linger for the retired structure"
+    );
+    assert_eq!(cache.structure_plan_count(ca.structure_hash()), plans_a);
+    assert_eq!(cache.structure_plan_count(dense_w2.structure_hash()), plans_w2);
+    let (_, evicted_after) = cache.eviction_stats();
+    assert_eq!(
+        evicted_after - evicted_before,
+        report.evicted_plans,
+        "report counters agree with the cache's own eviction accounting"
+    );
+
+    // b is gone; a is untouched.
+    match server.infer_with(sample(0, 0), SubmitOptions::default().with_model("b")) {
+        Err(ServeError::UnknownModel { model }) => assert_eq!(model, "b"),
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    let x = sample(1, 1);
+    assert_eq!(
+        server
+            .infer_with(x.clone(), SubmitOptions::default().with_model("a"))
+            .unwrap(),
+        reference_logits(&ca, &x)
+    );
+    server.shutdown();
+}
+
+/// A model that fails loudly if any foreign sample lands in its batch:
+/// every occupied row must start with this model's tag (padding rows are
+/// all-zero). Proves the batcher never co-flushes two models.
+struct TagModel {
+    tag: f32,
+    batch: usize,
+}
+
+impl BatchModel for TagModel {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn in_dim(&self) -> usize {
+        1
+    }
+    fn classes(&self) -> usize {
+        1
+    }
+    fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        for &v in x {
+            anyhow::ensure!(
+                v == 0.0 || v == self.tag,
+                "mixed-model flush: saw sample {v}, expected tag {} or padding",
+                self.tag
+            );
+        }
+        Ok(x.to_vec())
+    }
+}
+
+#[test]
+fn mixed_model_traffic_is_never_co_flushed() {
+    let server = InferenceServer::start_model_as(
+        "t1",
+        || Ok(Box::new(TagModel { tag: 1.0, batch: 4 }) as Box<dyn BatchModel>),
+        ServerConfig {
+            workers: 2,
+            // A real straggler window, so batches actually aggregate
+            // concurrent mixed-model submits.
+            max_wait: Duration::from_millis(3),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    server
+        .register_model("t2", || {
+            Ok(Box::new(TagModel { tag: 2.0, batch: 4 }) as Box<dyn BatchModel>)
+        })
+        .unwrap();
+
+    let clients = 6;
+    let per_client = 24;
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let server = server.clone();
+            scope.spawn(move || {
+                for r in 0..per_client {
+                    let (id, tag) = if (c + r) % 2 == 0 { ("t1", 1.0) } else { ("t2", 2.0) };
+                    let got = server
+                        .infer_with(vec![tag], SubmitOptions::default().with_model(id))
+                        .unwrap();
+                    assert_eq!(got, vec![tag]);
+                }
+            });
+        }
+    });
+    let stats = server.model_stats();
+    assert_eq!(stats.len(), 2);
+    for m in &stats {
+        assert_eq!(m.requests, clients * per_client / 2, "{stats:?}");
+        assert_eq!(m.errors, 0, "a co-flush would have errored: {stats:?}");
+    }
+    // Batching actually happened (not one request per flush everywhere),
+    // otherwise this test proves nothing about flush composition.
+    let (requests, batches) = server.counters();
+    assert_eq!(requests, clients * per_client);
+    assert!(batches <= requests, "{batches} batches for {requests} requests");
+    server.shutdown();
+}
+
+#[test]
+fn gradual_milestone_checkpoints_serve_side_by_side() {
+    // A gradual run's pre-milestone (dense-mask) and final (RBGP4)
+    // snapshots are different plan-cache namespaces of one trainer; both
+    // are served from one pool sharing the trainer's cache.
+    let schedule = GradualSchedule::from_fractions(vec![0.4]).unwrap();
+    let mut t = NativeTrainer::new_gradual(
+        IN_DIM,
+        HIDDEN,
+        CLASSES,
+        0.75,
+        &schedule,
+        quick_config(11, 20),
+    )
+    .unwrap()
+    .with_threads(1);
+    let dense_ckpt = t.checkpoint(); // before any milestone: dense mask
+    for s in 0..20 {
+        t.step_gradual(s).unwrap();
+    }
+    let final_ckpt = t.checkpoint();
+    assert_ne!(dense_ckpt.structure_hash(), final_ckpt.structure_hash());
+    assert_eq!(final_ckpt.structure_hash(), t.structure_hash());
+
+    let cache = Arc::clone(t.cache());
+    let server = InferenceServer::start_model_as(
+        "final",
+        t.checkpoint_factory(&final_ckpt, BATCH, 1),
+        ServerConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(1),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    server
+        .register_model("milestone-0", t.checkpoint_factory(&dense_ckpt, BATCH, 1))
+        .unwrap();
+
+    for r in 0..6 {
+        let x = sample(2, r);
+        assert_eq!(
+            server
+                .infer_with(x.clone(), SubmitOptions::default().with_model("final"))
+                .unwrap(),
+            reference_logits(&final_ckpt, &x)
+        );
+        assert_eq!(
+            server
+                .infer_with(x.clone(), SubmitOptions::default().with_model("milestone-0"))
+                .unwrap(),
+            reference_logits(&dense_ckpt, &x)
+        );
+    }
+
+    // Retiring the milestone model leaves zero plans in its namespace and
+    // does not disturb the final structure the trainer still uses.
+    let final_plans = cache.structure_plan_count(final_ckpt.structure_hash());
+    let report = server.unregister_model("milestone-0").unwrap();
+    assert_eq!(report.evicted_structures, vec![dense_ckpt.structure_hash()]);
+    assert_eq!(cache.structure_plan_count(dense_ckpt.structure_hash()), 0);
+    assert_eq!(
+        cache.structure_plan_count(final_ckpt.structure_hash()),
+        final_plans
+    );
+    assert_eq!(server.models(), vec!["final".to_string()]);
+    server.shutdown();
+}
+
+#[test]
+fn default_model_id_constant_routes_unnamed_traffic() {
+    let ca = trained_checkpoint(8);
+    let cache = Arc::new(PlanCache::new());
+    let server = InferenceServer::start_model(
+        ca.serving_factory(BATCH, 1, Arc::clone(&cache)),
+        ServerConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(server.models(), vec![DEFAULT_MODEL.to_string()]);
+    let x = sample(0, 0);
+    // Explicitly addressing the default id equals the unnamed route.
+    let named = server
+        .infer_with(x.clone(), SubmitOptions::default().with_model(DEFAULT_MODEL))
+        .unwrap();
+    assert_eq!(named, server.infer(x).unwrap());
+    server.shutdown();
+}

@@ -128,7 +128,7 @@ fn expired_deadlines_get_typed_error_not_batch_slots() {
     // Zero-deadline requests are expired by the time any worker pops them.
     let opts = SubmitOptions::default().with_deadline(Duration::ZERO);
     let receivers: Vec<_> = (0..5)
-        .map(|r| server.submit_with(sample(0, r), opts).unwrap())
+        .map(|r| server.submit_with(sample(0, r), opts.clone()).unwrap())
         .collect();
     for rx in receivers {
         match rx.recv().unwrap() {
@@ -145,6 +145,51 @@ fn expired_deadlines_get_typed_error_not_batch_slots() {
     assert_eq!(requests, 1, "expired requests are not counted as served");
     let occupied: usize = server.worker_stats().iter().map(|w| w.occupied_slots).sum();
     assert_eq!(occupied, 1, "expired requests never occupied a batch slot");
+    server.shutdown();
+}
+
+#[test]
+fn deadline_shorter_than_straggler_window_is_never_executed() {
+    // Acceptance regression for the deadline gap: a request popped *live*
+    // by a worker used to sit out the `max_wait` straggler window in
+    // `pending`, expire there, and then execute anyway — returning `Ok`
+    // past its deadline. The flush-time re-check must reject it instead.
+    let cache = Arc::new(PlanCache::new());
+    let server = demo_server(
+        77,
+        &cache,
+        ServerConfig {
+            workers: 1,
+            // Straggler window an order of magnitude longer than the
+            // request deadline: the pop happens while the deadline is
+            // live, the expiry happens inside the window.
+            max_wait: Duration::from_millis(400),
+            ..ServerConfig::default()
+        },
+    );
+    let rx = server
+        .submit_with(
+            sample(0, 0),
+            SubmitOptions::default().with_deadline(Duration::from_millis(40)),
+        )
+        .unwrap();
+    match rx.recv().unwrap() {
+        Err(ServeError::DeadlineExceeded { waited }) => {
+            assert!(
+                waited >= Duration::from_millis(40),
+                "rejected before its deadline? waited {waited:?}"
+            );
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    let (requests, batches) = server.counters();
+    assert_eq!(requests, 0, "an expired request must never be served");
+    assert_eq!(batches, 0, "nothing to flush once the lone request expired");
+    assert_eq!(server.rejected(), (0, 1));
+    let occupied: usize = server.worker_stats().iter().map(|w| w.occupied_slots).sum();
+    assert_eq!(occupied, 0, "expired requests never occupy a batch slot");
+    // The pool is still healthy for live traffic afterwards.
+    assert_eq!(server.infer(sample(0, 1)).unwrap().len(), CLASSES);
     server.shutdown();
 }
 
