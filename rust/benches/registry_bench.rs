@@ -11,21 +11,37 @@
 //! builds, which must equal the number of **distinct structures**
 //! (`models + 1`), not models × workers × layers.
 //!
+//! Two **skewed-traffic** scenarios ride along:
+//!
+//! * `skew.queue` — the acceptance check for the per-model queue index:
+//!   one hot model piles `depth` entries in front of a handful of cold
+//!   entries, and the bench times `pop_model_until("cold", …)` directly.
+//!   With the O(depth) scan this cost grew linearly in the hot backlog;
+//!   with the dual-view index the per-pop time must be independent of
+//!   depth (the bench asserts the deep/shallow ratio stays far below the
+//!   depth ratio).
+//! * `skew.serving` — a 1-hot/1-cold pool under ~8:1 offered skew with a
+//!   `FairShare(0.5)` quota on the hot model: reports cold-model latency
+//!   percentiles, worker steal counts and quota rejections, so admission
+//!   and work-stealing regressions are visible per-PR.
+//!
 //! Results are written to `BENCH_registry.json` (in the cargo package
 //! root, where `cargo bench` runs) so future multi-tenant PRs — cache
-//! sharding, per-model admission control, NUMA-aware placement — can diff
-//! against this trajectory the same way serving PRs diff against
-//! `BENCH_server.json`.
+//! sharding, NUMA-aware placement — can diff against this trajectory the
+//! same way serving PRs diff against `BENCH_server.json`.
 //!
 //! `cargo bench --bench registry_bench` (RBGP_BENCH_FAST=1 quick pass)
 
+use rbgp::coordinator::serving::queue::{Priority, QueuedRequest, RequestQueue};
+use rbgp::coordinator::serving::registry::ModelClaim;
 use rbgp::coordinator::{
-    BatchModel, InferenceServer, NativeSparseModel, ServerConfig, SubmitOptions,
+    BatchModel, InferenceServer, ModelQuota, NativeSparseModel, ServeError, ServerConfig,
+    SubmitOptions,
 };
 use rbgp::data::CifarLike;
 use rbgp::kernels::PlanCache;
 use rbgp::util::json::Json;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 const OUT_PATH: &str = "BENCH_registry.json";
@@ -175,6 +191,143 @@ fn run_load(models: usize, total: usize) -> Row {
     }
 }
 
+/// One skewed-queue measurement: `hot_depth` hot entries queued in front
+/// of `cold_pops` cold entries, then every cold entry popped through the
+/// model-filtered path. Returns nanoseconds per cold pop.
+fn bench_skewed_queue(hot_depth: usize, cold_pops: usize) -> f64 {
+    let q = RequestQueue::new(hot_depth + cold_pops, Some(Duration::from_secs(3600)));
+    let mut rxs = Vec::with_capacity(hot_depth + cold_pops);
+    let mut push = |model: &str, id: usize| {
+        let (tx, rx) = mpsc::channel();
+        q.push(
+            QueuedRequest {
+                x: vec![id as f32],
+                enqueued: Instant::now(),
+                deadline: None,
+                respond: tx,
+                claim: ModelClaim::detached(model, BATCH, 1, 1),
+            },
+            Priority::Normal,
+            None,
+        )
+        .expect("bench queue sized for every push");
+        rxs.push(rx);
+    };
+    for i in 0..hot_depth {
+        push("hot", i);
+    }
+    // Cold entries arrive *behind* the hot backlog: a class-FIFO scan
+    // would walk the full hot depth for every one of these pops.
+    for i in 0..cold_pops {
+        push("cold", hot_depth + i);
+    }
+    let t0 = Instant::now();
+    for _ in 0..cold_pops {
+        let r = q
+            .pop_model_until("cold", Instant::now() + Duration::from_millis(100))
+            .expect("cold backlog is non-empty");
+        assert_eq!(r.claim.id(), "cold");
+    }
+    let per_pop_ns = t0.elapsed().as_nanos() as f64 / cold_pops as f64;
+    assert_eq!(q.model_backlog("cold"), 0);
+    assert_eq!(q.model_backlog("hot"), hot_depth);
+    q.check_invariants();
+    per_pop_ns
+}
+
+struct SkewServingRow {
+    hot_requests: usize,
+    cold_requests: usize,
+    cold_p50_ms: f64,
+    cold_p95_ms: f64,
+    steals: usize,
+    quota_rejected: usize,
+    occupancy: f64,
+}
+
+/// Serving under ~8:1 hot/cold skew with a fair-share quota on the hot
+/// model: cold latency, steals and quota rejections are the trajectory.
+fn run_skew_serving(hot_total: usize) -> SkewServingRow {
+    let cache = Arc::new(PlanCache::new());
+    let server = InferenceServer::start_model_as(
+        "hot",
+        demo_factory(0, Arc::clone(&cache)),
+        ServerConfig {
+            workers: WORKERS,
+            queue_cap: 64,
+            max_wait: Duration::from_millis(2),
+            model_quota: ModelQuota::FairShare(0.5),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("server start");
+    server
+        .register_model_with_quota("cold", ModelQuota::Unlimited, demo_factory(1, Arc::clone(&cache)))
+        .expect("register cold model");
+
+    let hot_clients = CLIENTS - 1;
+    // What the closed-loop clients actually send (integer division), not
+    // the offered figure — the trajectory must record reality.
+    let hot_sent = hot_clients * (hot_total / hot_clients);
+    let cold_total = (hot_total / 8).max(8);
+    let mut cold_lat_ms: Vec<f64> = Vec::with_capacity(cold_total);
+    std::thread::scope(|scope| {
+        for c in 0..hot_clients {
+            let server = server.clone();
+            scope.spawn(move || {
+                let mut data = CifarLike::new(server.in_dim, server.classes, 300 + c as u64);
+                let mut sent = 0usize;
+                while sent < hot_total / hot_clients {
+                    let b = data.test_batch(1);
+                    match server.infer_with(b.x, SubmitOptions::default().with_model("hot")) {
+                        Ok(logits) => {
+                            assert_eq!(logits.len(), server.classes);
+                            sent += 1;
+                        }
+                        // Admission backpressure is the quota working as
+                        // intended under skew: back off and retry.
+                        Err(ServeError::ModelQuotaExceeded { .. })
+                        | Err(ServeError::QueueFull { .. }) => std::thread::yield_now(),
+                        Err(e) => panic!("hot client failed: {e}"),
+                    }
+                }
+            });
+        }
+        // One cold client trickles requests through the same pool and
+        // records its own latencies.
+        let server_cold = server.clone();
+        let cold_lat_ms = &mut cold_lat_ms;
+        scope.spawn(move || {
+            let mut data = CifarLike::new(server_cold.in_dim, server_cold.classes, 999);
+            for _ in 0..cold_total {
+                let b = data.test_batch(1);
+                let t0 = Instant::now();
+                let logits = server_cold
+                    .infer_with(b.x, SubmitOptions::default().with_model("cold"))
+                    .expect("cold traffic must never be starved or rejected");
+                assert_eq!(logits.len(), server_cold.classes);
+                cold_lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+    });
+
+    cold_lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| cold_lat_ms[((p / 100.0 * (cold_lat_ms.len() - 1) as f64) as usize).min(cold_lat_ms.len() - 1)];
+    let stats = server.latency_stats().expect("latency samples");
+    let row = SkewServingRow {
+        hot_requests: hot_sent,
+        cold_requests: cold_lat_ms.len(),
+        cold_p50_ms: pct(50.0),
+        cold_p95_ms: pct(95.0),
+        steals: server.steals(),
+        quota_rejected: server.rejected_quota(),
+        occupancy: stats.occupancy,
+    };
+    server.shutdown();
+    row
+}
+
 fn main() {
     let fast = std::env::var("RBGP_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
     let total = if fast { 256 } else { 4096 };
@@ -190,6 +343,43 @@ fn main() {
         rows.push(row);
     }
 
+    // Skewed-queue acceptance: per-pop cost for a cold model must be
+    // independent of how deep the hot model has piled the shared queue.
+    let (shallow_depth, deep_depth, cold_pops) =
+        if fast { (256, 2048, 64) } else { (512, 8192, 64) };
+    let shallow_ns = bench_skewed_queue(shallow_depth, cold_pops);
+    let deep_ns = bench_skewed_queue(deep_depth, cold_pops);
+    let ratio = deep_ns / shallow_ns.max(1e-9);
+    let depth_ratio = deep_depth as f64 / shallow_depth as f64;
+    println!(
+        "\nskewed queue: cold pop behind {shallow_depth}-deep hot backlog {shallow_ns:>8.0} ns, \
+         behind {deep_depth}-deep {deep_ns:>8.0} ns (ratio {ratio:.2}, depth ratio {depth_ratio:.0})"
+    );
+    // Threshold well below the depth ratio: an O(depth) scan approaches
+    // `depth_ratio` (it can never *reach* it with a constant term, so a
+    // threshold equal to it would be vacuous), while the index keeps the
+    // ratio near 1 — depth_ratio/2 separates the two regimes in both the
+    // fast and full profiles.
+    assert!(
+        ratio < depth_ratio / 2.0,
+        "cold pops scale with hot queue depth (ratio {ratio:.2} vs depth ratio \
+         {depth_ratio:.0}): the per-model index is not O(popped) anymore"
+    );
+
+    let skew_total = if fast { 192 } else { 2048 };
+    let skew = run_skew_serving(skew_total);
+    println!(
+        "skewed serving: {} hot + {} cold requests — cold p50 {:.3} ms p95 {:.3} ms, \
+         {} steals, {} quota rejections, occupancy {:.1}%",
+        skew.hot_requests,
+        skew.cold_requests,
+        skew.cold_p50_ms,
+        skew.cold_p95_ms,
+        skew.steals,
+        skew.quota_rejected,
+        skew.occupancy * 100.0
+    );
+
     let mut doc = Json::obj();
     let mut meta = Json::obj();
     meta.set("batch", BATCH)
@@ -198,12 +388,34 @@ fn main() {
         .set("clients", CLIENTS)
         .set("requests_per_point", total)
         .set("fast_mode", fast);
-    doc.set("bench", "registry_bench").set("config", meta).set(
-        "rows",
-        Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
-    );
+    let mut skew_queue = Json::obj();
+    skew_queue
+        .set("cold_pops", cold_pops)
+        .set("shallow_depth", shallow_depth)
+        .set("shallow_per_pop_ns", shallow_ns)
+        .set("deep_depth", deep_depth)
+        .set("deep_per_pop_ns", deep_ns)
+        .set("deep_vs_shallow_ratio", ratio);
+    let mut skew_serving = Json::obj();
+    skew_serving
+        .set("hot_requests", skew.hot_requests)
+        .set("cold_requests", skew.cold_requests)
+        .set("cold_p50_ms", skew.cold_p50_ms)
+        .set("cold_p95_ms", skew.cold_p95_ms)
+        .set("steals", skew.steals)
+        .set("quota_rejected", skew.quota_rejected)
+        .set("occupancy", skew.occupancy);
+    let mut skew_doc = Json::obj();
+    skew_doc.set("queue", skew_queue).set("serving", skew_serving);
+    doc.set("bench", "registry_bench")
+        .set("config", meta)
+        .set(
+            "rows",
+            Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
+        )
+        .set("skew", skew_doc);
     match std::fs::write(OUT_PATH, doc.to_string_pretty()) {
-        Ok(()) => println!("\nwrote {OUT_PATH} ({} rows)", rows.len()),
+        Ok(()) => println!("\nwrote {OUT_PATH} ({} rows + skew)", rows.len()),
         Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),
     }
 }

@@ -133,6 +133,7 @@ struct WorkerCounters {
     occupied_slots: AtomicUsize,
     batch_slots: AtomicUsize,
     errors: AtomicUsize,
+    steals: AtomicUsize,
 }
 
 /// Snapshot of one worker's counters.
@@ -149,6 +150,9 @@ pub struct WorkerStats {
     pub batch_slots: usize,
     /// Batch executions that failed.
     pub errors: usize,
+    /// Straggler windows this worker cut short to serve another model's
+    /// backlog instead of idling (work steals).
+    pub steals: usize,
 }
 
 impl WorkerStats {
@@ -197,6 +201,7 @@ struct ModelTally {
     occupied_slots: usize,
     batch_slots: usize,
     rejected_deadline: usize,
+    rejected_quota: usize,
     errors: usize,
 }
 
@@ -215,6 +220,9 @@ pub struct ModelStats {
     pub batch_slots: usize,
     /// Requests for this model rejected because their deadline expired.
     pub rejected_deadline: usize,
+    /// Submits for this model rejected at admission because its queue
+    /// quota was already saturated.
+    pub rejected_quota: usize,
     /// Batch executions for this model that failed.
     pub errors: usize,
 }
@@ -241,6 +249,7 @@ pub struct ServingMetrics {
     models: Mutex<HashMap<String, ModelTally>>,
     rejected_full: AtomicUsize,
     rejected_deadline: AtomicUsize,
+    rejected_quota: AtomicUsize,
     peak_queue_depth: AtomicUsize,
 }
 
@@ -253,6 +262,7 @@ impl ServingMetrics {
             models: Mutex::new(HashMap::new()),
             rejected_full: AtomicUsize::new(0),
             rejected_deadline: AtomicUsize::new(0),
+            rejected_quota: AtomicUsize::new(0),
             peak_queue_depth: AtomicUsize::new(0),
         }
     }
@@ -281,12 +291,22 @@ impl ServingMetrics {
         self.workers[worker].errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One straggler window `worker` cut short to serve another model's
+    /// backlog (a work steal).
+    pub(crate) fn record_steal(&self, worker: usize) {
+        self.workers[worker].steals.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub(crate) fn record_rejected_full(&self) {
         self.rejected_full.fetch_add(1, Ordering::Relaxed);
     }
 
     pub(crate) fn record_rejected_deadline(&self) {
         self.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_rejected_quota(&self) {
+        self.rejected_quota.fetch_add(1, Ordering::Relaxed);
     }
 
     /// One executed batch attributed to `model`: `occupied` answered
@@ -305,6 +325,13 @@ impl ServingMetrics {
             .entry(model.to_string())
             .or_default()
             .rejected_deadline += 1;
+    }
+
+    pub(crate) fn record_model_rejected_quota(&self, model: &str) {
+        lock_recover(&self.models)
+            .entry(model.to_string())
+            .or_default()
+            .rejected_quota += 1;
     }
 
     pub(crate) fn record_model_error(&self, model: &str) {
@@ -336,6 +363,21 @@ impl ServingMetrics {
             self.rejected_full.load(Ordering::Relaxed),
             self.rejected_deadline.load(Ordering::Relaxed),
         )
+    }
+
+    /// Submits rejected at admission because the target model's queue
+    /// quota was saturated, all models.
+    pub fn rejected_quota(&self) -> usize {
+        self.rejected_quota.load(Ordering::Relaxed)
+    }
+
+    /// Straggler windows cut short to serve another model's backlog,
+    /// summed over workers.
+    pub fn steals(&self) -> usize {
+        self.workers
+            .iter()
+            .map(|w| w.steals.load(Ordering::Relaxed))
+            .sum()
     }
 
     pub fn peak_queue_depth(&self) -> usize {
@@ -381,6 +423,7 @@ impl ServingMetrics {
                 occupied_slots: t.occupied_slots,
                 batch_slots: t.batch_slots,
                 rejected_deadline: t.rejected_deadline,
+                rejected_quota: t.rejected_quota,
                 errors: t.errors,
             })
             .collect();
@@ -400,6 +443,7 @@ impl ServingMetrics {
                 occupied_slots: w.occupied_slots.load(Ordering::Relaxed),
                 batch_slots: w.batch_slots.load(Ordering::Relaxed),
                 errors: w.errors.load(Ordering::Relaxed),
+                steals: w.steals.load(Ordering::Relaxed),
             })
             .collect()
     }
@@ -466,11 +510,17 @@ mod tests {
         m.record_rejected_full();
         m.record_rejected_deadline();
         m.record_rejected_deadline();
+        m.record_rejected_quota();
+        m.record_steal(0);
+        m.record_steal(1);
+        m.record_steal(1);
         m.observe_queue_depth(5);
         m.observe_queue_depth(3);
 
         assert_eq!(m.totals(), (11, 2));
         assert_eq!(m.rejected(), (1, 2));
+        assert_eq!(m.rejected_quota(), 1);
+        assert_eq!(m.steals(), 3);
         assert_eq!(m.peak_queue_depth(), 5);
         assert!((m.occupancy() - 11.0 / 16.0).abs() < 1e-12);
 
@@ -478,6 +528,8 @@ mod tests {
         assert_eq!(ws.len(), 2);
         assert_eq!(ws[0].requests, 3);
         assert_eq!(ws[0].batches, 1);
+        assert_eq!(ws[0].steals, 1);
+        assert_eq!(ws[1].steals, 2);
         assert!((ws[0].occupancy() - 3.0 / 8.0).abs() < 1e-12);
         assert_eq!(ws[1].errors, 0);
         assert!((ws[1].occupancy() - 1.0).abs() < 1e-12);
@@ -494,6 +546,8 @@ mod tests {
         m.record_model_flush("a", 8, 8);
         m.record_model_flush("b", 2, 4);
         m.record_model_rejected_deadline("b");
+        m.record_model_rejected_quota("b");
+        m.record_model_rejected_quota("b");
         m.record_model_error("a");
         let stats = m.model_stats();
         assert_eq!(stats.len(), 2);
@@ -502,8 +556,10 @@ mod tests {
         assert_eq!(stats[0].batches, 2);
         assert!((stats[0].occupancy() - 11.0 / 16.0).abs() < 1e-12);
         assert_eq!(stats[0].errors, 1);
+        assert_eq!(stats[0].rejected_quota, 0);
         assert_eq!(stats[1].model, "b");
         assert_eq!(stats[1].rejected_deadline, 1);
+        assert_eq!(stats[1].rejected_quota, 2);
         assert!((stats[1].occupancy() - 0.5).abs() < 1e-12);
     }
 

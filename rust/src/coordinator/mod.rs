@@ -16,8 +16,8 @@ pub mod trainer;
 pub use config::TrainConfig;
 pub use metrics::{LatencyStats, Metrics, ModelStats, ServingMetrics, WorkerStats};
 pub use serving::{
-    BatchModel, InferenceServer, NativeSparseModel, Priority, ServeError, ServerConfig,
-    SubmitOptions, UnregisterReport, DEFAULT_MODEL,
+    BatchModel, InferenceServer, ModelQuota, NativeSparseModel, Priority, ServeError,
+    ServerConfig, SubmitOptions, UnregisterReport, DEFAULT_MODEL,
 };
 pub use trainer::{GradualReport, MilestoneRecord, NativeCheckpoint, NativeTrainer};
 #[cfg(feature = "xla")]

@@ -53,12 +53,11 @@ pub mod registry;
 mod worker;
 
 pub use backend::{BatchModel, NativeSparseModel};
-pub use queue::{Priority, SubmitOptions};
-pub use registry::{UnregisterReport, DEFAULT_MODEL};
+pub use queue::{ModelPop, Priority, QueuedRequest, RequestQueue, SubmitOptions};
+pub use registry::{ModelClaim, UnregisterReport, DEFAULT_MODEL};
 
 use crate::coordinator::metrics::{LatencyStats, ModelStats, ServingMetrics, WorkerStats};
 use crate::util::lock_recover;
-use queue::{QueuedRequest, RequestQueue};
 use registry::{ModelFactory, ModelInfo, ModelRegistry, ModelSpec};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
@@ -71,6 +70,11 @@ use std::time::{Duration, Instant};
 pub enum ServeError {
     /// The bounded request queue is at capacity; retry later or shed load.
     QueueFull { cap: usize },
+    /// The target model already has `quota` requests queued (its resolved
+    /// [`ModelQuota`]); the submit was rejected at admission so this model
+    /// cannot exhaust the queue capacity other models share. Distinct
+    /// from [`ServeError::QueueFull`]: only this model must back off.
+    ModelQuotaExceeded { model: String, quota: usize },
     /// The request's deadline expired before a worker could serve it.
     DeadlineExceeded { waited: Duration },
     /// The sample width does not match the target model's input dimension.
@@ -90,6 +94,12 @@ impl std::fmt::Display for ServeError {
             ServeError::QueueFull { cap } => {
                 write!(f, "request queue full (capacity {cap}): backpressure")
             }
+            ServeError::ModelQuotaExceeded { model, quota } => {
+                write!(
+                    f,
+                    "model '{model}' is at its queue quota ({quota} queued): backpressure"
+                )
+            }
             ServeError::DeadlineExceeded { waited } => {
                 write!(f, "deadline exceeded after {:.3} ms in queue", waited.as_secs_f64() * 1e3)
             }
@@ -106,6 +116,42 @@ impl std::fmt::Display for ServeError {
 }
 
 impl std::error::Error for ServeError {}
+
+/// Per-model admission quota: the most requests one model may have
+/// *queued* (accepted but not yet popped by a worker) at a time. With the
+/// default [`ModelQuota::Unlimited`] a single hot model can fill the
+/// entire bounded queue and starve every other model's submits into
+/// [`ServeError::QueueFull`]; a quota converts that into per-model
+/// backpressure ([`ServeError::ModelQuotaExceeded`]) while cold models
+/// keep submitting. Resolved to an absolute limit against the queue
+/// capacity at registration time ([`ModelQuota::limit`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum ModelQuota {
+    /// No per-model bound; only the shared queue capacity applies.
+    #[default]
+    Unlimited,
+    /// At most this many queued requests (clamped to ≥ 1 — a model with
+    /// zero admission could never be served at all).
+    Absolute(usize),
+    /// At most this fraction of the queue capacity (clamped to `[0, 1]`,
+    /// at least 1 slot). `FairShare(0.5)` leaves half the queue to the
+    /// other models no matter how hot this one runs.
+    FairShare(f64),
+}
+
+impl ModelQuota {
+    /// Resolve to an absolute queued-request limit against `queue_cap`;
+    /// `None` means unlimited.
+    pub fn limit(&self, queue_cap: usize) -> Option<usize> {
+        match *self {
+            ModelQuota::Unlimited => None,
+            ModelQuota::Absolute(n) => Some(n.max(1)),
+            ModelQuota::FairShare(f) => {
+                Some(((f.clamp(0.0, 1.0) * queue_cap as f64).floor() as usize).max(1))
+            }
+        }
+    }
+}
 
 /// Server tuning knobs.
 #[derive(Clone, Debug)]
@@ -129,6 +175,11 @@ pub struct ServerConfig {
     /// higher-class load. `None` restores strict priority (Low can starve
     /// forever).
     pub max_starvation: Option<Duration>,
+    /// Default per-model admission quota, applied to the initial model and
+    /// to every [`InferenceServer::register_model`] registration;
+    /// [`InferenceServer::register_model_with_quota`] overrides it per
+    /// model.
+    pub model_quota: ModelQuota,
 }
 
 impl Default for ServerConfig {
@@ -140,6 +191,7 @@ impl Default for ServerConfig {
             queue_cap: 1024,
             default_deadline: None,
             max_starvation: Some(Duration::from_secs(1)),
+            model_quota: ModelQuota::Unlimited,
         }
     }
 }
@@ -150,6 +202,8 @@ struct ServerInner {
     registry: Arc<ModelRegistry>,
     workers: usize,
     default_deadline: Option<Duration>,
+    /// Default admission quota for models registered after startup.
+    model_quota: ModelQuota,
     handles: Mutex<Vec<thread::JoinHandle<()>>>,
 }
 
@@ -221,7 +275,12 @@ impl InferenceServer {
         // The default model's info (geometry, plan namespaces) is reported
         // by the first worker instance below — before this constructor
         // returns, so no submit can observe the entry without it.
-        let default_entry = registry.register(default_id, Arc::new(factory), None)?;
+        let default_entry = registry.register(
+            default_id,
+            Arc::new(factory),
+            None,
+            config.model_quota.limit(queue.capacity()),
+        )?;
         // Liveness counter for the whole pool: each worker's context
         // decrements it on exit (including panic unwind); the last one out
         // closes the queue and fails pending requests with `Stopped`.
@@ -322,6 +381,7 @@ impl InferenceServer {
                 registry,
                 workers,
                 default_deadline: config.default_deadline,
+                model_quota: config.model_quota,
                 handles: Mutex::new(handles),
             }),
             in_dim,
@@ -330,7 +390,8 @@ impl InferenceServer {
         })
     }
 
-    /// Register another model with the running pool under `id`. The
+    /// Register another model with the running pool under `id`, admitted
+    /// under the server's default [`ServerConfig::model_quota`]. The
     /// factory is probed once on the calling thread — validating it,
     /// capturing geometry and plan namespaces, and (for factories that
     /// warm) pre-building the structure's plans in the shared cache so
@@ -339,6 +400,22 @@ impl InferenceServer {
     /// worker-side build failure degrades that worker's answers for this
     /// model to [`ServeError::Backend`] instead of killing the pool.
     pub fn register_model<F>(&self, id: &str, factory: F) -> anyhow::Result<()>
+    where
+        F: Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static,
+    {
+        self.register_model_with_quota(id, self.inner.model_quota, factory)
+    }
+
+    /// [`InferenceServer::register_model`] with an explicit per-model
+    /// admission quota overriding the server default — e.g. a known-hot
+    /// model capped to [`ModelQuota::FairShare`] of the queue so batch
+    /// tenants cannot starve interactive ones out of queue capacity.
+    pub fn register_model_with_quota<F>(
+        &self,
+        id: &str,
+        quota: ModelQuota,
+        factory: F,
+    ) -> anyhow::Result<()>
     where
         F: Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static,
     {
@@ -367,7 +444,12 @@ impl InferenceServer {
             cache: probe.plan_cache(),
         };
         drop(probe);
-        self.inner.registry.register(id, factory, Some(info))?;
+        self.inner.registry.register(
+            id,
+            factory,
+            Some(info),
+            quota.limit(self.inner.queue.capacity()),
+        )?;
         Ok(())
     }
 
@@ -425,7 +507,8 @@ impl InferenceServer {
     }
 
     /// Submit one sample with explicit priority / deadline / target model.
-    /// Backpressure ([`ServeError::QueueFull`]), shutdown
+    /// Backpressure — shared ([`ServeError::QueueFull`]) or per-model
+    /// ([`ServeError::ModelQuotaExceeded`]) — shutdown
     /// ([`ServeError::Stopped`]), an unknown model id
     /// ([`ServeError::UnknownModel`]) and a width mismatch against the
     /// *target model's* input dimension are reported synchronously;
@@ -440,6 +523,7 @@ impl InferenceServer {
         if x.len() != want {
             return Err(ServeError::WrongInputWidth { got: x.len(), want });
         }
+        let quota = claim.quota_limit();
         let now = Instant::now();
         let deadline = opts
             .deadline
@@ -455,12 +539,18 @@ impl InferenceServer {
                 claim,
             },
             opts.priority,
+            quota,
         );
         let depth = match depth {
             Ok(d) => d,
             Err(e) => {
-                if matches!(e, ServeError::QueueFull { .. }) {
-                    self.inner.metrics.record_rejected_full();
+                match &e {
+                    ServeError::QueueFull { .. } => self.inner.metrics.record_rejected_full(),
+                    ServeError::ModelQuotaExceeded { model, .. } => {
+                        self.inner.metrics.record_rejected_quota();
+                        self.inner.metrics.record_model_rejected_quota(model);
+                    }
+                    _ => {}
                 }
                 return Err(e);
             }
@@ -502,9 +592,29 @@ impl InferenceServer {
         self.inner.metrics.rejected()
     }
 
+    /// Submits rejected at admission because the target model's queue
+    /// quota was saturated ([`ServeError::ModelQuotaExceeded`]), all
+    /// models; `model_stats` has the per-model split.
+    pub fn rejected_quota(&self) -> usize {
+        self.inner.metrics.rejected_quota()
+    }
+
+    /// Straggler windows workers cut short to serve another model's
+    /// backlog instead of idling (work steals), summed over workers;
+    /// `worker_stats` has the per-worker split.
+    pub fn steals(&self) -> usize {
+        self.inner.metrics.steals()
+    }
+
     /// Current queue depth (requests waiting, not yet claimed by a worker).
     pub fn queue_depth(&self) -> usize {
         self.inner.queue.len()
+    }
+
+    /// Exact queued (not yet popped) request count for one model — what
+    /// its admission quota is compared against.
+    pub fn model_queue_depth(&self, model: &str) -> usize {
+        self.inner.queue.model_backlog(model)
     }
 
     /// Deepest queue observed at submit time since startup.
@@ -749,6 +859,13 @@ mod tests {
     fn gated_server(
         cap: usize,
     ) -> (InferenceServer, mpsc::Sender<()>, Arc<Mutex<Vec<f32>>>) {
+        gated_server_with(cap, ModelQuota::Unlimited)
+    }
+
+    fn gated_server_with(
+        cap: usize,
+        quota: ModelQuota,
+    ) -> (InferenceServer, mpsc::Sender<()>, Arc<Mutex<Vec<f32>>>) {
         let (gate_tx, gate_rx) = mpsc::channel::<()>();
         let log = Arc::new(Mutex::new(Vec::new()));
         let slot = Arc::new(Mutex::new(Some(gate_rx)));
@@ -768,6 +885,7 @@ mod tests {
                 // These tests assert *strict* class order; age promotion
                 // would reorder under a slow scheduler.
                 max_starvation: None,
+                model_quota: quota,
                 ..ServerConfig::default()
             },
         )
@@ -813,6 +931,43 @@ mod tests {
         // Graceful shutdown: queue rejects new work afterwards.
         server.shutdown();
         assert!(matches!(server.submit(vec![6.0]), Err(ServeError::Stopped)));
+    }
+
+    #[test]
+    fn model_quota_rejects_typed_and_counts() {
+        // One gated worker, default model capped to 2 queued requests on
+        // a queue with room for far more.
+        let (server, gate_tx, log) = gated_server_with(64, ModelQuota::Absolute(2));
+        // Occupy the worker so subsequent submits stay queued.
+        let rx0 = server.submit(vec![0.0]).unwrap();
+        while log.lock().unwrap().is_empty() {
+            std::thread::yield_now();
+        }
+        let rx1 = server.submit(vec![1.0]).unwrap();
+        let rx2 = server.submit(vec![2.0]).unwrap();
+        assert_eq!(server.model_queue_depth(DEFAULT_MODEL), 2);
+        // Third queued submit for the model: typed per-model rejection —
+        // the shared queue (cap 64) is nowhere near full.
+        match server.submit(vec![3.0]) {
+            Err(ServeError::ModelQuotaExceeded { model, quota }) => {
+                assert_eq!((model.as_str(), quota), (DEFAULT_MODEL, 2));
+            }
+            other => panic!("expected ModelQuotaExceeded, got {:?}", other.map(|_| ())),
+        }
+        assert_eq!(server.rejected_quota(), 1);
+        assert_eq!(server.rejected(), (0, 0), "not a QueueFull rejection");
+        let ms = server.model_stats();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].rejected_quota, 1);
+        // Release the worker: the accepted requests all serve, and quota
+        // frees as the queue drains.
+        drop(gate_tx);
+        for rx in [rx0, rx1, rx2] {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        assert_eq!(server.model_queue_depth(DEFAULT_MODEL), 0);
+        assert_eq!(server.infer(vec![4.0]).unwrap(), vec![4.0]);
+        server.shutdown();
     }
 
     /// A model that panics on a poison-pill sample — simulates a worker

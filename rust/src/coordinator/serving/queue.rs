@@ -4,6 +4,12 @@
 //!   capacity; an over-capacity submit is rejected with
 //!   [`ServeError::QueueFull`] so overload surfaces as backpressure at the
 //!   caller instead of unbounded memory growth and latency collapse.
+//! * **Admission-controlled per model** — a push may carry a resolved
+//!   per-model quota (max queued entries for that model); a submit past it
+//!   is rejected with [`ServeError::ModelQuotaExceeded`] *before* the
+//!   shared capacity check, so one hot model saturating its quota cannot
+//!   exhaust the queue other models share. The check and the enqueue are
+//!   one critical section — the per-model count is exact under races.
 //! * **Priority with bounded starvation** — entries live in one FIFO
 //!   deque per class and pop in `(effective rank, arrival)` order. The
 //!   *effective* rank is the class rank minus one per full
@@ -12,15 +18,45 @@
 //!   then favors it over younger High traffic — after two, so sustained
 //!   higher-class load delays Low work by a bounded amount instead of
 //!   starving it forever. `max_starvation: None` restores strict priority.
-//! * **Multi-model aware** — every request carries a
-//!   [`ModelClaim`](super::registry::ModelClaim); workers use
-//!   [`RequestQueue::pop_model_until`] to collect stragglers *of one
-//!   model only*, so a flush never mixes models while other models'
-//!   requests keep their queue positions.
+//! * **Multi-model aware, O(popped) not O(depth)** — every request carries
+//!   a [`ModelClaim`](super::registry::ModelClaim), and next to the
+//!   primary per-class FIFOs the queue maintains a **secondary per-model
+//!   index** (model id → per-class seq FIFOs). A model-filtered pop
+//!   ([`RequestQueue::pop_model_until`], the straggler-collection
+//!   primitive) peeks the live front of at most `CLASSES` deques — it
+//!   never scans — so its cost is bounded by entries *returned*, not by
+//!   how deep a hot model has piled the queue. See "Dual views" below.
+//! * **Steal hints** — [`RequestQueue::pop_model_or_steal`] is the
+//!   work-stealing form of the straggler pop: instead of waiting out the
+//!   full straggler window on a model whose backlog is empty, it returns
+//!   [`ModelPop::Steal`] the moment *another* model has queued work, so a
+//!   worker cuts its batch short and serves that backlog instead of
+//!   idling.
 //! * **Deadlines** — a request may carry an absolute expiry [`Instant`].
 //!   The queue stores it; *workers* check it at pop time and again
 //!   immediately before flushing (see `worker`), so an expired request is
 //!   answered with a typed error and never executed.
+//!
+//! # Dual views
+//!
+//! Entries are owned by one seq-keyed map; both views hold seqs only:
+//!
+//! ```text
+//!   entries: seq → Entry            (the single owner)
+//!   primary: [VecDeque<seq>; 3]     per-class FIFO, arrival order
+//!   by_model: id → {[VecDeque<seq>; 3], queued}   same order, one model
+//! ```
+//!
+//! A pop removes the entry from the map and from the view it came
+//! through; the seq left in the *other* view becomes a **tombstone** that
+//! the next front-peek of that view discards. Every seq is pushed once
+//! into each view and becomes a tombstone in at most one, so cumulative
+//! tombstone cleanup is bounded by cumulative pushes — pops are amortized
+//! O(1) regardless of depth or skew (debug builds assert this budget on
+//! every pop, and [`RequestQueue::check_invariants`] audits the full
+//! bijection between the views). `by_model` holds exactly the models with
+//! at least one queued entry — its `queued` counters are what admission
+//! quotas check and steal hints scan.
 //!
 //! Closing the queue ([`RequestQueue::close`]) rejects new pushes with
 //! [`ServeError::Stopped`] but keeps handing out already-queued entries —
@@ -29,7 +65,7 @@
 use super::registry::ModelClaim;
 use super::ServeError;
 use crate::util::lock_recover;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{mpsc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -92,7 +128,11 @@ impl SubmitOptions {
 }
 
 /// One queued sample plus its response channel and model routing claim.
-pub(crate) struct QueuedRequest {
+///
+/// Public so the queue-level property suite (`tests/prop_queue.rs`) and
+/// benches can drive the queue directly; production code constructs these
+/// only inside `InferenceServer::submit_with`.
+pub struct QueuedRequest {
     pub x: Vec<f32>,
     pub enqueued: Instant,
     /// Absolute expiry; `None` waits indefinitely.
@@ -104,30 +144,120 @@ pub(crate) struct QueuedRequest {
     pub claim: ModelClaim,
 }
 
+/// Outcome of a model-filtered pop that may yield a steal hint.
+pub enum ModelPop {
+    /// The earliest live entry for the requested model, in
+    /// `(effective rank, arrival)` order.
+    Popped(QueuedRequest),
+    /// The requested model has nothing queued but at least one other model
+    /// does: stop waiting for stragglers that cannot exist and serve that
+    /// backlog instead (only returned by
+    /// [`RequestQueue::pop_model_or_steal`]).
+    Steal,
+    /// Nothing arrived before the timeout, or the queue is closed and this
+    /// model's backlog is drained.
+    Empty,
+}
+
 struct Entry {
-    seq: u64,
+    /// Which class FIFO (primary and per-model) this entry was filed
+    /// under at push time; promotion never moves entries, it re-ranks
+    /// them at peek time.
+    class: usize,
     req: QueuedRequest,
 }
 
+/// The per-model half of the dual view: this model's seqs in the same
+/// class/arrival order as the primary FIFOs, plus its exact live count.
+#[derive(Default)]
+struct ModelIndex {
+    classes: [VecDeque<u64>; CLASSES],
+    /// Live (non-tombstone) entries for this model — the number admission
+    /// quotas compare against and `model_backlog` reports. Maintained
+    /// under the queue lock, so it is exact under races and can neither
+    /// go negative nor drift from the deque contents.
+    queued: usize,
+}
+
 struct QueueState {
-    /// One FIFO per class, indexed by `Priority::rank` — FIFO within a
-    /// class is arrival order, and the front of each deque is both its
-    /// oldest (most promoted) and lowest-seq entry.
-    classes: [VecDeque<Entry>; CLASSES],
+    /// Every queued entry, keyed by seq — the single owner. Both views
+    /// below hold seqs only; a seq missing from this map is a tombstone.
+    entries: HashMap<u64, Entry>,
+    /// Primary view: one FIFO per class, arrival order. The live front of
+    /// each deque is both its oldest (most promoted) and lowest-seq entry.
+    classes: [VecDeque<u64>; CLASSES],
+    /// Secondary view: model id → per-class FIFOs. Holds exactly the
+    /// models with `queued > 0` (emptied indexes are dropped, so steal
+    /// scans and admission checks are O(live models), not O(ever seen)).
+    by_model: HashMap<String, ModelIndex>,
     next_seq: u64,
     closed: bool,
+    /// Entries ever pushed; each contributes one seq to each view.
+    pushed: u64,
+    /// Tombstones discarded by front peeks. A seq becomes a tombstone in
+    /// at most one view, so `tombstones_cleaned <= pushed` always — the
+    /// O(popped) certificate debug builds assert on every pop.
+    tombstones_cleaned: u64,
+}
+
+/// Pop dead seqs off the view's front until a live one (or nothing) is
+/// left, then return it without removing it. Amortized O(1): each
+/// discarded seq was one past pop's leftover in this view.
+fn front_live(
+    view: &mut VecDeque<u64>,
+    entries: &HashMap<u64, Entry>,
+    cleaned: &mut u64,
+) -> Option<u64> {
+    while let Some(&seq) = view.front() {
+        if entries.contains_key(&seq) {
+            return Some(seq);
+        }
+        view.pop_front();
+        *cleaned += 1;
+    }
+    None
 }
 
 impl QueueState {
     fn len(&self) -> usize {
-        self.classes.iter().map(VecDeque::len).sum()
+        self.entries.len()
+    }
+
+    /// Remove the chosen live entry from the map and from the view it was
+    /// peeked through (`via_primary`); the seq in the other view becomes a
+    /// tombstone. Keeps the per-model live count exact and drops the
+    /// model's index when it empties.
+    fn remove(&mut self, seq: u64, class: usize, via_primary: bool) -> QueuedRequest {
+        let e = self
+            .entries
+            .remove(&seq)
+            .expect("chosen candidate is live under the queue lock");
+        debug_assert_eq!(e.class, class, "entry filed under a different class");
+        if via_primary {
+            let popped = self.classes[class].pop_front();
+            debug_assert_eq!(popped, Some(seq));
+        }
+        let model = e.req.claim.id();
+        let ix = self
+            .by_model
+            .get_mut(model)
+            .expect("every live entry has a model index");
+        if !via_primary {
+            let popped = ix.classes[class].pop_front();
+            debug_assert_eq!(popped, Some(seq));
+        }
+        ix.queued -= 1;
+        if ix.queued == 0 {
+            self.by_model.remove(model);
+        }
+        e.req
     }
 }
 
 /// Bounded, closable priority queue shared by every client handle and every
 /// worker. All locking goes through [`lock_recover`]: a worker that panics
 /// elsewhere must not wedge the queue for the rest of the fleet.
-pub(crate) struct RequestQueue {
+pub struct RequestQueue {
     state: Mutex<QueueState>,
     available: Condvar,
     cap: usize,
@@ -139,9 +269,13 @@ impl RequestQueue {
     pub fn new(cap: usize, max_starvation: Option<Duration>) -> RequestQueue {
         RequestQueue {
             state: Mutex::new(QueueState {
+                entries: HashMap::new(),
                 classes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                by_model: HashMap::new(),
                 next_seq: 0,
                 closed: false,
+                pushed: 0,
+                tombstones_cleaned: 0,
             }),
             available: Condvar::new(),
             cap: cap.max(1),
@@ -157,26 +291,84 @@ impl RequestQueue {
         lock_recover(&self.state).len()
     }
 
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
     pub fn is_closed(&self) -> bool {
         lock_recover(&self.state).closed
     }
 
+    /// Exact number of queued (not yet popped) entries for one model.
+    pub fn model_backlog(&self, model: &str) -> usize {
+        lock_recover(&self.state)
+            .by_model
+            .get(model)
+            .map_or(0, |ix| ix.queued)
+    }
+
+    /// Exact queued count of every model with backlog, sorted by id.
+    pub fn model_backlogs(&self) -> Vec<(String, usize)> {
+        let s = lock_recover(&self.state);
+        let mut v: Vec<(String, usize)> = s
+            .by_model
+            .iter()
+            .map(|(m, ix)| (m.clone(), ix.queued))
+            .collect();
+        v.sort();
+        v
+    }
+
     /// Enqueue `req`; returns the queue depth after the push. Fails with
-    /// [`ServeError::Stopped`] once closed and [`ServeError::QueueFull`] at
-    /// capacity — never blocks, never grows past `cap`.
-    pub fn push(&self, req: QueuedRequest, priority: Priority) -> Result<usize, ServeError> {
+    /// [`ServeError::Stopped`] once closed, with
+    /// [`ServeError::ModelQuotaExceeded`] when the request's model already
+    /// has `quota` entries queued, and with [`ServeError::QueueFull`] at
+    /// shared capacity — never blocks, never grows past `cap`. The quota
+    /// check runs first: a model at its quota is told so even when the
+    /// shared queue still has room, and its rejection frees no capacity
+    /// other models could have used.
+    pub fn push(
+        &self,
+        req: QueuedRequest,
+        priority: Priority,
+        quota: Option<usize>,
+    ) -> Result<usize, ServeError> {
         let depth = {
             let mut s = lock_recover(&self.state);
             if s.closed {
                 return Err(ServeError::Stopped);
             }
-            if s.len() >= self.cap {
+            let model = req.claim.id();
+            if let Some(limit) = quota {
+                let queued = s.by_model.get(model).map_or(0, |ix| ix.queued);
+                if queued >= limit {
+                    return Err(ServeError::ModelQuotaExceeded {
+                        model: model.to_string(),
+                        quota: limit,
+                    });
+                }
+            }
+            if s.entries.len() >= self.cap {
                 return Err(ServeError::QueueFull { cap: self.cap });
             }
             let seq = s.next_seq;
             s.next_seq += 1;
-            s.classes[priority.rank()].push_back(Entry { seq, req });
-            s.len()
+            s.pushed += 1;
+            let class = priority.rank();
+            s.classes[class].push_back(seq);
+            // The common case — the model already has backlog — must not
+            // allocate its id again under the lock; only the first entry
+            // of a burst pays the `String` key.
+            if let Some(ix) = s.by_model.get_mut(model) {
+                ix.classes[class].push_back(seq);
+                ix.queued += 1;
+            } else {
+                let ix = s.by_model.entry(model.to_string()).or_default();
+                ix.classes[class].push_back(seq);
+                ix.queued += 1;
+            }
+            s.entries.insert(seq, Entry { class, req });
+            s.entries.len()
         };
         // Wake every waiter: some may be model-filtered straggler waits
         // that this push does not satisfy, and the one it does satisfy
@@ -198,43 +390,72 @@ impl RequestQueue {
     }
 
     /// Remove and return the most urgent entry — smallest
-    /// `(effective rank, seq)` — optionally restricted to one model. With
-    /// a filter, the candidate per class is its earliest *matching* entry,
-    /// so other models' requests keep their positions untouched.
+    /// `(effective rank, seq)` — optionally restricted to one model. The
+    /// candidates are the live fronts of at most `CLASSES` deques (the
+    /// primary ones, or the model's own index): within a class+model, the
+    /// front is both the oldest (most promoted) and the lowest-seq entry,
+    /// so peeking fronts is exhaustive. This never iterates entries —
+    /// cost is O(1) per call plus amortized tombstone cleanup, bounded by
+    /// entries returned across the queue's lifetime, not by queue depth.
     fn take_next(&self, s: &mut QueueState, model: Option<&str>) -> Option<QueuedRequest> {
         let now = Instant::now();
-        let mut best: Option<(usize, u64, usize, usize)> = None; // (eff, seq, class, idx)
+        let mut best: Option<(usize, u64, usize)> = None; // (eff, seq, class)
         for class in 0..CLASSES {
-            let candidate = match model {
-                None => s.classes[class].front().map(|e| (0, e)),
-                Some(m) => s.classes[class]
-                    .iter()
-                    .enumerate()
-                    .find(|(_, e)| e.req.claim.id() == m),
+            let front = match model {
+                None => front_live(&mut s.classes[class], &s.entries, &mut s.tombstones_cleaned),
+                Some(m) => match s.by_model.get_mut(m) {
+                    Some(ix) => {
+                        front_live(&mut ix.classes[class], &s.entries, &mut s.tombstones_cleaned)
+                    }
+                    None => None,
+                },
             };
-            if let Some((idx, e)) = candidate {
-                let eff = self.effective_rank(class, now, e.req.enqueued);
-                if best.is_none_or(|(be, bs, _, _)| (eff, e.seq) < (be, bs)) {
-                    best = Some((eff, e.seq, class, idx));
-                }
+            let Some(seq) = front else { continue };
+            let enqueued = s.entries[&seq].req.enqueued;
+            let eff = self.effective_rank(class, now, enqueued);
+            if best.is_none_or(|(be, bs, _)| (eff, seq) < (be, bs)) {
+                best = Some((eff, seq, class));
             }
         }
-        best.map(|(_, _, class, idx)| {
-            s.classes[class]
-                .remove(idx)
-                .expect("candidate index is in range under the lock")
-                .req
-        })
+        // The O(popped) certificate: beyond the constant per-call front
+        // peeks above, the only loop in this function is tombstone cleanup
+        // — and a seq tombstones in at most one view, so cumulative
+        // cleanup can never exceed cumulative pushes, no matter how deep
+        // or skewed the queue gets. An O(depth) scan creeping back into
+        // the pop path would blow this budget immediately.
+        debug_assert!(
+            s.tombstones_cleaned <= s.pushed,
+            "pop scanned past its tombstone budget (cleaned {} > pushed {})",
+            s.tombstones_cleaned,
+            s.pushed,
+        );
+        let (_, seq, class) = best?;
+        Some(s.remove(seq, class, model.is_none()))
     }
 
-    fn pop_inner(&self, model: Option<&str>, until: Option<Instant>) -> Option<QueuedRequest> {
+    /// The one pop loop behind every public pop: optional model filter,
+    /// optional timeout, optional steal hint.
+    fn pop_filtered(
+        &self,
+        model: Option<&str>,
+        until: Option<Instant>,
+        steal_hint: bool,
+    ) -> ModelPop {
+        debug_assert!(model.is_some() || !steal_hint, "steal hints are model-filtered");
         let mut s = lock_recover(&self.state);
         loop {
             if let Some(req) = self.take_next(&mut s, model) {
-                return Some(req);
+                return ModelPop::Popped(req);
+            }
+            // With a filter, `take_next` returning `None` means the model
+            // has zero live entries (its index exists iff it has backlog),
+            // so any surviving index is *another* model's backlog the
+            // caller could serve instead of waiting here.
+            if steal_hint && !s.by_model.is_empty() {
+                return ModelPop::Steal;
             }
             if s.closed {
-                return None;
+                return ModelPop::Empty;
             }
             match until {
                 None => {
@@ -246,7 +467,7 @@ impl RequestQueue {
                 Some(t) => {
                     let now = Instant::now();
                     if now >= t {
-                        return None;
+                        return ModelPop::Empty;
                     }
                     let (guard, _timeout) = self
                         .available
@@ -261,13 +482,19 @@ impl RequestQueue {
     /// Block until an entry is available. Returns `None` only once the
     /// queue is closed *and* drained (the shutdown exit condition).
     pub fn pop_blocking(&self) -> Option<QueuedRequest> {
-        self.pop_inner(None, None)
+        match self.pop_filtered(None, None, false) {
+            ModelPop::Popped(req) => Some(req),
+            _ => None,
+        }
     }
 
     /// Pop, waiting at most until `until`; `None` on timeout or on
     /// closed-and-drained.
     pub fn pop_until(&self, until: Instant) -> Option<QueuedRequest> {
-        self.pop_inner(None, Some(until))
+        match self.pop_filtered(None, Some(until), false) {
+            ModelPop::Popped(req) => Some(req),
+            _ => None,
+        }
     }
 
     /// Pop the earliest entry *for one model*, waiting at most until
@@ -275,7 +502,18 @@ impl RequestQueue {
     /// batch for `model` takes only that model's requests, so a flush
     /// never mixes models and other models' entries stay queued in order.
     pub fn pop_model_until(&self, model: &str, until: Instant) -> Option<QueuedRequest> {
-        self.pop_inner(Some(model), Some(until))
+        match self.pop_filtered(Some(model), Some(until), false) {
+            ModelPop::Popped(req) => Some(req),
+            _ => None,
+        }
+    }
+
+    /// [`RequestQueue::pop_model_until`] with a steal hint: returns
+    /// [`ModelPop::Steal`] the moment `model`'s backlog is empty while
+    /// another model has queued work, so the caller can cut its straggler
+    /// window and serve that backlog instead of idling until `until`.
+    pub fn pop_model_or_steal(&self, model: &str, until: Instant) -> ModelPop {
+        self.pop_filtered(Some(model), Some(until), true)
     }
 
     /// Reject future pushes; wake every waiter. Queued entries remain
@@ -290,25 +528,104 @@ impl RequestQueue {
     /// this, a pool whose every worker died would leave queued clients
     /// blocked on receivers nobody will ever serve.
     pub fn close_and_fail_pending(&self) {
-        let drained: Vec<Entry> = {
+        let mut drained: Vec<(u64, Entry)> = {
             let mut s = lock_recover(&self.state);
             s.closed = true;
-            s.classes
-                .iter_mut()
-                .flat_map(std::mem::take)
-                .collect()
+            for view in &mut s.classes {
+                view.clear();
+            }
+            s.by_model.clear();
+            s.entries.drain().collect()
         };
         self.available.notify_all();
-        for e in drained {
+        // Fail in arrival order: deterministic for tests and fair to the
+        // longest waiters.
+        drained.sort_by_key(|(seq, _)| *seq);
+        for (_, e) in drained {
             let _ = e.req.respond.send(Err(ServeError::Stopped));
         }
+    }
+
+    /// Full O(n) audit of the dual-view bijection, for the property suite
+    /// and fault-injection tests — not a hot-path helper. Panics with a
+    /// description on the first violated invariant:
+    ///
+    /// * every live entry's seq appears exactly once in the primary view
+    ///   and exactly once in its own model's index, in its push class;
+    /// * both views keep strictly increasing seqs (FIFO/arrival order);
+    /// * every model index has `queued > 0` and `queued` equal to its live
+    ///   entry count (quota accounting can neither leak nor go negative);
+    /// * cumulative tombstone cleanup is within the O(popped) budget.
+    #[doc(hidden)]
+    pub fn check_invariants(&self) {
+        let s = lock_recover(&self.state);
+        let mut live_primary = 0usize;
+        for (class, view) in s.classes.iter().enumerate() {
+            let mut last: Option<u64> = None;
+            for &seq in view {
+                assert!(
+                    last.is_none_or(|p| p < seq),
+                    "primary class {class} out of arrival order at seq {seq}"
+                );
+                last = Some(seq);
+                if let Some(e) = s.entries.get(&seq) {
+                    assert_eq!(e.class, class, "live seq {seq} filed under the wrong class");
+                    live_primary += 1;
+                }
+            }
+        }
+        assert_eq!(
+            live_primary,
+            s.entries.len(),
+            "primary view must hold every live entry exactly once"
+        );
+        let mut live_by_model = 0usize;
+        for (model, ix) in &s.by_model {
+            assert!(ix.queued > 0, "empty index for model '{model}' was not dropped");
+            let mut live_here = 0usize;
+            for (class, view) in ix.classes.iter().enumerate() {
+                let mut last: Option<u64> = None;
+                for &seq in view {
+                    assert!(
+                        last.is_none_or(|p| p < seq),
+                        "model '{model}' class {class} out of arrival order at seq {seq}"
+                    );
+                    last = Some(seq);
+                    if let Some(e) = s.entries.get(&seq) {
+                        assert_eq!(
+                            e.req.claim.id(),
+                            model.as_str(),
+                            "seq {seq} indexed under a foreign model"
+                        );
+                        assert_eq!(e.class, class, "model view disagrees on seq {seq}'s class");
+                        live_here += 1;
+                    }
+                }
+            }
+            assert_eq!(
+                live_here, ix.queued,
+                "model '{model}' queued count drifted from its live entries"
+            );
+            live_by_model += live_here;
+        }
+        assert_eq!(
+            live_by_model,
+            s.entries.len(),
+            "model views must hold every live entry exactly once"
+        );
+        assert!(
+            s.tombstones_cleaned <= s.pushed,
+            "tombstone cleanup ({}) exceeded pushes ({}) — pops are not O(popped)",
+            s.tombstones_cleaned,
+            s.pushed,
+        );
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::serving::registry::test_claim;
+    use crate::coordinator::serving::registry::ModelClaim;
     use std::sync::mpsc;
 
     fn q(cap: usize) -> RequestQueue {
@@ -331,7 +648,7 @@ mod tests {
                 enqueued: Instant::now(),
                 deadline: None,
                 respond: tx,
-                claim: test_claim(model, 1, 1, 1),
+                claim: ModelClaim::detached(model, 1, 1, 1),
             },
             rx,
         )
@@ -348,10 +665,12 @@ mod tests {
             (5.0, Priority::High),
         ] {
             let (r, _rx) = req(id);
-            q.push(r, p).unwrap();
+            q.push(r, p, None).unwrap();
         }
+        q.check_invariants();
         let order: Vec<f32> = (0..5).map(|_| q.pop_blocking().unwrap().x[0]).collect();
         assert_eq!(order, vec![3.0, 5.0, 1.0, 4.0, 2.0]);
+        q.check_invariants();
     }
 
     #[test]
@@ -359,29 +678,58 @@ mod tests {
         let q = q(2);
         let (r1, _x1) = req(1.0);
         let (r2, _x2) = req(2.0);
-        assert_eq!(q.push(r1, Priority::Normal).unwrap(), 1);
-        assert_eq!(q.push(r2, Priority::Normal).unwrap(), 2);
+        assert_eq!(q.push(r1, Priority::Normal, None).unwrap(), 1);
+        assert_eq!(q.push(r2, Priority::Normal, None).unwrap(), 2);
         let (r3, _x3) = req(3.0);
-        match q.push(r3, Priority::High) {
+        match q.push(r3, Priority::High, None) {
             Err(ServeError::QueueFull { cap }) => assert_eq!(cap, 2),
             other => panic!("expected QueueFull, got {other:?}"),
         }
         // Popping frees capacity again.
         assert_eq!(q.pop_blocking().unwrap().x[0], 1.0);
         let (r4, _x4) = req(4.0);
-        assert!(q.push(r4, Priority::Normal).is_ok());
+        assert!(q.push(r4, Priority::Normal, None).is_ok());
+    }
+
+    #[test]
+    fn model_quota_is_exact_and_frees_on_pop() {
+        let q = q(16);
+        let quota = Some(2);
+        let (a1, _ra1) = req_for("hot", 1.0);
+        let (a2, _ra2) = req_for("hot", 2.0);
+        assert!(q.push(a1, Priority::Normal, quota).is_ok());
+        assert!(q.push(a2, Priority::Normal, quota).is_ok());
+        assert_eq!(q.model_backlog("hot"), 2);
+        // Third hot push: typed per-model rejection, not QueueFull.
+        let (a3, _ra3) = req_for("hot", 3.0);
+        match q.push(a3, Priority::High, quota) {
+            Err(ServeError::ModelQuotaExceeded { model, quota }) => {
+                assert_eq!((model.as_str(), quota), ("hot", 2));
+            }
+            other => panic!("expected ModelQuotaExceeded, got {other:?}"),
+        }
+        // A saturated hot model does not block other models' submits.
+        let (c1, _rc1) = req_for("cold", 4.0);
+        assert!(q.push(c1, Priority::Normal, Some(2)).is_ok());
+        assert_eq!(q.model_backlog("cold"), 1);
+        // Popping a hot entry frees hot quota again.
+        assert_eq!(q.pop_model_until("hot", Instant::now()).unwrap().x[0], 1.0);
+        let (a4, _ra4) = req_for("hot", 5.0);
+        assert!(q.push(a4, Priority::Normal, quota).is_ok());
+        assert_eq!(q.model_backlog("hot"), 2);
+        q.check_invariants();
     }
 
     #[test]
     fn close_rejects_pushes_but_drains_pops() {
         let q = q(4);
         let (r1, _x1) = req(1.0);
-        q.push(r1, Priority::Normal).unwrap();
+        q.push(r1, Priority::Normal, None).unwrap();
         q.close();
         assert!(q.is_closed());
         let (r2, _x2) = req(2.0);
         assert!(matches!(
-            q.push(r2, Priority::Normal),
+            q.push(r2, Priority::Normal, None),
             Err(ServeError::Stopped)
         ));
         // The queued entry is still served, then pops report drained.
@@ -410,21 +758,62 @@ mod tests {
             ("a", 5.0, Priority::Normal),
         ] {
             let (r, rx) = req_for(model, id);
-            q.push(r, p).unwrap();
+            q.push(r, p, None).unwrap();
             rxs.push(rx);
         }
+        assert_eq!(
+            q.model_backlogs(),
+            vec![("a".to_string(), 3), ("b".to_string(), 2)]
+        );
         let until = Instant::now() + Duration::from_millis(5);
         // Model-a entries come out in (priority, arrival) order…
         let a1 = q.pop_model_until("a", until).unwrap();
         assert_eq!((a1.claim.id(), a1.x[0]), ("a", 1.0));
         assert_eq!(q.pop_model_until("a", until).unwrap().x[0], 5.0);
+        q.check_invariants();
         assert_eq!(q.pop_model_until("a", until).unwrap().x[0], 3.0);
         // …a drained model times out…
         assert!(q.pop_model_until("a", Instant::now() + Duration::from_millis(5)).is_none());
+        assert_eq!(q.model_backlog("a"), 0);
         // …and model-b entries kept their own order throughout.
         assert_eq!(q.pop_model_until("b", until).unwrap().x[0], 4.0);
         assert_eq!(q.pop_blocking().map(|r| r.x[0]), Some(2.0));
         assert_eq!(q.len(), 0);
+        q.check_invariants();
+    }
+
+    #[test]
+    fn steal_hint_fires_only_when_other_backlog_exists() {
+        let q = q(16);
+        // Empty queue: no hint, just a timeout.
+        assert!(matches!(
+            q.pop_model_or_steal("a", Instant::now() + Duration::from_millis(5)),
+            ModelPop::Empty
+        ));
+        let (ra, _xa) = req_for("a", 1.0);
+        q.push(ra, Priority::Normal, None).unwrap();
+        // Own backlog: popped, never a hint.
+        assert!(matches!(
+            q.pop_model_or_steal("a", Instant::now() + Duration::from_millis(5)),
+            ModelPop::Popped(r) if r.x[0] == 1.0
+        ));
+        // Another model's backlog while "a" is drained: immediate hint,
+        // well before the timeout.
+        let (rb, _xb) = req_for("b", 2.0);
+        q.push(rb, Priority::Low, None).unwrap();
+        let t0 = Instant::now();
+        assert!(matches!(
+            q.pop_model_or_steal("a", t0 + Duration::from_secs(5)),
+            ModelPop::Steal
+        ));
+        assert!(t0.elapsed() < Duration::from_secs(1), "hint must not wait");
+        // The plain straggler pop keeps the old semantics: waits out the
+        // timeout rather than hinting.
+        assert!(q
+            .pop_model_until("a", Instant::now() + Duration::from_millis(10))
+            .is_none());
+        assert_eq!(q.model_backlog("b"), 1);
+        q.check_invariants();
     }
 
     #[test]
@@ -432,7 +821,7 @@ mod tests {
         let period = Duration::from_millis(25);
         let q = RequestQueue::new(64, Some(period));
         let (low, _rx_low) = req(1.0);
-        q.push(low, Priority::Low).unwrap();
+        q.push(low, Priority::Low, None).unwrap();
         // Sustained High traffic: a fresh High entry arrives before every
         // pop. Strict priority would starve the Low entry forever; with
         // age promotion it must surface within ~2 promotion periods.
@@ -440,7 +829,7 @@ mod tests {
         let mut rxs = Vec::new();
         for i in 0..40 {
             let (high, rx) = req(100.0 + i as f32);
-            q.push(high, Priority::High).unwrap();
+            q.push(high, Priority::High, None).unwrap();
             rxs.push(rx);
             std::thread::sleep(Duration::from_millis(5));
             if q.pop_blocking().unwrap().x[0] == 1.0 {
@@ -456,10 +845,10 @@ mod tests {
         // Control: with promotion disabled the same pattern starves Low.
         let strict = RequestQueue::new(64, None);
         let (low, _rx_low2) = req(1.0);
-        strict.push(low, Priority::Low).unwrap();
+        strict.push(low, Priority::Low, None).unwrap();
         for i in 0..10 {
             let (high, rx) = req(200.0 + i as f32);
-            strict.push(high, Priority::High).unwrap();
+            strict.push(high, Priority::High, None).unwrap();
             rxs.push(rx);
             std::thread::sleep(Duration::from_millis(5));
             assert_ne!(
@@ -484,7 +873,7 @@ mod tests {
         let mut rxs = Vec::new();
         for id in 0..6 {
             let (r, rx) = req(id as f32);
-            q.push(r, Priority::Normal).unwrap();
+            q.push(r, Priority::Normal, None).unwrap();
             rxs.push(rx);
         }
         // Give the popper a chance to drain, then close to let it exit.
@@ -494,5 +883,23 @@ mod tests {
         q.close();
         let got = popper.join().unwrap();
         assert_eq!(got.len(), 6);
+    }
+
+    #[test]
+    fn close_and_fail_pending_answers_in_arrival_order() {
+        let q = q(8);
+        let mut rxs = Vec::new();
+        for (model, id) in [("a", 1.0), ("b", 2.0), ("a", 3.0)] {
+            let (r, rx) = req_for(model, id);
+            q.push(r, Priority::Normal, None).unwrap();
+            rxs.push(rx);
+        }
+        q.close_and_fail_pending();
+        for rx in &rxs {
+            assert!(matches!(rx.recv().unwrap(), Err(ServeError::Stopped)));
+        }
+        assert_eq!(q.len(), 0);
+        assert!(q.model_backlogs().is_empty());
+        q.check_invariants();
     }
 }

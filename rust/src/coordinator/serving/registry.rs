@@ -62,12 +62,17 @@ pub(crate) struct ModelInfo {
     pub cache: Option<Arc<PlanCache>>,
 }
 
-/// One registered model: id, factory, geometry, and the in-flight
-/// accounting that makes unregistration a *drain*, not a drop.
+/// One registered model: id, factory, geometry, admission quota, and the
+/// in-flight accounting that makes unregistration a *drain*, not a drop.
 pub(crate) struct ModelEntry {
     pub id: String,
     pub factory: ModelFactory,
     info: OnceLock<ModelInfo>,
+    /// Resolved per-model admission cap: the max entries this model may
+    /// have *queued* at once (`None` = unlimited, only the shared queue
+    /// cap applies). Fixed at registration — see
+    /// [`super::ModelQuota::limit`].
+    quota: Option<usize>,
     /// Accepted-but-unanswered requests holding a [`ModelClaim`] on this
     /// entry.
     in_flight: AtomicUsize,
@@ -79,11 +84,12 @@ pub(crate) struct ModelEntry {
 }
 
 impl ModelEntry {
-    fn new(id: &str, factory: ModelFactory) -> ModelEntry {
+    fn new(id: &str, factory: ModelFactory, quota: Option<usize>) -> ModelEntry {
         ModelEntry {
             id: id.to_string(),
             factory,
             info: OnceLock::new(),
+            quota,
             in_flight: AtomicUsize::new(0),
             retired: AtomicBool::new(false),
             drain_lock: Mutex::new(()),
@@ -131,7 +137,12 @@ impl ModelEntry {
 /// count that lets `unregister_model` drain exactly. Created under the
 /// registry lock (so it cannot race a retire) and dropped whenever the
 /// request is answered or discarded — including a worker's panic unwind.
-pub(crate) struct ModelClaim {
+///
+/// Public (with private fields) because every
+/// [`QueuedRequest`](super::queue::QueuedRequest) carries one; the
+/// queue-level property suite constructs detached claims via
+/// [`ModelClaim::detached`].
+pub struct ModelClaim {
     entry: Arc<ModelEntry>,
 }
 
@@ -141,12 +152,40 @@ impl ModelClaim {
         ModelClaim { entry }
     }
 
+    /// Fixture for queue-level tests and benches: a claim with the given
+    /// id and geometry backed by a private entry (no registry, no
+    /// factory), still with exact RAII in-flight accounting.
+    #[doc(hidden)]
+    pub fn detached(id: &str, batch: usize, in_dim: usize, classes: usize) -> ModelClaim {
+        let entry = Arc::new(ModelEntry::new(
+            id,
+            Arc::new(|| anyhow::bail!("detached claim has no factory")),
+            None,
+        ));
+        entry.set_info(ModelInfo {
+            spec: ModelSpec {
+                batch,
+                in_dim,
+                classes,
+            },
+            structures: Vec::new(),
+            cache: None,
+        });
+        ModelClaim::new(entry)
+    }
+
     pub fn id(&self) -> &str {
         &self.entry.id
     }
 
-    pub fn spec(&self) -> ModelSpec {
+    pub(crate) fn spec(&self) -> ModelSpec {
         self.entry.spec()
+    }
+
+    /// The resolved admission cap of the claimed model (max queued
+    /// entries), threaded into `RequestQueue::push` at submit time.
+    pub(crate) fn quota_limit(&self) -> Option<usize> {
+        self.entry.quota
     }
 }
 
@@ -209,12 +248,14 @@ impl ModelRegistry {
 
     /// Add a model. `info` is `None` only for the startup default model,
     /// whose first worker instance reports it before the server constructor
-    /// returns (no submit can race that window).
+    /// returns (no submit can race that window). `quota` is the resolved
+    /// per-model admission cap ([`super::ModelQuota::limit`]).
     pub fn register(
         &self,
         id: &str,
         factory: ModelFactory,
         info: Option<ModelInfo>,
+        quota: Option<usize>,
     ) -> anyhow::Result<Arc<ModelEntry>> {
         anyhow::ensure!(!id.is_empty(), "model id must be non-empty");
         let entry = {
@@ -223,7 +264,7 @@ impl ModelRegistry {
                 !map.contains_key(id),
                 "model '{id}' is already registered"
             );
-            let entry = Arc::new(ModelEntry::new(id, factory));
+            let entry = Arc::new(ModelEntry::new(id, factory, quota));
             if let Some(info) = info {
                 entry.set_info(info);
             }
@@ -320,26 +361,6 @@ impl ModelRegistry {
     }
 }
 
-/// Test fixture: a detached claim (no registry) with the given geometry,
-/// for queue/worker unit tests that construct requests by hand.
-#[cfg(test)]
-pub(crate) fn test_claim(id: &str, batch: usize, in_dim: usize, classes: usize) -> ModelClaim {
-    let entry = Arc::new(ModelEntry::new(
-        id,
-        Arc::new(|| anyhow::bail!("test claim has no factory")),
-    ));
-    entry.set_info(ModelInfo {
-        spec: ModelSpec {
-            batch,
-            in_dim,
-            classes,
-        },
-        structures: Vec::new(),
-        cache: None,
-    });
-    ModelClaim::new(entry)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -364,17 +385,21 @@ mod tests {
     fn register_resolve_and_duplicate_rejection() {
         let r = ModelRegistry::new(DEFAULT_MODEL);
         let gen0 = r.generation();
-        r.register(DEFAULT_MODEL, noop_factory(), Some(info(8, vec![1]))).unwrap();
-        r.register("b", noop_factory(), Some(info(4, vec![2]))).unwrap();
+        r.register(DEFAULT_MODEL, noop_factory(), Some(info(8, vec![1])), None)
+            .unwrap();
+        r.register("b", noop_factory(), Some(info(4, vec![2])), Some(16))
+            .unwrap();
         assert_eq!(r.generation(), gen0 + 2);
-        assert!(r.register("b", noop_factory(), None).is_err());
+        assert!(r.register("b", noop_factory(), None, None).is_err());
         assert_eq!(r.models(), vec!["b".to_string(), DEFAULT_MODEL.to_string()]);
 
         let claim = r.resolve(None).unwrap();
         assert_eq!(claim.id(), DEFAULT_MODEL);
         assert_eq!(claim.spec().batch, 8);
+        assert_eq!(claim.quota_limit(), None, "default model: unlimited");
         let claim_b = r.resolve(Some("b")).unwrap();
         assert_eq!(claim_b.spec().batch, 4);
+        assert_eq!(claim_b.quota_limit(), Some(16), "claims carry the resolved quota");
         match r.resolve(Some("nope")) {
             Err(ServeError::UnknownModel { model }) => assert_eq!(model, "nope"),
             other => panic!("expected UnknownModel, got {:?}", other.map(|_| ())),
@@ -385,7 +410,7 @@ mod tests {
     fn claims_gate_the_drain_and_retire_blocks_resolves() {
         let r = ModelRegistry::new(DEFAULT_MODEL);
         let entry = r
-            .register("m", noop_factory(), Some(info(2, vec![7, 9])))
+            .register("m", noop_factory(), Some(info(2, vec![7, 9])), None)
             .unwrap();
         let c1 = r.resolve(Some("m")).unwrap();
         let c2 = r.resolve(Some("m")).unwrap();
@@ -415,7 +440,7 @@ mod tests {
         assert_eq!(report.evicted_plans, 0);
         assert!(r.snapshot().is_empty());
         // The id is free again.
-        r.register("m", noop_factory(), Some(info(2, vec![7]))).unwrap();
+        r.register("m", noop_factory(), Some(info(2, vec![7])), None).unwrap();
     }
 
     #[test]
@@ -445,6 +470,7 @@ mod tests {
             "keep",
             noop_factory(),
             Some(mk_info(vec![shared.structure_hash()])),
+            None,
         )
         .unwrap();
         let retired = r
@@ -452,6 +478,7 @@ mod tests {
                 "kill",
                 noop_factory(),
                 Some(mk_info(vec![shared.structure_hash(), own.structure_hash()])),
+                None,
             )
             .unwrap();
 

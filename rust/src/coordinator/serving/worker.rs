@@ -7,9 +7,19 @@
 //! *dynamically batches per model*: block for the first live request, let
 //! that request's model claim pick the flush target, then drain greedily —
 //! waiting at most `max_wait` for stragglers **of the same model**
-//! ([`RequestQueue::pop_model_until`]) — up to that model's batch size.
+//! ([`RequestQueue::pop_model_or_steal`]) — up to that model's batch size.
 //! A flush therefore never mixes models, and other models' requests keep
 //! their queue positions while a batch forms.
+//!
+//! **Work stealing.** The straggler wait is not unconditional: if the
+//! flush model's backlog is empty while *another* model has queued work,
+//! the queue answers the straggler pop with a steal hint
+//! ([`ModelPop::Steal`]) — there are no stragglers to wait for, so the
+//! worker flushes the partial batch immediately and its next pop takes
+//! the other model's backlog, instead of idling out `max_wait` while that
+//! backlog sits behind a busy peer. Steals are counted per worker in
+//! [`ServingMetrics`] (the never-co-flush-models invariant is untouched:
+//! the stolen backlog forms its own single-model batch).
 //!
 //! Deadline enforcement happens twice: at pop time (an expired request
 //! never occupies a batch slot) and again immediately before the flush —
@@ -26,7 +36,7 @@
 //! visible in the stats instead of silently inflating throughput.
 
 use super::backend::BatchModel;
-use super::queue::{QueuedRequest, RequestQueue};
+use super::queue::{ModelPop, QueuedRequest, RequestQueue};
 use super::registry::ModelRegistry;
 use super::ServeError;
 use crate::coordinator::metrics::ServingMetrics;
@@ -179,14 +189,14 @@ pub(crate) fn worker_loop(set: &mut ModelSet, ctx: WorkerContext) {
         // drain greedily — same model only — until the batch is full or
         // the straggler window closes.
         let first = loop {
-            match next_live(&ctx, Some(Instant::now() + IDLE_SYNC), None) {
+            match next_live(&ctx, Some(Instant::now() + IDLE_SYNC)) {
                 Some(r) => break r,
                 None if ctx.queue.is_closed() => {
                     // A timeout `None` raced the close: re-enter the pop.
                     // With the queue closed it returns the verdict
                     // atomically — an entry pushed before the close, or
                     // `None` only once closed *and* drained.
-                    match next_live(&ctx, Some(Instant::now() + IDLE_SYNC), None) {
+                    match next_live(&ctx, Some(Instant::now() + IDLE_SYNC)) {
                         Some(r) => break r,
                         None => return, // closed and drained: shut down
                     }
@@ -200,9 +210,18 @@ pub(crate) fn worker_loop(set: &mut ModelSet, ctx: WorkerContext) {
         pending.push(first);
         let flush_by = Instant::now() + ctx.max_wait;
         while pending.len() < batch {
-            match next_live(&ctx, Some(flush_by), Some(&model_id)) {
-                Some(r) => pending.push(r),
-                None => break,
+            match next_live_model(&ctx, &model_id, flush_by) {
+                ModelPop::Popped(r) => pending.push(r),
+                ModelPop::Steal => {
+                    // This model has no stragglers left to wait for while
+                    // another model's backlog sits queued: cut the window,
+                    // flush what we have, and take that backlog on the
+                    // next (immediate) pop instead of idling out
+                    // `max_wait`.
+                    ctx.metrics.record_steal(ctx.id);
+                    break;
+                }
+                ModelPop::Empty => break,
             }
         }
         flush(set, &ctx, &model_id, &mut pending);
@@ -320,33 +339,44 @@ fn fail_batch(
     }
 }
 
-/// Pop the next request whose deadline is still live, optionally
-/// restricted to one model (straggler collection). Expired requests are
-/// answered with the typed error immediately — they never reach
-/// [`BatchModel::forward`] and never occupy a batch slot. With
+/// Reject one expired request with the typed error and counters; it never
+/// reaches [`BatchModel::forward`] and never occupies a batch slot.
+fn reject_expired(ctx: &WorkerContext, req: QueuedRequest) {
+    ctx.metrics.record_rejected_deadline();
+    ctx.metrics.record_model_rejected_deadline(req.claim.id());
+    let _ = req.respond.send(Err(ServeError::DeadlineExceeded {
+        waited: req.enqueued.elapsed(),
+    }));
+}
+
+/// Pop the next request (any model) whose deadline is still live. With
 /// `until = None` this blocks until the queue closes; otherwise it gives
 /// up at `until`.
-fn next_live(
-    ctx: &WorkerContext,
-    until: Option<Instant>,
-    model: Option<&str>,
-) -> Option<QueuedRequest> {
+fn next_live(ctx: &WorkerContext, until: Option<Instant>) -> Option<QueuedRequest> {
     loop {
-        let req = match (model, until) {
-            (None, None) => ctx.queue.pop_blocking()?,
-            (None, Some(t)) => ctx.queue.pop_until(t)?,
-            (Some(m), Some(t)) => ctx.queue.pop_model_until(m, t)?,
-            (Some(_), None) => unreachable!("model-filtered pops are always bounded"),
+        let req = match until {
+            None => ctx.queue.pop_blocking()?,
+            Some(t) => ctx.queue.pop_until(t)?,
         };
         match req.deadline {
-            Some(dl) if Instant::now() >= dl => {
-                ctx.metrics.record_rejected_deadline();
-                ctx.metrics.record_model_rejected_deadline(req.claim.id());
-                let _ = req.respond.send(Err(ServeError::DeadlineExceeded {
-                    waited: req.enqueued.elapsed(),
-                }));
-            }
+            Some(dl) if Instant::now() >= dl => reject_expired(ctx, req),
             _ => return Some(req),
+        }
+    }
+}
+
+/// Straggler pop: the next live request *for one model*, a
+/// [`ModelPop::Steal`] hint when that model is drained but another
+/// model's backlog waits, or [`ModelPop::Empty`] at `until`. Expired
+/// entries are rejected in place, exactly as in [`next_live`].
+fn next_live_model(ctx: &WorkerContext, model: &str, until: Instant) -> ModelPop {
+    loop {
+        match ctx.queue.pop_model_or_steal(model, until) {
+            ModelPop::Popped(req) => match req.deadline {
+                Some(dl) if Instant::now() >= dl => reject_expired(ctx, req),
+                _ => return ModelPop::Popped(req),
+            },
+            other => return other,
         }
     }
 }
@@ -355,7 +385,7 @@ fn next_live(
 mod tests {
     use super::*;
     use crate::coordinator::serving::queue::Priority;
-    use crate::coordinator::serving::registry::test_claim;
+    use crate::coordinator::serving::registry::ModelClaim;
     use std::sync::mpsc;
 
     /// Identity model: logits = the (single-feature) input, call log kept
@@ -421,6 +451,16 @@ mod tests {
         deadline: Option<Duration>,
         batch: usize,
     ) -> mpsc::Receiver<Result<Vec<f32>, ServeError>> {
+        push_for(q, "m", x, deadline, batch)
+    }
+
+    fn push_for(
+        q: &RequestQueue,
+        model: &str,
+        x: Vec<f32>,
+        deadline: Option<Duration>,
+        batch: usize,
+    ) -> mpsc::Receiver<Result<Vec<f32>, ServeError>> {
         let (tx, rx) = mpsc::channel();
         let now = Instant::now();
         q.push(
@@ -429,9 +469,10 @@ mod tests {
                 enqueued: now,
                 deadline: deadline.map(|d| now + d),
                 respond: tx,
-                claim: test_claim("m", batch, 1, 1),
+                claim: ModelClaim::detached(model, batch, 1, 1),
             },
             Priority::Normal,
+            None,
         )
         .unwrap();
         rx
@@ -541,6 +582,60 @@ mod tests {
         let ms = metrics.model_stats();
         assert_eq!(ms[0].model, "m");
         assert!((ms[0].occupancy() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn steal_cuts_straggler_window_when_another_model_backlogs() {
+        // Model "a" (batch 4) gets one request while model "b" has queued
+        // work. The old loop idled out the full `max_wait` window hoping
+        // for more "a" stragglers; with the steal hint the worker flushes
+        // "a" immediately and serves "b" — under the old behavior both
+        // responses would arrive only after the 8 s window.
+        let queue = queue();
+        let metrics = Arc::new(ServingMetrics::new(1));
+        let mut ctx = ctx(&queue, &metrics);
+        ctx.max_wait = Duration::from_secs(8);
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut set = ModelSet::with_models(
+            vec![
+                (
+                    "a",
+                    Box::new(IdentityModel {
+                        batch: 4,
+                        seen: Arc::clone(&seen),
+                    }) as Box<dyn BatchModel>,
+                ),
+                (
+                    "b",
+                    Box::new(IdentityModel {
+                        batch: 1,
+                        seen: Arc::clone(&seen),
+                    }) as Box<dyn BatchModel>,
+                ),
+            ],
+            0,
+        );
+        let rx_a = push_for(&queue, "a", vec![1.0], None, 4);
+        let rx_b = push_for(&queue, "b", vec![2.0], None, 1);
+        let t0 = Instant::now();
+        let handle = std::thread::spawn(move || worker_loop(&mut set, ctx));
+        assert_eq!(
+            rx_a.recv_timeout(Duration::from_secs(4)).unwrap().unwrap(),
+            vec![1.0]
+        );
+        assert_eq!(
+            rx_b.recv_timeout(Duration::from_secs(4)).unwrap().unwrap(),
+            vec![2.0]
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(4),
+            "straggler window was not cut by the steal hint"
+        );
+        queue.close();
+        handle.join().unwrap();
+        assert_eq!(metrics.worker_stats()[0].steals, 1, "one steal recorded");
+        assert_eq!(metrics.totals(), (2, 2), "two single-model flushes");
+        queue.check_invariants();
     }
 
     /// Model that fails every forward: clients get the typed backend error.

@@ -49,8 +49,8 @@ COMMANDS
              [--save ckpt.json] [--load ckpt.json]
              [--gradual] [--milestones 0.25,0.6] [--sp 0.75]   (native only)
   serve      [--requests 512] [--clients 4] [--workers 2] [--queue-cap 1024]
-             [--deadline-ms 0] [--max-starvation-ms 1000]
-             [--model name=ckpt.json]...                       (native only)
+             [--deadline-ms 0] [--max-starvation-ms 1000] [--model-quota Q]
+             [--model name=ckpt.json[@Q]]...                   (native only)
              [--artifacts DIR] [--checkpoint ckpt.json]        (xla only)
 
 With the `xla` feature, train/serve execute AOT artifacts on PJRT (run
@@ -61,7 +61,12 @@ backends: `train` fits the masked MLP on the synthetic task (add
 round-trip JSON checkpoints), `serve` serves the RBGP4 demo model from
 the kernel plan cache — or, with one `--model name=ckpt.json` per model,
 serves several trained checkpoints concurrently from one worker pool
-sharing one plan cache (per-model plan namespaces).";
+sharing one plan cache (per-model plan namespaces). A quota Q bounds how
+many requests a model may have queued at once (admission control): an
+integer is an absolute cap, a fraction in (0,1) is a share of
+--queue-cap, 0 means unlimited; --model-quota sets the default for every
+model and `--model name=ckpt.json@Q` overrides it per model, so one hot
+model cannot exhaust the queue the other models share.";
 
 fn main() {
     let args = Args::from_env();
@@ -363,6 +368,48 @@ fn save_native_checkpoint(args: &Args, trainer: &NativeTrainer) -> anyhow::Resul
     Ok(())
 }
 
+/// Parse a quota value: `0` = unlimited, a fraction in `(0, 1)` = fair
+/// share of the queue capacity, an integer ≥ 1 = absolute cap.
+fn parse_quota(text: &str, flag: &str) -> anyhow::Result<rbgp::coordinator::ModelQuota> {
+    use rbgp::coordinator::ModelQuota;
+    let v: f64 = text
+        .parse()
+        .map_err(|_| anyhow::anyhow!("{flag} expects a count or a fraction, got '{text}'"))?;
+    anyhow::ensure!(
+        v.is_finite() && v >= 0.0,
+        "{flag} expects a non-negative number, got '{text}'"
+    );
+    if v == 0.0 {
+        Ok(ModelQuota::Unlimited)
+    } else if v < 1.0 {
+        Ok(ModelQuota::FairShare(v))
+    } else {
+        anyhow::ensure!(
+            v.fract() == 0.0,
+            "{flag}: a quota above 1 must be a whole request count, got '{text}'"
+        );
+        Ok(ModelQuota::Absolute(v as usize))
+    }
+}
+
+/// Split a `--model` spec `name=path[@quota]`. A trailing `@Q` is a quota
+/// override only when `Q` parses as a quota; otherwise the `@` belongs to
+/// the path.
+#[cfg(not(feature = "xla"))]
+fn parse_model_spec(
+    spec: &str,
+) -> anyhow::Result<(String, String, Option<rbgp::coordinator::ModelQuota>)> {
+    let (name, rest) = spec
+        .split_once('=')
+        .ok_or_else(|| anyhow::anyhow!("--model expects name=checkpoint.json[@quota], got '{spec}'"))?;
+    if let Some((path, q)) = rest.rsplit_once('@') {
+        if let Ok(quota) = parse_quota(q, "--model quota") {
+            return Ok((name.to_string(), path.to_string(), Some(quota)));
+        }
+    }
+    Ok((name.to_string(), rest.to_string(), None))
+}
+
 fn serve_cmd(args: &Args) -> anyhow::Result<()> {
     let total = args.get_usize("requests", 512)?;
     let clients = args.get_usize("clients", 4)?.max(1);
@@ -376,11 +423,16 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
         0 => None,
         ms => Some(Duration::from_millis(ms)),
     };
+    let model_quota = match args.get("model-quota") {
+        Some(text) => parse_quota(text, "--model-quota")?,
+        None => rbgp::coordinator::ModelQuota::Unlimited,
+    };
     let base_config = ServerConfig {
         workers,
         queue_cap,
         default_deadline: deadline,
         max_starvation,
+        model_quota,
         ..ServerConfig::default()
     };
     let model_flags = args.get_all("model");
@@ -441,37 +493,51 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
                 base_config,
             )?
         } else {
-            // Multi-model registry path: every `--model name=ckpt.json`
+            // Multi-model registry path: every `--model name=ckpt.json[@Q]`
             // joins the same pool; the first named model doubles as the
-            // default route.
+            // default route. A per-model `@Q` quota overrides the
+            // server-wide --model-quota for that model.
             let mut checkpoints = Vec::new();
             for spec in &model_flags {
-                let (name, path) = spec.split_once('=').ok_or_else(|| {
-                    anyhow::anyhow!("--model expects name=checkpoint.json, got '{spec}'")
-                })?;
-                let ckpt = rbgp::coordinator::NativeCheckpoint::load(std::path::Path::new(path))?;
+                let (name, path, quota) = parse_model_spec(spec)?;
+                let ckpt = rbgp::coordinator::NativeCheckpoint::load(std::path::Path::new(&path))?;
                 println!(
-                    "model '{name}': {}→{}→{} from {path} (structure {:016x})",
+                    "model '{name}': {}→{}→{} from {path} (structure {:016x}{})",
                     ckpt.in_dim,
                     ckpt.hidden,
                     ckpt.classes,
-                    ckpt.structure_hash()
+                    ckpt.structure_hash(),
+                    match quota {
+                        Some(q) => format!(", quota {q:?}"),
+                        None => String::new(),
+                    }
                 );
-                checkpoints.push((name.to_string(), ckpt));
+                checkpoints.push((name, ckpt, quota));
             }
-            let (first_name, first) = &checkpoints[0];
+            let (first_name, first, first_quota) = &checkpoints[0];
             let server = InferenceServer::start_model_as(
                 first_name,
                 first.serving_factory(batch, threads, std::sync::Arc::clone(&cache)),
-                base_config,
+                ServerConfig {
+                    // The initial model registers through the config-level
+                    // quota; apply its per-model override there.
+                    model_quota: first_quota.unwrap_or(base_config.model_quota),
+                    ..base_config.clone()
+                },
             )?;
-            for (name, ckpt) in &checkpoints[1..] {
-                server.register_model(
+            for (name, ckpt, quota) in &checkpoints[1..] {
+                let factory = ckpt.serving_factory(batch, threads, std::sync::Arc::clone(&cache));
+                // Always pass an explicit quota: the server-level default
+                // was overridden to the *first* model's `@Q` above, and a
+                // later model without its own override must get the
+                // --model-quota default, not that first override.
+                server.register_model_with_quota(
                     name,
-                    ckpt.serving_factory(batch, threads, std::sync::Arc::clone(&cache)),
+                    quota.unwrap_or(base_config.model_quota),
+                    factory,
                 )?;
             }
-            for (name, ckpt) in &checkpoints {
+            for (name, ckpt, _) in &checkpoints {
                 routes.push((Some(name.clone()), ckpt.in_dim, ckpt.classes));
             }
             let (hits, misses) = cache.stats();
@@ -518,9 +584,12 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
                     };
                     match server.infer_with(b.x, opts) {
                         Ok(logits) => assert_eq!(logits.len(), *classes),
-                        // Under a --deadline-ms budget, expiry is expected
-                        // load-shedding, not a failure; rejected() reports it.
+                        // Under a --deadline-ms budget or a --model-quota,
+                        // expiry and admission rejections are expected
+                        // load-shedding, not failures; rejected() /
+                        // rejected_quota() report them.
                         Err(ServeError::DeadlineExceeded { .. }) => {}
+                        Err(ServeError::ModelQuotaExceeded { .. }) => {}
                         Err(e) => panic!("infer failed: {e}"),
                     }
                 }
@@ -547,28 +616,37 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
         );
     }
     let (rej_full, rej_late) = server.rejected();
-    if rej_full + rej_late > 0 {
-        println!("  rejected: {rej_full} backpressure, {rej_late} deadline-expired");
+    let rej_quota = server.rejected_quota();
+    if rej_full + rej_late + rej_quota > 0 {
+        println!(
+            "  rejected: {rej_full} backpressure, {rej_late} deadline-expired, \
+             {rej_quota} over model quota"
+        );
+    }
+    if server.steals() > 0 {
+        println!("  work steals: {} straggler windows cut for other models", server.steals());
     }
     for w in server.worker_stats() {
         println!(
-            "    worker {}: {} reqs in {} batches (occupancy {:.1}%)",
+            "    worker {}: {} reqs in {} batches (occupancy {:.1}%, {} steals)",
             w.worker,
             w.requests,
             w.batches,
-            w.occupancy() * 100.0
+            w.occupancy() * 100.0,
+            w.steals
         );
     }
     if routes.len() > 1 {
         for m in server.model_stats() {
             println!(
                 "    model '{}': {} reqs in {} batches (occupancy {:.1}%, \
-                 {} deadline-rejected, {} errors)",
+                 {} deadline-rejected, {} quota-rejected, {} errors)",
                 m.model,
                 m.requests,
                 m.batches,
                 m.occupancy() * 100.0,
                 m.rejected_deadline,
+                m.rejected_quota,
                 m.errors
             );
         }

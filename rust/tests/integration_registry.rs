@@ -8,15 +8,16 @@
 //! These run on the default (native) build — no artifacts, no `xla`.
 
 use rbgp::coordinator::{
-    BatchModel, InferenceServer, NativeCheckpoint, NativeTrainer, ServeError, ServerConfig,
-    SubmitOptions, DEFAULT_MODEL,
+    BatchModel, InferenceServer, ModelQuota, NativeCheckpoint, NativeTrainer, Priority,
+    ServeError, ServerConfig, SubmitOptions, DEFAULT_MODEL,
 };
 use rbgp::kernels::plan::SparseMatrix;
 use rbgp::kernels::PlanCache;
 use rbgp::sparsity::memory::Pattern;
 use rbgp::train_native::{GradualSchedule, NativeTrainConfig};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 const IN_DIM: usize = 64;
 const HIDDEN: usize = 64;
@@ -298,6 +299,382 @@ fn mixed_model_traffic_is_never_co_flushed() {
     let (requests, batches) = server.counters();
     assert_eq!(requests, clients * per_client);
     assert!(batches <= requests, "{batches} batches for {requests} requests");
+    server.shutdown();
+}
+
+/// A model that panics when fed its poison pill — simulates a worker
+/// crashing mid-flush under mixed multi-model traffic.
+struct PillModel;
+
+impl BatchModel for PillModel {
+    fn batch(&self) -> usize {
+        1
+    }
+    fn in_dim(&self) -> usize {
+        1
+    }
+    fn classes(&self) -> usize {
+        1
+    }
+    fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        assert!(x[0] < 0.5, "poison pill");
+        Ok(x.to_vec())
+    }
+}
+
+#[test]
+fn panicking_model_under_mixed_traffic_does_not_strand_index_entries() {
+    let server = InferenceServer::start_model_as(
+        "t1",
+        || Ok(Box::new(TagModel { tag: 1.0, batch: 2 }) as Box<dyn BatchModel>),
+        ServerConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(1),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    server
+        .register_model("boom", || Ok(Box::new(PillModel) as Box<dyn BatchModel>))
+        .unwrap();
+
+    // Healthy mixed traffic on both models first.
+    for _ in 0..4 {
+        assert_eq!(
+            server
+                .infer_with(vec![1.0], SubmitOptions::default().with_model("t1"))
+                .unwrap(),
+            vec![1.0]
+        );
+        assert_eq!(
+            server
+                .infer_with(vec![0.0], SubmitOptions::default().with_model("boom"))
+                .unwrap(),
+            vec![0.0]
+        );
+    }
+    // The pill kills one of the two workers mid-flush; its client sees the
+    // typed dropped-request error, not a hang.
+    assert!(matches!(
+        server.infer_with(vec![1.0], SubmitOptions::default().with_model("boom")),
+        Err(ServeError::Stopped)
+    ));
+    // The surviving worker keeps serving BOTH models: the dead worker's
+    // unwind dropped its claims, and no entry was stranded in either the
+    // primary FIFOs or the per-model index.
+    for _ in 0..4 {
+        assert_eq!(
+            server
+                .infer_with(vec![1.0], SubmitOptions::default().with_model("t1"))
+                .unwrap(),
+            vec![1.0]
+        );
+        assert_eq!(
+            server
+                .infer_with(vec![0.0], SubmitOptions::default().with_model("boom"))
+                .unwrap(),
+            vec![0.0]
+        );
+    }
+    assert_eq!(server.queue_depth(), 0, "no stranded entries");
+    assert_eq!(server.model_queue_depth("t1"), 0);
+    assert_eq!(server.model_queue_depth("boom"), 0);
+    // Unregistering the panicky model drains instantly (claims == 0) and
+    // its eviction accounting is exact: these models are not plan-cached,
+    // so exactly nothing is evicted.
+    let report = server.unregister_model("boom").unwrap();
+    assert_eq!(report.drained_requests, 0, "panic unwind dropped all claims");
+    assert!(report.evicted_structures.is_empty());
+    assert!(report.retained_structures.is_empty());
+    assert_eq!(report.evicted_plans, 0);
+    assert_eq!(server.models(), vec!["t1".to_string()]);
+    assert_eq!(
+        server
+            .infer_with(vec![1.0], SubmitOptions::default().with_model("t1"))
+            .unwrap(),
+        vec![1.0]
+    );
+    server.shutdown();
+}
+
+/// A tagging model that blocks inside `forward` until its gate channel
+/// drops — lets tests pin the (single) worker and build queue backlogs
+/// deterministically.
+struct GatedTagModel {
+    gate: mpsc::Receiver<()>,
+    batch: usize,
+    log: Arc<Mutex<Vec<f32>>>,
+}
+
+impl BatchModel for GatedTagModel {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn in_dim(&self) -> usize {
+        1
+    }
+    fn classes(&self) -> usize {
+        1
+    }
+    fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.log.lock().unwrap().extend_from_slice(x);
+        let _ = self.gate.recv(); // blocks until the test drops the gate
+        Ok(x.to_vec())
+    }
+}
+
+fn gated_server(
+    batch: usize,
+    config: ServerConfig,
+) -> (InferenceServer, mpsc::Sender<()>, Arc<Mutex<Vec<f32>>>) {
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let slot = Arc::new(Mutex::new(Some(gate_rx)));
+    let factory_log = Arc::clone(&log);
+    let server = InferenceServer::start_model_as(
+        "slow",
+        move || {
+            let gate = slot.lock().unwrap().take().expect("single worker");
+            Ok(Box::new(GatedTagModel {
+                gate,
+                batch,
+                log: Arc::clone(&factory_log),
+            }) as Box<dyn BatchModel>)
+        },
+        config,
+    )
+    .unwrap();
+    (server, gate_tx, log)
+}
+
+#[test]
+fn unregister_during_steal_drains_cleanly() {
+    // Single worker, batch-4 gated model "slow", long straggler window:
+    // the worker pops slow#1 and sits waiting for slow stragglers — until
+    // model "bye"'s backlog fires the steal hint.
+    let (server, gate_tx, _log) = gated_server(
+        4,
+        ServerConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(400),
+            ..ServerConfig::default()
+        },
+    );
+    server
+        .register_model("bye", || {
+            Ok(Box::new(TagModel { tag: 2.0, batch: 4 }) as Box<dyn BatchModel>)
+        })
+        .unwrap();
+
+    let rx_slow = server
+        .submit_with(vec![1.0], SubmitOptions::default().with_model("slow"))
+        .unwrap();
+    // Backlog for "bye" while the worker is inside slow's straggler
+    // window: the steal hint makes it flush slow#1 alone (well before the
+    // 400 ms window closes) and block on the gate.
+    let rx_bye: Vec<_> = (0..3)
+        .map(|_| {
+            server
+                .submit_with(vec![2.0], SubmitOptions::default().with_model("bye"))
+                .unwrap()
+        })
+        .collect();
+    // Retire "bye" while its three requests are still queued: the drain
+    // must block on exactly those claims.
+    let unregister = std::thread::spawn({
+        let server = server.clone();
+        move || server.unregister_model("bye").unwrap()
+    });
+    // Retire has begun once the public model list shrinks; new "bye"
+    // submits are already rejected while the drain runs.
+    while server.models().len() == 2 {
+        std::thread::yield_now();
+    }
+    assert!(matches!(
+        server.infer_with(vec![2.0], SubmitOptions::default().with_model("bye")),
+        Err(ServeError::UnknownModel { .. })
+    ));
+    // A second slow request: after draining the byes the worker steals
+    // back to "slow" instead of idling out bye's straggler window.
+    let rx_slow2 = server
+        .submit_with(vec![1.0], SubmitOptions::default().with_model("slow"))
+        .unwrap();
+    // The byes cannot be served while the gate pins the worker; give the
+    // unregister thread ample time to snapshot its in-flight count, then
+    // release the worker: everything drains, the unregister completes.
+    std::thread::sleep(Duration::from_millis(50));
+    drop(gate_tx);
+    let report = unregister.join().unwrap();
+    assert_eq!(report.model, "bye");
+    assert_eq!(report.drained_requests, 3, "exactly the queued bye claims");
+    assert!(report.evicted_structures.is_empty(), "TagModel is not plan-cached");
+    assert_eq!(report.evicted_plans, 0);
+    assert_eq!(rx_slow.recv().unwrap().unwrap(), vec![1.0]);
+    for rx in rx_bye {
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![2.0], "drained, not dropped");
+    }
+    assert_eq!(rx_slow2.recv().unwrap().unwrap(), vec![1.0]);
+    assert_eq!(server.model_queue_depth("bye"), 0, "index left empty");
+    assert_eq!(server.queue_depth(), 0);
+    assert_eq!(server.models(), vec!["slow".to_string()]);
+    assert!(server.steals() >= 1, "the cut straggler window is a recorded steal");
+    // Per-model history survives the unregister, with no co-flush errors.
+    let stats = server.model_stats();
+    let bye = stats.iter().find(|m| m.model == "bye").unwrap();
+    assert_eq!((bye.requests, bye.errors), (3, 0), "{stats:?}");
+    server.shutdown();
+}
+
+#[test]
+fn cold_model_is_served_within_starvation_bounds_under_hot_skew() {
+    // ~99:1 skew: closed-loop High-priority traffic on "hot" from two
+    // clients against a single worker, then one Low request on "cold".
+    // Age promotion (Low → Normal → High at `period` steps) must surface
+    // the cold request in bounded time; strict priority would hold it for
+    // the whole flood.
+    let period = Duration::from_millis(40);
+    let server = InferenceServer::start_model_as(
+        "hot",
+        || Ok(Box::new(TagModel { tag: 1.0, batch: 4 }) as Box<dyn BatchModel>),
+        ServerConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            max_starvation: Some(period),
+            queue_cap: 64,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    server
+        .register_model("cold", || {
+            Ok(Box::new(TagModel { tag: 2.0, batch: 2 }) as Box<dyn BatchModel>)
+        })
+        .unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        for _ in 0..2 {
+            let server = server.clone();
+            let stop = Arc::clone(&stop);
+            scope.spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    let opts = SubmitOptions::default()
+                        .with_model("hot")
+                        .with_priority(Priority::High);
+                    match server.infer_with(vec![1.0], opts) {
+                        Ok(got) => assert_eq!(got, vec![1.0]),
+                        Err(ServeError::QueueFull { .. }) => std::thread::yield_now(),
+                        Err(e) => panic!("hot traffic failed: {e}"),
+                    }
+                }
+            });
+        }
+        // Let the hot flood establish itself, then send the cold request.
+        std::thread::sleep(Duration::from_millis(50));
+        let t0 = Instant::now();
+        let rx = server
+            .submit_with(
+                vec![2.0],
+                SubmitOptions::default().with_model("cold").with_priority(Priority::Low),
+            )
+            .unwrap();
+        let outcome = rx.recv_timeout(Duration::from_secs(5));
+        let waited = t0.elapsed();
+        stop.store(true, Ordering::Release);
+        let got = outcome
+            .unwrap_or_else(|_| panic!("cold model starved for {waited:?} under hot skew"))
+            .unwrap();
+        assert_eq!(got, vec![2.0]);
+        // Low → High promotion takes 2 × 40 ms; leave a generous service
+        // margin on top. The hot flood runs on long after this bound.
+        assert!(
+            waited < Duration::from_secs(2),
+            "cold request exceeded the starvation bound: {waited:?}"
+        );
+    });
+    // Steals and promotion never co-flushed the two models: TagModel
+    // errors loudly on any foreign (or padded-foreign) sample.
+    let stats = server.model_stats();
+    for m in &stats {
+        assert_eq!(m.errors, 0, "co-flush detected: {stats:?}");
+    }
+    let cold = stats.iter().find(|m| m.model == "cold").unwrap();
+    assert_eq!(cold.requests, 1);
+    server.shutdown();
+}
+
+#[test]
+fn saturated_hot_model_never_blocks_cold_submits() {
+    // Single gated batch-1 worker, hot quota 4 on a cap-8 queue: the hot
+    // backlog saturates its quota while the shared queue keeps room.
+    let (server, gate_tx, log) = gated_server(
+        1,
+        ServerConfig {
+            workers: 1,
+            queue_cap: 8,
+            max_wait: Duration::from_millis(1),
+            model_quota: ModelQuota::Absolute(4),
+            ..ServerConfig::default()
+        },
+    );
+    server
+        .register_model_with_quota("cold", ModelQuota::Absolute(2), || {
+            Ok(Box::new(TagModel { tag: 2.0, batch: 2 }) as Box<dyn BatchModel>)
+        })
+        .unwrap();
+
+    // Occupy the worker (its pop leaves the queue, not the backlog).
+    let rx0 = server
+        .submit_with(vec![0.5], SubmitOptions::default().with_model("slow"))
+        .unwrap();
+    while log.lock().unwrap().is_empty() {
+        std::thread::yield_now();
+    }
+    // Fill the hot model's quota with queued requests.
+    let queued: Vec<_> = (0..4)
+        .map(|_| {
+            server
+                .submit_with(vec![0.5], SubmitOptions::default().with_model("slow"))
+                .unwrap()
+        })
+        .collect();
+    assert_eq!(server.model_queue_depth("slow"), 4);
+    // Saturated: the hot model gets the typed per-model rejection …
+    match server.submit_with(vec![0.5], SubmitOptions::default().with_model("slow")) {
+        Err(ServeError::ModelQuotaExceeded { model, quota }) => {
+            assert_eq!((model.as_str(), quota), ("slow", 4));
+        }
+        other => panic!(
+            "expected ModelQuotaExceeded, got {:?}",
+            other.map(|_| ())
+        ),
+    }
+    // … while the cold model's submit sails through: the quota kept the
+    // shared queue (cap 8) from being exhausted by the hot model.
+    let rx_cold = server
+        .submit_with(vec![2.0], SubmitOptions::default().with_model("cold"))
+        .unwrap();
+    assert_eq!(server.model_queue_depth("cold"), 1);
+    assert_eq!(server.rejected_quota(), 1);
+    assert_eq!(server.rejected(), (0, 0), "never surfaced as QueueFull");
+    let stats = server.model_stats();
+    let hot = stats.iter().find(|m| m.model == "slow").unwrap();
+    assert_eq!(hot.rejected_quota, 1, "{stats:?}");
+    // Release the worker: every accepted request is served, and the
+    // drained quota admits hot traffic again.
+    drop(gate_tx);
+    assert_eq!(rx0.recv().unwrap().unwrap(), vec![0.5]);
+    for rx in queued {
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![0.5]);
+    }
+    assert_eq!(rx_cold.recv().unwrap().unwrap(), vec![2.0]);
+    assert_eq!(server.model_queue_depth("slow"), 0);
+    assert_eq!(
+        server
+            .infer_with(vec![0.5], SubmitOptions::default().with_model("slow"))
+            .unwrap(),
+        vec![0.5]
+    );
     server.shutdown();
 }
 

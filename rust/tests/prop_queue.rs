@@ -1,0 +1,422 @@
+//! Property suite for the serving queue's dual-view core
+//! (`coordinator::serving::queue`): under random interleavings of
+//! submit / pop / model-filtered pop (with age promotion and expired
+//! deadlines mixed in), the queue must
+//!
+//! * pop in exactly the order a brute-force oracle over the same entries
+//!   predicts — the per-model index and the primary FIFOs are two views
+//!   of one set, never two sets;
+//! * keep **exact conservation**: every accepted submit is answered
+//!   exactly once — served, deadline-rejected, or failed at close —
+//!   and every rejected submit is answered zero times;
+//! * enforce admission quotas exactly: a model's queued count never
+//!   exceeds its quota, never goes negative (the count is audited against
+//!   the live entries by `check_invariants`), and quota rejections are
+//!   predicted exactly by the oracle in the sequential tests and bounded
+//!   observably under 1/4/8-thread races in the concurrent ones.
+//!
+//! All cases are generated from the seeded in-house harness
+//! (`util::prop::check`, replayable via `RBGP_PROP_SEED`); the concurrent
+//! tests assert only interleaving-independent invariants, so they are
+//! deterministic pass/fail under any scheduler.
+
+use rbgp::coordinator::serving::queue::{Priority, QueuedRequest, RequestQueue};
+use rbgp::coordinator::serving::registry::ModelClaim;
+use rbgp::coordinator::ServeError;
+use rbgp::util::prop::{check, gen};
+use rbgp::util::rng::Rng;
+use rbgp::{prop_assert, prop_assert_eq};
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+type Rx = mpsc::Receiver<Result<Vec<f32>, ServeError>>;
+
+const MODELS: [&str; 3] = ["a", "b", "c"];
+
+/// Age-promotion period for the oracle tests. Ages are manufactured by
+/// backdating `enqueued`, so the period only needs to dwarf a single
+/// case's wall time (milliseconds) for `floor(waited / period)` to stay
+/// exactly the manufactured age.
+const PERIOD: Duration = Duration::from_secs(20);
+
+fn priority_of(class: usize) -> Priority {
+    match class {
+        0 => Priority::High,
+        1 => Priority::Normal,
+        _ => Priority::Low,
+    }
+}
+
+/// The reference model of one queued entry.
+struct OracleEntry {
+    seq: u64,
+    class: usize,
+    model: usize,
+    id: u32,
+    age: usize,
+}
+
+/// Brute-force reference pop: the earliest entry per class (restricted to
+/// `model` if given), ranked by `(class - age, seq)` — exactly the
+/// contract `RequestQueue::take_next` implements through its dual views.
+fn oracle_pop(
+    entries: &mut Vec<OracleEntry>,
+    model: Option<usize>,
+    promote: bool,
+) -> Option<OracleEntry> {
+    let mut best: Option<(usize, u64)> = None;
+    let mut best_idx: Option<usize> = None;
+    for class in 0..3 {
+        let cand = entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.class == class && model.is_none_or(|m| e.model == m))
+            .min_by_key(|(_, e)| e.seq);
+        if let Some((idx, e)) = cand {
+            let eff = if promote { class.saturating_sub(e.age) } else { class };
+            if best.is_none_or(|b| (eff, e.seq) < b) {
+                best = Some((eff, e.seq));
+                best_idx = Some(idx);
+            }
+        }
+    }
+    best_idx.map(|i| entries.remove(i))
+}
+
+/// Build a request for `model`, backdated by `age` promotion periods
+/// (clamped to 0 when the monotonic clock is too young to backdate — a
+/// freshly booted VM) and optionally carrying an already-expired deadline.
+fn make_req(model: &str, id: u32, age: &mut usize, expired: bool) -> (QueuedRequest, Rx) {
+    let now = Instant::now();
+    let enqueued = match now.checked_sub(PERIOD * *age as u32) {
+        Some(t) => t,
+        None => {
+            *age = 0;
+            now
+        }
+    };
+    let (tx, rx) = mpsc::channel();
+    (
+        QueuedRequest {
+            x: vec![id as f32],
+            enqueued,
+            deadline: expired.then_some(now),
+            respond: tx,
+            claim: ModelClaim::detached(model, 1, 1, 1),
+        },
+        rx,
+    )
+}
+
+/// Answer a popped request the way a worker would (expired deadlines get
+/// the typed error) and check it against the oracle's prediction.
+fn compare(
+    got: Option<QueuedRequest>,
+    want: Option<OracleEntry>,
+    popped: &mut HashSet<u32>,
+) -> Result<(), String> {
+    match (got, want) {
+        (None, None) => Ok(()),
+        (Some(r), Some(w)) => {
+            prop_assert_eq!(r.x[0] as u32, w.id, "pop order diverged from the oracle");
+            popped.insert(w.id);
+            if r.deadline.is_some_and(|dl| Instant::now() >= dl) {
+                let _ = r.respond.send(Err(ServeError::DeadlineExceeded {
+                    waited: r.enqueued.elapsed(),
+                }));
+            } else {
+                let _ = r.respond.send(Ok(r.x.clone()));
+            }
+            Ok(())
+        }
+        (got, want) => Err(format!(
+            "queue and oracle disagree on emptiness: queue {:?}, oracle {:?}",
+            got.map(|r| r.x[0]),
+            want.map(|w| w.id)
+        )),
+    }
+}
+
+/// One randomized interleaving checked against the oracle, op by op.
+fn run_oracle_case(rng: &mut Rng, promote: bool) -> Result<(), String> {
+    let cap = gen::range(rng, 4, 10);
+    let quota = gen::range(rng, 2, 4);
+    let q = RequestQueue::new(cap, promote.then_some(PERIOD));
+    let mut oracle: Vec<OracleEntry> = Vec::new();
+    let mut receivers: Vec<(u32, bool, Rx)> = Vec::new();
+    let mut popped: HashSet<u32> = HashSet::new();
+    let mut next_id = 0u32;
+    let mut next_seq = 0u64;
+
+    let ops = gen::range(rng, 40, 80);
+    for op in 0..ops {
+        let dice = rng.below(100);
+        if dice < 55 {
+            // Submit: the oracle predicts accept / quota-reject /
+            // full-reject exactly.
+            let model = rng.below_usize(MODELS.len());
+            let class = rng.below_usize(3);
+            let mut age = if promote { rng.below_usize(3) } else { 0 };
+            let expired = rng.below(10) == 0;
+            let (req, rx) = make_req(MODELS[model], next_id, &mut age, expired);
+            let res = q.push(req, priority_of(class), Some(quota));
+            let model_queued = oracle.iter().filter(|e| e.model == model).count();
+            if model_queued >= quota {
+                prop_assert!(
+                    matches!(res, Err(ServeError::ModelQuotaExceeded { .. })),
+                    "expected ModelQuotaExceeded at {model_queued}/{quota} queued, got {:?}",
+                    res.as_ref().map(|_| ())
+                );
+            } else if oracle.len() >= cap {
+                prop_assert!(
+                    matches!(res, Err(ServeError::QueueFull { .. })),
+                    "expected QueueFull at depth {}/{cap}, got {:?}",
+                    oracle.len(),
+                    res.as_ref().map(|_| ())
+                );
+            } else {
+                prop_assert!(
+                    res.is_ok(),
+                    "expected accept ({model_queued}/{quota} queued, depth {}/{cap}), got {:?}",
+                    oracle.len(),
+                    res.as_ref().map(|_| ())
+                );
+                oracle.push(OracleEntry {
+                    seq: next_seq,
+                    class,
+                    model,
+                    id: next_id,
+                    age,
+                });
+                next_seq += 1;
+                receivers.push((next_id, expired, rx));
+            }
+            next_id += 1;
+        } else if dice < 80 {
+            let got = q.pop_until(Instant::now());
+            let want = oracle_pop(&mut oracle, None, promote);
+            compare(got, want, &mut popped)?;
+        } else {
+            let m = rng.below_usize(MODELS.len());
+            let got = q.pop_model_until(MODELS[m], Instant::now());
+            let want = oracle_pop(&mut oracle, Some(m), promote);
+            compare(got, want, &mut popped)?;
+        }
+        if op % 8 == 0 {
+            q.check_invariants();
+        }
+    }
+
+    // Bijection: depth and per-model backlogs agree with the oracle.
+    prop_assert_eq!(q.len(), oracle.len(), "queue depth diverged from the oracle");
+    for (mi, m) in MODELS.iter().enumerate() {
+        prop_assert_eq!(
+            q.model_backlog(m),
+            oracle.iter().filter(|e| e.model == mi).count(),
+            "model '{m}' backlog diverged from the oracle"
+        );
+    }
+    q.check_invariants();
+
+    // Conservation: fail the remainder at close; every accepted submit
+    // was answered exactly once with the outcome its history dictates.
+    q.close_and_fail_pending();
+    for (id, expired, rx) in receivers {
+        let first = rx
+            .try_recv()
+            .map_err(|e| format!("request {id} was never answered: {e}"))?;
+        match (popped.contains(&id), expired, first) {
+            (true, false, Ok(x)) => {
+                prop_assert_eq!(x[0] as u32, id, "answer routed to the wrong receiver");
+            }
+            (true, true, Err(ServeError::DeadlineExceeded { .. })) => {}
+            (false, _, Err(ServeError::Stopped)) => {}
+            (was_popped, was_expired, other) => {
+                return Err(format!(
+                    "request {id}: unexpected outcome {other:?} \
+                     (popped={was_popped}, expired={was_expired})"
+                ));
+            }
+        }
+        prop_assert!(rx.try_recv().is_err(), "request {id} was answered twice");
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_pop_order_matches_oracle_strict_priority() {
+    check("queue == oracle, strict priority + quotas", 25, |rng| {
+        run_oracle_case(rng, false)
+    });
+}
+
+#[test]
+fn prop_pop_order_matches_oracle_with_age_promotion() {
+    check("queue == oracle, age promotion + quotas", 25, |rng| {
+        run_oracle_case(rng, true)
+    });
+}
+
+/// Concurrent half of the suite: producers and a mixed popper fleet
+/// (global + model-filtered) race on one queue while a sampler thread
+/// continuously observes the quota and capacity bounds. Asserts only
+/// interleaving-independent facts: bounds always hold, the drained queue
+/// is empty and internally consistent, and conservation is exact.
+fn run_concurrent_case(popper_threads: usize, base_seed: u64) {
+    const QUOTA: usize = 5;
+    const CAP: usize = 12;
+    const PRODUCERS: usize = 2;
+    const PUSHES_PER_PRODUCER: usize = 400;
+
+    let q = Arc::new(RequestQueue::new(CAP, Some(Duration::from_millis(10))));
+    let answered = Arc::new(AtomicUsize::new(0));
+    let stop_sampler = Arc::new(AtomicBool::new(false));
+
+    std::thread::scope(|scope| {
+        let mut popper_handles = Vec::new();
+        for t in 0..popper_threads {
+            let q = Arc::clone(&q);
+            let answered = Arc::clone(&answered);
+            popper_handles.push(scope.spawn(move || {
+                if t % 2 == 0 {
+                    // Global popper: drains everything, exits on
+                    // closed-and-drained.
+                    while let Some(r) = q.pop_blocking() {
+                        let _ = r.respond.send(Ok(r.x.clone()));
+                        answered.fetch_add(1, Ordering::Relaxed);
+                    }
+                } else {
+                    // Model-filtered popper: exercises the per-model index
+                    // under contention.
+                    let model = MODELS[t % MODELS.len()];
+                    loop {
+                        let until = Instant::now() + Duration::from_millis(2);
+                        match q.pop_model_until(model, until) {
+                            Some(r) => {
+                                let _ = r.respond.send(Ok(r.x.clone()));
+                                answered.fetch_add(1, Ordering::Relaxed);
+                            }
+                            None => {
+                                if q.is_closed() && q.model_backlog(model) == 0 {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+
+        let sampler = {
+            let q = Arc::clone(&q);
+            let stop = Arc::clone(&stop_sampler);
+            scope.spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    for m in MODELS {
+                        let backlog = q.model_backlog(m);
+                        assert!(
+                            backlog <= QUOTA,
+                            "model '{m}' backlog {backlog} exceeded quota {QUOTA} mid-race"
+                        );
+                    }
+                    assert!(q.len() <= CAP, "queue depth exceeded its capacity mid-race");
+                    std::thread::yield_now();
+                }
+            })
+        };
+
+        let mut producer_handles = Vec::new();
+        for p in 0..PRODUCERS {
+            let q = Arc::clone(&q);
+            producer_handles.push(scope.spawn(move || {
+                let mut rng = Rng::new(base_seed + p as u64);
+                let mut accepted: Vec<(f32, Rx)> = Vec::new();
+                let mut rejected = 0usize;
+                for i in 0..PUSHES_PER_PRODUCER {
+                    let id = (p * PUSHES_PER_PRODUCER + i) as f32;
+                    let model = MODELS[rng.below_usize(MODELS.len())];
+                    let class = priority_of(rng.below_usize(3));
+                    let (tx, rx) = mpsc::channel();
+                    let req = QueuedRequest {
+                        x: vec![id],
+                        enqueued: Instant::now(),
+                        deadline: None,
+                        respond: tx,
+                        claim: ModelClaim::detached(model, 1, 1, 1),
+                    };
+                    match q.push(req, class, Some(QUOTA)) {
+                        Ok(depth) => {
+                            assert!(depth <= CAP, "push reported a depth past capacity");
+                            accepted.push((id, rx));
+                        }
+                        Err(ServeError::ModelQuotaExceeded { model: m, quota }) => {
+                            assert_eq!((m.as_str(), quota), (model, QUOTA));
+                            rejected += 1;
+                        }
+                        Err(ServeError::QueueFull { cap }) => {
+                            assert_eq!(cap, CAP);
+                            rejected += 1;
+                        }
+                        Err(e) => panic!("unexpected push error: {e:?}"),
+                    }
+                    if rng.below(4) == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+                (accepted, rejected)
+            }));
+        }
+
+        let mut all_accepted: Vec<(f32, Rx)> = Vec::new();
+        let mut total_rejected = 0usize;
+        for h in producer_handles {
+            let (accepted, rejected) = h.join().unwrap();
+            all_accepted.extend(accepted);
+            total_rejected += rejected;
+        }
+        q.close();
+        for h in popper_handles {
+            h.join().unwrap();
+        }
+        stop_sampler.store(true, Ordering::Release);
+        sampler.join().unwrap();
+
+        q.check_invariants();
+        assert_eq!(q.len(), 0, "closed queue must drain to empty");
+        assert!(q.model_backlogs().is_empty(), "no model may retain backlog");
+        assert_eq!(
+            all_accepted.len() + total_rejected,
+            PRODUCERS * PUSHES_PER_PRODUCER,
+            "every push accounted for exactly once"
+        );
+        assert_eq!(
+            answered.load(Ordering::Relaxed),
+            all_accepted.len(),
+            "every accepted entry popped exactly once"
+        );
+        for (id, rx) in &all_accepted {
+            match rx.try_recv() {
+                Ok(Ok(x)) => assert_eq!(x[0], *id, "answer routed to the wrong receiver"),
+                other => panic!("request {id} lost or failed: {other:?}"),
+            }
+            assert!(rx.try_recv().is_err(), "request {id} answered twice");
+        }
+    });
+}
+
+#[test]
+fn prop_concurrent_conservation_and_quota_1_thread() {
+    run_concurrent_case(1, 0xC0FFEE01);
+}
+
+#[test]
+fn prop_concurrent_conservation_and_quota_4_threads() {
+    run_concurrent_case(4, 0xC0FFEE04);
+}
+
+#[test]
+fn prop_concurrent_conservation_and_quota_8_threads() {
+    run_concurrent_case(8, 0xC0FFEE08);
+}
