@@ -2,26 +2,32 @@
 //! trait — the perf-iteration harness used for EXPERIMENTS.md §Perf.
 //!
 //! For each registered family × batch size × thread count the harness
-//! reports three numbers (median ± MAD):
+//! reports (median ± MAD):
 //!
 //! * **plan**    — time to build the execution plan (`build_plan`), i.e.
-//!   the cost the plan cache amortizes away;
+//!   the cost the plan cache amortizes away — under the selected tune mode
+//!   this includes the schedule search;
 //! * **execute** — time to run from a prebuilt plan (the cached hot path);
 //! * **per-call** — the historical free-function path that re-derives
-//!   structure and reallocates scratch every call (the seed baseline).
+//!   structure and reallocates scratch every call (the seed baseline);
+//! * roofline placement — arithmetic intensity (flops/byte), achieved
+//!   bandwidth, and the fraction of the machine's roofline-attainable
+//!   GFLOP/s the kernel reaches (probe: STREAM triad + FMA peak);
+//! * **heuristic vs tuned** — GFLOP/s of the fixed-heuristic (`--tune
+//!   off`) plan next to the autotuned one.
 //!
 //! Results are also written to `BENCH_kernels.json` (in the cargo package
-//! root, where `cargo bench` runs) so future PRs have a perf trajectory:
-//! each row records plan-build ms, execute ms, per-call ms, GFLOP/s of the
-//! cached path, and the cached-vs-per-call speedup.
+//! root, where `cargo bench` runs) so future PRs have a perf trajectory.
 //!
-//! `cargo bench --bench kernels_microbench` (RBGP_BENCH_FAST=1 quick pass)
+//! `cargo bench --bench kernels_microbench [-- --tune off|quick|full]`
+//! (RBGP_BENCH_FAST=1 quick pass; tune defaults to quick)
 
+use rbgp::kernels::autotune::TuneMode;
 use rbgp::kernels::plan::{PlanRequest, SparseMatrix};
 use rbgp::kernels::registry::KernelRegistry;
 use rbgp::kernels::{
     bsr_sdmm, bsr_sdmm_parallel, csr_sdmm, csr_sdmm_parallel, gemm_blocked, gemm_parallel,
-    rbgp4mm, rbgp4mm_parallel,
+    machine_probe, rbgp4mm, rbgp4mm_parallel,
 };
 use rbgp::sparsity::bsr::BsrMatrix;
 use rbgp::sparsity::csr::CsrMatrix;
@@ -41,7 +47,12 @@ struct Row {
     execute: BenchStats,
     percall: BenchStats,
     gflops: f64,
+    gflops_heuristic: f64,
     speedup_vs_percall: f64,
+    ai_flops_per_byte: f64,
+    achieved_gbps: f64,
+    roofline_fraction: f64,
+    tuned_params: String,
 }
 
 impl Row {
@@ -58,14 +69,19 @@ impl Row {
             .set("execute_mad_ms", self.execute.mad * 1e3)
             .set("percall_ms", self.percall.median_ms())
             .set("gflops", self.gflops)
-            .set("speedup_vs_percall", self.speedup_vs_percall);
+            .set("gflops_heuristic", self.gflops_heuristic)
+            .set("speedup_vs_percall", self.speedup_vs_percall)
+            .set("ai_flops_per_byte", self.ai_flops_per_byte)
+            .set("achieved_gbps", self.achieved_gbps)
+            .set("roofline_fraction", self.roofline_fraction)
+            .set("tuned_params", self.tuned_params.as_str());
         j
     }
 
     fn print(&self) {
         println!(
             "{:<10} t={:<2} n={:<5} plan {:>9.4} ms   execute {:>9.3} ms ±{:>7.3}   \
-             per-call {:>9.3} ms   {:>7.2} GFLOP/s   cached {:>5.2}x vs per-call",
+             per-call {:>9.3} ms   {:>7.2} GFLOP/s (heur {:>7.2})   cached {:>5.2}x",
             self.kernel,
             self.threads,
             self.n,
@@ -74,7 +90,16 @@ impl Row {
             self.execute.mad * 1e3,
             self.percall.median_ms(),
             self.gflops,
+            self.gflops_heuristic,
             self.speedup_vs_percall,
+        );
+        println!(
+            "{:<10}                AI {:>6.2} flop/B   {:>7.2} GB/s   roofline {:>5.1}%   [{}]",
+            "",
+            self.ai_flops_per_byte,
+            self.achieved_gbps,
+            self.roofline_fraction * 100.0,
+            self.tuned_params,
         );
     }
 }
@@ -88,14 +113,25 @@ fn bench_family(
     o: &mut [f32],
     n: usize,
     threads: usize,
+    tune: TuneMode,
     percall: &mut dyn FnMut(&[f32], &mut [f32]),
 ) -> Row {
     let kernel = registry.for_matrix(w).expect("registered kernel");
-    let req = PlanRequest { n, threads };
+    let req = PlanRequest::new(n, threads).with_tune(tune);
 
     let plan_build = bench_fn(cfg, || {
         let plan = kernel.build_plan(w, &req).expect("plan");
         std::hint::black_box(&plan);
+    });
+
+    // The fixed-heuristic baseline the tuner must not lose to.
+    let off = PlanRequest::new(n, threads).with_tune(TuneMode::Off);
+    let mut heuristic_plan = kernel.build_plan(w, &off).expect("heuristic plan");
+    let heuristic = bench_fn(cfg, || {
+        kernel
+            .execute(w, &mut heuristic_plan, i, o, n)
+            .expect("execute");
+        std::hint::black_box(&o);
     });
 
     let mut plan = kernel.build_plan(w, &req).expect("plan");
@@ -109,16 +145,37 @@ fn bench_family(
         std::hint::black_box(&o);
     });
 
+    let gflops = w.flops(n) / execute.median / 1e9;
+    let ai = w.arithmetic_intensity(n);
     Row {
         kernel: kernel.name(),
         threads,
         n,
-        gflops: w.flops(n) / execute.median / 1e9,
+        gflops,
+        gflops_heuristic: w.flops(n) / heuristic.median / 1e9,
         speedup_vs_percall: percall.median / execute.median,
+        ai_flops_per_byte: ai,
+        achieved_gbps: w.bytes_touched(n) / execute.median / 1e9,
+        roofline_fraction: gflops / machine_probe().attainable_gflops(ai),
+        tuned_params: plan
+            .tuned
+            .as_ref()
+            .map(|t| t.params.clone())
+            .unwrap_or_else(|| "heuristic".to_string()),
         plan_build,
         execute,
         percall,
     }
+}
+
+fn tune_from_args() -> TuneMode {
+    let args: Vec<String> = std::env::args().collect();
+    for pair in args.windows(2) {
+        if pair[0] == "--tune" {
+            return TuneMode::parse(&pair[1]).expect("--tune off|quick|full");
+        }
+    }
+    TuneMode::default()
 }
 
 fn main() {
@@ -126,11 +183,19 @@ fn main() {
     let sp = 0.875;
     let par = default_threads();
     let cfg = BenchConfig::from_env();
+    let tune = tune_from_args();
     let mut rng = Rng::new(3);
 
+    let probe = machine_probe();
     println!(
-        "kernels microbench — SDMM ({m}×{k})·({k}×n), sparsity {:.1}%, parallel = {par} threads\n",
+        "kernels microbench — SDMM ({m}×{k})·({k}×n), sparsity {:.1}%, parallel = {par} threads",
         sp * 100.0
+    );
+    println!(
+        "machine probe: {:.2} GB/s stream, {:.2} GFLOP/s fma peak — tune mode {}\n",
+        probe.peak_gbps,
+        probe.peak_gflops,
+        tune.name()
     );
 
     // Weight operands, one per family, all at the same shape/sparsity
@@ -195,7 +260,8 @@ fn main() {
                         }
                     }
                 };
-                let row = bench_family(&registry, &cfg, w, &i, &mut o, n, t, percall.as_mut());
+                let row =
+                    bench_family(&registry, &cfg, w, &i, &mut o, n, t, tune, percall.as_mut());
                 row.print();
                 rows.push(row);
             }
@@ -210,6 +276,9 @@ fn main() {
         .set("k", k)
         .set("sparsity", sp)
         .set("parallel_threads", par)
+        .set("tune_mode", tune.name())
+        .set("probe_peak_gbps", probe.peak_gbps)
+        .set("probe_peak_gflops", probe.peak_gflops)
         .set(
             "fast_mode",
             std::env::var("RBGP_BENCH_FAST").map(|v| v == "1").unwrap_or(false),

@@ -121,7 +121,7 @@ pub fn measure_kernel(w: &SparseMatrix, n: usize, rng: &mut Rng) -> f64 {
     let i = rng.normal_vec_f32(w.cols() * n, 1.0);
     let mut o = vec![0.0f32; w.rows() * n];
     let mut plan = kernel
-        .build_plan(w, &PlanRequest { n, threads })
+        .build_plan(w, &PlanRequest::new(n, threads))
         .expect("plan");
     let bench = BenchConfig::from_env();
     bench_fn(&bench, || {

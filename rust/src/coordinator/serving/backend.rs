@@ -13,6 +13,7 @@
 //! * the XLA backend (feature `xla`) — compiles an AOT artifact on a PJRT
 //!   client (handles are not `Send`, so each worker compiles its own).
 
+use crate::kernels::autotune::TuneMode;
 use crate::kernels::plan::{KernelPlan, PlanCache, PlanRequest, SparseMatrix};
 use crate::kernels::registry::KernelRegistry;
 use std::sync::{Arc, Mutex};
@@ -61,6 +62,9 @@ pub struct NativeSparseModel {
     b2: Vec<f32>,
     batch: usize,
     threads: usize,
+    /// How hard warm-up searches for kernel schedules (default Quick —
+    /// warming now tunes; the search result is cached per plan key).
+    tune: TuneMode,
     registry: KernelRegistry,
     cache: Arc<PlanCache>,
     // Private working copies of the two layer plans, detached once from
@@ -107,6 +111,7 @@ impl NativeSparseModel {
             b2,
             batch,
             threads: threads.max(1),
+            tune: TuneMode::default(),
             registry: KernelRegistry::builtin(),
             cache,
             plan1: None,
@@ -152,8 +157,17 @@ impl NativeSparseModel {
         )
     }
 
+    /// Set the tune mode warm-up resolves plans under (builder-style;
+    /// call before [`NativeSparseModel::warm`] / the first forward).
+    pub fn with_tune(mut self, tune: TuneMode) -> NativeSparseModel {
+        self.tune = tune;
+        self
+    }
+
     /// Pre-build both layers' plans for this model's batch class so the
-    /// first request pays no plan-construction latency.
+    /// first request pays no plan-construction latency. Under the default
+    /// [`TuneMode::Quick`] this also runs the schedule search — warming
+    /// tunes, and the tuned plan lands in the shared cache for the pool.
     pub fn warm(&mut self) -> anyhow::Result<()> {
         self.resolve_plans()
     }
@@ -163,10 +177,7 @@ impl NativeSparseModel {
     /// `warm` wasn't. The lock is recovered if poisoned: a peer that
     /// crashed mid-detach must not take this model down with it.
     fn resolve_plans(&mut self) -> anyhow::Result<()> {
-        let req = PlanRequest {
-            n: self.batch,
-            threads: self.threads,
-        };
+        let req = PlanRequest::new(self.batch, self.threads).with_tune(self.tune);
         let detach = |shared: Arc<Mutex<KernelPlan>>| -> KernelPlan {
             crate::util::lock_recover(&shared).clone()
         };

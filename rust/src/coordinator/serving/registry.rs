@@ -452,7 +452,7 @@ mod tests {
         let kernels = KernelRegistry::builtin();
         let shared = SparseMatrix::dense(vec![0.0; 8], 2, 4);
         let own = SparseMatrix::dense(vec![0.0; 12], 3, 4);
-        let req = PlanRequest { n: 4, threads: 1 };
+        let req = PlanRequest::new(4, 1);
         cache.plan_for(&kernels, &shared, &req).unwrap();
         cache.plan_for(&kernels, &own, &req).unwrap();
 

@@ -17,6 +17,7 @@
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::serving::{BatchModel, InferenceServer, NativeSparseModel, ServerConfig};
 use crate::data::synth::CifarLike;
+use crate::kernels::autotune::TuneMode;
 use crate::kernels::dense::transpose;
 use crate::kernels::plan::{PlanCache, SparseMatrix};
 use crate::sparsity::csr::CsrMatrix;
@@ -110,14 +111,28 @@ impl NativeCheckpoint {
         self.export_w1().structure_hash()
     }
 
-    /// Build a plan-cached serving model for this checkpoint.
+    /// Build a plan-cached serving model for this checkpoint (default
+    /// [`TuneMode::Quick`]; see [`NativeCheckpoint::serving_model_tuned`]).
     pub fn serving_model(
         &self,
         batch: usize,
         threads: usize,
         cache: Arc<PlanCache>,
     ) -> anyhow::Result<NativeSparseModel> {
-        NativeSparseModel::new(
+        self.serving_model_tuned(batch, threads, cache, TuneMode::default())
+    }
+
+    /// [`NativeCheckpoint::serving_model`] with an explicit autotune mode —
+    /// how hard `warm()` will search for kernel schedules (once per plan
+    /// key; subsequent models on the same cache hit the tuned plans).
+    pub fn serving_model_tuned(
+        &self,
+        batch: usize,
+        threads: usize,
+        cache: Arc<PlanCache>,
+        tune: TuneMode,
+    ) -> anyhow::Result<NativeSparseModel> {
+        Ok(NativeSparseModel::new(
             self.export_w1(),
             self.b1.clone(),
             SparseMatrix::dense(self.w2.clone(), self.classes, self.hidden),
@@ -125,18 +140,32 @@ impl NativeCheckpoint {
             batch,
             threads,
             cache,
-        )
+        )?
+        .with_tune(tune))
     }
 
     /// A thread-safe factory producing identical warmed serving models on
     /// `cache` — the shape `InferenceServer::{start_model_as,
     /// register_model}` want. The hidden layer is compacted once here;
-    /// workers clone the compact form.
+    /// workers clone the compact form. Default [`TuneMode::Quick`].
     pub fn serving_factory(
         &self,
         batch: usize,
         threads: usize,
         cache: Arc<PlanCache>,
+    ) -> impl Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static {
+        self.serving_factory_tuned(batch, threads, cache, TuneMode::default())
+    }
+
+    /// [`NativeCheckpoint::serving_factory`] with an explicit autotune
+    /// mode. Only the first worker to warm a plan key pays the search; the
+    /// rest hit the cached tuned plan.
+    pub fn serving_factory_tuned(
+        &self,
+        batch: usize,
+        threads: usize,
+        cache: Arc<PlanCache>,
+        tune: TuneMode,
     ) -> impl Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static {
         let w1 = self.export_w1();
         let b1 = self.b1.clone();
@@ -151,7 +180,8 @@ impl NativeCheckpoint {
                 batch,
                 threads,
                 Arc::clone(&cache),
-            )?;
+            )?
+            .with_tune(tune);
             model.warm()?;
             Ok(Box::new(model) as Box<dyn BatchModel>)
         }
@@ -367,7 +397,10 @@ impl NativeTrainer {
         threads: usize,
     ) -> anyhow::Result<NativeSparseModel> {
         let (w1, b1, w2, b2) = self.export_weights();
-        NativeSparseModel::new(w1, b1, w2, b2, batch, threads, Arc::clone(&self.cache))
+        Ok(
+            NativeSparseModel::new(w1, b1, w2, b2, batch, threads, Arc::clone(&self.cache))?
+                .with_tune(self.config.tune),
+        )
     }
 
     /// A thread-safe factory producing identical serving models that all
@@ -384,6 +417,7 @@ impl NativeTrainer {
     ) -> impl Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static {
         let (w1, b1, w2, b2) = self.export_weights();
         let cache = Arc::clone(&self.cache);
+        let tune = self.config.tune;
         move || {
             let mut model = NativeSparseModel::new(
                 w1.clone(),
@@ -393,7 +427,8 @@ impl NativeTrainer {
                 batch,
                 threads,
                 Arc::clone(&cache),
-            )?;
+            )?
+            .with_tune(tune);
             model.warm()?;
             Ok(Box::new(model) as Box<dyn BatchModel>)
         }
@@ -453,7 +488,7 @@ impl NativeTrainer {
         batch: usize,
         threads: usize,
     ) -> impl Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static {
-        ckpt.serving_factory(batch, threads, Arc::clone(&self.cache))
+        ckpt.serving_factory_tuned(batch, threads, Arc::clone(&self.cache), self.config.tune)
     }
 
     /// Spin up a multi-worker inference server on the current weights

@@ -1,0 +1,499 @@
+//! Roofline-driven plan autotuning: turn `build_plan` from a fixed
+//! heuristic into a short empirical search.
+//!
+//! Three pieces (see ARCHITECTURE.md §Plan autotuning):
+//!
+//! * **Machine probe** — a one-time, process-cached measurement of the two
+//!   numbers a roofline needs: sustainable memory bandwidth (STREAM-style
+//!   triad over arrays larger than the last-level cache) and dense FMA
+//!   throughput (multi-accumulator L1-resident loop). Together they fix
+//!   `attainable(AI) = min(peak_flops, AI · peak_bw)` — the Sparsity
+//!   Roofline (arXiv 2310.00496) against which every plan is scored.
+//! * **Candidate generation** — per kernel family, the small schedule
+//!   space worth searching: packed-panel column stride, worker count and
+//!   packed-vs-gather panel layout for rbgp4mm; row-range granularity and
+//!   output column blocking for csr/bsr; dense has a single candidate.
+//!   Candidate 0 is always the fixed heuristic (exactly what
+//!   [`TuneMode::Off`] builds), so the search can only match or beat it.
+//! * **Measured search** — `build_plan` (see `registry::tuned_build`) runs
+//!   warmup + timed reps of each candidate on the caller's real batch
+//!   class and keeps the fastest, recording a [`TunedConfig`] in the plan.
+//!   The [`PlanCache`](crate::kernels::plan::PlanCache) key is unchanged,
+//!   so the search runs once per `(structure, shape, batch class,
+//!   threads)` and every later resolve reuses the winner for free.
+//!
+//! **The bit-identity contract**: every candidate a generator emits must
+//! produce *bit-identical* output to the heuristic plan at the same thread
+//! count — tuning may change the schedule, never the numbers. Safe
+//! dimensions: panel stride and column blocking split the batch (n)
+//! dimension, not the reduction; row-range granularity moves whole output
+//! rows between workers; the gather layout feeds the identical micro-kernels
+//! from un-copied input rows; rbgp4 worker counts vary only *within* the
+//! parallel regime (each output tile row is computed by exactly one worker
+//! in a fixed ko-major order). What is **not** safe — and never generated —
+//! is crossing the rbgp4 serial/parallel boundary: the serial kernel
+//! reduces vo-major, the threaded one ko-major, and those summation orders
+//! differ. `prop_kernels.rs` property-tests the contract.
+
+use crate::kernels::plan::{
+    balanced_row_ranges, batch_class, KernelPlan, PlanRequest, PlanState, SparseMatrix,
+};
+use crate::kernels::rbgp4mm::{Rbgp4Plan, Rbgp4Tunable};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// How much plan-construction time a caller is willing to trade for a
+/// better schedule.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TuneMode {
+    /// No search, no probe: build exactly the fixed heuristic plan.
+    Off,
+    /// Small candidate set, 1 warmup + 2 timed reps each (the default —
+    /// cheap enough to run inside every warm).
+    #[default]
+    Quick,
+    /// Wider candidate set, 2 warmups + 5 timed reps each.
+    Full,
+}
+
+impl TuneMode {
+    pub fn parse(text: &str) -> anyhow::Result<TuneMode> {
+        match text {
+            "off" => Ok(TuneMode::Off),
+            "quick" => Ok(TuneMode::Quick),
+            "full" => Ok(TuneMode::Full),
+            other => anyhow::bail!("unknown tune mode '{other}' (expected off|quick|full)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TuneMode::Off => "off",
+            TuneMode::Quick => "quick",
+            TuneMode::Full => "full",
+        }
+    }
+}
+
+/// What the search learned about the winning schedule, recorded inside the
+/// [`KernelPlan`] (and therefore in the plan cache, per key).
+#[derive(Clone, Debug)]
+pub struct TunedConfig {
+    /// Human-readable winning parameters (e.g. `stride=256 workers=4
+    /// layout=gather`).
+    pub params: String,
+    /// Measured throughput of the winner on the tuning shape.
+    pub gflops: f64,
+    /// `gflops / attainable(AI)` against the machine probe's roofline —
+    /// 1.0 means the kernel is at the memory/compute bound for its
+    /// arithmetic intensity.
+    pub roofline_fraction: f64,
+}
+
+/// The two numbers that fix the roofline on this machine.
+#[derive(Clone, Copy, Debug)]
+pub struct MachineProbe {
+    /// Sustainable bandwidth (GB/s) from a STREAM-style triad.
+    pub peak_gbps: f64,
+    /// Dense FMA throughput (GFLOP/s) from an L1-resident
+    /// multiply-accumulate loop.
+    pub peak_gflops: f64,
+}
+
+impl MachineProbe {
+    /// Attainable GFLOP/s at arithmetic intensity `ai` (flops/byte):
+    /// `min(peak_flops, ai · peak_bw)`, floored away from zero so fractions
+    /// stay finite.
+    pub fn attainable_gflops(&self, ai: f64) -> f64 {
+        (ai * self.peak_gbps).min(self.peak_gflops).max(1e-9)
+    }
+}
+
+static PROBE: OnceLock<MachineProbe> = OnceLock::new();
+
+/// The process-wide machine probe, measured on first use (~tens of ms) and
+/// cached for the life of the process. Every tuned plan in every cache
+/// shares one probe, so roofline fractions are comparable across plans.
+pub fn machine_probe() -> &'static MachineProbe {
+    PROBE.get_or_init(|| MachineProbe {
+        peak_gbps: stream_triad_gbps(),
+        peak_gflops: fma_peak_gflops(),
+    })
+}
+
+/// Best-of-passes timing of `pass`, returning `work / best_seconds`.
+fn rate_of(work: f64, mut pass: impl FnMut()) -> f64 {
+    pass(); // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..4 {
+        let t0 = Instant::now();
+        pass();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    work / best.max(1e-12)
+}
+
+/// STREAM triad `a = b + s·c` over arrays sized past the last-level cache;
+/// counts 3 streams (two reads, one write — write-allocate traffic is
+/// deliberately not charged, matching how the kernels' `bytes_touched`
+/// counts output traffic).
+fn stream_triad_gbps() -> f64 {
+    const LEN: usize = 1 << 21; // 8 MiB per array, 24 MiB working set
+    let mut a = vec![0.0f32; LEN];
+    let b: Vec<f32> = (0..LEN).map(|i| 1.0 + (i % 13) as f32).collect();
+    let c: Vec<f32> = (0..LEN).map(|i| 0.5 + (i % 7) as f32).collect();
+    let s = 1.0 + f32::EPSILON;
+    let gbps = rate_of(3.0 * 4.0 * LEN as f64, || {
+        for ((ai, bi), ci) in a.iter_mut().zip(&b).zip(&c) {
+            *ai = *bi + s * *ci;
+        }
+        std::hint::black_box(&a);
+    });
+    gbps / 1e9
+}
+
+/// Dense multiply-accumulate peak over an L1-resident buffer with eight
+/// independent accumulator lanes (enough ILP for the FMA pipes to fill);
+/// 2 flops per element per pass.
+fn fma_peak_gflops() -> f64 {
+    const LEN: usize = 2048; // 8 KiB, L1-resident
+    const INNER: usize = 512;
+    let x: Vec<f32> = (0..LEN).map(|i| 1.0 + (i % 9) as f32 * 1e-3).collect();
+    let mut acc = [0.0f32; 8];
+    let gflops = rate_of(2.0 * (LEN * INNER) as f64, || {
+        let mut lanes = [0.0f32; 8];
+        for _ in 0..INNER {
+            for ch in x.chunks_exact(8) {
+                for l in 0..8 {
+                    lanes[l] = lanes[l] * 0.999_9 + ch[l];
+                }
+            }
+        }
+        for l in 0..8 {
+            acc[l] += lanes[l];
+        }
+        std::hint::black_box(&acc);
+    });
+    gflops / 1e9
+}
+
+/// Warmup/rep counts of the measured search for one tune mode (`None` for
+/// [`TuneMode::Off`] — no search at all).
+#[derive(Clone, Copy, Debug)]
+pub struct SearchBudget {
+    pub warmup: usize,
+    pub reps: usize,
+}
+
+impl SearchBudget {
+    pub fn for_mode(mode: TuneMode) -> Option<SearchBudget> {
+        match mode {
+            TuneMode::Off => None,
+            TuneMode::Quick => Some(SearchBudget { warmup: 1, reps: 2 }),
+            TuneMode::Full => Some(SearchBudget { warmup: 2, reps: 5 }),
+        }
+    }
+}
+
+/// Best-of-`reps` seconds of `f` under `budget`.
+pub fn measure_seconds(
+    budget: &SearchBudget,
+    mut f: impl FnMut() -> anyhow::Result<()>,
+) -> anyhow::Result<f64> {
+    for _ in 0..budget.warmup {
+        f()?;
+    }
+    let mut best = f64::INFINITY;
+    for _ in 0..budget.reps {
+        let t0 = Instant::now();
+        f()?;
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    Ok(best)
+}
+
+/// Deterministic non-zero tuning input (BSR skips exact zeros, so the
+/// synthetic batch must not contain any).
+pub fn synth_input(len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|i| 0.5 + ((i * 37 + 11) % 23) as f32 / 23.0)
+        .collect()
+}
+
+/// All labeled candidate plans for `(w, req)`. Candidate 0 is always the
+/// fixed heuristic — the exact plan [`TuneMode::Off`] builds — and every
+/// candidate is bit-identical to it in output (the contract the module
+/// docs spell out and `prop_kernels.rs` enforces). `req.tune` selects the
+/// breadth of the space; `Off` returns the heuristic alone.
+pub fn candidate_plans(w: &SparseMatrix, req: &PlanRequest) -> Vec<(String, KernelPlan)> {
+    let n_class = batch_class(req.n);
+    let threads = req.threads.max(1);
+    let states = match w {
+        SparseMatrix::Dense { .. } => vec![("heuristic".to_string(), PlanState::Dense)],
+        SparseMatrix::Csr(m) => ranges_states(&m.indptr, threads, n_class, req.tune),
+        SparseMatrix::Bsr(m) => ranges_states(&m.indptr, threads, n_class, req.tune),
+        SparseMatrix::Rbgp4(m) => rbgp4_states(&m.mask, n_class, threads, req.tune),
+    };
+    states
+        .into_iter()
+        .map(|(label, state)| {
+            (
+                label,
+                KernelPlan {
+                    pattern: w.pattern(),
+                    rows: w.rows(),
+                    cols: w.cols(),
+                    batch_class: n_class,
+                    threads,
+                    build_seconds: 0.0,
+                    tuned: None,
+                    state,
+                },
+            )
+        })
+        .collect()
+}
+
+/// CSR/BSR candidate space: row-range granularity (worker counts ≤
+/// `threads` — any partition is bit-identical, the per-row reduction order
+/// never changes) × output column blocking (0 = unblocked full width).
+fn ranges_states(
+    indptr: &[usize],
+    threads: usize,
+    n_class: usize,
+    mode: TuneMode,
+) -> Vec<(String, PlanState)> {
+    let mut worker_counts = vec![threads];
+    let mut col_blocks = vec![0usize];
+    match mode {
+        TuneMode::Off => {}
+        TuneMode::Quick => {
+            if threads > 1 {
+                worker_counts.push((threads / 2).max(1));
+            }
+            if 256 < n_class {
+                col_blocks.push(256);
+            }
+        }
+        TuneMode::Full => {
+            if threads > 1 {
+                worker_counts.push((threads / 2).max(1));
+                worker_counts.push(1);
+            }
+            for cb in [512usize, 256, 128, 64] {
+                if cb < n_class {
+                    col_blocks.push(cb);
+                }
+            }
+        }
+    }
+    let mut out: Vec<(String, PlanState)> = Vec::new();
+    for &wk in &worker_counts {
+        let ranges = balanced_row_ranges(indptr, wk);
+        for &cb in &col_blocks {
+            let dup = out.iter().any(|(_, s)| match s {
+                PlanState::Ranges {
+                    ranges: r,
+                    col_block,
+                } => *r == ranges && *col_block == cb,
+                _ => false,
+            });
+            if !dup {
+                out.push((
+                    format!("ranges={} colblock={cb}", ranges.len().max(1)),
+                    PlanState::Ranges {
+                        ranges: ranges.clone(),
+                        col_block: cb,
+                    },
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// RBGP4 candidate space: packed-panel column stride (n-dimension blocking
+/// only — reduction order untouched), worker count, and packed-vs-gather
+/// panel layout (identical micro-kernels over un-copied input rows).
+/// Worker candidates never cross the serial/parallel boundary: when the
+/// heuristic runs parallel (≥ 2 workers) every candidate stays ≥ 2, and a
+/// serial heuristic admits no worker variation — the two regimes reduce in
+/// different orders (vo-major vs ko-major) and are not bit-compatible.
+fn rbgp4_states(
+    mask: &crate::sparsity::rbgp4::Rbgp4Mask,
+    n_class: usize,
+    threads: usize,
+    mode: TuneMode,
+) -> Vec<(String, PlanState)> {
+    let base = Rbgp4Tunable::heuristic(mask, n_class, threads);
+    let mut tunables = vec![base];
+    let push = |v: &mut Vec<Rbgp4Tunable>, t: Rbgp4Tunable| {
+        if !v.contains(&t) {
+            v.push(t);
+        }
+    };
+    let mut strides = vec![base.stride];
+    let mut workers = vec![base.workers];
+    let mut gathers = vec![false];
+    match mode {
+        TuneMode::Off => {}
+        TuneMode::Quick => {
+            if base.stride >= 2 {
+                strides.push(base.stride / 2);
+            }
+            gathers.push(true);
+        }
+        TuneMode::Full => {
+            if base.stride >= 2 {
+                strides.push(base.stride / 2);
+            }
+            if base.stride >= 4 {
+                strides.push(base.stride / 4);
+            }
+            if base.stride * 2 <= n_class {
+                strides.push(base.stride * 2);
+            }
+            if base.workers >= 4 {
+                workers.push((base.workers / 2).max(2));
+            }
+            gathers.push(true);
+        }
+    }
+    for &stride in &strides {
+        for &wk in &workers {
+            for &gather in &gathers {
+                push(
+                    &mut tunables,
+                    Rbgp4Tunable {
+                        stride,
+                        workers: wk,
+                        gather,
+                    },
+                );
+            }
+        }
+    }
+    tunables
+        .into_iter()
+        .map(|t| {
+            (
+                format!(
+                    "stride={} workers={} layout={}",
+                    t.stride,
+                    t.workers,
+                    if t.gather { "gather" } else { "packed" }
+                ),
+                PlanState::Rbgp4(Box::new(Rbgp4Plan::build_tuned(mask, n_class, &t))),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::csr::CsrMatrix;
+    use crate::sparsity::rbgp4::{GraphSpec, Rbgp4Config, Rbgp4Mask, Rbgp4Matrix};
+    use crate::util::rng::Rng;
+
+    fn rbgp4_matrix(seed: u64) -> SparseMatrix {
+        let cfg = Rbgp4Config {
+            go: GraphSpec::new(4, 4, 0.5),
+            gr: (2, 1),
+            gi: GraphSpec::new(4, 4, 0.5),
+            gb: (2, 2),
+        };
+        let mut rng = Rng::new(seed);
+        let mask = Rbgp4Mask::sample(cfg, &mut rng).unwrap();
+        SparseMatrix::Rbgp4(Rbgp4Matrix::random(mask, &mut rng))
+    }
+
+    #[test]
+    fn tune_mode_parses_and_defaults_to_quick() {
+        assert_eq!(TuneMode::parse("off").unwrap(), TuneMode::Off);
+        assert_eq!(TuneMode::parse("quick").unwrap(), TuneMode::Quick);
+        assert_eq!(TuneMode::parse("full").unwrap(), TuneMode::Full);
+        assert!(TuneMode::parse("fast").is_err());
+        assert_eq!(TuneMode::default(), TuneMode::Quick);
+        assert_eq!(TuneMode::Full.name(), "full");
+    }
+
+    #[test]
+    fn probe_is_finite_positive_and_cached() {
+        let p1 = machine_probe();
+        assert!(p1.peak_gbps.is_finite() && p1.peak_gbps > 0.0);
+        assert!(p1.peak_gflops.is_finite() && p1.peak_gflops > 0.0);
+        let p2 = machine_probe();
+        assert!(std::ptr::eq(p1, p2), "probe measured once per process");
+        // The roofline is the min of the two bounds.
+        let low_ai = p1.attainable_gflops(1e-6);
+        assert!(low_ai <= p1.peak_gflops);
+        assert!(p1.attainable_gflops(1e9) <= p1.peak_gflops + 1e-9);
+    }
+
+    #[test]
+    fn off_mode_yields_exactly_the_heuristic() {
+        let mut rng = Rng::new(7);
+        let w = SparseMatrix::Csr(CsrMatrix::random_row_uniform(16, 16, 0.5, &mut rng));
+        for threads in [1usize, 4] {
+            let req = PlanRequest::new(8, threads).with_tune(TuneMode::Off);
+            let cands = candidate_plans(&w, &req);
+            assert_eq!(cands.len(), 1, "Off searches nothing");
+        }
+        let cands = candidate_plans(&rbgp4_matrix(8), &PlanRequest::new(8, 4).with_tune(TuneMode::Off));
+        assert_eq!(cands.len(), 1);
+    }
+
+    #[test]
+    fn quick_and_full_widen_the_space_first_is_heuristic() {
+        let w = rbgp4_matrix(9);
+        let quick = candidate_plans(&w, &PlanRequest::new(64, 4));
+        let full = candidate_plans(&w, &PlanRequest::new(64, 4).with_tune(TuneMode::Full));
+        assert!(quick.len() > 1, "quick explores: {}", quick.len());
+        assert!(full.len() >= quick.len(), "full at least as wide");
+        let off = candidate_plans(&w, &PlanRequest::new(64, 4).with_tune(TuneMode::Off));
+        assert_eq!(quick[0].0, off[0].0, "candidate 0 is the heuristic");
+    }
+
+    #[test]
+    fn rbgp4_candidates_never_cross_the_serial_parallel_boundary() {
+        let w = rbgp4_matrix(10);
+        // Parallel heuristic (threads > 1): every candidate keeps ≥ 2 workers.
+        for (label, plan) in candidate_plans(&w, &PlanRequest::new(32, 4).with_tune(TuneMode::Full)) {
+            if let crate::kernels::plan::PlanState::Rbgp4(p) = &plan.state {
+                assert!(p.threads() >= 2, "{label} fell back to serial");
+            } else {
+                panic!("rbgp4 candidate with non-rbgp4 state");
+            }
+        }
+        // Serial heuristic (threads == 1): every candidate stays serial.
+        for (label, plan) in candidate_plans(&w, &PlanRequest::new(32, 1).with_tune(TuneMode::Full)) {
+            if let crate::kernels::plan::PlanState::Rbgp4(p) = &plan.state {
+                assert_eq!(p.threads(), 1, "{label} escaped the serial regime");
+            }
+        }
+    }
+
+    #[test]
+    fn ranges_candidates_respect_thread_cap_and_dedup() {
+        let mut rng = Rng::new(11);
+        let w = SparseMatrix::Csr(CsrMatrix::random_row_uniform(32, 32, 0.75, &mut rng));
+        let cands = candidate_plans(&w, &PlanRequest::new(512, 4).with_tune(TuneMode::Full));
+        let mut seen = std::collections::HashSet::new();
+        for (label, plan) in &cands {
+            if let crate::kernels::plan::PlanState::Ranges { ranges, col_block } = &plan.state {
+                assert!(ranges.len() <= 4, "{label}: more workers than threads");
+                assert!(
+                    seen.insert((ranges.clone(), *col_block)),
+                    "{label}: duplicate candidate"
+                );
+            }
+        }
+        assert!(cands.len() > 1);
+    }
+
+    #[test]
+    fn synth_input_is_nonzero() {
+        assert!(synth_input(1000).iter().all(|&x| x != 0.0));
+    }
+}

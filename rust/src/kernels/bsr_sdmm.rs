@@ -88,6 +88,87 @@ pub fn bsr_sdmm_ranges(
     });
 }
 
+/// Block rows [br0, br1) with the output columns walked in `col_block`-wide
+/// blocks (col blocks outer). Zeroes each column block before accumulating,
+/// so callers must NOT pre-zero. Bit-identical to [`bsr_block_rows`]: per
+/// output element the `(k, bc)` accumulation order is unchanged.
+fn bsr_block_rows_blocked(
+    w: &BsrMatrix,
+    i: &[f32],
+    o: &mut [f32],
+    n: usize,
+    br0: usize,
+    br1: usize,
+    col_block: usize,
+) {
+    let (bh, bw) = (w.bh, w.bw);
+    let mut c0 = 0;
+    while c0 < n {
+        let cb = col_block.min(n - c0);
+        for bi in br0..br1 {
+            let obase = (bi - br0) * bh * n;
+            for br in 0..bh {
+                o[obase + br * n + c0..obase + br * n + c0 + cb].fill(0.0);
+            }
+            for k in w.indptr[bi]..w.indptr[bi + 1] {
+                let bj = w.indices[k];
+                let blk = &w.values[k * bh * bw..(k + 1) * bh * bw];
+                for br in 0..bh {
+                    let orow = obase + br * n + c0;
+                    for bc in 0..bw {
+                        let a = blk[br * bw + bc];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let ibase = (bj * bw + bc) * n + c0;
+                        let irow = &i[ibase..ibase + cb];
+                        for c in 0..cb {
+                            o[orow + c] += a * irow[c];
+                        }
+                    }
+                }
+            }
+        }
+        c0 += cb;
+    }
+}
+
+/// [`bsr_sdmm_ranges`] with an output column block width — the autotuned
+/// execute path. `col_block == 0` (or ≥ `n`) delegates to the plain ranges
+/// kernel.
+pub fn bsr_sdmm_ranges_blocked(
+    w: &BsrMatrix,
+    i: &[f32],
+    o: &mut [f32],
+    n: usize,
+    ranges: &[(usize, usize)],
+    col_block: usize,
+) {
+    if col_block == 0 || col_block >= n {
+        bsr_sdmm_ranges(w, i, o, n, ranges);
+        return;
+    }
+    assert_eq!(o.len(), w.rows * n);
+    if ranges.len() <= 1 {
+        let (br0, br1) = ranges.first().copied().unwrap_or((0, w.block_rows()));
+        bsr_block_rows_blocked(w, i, o, n, br0, br1, col_block);
+        return;
+    }
+    let row_len = w.bh * n;
+    std::thread::scope(|scope| {
+        let mut rest = o;
+        let mut row = 0usize;
+        for &(br0, br1) in ranges {
+            assert_eq!(br0, row, "ranges must be contiguous");
+            let (chunk, tail) = rest.split_at_mut((br1 - br0) * row_len);
+            scope.spawn(move || bsr_block_rows_blocked(w, i, chunk, n, br0, br1, col_block));
+            rest = tail;
+            row = br1;
+        }
+        assert_eq!(row, w.block_rows(), "ranges must cover all block rows");
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,6 +216,24 @@ mod tests {
         let ranges = crate::kernels::plan::balanced_row_ranges(&w.indptr, 3);
         bsr_sdmm_ranges(&w, &i, &mut o2, n, &ranges);
         assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn col_blocked_ranges_bit_identical_to_unblocked() {
+        let mut rng = Rng::new(304);
+        let (m, k, n) = (48, 32, 19);
+        let w = BsrMatrix::random_block_uniform(m, k, 4, 4, 0.5, &mut rng);
+        let i = rng.normal_vec_f32(k * n, 1.0);
+        let mut reference = vec![0.0; m * n];
+        bsr_sdmm(&w, &i, &mut reference, n);
+        for threads in [1usize, 3] {
+            let ranges = crate::kernels::plan::balanced_row_ranges(&w.indptr, threads);
+            for cb in [0usize, 1, 7, 16, 19, 64] {
+                let mut o = vec![9.0; m * n];
+                bsr_sdmm_ranges_blocked(&w, &i, &mut o, n, &ranges, cb);
+                assert_eq!(o, reference, "threads={threads} cb={cb}");
+            }
+        }
     }
 
     #[test]

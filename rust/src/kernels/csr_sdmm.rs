@@ -80,6 +80,77 @@ pub fn csr_sdmm_ranges(
     });
 }
 
+/// Rows `[row0, row0+rows)` of the product with the output columns walked
+/// in `col_block`-wide blocks (col blocks outer, rows inner) so each block
+/// of gathered `I` columns stays cache-resident across the chunk's rows.
+/// Bit-identical to [`csr_rows_into`]: for any output element the non-zeros
+/// are accumulated in the same `k` order — blocking only reorders *which
+/// elements* are visited, never the reduction within one.
+fn csr_rows_into_blocked(
+    w: &CsrMatrix,
+    i: &[f32],
+    chunk: &mut [f32],
+    n: usize,
+    row0: usize,
+    col_block: usize,
+) {
+    let rows = chunk.len() / n.max(1);
+    let mut c0 = 0;
+    while c0 < n {
+        let cb = col_block.min(n - c0);
+        for r in 0..rows {
+            let obase = r * n + c0;
+            let orow = &mut chunk[obase..obase + cb];
+            orow.fill(0.0);
+            let wr = row0 + r;
+            for k in w.indptr[wr]..w.indptr[wr + 1] {
+                let a = w.values[k];
+                let ibase = w.indices[k] * n + c0;
+                let irow = &i[ibase..ibase + cb];
+                for c in 0..cb {
+                    orow[c] += a * irow[c];
+                }
+            }
+        }
+        c0 += cb;
+    }
+}
+
+/// [`csr_sdmm_ranges`] with an output column block width — the autotuned
+/// execute path. `col_block == 0` (or ≥ `n`) means unblocked and delegates
+/// to the plain ranges kernel.
+pub fn csr_sdmm_ranges_blocked(
+    w: &CsrMatrix,
+    i: &[f32],
+    o: &mut [f32],
+    n: usize,
+    ranges: &[(usize, usize)],
+    col_block: usize,
+) {
+    if col_block == 0 || col_block >= n {
+        csr_sdmm_ranges(w, i, o, n, ranges);
+        return;
+    }
+    assert_eq!(o.len(), w.rows * n);
+    if ranges.len() <= 1 {
+        let row0 = ranges.first().map(|r| r.0).unwrap_or(0);
+        csr_rows_into_blocked(w, i, o, n, row0, col_block);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = o;
+        let mut row = 0usize;
+        for &(r0, r1) in ranges {
+            assert_eq!(r0, row, "ranges must be contiguous");
+            let (chunk, tail) = rest.split_at_mut((r1 - r0) * n);
+            scope.spawn(move || csr_rows_into_blocked(w, i, chunk, n, r0, col_block));
+            rest = tail;
+            row = r1;
+        }
+        assert_eq!(row, w.rows, "ranges must cover all rows");
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +198,26 @@ mod tests {
         let ranges = crate::kernels::plan::balanced_row_ranges(&w.indptr, 4);
         csr_sdmm_ranges(&w, &i, &mut o2, n, &ranges);
         assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn col_blocked_ranges_bit_identical_to_unblocked() {
+        let mut rng = Rng::new(204);
+        let (m, k, n) = (37, 48, 19);
+        let w = CsrMatrix::random_row_uniform(m, k, 0.75, &mut rng);
+        let i = rng.normal_vec_f32(k * n, 1.0);
+        let mut reference = vec![0.0; m * n];
+        csr_sdmm(&w, &i, &mut reference, n);
+        for threads in [1usize, 4] {
+            let ranges = crate::kernels::plan::balanced_row_ranges(&w.indptr, threads);
+            // col_block that divides n, one that doesn't, and the 0/≥n
+            // delegating cases.
+            for cb in [0usize, 1, 7, 16, 19, 64] {
+                let mut o = vec![9.0; m * n];
+                csr_sdmm_ranges_blocked(&w, &i, &mut o, n, &ranges, cb);
+                assert_eq!(o, reference, "threads={threads} cb={cb}");
+            }
+        }
     }
 
     #[test]

@@ -5,11 +5,13 @@
 //!
 //! All four families are unified behind the [`registry::SparseKernel`]
 //! trait: [`plan`] holds the execution-plan layer (build once per
-//! `(matrix, batch class, threads)`, execute allocation-free), [`registry`]
+//! `(matrix, batch class, threads)`, execute allocation-free), [`autotune`]
+//! turns `build_plan` into a roofline-scored schedule search, [`registry`]
 //! holds the `Pattern`-keyed family registry shared with the cost model's
 //! [`crate::gpusim::KernelKind`]. The historical free functions remain as
 //! per-call wrappers.
 
+pub mod autotune;
 pub mod bsr_sdmm;
 pub mod csr_sdmm;
 pub mod dense;
@@ -17,9 +19,10 @@ pub mod plan;
 pub mod rbgp4mm;
 pub mod registry;
 
+pub use autotune::{candidate_plans, machine_probe, MachineProbe, TuneMode, TunedConfig};
 pub use bsr_sdmm::{bsr_sdmm, bsr_sdmm_parallel};
 pub use csr_sdmm::{csr_sdmm, csr_sdmm_parallel};
 pub use dense::{gemm_blocked, gemm_naive, gemm_parallel};
 pub use plan::{batch_class, KernelPlan, PlanCache, PlanKey, PlanRequest, SparseMatrix};
-pub use rbgp4mm::{rbgp4mm, rbgp4mm_naive, rbgp4mm_parallel, Rbgp4Plan};
+pub use rbgp4mm::{rbgp4mm, rbgp4mm_naive, rbgp4mm_parallel, Rbgp4Plan, Rbgp4Tunable};
 pub use registry::{KernelRegistry, SparseKernel};

@@ -18,6 +18,7 @@
 //!   shape + batch class + threads) to built plans, shared by the server
 //!   batcher, the native trainer and the bench harness.
 
+use crate::kernels::autotune::{TuneMode, TunedConfig};
 use crate::sparsity::bsr::BsrMatrix;
 use crate::sparsity::csr::CsrMatrix;
 use crate::sparsity::memory::Pattern;
@@ -107,6 +108,42 @@ impl SparseMatrix {
         2.0 * self.nnz() as f64 * n as f64
     }
 
+    /// Minimum bytes one SDMM against an `n`-column input must move:
+    /// weight values + the format's index structure + one read of the
+    /// input + one write of the output (all f32/u32 words, 4 bytes). This
+    /// is the compulsory-traffic denominator of arithmetic intensity —
+    /// the Sparsity Roofline's x-axis — and deliberately counts each
+    /// operand once (no cache-miss modelling), matching how the machine
+    /// probe's triad counts its streams.
+    pub fn bytes_touched(&self, n: usize) -> f64 {
+        const B: f64 = 4.0;
+        let io = B * (self.cols() * n + self.rows() * n) as f64;
+        let weights_and_index = match self {
+            // Dense: the values array is the whole story.
+            SparseMatrix::Dense { rows, cols, .. } => B * (rows * cols) as f64,
+            // CSR: values + one column index per nnz + row pointers.
+            SparseMatrix::Csr(w) => B * (2 * w.nnz() + w.rows + 1) as f64,
+            // BSR: stored block values + one column index per block +
+            // block-row pointers.
+            SparseMatrix::Bsr(w) => {
+                B * (w.nnz_stored() + w.indices.len() + w.block_rows() + 1) as f64
+            }
+            // RBGP4: stored values + the succinct index (§4 memory
+            // accounting — graph edges, not per-nnz coordinates).
+            SparseMatrix::Rbgp4(w) => {
+                B * (w.mask.rows() * w.mask.config.row_nnz() + w.mask.succinct_index_elems())
+                    as f64
+            }
+        };
+        weights_and_index + io
+    }
+
+    /// Arithmetic intensity (flops per compulsory byte) of one SDMM at
+    /// batch `n` — rises with `n` as weight traffic amortizes.
+    pub fn arithmetic_intensity(&self, n: usize) -> f64 {
+        self.flops(n) / self.bytes_touched(n).max(1.0)
+    }
+
     /// Scatter to a dense row-major matrix (oracle side of property tests).
     pub fn to_dense(&self) -> Vec<f32> {
         match self {
@@ -169,6 +206,26 @@ pub struct PlanRequest {
     pub n: usize,
     /// Worker threads the execute path may use (clamped per family).
     pub threads: usize,
+    /// How hard `build_plan` searches for a schedule (see
+    /// [`TuneMode`]); deliberately *not* part of [`PlanKey`] — tuning
+    /// changes which plan gets cached, never how it is keyed.
+    pub tune: TuneMode,
+}
+
+impl PlanRequest {
+    /// A request with the default tune mode ([`TuneMode::Quick`]).
+    pub fn new(n: usize, threads: usize) -> PlanRequest {
+        PlanRequest {
+            n,
+            threads,
+            tune: TuneMode::default(),
+        }
+    }
+
+    pub fn with_tune(mut self, tune: TuneMode) -> PlanRequest {
+        self.tune = tune;
+        self
+    }
 }
 
 /// Family-specific prepared state (the part of a plan the kernels read).
@@ -176,8 +233,12 @@ pub struct PlanRequest {
 pub(crate) enum PlanState {
     /// Dense needs no derived structure beyond the thread count.
     Dense,
-    /// CSR/BSR: nnz-balanced contiguous (block-)row ranges, one per worker.
-    Ranges(Vec<(usize, usize)>),
+    /// CSR/BSR: nnz-balanced contiguous (block-)row ranges, one per
+    /// worker, plus an output column block width (`0` = unblocked).
+    Ranges {
+        ranges: Vec<(usize, usize)>,
+        col_block: usize,
+    },
     /// RBGP4: the full succinct-index derivation (see `rbgp4mm::Rbgp4Plan`).
     Rbgp4(Box<crate::kernels::rbgp4mm::Rbgp4Plan>),
 }
@@ -196,9 +257,14 @@ pub struct KernelPlan {
     pub cols: usize,
     pub batch_class: usize,
     pub threads: usize,
-    /// Wall-clock cost of building this plan (reported by benches so the
-    /// amortization claim stays measurable).
+    /// Wall-clock cost of building this plan — including any tuning
+    /// search (reported by benches so the amortization claim stays
+    /// measurable).
     pub build_seconds: f64,
+    /// What the tuning search learned, when one ran ([`TuneMode::Off`]
+    /// leaves `None`). Cached with the plan, so the roofline numbers are
+    /// free to read on every later resolve.
+    pub tuned: Option<TunedConfig>,
     pub(crate) state: PlanState,
 }
 
@@ -290,6 +356,7 @@ impl PlanCache {
             &PlanRequest {
                 n: key.batch_class,
                 threads: req.threads,
+                tune: req.tune,
             },
         )?;
         let arc = Arc::new(Mutex::new(built));
@@ -326,7 +393,7 @@ impl PlanCache {
         threads: usize,
     ) -> anyhow::Result<()> {
         let kernel = registry.for_matrix(w)?;
-        let plan = self.plan_for(registry, w, &PlanRequest { n, threads })?;
+        let plan = self.plan_for(registry, w, &PlanRequest::new(n, threads))?;
         // Recover a poisoned plan lock: a peer that panicked mid-execute
         // left scratch (not derived structure) torn; the next execute
         // overwrites scratch entirely.
@@ -427,8 +494,13 @@ impl PlanCache {
 
 /// Split `indptr`-described rows into at most `threads` contiguous ranges
 /// with approximately equal non-zero counts (work-balanced partition for
-/// CSR rows / BSR block rows). Ranges are ascending, non-empty, and cover
-/// `0..rows` exactly.
+/// CSR rows / BSR block rows). Ranges are ascending, non-empty, cover
+/// `0..rows` exactly, and — unless the matrix stores no non-zeros at all —
+/// each carries at least one stored non-zero: with more threads than
+/// non-empty rows the nnz targets degenerate and would hand some workers
+/// all-empty ranges (a spawned thread that only zeroes output rows), so
+/// zero-work ranges are folded into a neighbor. An all-empty matrix
+/// collapses to a single covering range.
 pub fn balanced_row_ranges(indptr: &[usize], threads: usize) -> Vec<(usize, usize)> {
     let rows = indptr.len().saturating_sub(1);
     if rows == 0 {
@@ -436,7 +508,7 @@ pub fn balanced_row_ranges(indptr: &[usize], threads: usize) -> Vec<(usize, usiz
     }
     let threads = threads.max(1).min(rows);
     let total = indptr[rows];
-    let mut ranges = Vec::with_capacity(threads);
+    let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(threads);
     let mut r0 = 0usize;
     for t in 0..threads {
         if r0 >= rows {
@@ -451,7 +523,16 @@ pub fn balanced_row_ranges(indptr: &[usize], threads: usize) -> Vec<(usize, usiz
         if t + 1 == threads {
             r1 = rows;
         }
-        ranges.push((r0, r1));
+        // Fold zero-work ranges: merge this range into the previous one
+        // when either side carries no non-zeros (an empty head range is
+        // extended by its non-empty successor, an empty tail absorbed by
+        // its predecessor).
+        match ranges.last_mut() {
+            Some(prev) if indptr[r1] == indptr[r0] || indptr[prev.1] == indptr[prev.0] => {
+                prev.1 = r1;
+            }
+            _ => ranges.push((r0, r1)),
+        }
         r0 = r1;
     }
     if let Some(last) = ranges.last_mut() {
@@ -496,10 +577,72 @@ mod tests {
         assert!(balanced_row_ranges(&[0], 4).is_empty());
         let r = balanced_row_ranges(&[0, 3], 8);
         assert_eq!(r, vec![(0, 1)]);
-        // All-empty rows still get covered.
+        // All-empty rows still get covered — by a single collapsed range.
         let r = balanced_row_ranges(&[0, 0, 0, 0], 2);
+        assert_eq!(r, vec![(0, 3)]);
+    }
+
+    #[test]
+    fn balanced_ranges_collapse_zero_work_splits() {
+        // All nnz in row 0, rows = 4: at threads ∈ {1, rows, rows+3} every
+        // trailing range would be empty work — they fold into one range.
+        let indptr = vec![0, 100, 100, 100, 100];
+        for threads in [1usize, 4, 7] {
+            let r = balanced_row_ranges(&indptr, threads);
+            assert_eq!(r, vec![(0, 4)], "threads={threads}");
+        }
+        // Leading empty rows fold forward into the first working range.
+        let indptr = vec![0, 0, 0, 50, 100];
+        let r = balanced_row_ranges(&indptr, 4);
         assert_eq!(r.first().unwrap().0, 0);
-        assert_eq!(r.last().unwrap().1, 3);
+        assert_eq!(r.last().unwrap().1, 4);
+        for w in r.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "ranges contiguous");
+        }
+        for &(a, b) in &r {
+            assert!(a < b);
+            assert!(indptr[b] > indptr[a], "every range owns stored nnz");
+        }
+        // All-empty matrix: one covering range, even at high thread counts.
+        assert_eq!(balanced_row_ranges(&[0, 0, 0, 0, 0], 16), vec![(0, 4)]);
+    }
+
+    #[test]
+    fn bytes_touched_counts_weights_index_and_io() {
+        // Dense 3×4 at n=5: values + input + output, no index.
+        let d = SparseMatrix::dense(vec![1.0; 12], 3, 4);
+        let io = 4.0 * ((4 * 5) + (3 * 5)) as f64;
+        assert_eq!(d.bytes_touched(5), 4.0 * 12.0 + io);
+
+        // CSR: values + per-nnz column index + row pointers.
+        let mut rng = Rng::new(31);
+        let c = crate::sparsity::csr::CsrMatrix::random_row_uniform(16, 16, 0.5, &mut rng);
+        let nnz = c.nnz();
+        let w = SparseMatrix::Csr(c);
+        let io = 4.0 * ((16 * 8) + (16 * 8)) as f64;
+        assert_eq!(w.bytes_touched(8), 4.0 * (2 * nnz + 17) as f64 + io);
+
+        // RBGP4's succinct index beats a per-nnz index: its total traffic
+        // at equal nnz must be below a CSR-style 2·nnz accounting.
+        let cfg = crate::sparsity::rbgp4::Rbgp4Config {
+            go: crate::sparsity::rbgp4::GraphSpec::new(4, 4, 0.5),
+            gr: (2, 1),
+            gi: crate::sparsity::rbgp4::GraphSpec::new(4, 4, 0.5),
+            gb: (2, 2),
+        };
+        let mask = crate::sparsity::rbgp4::Rbgp4Mask::sample(cfg, &mut rng).unwrap();
+        let r = SparseMatrix::Rbgp4(crate::sparsity::rbgp4::Rbgp4Matrix::random(
+            mask, &mut rng,
+        ));
+        let n = 8;
+        let io = 4.0 * ((r.cols() * n) + (r.rows() * n)) as f64;
+        let csr_style = 4.0 * (2 * r.nnz() + r.rows() + 1) as f64 + io;
+        assert!(r.bytes_touched(n) < csr_style, "succinct index is smaller");
+        assert!(r.bytes_touched(n) > io, "but not free");
+
+        // AI rises with n as weight traffic amortizes.
+        assert!(w.arithmetic_intensity(64) > w.arithmetic_intensity(1));
+        assert!(r.arithmetic_intensity(64) > r.arithmetic_intensity(1));
     }
 
     #[test]
@@ -542,9 +685,9 @@ mod tests {
         let (a, b) = two_structures(&mut rng);
         // Structure `a` at two batch classes + two thread counts, `b` at one.
         for (n, threads) in [(4usize, 1usize), (16, 1), (4, 3)] {
-            cache.plan_for(&registry, &a, &PlanRequest { n, threads }).unwrap();
+            cache.plan_for(&registry, &a, &PlanRequest::new(n, threads)).unwrap();
         }
-        cache.plan_for(&registry, &b, &PlanRequest { n: 4, threads: 1 }).unwrap();
+        cache.plan_for(&registry, &b, &PlanRequest::new(4, 1)).unwrap();
         assert_eq!(cache.len(), 4);
         assert_eq!(cache.structures().len(), 2);
         assert_eq!(cache.structure_plan_count(a.structure_hash()), 3);
@@ -564,7 +707,7 @@ mod tests {
 
         // Rebuilding after the re-key is a fresh miss, not a stale hit.
         let (_, misses0) = cache.stats();
-        cache.plan_for(&registry, &a, &PlanRequest { n: 4, threads: 1 }).unwrap();
+        cache.plan_for(&registry, &a, &PlanRequest::new(4, 1)).unwrap();
         let (_, misses1) = cache.stats();
         assert_eq!(misses1, misses0 + 1, "evicted structure rebuilds");
     }
@@ -577,7 +720,7 @@ mod tests {
         let (a, b) = two_structures(&mut rng);
         let c = SparseMatrix::dense(vec![1.0; 16 * 16], 16, 16);
         for w in [&a, &b, &c] {
-            cache.plan_for(&registry, w, &PlanRequest { n: 8, threads: 2 }).unwrap();
+            cache.plan_for(&registry, w, &PlanRequest::new(8, 2)).unwrap();
         }
         assert_eq!(cache.len(), 3);
         let keep = [b.structure_hash(), c.structure_hash()];
@@ -597,7 +740,7 @@ mod tests {
         let w = SparseMatrix::Csr(crate::sparsity::csr::CsrMatrix::random_row_uniform(
             16, 16, 0.5, &mut rng,
         ));
-        let req = PlanRequest { n: 4, threads: 1 };
+        let req = PlanRequest::new(4, 1);
         let shared = cache.plan_for(&registry, &w, &req).unwrap();
         // A builder/executor dies while holding the plan lock.
         let poisoner = Arc::clone(&shared);

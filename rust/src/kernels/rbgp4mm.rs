@@ -86,6 +86,35 @@ pub fn rbgp4mm_naive(w: &Rbgp4Matrix, i: &[f32], o: &mut [f32], n: usize) {
 /// when it is smaller, which keeps the pack footprint minimal at small n.
 const NC: usize = 512;
 
+/// The schedule knobs `build_plan`'s autotuner searches over (see
+/// `kernels::autotune`). Every combination is *bit-identical* in output to
+/// the heuristic at the same serial/parallel regime: `stride` blocks the
+/// batch dimension only, `workers` moves whole output tile rows between
+/// threads, and `gather` feeds the identical micro-kernels from un-copied
+/// input rows instead of the packed arena.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rbgp4Tunable {
+    /// Packed-panel column stride (clamped to `[1, batch class]`).
+    pub stride: usize,
+    /// Worker threads (clamped to the `m_o` tile rows).
+    pub workers: usize,
+    /// Skip the pack copy and read panel rows straight from `I` (wins when
+    /// the pack copy can't amortize, e.g. low row repetition or tiny `n`).
+    pub gather: bool,
+}
+
+impl Rbgp4Tunable {
+    /// The fixed heuristic — exactly what [`Rbgp4Plan::build`] has always
+    /// chosen, and candidate 0 of every tuning search.
+    pub fn heuristic(mask: &Rbgp4Mask, n: usize, threads: usize) -> Rbgp4Tunable {
+        Rbgp4Tunable {
+            stride: NC.min(n.max(1).next_power_of_two()),
+            workers: threads.max(1).min(mask.config.go.nu),
+            gather: false,
+        }
+    }
+}
+
 /// Execution plan for one RBGP4 mask at one batch class / thread count:
 /// everything `rbgp4mm` derives from the succinct index, computed once.
 /// `Clone` lets an executor detach a private working copy (the arenas are
@@ -99,18 +128,30 @@ pub struct Rbgp4Plan {
     /// tile column — `G_o`'s right adjacency with the compact k-offset
     /// precomputed (replaces a per-call binary search).
     pub(crate) vo_targets: Vec<Vec<(u32, u32)>>,
-    /// Column stride of the packed panel (≤ NC, tightened to the batch
-    /// class so small batches keep a small L1 footprint).
+    /// Column stride of the packed panel (tightened to the batch class so
+    /// small batches keep a small L1 footprint; tunable).
     pub(crate) stride: usize,
-    /// One pack arena per worker thread, each `trn × stride` floats.
+    /// Gather layout: micro-kernels read rows of `I` directly and the
+    /// arenas stay empty (one zero-length arena per worker, so
+    /// [`Rbgp4Plan::threads`] still reports the worker count).
+    pub(crate) gather: bool,
+    /// One pack arena per worker thread, each `trn × stride` floats
+    /// (zero-length under the gather layout).
     pub(crate) arenas: Vec<Vec<f32>>,
 }
 
 impl Rbgp4Plan {
     /// Derive the plan for `mask`, an expected batch size `n` (the plan is
     /// correct for any `n`; the panel stride is merely tuned for this one),
-    /// and up to `threads` workers (clamped to the `m_o` tile rows).
+    /// and up to `threads` workers (clamped to the `m_o` tile rows) — the
+    /// fixed-heuristic schedule.
     pub fn build(mask: &Rbgp4Mask, n: usize, threads: usize) -> Rbgp4Plan {
+        Rbgp4Plan::build_tuned(mask, n, &Rbgp4Tunable::heuristic(mask, n, threads))
+    }
+
+    /// Derive the plan with an explicit schedule (the autotuner's entry
+    /// point). Out-of-range knobs are clamped, never rejected.
+    pub fn build_tuned(mask: &Rbgp4Mask, n: usize, tun: &Rbgp4Tunable) -> Rbgp4Plan {
         let c = &mask.config;
         let trn = c.tile_row_nnz();
         let mut lc = Vec::with_capacity(c.gi.nu * trn);
@@ -130,14 +171,16 @@ impl Rbgp4Plan {
                 vo_targets[vo].push((uo as u32, ko as u32));
             }
         }
-        let stride = NC.min(n.max(1).next_power_of_two());
-        let workers = threads.max(1).min(c.go.nu);
-        let arenas = (0..workers).map(|_| vec![0.0f32; trn * stride]).collect();
+        let stride = tun.stride.clamp(1, n.max(1).next_power_of_two());
+        let workers = tun.workers.max(1).min(c.go.nu);
+        let arena_len = if tun.gather { 0 } else { trn * stride };
+        let arenas = (0..workers).map(|_| vec![0.0f32; arena_len]).collect();
         Rbgp4Plan {
             local_cols: lc,
             trn,
             vo_targets,
             stride,
+            gather: tun.gather,
             arenas,
         }
     }
@@ -150,6 +193,12 @@ impl Rbgp4Plan {
     /// Packed-panel column stride.
     pub fn stride(&self) -> usize {
         self.stride
+    }
+
+    /// Whether this plan reads panel rows directly from `I` (gather
+    /// layout) instead of packing them.
+    pub fn is_gather(&self) -> bool {
+        self.gather
     }
 }
 
@@ -167,11 +216,13 @@ pub fn rbgp4mm_with_plan(w: &Rbgp4Matrix, plan: &mut Rbgp4Plan, i: &[f32], o: &m
         trn,
         ref vo_targets,
         stride,
+        gather,
         ref mut arenas,
     } = *plan;
     let (mr, mi, mb) = (c.gr.0, c.gi.nu, c.gb.0);
     let rn = c.row_nnz();
     let rep = c.row_repetition();
+    let tk = c.tile_k();
     let pack = &mut arenas[0];
     let mut n0 = 0;
     while n0 < n {
@@ -179,7 +230,21 @@ pub fn rbgp4mm_with_plan(w: &Rbgp4Matrix, plan: &mut Rbgp4Plan, i: &[f32], o: &m
         for (vo, targets) in vo_targets.iter().enumerate() {
             for ui in 0..mi {
                 let lci = &local_cols[ui * trn..(ui + 1) * trn];
-                pack_panel(mask, i, n, n0, nb, vo, lci, pack, stride);
+                let panel = if gather {
+                    PanelRef::Gather {
+                        i,
+                        n,
+                        n0,
+                        tile_base: vo * tk,
+                        lci,
+                    }
+                } else {
+                    pack_panel(mask, i, n, n0, nb, vo, lci, pack, stride);
+                    PanelRef::Packed {
+                        pack: pack.as_slice(),
+                        stride,
+                    }
+                };
                 for &(uo, ko) in targets {
                     let uo = uo as usize;
                     let row_of = |g: usize| ((uo * mr + g / mb) * mi + ui) * mb + g % mb;
@@ -195,8 +260,7 @@ pub fn rbgp4mm_with_plan(w: &Rbgp4Matrix, plan: &mut Rbgp4Plan, i: &[f32], o: &m
                         rep,
                         &row_of,
                         &row_of,
-                        pack,
-                        stride,
+                        &panel,
                     );
                 }
             }
@@ -212,6 +276,45 @@ pub fn rbgp4mm_with_plan(w: &Rbgp4Matrix, plan: &mut Rbgp4Plan, i: &[f32], o: &m
 pub fn rbgp4mm(w: &Rbgp4Matrix, i: &[f32], o: &mut [f32], n: usize) {
     let mut plan = Rbgp4Plan::build(&w.mask, n, 1);
     rbgp4mm_with_plan(w, &mut plan, i, o, n);
+}
+
+/// Where the micro-kernels read panel rows from. Both variants hand out
+/// the *same values in the same order* — the packed arena is a contiguous
+/// copy of exactly the rows the gather variant addresses in place — so the
+/// floating-point expressions (and therefore the bits) of the result are
+/// independent of the layout. The branch is resolved once per panel row,
+/// outside the inner column loops.
+enum PanelRef<'a> {
+    /// Rows staged contiguously in the plan's pack arena.
+    Packed { pack: &'a [f32], stride: usize },
+    /// Rows read in place from `I` through the intra-tile offsets.
+    Gather {
+        i: &'a [f32],
+        n: usize,
+        n0: usize,
+        tile_base: usize,
+        lci: &'a [u32],
+    },
+}
+
+impl<'a> PanelRef<'a> {
+    /// Panel row `p`, `nb` columns wide.
+    #[inline(always)]
+    fn row(&self, p: usize, nb: usize) -> &'a [f32] {
+        match *self {
+            PanelRef::Packed { pack, stride } => &pack[p * stride..p * stride + nb],
+            PanelRef::Gather {
+                i,
+                n,
+                n0,
+                tile_base,
+                lci,
+            } => {
+                let src = (tile_base + lci[p] as usize) * n + n0;
+                &i[src..src + nb]
+            }
+        }
+    }
 }
 
 /// Gather the `tile_row_nnz` rows of `I` that tile column `v_o` and intra-
@@ -256,8 +359,7 @@ fn rep_group_gemm(
     rep: usize,
     wrow_of: &dyn Fn(usize) -> usize,
     orow_of: &dyn Fn(usize) -> usize,
-    pack: &[f32],
-    pstride: usize,
+    panel: &PanelRef<'_>,
 ) {
     let mut g = 0;
     while g + 2 <= rep {
@@ -269,7 +371,7 @@ fn rep_group_gemm(
         let (lo, hi) = o.split_at_mut(ou1 * ostride);
         let orow0 = &mut lo[ou0 * ostride + n0..ou0 * ostride + n0 + nb];
         let orow1 = &mut hi[n0..n0 + nb];
-        micro_2row(w0, w1, orow0, orow1, trn, nb, pack, pstride);
+        micro_2row(w0, w1, orow0, orow1, trn, nb, panel);
         g += 2;
     }
     if g < rep {
@@ -277,12 +379,11 @@ fn rep_group_gemm(
         let ou = orow_of(g);
         let wrow = &wdata[uw * rn + kbase..uw * rn + kbase + trn];
         let orow = &mut o[ou * ostride + n0..ou * ostride + n0 + nb];
-        micro_1row(wrow, orow, trn, nb, pack, pstride);
+        micro_1row(wrow, orow, trn, nb, panel);
     }
 }
 
-/// Two output rows against the whole packed panel, 2-wide panel unroll.
-#[allow(clippy::too_many_arguments)]
+/// Two output rows against the whole panel, 2-wide panel unroll.
 #[inline]
 fn micro_2row(
     w0: &[f32],
@@ -291,15 +392,14 @@ fn micro_2row(
     o1: &mut [f32],
     trn: usize,
     nb: usize,
-    pack: &[f32],
-    pstride: usize,
+    panel: &PanelRef<'_>,
 ) {
     let mut p = 0;
     while p + 2 <= trn {
         let (a0, a1) = (w0[p], w0[p + 1]);
         let (b0, b1) = (w1[p], w1[p + 1]);
-        let r0 = &pack[p * pstride..p * pstride + nb];
-        let r1 = &pack[(p + 1) * pstride..(p + 1) * pstride + nb];
+        let r0 = panel.row(p, nb);
+        let r1 = panel.row(p + 1, nb);
         for cix in 0..nb {
             let (x0, x1) = (r0[cix], r1[cix]);
             o0[cix] += a0 * x0 + a1 * x1;
@@ -309,7 +409,7 @@ fn micro_2row(
     }
     if p < trn {
         let (a, b) = (w0[p], w1[p]);
-        let r = &pack[p * pstride..p * pstride + nb];
+        let r = panel.row(p, nb);
         for cix in 0..nb {
             o0[cix] += a * r[cix];
             o1[cix] += b * r[cix];
@@ -317,17 +417,17 @@ fn micro_2row(
     }
 }
 
-/// One output row against the whole packed panel, 4-wide panel unroll
+/// One output row against the whole panel, 4-wide panel unroll
 /// (perf §L3 iter 1: fewer orow passes at large tile_row_nnz).
 #[inline]
-fn micro_1row(wrow: &[f32], orow: &mut [f32], trn: usize, nb: usize, pack: &[f32], pstride: usize) {
+fn micro_1row(wrow: &[f32], orow: &mut [f32], trn: usize, nb: usize, panel: &PanelRef<'_>) {
     let mut p = 0;
     while p + 4 <= trn {
         let (a0, a1, a2, a3) = (wrow[p], wrow[p + 1], wrow[p + 2], wrow[p + 3]);
-        let r0 = &pack[p * pstride..p * pstride + nb];
-        let r1 = &pack[(p + 1) * pstride..(p + 1) * pstride + nb];
-        let r2 = &pack[(p + 2) * pstride..(p + 2) * pstride + nb];
-        let r3 = &pack[(p + 3) * pstride..(p + 3) * pstride + nb];
+        let r0 = panel.row(p, nb);
+        let r1 = panel.row(p + 1, nb);
+        let r2 = panel.row(p + 2, nb);
+        let r3 = panel.row(p + 3, nb);
         for cix in 0..nb {
             orow[cix] += a0 * r0[cix] + a1 * r1[cix] + a2 * r2[cix] + a3 * r3[cix];
         }
@@ -335,7 +435,7 @@ fn micro_1row(wrow: &[f32], orow: &mut [f32], trn: usize, nb: usize, pack: &[f32
     }
     while p < trn {
         let a = wrow[p];
-        let r = &pack[p * pstride..p * pstride + nb];
+        let r = panel.row(p, nb);
         for cix in 0..nb {
             orow[cix] += a * r[cix];
         }
@@ -370,6 +470,7 @@ pub fn rbgp4mm_parallel_with_plan(
         trn,
         vo_targets: _,
         stride,
+        gather,
         ref mut arenas,
     } = *plan;
     let next = AtomicUsize::new(0);
@@ -389,7 +490,7 @@ pub fn rbgp4mm_parallel_with_plan(
                     std::slice::from_raw_parts_mut(o_ptr.0.add(uo * tile_rows), tile_rows)
                 };
                 ochunk.fill(0.0);
-                tile_row_worker(w, i, ochunk, n, uo, local_cols, trn, stride, pack);
+                tile_row_worker(w, i, ochunk, n, uo, local_cols, trn, stride, gather, pack);
             });
         }
     });
@@ -416,6 +517,7 @@ fn tile_row_worker(
     local_cols: &[u32],
     trn: usize,
     stride: usize,
+    gather: bool,
     pack: &mut [f32],
 ) {
     let mask = &w.mask;
@@ -424,13 +526,28 @@ fn tile_row_worker(
     let rn = c.row_nnz();
     let rep = c.row_repetition();
     let tm = c.tile_m();
+    let tk = c.tile_k();
     let mut n0 = 0;
     while n0 < n {
         let nb = stride.min(n - n0);
         for (ko, &vo) in mask.go.adj[uo].iter().enumerate() {
             for ui in 0..mi {
                 let lci = &local_cols[ui * trn..(ui + 1) * trn];
-                pack_panel(mask, i, n, n0, nb, vo, lci, pack, stride);
+                let panel = if gather {
+                    PanelRef::Gather {
+                        i,
+                        n,
+                        n0,
+                        tile_base: vo * tk,
+                        lci,
+                    }
+                } else {
+                    pack_panel(mask, i, n, n0, nb, vo, lci, pack, stride);
+                    PanelRef::Packed {
+                        pack: &*pack,
+                        stride,
+                    }
+                };
                 let local_row = |g: usize| ((g / mb) * mi + ui) * mb + g % mb;
                 let global_row = |g: usize| uo * tm + local_row(g);
                 rep_group_gemm(
@@ -445,8 +562,7 @@ fn tile_row_worker(
                     rep,
                     &global_row,
                     &local_row,
-                    pack,
-                    stride,
+                    &panel,
                 );
             }
         }
@@ -628,6 +744,66 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn tuned_schedules_are_bit_identical_within_a_regime() {
+        let c = Rbgp4Config {
+            go: GraphSpec::new(8, 8, 0.5),
+            gr: (2, 1),
+            gi: GraphSpec::new(4, 4, 0.5),
+            gb: (1, 2),
+        };
+        let (w, mut rng) = mk(c, 1010);
+        let n = 19;
+        let (m, k) = (w.mask.rows(), w.mask.cols());
+        let i = rng.normal_vec_f32(k * n, 1.0);
+        for threads in [1usize, 4] {
+            let heur = Rbgp4Tunable::heuristic(&w.mask, n, threads);
+            let mut reference = vec![0.0; m * n];
+            let mut base = Rbgp4Plan::build_tuned(&w.mask, n, &heur);
+            rbgp4mm_parallel_with_plan(&w, &mut base, &i, &mut reference, n);
+            let variants = [
+                Rbgp4Tunable {
+                    gather: true,
+                    ..heur
+                },
+                Rbgp4Tunable {
+                    stride: (heur.stride / 2).max(1),
+                    ..heur
+                },
+                Rbgp4Tunable {
+                    stride: heur.stride * 2,
+                    gather: true,
+                    ..heur
+                },
+            ];
+            for (vix, tun) in variants.iter().enumerate() {
+                let mut plan = Rbgp4Plan::build_tuned(&w.mask, n, tun);
+                assert_eq!(plan.threads(), base.threads(), "regime preserved");
+                assert_eq!(plan.is_gather(), tun.gather);
+                let mut o = vec![0.0; m * n];
+                rbgp4mm_parallel_with_plan(&w, &mut plan, &i, &mut o, n);
+                assert_eq!(o, reference, "variant {vix} at threads={threads}");
+            }
+        }
+        // Worker-count variation within the parallel regime (≥ 2 workers)
+        // is bitwise too: each tile row is computed whole by one worker.
+        let heur = Rbgp4Tunable::heuristic(&w.mask, n, 4);
+        assert!(heur.workers >= 2);
+        let mut p4 = Rbgp4Plan::build_tuned(&w.mask, n, &heur);
+        let mut p2 = Rbgp4Plan::build_tuned(
+            &w.mask,
+            n,
+            &Rbgp4Tunable {
+                workers: 2,
+                ..heur
+            },
+        );
+        let (mut o4, mut o2) = (vec![0.0; m * n], vec![0.0; m * n]);
+        rbgp4mm_parallel_with_plan(&w, &mut p4, &i, &mut o4, n);
+        rbgp4mm_parallel_with_plan(&w, &mut p2, &i, &mut o2, n);
+        assert_eq!(o4, o2);
     }
 
     #[test]

@@ -15,9 +15,8 @@
 //! kind for apples-to-apples model-vs-measured rows in the bench harness.
 
 use crate::gpusim::KernelKind;
-use crate::kernels::plan::{
-    balanced_row_ranges, batch_class, KernelPlan, PlanRequest, PlanState, SparseMatrix,
-};
+use crate::kernels::autotune::{self, TunedConfig};
+use crate::kernels::plan::{batch_class, KernelPlan, PlanRequest, PlanState, SparseMatrix};
 use crate::kernels::{bsr_sdmm, csr_sdmm, dense, rbgp4mm};
 use crate::sparsity::memory::Pattern;
 use std::time::Instant;
@@ -75,16 +74,59 @@ fn check_shapes(w: &SparseMatrix, i: &[f32], o: &[f32], n: usize) -> anyhow::Res
     Ok(())
 }
 
-fn plan_header(w: &SparseMatrix, req: &PlanRequest, t0: Instant, state: PlanState) -> KernelPlan {
-    KernelPlan {
-        pattern: w.pattern(),
-        rows: w.rows(),
-        cols: w.cols(),
-        batch_class: batch_class(req.n),
-        threads: req.threads.max(1),
-        build_seconds: t0.elapsed().as_secs_f64(),
-        state,
-    }
+/// Shared `build_plan` body for every family: generate the candidate
+/// schedules for `(w, req)` (candidate 0 is always the fixed heuristic),
+/// and — unless `req.tune` is [`autotune::TuneMode::Off`] — run the short
+/// measured search on a synthetic non-zero batch at the request's batch
+/// class, keep the fastest candidate, and record what the search learned
+/// as a [`TunedConfig`] against the machine probe's roofline. Every
+/// candidate is bit-identical in output (see `kernels::autotune`), so a
+/// noisy measurement can pick a slower schedule, never a wrong one. The
+/// winning plan's `build_seconds` includes the whole search; stored in the
+/// `PlanCache`, the search cost amortizes to once per key.
+fn tuned_build(
+    kernel: &dyn SparseKernel,
+    w: &SparseMatrix,
+    req: &PlanRequest,
+) -> anyhow::Result<KernelPlan> {
+    let t0 = Instant::now();
+    let mut candidates = autotune::candidate_plans(w, req);
+    anyhow::ensure!(
+        !candidates.is_empty(),
+        "{}: no candidate plans",
+        kernel.name()
+    );
+    let mut plan = match autotune::SearchBudget::for_mode(req.tune) {
+        None => candidates.swap_remove(0).1,
+        Some(budget) => {
+            let n = batch_class(req.n);
+            let input = autotune::synth_input(w.cols() * n);
+            let mut output = vec![0.0f32; w.rows() * n];
+            let mut best_secs = f64::INFINITY;
+            let mut best_ix = 0usize;
+            for (ix, (_, cand)) in candidates.iter_mut().enumerate() {
+                let secs = autotune::measure_seconds(&budget, || {
+                    kernel.execute(w, cand, &input, &mut output, n)
+                })?;
+                if secs < best_secs {
+                    best_secs = secs;
+                    best_ix = ix;
+                }
+            }
+            let (params, mut winner) = candidates.swap_remove(best_ix);
+            let flops = w.flops(n);
+            let gflops = flops / best_secs.max(1e-12) / 1e9;
+            let attainable = autotune::machine_probe().attainable_gflops(w.arithmetic_intensity(n));
+            winner.tuned = Some(TunedConfig {
+                params,
+                gflops,
+                roofline_fraction: gflops / attainable,
+            });
+            winner
+        }
+    };
+    plan.build_seconds = t0.elapsed().as_secs_f64();
+    Ok(plan)
 }
 
 /// Dense GEMM family (cuBLAS stand-in). Plan: thread count only — the
@@ -101,11 +143,12 @@ impl SparseKernel for DenseKernel {
     }
 
     fn build_plan(&self, w: &SparseMatrix, req: &PlanRequest) -> anyhow::Result<KernelPlan> {
-        let t0 = Instant::now();
-        match w {
-            SparseMatrix::Dense { .. } => Ok(plan_header(w, req, t0, PlanState::Dense)),
-            _ => anyhow::bail!("dense kernel got a {} matrix", w.pattern().name()),
-        }
+        anyhow::ensure!(
+            matches!(w, SparseMatrix::Dense { .. }),
+            "dense kernel got a {} matrix",
+            w.pattern().name()
+        );
+        tuned_build(self, w, req)
     }
 
     fn execute(
@@ -162,14 +205,12 @@ impl SparseKernel for CsrKernel {
     }
 
     fn build_plan(&self, w: &SparseMatrix, req: &PlanRequest) -> anyhow::Result<KernelPlan> {
-        let t0 = Instant::now();
-        match w {
-            SparseMatrix::Csr(m) => {
-                let ranges = balanced_row_ranges(&m.indptr, req.threads.max(1));
-                Ok(plan_header(w, req, t0, PlanState::Ranges(ranges)))
-            }
-            _ => anyhow::bail!("csr kernel got a {} matrix", w.pattern().name()),
-        }
+        anyhow::ensure!(
+            matches!(w, SparseMatrix::Csr(_)),
+            "csr kernel got a {} matrix",
+            w.pattern().name()
+        );
+        tuned_build(self, w, req)
     }
 
     fn execute(
@@ -182,8 +223,8 @@ impl SparseKernel for CsrKernel {
     ) -> anyhow::Result<()> {
         check_shapes(w, i, o, n)?;
         match (w, &plan.state) {
-            (SparseMatrix::Csr(m), PlanState::Ranges(ranges)) => {
-                csr_sdmm::csr_sdmm_ranges(m, i, o, n, ranges);
+            (SparseMatrix::Csr(m), PlanState::Ranges { ranges, col_block }) => {
+                csr_sdmm::csr_sdmm_ranges_blocked(m, i, o, n, ranges, *col_block);
                 Ok(())
             }
             _ => anyhow::bail!("csr kernel/plan mismatch"),
@@ -222,14 +263,12 @@ impl SparseKernel for BsrKernel {
     }
 
     fn build_plan(&self, w: &SparseMatrix, req: &PlanRequest) -> anyhow::Result<KernelPlan> {
-        let t0 = Instant::now();
-        match w {
-            SparseMatrix::Bsr(m) => {
-                let ranges = balanced_row_ranges(&m.indptr, req.threads.max(1));
-                Ok(plan_header(w, req, t0, PlanState::Ranges(ranges)))
-            }
-            _ => anyhow::bail!("bsr kernel got a {} matrix", w.pattern().name()),
-        }
+        anyhow::ensure!(
+            matches!(w, SparseMatrix::Bsr(_)),
+            "bsr kernel got a {} matrix",
+            w.pattern().name()
+        );
+        tuned_build(self, w, req)
     }
 
     fn execute(
@@ -242,8 +281,8 @@ impl SparseKernel for BsrKernel {
     ) -> anyhow::Result<()> {
         check_shapes(w, i, o, n)?;
         match (w, &plan.state) {
-            (SparseMatrix::Bsr(m), PlanState::Ranges(ranges)) => {
-                bsr_sdmm::bsr_sdmm_ranges(m, i, o, n, ranges);
+            (SparseMatrix::Bsr(m), PlanState::Ranges { ranges, col_block }) => {
+                bsr_sdmm::bsr_sdmm_ranges_blocked(m, i, o, n, ranges, *col_block);
                 Ok(())
             }
             _ => anyhow::bail!("bsr kernel/plan mismatch"),
@@ -283,14 +322,12 @@ impl SparseKernel for Rbgp4Kernel {
     }
 
     fn build_plan(&self, w: &SparseMatrix, req: &PlanRequest) -> anyhow::Result<KernelPlan> {
-        let t0 = Instant::now();
-        match w {
-            SparseMatrix::Rbgp4(m) => {
-                let plan = rbgp4mm::Rbgp4Plan::build(&m.mask, batch_class(req.n), req.threads);
-                Ok(plan_header(w, req, t0, PlanState::Rbgp4(Box::new(plan))))
-            }
-            _ => anyhow::bail!("rbgp4 kernel got a {} matrix", w.pattern().name()),
-        }
+        anyhow::ensure!(
+            matches!(w, SparseMatrix::Rbgp4(_)),
+            "rbgp4 kernel got a {} matrix",
+            w.pattern().name()
+        );
+        tuned_build(self, w, req)
     }
 
     fn execute(
@@ -460,9 +497,7 @@ mod tests {
             let i = rng.normal_vec_f32(w.cols() * n, 1.0);
             let mut o_plan = vec![0.0; w.rows() * n];
             let mut o_naive = vec![0.0; w.rows() * n];
-            let mut plan = kernel
-                .build_plan(&w, &PlanRequest { n, threads: 3 })
-                .unwrap();
+            let mut plan = kernel.build_plan(&w, &PlanRequest::new(n, 3)).unwrap();
             kernel.execute(&w, &mut plan, &i, &mut o_plan, n).unwrap();
             kernel.execute_naive(&w, &i, &mut o_naive, n).unwrap();
             for (idx, (a, b)) in o_plan.iter().zip(&o_naive).enumerate() {
@@ -481,7 +516,45 @@ mod tests {
         let mut rng = Rng::new(401);
         let w = SparseMatrix::dense(rng.normal_vec_f32(16, 1.0), 4, 4);
         let kernel = reg.get(Pattern::Rbgp4).unwrap();
-        assert!(kernel.build_plan(&w, &PlanRequest { n: 4, threads: 1 }).is_err());
+        assert!(kernel.build_plan(&w, &PlanRequest::new(4, 1)).is_err());
+    }
+
+    #[test]
+    fn tuned_build_records_roofline_and_off_does_not() {
+        use crate::kernels::autotune::TuneMode;
+        let reg = KernelRegistry::builtin();
+        let mut rng = Rng::new(404);
+        let n = 8;
+        for w in sample_matrices(&mut rng) {
+            let kernel = reg.for_matrix(&w).unwrap();
+            let off = kernel
+                .build_plan(&w, &PlanRequest::new(n, 2).with_tune(TuneMode::Off))
+                .unwrap();
+            assert!(off.tuned.is_none(), "{}: Off must not search", kernel.name());
+            let tuned = kernel
+                .build_plan(&w, &PlanRequest::new(n, 2).with_tune(TuneMode::Quick))
+                .unwrap();
+            let cfg = tuned
+                .tuned
+                .as_ref()
+                .unwrap_or_else(|| panic!("{}: Quick must record TunedConfig", kernel.name()));
+            assert!(cfg.gflops.is_finite() && cfg.gflops > 0.0);
+            assert!(cfg.roofline_fraction.is_finite() && cfg.roofline_fraction > 0.0);
+            assert!(!cfg.params.is_empty());
+            assert!(
+                tuned.build_seconds >= 0.0,
+                "search time folds into build_seconds"
+            );
+            // Whatever the search picked executes bit-identically to the
+            // heuristic plan (the candidate contract).
+            let i = rng.normal_vec_f32(w.cols() * n, 1.0);
+            let (mut a, mut b) = (vec![0.0; w.rows() * n], vec![0.0; w.rows() * n]);
+            let mut off = off;
+            let mut tuned = tuned;
+            kernel.execute(&w, &mut off, &i, &mut a, n).unwrap();
+            kernel.execute(&w, &mut tuned, &i, &mut b, n).unwrap();
+            assert_eq!(a, b, "{}: tuned ≠ heuristic bits", kernel.name());
+        }
     }
 
     #[test]

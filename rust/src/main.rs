@@ -27,6 +27,8 @@ use std::time::Duration;
 #[cfg(not(feature = "xla"))]
 use rbgp::coordinator::{BatchModel, NativeSparseModel, NativeTrainer};
 #[cfg(not(feature = "xla"))]
+use rbgp::kernels::TuneMode;
+#[cfg(not(feature = "xla"))]
 use rbgp::train_native::NativeTrainConfig;
 #[cfg(feature = "xla")]
 use rbgp::coordinator::{TrainConfig, Trainer};
@@ -47,10 +49,12 @@ COMMANDS
   table3     [--measure-n 1024] [--seed 0]              Table 3 (model + measured)
   train      [--artifacts DIR] [--steps 300] [--lr 0.1] [--seed 0] [--distill]
              [--save ckpt.json] [--load ckpt.json]
-             [--gradual] [--milestones 0.25,0.6] [--sp 0.75]   (native only)
+             [--gradual] [--milestones 0.25,0.6] [--sp 0.75]
+             [--tune off|quick|full]                           (native only)
   serve      [--requests 512] [--clients 4] [--workers 2] [--queue-cap 1024]
              [--deadline-ms 0] [--max-starvation-ms 1000] [--model-quota Q]
-             [--model name=ckpt.json[@Q]]...                   (native only)
+             [--model name=ckpt.json[@Q]]...
+             [--tune off|quick|full]                           (native only)
              [--artifacts DIR] [--checkpoint ckpt.json]        (xla only)
 
 With the `xla` feature, train/serve execute AOT artifacts on PJRT (run
@@ -61,7 +65,11 @@ backends: `train` fits the masked MLP on the synthetic task (add
 round-trip JSON checkpoints), `serve` serves the RBGP4 demo model from
 the kernel plan cache — or, with one `--model name=ckpt.json` per model,
 serves several trained checkpoints concurrently from one worker pool
-sharing one plan cache (per-model plan namespaces). A quota Q bounds how
+sharing one plan cache (per-model plan namespaces). --tune picks how
+hard plan warm-up searches kernel schedules (off = fixed heuristic,
+quick = small measured search, full = wider search; the winning
+schedule is cached per plan key, so the search runs once, and every
+candidate is bit-identical to the heuristic). A quota Q bounds how
 many requests a model may have queued at once (admission control): an
 integer is an absolute cap, a fraction in (0,1) is a share of
 --queue-cap, 0 means unlimited; --model-quota sets the default for every
@@ -294,6 +302,7 @@ fn train_cmd(args: &Args) -> anyhow::Result<()> {
         batch: args.get_usize("batch", 64)?,
         lr: args.get_f64("lr", 0.05)? as f32,
         seed: args.get_u64("seed", 0)?,
+        tune: TuneMode::parse(&args.get_str("tune", "quick"))?,
         ..NativeTrainConfig::default()
     };
     let in_dim = args.get_usize("in-dim", 256)?;
@@ -465,6 +474,7 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
              the native backend serves trained models via --model name=ckpt.json"
         );
         let batch = args.get_usize("batch", 16)?;
+        let tune = TuneMode::parse(&args.get_str("tune", "quick"))?;
         // Divide the cores across the pool: N workers each running an
         // all-cores kernel would oversubscribe the CPU N-fold (and carry
         // N× the per-thread pack arenas in their detached plans).
@@ -486,7 +496,8 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
                         threads,
                         seed,
                         std::sync::Arc::clone(&model_cache),
-                    )?;
+                    )?
+                    .with_tune(tune);
                     model.warm()?;
                     Ok(Box::new(model) as Box<dyn BatchModel>)
                 },
@@ -517,7 +528,7 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
             let (first_name, first, first_quota) = &checkpoints[0];
             let server = InferenceServer::start_model_as(
                 first_name,
-                first.serving_factory(batch, threads, std::sync::Arc::clone(&cache)),
+                first.serving_factory_tuned(batch, threads, std::sync::Arc::clone(&cache), tune),
                 ServerConfig {
                     // The initial model registers through the config-level
                     // quota; apply its per-model override there.
@@ -526,7 +537,8 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
                 },
             )?;
             for (name, ckpt, quota) in &checkpoints[1..] {
-                let factory = ckpt.serving_factory(batch, threads, std::sync::Arc::clone(&cache));
+                let factory =
+                    ckpt.serving_factory_tuned(batch, threads, std::sync::Arc::clone(&cache), tune);
                 // Always pass an explicit quota: the server-level default
                 // was overridden to the *first* model's `@Q` above, and a
                 // later model without its own override must get the

@@ -6,6 +6,7 @@
 //! exactly zero. Optimizer: SGD + momentum 0.9 + weight decay 1e-4.
 
 use crate::data::synth::CifarLike;
+use crate::kernels::autotune::TuneMode;
 use crate::kernels::dense::{gemm_blocked, gemm_nt, gemm_tn};
 use crate::util::rng::Rng;
 
@@ -23,6 +24,9 @@ pub struct NativeTrainConfig {
     pub momentum: f32,
     pub weight_decay: f32,
     pub seed: u64,
+    /// Autotune mode used when deriving serving models/plans from a
+    /// training run (does not affect the training math itself).
+    pub tune: TuneMode,
 }
 
 impl Default for NativeTrainConfig {
@@ -34,6 +38,7 @@ impl Default for NativeTrainConfig {
             momentum: 0.9,
             weight_decay: 1e-4,
             seed: 0,
+            tune: TuneMode::default(),
         }
     }
 }

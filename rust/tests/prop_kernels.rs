@@ -5,6 +5,7 @@
 
 use rbgp::graph::product_many;
 use rbgp::graph::BipartiteGraph;
+use rbgp::kernels::autotune::{candidate_plans, TuneMode};
 use rbgp::kernels::bsr_sdmm::bsr_sdmm;
 use rbgp::kernels::csr_sdmm::csr_sdmm;
 use rbgp::kernels::dense::gemm_naive;
@@ -133,7 +134,7 @@ fn prop_trait_kernels_match_oracle_across_threads() {
             for threads in [1usize, 4, 7] {
                 // Direct trait path.
                 let mut plan = kernel
-                    .build_plan(w, &PlanRequest { n, threads })
+                    .build_plan(w, &PlanRequest::new(n, threads))
                     .map_err(|e| e.to_string())?;
                 let mut o = vec![0.0; m * n];
                 kernel
@@ -169,6 +170,77 @@ fn prop_trait_kernels_match_oracle_across_threads() {
             matrices.len() * 3
         );
         prop_assert!(hits >= misses, "every plan must be re-used at least once");
+        Ok(())
+    });
+}
+
+/// The autotuner's safety contract: tuning may only choose *schedules*,
+/// never numerics. Over randomized configs/shapes and 1/4/8 threads, every
+/// candidate plan in the Full search space — and the winner a Quick tuned
+/// build actually selects — must produce output bit-identical to the
+/// untuned (Off / fixed-heuristic) plan.
+#[test]
+fn prop_tuned_candidates_bit_identical_to_untuned_plan() {
+    let registry = KernelRegistry::builtin();
+    check("tuned candidates == untuned plan, bitwise", 8, |rng| {
+        let cfg = random_config(rng);
+        let mask = Rbgp4Mask::sample(cfg, rng).map_err(|e| e.to_string())?;
+        let rbgp = Rbgp4Matrix::random(mask, rng);
+        let (m, k) = (rbgp.mask.rows(), rbgp.mask.cols());
+        // n = 1 hits the degenerate stride/col-block clamps.
+        let n = [1usize, gen::range(rng, 2, 24)][rng.below_usize(2)];
+        let i = rng.normal_vec_f32(k * n, 1.0);
+        let matrices = [
+            SparseMatrix::dense(rng.normal_vec_f32(m * k, 1.0), m, k),
+            SparseMatrix::Csr(CsrMatrix::random_row_uniform(m, k, 0.75, rng)),
+            SparseMatrix::Bsr(BsrMatrix::random_block_uniform(m, k, 4, 4, 0.5, rng)),
+            SparseMatrix::Rbgp4(rbgp),
+        ];
+        for w in &matrices {
+            let kernel = registry.for_matrix(w).map_err(|e| e.to_string())?;
+            for threads in [1usize, 4, 8] {
+                let off = PlanRequest::new(n, threads).with_tune(TuneMode::Off);
+                let mut plan = kernel.build_plan(w, &off).map_err(|e| e.to_string())?;
+                prop_assert!(
+                    plan.tuned.is_none(),
+                    "{} t={threads}: Off build must not record a TunedConfig",
+                    kernel.name()
+                );
+                let mut reference = vec![0.0; m * n];
+                kernel
+                    .execute(w, &mut plan, &i, &mut reference, n)
+                    .map_err(|e| e.to_string())?;
+                // Every candidate in the widest (Full) search space.
+                let full = PlanRequest::new(n, threads).with_tune(TuneMode::Full);
+                for (label, mut cand) in candidate_plans(w, &full) {
+                    let mut o = vec![9.0; m * n];
+                    kernel
+                        .execute(w, &mut cand, &i, &mut o, n)
+                        .map_err(|e| e.to_string())?;
+                    prop_assert_eq!(
+                        o,
+                        reference,
+                        "{} t={threads} candidate '{label}'",
+                        kernel.name()
+                    );
+                }
+                // And the winner a measured Quick search actually picks
+                // (selection is timing-nondeterministic; output must not be).
+                let mut tuned = kernel
+                    .build_plan(w, &PlanRequest::new(n, threads))
+                    .map_err(|e| e.to_string())?;
+                prop_assert!(
+                    tuned.tuned.is_some(),
+                    "{} t={threads}: Quick build must record a TunedConfig",
+                    kernel.name()
+                );
+                let mut o = vec![9.0; m * n];
+                kernel
+                    .execute(w, &mut tuned, &i, &mut o, n)
+                    .map_err(|e| e.to_string())?;
+                prop_assert_eq!(o, reference, "{} t={threads} tuned winner", kernel.name());
+            }
+        }
         Ok(())
     });
 }
@@ -373,10 +445,7 @@ fn prop_plan_cache_rekey_accounting_is_exact_under_races() {
                     let registry = &registry;
                     scope.spawn(move || {
                         for _ in 0..rounds {
-                            let req = PlanRequest {
-                                n,
-                                threads: 1 + (t % 2),
-                            };
+                            let req = PlanRequest::new(n, 1 + (t % 2));
                             cache.plan_for(registry, w, &req).unwrap();
                         }
                     });
@@ -427,7 +496,7 @@ fn prop_plan_cache_concurrent_resolve_is_consistent() {
             SparseMatrix::Csr(CsrMatrix::random_row_uniform(m, k, 0.5, rng)),
         ];
         let n = gen::range(rng, 1, 16);
-        let req = PlanRequest { n, threads: 2 };
+        let req = PlanRequest::new(n, 2);
         let cache = PlanCache::new();
         let n_threads = 8;
         let rounds = 4;
