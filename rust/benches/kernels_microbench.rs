@@ -19,10 +19,17 @@
 //! Results are also written to `BENCH_kernels.json` (in the cargo package
 //! root, where `cargo bench` runs) so future PRs have a perf trajectory.
 //!
-//! `cargo bench --bench kernels_microbench [-- --tune off|quick|full]`
-//! (RBGP_BENCH_FAST=1 quick pass; tune defaults to quick)
+//! `cargo bench --bench kernels_microbench [-- --tune off|quick|full]
+//! [-- --tune-cache FILE]` (RBGP_BENCH_FAST=1 quick pass; tune defaults to
+//! quick). With `--tune-cache` the persistent [`TuneCache`] is consulted:
+//! rows whose winner is already recorded build with zero search reps (the
+//! per-row `search_reps` field in the JSON makes warm vs cold visible),
+//! and the **plan** column reports the warm-cache build cost rather than
+//! the search cost.
 
-use rbgp::kernels::autotune::TuneMode;
+use std::sync::Arc;
+
+use rbgp::kernels::autotune::{search_reps, TuneCache, TuneMode};
 use rbgp::kernels::plan::{PlanRequest, SparseMatrix};
 use rbgp::kernels::registry::KernelRegistry;
 use rbgp::kernels::{
@@ -53,6 +60,9 @@ struct Row {
     achieved_gbps: f64,
     roofline_fraction: f64,
     tuned_params: String,
+    /// Measurement executions the schedule search spent building this
+    /// row's tuned plan — 0 when the winner came from a warm `TuneCache`.
+    search_reps: usize,
 }
 
 impl Row {
@@ -74,7 +84,8 @@ impl Row {
             .set("ai_flops_per_byte", self.ai_flops_per_byte)
             .set("achieved_gbps", self.achieved_gbps)
             .set("roofline_fraction", self.roofline_fraction)
-            .set("tuned_params", self.tuned_params.as_str());
+            .set("tuned_params", self.tuned_params.as_str())
+            .set("search_reps", self.search_reps);
         j
     }
 
@@ -94,12 +105,14 @@ impl Row {
             self.speedup_vs_percall,
         );
         println!(
-            "{:<10}                AI {:>6.2} flop/B   {:>7.2} GB/s   roofline {:>5.1}%   [{}]",
+            "{:<10}                AI {:>6.2} flop/B   {:>7.2} GB/s   roofline {:>5.1}%   [{}] \
+             ({} search reps)",
             "",
             self.ai_flops_per_byte,
             self.achieved_gbps,
             self.roofline_fraction * 100.0,
             self.tuned_params,
+            self.search_reps,
         );
     }
 }
@@ -114,10 +127,22 @@ fn bench_family(
     n: usize,
     threads: usize,
     tune: TuneMode,
+    tune_cache: Option<&Arc<TuneCache>>,
     percall: &mut dyn FnMut(&[f32], &mut [f32]),
 ) -> Row {
     let kernel = registry.for_matrix(w).expect("registered kernel");
-    let req = PlanRequest::new(n, threads).with_tune(tune);
+    let mut req = PlanRequest::new(n, threads).with_tune(tune);
+    if let Some(tc) = tune_cache {
+        req = req.with_tune_cache(Arc::clone(tc));
+    }
+
+    // The instrumented tuned build runs first, before any other build has
+    // had the chance to record its winner into the cache: the rep delta is
+    // therefore 0 exactly when this process started with the winner on
+    // disk (the warm-start property the CI artifact exists to exercise).
+    let reps_before = search_reps();
+    let mut plan = kernel.build_plan(w, &req).expect("plan");
+    let reps_spent = search_reps() - reps_before;
 
     let plan_build = bench_fn(cfg, || {
         let plan = kernel.build_plan(w, &req).expect("plan");
@@ -134,7 +159,6 @@ fn bench_family(
         std::hint::black_box(&o);
     });
 
-    let mut plan = kernel.build_plan(w, &req).expect("plan");
     let execute = bench_fn(cfg, || {
         kernel.execute(w, &mut plan, i, o, n).expect("execute");
         std::hint::black_box(&o);
@@ -162,6 +186,7 @@ fn bench_family(
             .as_ref()
             .map(|t| t.params.clone())
             .unwrap_or_else(|| "heuristic".to_string()),
+        search_reps: reps_spent,
         plan_build,
         execute,
         percall,
@@ -178,12 +203,28 @@ fn tune_from_args() -> TuneMode {
     TuneMode::default()
 }
 
+/// `--tune-cache FILE`: persist tuned winners across bench runs (the CI
+/// warm-start artifact). Returns the opened cache and whether the file
+/// held any usable entries before this run touched it.
+fn tune_cache_from_args() -> Option<(Arc<TuneCache>, String, bool)> {
+    let args: Vec<String> = std::env::args().collect();
+    for pair in args.windows(2) {
+        if pair[0] == "--tune-cache" {
+            let cache = TuneCache::open(&pair[1]);
+            let preexisting = !cache.is_empty();
+            return Some((cache, pair[1].clone(), preexisting));
+        }
+    }
+    None
+}
+
 fn main() {
     let (m, k) = (1024usize, 1024usize);
     let sp = 0.875;
     let par = default_threads();
     let cfg = BenchConfig::from_env();
     let tune = tune_from_args();
+    let tune_cache = tune_cache_from_args();
     let mut rng = Rng::new(3);
 
     let probe = machine_probe();
@@ -192,11 +233,20 @@ fn main() {
         sp * 100.0
     );
     println!(
-        "machine probe: {:.2} GB/s stream, {:.2} GFLOP/s fma peak — tune mode {}\n",
+        "machine probe: {:.2} GB/s stream, {:.2} GFLOP/s fma peak — tune mode {}",
         probe.peak_gbps,
         probe.peak_gflops,
         tune.name()
     );
+    if let Some((cache, path, preexisting)) = &tune_cache {
+        println!(
+            "tune cache {path}: {} entries loaded ({} rejected), {}",
+            cache.len(),
+            cache.rejected_entries(),
+            if *preexisting { "warm start" } else { "cold start" }
+        );
+    }
+    println!();
 
     // Weight operands, one per family, all at the same shape/sparsity
     // (dense ignores sparsity, as cuBLAS computes every element).
@@ -260,8 +310,18 @@ fn main() {
                         }
                     }
                 };
-                let row =
-                    bench_family(&registry, &cfg, w, &i, &mut o, n, t, tune, percall.as_mut());
+                let row = bench_family(
+                    &registry,
+                    &cfg,
+                    w,
+                    &i,
+                    &mut o,
+                    n,
+                    t,
+                    tune,
+                    tune_cache.as_ref().map(|(c, _, _)| c),
+                    percall.as_mut(),
+                );
                 row.print();
                 rows.push(row);
             }
@@ -283,6 +343,11 @@ fn main() {
             "fast_mode",
             std::env::var("RBGP_BENCH_FAST").map(|v| v == "1").unwrap_or(false),
         );
+    if let Some((cache, path, preexisting)) = &tune_cache {
+        meta.set("tune_cache_path", path.as_str())
+            .set("tune_cache_preexisting", *preexisting)
+            .set("tune_cache_entries", cache.len());
+    }
     doc.set("bench", "kernels_microbench").set("config", meta).set(
         "rows",
         Json::Arr(rows.iter().map(|r| r.to_json(m, k, sp)).collect()),

@@ -3,14 +3,20 @@
 //!
 //! `cargo bench --bench table2_sparsity_distribution`
 //! Env: RBGP_MEASURE_N (default 1024; 4096 reproduces the paper's size but
-//! takes minutes on CPU), RBGP_BENCH_FAST=1 for a quick pass.
+//! takes minutes on CPU), RBGP_BENCH_FAST=1 for a quick pass,
+//! RBGP_TUNE=quick|full adds a tuned-schedule column beside the heuristic.
 
 use rbgp::bench_harness::table2;
+use rbgp::kernels::TuneMode;
 
 fn main() {
     let n: usize = std::env::var("RBGP_MEASURE_N")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1024);
-    println!("{}", table2::run(n, 0).render());
+    let tune = match std::env::var("RBGP_TUNE").ok().as_deref() {
+        None | Some("off") | Some("") => None,
+        Some(m) => Some(TuneMode::parse(m).expect("RBGP_TUNE: off|quick|full")),
+    };
+    println!("{}", table2::run_tuned(n, 0, tune).render());
 }

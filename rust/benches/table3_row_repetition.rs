@@ -2,14 +2,20 @@
 //! from the complete graphs G_r and G_b, G_t fixed at (128, 32)).
 //!
 //! `cargo bench --bench table3_row_repetition`
-//! Env: RBGP_MEASURE_N (default 1024), RBGP_BENCH_FAST=1.
+//! Env: RBGP_MEASURE_N (default 1024), RBGP_BENCH_FAST=1,
+//! RBGP_TUNE=quick|full adds a tuned-schedule column beside the heuristic.
 
 use rbgp::bench_harness::table3;
+use rbgp::kernels::TuneMode;
 
 fn main() {
     let n: usize = std::env::var("RBGP_MEASURE_N")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1024);
-    println!("{}", table3::run(n, 0).render());
+    let tune = match std::env::var("RBGP_TUNE").ok().as_deref() {
+        None | Some("off") | Some("") => None,
+        Some(m) => Some(TuneMode::parse(m).expect("RBGP_TUNE: off|quick|full")),
+    };
+    println!("{}", table3::run_tuned(n, 0, tune).render());
 }

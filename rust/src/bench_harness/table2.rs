@@ -11,6 +11,7 @@
 
 use crate::bench_harness::report::{ms, speedup, Table};
 use crate::gpusim::{estimate, Device, KernelKind, SdmmShape};
+use crate::kernels::autotune::TuneMode;
 use crate::kernels::plan::{PlanRequest, SparseMatrix};
 use crate::kernels::registry::KernelRegistry;
 use crate::sparsity::rbgp4::{GraphSpec, Rbgp4Config, Rbgp4Mask, Rbgp4Matrix};
@@ -47,33 +48,51 @@ pub fn config_at(sp_o: f64, sp_i: f64, scale: usize) -> Rbgp4Config {
 /// Run Table 2. `measure_n`: matrix size for the measured column (0 skips
 /// measurement and prints only the model).
 pub fn run(measure_n: usize, seed: u64) -> Table {
+    run_tuned(measure_n, seed, None)
+}
+
+/// [`run`] with an optional tuned column: when `tune` is set, every
+/// measured matrix is timed twice — once from the fixed heuristic plan
+/// ([`TuneMode::Off`]) and once from a plan whose schedule the autotune
+/// search picked — and the extra column reports the tuned time with its
+/// speedup over the heuristic. The two cells share one matrix, so the
+/// delta isolates the schedule.
+pub fn run_tuned(measure_n: usize, seed: u64, tune: Option<TuneMode>) -> Table {
     let dev = Device::v100();
     let shape = SdmmShape {
         m: 4096,
         k: 4096,
         n: 4096,
     };
+    let tuned_col = tune.filter(|_| measure_n > 0);
+    let mut headers: Vec<String> = vec![
+        "Sp(G)%".into(),
+        "Sp(Go)%".into(),
+        "Sp(Gi)%".into(),
+        "paper ms (x)".into(),
+        "model ms (x)".into(),
+        format!("measured@{measure_n} ms (x)"),
+    ];
+    if tuned_col.is_some() {
+        headers.push(format!("tuned@{measure_n} ms (x vs heur)"));
+    }
+    let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
     let mut table = Table::new(
         "Table 2 — sparsity distribution between G_o and G_i (SDMM 4096³)",
-        &[
-            "Sp(G)%",
-            "Sp(Go)%",
-            "Sp(Gi)%",
-            "paper ms (x)",
-            "model ms (x)",
-            &format!("measured@{measure_n} ms (x)"),
-        ],
+        &hdr_refs,
     );
 
     let dense_model = estimate(&dev, shape, &KernelKind::DenseCublas).t_total;
-    let (dense_meas, mut rng) = if measure_n > 0 {
-        let mut rng = Rng::new(seed);
-        let t = measure_dense(measure_n, &mut rng);
-        (Some(t), rng)
+    let mut rng = Rng::new(seed);
+    let (dense_meas, dense_tuned) = if measure_n > 0 {
+        let w = dense_matrix(measure_n, &mut rng);
+        let heur = measure_kernel(&w, measure_n, &mut rng);
+        let tuned = tuned_col.map(|m| measure_kernel_tuned(&w, measure_n, &mut rng, m));
+        (Some(heur), tuned)
     } else {
-        (None, Rng::new(seed))
+        (None, None)
     };
-    table.row(vec![
+    let mut dense_row = vec![
         "0".into(),
         "0".into(),
         "0".into(),
@@ -82,19 +101,29 @@ pub fn run(measure_n: usize, seed: u64) -> Table {
         dense_meas
             .map(|t| format!("{} (1x)", ms(t)))
             .unwrap_or_else(|| "-".into()),
-    ]);
+    ];
+    if tuned_col.is_some() {
+        dense_row.push(match (dense_tuned, dense_meas) {
+            (Some(t), Some(h)) => format!("{} ({})", ms(t), speedup(h, t)),
+            _ => "-".into(),
+        });
+    }
+    table.row(dense_row);
 
     for &(sp, sp_o, sp_i, paper) in PAPER_ROWS {
         let cfg = config_at(sp_o / 100.0, sp_i / 100.0, 1);
         let model = estimate(&dev, shape, &KernelKind::Rbgp4 { config: cfg }).t_total;
-        let measured = if measure_n > 0 {
+        let (measured, tuned) = if measure_n > 0 {
             let scale = 4096 / measure_n;
             let cfg_s = config_at(sp_o / 100.0, sp_i / 100.0, scale);
-            Some(measure_rbgp4(cfg_s, measure_n, &mut rng))
+            let w = rbgp4_matrix(cfg_s, &mut rng);
+            let heur = measure_kernel(&w, measure_n, &mut rng);
+            let tuned = tuned_col.map(|m| measure_kernel_tuned(&w, measure_n, &mut rng, m));
+            (Some(heur), tuned)
         } else {
-            None
+            (None, None)
         };
-        table.row(vec![
+        let mut cells = vec![
             format!("{sp:.2}"),
             format!("{sp_o:.2}"),
             format!("{sp_i:.2}"),
@@ -104,7 +133,14 @@ pub fn run(measure_n: usize, seed: u64) -> Table {
                 (Some(t), Some(d)) => format!("{} ({})", ms(t), speedup(d, t)),
                 _ => "-".into(),
             },
-        ]);
+        ];
+        if tuned_col.is_some() {
+            cells.push(match (tuned, measured) {
+                (Some(t), Some(h)) => format!("{} ({})", ms(t), speedup(h, t)),
+                _ => "-".into(),
+            });
+        }
+        table.row(cells);
     }
     table
 }
@@ -115,13 +151,20 @@ pub fn run(measure_n: usize, seed: u64) -> Table {
 /// Tables 2/3 therefore reports the amortized number the paper's claim is
 /// about, not per-call structure rebuilds.
 pub fn measure_kernel(w: &SparseMatrix, n: usize, rng: &mut Rng) -> f64 {
+    measure_kernel_tuned(w, n, rng, TuneMode::Off)
+}
+
+/// [`measure_kernel`] with an explicit tune mode: the plan (and its
+/// schedule search, when `tune` measures) is still built outside the
+/// timed region, so the cell reports hot-path execute time only.
+pub fn measure_kernel_tuned(w: &SparseMatrix, n: usize, rng: &mut Rng, tune: TuneMode) -> f64 {
     let registry = KernelRegistry::builtin();
     let kernel = registry.for_matrix(w).expect("registered kernel");
     let threads = default_threads();
     let i = rng.normal_vec_f32(w.cols() * n, 1.0);
     let mut o = vec![0.0f32; w.rows() * n];
     let mut plan = kernel
-        .build_plan(w, &PlanRequest::new(n, threads))
+        .build_plan(w, &PlanRequest::new(n, threads).with_tune(tune))
         .expect("plan");
     let bench = BenchConfig::from_env();
     bench_fn(&bench, || {
@@ -131,9 +174,20 @@ pub fn measure_kernel(w: &SparseMatrix, n: usize, rng: &mut Rng) -> f64 {
     .median
 }
 
+/// A dense (n × n) weight with normal entries — the cuBLAS stand-in's input.
+pub fn dense_matrix(n: usize, rng: &mut Rng) -> SparseMatrix {
+    SparseMatrix::dense(rng.normal_vec_f32(n * n, 1.0), n, n)
+}
+
+/// An RBGP4 weight sampled from `cfg` with random values.
+pub fn rbgp4_matrix(cfg: Rbgp4Config, rng: &mut Rng) -> SparseMatrix {
+    let mask = Rbgp4Mask::sample(cfg, rng).expect("valid config");
+    SparseMatrix::Rbgp4(Rbgp4Matrix::random(mask, rng))
+}
+
 /// Median time of the parallel blocked dense GEMM at n³ (cuBLAS stand-in).
 pub fn measure_dense(n: usize, rng: &mut Rng) -> f64 {
-    let w = SparseMatrix::dense(rng.normal_vec_f32(n * n, 1.0), n, n);
+    let w = dense_matrix(n, rng);
     measure_kernel(&w, n, rng)
 }
 
@@ -141,8 +195,7 @@ pub fn measure_dense(n: usize, rng: &mut Rng) -> f64 {
 pub fn measure_rbgp4(cfg: Rbgp4Config, n: usize, rng: &mut Rng) -> f64 {
     assert_eq!(cfg.rows(), n, "config rows {} != {n}", cfg.rows());
     assert_eq!(cfg.cols(), n, "config cols {} != {n}", cfg.cols());
-    let mask = Rbgp4Mask::sample(cfg, rng).expect("valid config");
-    let w = SparseMatrix::Rbgp4(Rbgp4Matrix::random(mask, rng));
+    let w = rbgp4_matrix(cfg, rng);
     measure_kernel(&w, n, rng)
 }
 
@@ -179,6 +232,15 @@ mod tests {
         let t = run(0, 1);
         let s = t.render();
         assert!(s.contains("Table 2"));
+        assert_eq!(t.rows.len(), 1 + PAPER_ROWS.len());
+    }
+
+    #[test]
+    fn tuned_column_appears_only_when_measuring() {
+        // With measure_n == 0 there is nothing to compare: the tuned
+        // column must not render a header with no cells under it.
+        let t = run_tuned(0, 1, Some(TuneMode::Quick));
+        assert!(!t.render().contains("tuned@"));
         assert_eq!(t.rows.len(), 1 + PAPER_ROWS.len());
     }
 }

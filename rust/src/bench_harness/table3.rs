@@ -8,8 +8,9 @@
 //! on the amortized hot path.
 
 use crate::bench_harness::report::{ms, Table};
-use crate::bench_harness::table2::measure_rbgp4;
+use crate::bench_harness::table2::{measure_kernel, measure_kernel_tuned, rbgp4_matrix};
 use crate::gpusim::{estimate, Device, KernelKind, SdmmShape};
+use crate::kernels::autotune::TuneMode;
 use crate::sparsity::rbgp4::{GraphSpec, Rbgp4Config};
 use crate::util::rng::Rng;
 
@@ -50,18 +51,30 @@ pub fn config_for(
 
 /// Run Table 3. `measure_n` as in table2 (0 = model only).
 pub fn run(measure_n: usize, seed: u64) -> Table {
+    run_tuned(measure_n, seed, None)
+}
+
+/// [`run`] with an optional tuned column per sparsity: each measured
+/// matrix is timed from the heuristic plan and, when `tune` is set, again
+/// from the autotuned plan (same matrix, so the delta isolates the
+/// schedule).
+pub fn run_tuned(measure_n: usize, seed: u64, tune: Option<TuneMode>) -> Table {
     let dev = Device::v100();
     let shape = SdmmShape {
         m: 4096,
         k: 4096,
         n: 4096,
     };
+    let tuned_col = tune.filter(|_| measure_n > 0);
     let mut headers: Vec<String> = vec!["G_r".into(), "G_b".into(), "rep".into()];
     for sp in SPARSITIES {
         headers.push(format!("paper {:.2}%", sp * 100.0));
         headers.push(format!("model {:.2}%", sp * 100.0));
         if measure_n > 0 {
             headers.push(format!("meas@{measure_n} {:.2}%", sp * 100.0));
+        }
+        if tuned_col.is_some() {
+            headers.push(format!("tuned@{measure_n} {:.2}%", sp * 100.0));
         }
     }
     let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
@@ -85,10 +98,19 @@ pub fn run(measure_n: usize, seed: u64) -> Table {
                 let scale = 4096 / measure_n;
                 match config_for(gr, gb, sp, scale) {
                     Ok(cfg_s) => {
-                        let t = measure_rbgp4(cfg_s, measure_n, &mut rng);
-                        cells.push(ms(t));
+                        let w = rbgp4_matrix(cfg_s, &mut rng);
+                        cells.push(ms(measure_kernel(&w, measure_n, &mut rng)));
+                        if let Some(mode) = tuned_col {
+                            let t = measure_kernel_tuned(&w, measure_n, &mut rng, mode);
+                            cells.push(ms(t));
+                        }
                     }
-                    Err(_) => cells.push("-".into()),
+                    Err(_) => {
+                        cells.push("-".into());
+                        if tuned_col.is_some() {
+                            cells.push("-".into());
+                        }
+                    }
                 }
             }
         }

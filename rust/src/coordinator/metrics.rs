@@ -190,6 +190,50 @@ impl LatencyRing {
     }
 }
 
+/// Per-structure tuning snapshot a plan-cached backend reports: the
+/// persisted/searched winner next to the EWMA of GFLOP/s achieved on real
+/// flushes — what an operator reads to see whether a tuned schedule has
+/// gone stale (and what the drift re-tuner acts on).
+#[derive(Clone, Debug)]
+pub struct TunedStatus {
+    /// Which layer/weight of the model this plan serves (backend-defined
+    /// label, e.g. `"w1"`).
+    pub layer: String,
+    /// Structure hash of the sparse matrix the plan was built for.
+    pub structure: u64,
+    /// The winning schedule's candidate label.
+    pub params: String,
+    /// GFLOP/s the schedule search recorded for the winner.
+    pub tuned_gflops: f64,
+    /// Winner throughput as a fraction of the machine's roofline.
+    pub roofline_fraction: f64,
+    /// EWMA of GFLOP/s achieved on real serving flushes (None until the
+    /// first flush lands).
+    pub ewma_gflops: Option<f64>,
+    /// Flushes folded into the EWMA.
+    pub samples: usize,
+}
+
+/// A drift ratio below this many samples is noise, not a trend: the EWMA
+/// must see at least this many flushes before [`TunedStatus::drift`]
+/// reports anything.
+pub const DRIFT_MIN_SAMPLES: usize = 8;
+
+impl TunedStatus {
+    /// Achieved/recorded throughput ratio (1.0 = the plan still delivers
+    /// what the search measured; below the server's `retune_threshold`
+    /// triggers a background re-tune). `None` until the EWMA has
+    /// [`DRIFT_MIN_SAMPLES`] flushes or when the recorded figure is
+    /// degenerate.
+    pub fn drift(&self) -> Option<f64> {
+        let ewma = self.ewma_gflops?;
+        if self.samples < DRIFT_MIN_SAMPLES || !(self.tuned_gflops > 0.0) {
+            return None;
+        }
+        Some(ewma / self.tuned_gflops)
+    }
+}
+
 /// Running tallies for one served model (registry id). Plain counters
 /// behind the store's model-map mutex: they are bumped once per *flush*
 /// (and per rejection), not per request, so the map lock is off the
@@ -203,6 +247,8 @@ struct ModelTally {
     rejected_deadline: usize,
     rejected_quota: usize,
     errors: usize,
+    retunes: usize,
+    tuned: Vec<TunedStatus>,
 }
 
 /// Snapshot of one model's serving counters (multi-model registry view —
@@ -225,6 +271,12 @@ pub struct ModelStats {
     pub rejected_quota: usize,
     /// Batch executions for this model that failed.
     pub errors: usize,
+    /// Drift-triggered background re-tunes completed for this model.
+    pub retunes: usize,
+    /// Latest per-structure tuning snapshots (winning schedule, roofline
+    /// fraction, achieved-GFLOP/s EWMA) mirrored from a worker's model
+    /// instance after flushes; empty for backends without tuned plans.
+    pub tuned: Vec<TunedStatus>,
 }
 
 impl ModelStats {
@@ -341,6 +393,28 @@ impl ServingMetrics {
             .errors += 1;
     }
 
+    /// One completed drift-triggered background re-tune for `model`.
+    pub(crate) fn record_model_retune(&self, model: &str) {
+        lock_recover(&self.models)
+            .entry(model.to_string())
+            .or_default()
+            .retunes += 1;
+    }
+
+    /// Mirror the latest tuning snapshots for `model` (overwrites the
+    /// previous mirror — this is a gauge, not a counter).
+    pub(crate) fn set_model_tuned(&self, model: &str, tuned: Vec<TunedStatus>) {
+        lock_recover(&self.models)
+            .entry(model.to_string())
+            .or_default()
+            .tuned = tuned;
+    }
+
+    /// Drift-triggered re-tunes completed, all models.
+    pub fn retunes(&self) -> usize {
+        lock_recover(&self.models).values().map(|t| t.retunes).sum()
+    }
+
     /// Track the deepest queue observed at submit time.
     pub(crate) fn observe_queue_depth(&self, depth: usize) {
         self.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
@@ -425,6 +499,8 @@ impl ServingMetrics {
                 rejected_deadline: t.rejected_deadline,
                 rejected_quota: t.rejected_quota,
                 errors: t.errors,
+                retunes: t.retunes,
+                tuned: t.tuned.clone(),
             })
             .collect();
         stats.sort_by(|a, b| a.model.cmp(&b.model));
@@ -561,6 +637,39 @@ mod tests {
         assert_eq!(stats[1].rejected_deadline, 1);
         assert_eq!(stats[1].rejected_quota, 2);
         assert!((stats[1].occupancy() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tuned_status_drift_gates_on_samples_and_retunes_tally() {
+        let mut s = TunedStatus {
+            layer: "w1".to_string(),
+            structure: 0xabc,
+            params: "stride=64".to_string(),
+            tuned_gflops: 10.0,
+            roofline_fraction: 0.5,
+            ewma_gflops: None,
+            samples: 0,
+        };
+        assert_eq!(s.drift(), None, "no flushes yet");
+        s.ewma_gflops = Some(6.0);
+        s.samples = DRIFT_MIN_SAMPLES - 1;
+        assert_eq!(s.drift(), None, "below the sample floor");
+        s.samples = DRIFT_MIN_SAMPLES;
+        assert!((s.drift().unwrap() - 0.6).abs() < 1e-12);
+        s.tuned_gflops = 0.0;
+        assert_eq!(s.drift(), None, "degenerate recorded figure");
+
+        let m = ServingMetrics::new(1);
+        m.record_model_retune("a");
+        m.record_model_retune("a");
+        s.tuned_gflops = 10.0;
+        m.set_model_tuned("a", vec![s.clone()]);
+        m.set_model_tuned("a", vec![s]); // gauge: overwrite, not append
+        assert_eq!(m.retunes(), 2);
+        let stats = m.model_stats();
+        assert_eq!(stats[0].retunes, 2);
+        assert_eq!(stats[0].tuned.len(), 1);
+        assert!((stats[0].tuned[0].drift().unwrap() - 0.6).abs() < 1e-12);
     }
 
     #[test]

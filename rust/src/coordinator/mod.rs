@@ -14,7 +14,7 @@ pub mod serving;
 pub mod trainer;
 
 pub use config::TrainConfig;
-pub use metrics::{LatencyStats, Metrics, ModelStats, ServingMetrics, WorkerStats};
+pub use metrics::{LatencyStats, Metrics, ModelStats, ServingMetrics, TunedStatus, WorkerStats};
 pub use serving::{
     BatchModel, InferenceServer, ModelQuota, NativeSparseModel, Priority, ServeError,
     ServerConfig, SubmitOptions, UnregisterReport, DEFAULT_MODEL,

@@ -13,7 +13,8 @@
 //! * the XLA backend (feature `xla`) — compiles an AOT artifact on a PJRT
 //!   client (handles are not `Send`, so each worker compiles its own).
 
-use crate::kernels::autotune::TuneMode;
+use crate::coordinator::metrics::TunedStatus;
+use crate::kernels::autotune::{TuneKey, TuneMode};
 use crate::kernels::plan::{KernelPlan, PlanCache, PlanRequest, SparseMatrix};
 use crate::kernels::registry::KernelRegistry;
 use std::sync::{Arc, Mutex};
@@ -44,6 +45,59 @@ pub trait BatchModel: Send {
     /// The shared plan cache this model resolves plans from, if any.
     fn plan_cache(&self) -> Option<Arc<PlanCache>> {
         None
+    }
+
+    /// Per-layer tuned-schedule status: what the search recorded plus the
+    /// achieved-throughput EWMA observed on real flushes. Empty when the
+    /// backend is not plan-tuned (or plans are not resolved yet).
+    fn tuned_status(&self) -> Vec<TunedStatus> {
+        Vec::new()
+    }
+
+    /// Worst (lowest) achieved/tuned throughput ratio across layers, once
+    /// enough flush samples accumulated. `None` until then — the drift
+    /// re-tune trigger must never fire on cold or untuned models.
+    fn drift(&self) -> Option<f64> {
+        self.tuned_status()
+            .iter()
+            .filter_map(|s| s.drift())
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Re-run the schedule search and swap in fresh plans. Called by an
+    /// idle worker when [`BatchModel::drift`] crosses the configured
+    /// threshold; a no-op for backends without tuned plans.
+    fn retune(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// EWMA weight for per-flush achieved-throughput samples: heavy enough
+/// history (5-sample time constant) that one slow flush cannot trigger a
+/// re-tune, light enough that genuine regressions surface within a dozen
+/// flushes.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Achieved-throughput tracker for one layer's kernel: an EWMA of GFLOP/s
+/// measured on real (non-synthetic) flushes, compared against the tuning
+/// search's recorded expectation to detect drift.
+#[derive(Clone, Copy, Default)]
+struct LayerPerf {
+    ewma_gflops: f64,
+    samples: usize,
+}
+
+impl LayerPerf {
+    fn observe(&mut self, gflops: f64) {
+        if !gflops.is_finite() || gflops <= 0.0 {
+            return;
+        }
+        self.ewma_gflops = if self.samples == 0 {
+            gflops
+        } else {
+            EWMA_ALPHA * gflops + (1.0 - EWMA_ALPHA) * self.ewma_gflops
+        };
+        self.samples += 1;
     }
 }
 
@@ -76,6 +130,10 @@ pub struct NativeSparseModel {
     // mid-execute would poison every peer's next lock.
     plan1: Option<KernelPlan>,
     plan2: Option<KernelPlan>,
+    // Achieved-throughput EWMAs per layer, fed by `forward` and read by
+    // the drift re-tune trigger.
+    perf1: LayerPerf,
+    perf2: LayerPerf,
     // Preallocated scratch: transposed input, hidden, logits.
     xt: Vec<f32>,
     hid: Vec<f32>,
@@ -116,6 +174,8 @@ impl NativeSparseModel {
             cache,
             plan1: None,
             plan2: None,
+            perf1: LayerPerf::default(),
+            perf2: LayerPerf::default(),
             xt: vec![0.0; d * batch],
             hid: vec![0.0; h * batch],
             logits: vec![0.0; c * batch],
@@ -220,6 +280,53 @@ impl BatchModel for NativeSparseModel {
         Some(Arc::clone(&self.cache))
     }
 
+    fn tuned_status(&self) -> Vec<TunedStatus> {
+        let layer = |name: &str,
+                     w: &SparseMatrix,
+                     plan: &Option<KernelPlan>,
+                     perf: &LayerPerf|
+         -> Option<TunedStatus> {
+            let tuned = plan.as_ref()?.tuned.as_ref()?;
+            Some(TunedStatus {
+                layer: name.to_string(),
+                structure: w.structure_hash(),
+                params: tuned.params.clone(),
+                tuned_gflops: tuned.gflops,
+                roofline_fraction: tuned.roofline_fraction,
+                ewma_gflops: (perf.samples > 0).then_some(perf.ewma_gflops),
+                samples: perf.samples,
+            })
+        };
+        [
+            layer("w1", &self.w1, &self.plan1, &self.perf1),
+            layer("w2", &self.w2, &self.plan2, &self.perf2),
+        ]
+        .into_iter()
+        .flatten()
+        .collect()
+    }
+
+    /// Re-tune: drop the persistent cache's entries for both layers (so
+    /// the fresh search *measures* instead of warm-starting on the very
+    /// winner that drifted), evict the shared plan-cache namespaces, then
+    /// resolve new plans. The old detached plans serve requests until the
+    /// moment of the swap — callers run this on an idle worker.
+    fn retune(&mut self) -> anyhow::Result<()> {
+        let req = PlanRequest::new(self.batch, self.threads);
+        if let Some(tc) = self.cache.tune_cache() {
+            tc.invalidate(&TuneKey::of(&self.w1, &req));
+            tc.invalidate(&TuneKey::of(&self.w2, &req));
+        }
+        for s in self.structures() {
+            self.cache.invalidate_structure(s);
+        }
+        self.plan1 = None;
+        self.plan2 = None;
+        self.perf1 = LayerPerf::default();
+        self.perf2 = LayerPerf::default();
+        self.resolve_plans()
+    }
+
     fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
         let (b, d) = (self.batch, self.w1.cols());
         let (h, c) = (self.w1.rows(), self.w2.rows());
@@ -237,7 +344,10 @@ impl BatchModel for NativeSparseModel {
         let kernel1 = self.registry.for_matrix(&self.w1)?;
         let kernel2 = self.registry.for_matrix(&self.w2)?;
         let plan1 = self.plan1.as_mut().expect("resolved above");
+        let t1 = std::time::Instant::now();
         kernel1.execute(&self.w1, plan1, &self.xt, &mut self.hid, b)?;
+        let secs1 = t1.elapsed().as_secs_f64();
+        self.perf1.observe(self.w1.flops(b) / secs1.max(1e-12) / 1e9);
         for r in 0..h {
             let bias = self.b1[r];
             for j in 0..b {
@@ -246,7 +356,10 @@ impl BatchModel for NativeSparseModel {
             }
         }
         let plan2 = self.plan2.as_mut().expect("resolved above");
+        let t2 = std::time::Instant::now();
         kernel2.execute(&self.w2, plan2, &self.hid, &mut self.logits, b)?;
+        let secs2 = t2.elapsed().as_secs_f64();
+        self.perf2.observe(self.w2.flops(b) / secs2.max(1e-12) / 1e9);
         // (c × batch) + bias → (batch × c) row-major for the batcher.
         let mut out = vec![0.0f32; b * c];
         for j in 0..b {
@@ -366,6 +479,48 @@ mod tests {
         let (hits, misses) = cache.stats();
         assert_eq!(misses, 2, "same structure → no new plan builds");
         assert_eq!(hits, 2, "second model resolves both plans from cache");
+    }
+
+    #[test]
+    fn tuned_status_tracks_flushes_and_retune_rebuilds_plans() {
+        let cache = Arc::new(PlanCache::new());
+        let mut m = demo(7, Arc::clone(&cache));
+        assert!(m.tuned_status().is_empty(), "no plans before warm-up");
+        assert!(m.drift().is_none());
+        m.warm().unwrap();
+        let st = m.tuned_status();
+        assert_eq!(st.len(), 2, "Quick tune records a config per layer");
+        assert!(st.iter().any(|s| s.layer == "w1"));
+        assert!(st.iter().any(|s| s.layer == "w2"));
+        assert!(
+            st.iter().all(|s| s.ewma_gflops.is_none() && s.samples == 0),
+            "no flush samples before the first forward"
+        );
+        let x: Vec<f32> = (0..8 * 256).map(|i| ((i % 13) as f32 - 6.0) / 6.0).collect();
+        for _ in 0..crate::coordinator::metrics::DRIFT_MIN_SAMPLES {
+            m.forward(&x).unwrap();
+        }
+        let st = m.tuned_status();
+        assert!(
+            st.iter()
+                .all(|s| s.samples == crate::coordinator::metrics::DRIFT_MIN_SAMPLES),
+            "every forward feeds both layer EWMAs"
+        );
+        assert!(st.iter().all(|s| s.ewma_gflops.unwrap_or(0.0) > 0.0));
+        assert!(
+            m.drift().unwrap_or(0.0) > 0.0,
+            "enough samples → a finite drift ratio"
+        );
+        // Re-tune: evicts + rebuilds both plans and resets the EWMAs.
+        let (_, misses_before) = cache.stats();
+        m.retune().unwrap();
+        let (_, misses_after) = cache.stats();
+        assert_eq!(misses_after, misses_before + 2, "retune rebuilds both plans");
+        let st = m.tuned_status();
+        assert_eq!(st.len(), 2, "fresh plans carry fresh tuned configs");
+        assert!(st.iter().all(|s| s.samples == 0), "EWMAs reset on swap");
+        let a = m.forward(&x).unwrap();
+        assert!(a.iter().all(|v| v.is_finite()));
     }
 
     #[test]

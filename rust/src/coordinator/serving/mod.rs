@@ -180,6 +180,19 @@ pub struct ServerConfig {
     /// [`InferenceServer::register_model_with_quota`] overrides it per
     /// model.
     pub model_quota: ModelQuota,
+    /// Persistent tuning-cache file ([`TuneCache`]) attached to every
+    /// plan-cached model the pool builds: searched winners are recorded
+    /// there and later processes warm-start from it. Attachment is
+    /// first-wins per [`PlanCache`](crate::kernels::plan::PlanCache) — a
+    /// caller that already attached one (e.g. `rbgp serve --tune-cache`
+    /// attaches before the factory warms, so even the *first* build
+    /// warm-starts) keeps its handle.
+    pub tune_cache: Option<std::path::PathBuf>,
+    /// Drift re-tune threshold: when a model's achieved/tuned throughput
+    /// ratio drops below this, an idle worker re-runs its schedule search
+    /// and swaps plans in place (serving never blocks on it). `None`
+    /// disables drift re-tuning.
+    pub retune_threshold: Option<f64>,
 }
 
 impl Default for ServerConfig {
@@ -192,6 +205,8 @@ impl Default for ServerConfig {
             default_deadline: None,
             max_starvation: Some(Duration::from_secs(1)),
             model_quota: ModelQuota::Unlimited,
+            tune_cache: None,
+            retune_threshold: Some(0.7),
         }
     }
 }
@@ -204,7 +219,18 @@ struct ServerInner {
     default_deadline: Option<Duration>,
     /// Default admission quota for models registered after startup.
     model_quota: ModelQuota,
+    /// Persistent tuning cache opened from [`ServerConfig::tune_cache`],
+    /// attached to each newly registered model's plan cache.
+    tune_cache: Option<Arc<crate::kernels::TuneCache>>,
     handles: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+/// Attach the server's persistent tuning cache to a model's plan cache
+/// (first-wins, no-op for backends without one).
+fn attach_tune_cache(tune: &Option<Arc<crate::kernels::TuneCache>>, model: &dyn BatchModel) {
+    if let (Some(tc), Some(pc)) = (tune, model.plan_cache()) {
+        pc.attach_tune_cache(Arc::clone(tc));
+    }
 }
 
 impl ServerInner {
@@ -272,6 +298,22 @@ impl InferenceServer {
         ));
         let metrics = Arc::new(ServingMetrics::new(workers));
         let registry = Arc::new(ModelRegistry::new(default_id));
+        // Open the persistent tuning cache once (fail-soft by
+        // construction) and attach it to every model the pool builds: a
+        // factory that warms *after* the attach searches warm, and every
+        // search records its winner to the file for later processes.
+        let tune_cache = config
+            .tune_cache
+            .as_ref()
+            .map(crate::kernels::TuneCache::open);
+        let factory = {
+            let tune = tune_cache.clone();
+            move || {
+                let model = factory()?;
+                attach_tune_cache(&tune, model.as_ref());
+                Ok(model)
+            }
+        };
         // The default model's info (geometry, plan namespaces) is reported
         // by the first worker instance below — before this constructor
         // returns, so no submit can observe the entry without it.
@@ -295,6 +337,7 @@ impl InferenceServer {
                 metrics: Arc::clone(&metrics),
                 registry: Arc::clone(&registry),
                 max_wait: config.max_wait,
+                retune_threshold: config.retune_threshold,
                 live: Arc::clone(&live),
             };
             let spawned = thread::Builder::new()
@@ -382,6 +425,7 @@ impl InferenceServer {
                 workers,
                 default_deadline: config.default_deadline,
                 model_quota: config.model_quota,
+                tune_cache,
                 handles: Mutex::new(handles),
             }),
             in_dim,
@@ -432,7 +476,14 @@ impl InferenceServer {
             !self.inner.registry.is_registered(id),
             "model '{id}' is already registered"
         );
-        let factory: ModelFactory = Arc::new(factory);
+        let factory: ModelFactory = {
+            let tune = self.inner.tune_cache.clone();
+            Arc::new(move || {
+                let model = factory()?;
+                attach_tune_cache(&tune, model.as_ref());
+                Ok(model)
+            })
+        };
         let probe = factory()?;
         let info = ModelInfo {
             spec: ModelSpec {
@@ -604,6 +655,15 @@ impl InferenceServer {
     /// `worker_stats` has the per-worker split.
     pub fn steals(&self) -> usize {
         self.inner.metrics.steals()
+    }
+
+    /// Drift-triggered plan re-tunes performed by idle workers, summed
+    /// over models; `model_stats` carries the per-model split and each
+    /// model's per-layer [`TunedStatus`](crate::coordinator::metrics::TunedStatus)
+    /// gauge (winning schedule, roofline fraction, achieved-throughput
+    /// EWMA).
+    pub fn retunes(&self) -> usize {
+        self.inner.metrics.retunes()
     }
 
     /// Current queue depth (requests waiting, not yet claimed by a worker).

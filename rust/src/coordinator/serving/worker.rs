@@ -59,6 +59,10 @@ pub(crate) struct WorkerContext {
     pub registry: Arc<ModelRegistry>,
     /// Max time to wait for stragglers after the first request of a batch.
     pub max_wait: Duration,
+    /// Drift re-tune trigger: when a model's achieved/tuned throughput
+    /// ratio ([`BatchModel::drift`]) falls below this, an *idle* worker
+    /// re-runs its schedule search and swaps plans. `None` disables.
+    pub retune_threshold: Option<f64>,
     /// Count of workers still alive (shared across the pool).
     pub live: Arc<AtomicUsize>,
 }
@@ -201,7 +205,14 @@ pub(crate) fn worker_loop(set: &mut ModelSet, ctx: WorkerContext) {
                         None => return, // closed and drained: shut down
                     }
                 }
-                None => set.sync(&ctx.registry), // idle tick
+                None => {
+                    // Idle tick: registry sync, then the drift check —
+                    // re-tuning only ever runs here, on a worker with no
+                    // request in hand, so in-flight traffic is never
+                    // delayed by a schedule search.
+                    set.sync(&ctx.registry);
+                    maybe_retune(set, &ctx);
+                }
             }
         };
         set.sync(&ctx.registry);
@@ -310,6 +321,10 @@ fn flush(set: &mut ModelSet, ctx: &WorkerContext, model_id: &str, pending: &mut 
                 ctx.metrics.record_latency(ctx.id, req.enqueued.elapsed());
                 let _ = req.respond.send(Ok(row));
             }
+            // Publish the model's tuned-schedule gauge (winning params,
+            // roofline fraction, achieved-throughput EWMA) so `/stats`
+            // readers see drift building up between idle-tick checks.
+            ctx.metrics.set_model_tuned(model_id, wm.model.tuned_status());
         }
         Ok(logits) => {
             let msg = format!(
@@ -320,6 +335,31 @@ fn flush(set: &mut ModelSet, ctx: &WorkerContext, model_id: &str, pending: &mut 
         }
         Err(e) => {
             fail_batch(ctx, model_id, pending, format!("batch execution failed: {e}"));
+        }
+    }
+}
+
+/// Idle-tick drift check: re-tune every resident model whose achieved
+/// throughput fell below `retune_threshold` of its tuned expectation.
+/// Runs only on a worker with nothing to pop, so serving traffic never
+/// waits on a schedule search; the model keeps answering its requests
+/// from the old plans right up to the in-place swap. A failed re-tune is
+/// skipped silently and retried on a later tick.
+fn maybe_retune(set: &mut ModelSet, ctx: &WorkerContext) {
+    let Some(threshold) = ctx.retune_threshold else {
+        return;
+    };
+    for (id, wm) in set.models.iter_mut() {
+        let Ok(wm) = wm else { continue };
+        let Some(drift) = wm.model.drift() else {
+            continue; // untuned backend, or not enough flush samples yet
+        };
+        if drift >= threshold {
+            continue;
+        }
+        if wm.model.retune().is_ok() {
+            ctx.metrics.record_model_retune(id);
+            ctx.metrics.set_model_tuned(id, wm.model.tuned_status());
         }
     }
 }
@@ -429,6 +469,7 @@ mod tests {
             // the dummy factories are never invoked.
             registry: Arc::new(ModelRegistry::new("m")),
             max_wait: Duration::from_millis(1),
+            retune_threshold: None,
             live: Arc::new(AtomicUsize::new(1)),
         }
     }
@@ -636,6 +677,75 @@ mod tests {
         assert_eq!(metrics.worker_stats()[0].steals, 1, "one steal recorded");
         assert_eq!(metrics.totals(), (2, 2), "two single-model flushes");
         queue.check_invariants();
+    }
+
+    /// Model with a scripted drift ratio; `retune` resets it to healthy
+    /// and counts invocations.
+    struct DriftingModel {
+        drift: Option<f64>,
+        retunes: Arc<AtomicUsize>,
+    }
+
+    impl BatchModel for DriftingModel {
+        fn batch(&self) -> usize {
+            1
+        }
+        fn in_dim(&self) -> usize {
+            1
+        }
+        fn classes(&self) -> usize {
+            1
+        }
+        fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+            Ok(x.to_vec())
+        }
+        fn drift(&self) -> Option<f64> {
+            self.drift
+        }
+        fn retune(&mut self) -> anyhow::Result<()> {
+            self.retunes.fetch_add(1, Ordering::SeqCst);
+            self.drift = Some(1.0); // fresh plans: back at expectation
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn idle_drift_check_retunes_only_models_below_threshold() {
+        let queue = queue();
+        let metrics = Arc::new(ServingMetrics::new(1));
+        let mut ctx = ctx(&queue, &metrics);
+        ctx.retune_threshold = Some(0.7);
+        let slow = Arc::new(AtomicUsize::new(0));
+        let others = Arc::new(AtomicUsize::new(0));
+        let model = |drift, counter: &Arc<AtomicUsize>| -> Box<dyn BatchModel> {
+            Box::new(DriftingModel {
+                drift,
+                retunes: Arc::clone(counter),
+            })
+        };
+        let mut set = ModelSet::with_models(
+            vec![
+                ("slow", model(Some(0.4), &slow)),   // drifted: 0.4 < 0.7
+                ("ok", model(Some(0.9), &others)),   // healthy
+                ("cold", model(None, &others)),      // not enough samples
+            ],
+            0,
+        );
+        maybe_retune(&mut set, &ctx);
+        assert_eq!(slow.load(Ordering::SeqCst), 1, "drifted model re-tuned");
+        assert_eq!(others.load(Ordering::SeqCst), 0, "healthy/cold untouched");
+        assert_eq!(metrics.retunes(), 1);
+        let ms = metrics.model_stats();
+        let s = ms.iter().find(|m| m.model == "slow").unwrap();
+        assert_eq!(s.retunes, 1);
+        // After the swap the model reports healthy drift: the next idle
+        // tick must not re-tune it again.
+        maybe_retune(&mut set, &ctx);
+        assert_eq!(slow.load(Ordering::SeqCst), 1, "recovered model left alone");
+        // Disabled threshold: the check is entirely off.
+        ctx.retune_threshold = None;
+        maybe_retune(&mut set, &ctx);
+        assert_eq!(metrics.retunes(), 1);
     }
 
     /// Model that fails every forward: clients get the typed backend error.

@@ -246,6 +246,17 @@ impl NativeCheckpoint {
     }
 }
 
+/// Fresh plan cache for a trainer, with the config's persistent tuning
+/// cache attached (first-wins) when one is configured — schedule searches
+/// then warm-start from the file and record their winners back to it.
+fn plan_cache_for(config: &NativeTrainConfig) -> Arc<PlanCache> {
+    let cache = Arc::new(PlanCache::new());
+    if let Some(path) = &config.tune_cache {
+        cache.attach_tune_cache(crate::kernels::TuneCache::open(path));
+    }
+    cache
+}
+
 /// Native trainer: masked-MLP SGD on the CIFAR-like task, plan-cached
 /// evaluation/serving. The default build's training path.
 pub struct NativeTrainer {
@@ -274,12 +285,13 @@ impl NativeTrainer {
         let mask = pattern_mask(pattern, hidden, in_dim, sparsity, &mut rng)?;
         let mlp = MaskedMlp::new(in_dim, hidden, classes, mask, &mut rng);
         let data = CifarLike::new(in_dim, classes, config.seed ^ 0x0005_ca1e);
+        let cache = plan_cache_for(&config);
         Ok(NativeTrainer {
             mlp,
             config,
             metrics: Metrics::default(),
             data,
-            cache: Arc::new(PlanCache::new()),
+            cache,
             threads: crate::util::threadpool::default_threads(),
             gradual: None,
         })
@@ -313,12 +325,13 @@ impl NativeTrainer {
         debug_assert_eq!(chain.len(), schedule.fractions.len());
         let mlp = MaskedMlp::new(in_dim, hidden, classes, vec![1.0; hidden * in_dim], &mut rng);
         let data = CifarLike::new(in_dim, classes, config.seed ^ 0x0005_ca1e);
+        let cache = plan_cache_for(&config);
         Ok(NativeTrainer {
             mlp,
             config,
             metrics: Metrics::default(),
             data,
-            cache: Arc::new(PlanCache::new()),
+            cache,
             threads: crate::util::threadpool::default_threads(),
             gradual: Some(GradualState {
                 fractions: schedule.fractions,

@@ -34,12 +34,37 @@
 //! is crossing the rbgp4 serial/parallel boundary: the serial kernel
 //! reduces vo-major, the threaded one ko-major, and those summation orders
 //! differ. `prop_kernels.rs` property-tests the contract.
+//!
+//! **Tolerance-gated reduction schedules** relax that contract *only on
+//! request*: [`PlanRequest::with_reduce_tol`](crate::kernels::plan::PlanRequest)
+//! admits candidates that re-associate the inner sum — k-split partial-sum
+//! trees for rbgp4 panels, accumulator fanning for csr/bsr rows — and
+//! `tuned_build` validates each one against the heuristic plan's output at
+//! search time, rejecting (and counting, see [`tolerance_rejections`]) any
+//! candidate whose absolute+relative error exceeds the caller's tolerance.
+//! With the knob off (the default) no reduction-reordering candidate is
+//! ever generated and PR 6's bit-identity contract is untouched.
+//!
+//! **Persistence** ([`TuneCache`]): tuned winners serialize to a versioned
+//! JSON file keyed by `(family, structure hash, shape, batch class,
+//! threads, probe fingerprint)`. [`MachineProbe::fingerprint`] buckets the
+//! probe's GB/s and GFLOP/s into quarter-octave steps so run-to-run jitter
+//! doesn't fork keys, while a genuinely different machine (or a badly
+//! contended one) misses and re-measures. Writes are atomic
+//! (tmp + rename) and reads fail soft — a truncated, garbage or
+//! version-skewed file behaves like an empty cache, never a panic.
 
 use crate::kernels::plan::{
     balanced_row_ranges, batch_class, KernelPlan, PlanRequest, PlanState, SparseMatrix,
 };
 use crate::kernels::rbgp4mm::{Rbgp4Plan, Rbgp4Tunable};
-use std::sync::OnceLock;
+use crate::util::json::Json;
+use crate::util::lock_recover;
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 /// How much plan-construction time a caller is willing to trade for a
@@ -106,6 +131,16 @@ impl MachineProbe {
     /// stay finite.
     pub fn attainable_gflops(&self, ai: f64) -> f64 {
         (ai * self.peak_gbps).min(self.peak_gflops).max(1e-9)
+    }
+
+    /// Stable identity of this machine for [`TuneCache`] keying: both probe
+    /// numbers bucketed to quarter-octave (log₂/4 ≈ ±9%) steps, so normal
+    /// run-to-run jitter maps to the same fingerprint while a different
+    /// machine — or one probed under heavy contention — forks the key and
+    /// forces a fresh measurement instead of trusting stale winners.
+    pub fn fingerprint(&self) -> String {
+        let bucket = |x: f64| (x.max(1e-9).log2() * 4.0).round() as i64;
+        format!("bw{}f{}", bucket(self.peak_gbps), bucket(self.peak_gflops))
     }
 }
 
@@ -195,19 +230,72 @@ impl SearchBudget {
     }
 }
 
-/// Best-of-`reps` seconds of `f` under `budget`.
+thread_local! {
+    /// Measurement executions (warmup + timed) this thread has performed
+    /// inside `measure_seconds_with` — the observable the warm-cache
+    /// property tests assert on: a populated [`TuneCache`] must build every
+    /// plan without a single rep. Thread-local because searches run on the
+    /// calling thread and a process-global counter would race under
+    /// cargo's parallel test harness.
+    static SEARCH_REPS: Cell<usize> = const { Cell::new(0) };
+    /// Tolerance-gated candidates rejected on this thread because their
+    /// search-time validation error exceeded the caller's `reduce_tol`.
+    static TOL_REJECTIONS: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Total measurement executions (warmup + timed reps) performed on the
+/// calling thread since it started. Snapshot before/after a `build_plan`
+/// to count what one search cost — zero across a warm-cache build.
+pub fn search_reps() -> usize {
+    SEARCH_REPS.with(|c| c.get())
+}
+
+/// Tolerance-gated candidates rejected on the calling thread because they
+/// exceeded the configured reduction tolerance (see
+/// `PlanRequest::with_reduce_tol`).
+pub fn tolerance_rejections() -> usize {
+    TOL_REJECTIONS.with(|c| c.get())
+}
+
+pub(crate) fn count_tolerance_rejection() {
+    TOL_REJECTIONS.with(|c| c.set(c.get() + 1));
+}
+
+/// Best-of-`reps` seconds of `f` under `budget`, timed by the real clock.
 pub fn measure_seconds(
     budget: &SearchBudget,
+    f: impl FnMut() -> anyhow::Result<()>,
+) -> anyhow::Result<f64> {
+    let mut last = Instant::now();
+    measure_seconds_with(budget, f, || {
+        let now = Instant::now();
+        let dt = now.duration_since(last).as_secs_f64();
+        last = now;
+        dt
+    })
+}
+
+/// Best-of-`reps` scoring core with an injectable timer: `clock()` is
+/// called after each timed rep and must return the seconds elapsed since
+/// the previous call (the rep's duration). **Min**, not mean, of reps is
+/// the score — standard for cycle-accurate timing, because preemption and
+/// cache pollution only ever add time, so the minimum is the least-noisy
+/// estimate and one descheduled rep cannot crown a slow candidate.
+pub fn measure_seconds_with(
+    budget: &SearchBudget,
     mut f: impl FnMut() -> anyhow::Result<()>,
+    mut clock: impl FnMut() -> f64,
 ) -> anyhow::Result<f64> {
     for _ in 0..budget.warmup {
+        SEARCH_REPS.with(|c| c.set(c.get() + 1));
         f()?;
     }
     let mut best = f64::INFINITY;
+    clock(); // reset the elapsed-seconds baseline after warmup
     for _ in 0..budget.reps {
-        let t0 = Instant::now();
+        SEARCH_REPS.with(|c| c.set(c.get() + 1));
         f()?;
-        best = best.min(t0.elapsed().as_secs_f64());
+        best = best.min(clock());
     }
     Ok(best)
 }
@@ -220,6 +308,238 @@ pub fn synth_input(len: usize) -> Vec<f32> {
         .collect()
 }
 
+/// Identity of one tuning problem — what a persisted winner is keyed by.
+/// Mirrors `PlanKey` (structure + shape + batch class + threads); the probe
+/// fingerprint joins at serialization time so one file can carry entries
+/// from several machines without cross-contamination.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TuneKey {
+    pub family: u8,
+    pub structure: u64,
+    pub rows: usize,
+    pub cols: usize,
+    pub batch_class: usize,
+    pub threads: usize,
+}
+
+impl TuneKey {
+    pub fn of(w: &SparseMatrix, req: &PlanRequest) -> TuneKey {
+        use crate::sparsity::memory::Pattern;
+        let family = match w.pattern() {
+            Pattern::Dense => 0,
+            Pattern::Unstructured => 1,
+            Pattern::Block(_, _) => 2,
+            Pattern::Rbgp4 => 3,
+        };
+        TuneKey {
+            family,
+            structure: w.structure_hash(),
+            rows: w.rows(),
+            cols: w.cols(),
+            batch_class: batch_class(req.n),
+            threads: req.threads.max(1),
+        }
+    }
+
+    /// The flat string key one entry lives under in the cache file.
+    fn entry_key(&self, fingerprint: &str) -> String {
+        format!(
+            "f{}:{:016x}:{}x{}:b{}:t{}:{}",
+            self.family, self.structure, self.rows, self.cols, self.batch_class, self.threads,
+            fingerprint
+        )
+    }
+}
+
+/// Cache-file schema version; a file with any other version is ignored
+/// wholesale (fail-soft) rather than partially trusted.
+const TUNE_CACHE_VERSION: i64 = 1;
+
+/// Persistent store of tuned winners: a versioned JSON file mapping
+/// [`TuneKey`] + probe fingerprint to the winning [`TunedConfig`].
+/// `tuned_build` consults it before measuring (a hit skips every
+/// measurement rep — the warm-cache property) and appends new winners
+/// after a search.
+///
+/// Durability model: [`TuneCache::record`] re-reads the file, merges it
+/// under the in-memory entries (memory wins for keys both have, so a
+/// concurrent writer's *other* keys survive), writes the merged map to a
+/// pid-suffixed temp file and renames it into place — rename is atomic on
+/// POSIX, so readers never observe a torn file; racing writers last-wins
+/// per batch but never corrupt. Every IO or parse failure degrades to "no
+/// cached entry", never an error on the build path.
+pub struct TuneCache {
+    path: PathBuf,
+    fingerprint: String,
+    entries: Mutex<BTreeMap<String, TunedConfig>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    /// Winners recorded (and persisted) through this handle.
+    stored: AtomicUsize,
+    /// Entries in the loaded file that were skipped as malformed.
+    rejected_entries: AtomicUsize,
+}
+
+impl TuneCache {
+    /// Open (or create lazily on first record) the cache at `path`, keyed
+    /// by this process's probe fingerprint. Missing, truncated or garbage
+    /// files load as empty.
+    pub fn open(path: impl Into<PathBuf>) -> Arc<TuneCache> {
+        TuneCache::open_with_fingerprint(path, machine_probe().fingerprint())
+    }
+
+    /// [`TuneCache::open`] with an explicit fingerprint — lets tests (and
+    /// diagnostics) prove that a probe mismatch forces a full re-measure.
+    pub fn open_with_fingerprint(
+        path: impl Into<PathBuf>,
+        fingerprint: impl Into<String>,
+    ) -> Arc<TuneCache> {
+        let path = path.into();
+        let mut rejected = 0usize;
+        let entries = load_entries(&path, &mut rejected);
+        Arc::new(TuneCache {
+            path,
+            fingerprint: fingerprint.into(),
+            entries: Mutex::new(entries),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            stored: AtomicUsize::new(0),
+            rejected_entries: AtomicUsize::new(rejected),
+        })
+    }
+
+    /// The persisted winner for `key` on this machine, if any.
+    pub fn lookup(&self, key: &TuneKey) -> Option<TunedConfig> {
+        let found = lock_recover(&self.entries)
+            .get(&key.entry_key(&self.fingerprint))
+            .cloned();
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Record a freshly-measured winner and persist the whole map
+    /// atomically. Failures are swallowed (the in-memory entry still
+    /// serves this process); corrupting the file is impossible by
+    /// construction — the rename either happens or it doesn't.
+    pub fn record(&self, key: &TuneKey, cfg: &TunedConfig) {
+        let mut entries = lock_recover(&self.entries);
+        entries.insert(key.entry_key(&self.fingerprint), cfg.clone());
+        self.stored.fetch_add(1, Ordering::Relaxed);
+        // Merge under the lock: keys another process persisted since our
+        // load survive; our in-memory values win conflicts.
+        let mut rejected = 0usize;
+        let mut merged = load_entries(&self.path, &mut rejected);
+        for (k, v) in entries.iter() {
+            merged.insert(k.clone(), v.clone());
+        }
+        *entries = merged;
+        let mut doc = Json::obj();
+        let mut map = Json::obj();
+        for (k, v) in entries.iter() {
+            let mut e = Json::obj();
+            e.set("params", v.params.as_str())
+                .set("gflops", v.gflops)
+                .set("roofline_fraction", v.roofline_fraction);
+            map.set(k, e);
+        }
+        doc.set("version", TUNE_CACHE_VERSION).set("entries", map);
+        // Unique per write (pid + sequence), so concurrent writers — other
+        // processes or other handles in this one — never share a temp file.
+        static WRITE_SEQ: AtomicUsize = AtomicUsize::new(0);
+        let tmp = self.path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let ok = std::fs::write(&tmp, doc.to_string_pretty()).is_ok()
+            && std::fs::rename(&tmp, &self.path).is_ok();
+        if !ok {
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+
+    /// Drop the in-memory entry for `key` (this machine's fingerprint), so
+    /// the next `tuned_build` re-measures instead of warm-starting. The file
+    /// is left alone: the stale winner only dies on disk when the fresh
+    /// search `record`s its replacement (memory wins the merge). Returns
+    /// whether an entry was present. This is the drift re-tune hook —
+    /// without it a re-tune would re-adopt the stale winner with zero reps.
+    pub fn invalidate(&self, key: &TuneKey) -> bool {
+        lock_recover(&self.entries)
+            .remove(&key.entry_key(&self.fingerprint))
+            .is_some()
+    }
+
+    /// `(lookup hits, lookup misses, winners recorded)` through this handle.
+    pub fn stats(&self) -> (usize, usize, usize) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.stored.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Entries skipped as malformed when the file was loaded.
+    pub fn rejected_entries(&self) -> usize {
+        self.rejected_entries.load(Ordering::Relaxed)
+    }
+
+    /// Entries currently held (all fingerprints, not just this machine's).
+    pub fn len(&self) -> usize {
+        lock_recover(&self.entries).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+}
+
+/// Parse the cache file at `path` fail-soft: any IO error, parse error,
+/// version skew or malformed entry yields an empty (or partial) map and
+/// never an error.
+fn load_entries(path: &Path, rejected: &mut usize) -> BTreeMap<String, TunedConfig> {
+    let mut out = BTreeMap::new();
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return out;
+    };
+    let Ok(doc) = Json::parse(&text) else {
+        return out;
+    };
+    if doc.get("version").and_then(|v| v.as_f64()) != Some(TUNE_CACHE_VERSION as f64) {
+        return out;
+    }
+    let Some(Json::Obj(map)) = doc.get("entries") else {
+        return out;
+    };
+    for (k, v) in map {
+        let parsed = (|| {
+            Some(TunedConfig {
+                params: v.get("params")?.as_str()?.to_string(),
+                gflops: v.get("gflops")?.as_f64()?,
+                roofline_fraction: v.get("roofline_fraction")?.as_f64()?,
+            })
+        })();
+        match parsed {
+            Some(cfg) if cfg.gflops.is_finite() && cfg.roofline_fraction.is_finite() => {
+                out.insert(k.clone(), cfg);
+            }
+            _ => *rejected += 1,
+        }
+    }
+    out
+}
+
 /// All labeled candidate plans for `(w, req)`. Candidate 0 is always the
 /// fixed heuristic — the exact plan [`TuneMode::Off`] builds — and every
 /// candidate is bit-identical to it in output (the contract the module
@@ -228,11 +548,14 @@ pub fn synth_input(len: usize) -> Vec<f32> {
 pub fn candidate_plans(w: &SparseMatrix, req: &PlanRequest) -> Vec<(String, KernelPlan)> {
     let n_class = batch_class(req.n);
     let threads = req.threads.max(1);
+    // Reduction-reordering candidates only exist when the caller opted in
+    // *and* a search will run to validate them (Off builds heuristic-only).
+    let reduce = req.reduce_tol.is_some() && req.tune != TuneMode::Off;
     let states = match w {
         SparseMatrix::Dense { .. } => vec![("heuristic".to_string(), PlanState::Dense)],
-        SparseMatrix::Csr(m) => ranges_states(&m.indptr, threads, n_class, req.tune),
-        SparseMatrix::Bsr(m) => ranges_states(&m.indptr, threads, n_class, req.tune),
-        SparseMatrix::Rbgp4(m) => rbgp4_states(&m.mask, n_class, threads, req.tune),
+        SparseMatrix::Csr(m) => ranges_states(&m.indptr, threads, n_class, req.tune, reduce),
+        SparseMatrix::Bsr(m) => ranges_states(&m.indptr, threads, n_class, req.tune, reduce),
+        SparseMatrix::Rbgp4(m) => rbgp4_states(&m.mask, n_class, threads, req.tune, reduce),
     };
     states
         .into_iter()
@@ -257,11 +580,15 @@ pub fn candidate_plans(w: &SparseMatrix, req: &PlanRequest) -> Vec<(String, Kern
 /// CSR/BSR candidate space: row-range granularity (worker counts ≤
 /// `threads` — any partition is bit-identical, the per-row reduction order
 /// never changes) × output column blocking (0 = unblocked full width).
+/// With `reduce` (tolerance-gated), accumulator-fanned variants of the
+/// heuristic partition join the space — those *do* re-associate the
+/// per-row sum and are only admitted after search-time validation.
 fn ranges_states(
     indptr: &[usize],
     threads: usize,
     n_class: usize,
     mode: TuneMode,
+    reduce: bool,
 ) -> Vec<(String, PlanState)> {
     let mut worker_counts = vec![threads];
     let mut col_blocks = vec![0usize];
@@ -287,25 +614,43 @@ fn ranges_states(
             }
         }
     }
+    let mut fans = vec![1usize];
+    if reduce {
+        match mode {
+            TuneMode::Off => {}
+            TuneMode::Quick => fans.push(4),
+            TuneMode::Full => fans.extend([2, 4]),
+        }
+    }
     let mut out: Vec<(String, PlanState)> = Vec::new();
     for &wk in &worker_counts {
         let ranges = balanced_row_ranges(indptr, wk);
         for &cb in &col_blocks {
-            let dup = out.iter().any(|(_, s)| match s {
-                PlanState::Ranges {
-                    ranges: r,
-                    col_block,
-                } => *r == ranges && *col_block == cb,
-                _ => false,
-            });
-            if !dup {
-                out.push((
-                    format!("ranges={} colblock={cb}", ranges.len().max(1)),
+            for &fan in &fans {
+                // Fanned variants only ride the heuristic partition at
+                // full width: the fan is the dimension under test, not a
+                // cross product with every schedule.
+                if fan > 1 && (wk != threads || cb != col_blocks[0]) {
+                    continue;
+                }
+                let dup = out.iter().any(|(_, s)| match s {
                     PlanState::Ranges {
-                        ranges: ranges.clone(),
-                        col_block: cb,
-                    },
-                ));
+                        ranges: r,
+                        col_block,
+                        fan: f,
+                    } => *r == ranges && *col_block == cb && *f == fan,
+                    _ => false,
+                });
+                if !dup {
+                    out.push((
+                        format!("ranges={} colblock={cb} fan={fan}", ranges.len().max(1)),
+                        PlanState::Ranges {
+                            ranges: ranges.clone(),
+                            col_block: cb,
+                            fan,
+                        },
+                    ));
+                }
             }
         }
     }
@@ -324,6 +669,7 @@ fn rbgp4_states(
     n_class: usize,
     threads: usize,
     mode: TuneMode,
+    reduce: bool,
 ) -> Vec<(String, PlanState)> {
     let base = Rbgp4Tunable::heuristic(mask, n_class, threads);
     let mut tunables = vec![base];
@@ -368,21 +714,43 @@ fn rbgp4_states(
                         stride,
                         workers: wk,
                         gather,
+                        ksplit: 1,
                     },
                 );
             }
         }
     }
+    // Tolerance-gated k-split: halve the panel reduction into two partial
+    // sums combined at the end — a genuine re-association, admitted only
+    // after search-time validation. Rides the heuristic schedule (and, in
+    // Full mode, the gather layout) rather than the whole cross product.
+    if reduce && mode != TuneMode::Off {
+        push(&mut tunables, Rbgp4Tunable { ksplit: 2, ..base });
+        if mode == TuneMode::Full {
+            push(
+                &mut tunables,
+                Rbgp4Tunable {
+                    gather: true,
+                    ksplit: 2,
+                    ..base
+                },
+            );
+        }
+    }
     tunables
         .into_iter()
         .map(|t| {
+            let mut label = format!(
+                "stride={} workers={} layout={}",
+                t.stride,
+                t.workers,
+                if t.gather { "gather" } else { "packed" }
+            );
+            if t.ksplit > 1 {
+                label.push_str(&format!(" ksplit={}", t.ksplit));
+            }
             (
-                format!(
-                    "stride={} workers={} layout={}",
-                    t.stride,
-                    t.workers,
-                    if t.gather { "gather" } else { "packed" }
-                ),
+                label,
                 PlanState::Rbgp4(Box::new(Rbgp4Plan::build_tuned(mask, n_class, &t))),
             )
         })
@@ -481,8 +849,14 @@ mod tests {
         let cands = candidate_plans(&w, &PlanRequest::new(512, 4).with_tune(TuneMode::Full));
         let mut seen = std::collections::HashSet::new();
         for (label, plan) in &cands {
-            if let crate::kernels::plan::PlanState::Ranges { ranges, col_block } = &plan.state {
+            if let crate::kernels::plan::PlanState::Ranges {
+                ranges,
+                col_block,
+                fan,
+            } = &plan.state
+            {
                 assert!(ranges.len() <= 4, "{label}: more workers than threads");
+                assert_eq!(*fan, 1, "{label}: fan without reduce_tol");
                 assert!(
                     seen.insert((ranges.clone(), *col_block)),
                     "{label}: duplicate candidate"
@@ -490,6 +864,228 @@ mod tests {
             }
         }
         assert!(cands.len() > 1);
+    }
+
+    #[test]
+    fn reduce_tol_widens_and_off_mode_suppresses() {
+        let mut rng = Rng::new(12);
+        let w = SparseMatrix::Csr(CsrMatrix::random_row_uniform(32, 32, 0.75, &mut rng));
+        let plain = candidate_plans(&w, &PlanRequest::new(64, 4).with_tune(TuneMode::Full));
+        let with_tol = candidate_plans(
+            &w,
+            &PlanRequest::new(64, 4)
+                .with_tune(TuneMode::Full)
+                .with_reduce_tol(1e-5),
+        );
+        assert!(with_tol.len() > plain.len(), "fan candidates join the space");
+        assert!(with_tol.iter().any(|(l, _)| l.contains("fan=4")));
+        assert!(plain.iter().all(|(l, _)| l.ends_with("fan=1")));
+        // Off mode never generates them, tolerance or not.
+        let off = candidate_plans(
+            &w,
+            &PlanRequest::new(64, 4)
+                .with_tune(TuneMode::Off)
+                .with_reduce_tol(1e-5),
+        );
+        assert_eq!(off.len(), 1);
+
+        let r = rbgp4_matrix(13);
+        let plain = candidate_plans(&r, &PlanRequest::new(64, 4).with_tune(TuneMode::Full));
+        let with_tol = candidate_plans(
+            &r,
+            &PlanRequest::new(64, 4)
+                .with_tune(TuneMode::Full)
+                .with_reduce_tol(1e-5),
+        );
+        assert!(with_tol.len() > plain.len());
+        assert!(with_tol.iter().any(|(l, _)| l.contains("ksplit=2")));
+        assert!(plain.iter().all(|(l, _)| !l.contains("ksplit")));
+    }
+
+    #[test]
+    fn measure_with_injected_clock_scores_min_of_reps() {
+        // Rep 1 "preempted" (100 ms), rep 2 clean (1 ms): min-of-reps must
+        // report 1 ms — a mean would report 50.5 ms and could crown a slow
+        // candidate that merely got lucky scheduling.
+        let budget = SearchBudget { warmup: 1, reps: 2 };
+        let mut times = vec![0.0, 0.100, 0.001].into_iter();
+        let mut calls = 0usize;
+        let secs = measure_seconds_with(
+            &budget,
+            || {
+                calls += 1;
+                Ok(())
+            },
+            || times.next().expect("clock called once per rep + reset"),
+        )
+        .unwrap();
+        assert_eq!(calls, 3, "1 warmup + 2 reps");
+        assert_eq!(secs, 0.001, "min, not mean, of reps");
+    }
+
+    #[test]
+    fn search_rep_counter_tracks_executions() {
+        let before = search_reps();
+        let budget = SearchBudget { warmup: 2, reps: 3 };
+        measure_seconds(&budget, || Ok(())).unwrap();
+        assert_eq!(search_reps() - before, 5);
+    }
+
+    #[test]
+    fn fingerprint_buckets_absorb_jitter_but_not_machines() {
+        let p = MachineProbe {
+            peak_gbps: 20.0,
+            peak_gflops: 100.0,
+        };
+        // ±3% jitter lands in the same quarter-octave bucket.
+        let jitter = MachineProbe {
+            peak_gbps: 20.5,
+            peak_gflops: 98.0,
+        };
+        assert_eq!(p.fingerprint(), jitter.fingerprint());
+        // A 2× different machine forks the key.
+        let other = MachineProbe {
+            peak_gbps: 40.0,
+            peak_gflops: 100.0,
+        };
+        assert_ne!(p.fingerprint(), other.fingerprint());
+    }
+
+    fn tmp_cache_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "rbgp_tune_cache_{tag}_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    fn demo_key(batch_class: usize) -> TuneKey {
+        TuneKey {
+            family: 3,
+            structure: 0xdead_beef_cafe_f00d,
+            rows: 256,
+            cols: 256,
+            batch_class,
+            threads: 4,
+        }
+    }
+
+    fn demo_cfg(gflops: f64) -> TunedConfig {
+        TunedConfig {
+            params: "stride=128 workers=4 layout=packed".to_string(),
+            gflops,
+            roofline_fraction: 0.123_456_789,
+        }
+    }
+
+    #[test]
+    fn tune_cache_roundtrips_bit_exact() {
+        let path = tmp_cache_path("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let a = TuneCache::open_with_fingerprint(&path, "bwXfY");
+        // f64 Display is shortest-roundtrip, so gflops survives exactly.
+        let cfg = demo_cfg(12.345_678_901_234_567);
+        a.record(&demo_key(64), &cfg);
+        let b = TuneCache::open_with_fingerprint(&path, "bwXfY");
+        let got = b.lookup(&demo_key(64)).expect("persisted entry");
+        assert_eq!(got.params, cfg.params);
+        assert_eq!(got.gflops.to_bits(), cfg.gflops.to_bits());
+        assert_eq!(
+            got.roofline_fraction.to_bits(),
+            cfg.roofline_fraction.to_bits()
+        );
+        assert_eq!(b.stats(), (1, 0, 0));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tune_cache_fingerprint_mismatch_misses() {
+        let path = tmp_cache_path("fpmiss");
+        let _ = std::fs::remove_file(&path);
+        let a = TuneCache::open_with_fingerprint(&path, "bw80f28");
+        a.record(&demo_key(64), &demo_cfg(10.0));
+        // Same file, different machine: entry invisible, lookup misses.
+        let b = TuneCache::open_with_fingerprint(&path, "bw99f31");
+        assert_eq!(b.len(), 1, "foreign entries survive in the file");
+        assert!(b.lookup(&demo_key(64)).is_none());
+        assert_eq!(b.stats(), (0, 1, 0));
+        // Recording under the new fingerprint keeps the old machine's
+        // entry alongside.
+        b.record(&demo_key(64), &demo_cfg(20.0));
+        let c = TuneCache::open_with_fingerprint(&path, "bw80f28");
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.lookup(&demo_key(64)).unwrap().gflops, 10.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tune_cache_fails_soft_on_garbage_and_version_skew() {
+        for (tag, text) in [
+            ("garbage", "not json at all {{{"),
+            ("truncated", "{\"version\": 1, \"entri"),
+            ("skew", "{\"version\": 99, \"entries\": {\"k\": {}}}"),
+            ("wrongshape", "{\"version\": 1, \"entries\": [1, 2]}"),
+        ] {
+            let path = tmp_cache_path(tag);
+            std::fs::write(&path, text).unwrap();
+            let c = TuneCache::open_with_fingerprint(&path, "bwXfY");
+            assert!(c.is_empty(), "{tag}: loads as empty, no panic");
+            assert!(c.lookup(&demo_key(8)).is_none());
+            // Recording over the bad file replaces it with a valid one.
+            c.record(&demo_key(8), &demo_cfg(5.0));
+            let reopened = TuneCache::open_with_fingerprint(&path, "bwXfY");
+            assert_eq!(reopened.len(), 1, "{tag}: recovered by rewrite");
+            let _ = std::fs::remove_file(&path);
+        }
+        // A missing file is simply empty.
+        let path = tmp_cache_path("missing");
+        let _ = std::fs::remove_file(&path);
+        assert!(TuneCache::open_with_fingerprint(&path, "x").is_empty());
+        // Malformed individual entries are skipped and counted, valid
+        // siblings load.
+        let path = tmp_cache_path("partial");
+        std::fs::write(
+            &path,
+            "{\"version\": 1, \"entries\": {\
+             \"bad\": {\"params\": \"p\"},\
+             \"good\": {\"params\": \"p\", \"gflops\": 2.0, \"roofline_fraction\": 0.5}}}",
+        )
+        .unwrap();
+        let c = TuneCache::open_with_fingerprint(&path, "x");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.rejected_entries(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tune_cache_concurrent_writers_never_corrupt() {
+        let path = tmp_cache_path("concurrent");
+        let _ = std::fs::remove_file(&path);
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let path = path.clone();
+                scope.spawn(move || {
+                    // Each writer its own handle — the cross-process shape.
+                    let c = TuneCache::open_with_fingerprint(&path, "bwXfY");
+                    for i in 0..8 {
+                        let mut key = demo_key(1 << i);
+                        key.structure = t as u64;
+                        c.record(&key, &demo_cfg(1.0 + i as f64));
+                    }
+                });
+            }
+        });
+        // Whatever interleaving happened, the surviving file parses and
+        // every entry in it is well-formed (rename is all-or-nothing).
+        let c = TuneCache::open_with_fingerprint(&path, "bwXfY");
+        assert!(!c.is_empty());
+        assert_eq!(c.rejected_entries(), 0, "no torn entries");
+        let mut key = demo_key(1);
+        key.structure = 0;
+        // The last writer to persist holds its own full entry set.
+        assert!(c.len() >= 8, "at least one writer's batch survived whole");
+        let _ = c.lookup(&key);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -169,6 +169,117 @@ pub fn bsr_sdmm_ranges_blocked(
     });
 }
 
+/// Block rows [br0, br1) with the per-block `bc` reduction fanned into
+/// `fan`-wide groups of interleaved partial products combined as a balanced
+/// tree. This **re-associates the inner sum** (and drops the explicit-zero
+/// skip, since `a == 0.0` lanes now ride inside a fused group), so it is
+/// only reachable through the tolerance-gated search
+/// (`PlanRequest::reduce_tol`). Caller must pre-zero `o`.
+fn bsr_block_rows_fanned(
+    w: &BsrMatrix,
+    i: &[f32],
+    o: &mut [f32],
+    n: usize,
+    br0: usize,
+    br1: usize,
+    fan: usize,
+) {
+    let (bh, bw) = (w.bh, w.bw);
+    let irow = |bj: usize, bc: usize| &i[(bj * bw + bc) * n..(bj * bw + bc) * n + n];
+    for bi in br0..br1 {
+        let obase = (bi - br0) * bh * n;
+        for k in w.indptr[bi]..w.indptr[bi + 1] {
+            let bj = w.indices[k];
+            let blk = &w.values[k * bh * bw..(k + 1) * bh * bw];
+            for br in 0..bh {
+                let orow = &mut o[obase + br * n..obase + br * n + n];
+                let mut bc = 0;
+                if fan >= 4 {
+                    while bc + 4 <= bw {
+                        let (a0, a1, a2, a3) = (
+                            blk[br * bw + bc],
+                            blk[br * bw + bc + 1],
+                            blk[br * bw + bc + 2],
+                            blk[br * bw + bc + 3],
+                        );
+                        let (x0, x1, x2, x3) = (
+                            irow(bj, bc),
+                            irow(bj, bc + 1),
+                            irow(bj, bc + 2),
+                            irow(bj, bc + 3),
+                        );
+                        for c in 0..n {
+                            orow[c] += (a0 * x0[c] + a1 * x1[c]) + (a2 * x2[c] + a3 * x3[c]);
+                        }
+                        bc += 4;
+                    }
+                }
+                while bc + 2 <= bw {
+                    let (a0, a1) = (blk[br * bw + bc], blk[br * bw + bc + 1]);
+                    let (x0, x1) = (irow(bj, bc), irow(bj, bc + 1));
+                    for c in 0..n {
+                        orow[c] += a0 * x0[c] + a1 * x1[c];
+                    }
+                    bc += 2;
+                }
+                while bc < bw {
+                    let a = blk[br * bw + bc];
+                    if a != 0.0 {
+                        let x = irow(bj, bc);
+                        for c in 0..n {
+                            orow[c] += a * x[c];
+                        }
+                    }
+                    bc += 1;
+                }
+            }
+        }
+    }
+}
+
+/// The full plan-based execute path: [`bsr_sdmm_ranges_blocked`] when
+/// `fan <= 1` (the strict bit-identical schedules), otherwise the
+/// accumulator-fanned kernel over the same block-balanced ranges. The
+/// candidate generator never pairs `fan > 1` with column blocking, so the
+/// fanned path runs unblocked.
+pub fn bsr_sdmm_ranges_fanned(
+    w: &BsrMatrix,
+    i: &[f32],
+    o: &mut [f32],
+    n: usize,
+    ranges: &[(usize, usize)],
+    col_block: usize,
+    fan: usize,
+) {
+    if fan <= 1 {
+        bsr_sdmm_ranges_blocked(w, i, o, n, ranges, col_block);
+        return;
+    }
+    assert_eq!(o.len(), w.rows * n);
+    if ranges.len() <= 1 {
+        let (br0, br1) = ranges.first().copied().unwrap_or((0, w.block_rows()));
+        o.fill(0.0);
+        bsr_block_rows_fanned(w, i, o, n, br0, br1, fan);
+        return;
+    }
+    let row_len = w.bh * n;
+    std::thread::scope(|scope| {
+        let mut rest = o;
+        let mut row = 0usize;
+        for &(br0, br1) in ranges {
+            assert_eq!(br0, row, "ranges must be contiguous");
+            let (chunk, tail) = rest.split_at_mut((br1 - br0) * row_len);
+            scope.spawn(move || {
+                chunk.fill(0.0);
+                bsr_block_rows_fanned(w, i, chunk, n, br0, br1, fan);
+            });
+            rest = tail;
+            row = br1;
+        }
+        assert_eq!(row, w.block_rows(), "ranges must cover all block rows");
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,6 +343,52 @@ mod tests {
                 let mut o = vec![9.0; m * n];
                 bsr_sdmm_ranges_blocked(&w, &i, &mut o, n, &ranges, cb);
                 assert_eq!(o, reference, "threads={threads} cb={cb}");
+            }
+        }
+    }
+
+    #[test]
+    fn fan_one_delegates_bit_identical() {
+        let mut rng = Rng::new(305);
+        let (m, k, n) = (48, 32, 13);
+        let w = BsrMatrix::random_block_uniform(m, k, 4, 4, 0.5, &mut rng);
+        let i = rng.normal_vec_f32(k * n, 1.0);
+        let mut reference = vec![0.0; m * n];
+        bsr_sdmm(&w, &i, &mut reference, n);
+        let ranges = crate::kernels::plan::balanced_row_ranges(&w.indptr, 3);
+        for fan in [0usize, 1] {
+            let mut o = vec![9.0; m * n];
+            bsr_sdmm_ranges_fanned(&w, &i, &mut o, n, &ranges, 0, fan);
+            assert_eq!(o, reference, "fan={fan}");
+        }
+    }
+
+    #[test]
+    fn fanned_matches_serial_within_tolerance_and_is_deterministic() {
+        let mut rng = Rng::new(306);
+        let (m, k, n) = (48, 64, 17);
+        // bw = 4 exercises the full fan-4 group; bw = 3 exercises the
+        // pair + remainder tail.
+        for &(bh, bw) in &[(4usize, 4usize), (2, 3)] {
+            let w = BsrMatrix::random_block_uniform(m, k, bh, bw, 0.5, &mut rng);
+            let i = rng.normal_vec_f32(k * n, 1.0);
+            let mut reference = vec![0.0; m * n];
+            bsr_sdmm(&w, &i, &mut reference, n);
+            for threads in [1usize, 3] {
+                let ranges = crate::kernels::plan::balanced_row_ranges(&w.indptr, threads);
+                for fan in [2usize, 4] {
+                    let mut o1 = vec![9.0; m * n];
+                    let mut o2 = vec![9.0; m * n];
+                    bsr_sdmm_ranges_fanned(&w, &i, &mut o1, n, &ranges, 0, fan);
+                    bsr_sdmm_ranges_fanned(&w, &i, &mut o2, n, &ranges, 0, fan);
+                    for (a, b) in o1.iter().zip(&reference) {
+                        assert!(
+                            (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                            "bw={bw} threads={threads} fan={fan}: {a} vs {b}"
+                        );
+                    }
+                    assert_eq!(o1, o2, "bw={bw} threads={threads} fan={fan}");
+                }
             }
         }
     }

@@ -151,6 +151,94 @@ pub fn csr_sdmm_ranges_blocked(
     });
 }
 
+/// Rows `[row0, row0+rows)` with the per-row reduction *fanned* into
+/// `fan`-wide groups of interleaved partial products combined as a
+/// balanced tree (`(a0·x0 + a1·x1) + (a2·x2 + a3·x3)` for fan 4). This
+/// **re-associates the sum** — outputs are close to, but not bit-identical
+/// with, [`csr_rows_into`] — which is why fanned schedules are only ever
+/// admitted through the tolerance-gated search (`PlanRequest::reduce_tol`).
+/// The payoff is ILP: `fan` independent FMA chains per output column
+/// instead of one serial dependency chain.
+fn csr_rows_into_fanned(w: &CsrMatrix, i: &[f32], chunk: &mut [f32], n: usize, row0: usize, fan: usize) {
+    chunk.fill(0.0);
+    let rows = chunk.len() / n.max(1);
+    let irow = |k: usize| &i[w.indices[k] * n..w.indices[k] * n + n];
+    for r in 0..rows {
+        let orow = &mut chunk[r * n..(r + 1) * n];
+        let wr = row0 + r;
+        let (mut k, k1) = (w.indptr[wr], w.indptr[wr + 1]);
+        if fan >= 4 {
+            while k + 4 <= k1 {
+                let (a0, a1, a2, a3) = (
+                    w.values[k],
+                    w.values[k + 1],
+                    w.values[k + 2],
+                    w.values[k + 3],
+                );
+                let (x0, x1, x2, x3) = (irow(k), irow(k + 1), irow(k + 2), irow(k + 3));
+                for c in 0..n {
+                    orow[c] += (a0 * x0[c] + a1 * x1[c]) + (a2 * x2[c] + a3 * x3[c]);
+                }
+                k += 4;
+            }
+        }
+        while k + 2 <= k1 {
+            let (a0, a1) = (w.values[k], w.values[k + 1]);
+            let (x0, x1) = (irow(k), irow(k + 1));
+            for c in 0..n {
+                orow[c] += a0 * x0[c] + a1 * x1[c];
+            }
+            k += 2;
+        }
+        while k < k1 {
+            let a = w.values[k];
+            let x = irow(k);
+            for c in 0..n {
+                orow[c] += a * x[c];
+            }
+            k += 1;
+        }
+    }
+}
+
+/// The full plan-based execute path: [`csr_sdmm_ranges_blocked`] when
+/// `fan <= 1` (the strict bit-identical schedules), otherwise the
+/// accumulator-fanned kernel over the same balanced ranges. The candidate
+/// generator never pairs `fan > 1` with column blocking, so the fanned
+/// path runs unblocked.
+pub fn csr_sdmm_ranges_fanned(
+    w: &CsrMatrix,
+    i: &[f32],
+    o: &mut [f32],
+    n: usize,
+    ranges: &[(usize, usize)],
+    col_block: usize,
+    fan: usize,
+) {
+    if fan <= 1 {
+        csr_sdmm_ranges_blocked(w, i, o, n, ranges, col_block);
+        return;
+    }
+    assert_eq!(o.len(), w.rows * n);
+    if ranges.len() <= 1 {
+        let row0 = ranges.first().map(|r| r.0).unwrap_or(0);
+        csr_rows_into_fanned(w, i, o, n, row0, fan);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = o;
+        let mut row = 0usize;
+        for &(r0, r1) in ranges {
+            assert_eq!(r0, row, "ranges must be contiguous");
+            let (chunk, tail) = rest.split_at_mut((r1 - r0) * n);
+            scope.spawn(move || csr_rows_into_fanned(w, i, chunk, n, r0, fan));
+            rest = tail;
+            row = r1;
+        }
+        assert_eq!(row, w.rows, "ranges must cover all rows");
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -227,5 +315,49 @@ mod tests {
         let mut o = vec![9.0; 4];
         csr_sdmm(&w, &i, &mut o, 2);
         assert_eq!(o, vec![0.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn fan_one_delegates_bit_identical() {
+        let mut rng = Rng::new(205);
+        let (m, k, n) = (37, 48, 13);
+        let w = CsrMatrix::random_row_uniform(m, k, 0.75, &mut rng);
+        let i = rng.normal_vec_f32(k * n, 1.0);
+        let mut reference = vec![0.0; m * n];
+        csr_sdmm(&w, &i, &mut reference, n);
+        let ranges = crate::kernels::plan::balanced_row_ranges(&w.indptr, 3);
+        for fan in [0usize, 1] {
+            let mut o = vec![9.0; m * n];
+            csr_sdmm_ranges_fanned(&w, &i, &mut o, n, &ranges, 0, fan);
+            assert_eq!(o, reference, "fan={fan}");
+        }
+    }
+
+    #[test]
+    fn fanned_matches_serial_within_tolerance_and_is_deterministic() {
+        let mut rng = Rng::new(206);
+        let (m, k, n) = (41, 64, 17);
+        let w = CsrMatrix::random_row_uniform(m, k, 0.6, &mut rng);
+        let i = rng.normal_vec_f32(k * n, 1.0);
+        let mut reference = vec![0.0; m * n];
+        csr_sdmm(&w, &i, &mut reference, n);
+        for threads in [1usize, 4] {
+            let ranges = crate::kernels::plan::balanced_row_ranges(&w.indptr, threads);
+            for fan in [2usize, 4] {
+                let mut o1 = vec![9.0; m * n];
+                let mut o2 = vec![9.0; m * n];
+                csr_sdmm_ranges_fanned(&w, &i, &mut o1, n, &ranges, 0, fan);
+                csr_sdmm_ranges_fanned(&w, &i, &mut o2, n, &ranges, 0, fan);
+                // Re-associated, so close-not-equal vs the strict order...
+                for (a, b) in o1.iter().zip(&reference) {
+                    assert!(
+                        (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                        "threads={threads} fan={fan}: {a} vs {b}"
+                    );
+                }
+                // ...but the fanned schedule itself is deterministic.
+                assert_eq!(o1, o2, "threads={threads} fan={fan}");
+            }
+        }
     }
 }

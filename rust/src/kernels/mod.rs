@@ -19,7 +19,10 @@ pub mod plan;
 pub mod rbgp4mm;
 pub mod registry;
 
-pub use autotune::{candidate_plans, machine_probe, MachineProbe, TuneMode, TunedConfig};
+pub use autotune::{
+    candidate_plans, machine_probe, search_reps, tolerance_rejections, MachineProbe, TuneCache,
+    TuneKey, TuneMode, TunedConfig,
+};
 pub use bsr_sdmm::{bsr_sdmm, bsr_sdmm_parallel};
 pub use csr_sdmm::{csr_sdmm, csr_sdmm_parallel};
 pub use dense::{gemm_blocked, gemm_naive, gemm_parallel};

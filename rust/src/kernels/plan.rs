@@ -18,7 +18,7 @@
 //!   shape + batch class + threads) to built plans, shared by the server
 //!   batcher, the native trainer and the bench harness.
 
-use crate::kernels::autotune::{TuneMode, TunedConfig};
+use crate::kernels::autotune::{TuneCache, TuneMode, TunedConfig};
 use crate::sparsity::bsr::BsrMatrix;
 use crate::sparsity::csr::CsrMatrix;
 use crate::sparsity::memory::Pattern;
@@ -26,7 +26,7 @@ use crate::sparsity::rbgp4::Rbgp4Matrix;
 use crate::util::{lock_recover, Fnv};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// One SDMM weight operand `W (rows × cols)` in a concrete storage format.
 /// This is the value every consumer (kernels, cost model, server, trainer,
@@ -199,7 +199,7 @@ pub fn batch_class(n: usize) -> usize {
 }
 
 /// What a caller asks of `build_plan`.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct PlanRequest {
     /// Expected input columns (batch size); the plan is sized for
     /// `batch_class(n)` and stays valid — merely sub-optimal — beyond it.
@@ -210,6 +210,19 @@ pub struct PlanRequest {
     /// [`TuneMode`]); deliberately *not* part of [`PlanKey`] — tuning
     /// changes which plan gets cached, never how it is keyed.
     pub tune: TuneMode,
+    /// Absolute+relative tolerance (`|a−b| ≤ tol·(1+|b|)` per element)
+    /// under which the search may admit candidates that *re-associate the
+    /// inner reduction* (k-split partial-sum trees, accumulator fanning).
+    /// `None` — the default — keeps the strict bit-identity contract: no
+    /// reduction-reordering candidate is ever generated, let alone
+    /// admitted. Candidates over tolerance at search-time validation are
+    /// rejected and counted (`autotune::tolerance_rejections`).
+    pub reduce_tol: Option<f64>,
+    /// Persistent tuning cache consulted before measuring and appended to
+    /// after a search (see [`TuneCache`]). `None` falls back to whatever
+    /// cache is attached to the [`PlanCache`] this request resolves
+    /// through, then to "no persistence".
+    pub tune_cache: Option<Arc<TuneCache>>,
 }
 
 impl PlanRequest {
@@ -219,11 +232,27 @@ impl PlanRequest {
             n,
             threads,
             tune: TuneMode::default(),
+            reduce_tol: None,
+            tune_cache: None,
         }
     }
 
     pub fn with_tune(mut self, tune: TuneMode) -> PlanRequest {
         self.tune = tune;
+        self
+    }
+
+    /// Admit reduction-reordering candidates validated at search time
+    /// against the heuristic plan's output under `tol`.
+    pub fn with_reduce_tol(mut self, tol: f64) -> PlanRequest {
+        self.reduce_tol = Some(tol);
+        self
+    }
+
+    /// Consult (and append to) a persistent [`TuneCache`] during the
+    /// search.
+    pub fn with_tune_cache(mut self, cache: Arc<TuneCache>) -> PlanRequest {
+        self.tune_cache = Some(cache);
         self
     }
 }
@@ -234,10 +263,14 @@ pub(crate) enum PlanState {
     /// Dense needs no derived structure beyond the thread count.
     Dense,
     /// CSR/BSR: nnz-balanced contiguous (block-)row ranges, one per
-    /// worker, plus an output column block width (`0` = unblocked).
+    /// worker, plus an output column block width (`0` = unblocked) and an
+    /// accumulator fan width (`1` = strict left-to-right reduction; `> 1`
+    /// is tolerance-gated — it re-associates the per-row sum into `fan`
+    /// interleaved partial accumulators combined as a balanced tree).
     Ranges {
         ranges: Vec<(usize, usize)>,
         col_block: usize,
+        fan: usize,
     },
     /// RBGP4: the full succinct-index derivation (see `rbgp4mm::Rbgp4Plan`).
     Rbgp4(Box<crate::kernels::rbgp4mm::Rbgp4Plan>),
@@ -327,11 +360,27 @@ pub struct PlanCache {
     /// Bumped on every invalidation/retention — a cheap "the structure set
     /// changed" signal for callers that cache derived state of their own.
     generation: AtomicUsize,
+    /// Optional persistent tuning cache every `plan_for` build consults
+    /// (unless the request carries its own). Set once at startup
+    /// ([`PlanCache::attach_tune_cache`]); later attaches are no-ops.
+    tune_cache: OnceLock<Arc<TuneCache>>,
 }
 
 impl PlanCache {
     pub fn new() -> PlanCache {
         PlanCache::default()
+    }
+
+    /// Attach a persistent [`TuneCache`] consulted by every build this
+    /// cache performs (a request's own `tune_cache` still wins). First
+    /// attach wins; returns whether this call attached.
+    pub fn attach_tune_cache(&self, cache: Arc<TuneCache>) -> bool {
+        self.tune_cache.set(cache).is_ok()
+    }
+
+    /// The attached persistent tuning cache, if any.
+    pub fn tune_cache(&self) -> Option<Arc<TuneCache>> {
+        self.tune_cache.get().cloned()
     }
 
     /// Fetch (or build and insert) the plan for `(w, req)`.
@@ -357,6 +406,11 @@ impl PlanCache {
                 n: key.batch_class,
                 threads: req.threads,
                 tune: req.tune,
+                reduce_tol: req.reduce_tol,
+                tune_cache: req
+                    .tune_cache
+                    .clone()
+                    .or_else(|| self.tune_cache.get().cloned()),
             },
         )?;
         let arc = Arc::new(Mutex::new(built));

@@ -87,11 +87,15 @@ pub fn rbgp4mm_naive(w: &Rbgp4Matrix, i: &[f32], o: &mut [f32], n: usize) {
 const NC: usize = 512;
 
 /// The schedule knobs `build_plan`'s autotuner searches over (see
-/// `kernels::autotune`). Every combination is *bit-identical* in output to
-/// the heuristic at the same serial/parallel regime: `stride` blocks the
-/// batch dimension only, `workers` moves whole output tile rows between
-/// threads, and `gather` feeds the identical micro-kernels from un-copied
-/// input rows instead of the packed arena.
+/// `kernels::autotune`). Every combination with `ksplit == 1` is
+/// *bit-identical* in output to the heuristic at the same serial/parallel
+/// regime: `stride` blocks the batch dimension only, `workers` moves whole
+/// output tile rows between threads, and `gather` feeds the identical
+/// micro-kernels from un-copied input rows instead of the packed arena.
+/// `ksplit > 1` is the one exception: it splits the panel reduction into
+/// independent partial-sum trees (re-associating the inner sum), so the
+/// autotuner only proposes it through the tolerance gate
+/// (`PlanRequest::reduce_tol`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Rbgp4Tunable {
     /// Packed-panel column stride (clamped to `[1, batch class]`).
@@ -101,6 +105,11 @@ pub struct Rbgp4Tunable {
     /// Skip the pack copy and read panel rows straight from `I` (wins when
     /// the pack copy can't amortize, e.g. low row repetition or tiny `n`).
     pub gather: bool,
+    /// Split the `tile_row_nnz` panel reduction into this many independent
+    /// partial-sum chains combined at the end (1 = off, the strict order).
+    /// Clamped back to 1 when the panel is too short (`trn < 2·ksplit`) or
+    /// the stride exceeds the stack accumulator ([`KSPLIT_NB_MAX`]).
+    pub ksplit: usize,
 }
 
 impl Rbgp4Tunable {
@@ -111,6 +120,7 @@ impl Rbgp4Tunable {
             stride: NC.min(n.max(1).next_power_of_two()),
             workers: threads.max(1).min(mask.config.go.nu),
             gather: false,
+            ksplit: 1,
         }
     }
 }
@@ -135,6 +145,8 @@ pub struct Rbgp4Plan {
     /// arenas stay empty (one zero-length arena per worker, so
     /// [`Rbgp4Plan::threads`] still reports the worker count).
     pub(crate) gather: bool,
+    /// Partial-sum chains per panel reduction (1 = strict order).
+    pub(crate) ksplit: usize,
     /// One pack arena per worker thread, each `trn × stride` floats
     /// (zero-length under the gather layout).
     pub(crate) arenas: Vec<Vec<f32>>,
@@ -175,12 +187,21 @@ impl Rbgp4Plan {
         let workers = tun.workers.max(1).min(c.go.nu);
         let arena_len = if tun.gather { 0 } else { trn * stride };
         let arenas = (0..workers).map(|_| vec![0.0f32; arena_len]).collect();
+        // k-split needs a stack accumulator per column block and enough
+        // panel rows to split; degenerate requests fall back to the strict
+        // order rather than erroring.
+        let ksplit = if tun.ksplit > 1 && trn >= 2 * tun.ksplit && stride <= KSPLIT_NB_MAX {
+            tun.ksplit
+        } else {
+            1
+        };
         Rbgp4Plan {
             local_cols: lc,
             trn,
             vo_targets,
             stride,
             gather: tun.gather,
+            ksplit,
             arenas,
         }
     }
@@ -200,6 +221,12 @@ impl Rbgp4Plan {
     pub fn is_gather(&self) -> bool {
         self.gather
     }
+
+    /// Partial-sum chains per panel reduction (1 = the strict, bit-stable
+    /// accumulation order).
+    pub fn ksplit(&self) -> usize {
+        self.ksplit
+    }
 }
 
 /// Optimized serial kernel executing from a prebuilt plan: gather-pack +
@@ -217,6 +244,7 @@ pub fn rbgp4mm_with_plan(w: &Rbgp4Matrix, plan: &mut Rbgp4Plan, i: &[f32], o: &m
         ref vo_targets,
         stride,
         gather,
+        ksplit,
         ref mut arenas,
     } = *plan;
     let (mr, mi, mb) = (c.gr.0, c.gi.nu, c.gb.0);
@@ -258,6 +286,7 @@ pub fn rbgp4mm_with_plan(w: &Rbgp4Matrix, plan: &mut Rbgp4Plan, i: &[f32], o: &m
                         n0,
                         nb,
                         rep,
+                        ksplit,
                         &row_of,
                         &row_of,
                         &panel,
@@ -341,11 +370,17 @@ fn pack_panel(
     }
 }
 
+/// Largest panel stride the k-split micro-kernels support: the partial
+/// accumulators live on the stack, `KSPLIT_NB_MAX` floats each.
+/// [`Rbgp4Plan::build_tuned`] clamps `ksplit` back to 1 for wider strides.
+const KSPLIT_NB_MAX: usize = NC;
+
 /// Accumulate the contribution of one packed step into every row of a
 /// repetition group, two output rows at a time so each packed element is
 /// loaded once per row *pair*. `wrow_of`/`orow_of` map the group index
 /// `g ∈ [0, rep)` to the weight row (global) and the output row (global or
-/// chunk-local); both must be strictly increasing in `g`.
+/// chunk-local); both must be strictly increasing in `g`. `ksplit > 1`
+/// routes to the partial-sum-tree micro-kernels (tolerance-gated).
 #[allow(clippy::too_many_arguments)]
 fn rep_group_gemm(
     wdata: &[f32],
@@ -357,6 +392,7 @@ fn rep_group_gemm(
     n0: usize,
     nb: usize,
     rep: usize,
+    ksplit: usize,
     wrow_of: &dyn Fn(usize) -> usize,
     orow_of: &dyn Fn(usize) -> usize,
     panel: &PanelRef<'_>,
@@ -371,7 +407,11 @@ fn rep_group_gemm(
         let (lo, hi) = o.split_at_mut(ou1 * ostride);
         let orow0 = &mut lo[ou0 * ostride + n0..ou0 * ostride + n0 + nb];
         let orow1 = &mut hi[n0..n0 + nb];
-        micro_2row(w0, w1, orow0, orow1, trn, nb, panel);
+        if ksplit > 1 {
+            micro_2row_ksplit(w0, w1, orow0, orow1, trn, nb, panel, ksplit);
+        } else {
+            micro_2row(w0, w1, orow0, orow1, 0, trn, nb, panel);
+        }
         g += 2;
     }
     if g < rep {
@@ -379,23 +419,29 @@ fn rep_group_gemm(
         let ou = orow_of(g);
         let wrow = &wdata[uw * rn + kbase..uw * rn + kbase + trn];
         let orow = &mut o[ou * ostride + n0..ou * ostride + n0 + nb];
-        micro_1row(wrow, orow, trn, nb, panel);
+        if ksplit > 1 {
+            micro_1row_ksplit(wrow, orow, trn, nb, panel, ksplit);
+        } else {
+            micro_1row(wrow, orow, 0, trn, nb, panel);
+        }
     }
 }
 
-/// Two output rows against the whole panel, 2-wide panel unroll.
+/// Two output rows against panel rows `[p0, p1)`, 2-wide panel unroll.
+/// With `(0, trn)` this is the historical whole-panel kernel, bit for bit.
 #[inline]
 fn micro_2row(
     w0: &[f32],
     w1: &[f32],
     o0: &mut [f32],
     o1: &mut [f32],
-    trn: usize,
+    p0: usize,
+    p1: usize,
     nb: usize,
     panel: &PanelRef<'_>,
 ) {
-    let mut p = 0;
-    while p + 2 <= trn {
+    let mut p = p0;
+    while p + 2 <= p1 {
         let (a0, a1) = (w0[p], w0[p + 1]);
         let (b0, b1) = (w1[p], w1[p + 1]);
         let r0 = panel.row(p, nb);
@@ -407,7 +453,7 @@ fn micro_2row(
         }
         p += 2;
     }
-    if p < trn {
+    if p < p1 {
         let (a, b) = (w0[p], w1[p]);
         let r = panel.row(p, nb);
         for cix in 0..nb {
@@ -417,12 +463,20 @@ fn micro_2row(
     }
 }
 
-/// One output row against the whole panel, 4-wide panel unroll
-/// (perf §L3 iter 1: fewer orow passes at large tile_row_nnz).
+/// One output row against panel rows `[p0, p1)`, 4-wide panel unroll
+/// (perf §L3 iter 1: fewer orow passes at large tile_row_nnz). With
+/// `(0, trn)` this is the historical whole-panel kernel, bit for bit.
 #[inline]
-fn micro_1row(wrow: &[f32], orow: &mut [f32], trn: usize, nb: usize, panel: &PanelRef<'_>) {
-    let mut p = 0;
-    while p + 4 <= trn {
+fn micro_1row(
+    wrow: &[f32],
+    orow: &mut [f32],
+    p0: usize,
+    p1: usize,
+    nb: usize,
+    panel: &PanelRef<'_>,
+) {
+    let mut p = p0;
+    while p + 4 <= p1 {
         let (a0, a1, a2, a3) = (wrow[p], wrow[p + 1], wrow[p + 2], wrow[p + 3]);
         let r0 = panel.row(p, nb);
         let r1 = panel.row(p + 1, nb);
@@ -433,13 +487,78 @@ fn micro_1row(wrow: &[f32], orow: &mut [f32], trn: usize, nb: usize, panel: &Pan
         }
         p += 4;
     }
-    while p < trn {
+    while p < p1 {
         let a = wrow[p];
         let r = panel.row(p, nb);
         for cix in 0..nb {
             orow[cix] += a * r[cix];
         }
         p += 1;
+    }
+}
+
+/// One output row with the `[0, trn)` panel reduction split into `ksplit`
+/// independent partial-sum chains: split 0 accumulates into the output row
+/// directly, each later split into a zeroed stack buffer folded in at the
+/// end. **Re-associates the sum** vs [`micro_1row`] — only reachable via
+/// the tolerance-gated search.
+#[inline]
+fn micro_1row_ksplit(
+    wrow: &[f32],
+    orow: &mut [f32],
+    trn: usize,
+    nb: usize,
+    panel: &PanelRef<'_>,
+    ksplit: usize,
+) {
+    debug_assert!(nb <= KSPLIT_NB_MAX);
+    let mut acc = [0.0f32; KSPLIT_NB_MAX];
+    for s in 0..ksplit {
+        let (p0, p1) = (s * trn / ksplit, (s + 1) * trn / ksplit);
+        if s == 0 {
+            micro_1row(wrow, orow, p0, p1, nb, panel);
+        } else {
+            let a = &mut acc[..nb];
+            a.fill(0.0);
+            micro_1row(wrow, a, p0, p1, nb, panel);
+            for cix in 0..nb {
+                orow[cix] += a[cix];
+            }
+        }
+    }
+}
+
+/// Two output rows with the panel reduction split into `ksplit` chains —
+/// the pair-wise counterpart of [`micro_1row_ksplit`].
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_2row_ksplit(
+    w0: &[f32],
+    w1: &[f32],
+    o0: &mut [f32],
+    o1: &mut [f32],
+    trn: usize,
+    nb: usize,
+    panel: &PanelRef<'_>,
+    ksplit: usize,
+) {
+    debug_assert!(nb <= KSPLIT_NB_MAX);
+    let mut acc0 = [0.0f32; KSPLIT_NB_MAX];
+    let mut acc1 = [0.0f32; KSPLIT_NB_MAX];
+    for s in 0..ksplit {
+        let (p0, p1) = (s * trn / ksplit, (s + 1) * trn / ksplit);
+        if s == 0 {
+            micro_2row(w0, w1, o0, o1, p0, p1, nb, panel);
+        } else {
+            let (a0, a1) = (&mut acc0[..nb], &mut acc1[..nb]);
+            a0.fill(0.0);
+            a1.fill(0.0);
+            micro_2row(w0, w1, a0, a1, p0, p1, nb, panel);
+            for cix in 0..nb {
+                o0[cix] += a0[cix];
+                o1[cix] += a1[cix];
+            }
+        }
     }
 }
 
@@ -471,6 +590,7 @@ pub fn rbgp4mm_parallel_with_plan(
         vo_targets: _,
         stride,
         gather,
+        ksplit,
         ref mut arenas,
     } = *plan;
     let next = AtomicUsize::new(0);
@@ -490,7 +610,9 @@ pub fn rbgp4mm_parallel_with_plan(
                     std::slice::from_raw_parts_mut(o_ptr.0.add(uo * tile_rows), tile_rows)
                 };
                 ochunk.fill(0.0);
-                tile_row_worker(w, i, ochunk, n, uo, local_cols, trn, stride, gather, pack);
+                tile_row_worker(
+                    w, i, ochunk, n, uo, local_cols, trn, stride, gather, ksplit, pack,
+                );
             });
         }
     });
@@ -518,6 +640,7 @@ fn tile_row_worker(
     trn: usize,
     stride: usize,
     gather: bool,
+    ksplit: usize,
     pack: &mut [f32],
 ) {
     let mask = &w.mask;
@@ -560,6 +683,7 @@ fn tile_row_worker(
                     n0,
                     nb,
                     rep,
+                    ksplit,
                     &global_row,
                     &local_row,
                     &panel,
@@ -804,6 +928,75 @@ mod tests {
         rbgp4mm_parallel_with_plan(&w, &mut p4, &i, &mut o4, n);
         rbgp4mm_parallel_with_plan(&w, &mut p2, &i, &mut o2, n);
         assert_eq!(o4, o2);
+    }
+
+    #[test]
+    fn ksplit_matches_strict_order_within_tolerance() {
+        let c = Rbgp4Config {
+            go: GraphSpec::new(4, 4, 0.75),
+            gr: (2, 2),
+            gi: GraphSpec::new(4, 4, 0.0),
+            gb: (2, 1),
+        };
+        let (w, mut rng) = mk(c, 1011);
+        let n = 21;
+        let (m, k) = (w.mask.rows(), w.mask.cols());
+        let i = rng.normal_vec_f32(k * n, 1.0);
+        for threads in [1usize, 4] {
+            let heur = Rbgp4Tunable::heuristic(&w.mask, n, threads);
+            let mut reference = vec![0.0; m * n];
+            let mut base = Rbgp4Plan::build_tuned(&w.mask, n, &heur);
+            rbgp4mm_parallel_with_plan(&w, &mut base, &i, &mut reference, n);
+            let mut plan = Rbgp4Plan::build_tuned(&w.mask, n, &Rbgp4Tunable { ksplit: 2, ..heur });
+            assert_eq!(plan.ksplit(), 2);
+            let (mut o1, mut o2) = (vec![0.0; m * n], vec![0.0; m * n]);
+            rbgp4mm_parallel_with_plan(&w, &mut plan, &i, &mut o1, n);
+            rbgp4mm_parallel_with_plan(&w, &mut plan, &i, &mut o2, n);
+            for (a, b) in o1.iter().zip(&reference) {
+                assert!(
+                    (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                    "threads={threads}: {a} vs {b}"
+                );
+            }
+            // Re-associated, but still deterministic run to run.
+            assert_eq!(o1, o2, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn ksplit_clamps_on_short_panels_and_wide_strides() {
+        // trn = 2 < 2·ksplit: fall back to the strict order.
+        let short = Rbgp4Config {
+            go: GraphSpec::new(2, 2, 0.5),
+            gr: (2, 1),
+            gi: GraphSpec::new(2, 2, 0.5),
+            gb: (1, 2),
+        };
+        let mut rng = Rng::new(1012);
+        let mask = Rbgp4Mask::sample(short, &mut rng).unwrap();
+        let tun = Rbgp4Tunable {
+            ksplit: 2,
+            ..Rbgp4Tunable::heuristic(&mask, 8, 1)
+        };
+        assert_eq!(Rbgp4Plan::build_tuned(&mask, 8, &tun).ksplit(), 1);
+
+        // Stride wider than the stack accumulator: clamp too.
+        let wide = Rbgp4Config {
+            go: GraphSpec::new(4, 4, 0.75),
+            gr: (2, 2),
+            gi: GraphSpec::new(4, 4, 0.0),
+            gb: (2, 1),
+        };
+        let mask = Rbgp4Mask::sample(wide, &mut rng).unwrap();
+        let n = 2 * KSPLIT_NB_MAX;
+        let tun = Rbgp4Tunable {
+            stride: 2 * KSPLIT_NB_MAX,
+            ksplit: 2,
+            ..Rbgp4Tunable::heuristic(&mask, n, 1)
+        };
+        let plan = Rbgp4Plan::build_tuned(&mask, n, &tun);
+        assert!(plan.stride() > KSPLIT_NB_MAX);
+        assert_eq!(plan.ksplit(), 1);
     }
 
     #[test]

@@ -74,16 +74,35 @@ fn check_shapes(w: &SparseMatrix, i: &[f32], o: &[f32], n: usize) -> anyhow::Res
     Ok(())
 }
 
+/// Does this plan state re-associate the inner reduction relative to the
+/// heuristic (and therefore need search-time tolerance validation)?
+fn reorders_reduction(state: &PlanState) -> bool {
+    match state {
+        PlanState::Ranges { fan, .. } => *fan > 1,
+        PlanState::Rbgp4(p) => p.ksplit > 1,
+        PlanState::Dense => false,
+    }
+}
+
 /// Shared `build_plan` body for every family: generate the candidate
 /// schedules for `(w, req)` (candidate 0 is always the fixed heuristic),
 /// and — unless `req.tune` is [`autotune::TuneMode::Off`] — run the short
 /// measured search on a synthetic non-zero batch at the request's batch
 /// class, keep the fastest candidate, and record what the search learned
 /// as a [`TunedConfig`] against the machine probe's roofline. Every
-/// candidate is bit-identical in output (see `kernels::autotune`), so a
-/// noisy measurement can pick a slower schedule, never a wrong one. The
-/// winning plan's `build_seconds` includes the whole search; stored in the
-/// `PlanCache`, the search cost amortizes to once per key.
+/// candidate is bit-identical in output (see `kernels::autotune`) unless
+/// the caller opted into `reduce_tol`, in which case reduction-reordering
+/// candidates are validated here against the heuristic's output and
+/// rejected (counted) when over tolerance — so a noisy measurement can
+/// pick a slower schedule, never a wrong one. The winning plan's
+/// `build_seconds` includes the whole search; stored in the `PlanCache`,
+/// the search cost amortizes to once per key.
+///
+/// With a [`autotune::TuneCache`] on the request, the persisted winner for
+/// this `(structure, shape, batch class, threads, probe fingerprint)` is
+/// adopted *without a single measurement rep* when its label still names a
+/// candidate in the current space (the warm-cache property); otherwise the
+/// search runs and its winner is appended to the cache file.
 fn tuned_build(
     kernel: &dyn SparseKernel,
     w: &SparseMatrix,
@@ -100,11 +119,73 @@ fn tuned_build(
         None => candidates.swap_remove(0).1,
         Some(budget) => {
             let n = batch_class(req.n);
+            let tune_key = autotune::TuneKey::of(w, req);
+            let cached = req
+                .tune_cache
+                .as_ref()
+                .and_then(|tc| tc.lookup(&tune_key))
+                .and_then(|cfg| {
+                    candidates
+                        .iter()
+                        .position(|(label, _)| *label == cfg.params)
+                        .map(|ix| (ix, cfg))
+                });
+            if let Some((ix, cfg)) = cached {
+                // Warm path: adopt the persisted winner. A cached
+                // reduction-reordering winner is still re-validated below
+                // (cheap, one execute) before being trusted; bit-identical
+                // winners need nothing.
+                let (_, mut winner) = candidates.swap_remove(ix);
+                let valid = if reorders_reduction(&winner.state) {
+                    let tol = req.reduce_tol.unwrap_or(0.0);
+                    let input = autotune::synth_input(w.cols() * n);
+                    let mut reference = vec![0.0f32; w.rows() * n];
+                    let mut output = vec![0.0f32; w.rows() * n];
+                    // candidates[0] is still the heuristic: `ix` can never
+                    // be 0 for a reordering winner.
+                    kernel.execute(w, &mut candidates[0].1, &input, &mut reference, n)?;
+                    kernel.execute(w, &mut winner, &input, &mut output, n)?;
+                    within_tolerance(&output, &reference, tol)
+                } else {
+                    true
+                };
+                if valid {
+                    winner.tuned = Some(cfg);
+                    winner.build_seconds = t0.elapsed().as_secs_f64();
+                    return Ok(winner);
+                }
+                autotune::count_tolerance_rejection();
+                // Re-insert so index bookkeeping below starts clean.
+                candidates.insert(ix, (cfg.params, winner));
+            }
+
             let input = autotune::synth_input(w.cols() * n);
             let mut output = vec![0.0f32; w.rows() * n];
+            // Tolerance gate: a reduction-reordering candidate must match
+            // the heuristic's output under the caller's tolerance before
+            // it may enter the timed race at all.
+            let mut admitted = vec![true; candidates.len()];
+            let check: Vec<usize> = (0..candidates.len())
+                .filter(|&ix| reorders_reduction(&candidates[ix].1.state))
+                .collect();
+            if !check.is_empty() {
+                let tol = req.reduce_tol.unwrap_or(0.0);
+                kernel.execute(w, &mut candidates[0].1, &input, &mut output, n)?;
+                let reference = output.clone();
+                for ix in check {
+                    kernel.execute(w, &mut candidates[ix].1, &input, &mut output, n)?;
+                    if !within_tolerance(&output, &reference, tol) {
+                        admitted[ix] = false;
+                        autotune::count_tolerance_rejection();
+                    }
+                }
+            }
             let mut best_secs = f64::INFINITY;
             let mut best_ix = 0usize;
             for (ix, (_, cand)) in candidates.iter_mut().enumerate() {
+                if !admitted[ix] {
+                    continue;
+                }
                 let secs = autotune::measure_seconds(&budget, || {
                     kernel.execute(w, cand, &input, &mut output, n)
                 })?;
@@ -117,16 +198,27 @@ fn tuned_build(
             let flops = w.flops(n);
             let gflops = flops / best_secs.max(1e-12) / 1e9;
             let attainable = autotune::machine_probe().attainable_gflops(w.arithmetic_intensity(n));
-            winner.tuned = Some(TunedConfig {
+            let cfg = TunedConfig {
                 params,
                 gflops,
                 roofline_fraction: gflops / attainable,
-            });
+            };
+            if let Some(tc) = &req.tune_cache {
+                tc.record(&tune_key, &cfg);
+            }
+            winner.tuned = Some(cfg);
             winner
         }
     };
     plan.build_seconds = t0.elapsed().as_secs_f64();
     Ok(plan)
+}
+
+/// Element-wise absolute+relative comparison: `|a−b| ≤ tol·(1+|b|)`.
+fn within_tolerance(got: &[f32], reference: &[f32], tol: f64) -> bool {
+    got.iter()
+        .zip(reference)
+        .all(|(a, b)| ((a - b).abs() as f64) <= tol * (1.0 + b.abs() as f64))
 }
 
 /// Dense GEMM family (cuBLAS stand-in). Plan: thread count only — the
@@ -223,8 +315,15 @@ impl SparseKernel for CsrKernel {
     ) -> anyhow::Result<()> {
         check_shapes(w, i, o, n)?;
         match (w, &plan.state) {
-            (SparseMatrix::Csr(m), PlanState::Ranges { ranges, col_block }) => {
-                csr_sdmm::csr_sdmm_ranges_blocked(m, i, o, n, ranges, *col_block);
+            (
+                SparseMatrix::Csr(m),
+                PlanState::Ranges {
+                    ranges,
+                    col_block,
+                    fan,
+                },
+            ) => {
+                csr_sdmm::csr_sdmm_ranges_fanned(m, i, o, n, ranges, *col_block, *fan);
                 Ok(())
             }
             _ => anyhow::bail!("csr kernel/plan mismatch"),
@@ -281,8 +380,15 @@ impl SparseKernel for BsrKernel {
     ) -> anyhow::Result<()> {
         check_shapes(w, i, o, n)?;
         match (w, &plan.state) {
-            (SparseMatrix::Bsr(m), PlanState::Ranges { ranges, col_block }) => {
-                bsr_sdmm::bsr_sdmm_ranges_blocked(m, i, o, n, ranges, *col_block);
+            (
+                SparseMatrix::Bsr(m),
+                PlanState::Ranges {
+                    ranges,
+                    col_block,
+                    fan,
+                },
+            ) => {
+                bsr_sdmm::bsr_sdmm_ranges_fanned(m, i, o, n, ranges, *col_block, *fan);
                 Ok(())
             }
             _ => anyhow::bail!("bsr kernel/plan mismatch"),
@@ -579,6 +685,151 @@ mod tests {
         assert_eq!(hits, 2);
         assert_eq!(misses, 2);
         assert_eq!(cache.len(), 2);
+    }
+
+    fn tmp_cache_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "rbgp_registry_{tag}_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    #[test]
+    fn warm_cache_second_build_performs_zero_reps() {
+        use crate::kernels::autotune::{search_reps, TuneCache, TuneMode};
+        use std::sync::Arc;
+        let reg = KernelRegistry::builtin();
+        let mut rng = Rng::new(405);
+        let n = 6;
+        let path = tmp_cache_path("warm");
+        let _ = std::fs::remove_file(&path);
+        for w in sample_matrices(&mut rng) {
+            let kernel = reg.for_matrix(&w).unwrap();
+            // Cold process: search runs and the winner is persisted.
+            let cold = TuneCache::open(&path);
+            let req = PlanRequest::new(n, 2)
+                .with_tune(TuneMode::Quick)
+                .with_tune_cache(cold);
+            let first = kernel.build_plan(&w, &req).unwrap();
+            let first_cfg = first.tuned.clone().unwrap();
+            // Second process: a fresh handle on the same file must adopt
+            // the persisted winner without a single measurement rep.
+            let warm = TuneCache::open(&path);
+            assert!(!warm.is_empty(), "{}: cache file not loaded", kernel.name());
+            let req = PlanRequest::new(n, 2)
+                .with_tune(TuneMode::Quick)
+                .with_tune_cache(Arc::clone(&warm));
+            let reps_before = search_reps();
+            let second = kernel.build_plan(&w, &req).unwrap();
+            assert_eq!(
+                search_reps(),
+                reps_before,
+                "{}: warm cache must not re-measure",
+                kernel.name()
+            );
+            let second_cfg = second.tuned.clone().unwrap();
+            assert_eq!(first_cfg.params, second_cfg.params, "{}", kernel.name());
+            assert_eq!(
+                first_cfg.gflops.to_bits(),
+                second_cfg.gflops.to_bits(),
+                "{}: gflops must round-trip bit-exactly",
+                kernel.name()
+            );
+            let (hits, _, _) = warm.stats();
+            assert_eq!(hits, 1, "{}", kernel.name());
+            // The adopted plan still matches the heuristic bit for bit
+            // (default mode admits only bit-identical candidates).
+            let off = kernel
+                .build_plan(&w, &PlanRequest::new(n, 2).with_tune(TuneMode::Off))
+                .unwrap();
+            let i = rng.normal_vec_f32(w.cols() * n, 1.0);
+            let (mut a, mut b) = (vec![0.0; w.rows() * n], vec![0.0; w.rows() * n]);
+            let (mut off, mut second) = (off, second);
+            kernel.execute(&w, &mut off, &i, &mut a, n).unwrap();
+            kernel.execute(&w, &mut second, &i, &mut b, n).unwrap();
+            assert_eq!(a, b, "{}: cache-loaded plan ≠ heuristic bits", kernel.name());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn two_plan_caches_share_one_tune_file_with_zero_warm_reps() {
+        use crate::kernels::autotune::{search_reps, TuneCache};
+        let reg = KernelRegistry::builtin();
+        let mut rng = Rng::new(406);
+        let w = SparseMatrix::Csr(CsrMatrix::random_row_uniform(32, 32, 0.75, &mut rng));
+        let n = 4;
+        let i = rng.normal_vec_f32(w.cols() * n, 1.0);
+        let path = tmp_cache_path("two_caches");
+        let _ = std::fs::remove_file(&path);
+
+        let first = PlanCache::new();
+        assert!(first.attach_tune_cache(TuneCache::open(&path)));
+        let mut o1 = vec![0.0; w.rows() * n];
+        first.execute(&reg, &w, &i, &mut o1, n, 2).unwrap();
+
+        // A second PlanCache (second server process) with a fresh handle on
+        // the same file: every plan builds warm, zero measurement reps.
+        let second = PlanCache::new();
+        assert!(second.attach_tune_cache(TuneCache::open(&path)));
+        let reps_before = search_reps();
+        let mut o2 = vec![0.0; w.rows() * n];
+        second.execute(&reg, &w, &i, &mut o2, n, 2).unwrap();
+        assert_eq!(search_reps(), reps_before, "warm PlanCache re-measured");
+        assert_eq!(o1, o2, "warm plan must be bit-identical");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn over_tolerance_reduction_candidates_are_rejected() {
+        use crate::kernels::autotune::{tolerance_rejections, TuneMode};
+        use crate::sparsity::csr::CsrMatrix;
+        let reg = KernelRegistry::builtin();
+        // Catastrophic-cancellation rows: every row is [1e8, 1, -1e8, 1]
+        // against the SAME two columns, so any re-association of the row
+        // sum loses the small terms and lands ~O(1) away from the strict
+        // order — far over a 1e-9 tolerance.
+        let rows = 8usize;
+        let cols = 4usize;
+        let mut values = Vec::new();
+        let mut indices = Vec::new();
+        let mut indptr = vec![0usize];
+        for _ in 0..rows {
+            values.extend_from_slice(&[1.0e8, 1.0, -1.0e8, 1.0]);
+            indices.extend_from_slice(&[0, 1, 0, 1]);
+            indptr.push(values.len());
+        }
+        let w = SparseMatrix::Csr(CsrMatrix {
+            values,
+            indices,
+            indptr,
+            rows,
+            cols,
+        });
+        let kernel = reg.for_matrix(&w).unwrap();
+        let n = 5;
+        let req = PlanRequest::new(n, 2)
+            .with_tune(TuneMode::Full)
+            .with_reduce_tol(1e-9);
+        let before = tolerance_rejections();
+        let tuned = kernel.build_plan(&w, &req).unwrap();
+        assert!(
+            tolerance_rejections() > before,
+            "fanned candidates must be rejected on this matrix"
+        );
+        // The winner — whatever survived — is bit-identical to the
+        // heuristic: over-tolerance schedules never enter the race.
+        let off = kernel
+            .build_plan(&w, &PlanRequest::new(n, 2).with_tune(TuneMode::Off))
+            .unwrap();
+        let mut rng = Rng::new(407);
+        let i = rng.normal_vec_f32(w.cols() * n, 1.0);
+        let (mut a, mut b) = (vec![0.0; w.rows() * n], vec![0.0; w.rows() * n]);
+        let (mut off, mut tuned) = (off, tuned);
+        kernel.execute(&w, &mut off, &i, &mut a, n).unwrap();
+        kernel.execute(&w, &mut tuned, &i, &mut b, n).unwrap();
+        assert_eq!(a, b, "surviving winner must keep the strict order");
     }
 
     #[test]

@@ -24,10 +24,10 @@ use rbgp::util::rng::Rng;
 use std::path::PathBuf;
 use std::time::Duration;
 
+use rbgp::kernels::TuneMode;
+
 #[cfg(not(feature = "xla"))]
 use rbgp::coordinator::{BatchModel, NativeSparseModel, NativeTrainer};
-#[cfg(not(feature = "xla"))]
-use rbgp::kernels::TuneMode;
 #[cfg(not(feature = "xla"))]
 use rbgp::train_native::NativeTrainConfig;
 #[cfg(feature = "xla")]
@@ -45,16 +45,17 @@ COMMANDS
   memory     [--network vgg19|wrn40-4] [--fig3]         Table-1 Mem column
   explain    [--sp-o .5 --sp-i .5]                      Fig-1 tiling walkthrough
   table1                                                Table 1 (mem + time model)
-  table2     [--measure-n 1024] [--seed 0]              Table 2 (model + measured)
-  table3     [--measure-n 1024] [--seed 0]              Table 3 (model + measured)
+  table2     [--measure-n 1024] [--seed 0] [--tune quick|full]  Table 2 (+tuned col)
+  table3     [--measure-n 1024] [--seed 0] [--tune quick|full]  Table 3 (+tuned col)
   train      [--artifacts DIR] [--steps 300] [--lr 0.1] [--seed 0] [--distill]
              [--save ckpt.json] [--load ckpt.json]
              [--gradual] [--milestones 0.25,0.6] [--sp 0.75]
-             [--tune off|quick|full]                           (native only)
+             [--tune off|quick|full] [--tune-cache FILE]       (native only)
   serve      [--requests 512] [--clients 4] [--workers 2] [--queue-cap 1024]
              [--deadline-ms 0] [--max-starvation-ms 1000] [--model-quota Q]
              [--model name=ckpt.json[@Q]]...
-             [--tune off|quick|full]                           (native only)
+             [--tune off|quick|full] [--tune-cache FILE]
+             [--retune-threshold 0.7]                          (native only)
              [--artifacts DIR] [--checkpoint ckpt.json]        (xla only)
 
 With the `xla` feature, train/serve execute AOT artifacts on PJRT (run
@@ -69,7 +70,14 @@ sharing one plan cache (per-model plan namespaces). --tune picks how
 hard plan warm-up searches kernel schedules (off = fixed heuristic,
 quick = small measured search, full = wider search; the winning
 schedule is cached per plan key, so the search runs once, and every
-candidate is bit-identical to the heuristic). A quota Q bounds how
+candidate is bit-identical to the heuristic). --tune-cache persists the
+winners to a JSON file keyed by structure, shape, batch class, threads
+and a machine fingerprint: a later run (train or serve) pointed at the
+same file rebuilds its plans with zero measurement reps. While serving,
+workers track achieved GFLOP/s per layer; if a model drifts below
+--retune-threshold of its tuned throughput (0 disables), an idle worker
+re-runs the search and swaps plans without blocking traffic. A quota Q
+bounds how
 many requests a model may have queued at once (admission control): an
 integer is an absolute cap, a fraction in (0,1) is a share of
 --queue-cap, 0 means unlimited; --model-quota sets the default for every
@@ -92,6 +100,15 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_str("artifacts", "artifacts"))
 }
 
+/// `--tune` for the table commands: default off (heuristic-only measured
+/// column); quick/full add a tuned column next to it.
+fn table_tune(args: &Args) -> anyhow::Result<Option<TuneMode>> {
+    Ok(match TuneMode::parse(&args.get_str("tune", "off"))? {
+        TuneMode::Off => None,
+        mode => Some(mode),
+    })
+}
+
 fn run(args: &Args) -> anyhow::Result<()> {
     match args.command() {
         Some("gen-graph") => gen_graph(args),
@@ -107,12 +124,14 @@ fn run(args: &Args) -> anyhow::Result<()> {
         }
         Some("table2") => {
             let n = args.get_usize("measure-n", 1024)?;
-            println!("{}", table2::run(n, args.get_u64("seed", 0)?).render());
+            let tune = table_tune(args)?;
+            println!("{}", table2::run_tuned(n, args.get_u64("seed", 0)?, tune).render());
             Ok(())
         }
         Some("table3") => {
             let n = args.get_usize("measure-n", 1024)?;
-            println!("{}", table3::run(n, args.get_u64("seed", 0)?).render());
+            let tune = table_tune(args)?;
+            println!("{}", table3::run_tuned(n, args.get_u64("seed", 0)?, tune).render());
             Ok(())
         }
         Some("train") => train_cmd(args),
@@ -303,6 +322,7 @@ fn train_cmd(args: &Args) -> anyhow::Result<()> {
         lr: args.get_f64("lr", 0.05)? as f32,
         seed: args.get_u64("seed", 0)?,
         tune: TuneMode::parse(&args.get_str("tune", "quick"))?,
+        tune_cache: args.get("tune-cache").map(PathBuf::from),
         ..NativeTrainConfig::default()
     };
     let in_dim = args.get_usize("in-dim", 256)?;
@@ -436,12 +456,19 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
         Some(text) => parse_quota(text, "--model-quota")?,
         None => rbgp::coordinator::ModelQuota::Unlimited,
     };
+    let tune_cache_path = args.get("tune-cache").map(PathBuf::from);
+    let retune_threshold = match args.get_f64("retune-threshold", 0.7)? {
+        t if t <= 0.0 => None,
+        t => Some(t),
+    };
     let base_config = ServerConfig {
         workers,
         queue_cap,
         default_deadline: deadline,
         max_starvation,
         model_quota,
+        tune_cache: tune_cache_path.clone(),
+        retune_threshold,
         ..ServerConfig::default()
     };
     let model_flags = args.get_all("model");
@@ -482,6 +509,20 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
         // One plan cache for the whole pool and every registered model:
         // plan builds scale with distinct structures, not models × workers.
         let cache = std::sync::Arc::new(rbgp::kernels::PlanCache::new());
+        // Attach the persistent tuning cache *before* any factory warms:
+        // even the first worker's schedule search then warm-starts from
+        // the file (zero measurement reps on a warm cache) and newly
+        // searched winners are recorded for the next process.
+        if let Some(path) = &tune_cache_path {
+            let tc = rbgp::kernels::TuneCache::open(path);
+            println!(
+                "tune cache {}: {} entries loaded ({} rejected)",
+                path.display(),
+                tc.len(),
+                tc.rejected_entries()
+            );
+            cache.attach_tune_cache(tc);
+        }
         if model_flags.is_empty() {
             println!(
                 "xla feature disabled — serving the native RBGP4 demo model from the plan cache"
@@ -661,6 +702,33 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
                 m.rejected_quota,
                 m.errors
             );
+        }
+    }
+    // Per-structure tuned-schedule summaries: what the search picked, how
+    // close to the roofline it landed, and how achieved throughput tracked
+    // it over the run (the drift re-tune trigger's inputs).
+    for m in server.model_stats() {
+        for t in &m.tuned {
+            let drift = match (t.ewma_gflops, t.drift()) {
+                (Some(e), Some(d)) => {
+                    format!(", achieved {e:.2} GFLOP/s = {:.0}% of tuned", d * 100.0)
+                }
+                (Some(e), None) => format!(", achieved {e:.2} GFLOP/s (warming)"),
+                _ => String::new(),
+            };
+            println!(
+                "    tuned '{}' {} [{:016x}]: {} — {:.2} GFLOP/s, {:.0}% of roofline{}",
+                m.model,
+                t.layer,
+                t.structure,
+                t.params,
+                t.tuned_gflops,
+                t.roofline_fraction * 100.0,
+                drift
+            );
+        }
+        if m.retunes > 0 {
+            println!("      model '{}': {} drift re-tunes", m.model, m.retunes);
         }
     }
     server.shutdown();

@@ -27,6 +27,12 @@ pub struct NativeTrainConfig {
     /// Autotune mode used when deriving serving models/plans from a
     /// training run (does not affect the training math itself).
     pub tune: TuneMode,
+    /// Persistent tuning-cache file attached to the trainer's plan cache:
+    /// schedule searches warm-start from it and record their winners there,
+    /// so a second run (or the serving process pointed at the same file)
+    /// builds its plans with zero measurement reps. `None` keeps tuning
+    /// in-process only.
+    pub tune_cache: Option<std::path::PathBuf>,
 }
 
 impl Default for NativeTrainConfig {
@@ -39,6 +45,7 @@ impl Default for NativeTrainConfig {
             weight_decay: 1e-4,
             seed: 0,
             tune: TuneMode::default(),
+            tune_cache: None,
         }
     }
 }

@@ -1,0 +1,210 @@
+//! Integration test for drift-triggered background re-tuning through the
+//! public serving API: a model whose achieved/tuned throughput ratio
+//! ([`BatchModel::drift`]) drops below the configured threshold must be
+//! re-tuned by an *idle* worker — and the plan swap must never reject,
+//! error, or lose a single in-flight request.
+//!
+//! The backend is a scripted model (drift and re-tune observable through
+//! shared counters) so the trigger condition is deterministic instead of
+//! depending on real kernel timing noise. Responses carry a plan-epoch
+//! marker (+1000 per re-tune) so the swap itself is visible in served
+//! logits, not just in counters.
+
+use rbgp::coordinator::{BatchModel, InferenceServer, ServerConfig};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const IN_DIM: usize = 4;
+const BATCH: usize = 2;
+
+/// Scripted backend: reports a drifted throughput ratio once the shared
+/// flag flips, until its own `retune` runs. Each worker owns one instance
+/// (as with real backends), so with W workers exactly W re-tunes happen.
+struct DriftingModel {
+    /// Shared switch the test flips to start reporting drift.
+    drifted: Arc<AtomicBool>,
+    /// Pool-wide count of completed re-tunes (all instances).
+    retunes: Arc<AtomicUsize>,
+    /// This instance's plan generation: 0 until its re-tune swaps plans.
+    epoch: usize,
+}
+
+impl BatchModel for DriftingModel {
+    fn batch(&self) -> usize {
+        BATCH
+    }
+    fn in_dim(&self) -> usize {
+        IN_DIM
+    }
+    fn classes(&self) -> usize {
+        1
+    }
+    fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        // Logit = first feature + 1000·epoch: responses served from the
+        // post-swap "plan" are distinguishable from pre-swap ones.
+        Ok((0..BATCH)
+            .map(|j| x[j * IN_DIM] + 1000.0 * self.epoch as f32)
+            .collect())
+    }
+    fn drift(&self) -> Option<f64> {
+        if self.epoch == 0 && self.drifted.load(Ordering::SeqCst) {
+            Some(0.3) // below any sane threshold
+        } else {
+            Some(1.0) // healthy: achieved == tuned expectation
+        }
+    }
+    fn retune(&mut self) -> anyhow::Result<()> {
+        // Simulate a schedule search taking real time: requests arriving
+        // meanwhile must still be served (by a non-idle peer) or queued —
+        // never rejected.
+        std::thread::sleep(Duration::from_millis(50));
+        self.epoch += 1;
+        self.retunes.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+}
+
+#[test]
+fn drift_retune_swaps_plans_without_rejecting_traffic() {
+    let workers = 2;
+    let drifted = Arc::new(AtomicBool::new(false));
+    let retunes = Arc::new(AtomicUsize::new(0));
+    let server = {
+        let drifted = Arc::clone(&drifted);
+        let retunes = Arc::clone(&retunes);
+        InferenceServer::start_model(
+            move || {
+                Ok(Box::new(DriftingModel {
+                    drifted: Arc::clone(&drifted),
+                    retunes: Arc::clone(&retunes),
+                    epoch: 0,
+                }) as Box<dyn BatchModel>)
+            },
+            ServerConfig {
+                workers,
+                max_wait: Duration::from_millis(1),
+                retune_threshold: Some(0.7),
+                ..ServerConfig::default()
+            },
+        )
+        .expect("server start")
+    };
+
+    let sample = |r: usize| {
+        let mut x = vec![0.0f32; IN_DIM];
+        x[0] = r as f32;
+        x
+    };
+
+    // Phase 1 — healthy model under traffic: the drift check must never
+    // fire on a model at its tuned expectation, however long it idles.
+    let warmup = 20;
+    for r in 0..warmup {
+        let got = server.infer(sample(r)).unwrap();
+        assert_eq!(got, vec![r as f32], "healthy model serves unmarked logits");
+    }
+    assert_eq!(server.retunes(), 0, "no re-tune without drift");
+
+    // Phase 2 — drift begins, traffic keeps flowing: bursts of blocking
+    // requests separated by idle windows longer than the worker's idle
+    // tick, so drifted instances get re-tuned *between* serving work.
+    // Every response across the whole timeline must be Ok.
+    drifted.store(true, Ordering::SeqCst);
+    let bursts = 4;
+    let per_burst = 25;
+    let mut served = Vec::new();
+    for _ in 0..bursts {
+        for r in 0..per_burst {
+            let got = server.infer(sample(r)).unwrap();
+            assert_eq!(got.len(), 1);
+            served.push(got[0]);
+        }
+        // Idle window (> the 500 ms idle tick): workers with no request
+        // in hand run the drift check and swap plans here.
+        std::thread::sleep(Duration::from_millis(700));
+    }
+
+    // Every worker instance re-tuned exactly once, then reported healthy.
+    assert_eq!(
+        retunes.load(Ordering::SeqCst),
+        workers,
+        "each worker's drifted instance re-tunes once and only once"
+    );
+    assert_eq!(server.retunes(), workers, "server-level re-tune counter agrees");
+
+    // The swap is visible in served logits: early responses came from
+    // epoch-0 plans, later ones carry the +1000 post-swap marker.
+    assert!(
+        served.iter().any(|&v| v < 1000.0),
+        "some traffic was served from the pre-swap plans"
+    );
+    assert!(
+        served.iter().any(|&v| v >= 1000.0),
+        "traffic after the swap is served from the fresh plans"
+    );
+
+    // The non-blocking contract: nothing was rejected, errored, or lost
+    // while plans were searched and swapped.
+    assert_eq!(server.rejected(), (0, 0), "no request rejected during re-tune");
+    let (requests, _) = server.counters();
+    assert_eq!(
+        requests,
+        warmup + bursts * per_burst,
+        "every submitted request was served"
+    );
+    assert!(
+        server.worker_stats().iter().all(|w| w.errors == 0),
+        "no worker errored across the swap"
+    );
+    let ms = server.model_stats();
+    assert_eq!(ms.len(), 1);
+    assert_eq!(ms[0].retunes, workers, "per-model re-tune accounting");
+    assert_eq!(ms[0].errors, 0);
+
+    // With both instances swapped, steady-state traffic is all-fresh and
+    // still healthy — drift reporting recovered, so no further re-tunes.
+    for r in 0..10 {
+        let got = server.infer(sample(r)).unwrap();
+        assert_eq!(got, vec![r as f32 + 1000.0], "post-swap plans serve all traffic");
+    }
+    assert_eq!(server.retunes(), workers, "recovered models are left alone");
+    server.shutdown();
+}
+
+/// `retune_threshold: None` disables the drift check entirely: a model may
+/// report arbitrarily bad drift and never be re-tuned.
+#[test]
+fn disabled_threshold_never_retunes() {
+    let drifted = Arc::new(AtomicBool::new(true));
+    let retunes = Arc::new(AtomicUsize::new(0));
+    let server = {
+        let drifted = Arc::clone(&drifted);
+        let retunes = Arc::clone(&retunes);
+        InferenceServer::start_model(
+            move || {
+                Ok(Box::new(DriftingModel {
+                    drifted: Arc::clone(&drifted),
+                    retunes: Arc::clone(&retunes),
+                    epoch: 0,
+                }) as Box<dyn BatchModel>)
+            },
+            ServerConfig {
+                workers: 1,
+                max_wait: Duration::from_millis(1),
+                retune_threshold: None,
+                ..ServerConfig::default()
+            },
+        )
+        .expect("server start")
+    };
+    assert_eq!(server.infer(vec![0.0; IN_DIM]).unwrap().len(), 1);
+    // Long enough for at least one idle tick to fire.
+    let deadline = Instant::now() + Duration::from_millis(1200);
+    while Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(retunes.load(Ordering::SeqCst), 0, "disabled check must not fire");
+    }
+    assert_eq!(server.retunes(), 0);
+    server.shutdown();
+}

@@ -5,7 +5,7 @@
 
 use rbgp::graph::product_many;
 use rbgp::graph::BipartiteGraph;
-use rbgp::kernels::autotune::{candidate_plans, TuneMode};
+use rbgp::kernels::autotune::{candidate_plans, search_reps, TuneCache, TuneMode};
 use rbgp::kernels::bsr_sdmm::bsr_sdmm;
 use rbgp::kernels::csr_sdmm::csr_sdmm;
 use rbgp::kernels::dense::gemm_naive;
@@ -176,12 +176,18 @@ fn prop_trait_kernels_match_oracle_across_threads() {
 
 /// The autotuner's safety contract: tuning may only choose *schedules*,
 /// never numerics. Over randomized configs/shapes and 1/4/8 threads, every
-/// candidate plan in the Full search space — and the winner a Quick tuned
-/// build actually selects — must produce output bit-identical to the
-/// untuned (Off / fixed-heuristic) plan.
+/// candidate plan in the Full search space — the winner a Quick tuned
+/// build actually selects — and a plan *loaded* from a persistent
+/// [`TuneCache`] by a fresh handle (zero search reps) must all produce
+/// output bit-identical to the untuned (Off / fixed-heuristic) plan.
 #[test]
 fn prop_tuned_candidates_bit_identical_to_untuned_plan() {
     let registry = KernelRegistry::builtin();
+    let cache_path = std::env::temp_dir().join(format!(
+        "rbgp_prop_tune_cache_{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&cache_path);
     check("tuned candidates == untuned plan, bitwise", 8, |rng| {
         let cfg = random_config(rng);
         let mask = Rbgp4Mask::sample(cfg, rng).map_err(|e| e.to_string())?;
@@ -225,9 +231,11 @@ fn prop_tuned_candidates_bit_identical_to_untuned_plan() {
                     );
                 }
                 // And the winner a measured Quick search actually picks
-                // (selection is timing-nondeterministic; output must not be).
+                // (selection is timing-nondeterministic; output must not
+                // be) — recording into a persistent TuneCache as it goes.
+                let rec = TuneCache::open(&cache_path);
                 let mut tuned = kernel
-                    .build_plan(w, &PlanRequest::new(n, threads))
+                    .build_plan(w, &PlanRequest::new(n, threads).with_tune_cache(rec))
                     .map_err(|e| e.to_string())?;
                 prop_assert!(
                     tuned.tuned.is_some(),
@@ -239,10 +247,37 @@ fn prop_tuned_candidates_bit_identical_to_untuned_plan() {
                     .execute(w, &mut tuned, &i, &mut o, n)
                     .map_err(|e| e.to_string())?;
                 prop_assert_eq!(o, reference, "{} t={threads} tuned winner", kernel.name());
+                // A fresh handle on the same file *loads* the winner
+                // instead of re-searching; the cache-loaded plan must
+                // stay bit-identical to the untuned heuristic as well.
+                let before = search_reps();
+                let mut warm = kernel
+                    .build_plan(
+                        w,
+                        &PlanRequest::new(n, threads).with_tune_cache(TuneCache::open(&cache_path)),
+                    )
+                    .map_err(|e| e.to_string())?;
+                prop_assert_eq!(
+                    search_reps() - before,
+                    0,
+                    "{} t={threads}: warm cache must build with zero search reps",
+                    kernel.name()
+                );
+                prop_assert!(
+                    warm.tuned.is_some(),
+                    "{} t={threads}: cache-loaded build must carry the TunedConfig",
+                    kernel.name()
+                );
+                let mut ow = vec![9.0; m * n];
+                kernel
+                    .execute(w, &mut warm, &i, &mut ow, n)
+                    .map_err(|e| e.to_string())?;
+                prop_assert_eq!(ow, reference, "{} t={threads} cache-loaded plan", kernel.name());
             }
         }
         Ok(())
     });
+    let _ = std::fs::remove_file(&cache_path);
 }
 
 #[test]
