@@ -206,6 +206,7 @@ fn bench_skewed_queue(hot_depth: usize, cold_pops: usize) -> f64 {
                 deadline: None,
                 respond: tx,
                 claim: ModelClaim::detached(model, BATCH, 1, 1),
+                route: None,
             },
             Priority::Normal,
             None,

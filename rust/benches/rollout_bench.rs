@@ -1,0 +1,301 @@
+//! Rollout-path serving benchmarks: what the alias layer costs and what
+//! the zero-downtime machinery delivers under load.
+//!
+//! Four scenarios on RBGP4 demo pools (two seeds → two models sharing the
+//! dense-classifier structure in one plan cache):
+//!
+//! * `alias` — identical closed-loop load submitted directly to the
+//!   concrete model vs through an alias: throughput and latency
+//!   percentiles side by side. The alias adds one registry resolution and
+//!   one per-request metrics record; the delta is the rollout tax every
+//!   aliased request pays.
+//! * `canary` — a 20% canary over distinct payloads: the measured canary
+//!   fraction (deterministic per-request FNV hash) vs the configured
+//!   percent.
+//! * `shadow` — shadow mode doubles executed work on spare capacity:
+//!   client throughput with mirrors on, completed divergence samples,
+//!   mirrors dropped under load, and the divergence the mirror measured
+//!   between the two seeds.
+//! * `flip` — `rollout()` under sustained traffic: how long the atomic
+//!   flip + drain + retire takes, with the zero-drop invariant asserted
+//!   (no queue-full, deadline, or quota rejections anywhere in the run).
+//!
+//! Results are written to `BENCH_rollout.json` (in the cargo package
+//! root, where `cargo bench` runs) so later rollout PRs can diff the
+//! trajectory the same way serving PRs diff `BENCH_server.json`.
+//!
+//! `cargo bench --bench rollout_bench` (RBGP_BENCH_FAST=1 quick pass)
+
+use rbgp::coordinator::{
+    BatchModel, InferenceServer, NativeSparseModel, ServerConfig, SubmitOptions,
+};
+use rbgp::data::CifarLike;
+use rbgp::kernels::PlanCache;
+use rbgp::util::json::Json;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const OUT_PATH: &str = "BENCH_rollout.json";
+const CLIENTS: usize = 8;
+const WORKERS: usize = 2;
+const BATCH: usize = 16;
+const CLASSES: usize = 16;
+const CANARY_PCT: u8 = 20;
+
+fn demo_factory(
+    seed: u64,
+    cache: Arc<PlanCache>,
+) -> impl Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static {
+    move || {
+        let mut m = NativeSparseModel::rbgp4_demo(CLASSES, BATCH, 1, seed, Arc::clone(&cache))?;
+        m.warm()?;
+        Ok(Box::new(m) as Box<dyn BatchModel>)
+    }
+}
+
+/// One pool serving "v1" (default route target of alias "prod") with "v2"
+/// registered alongside — the staging layout every scenario starts from.
+fn start_pool(total: usize) -> (InferenceServer, Arc<PlanCache>) {
+    let cache = Arc::new(PlanCache::new());
+    let server = InferenceServer::start_model_as(
+        "v1",
+        demo_factory(0, Arc::clone(&cache)),
+        ServerConfig {
+            workers: WORKERS,
+            queue_cap: 4 * total.max(1),
+            max_wait: Duration::from_millis(2),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("server start");
+    server
+        .register_model("v2", demo_factory(1, Arc::clone(&cache)))
+        .expect("register v2");
+    server.set_alias("prod", "v1").expect("set alias");
+    (server, cache)
+}
+
+/// Closed-loop load on one route; returns wall seconds and every
+/// per-request latency in milliseconds.
+fn drive(server: &InferenceServer, route: &str, total: usize) -> (f64, Vec<f64>) {
+    let t0 = Instant::now();
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(total);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let server = server.clone();
+                let route = route.to_string();
+                scope.spawn(move || {
+                    let mut data = CifarLike::new(server.in_dim, server.classes, 100 + c as u64);
+                    let mut lat = Vec::with_capacity(total / CLIENTS);
+                    for _ in 0..total / CLIENTS {
+                        let b = data.test_batch(1);
+                        let t = Instant::now();
+                        let logits = server
+                            .infer_with(b.x, SubmitOptions::default().with_model(route.clone()))
+                            .expect("infer");
+                        assert_eq!(logits.len(), server.classes);
+                        lat.push(t.elapsed().as_secs_f64() * 1e3);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        for h in handles {
+            lat_ms.extend(h.join().expect("client thread"));
+        }
+    });
+    (t0.elapsed().as_secs_f64(), lat_ms)
+}
+
+fn pct(sorted_ms: &[f64], p: f64) -> f64 {
+    let idx = (p / 100.0 * (sorted_ms.len() - 1) as f64) as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+fn leg_json(requests: usize, wall_s: f64, mut lat_ms: Vec<f64>) -> (f64, f64, f64, Json) {
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let rps = requests as f64 / wall_s.max(1e-9);
+    let (p50, p99) = (pct(&lat_ms, 50.0), pct(&lat_ms, 99.0));
+    let mut j = Json::obj();
+    j.set("requests", requests)
+        .set("wall_s", wall_s)
+        .set("throughput_rps", rps)
+        .set("p50_ms", p50)
+        .set("p99_ms", p99);
+    (rps, p50, p99, j)
+}
+
+fn alias_stat(server: &InferenceServer) -> rbgp::coordinator::AliasStats {
+    server
+        .alias_stats()
+        .into_iter()
+        .find(|a| a.alias == "prod")
+        .expect("prod alias stats")
+}
+
+fn main() {
+    let fast = std::env::var("RBGP_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let total = if fast { 256 } else { 2048 };
+    println!(
+        "rollout bench — RBGP4 demo models, batch {BATCH}, {WORKERS} workers, \
+         {CLIENTS} closed-loop clients, {total} requests per leg\n"
+    );
+
+    // ── alias overhead: direct vs aliased, same pool, same load ─────────
+    let (server, _cache) = start_pool(total);
+    let (direct_wall, direct_lat) = drive(&server, "v1", total);
+    let (alias_wall, alias_lat) = drive(&server, "prod", total);
+    let n = CLIENTS * (total / CLIENTS);
+    let (direct_rps, direct_p50, direct_p99, direct_json) = leg_json(n, direct_wall, direct_lat);
+    let (alias_rps, alias_p50, alias_p99, alias_json) = leg_json(n, alias_wall, alias_lat);
+    let overhead_pct = (direct_rps / alias_rps.max(1e-9) - 1.0) * 100.0;
+    println!(
+        "alias overhead: direct {direct_rps:>8.1} req/s (p50 {direct_p50:.3} ms, p99 \
+         {direct_p99:.3} ms) vs aliased {alias_rps:>8.1} req/s (p50 {alias_p50:.3} ms, \
+         p99 {alias_p99:.3} ms) — {overhead_pct:+.1}% throughput tax"
+    );
+
+    // ── canary split: measured fraction vs configured percent ───────────
+    let before = alias_stat(&server);
+    server.set_canary("prod", "v2", CANARY_PCT).expect("set canary");
+    let (canary_wall, _) = drive(&server, "prod", total);
+    let after = alias_stat(&server);
+    let canary_reqs = after.requests - before.requests;
+    let canaried = after.canary - before.canary;
+    let measured = canaried as f64 / canary_reqs.max(1) as f64;
+    assert!(canaried > 0, "a {CANARY_PCT}% canary routed nothing over {canary_reqs} requests");
+    println!(
+        "canary split: {canaried}/{canary_reqs} requests on the canary leg — measured \
+         {:.1}% vs configured {CANARY_PCT}% ({:.1} req/s)",
+        measured * 100.0,
+        canary_reqs as f64 / canary_wall.max(1e-9)
+    );
+    server.clear_canary("prod").expect("clear canary");
+
+    // ── shadow amplification: mirrors on spare capacity ─────────────────
+    let shadow_before = alias_stat(&server);
+    server.set_shadow("prod", "v2").expect("set shadow");
+    let (shadow_wall, _) = drive(&server, "prod", total);
+    server.clear_shadow("prod").expect("clear shadow");
+    // Give queued Low-priority mirrors a moment to drain so the sample
+    // accounting reflects the whole phase, then snapshot.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let shadow = loop {
+        let s = alias_stat(&server);
+        let done = s.shadow_samples + s.shadow_dropped
+            >= (shadow_before.shadow_samples + shadow_before.shadow_dropped) + n;
+        if done || Instant::now() >= deadline {
+            break s;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    let samples = shadow.shadow_samples - shadow_before.shadow_samples;
+    let dropped = shadow.shadow_dropped - shadow_before.shadow_dropped;
+    let shadow_rps = n as f64 / shadow_wall.max(1e-9);
+    println!(
+        "shadow mode: {shadow_rps:>8.1} req/s with mirrors on — {samples} divergence \
+         samples ({dropped} mirrors dropped), divergence mean {:.3e} max {:.3e}",
+        shadow.shadow_mean, shadow.shadow_max
+    );
+    assert!(samples > 0, "no shadow mirror ever completed");
+
+    // ── the flip: rollout under sustained traffic ───────────────────────
+    let stop = Arc::new(AtomicBool::new(false));
+    let answered = Arc::new(AtomicUsize::new(0));
+    let (flip_ms, report) = std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let server = server.clone();
+            let stop = Arc::clone(&stop);
+            let answered = Arc::clone(&answered);
+            scope.spawn(move || {
+                let mut data = CifarLike::new(server.in_dim, server.classes, 500 + c as u64);
+                while !stop.load(Ordering::Acquire) {
+                    let b = data.test_batch(1);
+                    let logits = server
+                        .infer_with(b.x, SubmitOptions::default().with_model("prod"))
+                        .expect("rollout must drop nothing");
+                    assert_eq!(logits.len(), server.classes);
+                    answered.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+        // Build up real in-flight traffic before flipping.
+        while answered.load(Ordering::Relaxed) < CLIENTS * 4 {
+            std::thread::yield_now();
+        }
+        let t0 = Instant::now();
+        let report = server.rollout("prod", "v2").expect("rollout");
+        let flip_ms = t0.elapsed().as_secs_f64() * 1e3;
+        // Keep the flipped alias under load briefly, then stop.
+        let target = answered.load(Ordering::Relaxed) + CLIENTS * 4;
+        while answered.load(Ordering::Relaxed) < target {
+            std::thread::yield_now();
+        }
+        stop.store(true, Ordering::Release);
+        (flip_ms, report)
+    });
+    assert_eq!(report.model, "v1");
+    assert_eq!(report.evicted_structures.len(), 1, "{report:?}");
+    assert_eq!(report.retained_structures.len(), 1, "{report:?}");
+    let (rej_full, rej_late) = server.rejected();
+    let rej_quota = server.rejected_quota();
+    assert_eq!(
+        (rej_full, rej_late, rej_quota),
+        (0, 0, 0),
+        "zero-downtime invariant: nothing may be rejected across the rollout"
+    );
+    println!(
+        "flip: rollout('prod' → 'v2') took {flip_ms:.1} ms under load — {} in-flight \
+         drained, {} structure evicted / {} retained, 0 rejections",
+        report.drained_requests,
+        report.evicted_structures.len(),
+        report.retained_structures.len()
+    );
+    server.shutdown();
+
+    let mut doc = Json::obj();
+    let mut meta = Json::obj();
+    meta.set("batch", BATCH)
+        .set("classes", CLASSES)
+        .set("workers", WORKERS)
+        .set("clients", CLIENTS)
+        .set("requests_per_leg", total)
+        .set("fast_mode", fast);
+    let mut alias_doc = Json::obj();
+    alias_doc
+        .set("direct", direct_json)
+        .set("aliased", alias_json)
+        .set("throughput_tax_pct", overhead_pct);
+    let mut canary_doc = Json::obj();
+    canary_doc
+        .set("configured_pct", CANARY_PCT as usize)
+        .set("requests", canary_reqs)
+        .set("canaried", canaried)
+        .set("measured_fraction", measured);
+    let mut shadow_doc = Json::obj();
+    shadow_doc
+        .set("throughput_rps", shadow_rps)
+        .set("samples", samples)
+        .set("dropped", dropped)
+        .set("divergence_mean", shadow.shadow_mean)
+        .set("divergence_max", shadow.shadow_max);
+    let mut flip_doc = Json::obj();
+    flip_doc
+        .set("flip_ms", flip_ms)
+        .set("drained_requests", report.drained_requests)
+        .set("evicted_structures", report.evicted_structures.len())
+        .set("retained_structures", report.retained_structures.len())
+        .set("evicted_plans", report.evicted_plans);
+    doc.set("bench", "rollout_bench")
+        .set("config", meta)
+        .set("alias", alias_doc)
+        .set("canary", canary_doc)
+        .set("shadow", shadow_doc)
+        .set("flip", flip_doc);
+    match std::fs::write(OUT_PATH, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {OUT_PATH}"),
+        Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),
+    }
+}

@@ -234,6 +234,71 @@ impl TunedStatus {
     }
 }
 
+/// Upper edges of the shadow-divergence histogram buckets: per-request
+/// max-abs logit divergence between an alias's primary and shadow legs.
+/// Log-spaced, because the regimes that matter are qualitative —
+/// bit-identical-ish (≤1e-6), rounding-level noise, and genuinely
+/// different predictions; the final bucket catches everything above 0.1.
+pub const DIVERGENCE_BUCKETS: [f64; 6] = [1e-6, 1e-4, 1e-3, 1e-2, 1e-1, f64::INFINITY];
+
+/// Running tallies for one alias: SLO latency window, canary split, and
+/// the shadow-divergence accumulators. Unlike [`ModelTally`], the latency
+/// ring *is* fed per request — per-alias p50/p99 is the point — so alias
+/// traffic pays one short map-lock per answered request; direct
+/// (alias-less) submits never touch this map.
+#[derive(Default)]
+struct AliasTally {
+    /// Client requests answered through this alias (mirrors excluded).
+    requests: usize,
+    /// Of those, how many the deterministic key routed to the canary leg.
+    canary: usize,
+    latencies: LatencyRing,
+    shadow_samples: usize,
+    shadow_sum: f64,
+    shadow_max: f64,
+    shadow_hist: [usize; DIVERGENCE_BUCKETS.len()],
+    /// Mirrors never executed: push rejected (queue/quota pressure) or
+    /// deadline lapsed before the mirror's Low-priority turn came up.
+    shadow_dropped: usize,
+}
+
+/// Snapshot of one alias's rollout telemetry (see
+/// [`ServingMetrics::alias_stats`]).
+#[derive(Clone, Debug)]
+pub struct AliasStats {
+    pub alias: String,
+    /// Client requests answered through this alias (shadow mirrors are
+    /// not client requests and are excluded).
+    pub requests: usize,
+    /// Of those, requests served by the canary leg.
+    pub canary: usize,
+    /// Queue→response percentiles over this alias's recent window; `None`
+    /// before the first answered request.
+    pub latency: Option<LatencyStats>,
+    /// Completed shadow comparisons (both legs flushed).
+    pub shadow_samples: usize,
+    /// Mean max-abs logit divergence over those samples.
+    pub shadow_mean: f64,
+    /// Largest max-abs logit divergence observed.
+    pub shadow_max: f64,
+    /// Divergence histogram; bucket `i` counts samples ≤
+    /// [`DIVERGENCE_BUCKETS`]`[i]` (and above the previous edge).
+    pub shadow_hist: Vec<usize>,
+    /// Mirrors dropped under load instead of executed (never client-facing).
+    pub shadow_dropped: usize,
+}
+
+impl AliasStats {
+    /// Fraction of this alias's answered requests the canary leg served.
+    pub fn canary_fraction(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.canary as f64 / self.requests as f64
+        }
+    }
+}
+
 /// Running tallies for one served model (registry id). Plain counters
 /// behind the store's model-map mutex: they are bumped once per *flush*
 /// (and per rejection), not per request, so the map lock is off the
@@ -299,6 +364,7 @@ pub struct ServingMetrics {
     workers: Vec<WorkerCounters>,
     latencies: Vec<Mutex<LatencyRing>>,
     models: Mutex<HashMap<String, ModelTally>>,
+    aliases: Mutex<HashMap<String, AliasTally>>,
     rejected_full: AtomicUsize,
     rejected_deadline: AtomicUsize,
     rejected_quota: AtomicUsize,
@@ -312,6 +378,7 @@ impl ServingMetrics {
             workers: (0..workers).map(|_| WorkerCounters::default()).collect(),
             latencies: (0..workers).map(|_| Mutex::new(LatencyRing::default())).collect(),
             models: Mutex::new(HashMap::new()),
+            aliases: Mutex::new(HashMap::new()),
             rejected_full: AtomicUsize::new(0),
             rejected_deadline: AtomicUsize::new(0),
             rejected_quota: AtomicUsize::new(0),
@@ -413,6 +480,73 @@ impl ServingMetrics {
     /// Drift-triggered re-tunes completed, all models.
     pub fn retunes(&self) -> usize {
         lock_recover(&self.models).values().map(|t| t.retunes).sum()
+    }
+
+    /// One client request answered through `alias` with its queue→response
+    /// latency; `canary` marks the requests the deterministic key routed
+    /// to the canary leg.
+    pub(crate) fn record_alias_latency(&self, alias: &str, canary: bool, d: Duration) {
+        let mut map = lock_recover(&self.aliases);
+        let t = map.entry(alias.to_string()).or_default();
+        t.requests += 1;
+        if canary {
+            t.canary += 1;
+        }
+        t.latencies.push(d.as_secs_f64());
+    }
+
+    /// One completed shadow comparison for `alias`: the max-abs logit
+    /// divergence between the primary and mirror legs of one request.
+    pub(crate) fn record_shadow_divergence(&self, alias: &str, d: f64) {
+        let mut map = lock_recover(&self.aliases);
+        let t = map.entry(alias.to_string()).or_default();
+        t.shadow_samples += 1;
+        t.shadow_sum += d;
+        if d > t.shadow_max {
+            t.shadow_max = d;
+        }
+        let bucket = DIVERGENCE_BUCKETS
+            .iter()
+            .position(|&edge| d <= edge)
+            .unwrap_or(DIVERGENCE_BUCKETS.len() - 1);
+        t.shadow_hist[bucket] += 1;
+    }
+
+    /// One shadow mirror dropped under load (push rejected, or deadline
+    /// lapsed before its Low-priority turn) — lost divergence coverage,
+    /// never a client-facing rejection.
+    pub(crate) fn record_shadow_dropped(&self, alias: &str) {
+        lock_recover(&self.aliases)
+            .entry(alias.to_string())
+            .or_default()
+            .shadow_dropped += 1;
+    }
+
+    /// Per-alias rollout telemetry snapshots, sorted by alias. Tallies
+    /// survive `remove_alias` — a finished rollout's history stays
+    /// reportable.
+    pub fn alias_stats(&self) -> Vec<AliasStats> {
+        let map = lock_recover(&self.aliases);
+        let mut stats: Vec<AliasStats> = map
+            .iter()
+            .map(|(alias, t)| AliasStats {
+                alias: alias.clone(),
+                requests: t.requests,
+                canary: t.canary,
+                latency: LatencyStats::from_samples(&t.latencies.samples),
+                shadow_samples: t.shadow_samples,
+                shadow_mean: if t.shadow_samples == 0 {
+                    0.0
+                } else {
+                    t.shadow_sum / t.shadow_samples as f64
+                },
+                shadow_max: t.shadow_max,
+                shadow_hist: t.shadow_hist.to_vec(),
+                shadow_dropped: t.shadow_dropped,
+            })
+            .collect();
+        stats.sort_by(|a, b| a.alias.cmp(&b.alias));
+        stats
     }
 
     /// Track the deepest queue observed at submit time.
@@ -670,6 +804,40 @@ mod tests {
         assert_eq!(stats[0].retunes, 2);
         assert_eq!(stats[0].tuned.len(), 1);
         assert!((stats[0].tuned[0].drift().unwrap() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alias_stats_track_canary_split_and_divergence_histogram() {
+        let m = ServingMetrics::new(1);
+        assert!(m.alias_stats().is_empty());
+        for i in 0..10 {
+            m.record_alias_latency("prod", i < 3, Duration::from_millis(i as u64 + 1));
+        }
+        m.record_shadow_divergence("prod", 5e-7); // bucket 0: ≤1e-6
+        m.record_shadow_divergence("prod", 2e-3); // bucket 3: ≤1e-2
+        m.record_shadow_divergence("prod", 7.5); // overflow bucket
+        m.record_shadow_dropped("prod");
+        m.record_alias_latency("staging", false, Duration::from_millis(1));
+
+        let stats = m.alias_stats();
+        assert_eq!(stats.len(), 2, "sorted by alias");
+        let p = &stats[0];
+        assert_eq!(p.alias, "prod");
+        assert_eq!((p.requests, p.canary), (10, 3));
+        assert!((p.canary_fraction() - 0.3).abs() < 1e-12);
+        let lat = p.latency.expect("requests recorded");
+        assert_eq!(lat.count, 10);
+        assert!(lat.p50 <= lat.p99);
+        assert_eq!(p.shadow_samples, 3);
+        assert!((p.shadow_max - 7.5).abs() < 1e-12);
+        assert!((p.shadow_mean - (5e-7 + 2e-3 + 7.5) / 3.0).abs() < 1e-12);
+        assert_eq!(p.shadow_hist, vec![1, 0, 0, 1, 0, 1]);
+        assert_eq!(p.shadow_dropped, 1);
+        let s = &stats[1];
+        assert_eq!(s.alias, "staging");
+        assert_eq!(s.canary_fraction(), 0.0);
+        assert_eq!(s.shadow_samples, 0);
+        assert_eq!(s.shadow_mean, 0.0, "no samples: mean is zero, not NaN");
     }
 
     #[test]

@@ -14,9 +14,11 @@ pub mod serving;
 pub mod trainer;
 
 pub use config::TrainConfig;
-pub use metrics::{LatencyStats, Metrics, ModelStats, ServingMetrics, TunedStatus, WorkerStats};
+pub use metrics::{
+    AliasStats, LatencyStats, Metrics, ModelStats, ServingMetrics, TunedStatus, WorkerStats,
+};
 pub use serving::{
-    BatchModel, InferenceServer, ModelQuota, NativeSparseModel, Priority, ServeError,
+    AliasInfo, BatchModel, InferenceServer, ModelQuota, NativeSparseModel, Priority, ServeError,
     ServerConfig, SubmitOptions, UnregisterReport, DEFAULT_MODEL,
 };
 pub use trainer::{GradualReport, MilestoneRecord, NativeCheckpoint, NativeTrainer};

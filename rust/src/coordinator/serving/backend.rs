@@ -70,6 +70,15 @@ pub trait BatchModel: Send {
     fn retune(&mut self) -> anyhow::Result<()> {
         Ok(())
     }
+
+    /// Adopt plans a pool peer's completed re-tune left in the shared
+    /// cache: re-resolve working copies *without* invalidating anything
+    /// and without searching. Called when a worker's local re-tune epoch
+    /// lags the registry entry's; a no-op for backends without cached
+    /// plans.
+    fn refresh(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
 }
 
 /// EWMA weight for per-flush achieved-throughput samples: heavy enough
@@ -327,6 +336,18 @@ impl BatchModel for NativeSparseModel {
         self.resolve_plans()
     }
 
+    /// Refresh: drop the detached working copies and re-resolve from the
+    /// shared cache. When a peer's re-tune already rebuilt the cached
+    /// plans this is a pair of cache hits — no invalidation, no search;
+    /// the EWMAs reset because they measured the replaced plans.
+    fn refresh(&mut self) -> anyhow::Result<()> {
+        self.plan1 = None;
+        self.plan2 = None;
+        self.perf1 = LayerPerf::default();
+        self.perf2 = LayerPerf::default();
+        self.resolve_plans()
+    }
+
     fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
         let (b, d) = (self.batch, self.w1.cols());
         let (h, c) = (self.w1.rows(), self.w2.rows());
@@ -521,6 +542,22 @@ mod tests {
         assert!(st.iter().all(|s| s.samples == 0), "EWMAs reset on swap");
         let a = m.forward(&x).unwrap();
         assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn refresh_adopts_cached_plans_without_invalidation() {
+        let cache = Arc::new(PlanCache::new());
+        let mut m = demo(3, Arc::clone(&cache));
+        m.warm().unwrap();
+        let (hits0, misses0) = cache.stats();
+        m.refresh().unwrap();
+        let (hits, misses) = cache.stats();
+        assert_eq!(misses, misses0, "refresh never rebuilds or evicts plans");
+        assert_eq!(hits, hits0 + 2, "refresh re-resolves both layers from cache");
+        let st = m.tuned_status();
+        assert!(st.iter().all(|s| s.samples == 0), "EWMAs reset on adoption");
+        let x: Vec<f32> = (0..8 * 256).map(|i| (i % 7) as f32 / 7.0).collect();
+        assert!(m.forward(&x).unwrap().iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -53,12 +53,12 @@ pub mod registry;
 mod worker;
 
 pub use backend::{BatchModel, NativeSparseModel};
-pub use queue::{ModelPop, Priority, QueuedRequest, RequestQueue, SubmitOptions};
-pub use registry::{ModelClaim, UnregisterReport, DEFAULT_MODEL};
+pub use queue::{ModelPop, Priority, QueuedRequest, RequestQueue, RouteTag, ShadowPair, SubmitOptions};
+pub use registry::{AliasInfo, ModelClaim, UnregisterReport, DEFAULT_MODEL};
 
-use crate::coordinator::metrics::{LatencyStats, ModelStats, ServingMetrics, WorkerStats};
+use crate::coordinator::metrics::{AliasStats, LatencyStats, ModelStats, ServingMetrics, WorkerStats};
 use crate::util::lock_recover;
-use registry::{ModelFactory, ModelInfo, ModelRegistry, ModelSpec};
+use registry::{request_key, ModelFactory, ModelInfo, ModelRegistry, ModelSpec};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -82,6 +82,9 @@ pub enum ServeError {
     /// The submit named a model id that is not registered (or was
     /// unregistered).
     UnknownModel { model: String },
+    /// The submit raced a registration: the model exists but its probe has
+    /// not reported geometry yet. Transient — retry shortly.
+    ModelNotReady { model: String },
     /// The server has been shut down (or every worker exited).
     Stopped,
     /// The backend failed executing the batch this request rode in.
@@ -108,6 +111,9 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::UnknownModel { model } => {
                 write!(f, "model '{model}' is not registered with this server")
+            }
+            ServeError::ModelNotReady { model } => {
+                write!(f, "model '{model}' is still initializing (probe pending); retry")
             }
             ServeError::Stopped => write!(f, "server stopped"),
             ServeError::Backend(msg) => write!(f, "{msg}"),
@@ -519,6 +525,98 @@ impl InferenceServer {
         Ok(report)
     }
 
+    // ─── Rollout operations: aliases, canary routing, shadow mode ───────
+    //
+    // An alias (`prod` → concrete model id) is the client-facing name for
+    // fleet rollouts: clients keep submitting to `prod` while operators
+    // stage a new model behind it (canary a fraction of traffic, shadow
+    // everything for divergence measurement) and finally flip the alias
+    // atomically. See `registry` for locking semantics.
+
+    /// Create or redirect an alias to a registered concrete model. Alias
+    /// and model-id namespaces are disjoint (both directions); creating an
+    /// alias over an existing model id, or vice versa, fails.
+    pub fn set_alias(&self, alias: &str, target: &str) -> anyhow::Result<()> {
+        self.inner.registry.set_alias(alias, target)
+    }
+
+    /// Atomically flip `alias` to `target` and clear any staged canary /
+    /// shadow configuration — the staging referred to the *previous*
+    /// primary. Requests resolved before the flip drain on the old model
+    /// (their claims pin it); requests resolved after see only the new one.
+    pub fn promote(&self, alias: &str, target: &str) -> anyhow::Result<()> {
+        self.inner.registry.promote(alias, target)
+    }
+
+    /// Delete an alias. Concrete models stay registered and directly
+    /// addressable.
+    pub fn remove_alias(&self, alias: &str) -> anyhow::Result<()> {
+        self.inner.registry.remove_alias(alias)
+    }
+
+    /// Route `percent`% (1..=100) of the alias's traffic to `target`,
+    /// chosen per request by a deterministic payload hash. The target must
+    /// match the primary's input/output geometry.
+    pub fn set_canary(&self, alias: &str, target: &str, percent: u8) -> anyhow::Result<()> {
+        self.inner.registry.set_canary(alias, target, percent)
+    }
+
+    /// Stop canary routing; all alias traffic returns to the primary.
+    pub fn clear_canary(&self, alias: &str) -> anyhow::Result<()> {
+        self.inner.registry.clear_canary(alias)
+    }
+
+    /// Mirror every alias request to `target` on spare capacity (Low
+    /// priority, best effort) and record per-request max-abs logit
+    /// divergence into [`InferenceServer::alias_stats`]. Clients are
+    /// always answered by the primary leg. The target must match the
+    /// primary's geometry.
+    pub fn set_shadow(&self, alias: &str, target: &str) -> anyhow::Result<()> {
+        self.inner.registry.set_shadow(alias, target)
+    }
+
+    /// Stop shadow mirroring.
+    pub fn clear_shadow(&self, alias: &str) -> anyhow::Result<()> {
+        self.inner.registry.clear_shadow(alias)
+    }
+
+    /// Current alias routes (target, canary, shadow), sorted by alias.
+    pub fn aliases(&self) -> Vec<AliasInfo> {
+        self.inner.registry.aliases()
+    }
+
+    /// The concrete model an alias currently resolves to.
+    pub fn alias_target(&self, alias: &str) -> Option<String> {
+        self.inner.registry.alias_target(alias)
+    }
+
+    /// Per-alias serving stats: request/canary counters, latency
+    /// percentiles over the recent window, and the shadow-divergence
+    /// histogram.
+    pub fn alias_stats(&self) -> Vec<AliasStats> {
+        self.inner.metrics.alias_stats()
+    }
+
+    /// Zero-downtime rollout as one operation: atomically flip `alias` to
+    /// `to`, then drain and retire the previous primary — awaiting its
+    /// in-flight count reaching zero and evicting exactly the plan
+    /// namespaces no surviving model claims. Requests accepted before the
+    /// flip are all answered (by the old model); requests after resolve to
+    /// the new one. Nothing is dropped.
+    pub fn rollout(&self, alias: &str, to: &str) -> anyhow::Result<UnregisterReport> {
+        let old = self
+            .inner
+            .registry
+            .alias_target(alias)
+            .ok_or_else(|| anyhow::anyhow!("'{alias}' is not an alias"))?;
+        anyhow::ensure!(
+            old != to,
+            "alias '{alias}' already points at '{to}': nothing to roll out"
+        );
+        self.inner.registry.promote(alias, to)?;
+        self.unregister_model(&old)
+    }
+
     /// Ids of the currently registered models, sorted.
     pub fn models(&self) -> Vec<String> {
         self.inner.registry.models()
@@ -557,29 +655,80 @@ impl InferenceServer {
         self.submit_with(x, SubmitOptions::default())
     }
 
-    /// Submit one sample with explicit priority / deadline / target model.
-    /// Backpressure — shared ([`ServeError::QueueFull`]) or per-model
-    /// ([`ServeError::ModelQuotaExceeded`]) — shutdown
+    /// Submit one sample with explicit priority / deadline / target model
+    /// **or alias**. Backpressure — shared ([`ServeError::QueueFull`]) or
+    /// per-model ([`ServeError::ModelQuotaExceeded`]) — shutdown
     /// ([`ServeError::Stopped`]), an unknown model id
-    /// ([`ServeError::UnknownModel`]) and a width mismatch against the
+    /// ([`ServeError::UnknownModel`]), a registration race
+    /// ([`ServeError::ModelNotReady`]) and a width mismatch against the
     /// *target model's* input dimension are reported synchronously;
     /// deadline expiry arrives on the receiver.
+    ///
+    /// An aliased submit resolves to its concrete model *here*, under the
+    /// registry lock — the queued claim pins that concrete model, so a
+    /// concurrent [`InferenceServer::promote`] never reroutes an accepted
+    /// request. The canary leg is chosen by a deterministic hash of the
+    /// payload and alias name (replaying a request always lands on the
+    /// same leg), and a configured shadow target enqueues a best-effort
+    /// Low-priority mirror whose only output is a divergence sample — the
+    /// client answer always comes from the primary leg.
     pub fn submit_with(
         &self,
         x: Vec<f32>,
         opts: SubmitOptions,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>, ServeError>>, ServeError> {
-        let claim = self.inner.registry.resolve(opts.model.as_deref())?;
-        let want = claim.spec().in_dim;
+        let requested = opts.model.as_deref();
+        let key = request_key(&x, requested.unwrap_or_else(|| self.inner.registry.default_id()));
+        let res = self.inner.registry.resolve_request(requested, key)?;
+        let want = res.claim.spec().in_dim;
         if x.len() != want {
             return Err(ServeError::WrongInputWidth { got: x.len(), want });
         }
-        let quota = claim.quota_limit();
+        let quota = res.claim.quota_limit();
         let now = Instant::now();
         let deadline = opts
             .deadline
             .or(self.inner.default_deadline)
             .map(|d| now + d);
+        // Routing context + optional shadow mirror. The mirror rides the
+        // same payload and deadline but a dummy response channel: it can
+        // never answer a client.
+        let (route, mirror) = match res.alias {
+            Some((alias, canary)) => match res.shadow {
+                Some(shadow_claim) => {
+                    let pair = ShadowPair::new();
+                    let mirror_quota = shadow_claim.quota_limit();
+                    let mirror_req = QueuedRequest {
+                        x: x.clone(),
+                        enqueued: now,
+                        deadline,
+                        respond: mpsc::channel().0,
+                        claim: shadow_claim,
+                        route: Some(RouteTag::Shadow {
+                            alias: alias.clone(),
+                            pair: Arc::clone(&pair),
+                        }),
+                    };
+                    (
+                        Some(RouteTag::Alias {
+                            alias: alias.clone(),
+                            canary,
+                            shadow: Some(pair),
+                        }),
+                        Some((mirror_req, mirror_quota, alias)),
+                    )
+                }
+                None => (
+                    Some(RouteTag::Alias {
+                        alias,
+                        canary,
+                        shadow: None,
+                    }),
+                    None,
+                ),
+            },
+            None => (None, None),
+        };
         let (rtx, rrx) = mpsc::channel();
         let depth = self.inner.queue.push(
             QueuedRequest {
@@ -587,7 +736,8 @@ impl InferenceServer {
                 enqueued: now,
                 deadline,
                 respond: rtx,
-                claim,
+                claim: res.claim,
+                route,
             },
             opts.priority,
             quota,
@@ -603,10 +753,20 @@ impl InferenceServer {
                     }
                     _ => {}
                 }
+                // A rejected primary mirrors nothing.
                 return Err(e);
             }
         };
         self.inner.metrics.observe_queue_depth(depth);
+        // The mirror is enqueued only after the primary was accepted, at
+        // Low priority against the shadow model's own quota. A rejected
+        // mirror is a dropped divergence sample, never a client-visible
+        // rejection.
+        if let Some((req, mirror_quota, alias)) = mirror {
+            if self.inner.queue.push(req, Priority::Low, mirror_quota).is_err() {
+                self.inner.metrics.record_shadow_dropped(&alias);
+            }
+        }
         Ok(rrx)
     }
 
@@ -1099,6 +1259,97 @@ mod tests {
             assert!(matches!(server.infer(vec![0.0]), Err(ServeError::Stopped)));
         }
         assert!(server.latency_stats().is_none(), "nothing was ever served");
+    }
+
+    #[test]
+    fn retired_default_model_rejects_typed_not_panicking() {
+        // Regression: an alias-less submit resolves DEFAULT_MODEL; after
+        // the default is retired that must be the typed UnknownModel —
+        // never a panic in resolution.
+        let cache = Arc::new(PlanCache::new());
+        let server = demo_server(
+            5,
+            &cache,
+            ServerConfig {
+                max_wait: Duration::from_millis(1),
+                ..ServerConfig::default()
+            },
+        );
+        let c2 = Arc::clone(&cache);
+        server
+            .register_model("v2", move || {
+                let mut m = demo(6, Arc::clone(&c2));
+                m.warm()?;
+                Ok(Box::new(m) as Box<dyn BatchModel>)
+            })
+            .unwrap();
+        server.unregister_model(DEFAULT_MODEL).unwrap();
+        match server.submit(vec![0.0; 256]) {
+            Err(ServeError::UnknownModel { model }) => assert_eq!(model, DEFAULT_MODEL),
+            other => panic!("expected UnknownModel, got {:?}", other.map(|_| ())),
+        }
+        // The surviving model keeps serving by explicit id.
+        let got = server
+            .infer_with(vec![0.25; 256], SubmitOptions::default().with_model("v2"))
+            .unwrap();
+        assert_eq!(got.len(), 10);
+        server.shutdown();
+    }
+
+    #[test]
+    fn alias_routes_and_rollout_retires_old_primary() {
+        let cache = Arc::new(PlanCache::new());
+        let server = demo_server(
+            9,
+            &cache,
+            ServerConfig {
+                max_wait: Duration::from_millis(1),
+                ..ServerConfig::default()
+            },
+        );
+        server.set_alias("prod", DEFAULT_MODEL).unwrap();
+        let x = vec![0.25f32; 256];
+        let direct = server.infer(x.clone()).unwrap();
+        let via_alias = server
+            .infer_with(x.clone(), SubmitOptions::default().with_model("prod"))
+            .unwrap();
+        assert_eq!(direct, via_alias, "an alias is a pure rename");
+        let stats = server.alias_stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!((stats[0].alias.as_str(), stats[0].requests), ("prod", 1));
+        assert_eq!(server.alias_target("prod").as_deref(), Some(DEFAULT_MODEL));
+
+        // Stage v2, then roll out: flip + drain + retire in one call.
+        let c2 = Arc::clone(&cache);
+        server
+            .register_model("v2", move || {
+                let mut m = demo(10, Arc::clone(&c2));
+                m.warm()?;
+                Ok(Box::new(m) as Box<dyn BatchModel>)
+            })
+            .unwrap();
+        let report = server.rollout("prod", "v2").unwrap();
+        assert_eq!(report.model, DEFAULT_MODEL);
+        // The two demo seeds share the dense-classifier structure but own
+        // distinct hidden structures: exactly the old one is evicted.
+        assert_eq!(report.evicted_structures.len(), 1, "{report:?}");
+        assert_eq!(report.retained_structures.len(), 1, "{report:?}");
+        // prod answers from v2; the old primary is unreachable, and the
+        // alias-less path (satellite of the same fix) is typed too.
+        assert_eq!(
+            server
+                .infer_with(x.clone(), SubmitOptions::default().with_model("prod"))
+                .unwrap()
+                .len(),
+            10
+        );
+        match server.submit(x) {
+            Err(ServeError::UnknownModel { model }) => assert_eq!(model, DEFAULT_MODEL),
+            other => panic!("expected UnknownModel, got {:?}", other.map(|_| ())),
+        }
+        assert!(server.rollout("prod", "v2").is_err(), "nothing to roll out");
+        assert_eq!(server.rejected(), (0, 0), "rollout drops nothing");
+        server.shutdown();
     }
 
     #[test]

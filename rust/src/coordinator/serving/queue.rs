@@ -66,7 +66,7 @@ use super::registry::ModelClaim;
 use super::ServeError;
 use crate::util::lock_recover;
 use std::collections::{HashMap, VecDeque};
-use std::sync::{mpsc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Scheduling class of a request; classes pop in this order, subject to
@@ -127,6 +127,74 @@ impl SubmitOptions {
     }
 }
 
+/// Rendezvous slot for one shadowed request: the primary leg and its
+/// mirror each deposit their logits here after flushing, and whichever
+/// leg arrives *second* computes and returns the max-abs divergence.
+///
+/// The two legs run on different workers in either order (the mirror is
+/// `Priority::Low`, so it usually lands later but is not required to),
+/// and either leg may never flush at all (deadline, shutdown) — the pair
+/// then simply never yields a sample. Exactly one caller can observe
+/// `Some`, so a divergence sample is recorded at most once per request.
+pub struct ShadowPair {
+    /// `(primary logits, mirror logits)` — each written once.
+    slots: Mutex<(Option<Vec<f32>>, Option<Vec<f32>>)>,
+}
+
+impl ShadowPair {
+    pub(crate) fn new() -> Arc<ShadowPair> {
+        Arc::new(ShadowPair {
+            slots: Mutex::new((None, None)),
+        })
+    }
+
+    /// Deposit one leg's logits; returns `Some(max-abs divergence)` iff
+    /// the other leg already deposited (i.e. this call completed the
+    /// pair). Rows of unequal length compare over the shorter prefix —
+    /// alias legs are geometry-validated at configuration time, so that
+    /// case cannot arise in practice.
+    pub(crate) fn record(&self, mirror: bool, logits: &[f32]) -> Option<f64> {
+        let mut g = lock_recover(&self.slots);
+        let slot = if mirror { &mut g.1 } else { &mut g.0 };
+        if slot.is_some() {
+            return None; // double-flush guard: first deposit wins
+        }
+        *slot = Some(logits.to_vec());
+        match (&g.0, &g.1) {
+            (Some(a), Some(b)) => Some(
+                a.iter()
+                    .zip(b.iter())
+                    .fold(0f64, |m, (&x, &y)| m.max((f64::from(x) - f64::from(y)).abs())),
+            ),
+            _ => None,
+        }
+    }
+}
+
+/// How a request reached the queue: directly by concrete model id
+/// (`route: None`), through an alias, or as the shadow mirror of an
+/// aliased request. Workers use this to file per-alias latency, canary
+/// and divergence metrics at flush time; the queue itself never looks at
+/// it — scheduling and quotas see only the concrete [`ModelClaim`].
+pub enum RouteTag {
+    /// The client-facing leg of an aliased request.
+    Alias {
+        alias: String,
+        /// This request hashed into the alias's canary split.
+        canary: bool,
+        /// Present iff the alias has a shadow target *and* the mirror leg
+        /// was enqueued; the flushing worker deposits the primary logits
+        /// here.
+        shadow: Option<Arc<ShadowPair>>,
+    },
+    /// The mirrored leg: executed on spare capacity, never answered to a
+    /// client. Its only output is the divergence deposit.
+    Shadow {
+        alias: String,
+        pair: Arc<ShadowPair>,
+    },
+}
+
 /// One queued sample plus its response channel and model routing claim.
 ///
 /// Public so the queue-level property suite (`tests/prop_queue.rs`) and
@@ -142,6 +210,8 @@ pub struct QueuedRequest {
     /// model's in-flight count exact until the request is answered or
     /// discarded (RAII), which is what lets `unregister_model` drain.
     pub claim: ModelClaim,
+    /// Alias/shadow provenance for metrics; `None` for direct submits.
+    pub route: Option<RouteTag>,
 }
 
 /// Outcome of a model-filtered pop that may yield a steal hint.
@@ -649,6 +719,7 @@ mod tests {
                 deadline: None,
                 respond: tx,
                 claim: ModelClaim::detached(model, 1, 1, 1),
+                route: None,
             },
             rx,
         )
@@ -901,5 +972,24 @@ mod tests {
         assert_eq!(q.len(), 0);
         assert!(q.model_backlogs().is_empty());
         q.check_invariants();
+    }
+
+    #[test]
+    fn shadow_pair_yields_exactly_one_divergence_sample() {
+        // Second depositor computes the divergence, whichever order the
+        // legs land in.
+        let p = ShadowPair::new();
+        assert!(p.record(false, &[1.0, 2.0]).is_none());
+        let d = p.record(true, &[1.0, 2.5]).expect("pair completed");
+        assert!((d - 0.5).abs() < 1e-9);
+
+        let p = ShadowPair::new();
+        assert!(p.record(true, &[0.0, -3.0]).is_none());
+        let d = p.record(false, &[0.0, 1.0]).expect("pair completed");
+        assert!((d - 4.0).abs() < 1e-9);
+
+        // A duplicate flush of the same leg never yields a second sample.
+        assert!(p.record(false, &[9.0, 9.0]).is_none());
+        assert!(p.record(true, &[9.0, 9.0]).is_none());
     }
 }

@@ -1,4 +1,5 @@
-//! The model registry: one worker pool serving **many models** concurrently.
+//! The model registry: one worker pool serving **many models** concurrently,
+//! plus the fleet-level rollout layer built on top of it.
 //!
 //! The paper's point is that RBGP4 structure is derived once and executed
 //! everywhere; PR 3 made the shared [`PlanCache`] *namespaced by structure
@@ -11,12 +12,22 @@
 //! and then evicts exactly the plan namespaces no surviving model still
 //! claims.
 //!
+//! On top of the id → entry map sits the **alias table**: an alias
+//! (`prod`) names an [`AliasRoute`] — a concrete target model, an optional
+//! canary leg (N% of traffic to a second model, chosen by a deterministic
+//! per-request hash so replays reproduce), and an optional shadow target
+//! (requests mirrored for divergence measurement, never answered from).
+//! Both maps live under **one lock**, so an alias flip is atomic with
+//! respect to resolution: no request ever observes a half-flipped route,
+//! and a claim created through an alias pins the *concrete* model — drain
+//! accounting stays exact through canary splits and flips.
+//!
 //! Lifecycle of a request: `submit_with(model: Some(id))` →
-//! [`ModelRegistry::resolve`] hands back a [`ModelClaim`] (an RAII token
-//! that keeps the entry's in-flight count exact) → the claim rides inside
-//! the queued request → a worker batches it with same-model requests only
-//! → the response is sent and the claim drops. `unregister_model` flips
-//! the entry to *retired* (new submits get
+//! [`ModelRegistry::resolve_request`] hands back a [`Resolution`] whose
+//! [`ModelClaim`] (an RAII token that keeps the concrete entry's in-flight
+//! count exact) rides inside the queued request → a worker batches it with
+//! same-model requests only → the response is sent and the claim drops.
+//! `unregister_model` flips the entry to *retired* (new submits get
 //! [`ServeError::UnknownModel`]), waits for the in-flight count to reach
 //! zero, removes the entry (workers drop their instances at the next
 //! sync), and invalidates the retired structures in the entry's plan
@@ -79,6 +90,16 @@ pub(crate) struct ModelEntry {
     /// Set by `begin_retire`: resolves are rejected, queued requests keep
     /// draining.
     retired: AtomicBool,
+    /// Set while one worker runs this model's drift re-tune (the search
+    /// invalidates the shared TuneCache entry and evicts the plan
+    /// namespace — running it twice for one drift event would double both
+    /// and double-count `ModelStats::retunes`). Pool peers that lose the
+    /// race skip; they pick up the fresh plans via `retune_epoch`.
+    retuning: AtomicBool,
+    /// Bumped once per *completed* re-tune. A worker whose local epoch
+    /// lags re-resolves plans from the shared cache (no invalidation, not
+    /// counted as a re-tune) instead of re-running the search.
+    retune_epoch: AtomicUsize,
     drain_lock: Mutex<()>,
     drained: Condvar,
 }
@@ -92,6 +113,8 @@ impl ModelEntry {
             quota,
             in_flight: AtomicUsize::new(0),
             retired: AtomicBool::new(false),
+            retuning: AtomicBool::new(false),
+            retune_epoch: AtomicUsize::new(0),
             drain_lock: Mutex::new(()),
             drained: Condvar::new(),
         }
@@ -107,15 +130,36 @@ impl ModelEntry {
         self.info.get()
     }
 
-    pub fn spec(&self) -> ModelSpec {
-        self.info
-            .get()
-            .expect("model info is set before the entry can serve requests")
-            .spec
+    /// Geometry, once the probe (or first worker) has reported it. `None`
+    /// during the registration window — resolution maps that to the typed
+    /// [`ServeError::ModelNotReady`] instead of panicking on a submit that
+    /// races the probe.
+    pub fn spec(&self) -> Option<ModelSpec> {
+        self.info.get().map(|i| i.spec)
     }
 
     pub fn in_flight(&self) -> usize {
         self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Claim the exclusive right to run this model's drift re-tune; the
+    /// loser of a same-tick race gets `false` and must not search.
+    pub fn try_begin_retune(&self) -> bool {
+        !self.retuning.swap(true, Ordering::AcqRel)
+    }
+
+    pub fn end_retune(&self) {
+        self.retuning.store(false, Ordering::Release);
+    }
+
+    pub fn retune_epoch(&self) -> usize {
+        self.retune_epoch.load(Ordering::Acquire)
+    }
+
+    /// Record a completed re-tune; peers observe the bump and refresh
+    /// their detached plans from the shared cache.
+    pub fn note_retuned(&self) {
+        self.retune_epoch.fetch_add(1, Ordering::AcqRel);
     }
 
     /// Block until every claim on this entry has dropped — requests were
@@ -138,18 +182,24 @@ impl ModelEntry {
 /// registry lock (so it cannot race a retire) and dropped whenever the
 /// request is answered or discarded — including a worker's panic unwind.
 ///
+/// The claim snapshots the model's [`ModelSpec`] at creation, so readers
+/// on the flush path never touch the entry's `OnceLock` — an entry whose
+/// probe has not reported yet is rejected typed at resolve time and can
+/// never be claimed.
+///
 /// Public (with private fields) because every
 /// [`QueuedRequest`](super::queue::QueuedRequest) carries one; the
 /// queue-level property suite constructs detached claims via
 /// [`ModelClaim::detached`].
 pub struct ModelClaim {
     entry: Arc<ModelEntry>,
+    spec: ModelSpec,
 }
 
 impl ModelClaim {
-    fn new(entry: Arc<ModelEntry>) -> ModelClaim {
+    fn new(entry: Arc<ModelEntry>, spec: ModelSpec) -> ModelClaim {
         entry.in_flight.fetch_add(1, Ordering::AcqRel);
-        ModelClaim { entry }
+        ModelClaim { entry, spec }
     }
 
     /// Fixture for queue-level tests and benches: a claim with the given
@@ -162,16 +212,31 @@ impl ModelClaim {
             Arc::new(|| anyhow::bail!("detached claim has no factory")),
             None,
         ));
+        let spec = ModelSpec {
+            batch,
+            in_dim,
+            classes,
+        };
         entry.set_info(ModelInfo {
-            spec: ModelSpec {
-                batch,
-                in_dim,
-                classes,
-            },
+            spec,
             structures: Vec::new(),
             cache: None,
         });
-        ModelClaim::new(entry)
+        ModelClaim::new(entry, spec)
+    }
+
+    /// Another claim on the same concrete entry (same RAII accounting) —
+    /// lets the queue property suite model several aliases resolving to
+    /// one model without a registry.
+    #[doc(hidden)]
+    pub fn duplicate(&self) -> ModelClaim {
+        ModelClaim::new(Arc::clone(&self.entry), self.spec)
+    }
+
+    /// The claimed entry's current in-flight count (includes this claim).
+    #[doc(hidden)]
+    pub fn in_flight(&self) -> usize {
+        self.entry.in_flight()
     }
 
     pub fn id(&self) -> &str {
@@ -179,7 +244,7 @@ impl ModelClaim {
     }
 
     pub(crate) fn spec(&self) -> ModelSpec {
-        self.entry.spec()
+        self.spec
     }
 
     /// The resolved admission cap of the claimed model (max queued
@@ -219,10 +284,74 @@ pub struct UnregisterReport {
     pub evicted_plans: usize,
 }
 
-/// The registry proper: model id → entry, plus a generation counter the
-/// workers poll to keep their local instance sets in sync.
+/// One alias's routing state: the concrete target, plus optional canary
+/// and shadow legs. Lives under the registry lock — every mutation is
+/// atomic with respect to resolution.
+#[derive(Clone)]
+pub(crate) struct AliasRoute {
+    pub target: String,
+    /// `(model, percent)`: requests whose deterministic key lands below
+    /// `percent` (of 100) resolve to `model` instead of `target`.
+    pub canary: Option<(String, u8)>,
+    /// Requests are mirrored to this model on spare capacity; the mirror
+    /// never answers the client, only records logit divergence.
+    pub shadow: Option<String>,
+}
+
+/// Public snapshot of one alias's route (see
+/// [`super::InferenceServer::aliases`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AliasInfo {
+    pub alias: String,
+    pub target: String,
+    pub canary: Option<(String, u8)>,
+    pub shadow: Option<String>,
+}
+
+/// What a submit's target resolved to: the concrete claim (alias already
+/// unwrapped, canary leg already chosen) plus the routing context the
+/// worker needs for per-alias metrics and shadow divergence recording.
+pub(crate) struct Resolution {
+    pub claim: ModelClaim,
+    /// `(alias, canary)` when the submit named an alias: which alias, and
+    /// whether the canary leg was chosen for this request.
+    pub alias: Option<(String, bool)>,
+    /// A claim on the alias's shadow target, when one is configured and
+    /// currently resolvable (a retiring shadow target silently drops the
+    /// mirror — shadow traffic must never fail the primary).
+    pub shadow: Option<ModelClaim>,
+}
+
+/// Deterministic per-request routing key: FNV-1a over the alias name and
+/// the request payload's bit pattern. Replaying the same request against
+/// the same alias always lands on the same canary leg.
+pub(crate) fn request_key(x: &[f32], alias: &str) -> u64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = OFFSET;
+    for b in alias.as_bytes() {
+        h = (h ^ u64::from(*b)).wrapping_mul(PRIME);
+    }
+    for v in x {
+        for b in v.to_bits().to_le_bytes() {
+            h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+/// Entry map + alias table, guarded together: a resolve sees either the
+/// route before a flip or the route after it, never a mixture.
+struct RegistryState {
+    entries: HashMap<String, Arc<ModelEntry>>,
+    aliases: HashMap<String, AliasRoute>,
+}
+
+/// The registry proper: model id → entry, alias → route, plus a
+/// generation counter the workers poll to keep their local instance sets
+/// in sync. Alias names and model ids are disjoint namespaces.
 pub(crate) struct ModelRegistry {
-    state: Mutex<HashMap<String, Arc<ModelEntry>>>,
+    state: Mutex<RegistryState>,
     /// Bumped on register and on retire *completion*; a worker whose local
     /// generation matches has an exact mirror of the entry map.
     generation: AtomicUsize,
@@ -232,7 +361,10 @@ pub(crate) struct ModelRegistry {
 impl ModelRegistry {
     pub fn new(default_id: &str) -> ModelRegistry {
         ModelRegistry {
-            state: Mutex::new(HashMap::new()),
+            state: Mutex::new(RegistryState {
+                entries: HashMap::new(),
+                aliases: HashMap::new(),
+            }),
             generation: AtomicUsize::new(0),
             default_id: default_id.to_string(),
         }
@@ -248,8 +380,9 @@ impl ModelRegistry {
 
     /// Add a model. `info` is `None` only for the startup default model,
     /// whose first worker instance reports it before the server constructor
-    /// returns (no submit can race that window). `quota` is the resolved
-    /// per-model admission cap ([`super::ModelQuota::limit`]).
+    /// returns; a submit that races that window is rejected with the typed
+    /// [`ServeError::ModelNotReady`], never a panic. `quota` is the
+    /// resolved per-model admission cap ([`super::ModelQuota::limit`]).
     pub fn register(
         &self,
         id: &str,
@@ -259,31 +392,34 @@ impl ModelRegistry {
     ) -> anyhow::Result<Arc<ModelEntry>> {
         anyhow::ensure!(!id.is_empty(), "model id must be non-empty");
         let entry = {
-            let mut map = lock_recover(&self.state);
+            let mut st = lock_recover(&self.state);
             anyhow::ensure!(
-                !map.contains_key(id),
+                !st.entries.contains_key(id),
                 "model '{id}' is already registered"
+            );
+            anyhow::ensure!(
+                !st.aliases.contains_key(id),
+                "'{id}' is an alias; model ids and aliases are disjoint namespaces"
             );
             let entry = Arc::new(ModelEntry::new(id, factory, quota));
             if let Some(info) = info {
                 entry.set_info(info);
             }
-            map.insert(id.to_string(), Arc::clone(&entry));
+            st.entries.insert(id.to_string(), Arc::clone(&entry));
             entry
         };
         self.generation.fetch_add(1, Ordering::AcqRel);
         Ok(entry)
     }
 
-    /// Resolve a submit's target (`None` → the default id) to a claim.
-    /// Claim creation happens under the registry lock, so a request either
-    /// resolves before a retire begins (and is drained) or is rejected.
-    pub fn resolve(&self, id: Option<&str>) -> Result<ModelClaim, ServeError> {
-        let map = lock_recover(&self.state);
-        let id = id.unwrap_or(self.default_id.as_str());
-        match map.get(id) {
+    /// Claim a live concrete model inside an already-held state lock.
+    fn claim_in(st: &RegistryState, id: &str) -> Result<ModelClaim, ServeError> {
+        match st.entries.get(id) {
             Some(e) if !e.retired.load(Ordering::Acquire) => {
-                Ok(ModelClaim::new(Arc::clone(e)))
+                let spec = e.spec().ok_or_else(|| ServeError::ModelNotReady {
+                    model: id.to_string(),
+                })?;
+                Ok(ModelClaim::new(Arc::clone(e), spec))
             }
             _ => Err(ServeError::UnknownModel {
                 model: id.to_string(),
@@ -291,23 +427,253 @@ impl ModelRegistry {
         }
     }
 
+    /// Resolve a submit's target (`None` → the default id) to a concrete
+    /// claim, unwrapping aliases: the canary leg is chosen by `key`
+    /// (deterministic per request), and a configured shadow target yields
+    /// a second claim for the mirror. Resolution happens entirely under
+    /// the registry lock, so a request either resolves before a retire or
+    /// flip begins (and is drained under the old route) or sees the new
+    /// route — never a half-flipped one.
+    pub fn resolve_request(&self, id: Option<&str>, key: u64) -> Result<Resolution, ServeError> {
+        let st = lock_recover(&self.state);
+        let name = id.unwrap_or(self.default_id.as_str());
+        let Some(route) = st.aliases.get(name) else {
+            return Ok(Resolution {
+                claim: Self::claim_in(&st, name)?,
+                alias: None,
+                shadow: None,
+            });
+        };
+        let route = route.clone();
+        let canary = route
+            .canary
+            .as_ref()
+            .is_some_and(|(_, pct)| key % 100 < u64::from(*pct));
+        let target = if canary {
+            route.canary.as_ref().map(|(m, _)| m.as_str()).unwrap_or(&route.target)
+        } else {
+            route.target.as_str()
+        };
+        let claim = Self::claim_in(&st, target)?;
+        // The mirror is best-effort by design: a shadow target that is
+        // retiring or mid-probe drops this request's mirror, never the
+        // primary.
+        let shadow = route
+            .shadow
+            .as_deref()
+            .and_then(|s| Self::claim_in(&st, s).ok());
+        Ok(Resolution {
+            claim,
+            alias: Some((name.to_string(), canary)),
+            shadow,
+        })
+    }
+
+    /// Alias-aware single-claim resolution (primary leg only); the submit
+    /// path uses [`ModelRegistry::resolve_request`].
+    pub fn resolve(&self, id: Option<&str>) -> Result<ModelClaim, ServeError> {
+        let st = lock_recover(&self.state);
+        let name = id.unwrap_or(self.default_id.as_str());
+        let target = match st.aliases.get(name) {
+            Some(route) => route.target.clone(),
+            None => name.to_string(),
+        };
+        Self::claim_in(&st, &target)
+    }
+
+    /// Validate `target` as an alias leg inside the lock: registered, not
+    /// retiring, probe reported; when `like` is given (the alias's current
+    /// primary spec), the leg must serve the same request geometry.
+    fn check_target(
+        st: &RegistryState,
+        alias: &str,
+        target: &str,
+        like: Option<ModelSpec>,
+    ) -> anyhow::Result<ModelSpec> {
+        let entry = st.entries.get(target).ok_or_else(|| {
+            anyhow::anyhow!("alias '{alias}': target model '{target}' is not registered")
+        })?;
+        anyhow::ensure!(
+            !entry.retired.load(Ordering::Acquire),
+            "alias '{alias}': target model '{target}' is being retired"
+        );
+        let spec = entry.spec().ok_or_else(|| {
+            anyhow::anyhow!("alias '{alias}': target model '{target}' has not reported its geometry yet")
+        })?;
+        if let Some(like) = like {
+            anyhow::ensure!(
+                spec.in_dim == like.in_dim && spec.classes == like.classes,
+                "alias '{alias}': '{target}' serves {}→{} but the current target serves {}→{}",
+                spec.in_dim,
+                spec.classes,
+                like.in_dim,
+                like.classes
+            );
+        }
+        Ok(spec)
+    }
+
+    /// Create `alias` → `target`, or atomically re-point an existing
+    /// alias. Re-pointing clears any canary/shadow staging: the flip ends
+    /// the rollout experiment it belonged to.
+    pub fn set_alias(&self, alias: &str, target: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(!alias.is_empty(), "alias must be non-empty");
+        let mut st = lock_recover(&self.state);
+        anyhow::ensure!(
+            !st.entries.contains_key(alias),
+            "'{alias}' is a registered model id; model ids and aliases are disjoint namespaces"
+        );
+        Self::check_target(&st, alias, target, None)?;
+        st.aliases.insert(
+            alias.to_string(),
+            AliasRoute {
+                target: target.to_string(),
+                canary: None,
+                shadow: None,
+            },
+        );
+        Ok(())
+    }
+
+    /// The atomic flip: re-point an *existing* alias at `target` and clear
+    /// canary/shadow. The new target must serve the old target's request
+    /// geometry — clients submitting through the alias never see a width
+    /// change mid-rollout.
+    pub fn promote(&self, alias: &str, target: &str) -> anyhow::Result<()> {
+        let mut st = lock_recover(&self.state);
+        let like = st
+            .aliases
+            .get(alias)
+            .ok_or_else(|| anyhow::anyhow!("'{alias}' is not an alias"))?
+            .target
+            .clone();
+        let like_spec = st.entries.get(&like).and_then(|e| e.spec());
+        Self::check_target(&st, alias, target, like_spec)?;
+        let route = st.aliases.get_mut(alias).expect("checked above");
+        route.target = target.to_string();
+        route.canary = None;
+        route.shadow = None;
+        Ok(())
+    }
+
+    pub fn remove_alias(&self, alias: &str) -> anyhow::Result<()> {
+        let mut st = lock_recover(&self.state);
+        anyhow::ensure!(
+            st.aliases.remove(alias).is_some(),
+            "'{alias}' is not an alias"
+        );
+        Ok(())
+    }
+
+    /// Route `percent`% (1–100) of the alias's traffic to `target`,
+    /// selected by the deterministic per-request key.
+    pub fn set_canary(&self, alias: &str, target: &str, percent: u8) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (1..=100).contains(&percent),
+            "canary percent must be in 1..=100, got {percent}"
+        );
+        let mut st = lock_recover(&self.state);
+        let primary = st
+            .aliases
+            .get(alias)
+            .ok_or_else(|| anyhow::anyhow!("'{alias}' is not an alias"))?
+            .target
+            .clone();
+        let like = st.entries.get(&primary).and_then(|e| e.spec());
+        Self::check_target(&st, alias, target, like)?;
+        st.aliases.get_mut(alias).expect("checked above").canary =
+            Some((target.to_string(), percent));
+        Ok(())
+    }
+
+    pub fn clear_canary(&self, alias: &str) -> anyhow::Result<()> {
+        let mut st = lock_recover(&self.state);
+        let route = st
+            .aliases
+            .get_mut(alias)
+            .ok_or_else(|| anyhow::anyhow!("'{alias}' is not an alias"))?;
+        route.canary = None;
+        Ok(())
+    }
+
+    /// Mirror the alias's requests to `target` on spare capacity; the
+    /// mirror records logit divergence and never answers the client.
+    pub fn set_shadow(&self, alias: &str, target: &str) -> anyhow::Result<()> {
+        let mut st = lock_recover(&self.state);
+        let primary = st
+            .aliases
+            .get(alias)
+            .ok_or_else(|| anyhow::anyhow!("'{alias}' is not an alias"))?
+            .target
+            .clone();
+        let like = st.entries.get(&primary).and_then(|e| e.spec());
+        Self::check_target(&st, alias, target, like)?;
+        st.aliases.get_mut(alias).expect("checked above").shadow = Some(target.to_string());
+        Ok(())
+    }
+
+    pub fn clear_shadow(&self, alias: &str) -> anyhow::Result<()> {
+        let mut st = lock_recover(&self.state);
+        let route = st
+            .aliases
+            .get_mut(alias)
+            .ok_or_else(|| anyhow::anyhow!("'{alias}' is not an alias"))?;
+        route.shadow = None;
+        Ok(())
+    }
+
+    /// Every alias's current route, sorted by alias name.
+    pub fn aliases(&self) -> Vec<AliasInfo> {
+        let st = lock_recover(&self.state);
+        let mut out: Vec<AliasInfo> = st
+            .aliases
+            .iter()
+            .map(|(alias, r)| AliasInfo {
+                alias: alias.clone(),
+                target: r.target.clone(),
+                canary: r.canary.clone(),
+                shadow: r.shadow.clone(),
+            })
+            .collect();
+        out.sort_by(|a, b| a.alias.cmp(&b.alias));
+        out
+    }
+
+    /// The concrete model an alias currently targets, if `alias` is one.
+    pub fn alias_target(&self, alias: &str) -> Option<String> {
+        lock_recover(&self.state)
+            .aliases
+            .get(alias)
+            .map(|r| r.target.clone())
+    }
+
     /// Whether `id` currently has an entry (live or draining). Used to
     /// fail duplicate registrations *before* the expensive factory probe —
     /// a probe for a doomed registration would warm orphan plan namespaces
     /// into the shared cache that no entry (and so no unregister) owns.
     pub fn is_registered(&self, id: &str) -> bool {
-        lock_recover(&self.state).contains_key(id)
+        lock_recover(&self.state).entries.contains_key(id)
+    }
+
+    /// The entry for `id`, live or draining — the re-tune guard's lookup.
+    pub fn entry(&self, id: &str) -> Option<Arc<ModelEntry>> {
+        lock_recover(&self.state).entries.get(id).map(Arc::clone)
     }
 
     /// Every entry, including retired-but-draining ones (workers must keep
     /// serving those until the drain completes).
     pub fn snapshot(&self) -> Vec<Arc<ModelEntry>> {
-        lock_recover(&self.state).values().map(Arc::clone).collect()
+        lock_recover(&self.state)
+            .entries
+            .values()
+            .map(Arc::clone)
+            .collect()
     }
 
     /// Live (non-retired) model ids, sorted.
     pub fn models(&self) -> Vec<String> {
         let mut ids: Vec<String> = lock_recover(&self.state)
+            .entries
             .values()
             .filter(|e| !e.retired.load(Ordering::Acquire))
             .map(|e| e.id.clone())
@@ -317,10 +683,13 @@ impl ModelRegistry {
     }
 
     /// Phase 1 of unregistration: stop new submits resolving to `id`.
-    /// Queued requests keep draining through the workers.
+    /// Queued requests keep draining through the workers. An alias still
+    /// pointing at `id` keeps resolving typed (`UnknownModel`), never a
+    /// panic — `rollout` flips aliases away before retiring.
     pub fn begin_retire(&self, id: &str) -> anyhow::Result<Arc<ModelEntry>> {
-        let map = lock_recover(&self.state);
-        let entry = map
+        let st = lock_recover(&self.state);
+        let entry = st
+            .entries
             .get(id)
             .ok_or_else(|| anyhow::anyhow!("model '{id}' is not registered"))?;
         anyhow::ensure!(
@@ -335,9 +704,10 @@ impl ModelRegistry {
     /// no surviving model still claims.
     pub fn finish_retire(&self, entry: &Arc<ModelEntry>) -> UnregisterReport {
         let live: Vec<u64> = {
-            let mut map = lock_recover(&self.state);
-            map.remove(&entry.id);
-            map.values()
+            let mut st = lock_recover(&self.state);
+            st.entries.remove(&entry.id);
+            st.entries
+                .values()
                 .filter_map(|e| e.info())
                 .flat_map(|i| i.structures.iter().copied())
                 .collect()
@@ -404,6 +774,44 @@ mod tests {
             Err(ServeError::UnknownModel { model }) => assert_eq!(model, "nope"),
             other => panic!("expected UnknownModel, got {:?}", other.map(|_| ())),
         }
+    }
+
+    #[test]
+    fn resolving_before_the_probe_reports_is_typed_not_a_panic() {
+        // Regression: a submit racing a registration whose probe had not
+        // set `info` yet used to panic in `ModelEntry::spec()`; it must be
+        // the typed ModelNotReady instead.
+        let r = Arc::new(ModelRegistry::new(DEFAULT_MODEL));
+        let entry = r.register("late", noop_factory(), None, None).unwrap();
+        match r.resolve(Some("late")) {
+            Err(ServeError::ModelNotReady { model }) => assert_eq!(model, "late"),
+            other => panic!("expected ModelNotReady, got {:?}", other.map(|_| ())),
+        }
+        // Hammer resolves from another thread across the set_info window:
+        // every outcome is a claim or a typed error, never a panic.
+        let racer = {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || {
+                let mut saw_not_ready = false;
+                let mut saw_ok = false;
+                for _ in 0..10_000 {
+                    match r.resolve(Some("late")) {
+                        Ok(c) => {
+                            assert_eq!(c.spec().batch, 2);
+                            saw_ok = true;
+                        }
+                        Err(ServeError::ModelNotReady { .. }) => saw_not_ready = true,
+                        Err(e) => panic!("unexpected error: {e:?}"),
+                    }
+                }
+                (saw_not_ready, saw_ok)
+            })
+        };
+        std::thread::yield_now();
+        entry.set_info(info(2, vec![]));
+        let (_, saw_ok) = racer.join().unwrap();
+        assert!(saw_ok, "after set_info every resolve succeeds");
+        assert!(r.resolve(Some("late")).is_ok());
     }
 
     #[test]
@@ -490,5 +898,126 @@ mod tests {
         assert_eq!(report.evicted_plans, 1);
         assert_eq!(cache.structure_plan_count(own.structure_hash()), 0);
         assert_eq!(cache.structure_plan_count(shared.structure_hash()), 1);
+    }
+
+    #[test]
+    fn alias_flip_is_atomic_and_namespaces_are_disjoint() {
+        let r = ModelRegistry::new(DEFAULT_MODEL);
+        r.register("v1", noop_factory(), Some(info(8, vec![])), None).unwrap();
+        r.register("v2", noop_factory(), Some(info(4, vec![])), None).unwrap();
+        assert!(r.set_alias("prod", "ghost").is_err(), "unregistered target");
+        r.set_alias("prod", "v1").unwrap();
+        assert_eq!(r.alias_target("prod").as_deref(), Some("v1"));
+        // Disjoint namespaces, both directions.
+        assert!(r.set_alias("v2", "v1").is_err(), "alias may not shadow a model id");
+        assert!(
+            r.register("prod", noop_factory(), Some(info(2, vec![])), None).is_err(),
+            "model id may not shadow an alias"
+        );
+        // Alias resolution pins the concrete model.
+        let res = r.resolve_request(Some("prod"), 42).unwrap();
+        assert_eq!(res.claim.id(), "v1");
+        assert_eq!(res.alias, Some(("prod".to_string(), false)));
+        assert!(res.shadow.is_none());
+        // Flip; canary/shadow staging (none here) is reset, resolves move.
+        r.promote("prod", "v2").unwrap();
+        assert_eq!(r.resolve_request(Some("prod"), 42).unwrap().claim.id(), "v2");
+        assert_eq!(r.resolve(Some("prod")).unwrap().id(), "v2");
+        r.remove_alias("prod").unwrap();
+        assert!(r.resolve(Some("prod")).is_err());
+        assert!(r.remove_alias("prod").is_err());
+    }
+
+    #[test]
+    fn canary_split_is_deterministic_in_the_request_key() {
+        let r = ModelRegistry::new(DEFAULT_MODEL);
+        r.register("v1", noop_factory(), Some(info(8, vec![])), None).unwrap();
+        r.register("v2", noop_factory(), Some(info(8, vec![])), None).unwrap();
+        r.set_alias("prod", "v1").unwrap();
+        assert!(r.set_canary("prod", "v2", 0).is_err(), "percent 0 rejected");
+        assert!(r.set_canary("prod", "v2", 101).is_err());
+        r.set_canary("prod", "v2", 30).unwrap();
+        for key in 0..200u64 {
+            let res = r.resolve_request(Some("prod"), key).unwrap();
+            let want_canary = key % 100 < 30;
+            assert_eq!(res.claim.id(), if want_canary { "v2" } else { "v1" });
+            assert_eq!(res.alias, Some(("prod".to_string(), want_canary)));
+            // Replay: the same key always lands on the same leg.
+            let replay = r.resolve_request(Some("prod"), key).unwrap();
+            assert_eq!(replay.claim.id(), res.claim.id());
+        }
+        // The request key itself is a pure function of payload + alias.
+        let x = [0.25f32, -1.5, 3.0];
+        assert_eq!(request_key(&x, "prod"), request_key(&x, "prod"));
+        assert_ne!(request_key(&x, "prod"), request_key(&x, "staging"));
+        r.clear_canary("prod").unwrap();
+        assert_eq!(r.resolve_request(Some("prod"), 3).unwrap().claim.id(), "v1");
+    }
+
+    #[test]
+    fn shadow_claims_ride_along_and_never_fail_the_primary() {
+        let r = ModelRegistry::new(DEFAULT_MODEL);
+        r.register("v1", noop_factory(), Some(info(8, vec![])), None).unwrap();
+        r.register("v2", noop_factory(), Some(info(8, vec![])), None).unwrap();
+        r.set_alias("prod", "v1").unwrap();
+        r.set_shadow("prod", "v2").unwrap();
+        let res = r.resolve_request(Some("prod"), 7).unwrap();
+        assert_eq!(res.claim.id(), "v1");
+        assert_eq!(res.shadow.as_ref().map(|c| c.id()), Some("v2"));
+        drop(res);
+        // Retiring the shadow target drops the mirror, not the primary.
+        r.begin_retire("v2").unwrap();
+        let res = r.resolve_request(Some("prod"), 7).unwrap();
+        assert_eq!(res.claim.id(), "v1");
+        assert!(res.shadow.is_none(), "retiring shadow target is skipped");
+        // A promote to the still-live geometry-matched canary-style target
+        // would now fail (v2 is retiring) — the flip validates its target.
+        assert!(r.promote("prod", "v2").is_err());
+    }
+
+    #[test]
+    fn alias_legs_must_match_the_primary_geometry() {
+        let r = ModelRegistry::new(DEFAULT_MODEL);
+        r.register("v1", noop_factory(), Some(info(8, vec![])), None).unwrap();
+        let wide = ModelInfo {
+            spec: ModelSpec {
+                batch: 8,
+                in_dim: 9,
+                classes: 2,
+            },
+            structures: vec![],
+            cache: None,
+        };
+        r.register("wide", noop_factory(), Some(wide), None).unwrap();
+        r.set_alias("prod", "v1").unwrap();
+        assert!(r.set_canary("prod", "wide", 10).is_err(), "in_dim mismatch");
+        assert!(r.set_shadow("prod", "wide").is_err());
+        assert!(r.promote("prod", "wide").is_err());
+        assert_eq!(r.alias_target("prod").as_deref(), Some("v1"));
+    }
+
+    #[test]
+    fn retune_guard_admits_exactly_one_worker_per_drift_event() {
+        let r = ModelRegistry::new(DEFAULT_MODEL);
+        let entry = r.register("m", noop_factory(), Some(info(2, vec![])), None).unwrap();
+        assert_eq!(entry.retune_epoch(), 0);
+        assert!(entry.try_begin_retune(), "first claimant wins");
+        assert!(!entry.try_begin_retune(), "second claimant must skip");
+        entry.note_retuned();
+        entry.end_retune();
+        assert_eq!(entry.retune_epoch(), 1, "completed re-tune bumps the epoch");
+        assert!(entry.try_begin_retune(), "guard is reusable after release");
+        entry.end_retune();
+    }
+
+    #[test]
+    fn duplicate_claims_share_one_entry_accounting() {
+        let r = ModelRegistry::new(DEFAULT_MODEL);
+        r.register("m", noop_factory(), Some(info(2, vec![])), None).unwrap();
+        let c1 = r.resolve(Some("m")).unwrap();
+        let c2 = c1.duplicate();
+        assert_eq!(c1.in_flight(), 2, "duplicate charges the same concrete entry");
+        drop(c2);
+        assert_eq!(c1.in_flight(), 1);
     }
 }

@@ -36,7 +36,7 @@
 //! visible in the stats instead of silently inflating throughput.
 
 use super::backend::BatchModel;
-use super::queue::{ModelPop, QueuedRequest, RequestQueue};
+use super::queue::{ModelPop, QueuedRequest, RequestQueue, RouteTag};
 use super::registry::ModelRegistry;
 use super::ServeError;
 use crate::coordinator::metrics::ServingMetrics;
@@ -91,6 +91,11 @@ pub(crate) struct ReadyReport {
 struct WorkerModel {
     model: Box<dyn BatchModel>,
     x: Vec<f32>,
+    /// The registry re-tune epoch this instance's plans reflect. A lag
+    /// behind the entry's counter means a pool peer completed a drift
+    /// re-tune: this worker refreshes its detached plans from the shared
+    /// cache instead of running (and double-counting) the search itself.
+    retune_epoch: usize,
 }
 
 impl WorkerModel {
@@ -99,6 +104,7 @@ impl WorkerModel {
         WorkerModel {
             model,
             x: vec![0.0; len],
+            retune_epoch: 0,
         }
     }
 }
@@ -132,7 +138,9 @@ impl ModelSet {
                     cache: model.plan_cache(),
                 });
             }
-            self.models.insert(entry.id.clone(), Ok(WorkerModel::new(model)));
+            let mut wm = WorkerModel::new(model);
+            wm.retune_epoch = entry.retune_epoch();
+            self.models.insert(entry.id.clone(), Ok(wm));
         }
         report.ok_or_else(|| anyhow::anyhow!("default model is not registered at startup"))
     }
@@ -155,9 +163,15 @@ impl ModelSet {
             if self.models.contains_key(&entry.id) {
                 continue;
             }
-            let built = (entry.factory)().map(WorkerModel::new).map_err(|e| {
-                format!("model '{}' failed to build on this worker: {e:#}", entry.id)
-            });
+            let built = (entry.factory)()
+                .map(|m| {
+                    let mut wm = WorkerModel::new(m);
+                    wm.retune_epoch = entry.retune_epoch();
+                    wm
+                })
+                .map_err(|e| {
+                    format!("model '{}' failed to build on this worker: {e:#}", entry.id)
+                });
             self.models.insert(entry.id.clone(), built);
         }
     }
@@ -258,12 +272,20 @@ fn flush(set: &mut ModelSet, ctx: &WorkerContext, model_id: &str, pending: &mut 
     let now = Instant::now();
     pending.retain(|req| {
         if req.deadline.is_some_and(|dl| now >= dl) {
-            ctx.metrics.record_rejected_deadline();
-            ctx.metrics.record_model_rejected_deadline(model_id);
-            let waited = req.enqueued.elapsed();
-            let _ = req
-                .respond
-                .send(Err(ServeError::DeadlineExceeded { waited }));
+            // A shadow mirror that misses its window is dropped divergence
+            // coverage, never a client-facing failure: the primary leg
+            // answers (or already has), so the rejection counters the
+            // rollout invariants assert zero on must stay untouched.
+            if let Some(RouteTag::Shadow { alias, .. }) = &req.route {
+                ctx.metrics.record_shadow_dropped(alias);
+            } else {
+                ctx.metrics.record_rejected_deadline();
+                ctx.metrics.record_model_rejected_deadline(model_id);
+                let waited = req.enqueued.elapsed();
+                let _ = req
+                    .respond
+                    .send(Err(ServeError::DeadlineExceeded { waited }));
+            }
             false
         } else if req.x.len() != spec.in_dim {
             let _ = req.respond.send(Err(ServeError::WrongInputWidth {
@@ -317,9 +339,35 @@ fn flush(set: &mut ModelSet, ctx: &WorkerContext, model_id: &str, pending: &mut 
             ctx.metrics.record_flush(ctx.id, pending.len(), batch);
             ctx.metrics.record_model_flush(model_id, pending.len(), batch);
             for (s, req) in pending.drain(..).enumerate() {
-                let row = logits[s * classes..(s + 1) * classes].to_vec();
-                ctx.metrics.record_latency(ctx.id, req.enqueued.elapsed());
-                let _ = req.respond.send(Ok(row));
+                let row = &logits[s * classes..(s + 1) * classes];
+                match &req.route {
+                    // The mirror's only output is its divergence deposit:
+                    // it never answers a client and never files client
+                    // latency (it ran at Low priority on spare capacity —
+                    // its wait time is not an SLO sample).
+                    Some(RouteTag::Shadow { alias, pair }) => {
+                        if let Some(d) = pair.record(true, row) {
+                            ctx.metrics.record_shadow_divergence(alias, d);
+                        }
+                        continue;
+                    }
+                    Some(RouteTag::Alias {
+                        alias,
+                        canary,
+                        shadow,
+                    }) => {
+                        let lat = req.enqueued.elapsed();
+                        ctx.metrics.record_latency(ctx.id, lat);
+                        ctx.metrics.record_alias_latency(alias, *canary, lat);
+                        if let Some(pair) = shadow {
+                            if let Some(d) = pair.record(false, row) {
+                                ctx.metrics.record_shadow_divergence(alias, d);
+                            }
+                        }
+                    }
+                    None => ctx.metrics.record_latency(ctx.id, req.enqueued.elapsed()),
+                }
+                let _ = req.respond.send(Ok(row.to_vec()));
             }
             // Publish the model's tuned-schedule gauge (winning params,
             // roofline fraction, achieved-throughput EWMA) so `/stats`
@@ -345,21 +393,63 @@ fn flush(set: &mut ModelSet, ctx: &WorkerContext, model_id: &str, pending: &mut 
 /// waits on a schedule search; the model keeps answering its requests
 /// from the old plans right up to the in-place swap. A failed re-tune is
 /// skipped silently and retried on a later tick.
+///
+/// Pool coordination: the registry entry's re-tune guard admits exactly
+/// one worker per drift event. The search invalidates the shared
+/// TuneCache entry and evicts the plan namespace — two workers tripping
+/// it in the same idle tick would double both and double-count
+/// [`ModelStats::retunes`](crate::coordinator::metrics::ModelStats).
+/// Losers skip this tick; a worker whose local epoch lags a peer's
+/// *completed* re-tune refreshes its detached plans from the shared
+/// cache instead ([`BatchModel::refresh`] — no search, no invalidation,
+/// not counted). A model with no registry entry (drained away, or a
+/// registry-less test fixture) falls back to the old ungated behavior.
 fn maybe_retune(set: &mut ModelSet, ctx: &WorkerContext) {
     let Some(threshold) = ctx.retune_threshold else {
         return;
     };
     for (id, wm) in set.models.iter_mut() {
         let Ok(wm) = wm else { continue };
+        let entry = ctx.registry.entry(id);
+        if let Some(entry) = &entry {
+            let epoch = entry.retune_epoch();
+            if wm.retune_epoch != epoch {
+                // A pool peer re-tuned this model: adopt its fresh plans.
+                if wm.model.refresh().is_ok() {
+                    wm.retune_epoch = epoch;
+                    ctx.metrics.set_model_tuned(id, wm.model.tuned_status());
+                }
+                continue;
+            }
+        }
         let Some(drift) = wm.model.drift() else {
             continue; // untuned backend, or not enough flush samples yet
         };
         if drift >= threshold {
             continue;
         }
+        if let Some(entry) = &entry {
+            if !entry.try_begin_retune() {
+                continue; // a peer is mid-search for this same drift event
+            }
+            if entry.retune_epoch() != wm.retune_epoch {
+                // The peer finished between our epoch check and the guard
+                // claim: this drift event is already handled — refresh on
+                // the next tick instead of searching again.
+                entry.end_retune();
+                continue;
+            }
+        }
         if wm.model.retune().is_ok() {
             ctx.metrics.record_model_retune(id);
             ctx.metrics.set_model_tuned(id, wm.model.tuned_status());
+            if let Some(entry) = &entry {
+                entry.note_retuned();
+                wm.retune_epoch = entry.retune_epoch();
+            }
+        }
+        if let Some(entry) = &entry {
+            entry.end_retune();
         }
     }
 }
@@ -380,8 +470,14 @@ fn fail_batch(
 }
 
 /// Reject one expired request with the typed error and counters; it never
-/// reaches [`BatchModel::forward`] and never occupies a batch slot.
+/// reaches [`BatchModel::forward`] and never occupies a batch slot. An
+/// expired shadow mirror is dropped coverage, not a client failure — it
+/// files `shadow_dropped` instead of the rejection counters.
 fn reject_expired(ctx: &WorkerContext, req: QueuedRequest) {
+    if let Some(RouteTag::Shadow { alias, .. }) = &req.route {
+        ctx.metrics.record_shadow_dropped(alias);
+        return;
+    }
     ctx.metrics.record_rejected_deadline();
     ctx.metrics.record_model_rejected_deadline(req.claim.id());
     let _ = req.respond.send(Err(ServeError::DeadlineExceeded {
@@ -511,6 +607,7 @@ mod tests {
                 deadline: deadline.map(|d| now + d),
                 respond: tx,
                 claim: ModelClaim::detached(model, batch, 1, 1),
+                route: None,
             },
             Priority::Normal,
             None,
@@ -746,6 +843,272 @@ mod tests {
         ctx.retune_threshold = None;
         maybe_retune(&mut set, &ctx);
         assert_eq!(metrics.retunes(), 1);
+    }
+
+    /// Drifted model whose `retune` blocks on a gate, so a test can hold
+    /// worker A *inside* the search while worker B's idle tick runs.
+    struct GatedDriftModel {
+        drift: Option<f64>,
+        retunes: Arc<AtomicUsize>,
+        refreshes: Arc<AtomicUsize>,
+        /// `(entered, release)`: `retune` signals `entered` then blocks on
+        /// `release`. `None` never blocks.
+        gate: Option<(mpsc::Sender<()>, mpsc::Receiver<()>)>,
+    }
+
+    impl BatchModel for GatedDriftModel {
+        fn batch(&self) -> usize {
+            1
+        }
+        fn in_dim(&self) -> usize {
+            1
+        }
+        fn classes(&self) -> usize {
+            1
+        }
+        fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+            Ok(x.to_vec())
+        }
+        fn drift(&self) -> Option<f64> {
+            self.drift
+        }
+        fn retune(&mut self) -> anyhow::Result<()> {
+            if let Some((entered, release)) = &self.gate {
+                let _ = entered.send(());
+                let _ = release.recv();
+            }
+            self.retunes.fetch_add(1, Ordering::SeqCst);
+            self.drift = Some(1.0);
+            Ok(())
+        }
+        fn refresh(&mut self) -> anyhow::Result<()> {
+            self.refreshes.fetch_add(1, Ordering::SeqCst);
+            self.drift = Some(1.0);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn same_tick_drift_on_two_workers_retunes_once_and_peer_refreshes() {
+        use crate::coordinator::serving::registry::{ModelInfo, ModelRegistry, ModelSpec};
+
+        // The regression this covers: both idle workers see model "m"
+        // drifted in the same tick; without the registry-level guard both
+        // ran the search, double-invalidating the TuneCache entry,
+        // double-evicting the plan namespace and double-counting
+        // `ModelStats::retunes`.
+        let registry = Arc::new(ModelRegistry::new("m"));
+        registry
+            .register(
+                "m",
+                Arc::new(|| anyhow::bail!("test models are injected, not built")),
+                Some(ModelInfo {
+                    spec: ModelSpec {
+                        batch: 1,
+                        in_dim: 1,
+                        classes: 1,
+                    },
+                    structures: Vec::new(),
+                    cache: None,
+                }),
+                None,
+            )
+            .unwrap();
+        let queue = Arc::new(RequestQueue::new(4, None));
+        let metrics = Arc::new(ServingMetrics::new(2));
+        let live = Arc::new(AtomicUsize::new(2));
+        let mk_ctx = |id: usize| WorkerContext {
+            id,
+            queue: Arc::clone(&queue),
+            metrics: Arc::clone(&metrics),
+            registry: Arc::clone(&registry),
+            max_wait: Duration::from_millis(1),
+            retune_threshold: Some(0.7),
+            live: Arc::clone(&live),
+        };
+
+        let (entered_tx, entered_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel();
+        let a_retunes = Arc::new(AtomicUsize::new(0));
+        let a_refreshes = Arc::new(AtomicUsize::new(0));
+        let b_retunes = Arc::new(AtomicUsize::new(0));
+        let b_refreshes = Arc::new(AtomicUsize::new(0));
+        let mut set_a = ModelSet::with_models(
+            vec![(
+                "m",
+                Box::new(GatedDriftModel {
+                    drift: Some(0.4),
+                    retunes: Arc::clone(&a_retunes),
+                    refreshes: Arc::clone(&a_refreshes),
+                    gate: Some((entered_tx, release_rx)),
+                }) as Box<dyn BatchModel>,
+            )],
+            registry.generation(),
+        );
+        let mut set_b = ModelSet::with_models(
+            vec![(
+                "m",
+                Box::new(GatedDriftModel {
+                    drift: Some(0.4),
+                    retunes: Arc::clone(&b_retunes),
+                    refreshes: Arc::clone(&b_refreshes),
+                    gate: None,
+                }) as Box<dyn BatchModel>,
+            )],
+            registry.generation(),
+        );
+
+        // Worker A trips the re-tune and blocks inside the search.
+        let ctx_a = mk_ctx(0);
+        let worker_a = std::thread::spawn(move || {
+            maybe_retune(&mut set_a, &ctx_a);
+            ctx_a.metrics.retunes()
+        });
+        entered_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("worker A must enter its re-tune");
+        // Worker B's idle tick lands while A holds the guard: it must
+        // neither search nor count.
+        let ctx_b = mk_ctx(1);
+        maybe_retune(&mut set_b, &ctx_b);
+        assert_eq!(b_retunes.load(Ordering::SeqCst), 0, "guard loser must not search");
+        assert_eq!(metrics.retunes(), 0, "nothing completed yet");
+        // Release A; exactly one re-tune lands.
+        release_tx.send(()).unwrap();
+        assert_eq!(worker_a.join().unwrap(), 1);
+        assert_eq!(a_retunes.load(Ordering::SeqCst), 1);
+        assert_eq!(metrics.retunes(), 1, "one drift event, one counted re-tune");
+        assert_eq!(metrics.model_stats()[0].retunes, 1);
+        // B's next tick observes the bumped epoch and refreshes from the
+        // shared cache — still no second search, still one counted event.
+        maybe_retune(&mut set_b, &ctx_b);
+        assert_eq!(b_refreshes.load(Ordering::SeqCst), 1, "peer adopts fresh plans");
+        assert_eq!(b_retunes.load(Ordering::SeqCst), 0);
+        assert_eq!(metrics.retunes(), 1);
+        // And once refreshed, B is quiescent.
+        maybe_retune(&mut set_b, &ctx_b);
+        assert_eq!(b_refreshes.load(Ordering::SeqCst), 1);
+        queue.close();
+    }
+
+    /// Primary leg answers the client and the mirror leg only deposits
+    /// divergence — never a response, never a latency sample, and an
+    /// expired mirror drops coverage instead of bumping rejections.
+    #[test]
+    fn shadow_mirror_records_divergence_and_never_answers() {
+        use crate::coordinator::serving::queue::ShadowPair;
+
+        /// Logits = 2 × input: diverges from IdentityModel by |x|.
+        struct DoublingModel;
+        impl BatchModel for DoublingModel {
+            fn batch(&self) -> usize {
+                1
+            }
+            fn in_dim(&self) -> usize {
+                1
+            }
+            fn classes(&self) -> usize {
+                1
+            }
+            fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+                Ok(x.iter().map(|v| v * 2.0).collect())
+            }
+        }
+
+        let queue = queue();
+        let metrics = Arc::new(ServingMetrics::new(1));
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut set = ModelSet::with_models(
+            vec![
+                (
+                    "v1",
+                    Box::new(IdentityModel {
+                        batch: 1,
+                        seen: Arc::clone(&seen),
+                    }) as Box<dyn BatchModel>,
+                ),
+                ("v2", Box::new(DoublingModel) as Box<dyn BatchModel>),
+            ],
+            0,
+        );
+        let pair = ShadowPair::new();
+        let now = Instant::now();
+        let (tx, rx_primary) = mpsc::channel();
+        queue
+            .push(
+                QueuedRequest {
+                    x: vec![3.0],
+                    enqueued: now,
+                    deadline: None,
+                    respond: tx,
+                    claim: ModelClaim::detached("v1", 1, 1, 1),
+                    route: Some(RouteTag::Alias {
+                        alias: "prod".to_string(),
+                        canary: false,
+                        shadow: Some(Arc::clone(&pair)),
+                    }),
+                },
+                Priority::Normal,
+                None,
+            )
+            .unwrap();
+        let (tx_mirror, rx_mirror) = mpsc::channel();
+        queue
+            .push(
+                QueuedRequest {
+                    x: vec![3.0],
+                    enqueued: now,
+                    deadline: None,
+                    respond: tx_mirror,
+                    claim: ModelClaim::detached("v2", 1, 1, 1),
+                    route: Some(RouteTag::Shadow {
+                        alias: "prod".to_string(),
+                        pair: Arc::clone(&pair),
+                    }),
+                },
+                Priority::Low,
+                None,
+            )
+            .unwrap();
+        // A second mirror whose deadline already lapsed: dropped coverage,
+        // not a rejection.
+        let (tx_late, rx_late) = mpsc::channel();
+        queue
+            .push(
+                QueuedRequest {
+                    x: vec![4.0],
+                    enqueued: now,
+                    deadline: Some(now),
+                    respond: tx_late,
+                    claim: ModelClaim::detached("v2", 1, 1, 1),
+                    route: Some(RouteTag::Shadow {
+                        alias: "prod".to_string(),
+                        pair: ShadowPair::new(),
+                    }),
+                },
+                Priority::Low,
+                None,
+            )
+            .unwrap();
+        queue.close();
+        worker_loop(&mut set, ctx(&queue, &metrics));
+        // The client got the primary (v1) answer, bit-identical.
+        assert_eq!(rx_primary.recv().unwrap().unwrap(), vec![3.0]);
+        // The mirror never answered and the expired mirror never executed.
+        assert!(matches!(rx_mirror.try_recv(), Err(mpsc::TryRecvError::Disconnected)));
+        assert!(matches!(rx_late.try_recv(), Err(mpsc::TryRecvError::Disconnected)));
+        // Divergence |3 - 6| = 3 landed under the alias; the expired
+        // mirror shows up only as dropped shadow coverage.
+        let alias_stats = metrics.alias_stats();
+        assert_eq!(alias_stats.len(), 1);
+        let s = &alias_stats[0];
+        assert_eq!(s.alias, "prod");
+        assert_eq!((s.requests, s.canary), (1, 0), "mirrors are not alias requests");
+        assert_eq!(s.shadow_samples, 1);
+        assert!((s.shadow_max - 3.0).abs() < 1e-9, "max-abs divergence 3.0");
+        assert_eq!(s.shadow_dropped, 1);
+        // Zero client-facing rejections: the rollout invariant.
+        assert_eq!(metrics.rejected(), (0, 0));
     }
 
     /// Model that fails every forward: clients get the typed backend error.

@@ -18,7 +18,7 @@ use rbgp::gpusim::explain_fig1;
 use rbgp::models::{vgg::vgg19, wideresnet::wrn40_4};
 use rbgp::sparsity::memory::{network_bytes, Pattern};
 use rbgp::sparsity::rbgp4::{Rbgp4Config, Rbgp4Mask};
-use rbgp::util::cli::Args;
+use rbgp::util::cli::{split_assign, Args};
 use rbgp::util::fmt_mb;
 use rbgp::util::rng::Rng;
 use std::path::PathBuf;
@@ -54,6 +54,8 @@ COMMANDS
   serve      [--requests 512] [--clients 4] [--workers 2] [--queue-cap 1024]
              [--deadline-ms 0] [--max-starvation-ms 1000] [--model-quota Q]
              [--model name=ckpt.json[@Q]]...
+             [--alias name=model]... [--canary alias=model@pct]
+             [--shadow alias=model] [--promote alias=model]
              [--tune off|quick|full] [--tune-cache FILE]
              [--retune-threshold 0.7]                          (native only)
              [--artifacts DIR] [--checkpoint ckpt.json]        (xla only)
@@ -82,7 +84,16 @@ many requests a model may have queued at once (admission control): an
 integer is an absolute cap, a fraction in (0,1) is a share of
 --queue-cap, 0 means unlimited; --model-quota sets the default for every
 model and `--model name=ckpt.json@Q` overrides it per model, so one hot
-model cannot exhaust the queue the other models share.";
+model cannot exhaust the queue the other models share. Rollout ops:
+--alias adds a client-facing name over a concrete model (clients submit
+under the alias; the round-robin demo traffic does), --canary routes
+pct% of an alias's traffic to a second model by a deterministic
+per-request hash, --shadow mirrors every alias request to a second model
+on spare capacity and records max-abs logit divergence (the client is
+always answered by the primary), and --promote runs a full zero-downtime
+rollout after the traffic phase: atomically flip the alias to the named
+model, drain the old primary and retire it, printing exact eviction
+counters.";
 
 fn main() {
     let args = Args::from_env();
@@ -606,6 +617,36 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
     if routes.is_empty() {
         routes.push((None, server.in_dim, server.classes));
     }
+    // Rollout staging. Aliases join the round-robin routes so the demo
+    // traffic exercises them alongside direct submits; canary/shadow stage
+    // a second model behind an alias before the traffic phase starts.
+    for spec in args.get_all("alias") {
+        let (name, target) = split_assign("alias", spec)?;
+        server.set_alias(name, target)?;
+        let (in_dim, classes) = routes
+            .iter()
+            .find(|(m, _, _)| m.as_deref() == Some(target))
+            .map(|(_, i, c)| (*i, *c))
+            .unwrap_or((server.in_dim, server.classes));
+        routes.push((Some(name.to_string()), in_dim, classes));
+        println!("alias '{name}' → '{target}'");
+    }
+    for spec in args.get_all("canary") {
+        let (alias, leg) = split_assign("canary", spec)?;
+        let (target, pct) = leg
+            .rsplit_once('@')
+            .ok_or_else(|| anyhow::anyhow!("--canary expects alias=model@pct, got '{spec}'"))?;
+        let pct: u8 = pct
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--canary percent must be 1..=100, got '{pct}'"))?;
+        server.set_canary(alias, target, pct)?;
+        println!("canary '{alias}': {pct}% → '{target}'");
+    }
+    for spec in args.get_all("shadow") {
+        let (alias, target) = split_assign("shadow", spec)?;
+        server.set_shadow(alias, target)?;
+        println!("shadow '{alias}' → '{target}'");
+    }
     println!(
         "default model: in_dim {}, classes {}, max batch {} × {} workers, queue cap {}",
         server.in_dim,
@@ -704,6 +745,25 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
+    for a in server.alias_stats() {
+        let lat = match &a.latency {
+            Some(l) => format!(", p50 {:.2} ms, p99 {:.2} ms", l.p50 * 1e3, l.p99 * 1e3),
+            None => String::new(),
+        };
+        println!(
+            "    alias '{}': {} reqs, {:.1}% canary{lat}",
+            a.alias,
+            a.requests,
+            a.canary_fraction() * 100.0
+        );
+        if a.shadow_samples + a.shadow_dropped > 0 {
+            println!(
+                "      shadow divergence: {} samples, mean {:.3e}, max {:.3e}, {} dropped; \
+                 hist(≤1e-6,1e-4,1e-3,1e-2,1e-1,∞) {:?}",
+                a.shadow_samples, a.shadow_mean, a.shadow_max, a.shadow_dropped, a.shadow_hist
+            );
+        }
+    }
     // Per-structure tuned-schedule summaries: what the search picked, how
     // close to the roofline it landed, and how achieved throughput tracked
     // it over the run (the drift re-tune trigger's inputs).
@@ -730,6 +790,23 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
         if m.retunes > 0 {
             println!("      model '{}': {} drift re-tunes", m.model, m.retunes);
         }
+    }
+    // Post-traffic rollout demo: atomically flip the alias, then drain and
+    // retire the old primary — the full zero-downtime sequence.
+    for spec in args.get_all("promote") {
+        let (alias, target) = split_assign("promote", spec)?;
+        let t0 = std::time::Instant::now();
+        let report = server.rollout(alias, target)?;
+        println!(
+            "rollout '{alias}' → '{target}' in {:.1} ms: retired '{}' \
+             ({} drained in-flight, {} structures evicted / {} retained, {} plans evicted)",
+            t0.elapsed().as_secs_f64() * 1e3,
+            report.model,
+            report.drained_requests,
+            report.evicted_structures.len(),
+            report.retained_structures.len(),
+            report.evicted_plans
+        );
     }
     server.shutdown();
     Ok(())

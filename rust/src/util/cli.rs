@@ -133,12 +133,41 @@ impl Args {
     }
 }
 
+/// Split a `NAME=VALUE` option body (e.g. `--alias prod=v1`,
+/// `--model a=a.json`) into trimmed halves; errors mention `flag` so the
+/// message reads as `--alias expects NAME=VALUE`.
+pub fn split_assign<'a>(flag: &str, body: &'a str) -> anyhow::Result<(&'a str, &'a str)> {
+    match body.split_once('=') {
+        Some((k, v)) => {
+            let (k, v) = (k.trim(), v.trim());
+            anyhow::ensure!(
+                !k.is_empty() && !v.is_empty(),
+                "--{flag} expects NAME=VALUE, got '{body}'"
+            );
+            Ok((k, v))
+        }
+        None => anyhow::bail!("--{flag} expects NAME=VALUE, got '{body}'"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn parse(s: &str) -> Args {
         Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn split_assign_trims_and_rejects_malformed() {
+        assert_eq!(split_assign("alias", "prod=v1").unwrap(), ("prod", "v1"));
+        assert_eq!(split_assign("alias", " a = b ").unwrap(), ("a", "b"));
+        // Only the first '=' splits: values may carry their own.
+        assert_eq!(split_assign("canary", "prod=v2@10").unwrap(), ("prod", "v2@10"));
+        for bad in ["noequals", "=v", "k=", " = "] {
+            let err = split_assign("alias", bad).unwrap_err().to_string();
+            assert!(err.contains("--alias expects NAME=VALUE"), "{err}");
+        }
     }
 
     #[test]

@@ -105,6 +105,7 @@ fn make_req(model: &str, id: u32, age: &mut usize, expired: bool) -> (QueuedRequ
             deadline: expired.then_some(now),
             respond: tx,
             claim: ModelClaim::detached(model, 1, 1, 1),
+            route: None,
         },
         rx,
     )
@@ -345,6 +346,7 @@ fn run_concurrent_case(popper_threads: usize, base_seed: u64) {
                         deadline: None,
                         respond: tx,
                         claim: ModelClaim::detached(model, 1, 1, 1),
+                        route: None,
                     };
                     match q.push(req, class, Some(QUOTA)) {
                         Ok(depth) => {
@@ -403,6 +405,112 @@ fn run_concurrent_case(popper_threads: usize, base_seed: u64) {
             }
             assert!(rx.try_recv().is_err(), "request {id} answered twice");
         }
+    });
+}
+
+/// Rollout satellite: submits resolved through **two aliases onto one
+/// concrete model** must behave exactly like direct submits to that model
+/// — the quota and the per-model backlog are charged to the concrete id
+/// (never an alias name), the shared in-flight count stays exact through
+/// every accept/pop/answer, and conservation holds at close. Alias claims
+/// are modeled the way registry resolution produces them: duplicate
+/// claims on one concrete entry.
+#[test]
+fn prop_alias_resolved_submits_charge_the_concrete_model() {
+    use rbgp::coordinator::serving::queue::RouteTag;
+    const ALIASES: [&str; 2] = ["blue", "green"];
+    check("two aliases, one concrete model", 25, |rng| {
+        let quota = gen::range(rng, 2, 5);
+        let cap = quota + gen::range(rng, 2, 6); // quota binds before capacity
+        let q = RequestQueue::new(cap, None);
+        let base = ModelClaim::detached("m", 1, 1, 1);
+        let baseline = base.in_flight();
+        let mut receivers: Vec<Rx> = Vec::new();
+        let mut popped: Vec<QueuedRequest> = Vec::new();
+        let mut queued = 0usize;
+        let mut next_id = 0u32;
+        let ops = gen::range(rng, 30, 60);
+        for _ in 0..ops {
+            if rng.below(100) < 60 {
+                let alias = ALIASES[rng.below_usize(ALIASES.len())];
+                let (tx, rx) = mpsc::channel();
+                let req = QueuedRequest {
+                    x: vec![next_id as f32],
+                    enqueued: Instant::now(),
+                    deadline: None,
+                    respond: tx,
+                    claim: base.duplicate(),
+                    route: Some(RouteTag::Alias {
+                        alias: alias.to_string(),
+                        canary: false,
+                        shadow: None,
+                    }),
+                };
+                next_id += 1;
+                match q.push(req, Priority::Normal, Some(quota)) {
+                    Ok(_) => {
+                        queued += 1;
+                        receivers.push(rx);
+                        prop_assert!(queued <= quota, "accepted past the shared quota");
+                    }
+                    Err(ServeError::ModelQuotaExceeded { model, quota: got }) => {
+                        prop_assert_eq!(
+                            model.as_str(),
+                            "m",
+                            "quota rejection must name the concrete model, not '{alias}'"
+                        );
+                        prop_assert_eq!(got, quota, "wrong quota reported");
+                        prop_assert_eq!(
+                            queued,
+                            quota,
+                            "rejected below the cap: aliases must pool one quota"
+                        );
+                    }
+                    Err(e) => return Err(format!("unexpected push error: {e:?}")),
+                }
+                prop_assert_eq!(
+                    q.model_backlog("m"),
+                    queued,
+                    "backlog must be charged to the concrete model"
+                );
+                prop_assert_eq!(
+                    q.model_backlog("blue") + q.model_backlog("green"),
+                    0,
+                    "alias names must never appear as queue models"
+                );
+            } else if let Some(r) = q.pop_until(Instant::now()) {
+                queued -= 1;
+                popped.push(r);
+            }
+            prop_assert_eq!(
+                base.in_flight(),
+                baseline + queued + popped.len(),
+                "shared in-flight accounting drifted"
+            );
+        }
+        // Answer what was popped, fail the rest at close: conservation.
+        for r in popped.drain(..) {
+            let _ = r.respond.send(Ok(r.x.clone()));
+        }
+        q.close_and_fail_pending();
+        prop_assert_eq!(
+            base.in_flight(),
+            baseline,
+            "every aliased claim must return to the concrete entry"
+        );
+        let total = receivers.len();
+        let mut answered = 0usize;
+        let mut failed = 0usize;
+        for rx in receivers {
+            match rx.try_recv().map_err(|e| format!("request lost: {e}"))? {
+                Ok(_) => answered += 1,
+                Err(ServeError::Stopped) => failed += 1,
+                other => return Err(format!("unexpected outcome: {other:?}")),
+            }
+            prop_assert!(rx.try_recv().is_err(), "a request was answered twice");
+        }
+        prop_assert_eq!(answered + failed, total, "conservation across aliases");
+        Ok(())
     });
 }
 
