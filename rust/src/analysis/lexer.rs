@@ -1,0 +1,354 @@
+//! Hand-rolled Rust lexer for the static-analysis pass.
+//!
+//! Produces a flat significant-token stream (identifiers, literals,
+//! lifetimes, single-char punctuation) plus a side channel of comments with
+//! line numbers. The rules only need token shapes and adjacency, so there is
+//! no keyword table and no precedence here — but string/char/comment
+//! recognition is exact (raw strings, nested block comments, byte literals),
+//! because a `.lock().unwrap()` inside a fixture string literal must *not*
+//! look like code.
+
+/// Significant-token kind. Punctuation is one token per character; the
+/// rules match multi-character operators by adjacency when they need to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Lit,
+    Lifetime,
+    Punct,
+}
+
+/// One significant token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == Kind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.kind == Kind::Ident && self.text == name
+    }
+}
+
+/// One comment (line or block), with `trailing` true when code precedes it
+/// on its starting line — that decides the scope of an `analyze: allow`.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+    pub trailing: bool,
+}
+
+/// Lexer output: significant tokens plus comments, both in source order.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+fn ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_' || c >= 0x80
+}
+
+fn ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_' || c >= 0x80
+}
+
+fn count_newlines(s: &str) -> u32 {
+    s.bytes().filter(|&c| c == b'\n').count() as u32
+}
+
+/// Lex `src` into significant tokens + comments. Never fails: unterminated
+/// constructs run to end-of-file (the pass lints source that `rustc`
+/// already accepted, so this is only reachable on truncated input).
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut line_has_code = false;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            line_has_code = false;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Comments.
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            out.comments.push(Comment {
+                line,
+                text: src[start..i].to_string(),
+                trailing: line_has_code,
+            });
+            continue;
+        }
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let (start, start_line) = (i, line);
+            let mut depth = 1u32;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            out.comments.push(Comment {
+                line: start_line,
+                text: src[start..i].to_string(),
+                trailing: line_has_code,
+            });
+            continue;
+        }
+        line_has_code = true;
+        // Raw strings / raw identifiers / byte literals share prefixes.
+        if c == b'r' || c == b'b' {
+            if let Some(end) = raw_or_byte_literal(b, i) {
+                out.toks.push(Tok {
+                    kind: Kind::Lit,
+                    text: src[i..end].to_string(),
+                    line,
+                });
+                line += count_newlines(&src[i..end]);
+                i = end;
+                continue;
+            }
+            let raw_ident = c == b'r'
+                && i + 1 < b.len()
+                && b[i + 1] == b'#'
+                && b.get(i + 2).is_some_and(|&c| ident_start(c));
+            if raw_ident {
+                // Raw identifier `r#type`: lex the ident, drop the sigil.
+                let mut j = i + 2;
+                while j < b.len() && ident_cont(b[j]) {
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: Kind::Ident,
+                    text: src[i + 2..j].to_string(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+        }
+        if c == b'"' {
+            let end = string_end(b, i + 1);
+            out.toks.push(Tok {
+                kind: Kind::Lit,
+                text: src[i..end].to_string(),
+                line,
+            });
+            line += count_newlines(&src[i..end]);
+            i = end;
+            continue;
+        }
+        if c == b'\'' {
+            let (end, kind) = char_or_lifetime(b, i);
+            out.toks.push(Tok {
+                kind,
+                text: src[i..end].to_string(),
+                line,
+            });
+            i = end;
+            continue;
+        }
+        if ident_start(c) {
+            let mut j = i + 1;
+            while j < b.len() && ident_cont(b[j]) {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: Kind::Ident,
+                text: src[i..j].to_string(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < b.len() {
+                let frac = b[j] == b'.' && b.get(j + 1).is_some_and(u8::is_ascii_digit);
+                if !ident_cont(b[j]) && !frac {
+                    break;
+                }
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: Kind::Lit,
+                text: src[i..j].to_string(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        out.toks.push(Tok {
+            kind: Kind::Punct,
+            text: (c as char).to_string(),
+            line,
+        });
+        i += 1;
+    }
+    out
+}
+
+/// Find the byte index just past a string body starting at `i` (after the
+/// opening quote), honoring backslash escapes.
+fn string_end(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    b.len()
+}
+
+/// Recognize `r"…"`, `r#"…"#…`, `b"…"`, `br#"…"#`, `b'…'` starting at `i`
+/// (which holds `r` or `b`). Returns the end index, or None when the
+/// prefix is just an ordinary identifier start.
+fn raw_or_byte_literal(b: &[u8], i: usize) -> Option<usize> {
+    let rest = &b[i..];
+    let (raw, body) = match rest {
+        [b'r', b'"', ..] => (0usize, i + 2),
+        [b'r', b'#', ..] => {
+            let mut n = 0;
+            while i + 1 + n < b.len() && b[i + 1 + n] == b'#' {
+                n += 1;
+            }
+            if b.get(i + 1 + n) != Some(&b'"') {
+                return None; // raw identifier, not a raw string
+            }
+            (n, i + 2 + n)
+        }
+        [b'b', b'"', ..] => return Some(string_end(b, i + 2)),
+        [b'b', b'\'', ..] => {
+            let (end, _) = char_or_lifetime(b, i + 1);
+            return Some(end);
+        }
+        [b'b', b'r', b'"', ..] | [b'b', b'r', b'#', ..] => {
+            let mut n = 0;
+            while i + 2 + n < b.len() && b[i + 2 + n] == b'#' {
+                n += 1;
+            }
+            if b.get(i + 2 + n) != Some(&b'"') {
+                return None;
+            }
+            (n, i + 3 + n)
+        }
+        _ => return None,
+    };
+    // Scan for `"` followed by `raw` hashes.
+    let mut j = body;
+    while j < b.len() {
+        if b[j] == b'"' && b[j + 1..].iter().take_while(|&&c| c == b'#').count() >= raw {
+            return Some(j + 1 + raw);
+        }
+        j += 1;
+    }
+    Some(b.len())
+}
+
+/// Disambiguate `'a` / `'static` (lifetimes) from `'x'` / `'\n'` (char
+/// literals), starting at the `'` at `i`. Returns (end index, kind).
+fn char_or_lifetime(b: &[u8], i: usize) -> (usize, Kind) {
+    if i + 1 >= b.len() {
+        return (b.len(), Kind::Punct);
+    }
+    if b[i + 1] == b'\\' {
+        // Escaped char literal: skip the escape, then run to the close.
+        let mut j = i + 2;
+        while j < b.len() && b[j] != b'\'' {
+            j += 1;
+        }
+        return ((j + 1).min(b.len()), Kind::Lit);
+    }
+    if ident_start(b[i + 1]) {
+        let mut j = i + 1;
+        while j < b.len() && ident_cont(b[j]) {
+            j += 1;
+        }
+        if b.get(j) == Some(&b'\'') {
+            return (j + 1, Kind::Lit); // 'a'
+        }
+        return (j, Kind::Lifetime); // 'a or 'static
+    }
+    // Non-ident char literal like '(' or '0'… find the closing quote.
+    let mut j = i + 1;
+    while j < b.len() && b[j] != b'\'' {
+        j += 1;
+    }
+    ((j + 1).min(b.len()), Kind::Lit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn code_inside_strings_and_comments_is_not_tokenized() {
+        let src = r##"
+            let a = "x.lock().unwrap()"; // m.lock().unwrap() in a comment
+            /* nested /* block */ .lock().unwrap() */
+            let b = r#"raw .lock().unwrap() body"#;
+        "##;
+        let toks = texts(src);
+        assert!(!toks.iter().any(|t| t == "unwrap"), "{toks:?}");
+        let lexed = lex(src);
+        assert_eq!(lexed.comments.len(), 2);
+        assert!(lexed.comments[0].trailing);
+        assert!(!lexed.comments[1].trailing);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a str) -> char { 'y' }");
+        let lifes: Vec<_> = toks.toks.iter().filter(|t| t.kind == Kind::Lifetime).collect();
+        assert_eq!(lifes.len(), 2);
+        assert!(toks.toks.iter().any(|t| t.kind == Kind::Lit && t.text == "'y'"));
+    }
+
+    #[test]
+    fn lines_are_tracked_through_multiline_constructs() {
+        let src = "let s = \"a\nb\";\nx.lock()";
+        let toks = lex(src).toks;
+        let lock = toks.iter().find(|t| t.is_ident("lock")).unwrap();
+        assert_eq!(lock.line, 3);
+    }
+
+    #[test]
+    fn raw_idents_and_byte_literals() {
+        let toks = texts("let r#type = b'x'; let s = br#\"hi\"#;");
+        assert!(toks.contains(&"type".to_string()));
+        assert!(toks.contains(&"b'x'".to_string()));
+    }
+}

@@ -1,0 +1,414 @@
+//! **lock-order** — a static acquisition graph over the crate's named
+//! locks, built from guard-in-scope analysis of function bodies.
+//!
+//! Per function, every acquisition is located and given a live token
+//! range: a plain `let g = lock_recover(&…);` guard lives to the end of
+//! its enclosing block (or an explicit `drop(g)`); a chained temporary
+//! (`lock_recover(&…).get(k)`, or the scrutinee of an `if let`) lives to
+//! the end of its statement — including a block the statement heads,
+//! which is exactly why `PlanCache::plan_for`'s peek-then-insert pattern
+//! does *not* count as re-entry. An acquisition B inside the live range
+//! of acquisition A records the edge `class(A) → class(B)`; taking the
+//! same class while it is already held is reported directly. After all
+//! files are scanned, any cycle in the merged graph — a lock-order
+//! inversion the property suites can't reliably provoke — fails the pass.
+//!
+//! Known limits (by construction, documented in ARCHITECTURE.md): the
+//! scanner does not see acquisitions hidden behind `Drop` impls or
+//! uncurated method calls, and guards moved across function boundaries
+//! are treated as function-local. The curated tables below name the
+//! repo's lock-taking entry points so the common cross-module shapes
+//! (queue pops, latency recording, drain waits, plan eviction) are edges.
+
+use super::lexer::Kind;
+use super::report::{Finding, LockEdge};
+use super::rules::{finding, matching_paren};
+use super::scan::{statement_end, SourceModel};
+
+/// Curated lock classes: (path suffix, receiver field) → class name.
+/// Both halves must match; per-file keying keeps `queue.rs`'s `state`
+/// mutex distinct from `registry.rs`'s.
+const CLASSES: [(&str, &str, &str); 14] = [
+    ("serving/queue.rs", "state", "queue-state"),
+    ("serving/queue.rs", "slots", "queue-slots"),
+    ("serving/registry.rs", "state", "registry-state"),
+    ("serving/registry.rs", "drain_lock", "registry-drain"),
+    ("serving/mod.rs", "handles", "serving-handles"),
+    ("serving/backend.rs", "shared", "kernel-plan"),
+    ("coordinator/metrics.rs", "latencies", "metrics-latency-ring"),
+    ("coordinator/metrics.rs", "ring", "metrics-latency-ring"),
+    ("coordinator/metrics.rs", "models", "metrics-models"),
+    ("coordinator/metrics.rs", "aliases", "metrics-aliases"),
+    ("kernels/autotune.rs", "entries", "tune-cache"),
+    ("kernels/plan.rs", "plans", "plan-cache"),
+    ("kernels/plan.rs", "plan", "kernel-plan"),
+    ("util/threadpool.rs", "rx", "threadpool-queue"),
+];
+
+/// Curated lock-taking methods: calling `x.method(…)` acquires (and
+/// releases) the named class internally. Only distinctively-named entry
+/// points are listed — generic names like `push` or `execute` would drown
+/// the graph in false edges.
+const PROPAGATES: [(&str, &str); 8] = [
+    ("pop_blocking", "queue-state"),
+    ("pop_until", "queue-state"),
+    ("pop_model_or_steal", "queue-state"),
+    ("record_latency", "metrics-latency-ring"),
+    ("wait_drained", "registry-drain"),
+    ("plan_for", "plan-cache"),
+    ("invalidate_structure", "plan-cache"),
+    ("retain_structures", "plan-cache"),
+];
+
+fn classify(path: &str, receiver: &str) -> String {
+    for (suffix, recv, class) in CLASSES {
+        if path.ends_with(suffix) && receiver == recv {
+            return class.to_string();
+        }
+    }
+    let mut parts: Vec<&str> = path.split('/').collect();
+    let tail = parts.split_off(parts.len().saturating_sub(2)).join("/");
+    format!("{tail}:{receiver}")
+}
+
+/// One acquisition: its token index, source line, lock class, and the
+/// token range the guard stays live (`None` for instantaneous curated
+/// calls, which acquire and release internally).
+struct Acq {
+    ix: usize,
+    line: u32,
+    class: String,
+    until: Option<usize>,
+}
+
+/// The receiver field of a `lock_recover(&self.x…)` argument list: the
+/// identifier after the last `.` (so `&self.latencies[w]` → `latencies`),
+/// falling back to the first identifier (`lock_recover(ring)` → `ring`).
+fn receiver_in_args(m: &SourceModel, open: usize, close: usize) -> String {
+    let toks = &m.toks;
+    let mut first = None;
+    let mut dotted = None;
+    for j in open + 1..close {
+        if toks[j].kind == Kind::Ident {
+            if first.is_none() {
+                first = Some(j);
+            }
+            if toks[j - 1].is_punct('.') {
+                dotted = Some(j);
+            }
+        }
+    }
+    match dotted.or(first) {
+        Some(j) => toks[j].text.clone(),
+        None => "<expr>".to_string(),
+    }
+}
+
+/// End of a block-scoped guard named `name`, live from token `from`: the
+/// close of the enclosing block, or an explicit `drop(name)`.
+fn block_guard_end(m: &SourceModel, from: usize, name: &str, fn_end: usize) -> usize {
+    let toks = &m.toks;
+    let mut depth = 0i32;
+    let mut i = from;
+    while i <= fn_end && i < toks.len() {
+        let t = &toks[i];
+        if t.kind == Kind::Punct {
+            match t.text.as_bytes()[0] {
+                b'{' | b'(' | b'[' => depth += 1,
+                b')' | b']' => depth -= 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth < 0 {
+                        return i.saturating_sub(1);
+                    }
+                }
+                _ => {}
+            }
+        } else if t.is_ident("drop")
+            && toks.get(i + 1).is_some_and(|n| n.is_punct('('))
+            && toks.get(i + 2).is_some_and(|n| n.is_ident(name))
+        {
+            return i;
+        }
+        i += 1;
+    }
+    fn_end
+}
+
+/// Locate every acquisition in `f`'s body and resolve its live range.
+fn collect_acqs(m: &SourceModel, f: &super::scan::FnSpan) -> Vec<Acq> {
+    let toks = &m.toks;
+    let mut acqs = Vec::new();
+    for i in f.start..=f.end.min(toks.len().saturating_sub(1)) {
+        if m.in_test(i) {
+            continue;
+        }
+        if m.enclosing_fn(i).map(|g| g.start) != Some(f.start) {
+            continue; // a nested fn owns this token
+        }
+        let t = &toks[i];
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        let called = toks.get(i + 1).is_some_and(|n| n.is_punct('('));
+        if t.text == "lock_recover" && called {
+            let close = matching_paren(toks, i + 1);
+            let class = classify(&m.path, &receiver_in_args(m, i + 1, close));
+            acqs.push(Acq {
+                ix: i,
+                line: t.line,
+                class,
+                until: Some(guard_range(m, i, close, f.end)),
+            });
+        } else if t.text == "lock"
+            && called
+            && i >= 2
+            && toks[i - 1].is_punct('.')
+            && toks[i - 2].kind == Kind::Ident
+        {
+            let close = matching_paren(toks, i + 1);
+            let class = classify(&m.path, &toks[i - 2].text);
+            acqs.push(Acq {
+                ix: i,
+                line: t.line,
+                class,
+                until: Some(guard_range(m, i, close, f.end)),
+            });
+        } else if called && i >= 1 && toks[i - 1].is_punct('.') {
+            if let Some((_, class)) = PROPAGATES.iter().find(|(meth, _)| t.text == *meth) {
+                acqs.push(Acq {
+                    ix: i,
+                    line: t.line,
+                    class: class.to_string(),
+                    until: None,
+                });
+            }
+        }
+    }
+    acqs
+}
+
+/// Live range for the guard produced by the call ending at `close`:
+/// block-scoped when the call is the exact right-hand side of a `let`
+/// (`let [mut] name = call;`), statement-scoped otherwise.
+fn guard_range(m: &SourceModel, call_ix: usize, close: usize, fn_end: usize) -> usize {
+    let toks = &m.toks;
+    let recv_len = if toks[call_ix].text == "lock" { 2 } else { 0 };
+    let head = call_ix - recv_len; // start of the full call expression
+    let eq = head >= 1 && toks[head - 1].is_punct('=');
+    let name_ix = head.wrapping_sub(2);
+    let let_bound = eq
+        && toks.get(name_ix).is_some_and(|n| n.kind == Kind::Ident)
+        && (toks.get(head.wrapping_sub(3)).is_some_and(|n| n.is_ident("let"))
+            || (toks.get(head.wrapping_sub(3)).is_some_and(|n| n.is_ident("mut"))
+                && toks.get(head.wrapping_sub(4)).is_some_and(|n| n.is_ident("let"))));
+    let bare_rhs = toks.get(close + 1).is_some_and(|n| n.is_punct(';'));
+    if let_bound && bare_rhs {
+        block_guard_end(m, close + 2, &toks[name_ix].text, fn_end)
+    } else {
+        statement_end(toks, call_ix).min(fn_end)
+    }
+}
+
+/// Scan one file: record acquisition edges and report same-class
+/// re-entry (`class held while re-acquired`) immediately.
+pub fn scan_file(m: &SourceModel, edges: &mut Vec<LockEdge>, out: &mut Vec<Finding>) {
+    for f in &m.fns {
+        if f.name == "lock_recover" {
+            continue; // the blessed wrapper's own `.lock()` is not an edge
+        }
+        let acqs = collect_acqs(m, f);
+        for a in &acqs {
+            let Some(until) = a.until else { continue };
+            for b in &acqs {
+                if b.ix <= a.ix || b.ix > until {
+                    continue;
+                }
+                if b.class == a.class {
+                    out.push(finding(
+                        m,
+                        "lock-order",
+                        b.line,
+                        format!(
+                            "lock class `{}` re-acquired while already held \
+                             (guard taken line {}) — self-deadlock",
+                            a.class, a.line,
+                        ),
+                    ));
+                } else {
+                    edges.push(LockEdge {
+                        held: a.class.clone(),
+                        acquired: b.class.clone(),
+                        file: m.path.clone(),
+                        held_line: a.line,
+                        line: b.line,
+                        allowed: m.allow_for("lock-order", b.line).map(|x| x.reason.clone()),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Merge pass: find cycles in the acquisition graph (annotated edges are
+/// excluded) and report one finding per strongly connected component.
+pub fn check_cycles(edges: &[LockEdge], out: &mut Vec<Finding>) {
+    let eff: Vec<&LockEdge> = edges.iter().filter(|e| e.allowed.is_none()).collect();
+    let reaches = |from: &str, to: &str| {
+        let mut stack = vec![from];
+        let mut seen: Vec<&str> = Vec::new();
+        while let Some(n) = stack.pop() {
+            for e in eff.iter().filter(|e| e.held == n) {
+                if e.acquired == to {
+                    return true;
+                }
+                if !seen.contains(&e.acquired.as_str()) {
+                    seen.push(&e.acquired);
+                    stack.push(&e.acquired);
+                }
+            }
+        }
+        false
+    };
+    let mut nodes: Vec<&str> = eff
+        .iter()
+        .flat_map(|e| [e.held.as_str(), e.acquired.as_str()])
+        .collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+    let mut sccs: Vec<Vec<&str>> = Vec::new();
+    for n in nodes.into_iter().filter(|n| reaches(n, n)) {
+        match sccs.iter_mut().find(|s| reaches(s[0], n) && reaches(n, s[0])) {
+            Some(scc) => scc.push(n),
+            None => sccs.push(vec![n]),
+        }
+    }
+    for scc in sccs {
+        let witnesses: Vec<&&LockEdge> = eff
+            .iter()
+            .filter(|e| scc.contains(&e.held.as_str()) && scc.contains(&e.acquired.as_str()))
+            .collect();
+        let sites: Vec<String> = witnesses
+            .iter()
+            .map(|e| format!("{} -> {} ({}:{})", e.held, e.acquired, e.file, e.line))
+            .collect();
+        let anchor = witnesses[0];
+        out.push(Finding {
+            rule: "lock-order",
+            file: anchor.file.clone(),
+            line: anchor.line,
+            message: format!(
+                "potential deadlock: acquisition cycle over {{{}}}: {}",
+                scc.join(", "),
+                sites.join(", "),
+            ),
+            allowed: None,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(path: &str, src: &str) -> (Vec<LockEdge>, Vec<Finding>) {
+        let m = SourceModel::build(path, src);
+        let mut edges = Vec::new();
+        let mut out = Vec::new();
+        scan_file(&m, &mut edges, &mut out);
+        check_cycles(&edges, &mut out);
+        (edges, out)
+    }
+
+    #[test]
+    fn seeded_two_lock_cycle_is_a_deadlock_finding() {
+        let src = concat!(
+            "fn ab(s: &S) { let g = lock_recover(&s.alpha); let h = lock_recover(&s.beta); }\n",
+            "fn ba(s: &S) { let g = lock_recover(&s.beta); let h = lock_recover(&s.alpha); }\n",
+        );
+        let (edges, out) = run("src/x.rs", src);
+        assert_eq!(edges.len(), 2, "{edges:?}");
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].message.contains("potential deadlock"), "{}", out[0].message);
+    }
+
+    #[test]
+    fn consistent_order_has_edges_but_no_cycle() {
+        let src = concat!(
+            "fn f(s: &S) { let g = lock_recover(&s.alpha); let h = lock_recover(&s.beta); }\n",
+            "fn g(s: &S) { let g = lock_recover(&s.alpha); let h = lock_recover(&s.beta); }\n",
+        );
+        let (edges, out) = run("src/x.rs", src);
+        assert_eq!(edges.len(), 2);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn same_class_reentry_is_reported() {
+        let src = "fn f(s: &S) { let g = lock_recover(&s.alpha); let h = lock_recover(&s.alpha); }";
+        let (_, out) = run("src/x.rs", src);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("re-acquired"), "{}", out[0].message);
+    }
+
+    #[test]
+    fn temp_guard_ends_with_its_statement() {
+        // The plan_for shape: an `if let` scrutinee guard must not be
+        // live at the later re-acquisition.
+        let src = concat!(
+            "fn plan_for(s: &S) {\n",
+            "    if let Some(p) = lock_recover(&s.plans).get(&key) {\n",
+            "        return p;\n",
+            "    }\n",
+            "    let mut map = lock_recover(&s.plans);\n",
+            "    map.insert(key, v);\n",
+            "}\n",
+        );
+        let (_, out) = run("src/kernels/plan.rs", src);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn dropped_guard_opens_no_edge() {
+        let src = concat!(
+            "fn f(s: &S) {\n",
+            "    let g = lock_recover(&s.alpha);\n",
+            "    drop(g);\n",
+            "    let h = lock_recover(&s.beta);\n",
+            "}\n",
+        );
+        let (edges, out) = run("src/x.rs", src);
+        assert!(edges.is_empty(), "{edges:?}");
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn curated_calls_propagate_their_lock_class() {
+        let src = concat!(
+            "fn f(s: &S) {\n",
+            "    let st = lock_recover(&s.state);\n",
+            "    s.queue.pop_blocking();\n",
+            "}\n",
+        );
+        let (edges, _) = run("src/coordinator/serving/registry.rs", src);
+        assert_eq!(edges.len(), 1);
+        assert_eq!(edges[0].held, "registry-state");
+        assert_eq!(edges[0].acquired, "queue-state");
+    }
+
+    #[test]
+    fn allow_annotation_removes_the_edge_from_the_cycle_graph() {
+        let src = concat!(
+            "fn ab(s: &S) {\n",
+            "    let g = lock_recover(&s.alpha);\n",
+            "    // analyze: allow(lock-order, reason=\"beta is a leaf here, b never calls a\")\n",
+            "    let h = lock_recover(&s.beta);\n",
+            "}\n",
+            "fn ba(s: &S) { let g = lock_recover(&s.beta); let h = lock_recover(&s.alpha); }\n",
+        );
+        let (edges, out) = run("src/x.rs", src);
+        assert_eq!(edges.len(), 2);
+        assert_eq!(edges.iter().filter(|e| e.allowed.is_some()).count(), 1);
+        assert!(out.is_empty(), "annotated edge must not close the cycle: {out:?}");
+    }
+}

@@ -1,0 +1,210 @@
+//! `rbgp analyze` — a self-contained static-analysis pass over this
+//! crate's own sources, enforcing the serving core's concurrency
+//! invariants as machine-checked rules instead of ARCHITECTURE.md prose.
+//!
+//! Five rules (see [`RULES`]): **lock-discipline** (all mutex access goes
+//! through `util::lock_recover`), **lock-order** (the static acquisition
+//! graph over named locks must be acyclic), **panic-freedom** (no
+//! panicking constructs in the hot-path modules), **atomic-ordering**
+//! (counters Relaxed, handoffs Release/Acquire, no SeqCst) and
+//! **unsafe-inventory** (every `unsafe` carries a `// SAFETY:` argument,
+//! and all sites are exported to `analysis_report.json`).
+//!
+//! Any finding can be waived in place with
+//! `// analyze: allow(rule, reason="…")` — the reason is mandatory, the
+//! waiver scope is the next statement/block (or the same line when the
+//! comment trails code), and waived findings stay visible in the report.
+//! `--deny RULE` turns waivers for one rule back into failures.
+//!
+//! Everything here is hand-rolled over a small lexer — no new crate
+//! dependencies, consistent with the vendored-offline build.
+
+pub mod lexer;
+pub mod lockorder;
+pub mod report;
+pub mod rules;
+pub mod scan;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+pub use report::{Finding, Report};
+use scan::SourceModel;
+
+/// Rule names accepted by `--deny` and `allow(…)`. `annotation` is the
+/// meta-rule for malformed or unknown escapes and is never suppressible.
+pub const RULES: [&str; 6] = [
+    "lock-discipline",
+    "lock-order",
+    "panic-freedom",
+    "atomic-ordering",
+    "unsafe-inventory",
+    "annotation",
+];
+
+pub struct AnalysisOptions {
+    pub roots: Vec<PathBuf>,
+    /// Rules whose `allow` annotations are ignored (`all` for every rule).
+    pub deny: Vec<String>,
+}
+
+/// The default scan roots: `src`/`benches`/`tests` under the current
+/// directory, or under `rust/` when invoked from the repo root.
+pub fn default_roots() -> Vec<PathBuf> {
+    for prefix in ["", "rust"] {
+        let roots: Vec<PathBuf> = ["src", "benches", "tests"]
+            .iter()
+            .map(|d| Path::new(prefix).join(d))
+            .filter(|p| p.is_dir())
+            .collect();
+        if !roots.is_empty() {
+            return roots;
+        }
+    }
+    Vec::new()
+}
+
+fn walk(dir: &Path, files: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    if dir.is_file() {
+        files.push(dir.to_path_buf());
+        return Ok(());
+    }
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, files)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            files.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run the full pass over `opts.roots` (files and/or directories).
+pub fn analyze_tree(opts: &AnalysisOptions) -> anyhow::Result<Report> {
+    anyhow::ensure!(
+        !opts.roots.is_empty(),
+        "no scan roots: run from the repo (src/benches/tests) or pass paths"
+    );
+    let mut files = Vec::new();
+    for root in &opts.roots {
+        walk(root, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    analyze_files(&files)
+}
+
+/// Run the full pass over an explicit, pre-sorted file list.
+pub fn analyze_files(paths: &[PathBuf]) -> anyhow::Result<Report> {
+    let mut report = Report::default();
+    for p in paths {
+        let src =
+            std::fs::read_to_string(p).with_context(|| format!("reading {}", p.display()))?;
+        let shown = p.to_string_lossy().replace('\\', "/");
+        let m = SourceModel::build(&shown, &src);
+        analyze_model(&m, &mut report);
+    }
+    lockorder::check_cycles(&report.lock_edges, &mut report.findings);
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(report)
+}
+
+/// All per-file rules over one scanned source model.
+fn analyze_model(m: &SourceModel, report: &mut Report) {
+    rules::lock_discipline(m, &mut report.findings);
+    rules::panic_freedom(m, &mut report.findings);
+    rules::atomic_ordering(m, &mut report.findings);
+    rules::unsafe_inventory(m, &mut report.findings, &mut report.unsafe_inventory);
+    lockorder::scan_file(m, &mut report.lock_edges, &mut report.findings);
+    for (line, err) in &m.bad_annotations {
+        report.findings.push(Finding {
+            rule: "annotation",
+            file: m.path.clone(),
+            line: *line,
+            message: err.clone(),
+            allowed: None,
+        });
+    }
+    for a in m.allows() {
+        if !RULES.contains(&a.rule.as_str()) || a.rule == "annotation" {
+            report.findings.push(Finding {
+                rule: "annotation",
+                file: m.path.clone(),
+                line: a.lines.0,
+                message: format!("allow() names unknown rule '{}'", a.rule),
+                allowed: None,
+            });
+        }
+    }
+    report.files_scanned += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn analyze_src(path: &str, src: &str) -> Report {
+        let mut report = Report::default();
+        let m = SourceModel::build(path, src);
+        analyze_model(&m, &mut report);
+        lockorder::check_cycles(&report.lock_edges, &mut report.findings);
+        report
+    }
+
+    #[test]
+    fn clean_source_is_clean() {
+        let r = analyze_src(
+            "src/coordinator/serving/queue.rs",
+            "fn f(m: &std::sync::Mutex<u32>) -> u32 { *lock_recover(m) }",
+        );
+        assert!(r.denied(&[]).next().is_none());
+        assert_eq!(r.files_scanned, 1);
+    }
+
+    #[test]
+    fn deny_escalates_annotated_findings() {
+        let src = concat!(
+            "fn f(m: &std::sync::Mutex<u32>) {\n",
+            "    // analyze: allow(lock-discipline, reason=\"fixture\")\n",
+            "    let _ = m.lock().unwrap();\n",
+            "}\n",
+        );
+        let r = analyze_src("src/util/x.rs", src);
+        assert!(r.denied(&[]).next().is_none(), "annotated finding passes by default");
+        assert_eq!(r.denied(&["lock-discipline".to_string()]).count(), 1);
+        assert_eq!(r.denied(&["all".to_string()]).count(), 1);
+        assert_eq!(r.allowed_count(), 1);
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_is_a_finding() {
+        let r = analyze_src(
+            "src/x.rs",
+            "// analyze: allow(no-such-rule, reason=\"typo\")\nfn f() {}\n",
+        );
+        let denied: Vec<_> = r.denied(&[]).collect();
+        assert_eq!(denied.len(), 1);
+        assert_eq!(denied[0].rule, "annotation");
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let src = concat!(
+            "fn f(p: *const f32) -> f32 {\n",
+            "    // SAFETY: caller passes a valid pointer.\n",
+            "    unsafe { *p }\n",
+            "}\n",
+        );
+        let r = analyze_src("src/x.rs", src);
+        let json = r.to_json(&[]).to_string_pretty();
+        assert!(json.contains("\"clean\": true"), "{json}");
+        assert!(json.contains("\"unsafe_inventory\""), "{json}");
+        assert!(json.contains("caller passes a valid pointer."), "{json}");
+    }
+}

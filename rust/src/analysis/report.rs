@@ -1,0 +1,161 @@
+//! Findings, the unsafe inventory, and the machine-readable report.
+//!
+//! A finding is *allowed* when an `analyze: allow(rule, reason="…")`
+//! annotation covers its line — it still appears in the report (annotated
+//! debt is visible debt) but does not fail the pass unless the rule is on
+//! the `--deny` list, which ignores annotations for that rule.
+
+use crate::util::json::Json;
+
+/// One rule violation at a source location.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+    /// The annotation reason when an escape covers this site.
+    pub allowed: Option<String>,
+}
+
+/// One `unsafe` site; `safety` holds the adjacent `// SAFETY:` text.
+#[derive(Clone, Debug)]
+pub struct UnsafeSite {
+    pub file: String,
+    pub line: u32,
+    pub kind: &'static str,
+    pub safety: Option<String>,
+}
+
+/// One observed lock-acquisition edge: `acquired` taken while `held` was
+/// in scope, at `file:line` (the inner acquisition site).
+#[derive(Clone, Debug)]
+pub struct LockEdge {
+    pub held: String,
+    pub acquired: String,
+    pub file: String,
+    pub held_line: u32,
+    pub line: u32,
+    pub allowed: Option<String>,
+}
+
+/// Full pass output over a file set.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub unsafe_inventory: Vec<UnsafeSite>,
+    pub lock_edges: Vec<LockEdge>,
+}
+
+impl Report {
+    /// Findings that fail the pass: unannotated ones, plus annotated ones
+    /// whose rule is denied (`--deny rule` ignores its escapes), plus every
+    /// malformed annotation (rule name "annotation", never suppressible).
+    pub fn denied<'a>(&'a self, deny: &'a [String]) -> impl Iterator<Item = &'a Finding> {
+        let deny_all = deny.iter().any(|d| d == "all");
+        self.findings.iter().filter(move |f| {
+            f.allowed.is_none() || deny_all || deny.iter().any(|d| d == f.rule)
+        })
+    }
+
+    pub fn allowed_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.allowed.is_some()).count()
+    }
+
+    /// Serialize the whole report (the `analysis_report.json` artifact).
+    pub fn to_json(&self, deny: &[String]) -> Json {
+        let mut root = Json::obj();
+        root.set("version", 1.0);
+        root.set("files_scanned", self.files_scanned as f64);
+        let denied: Vec<&Finding> = self.denied(deny).collect();
+        root.set("clean", denied.is_empty());
+        root.set(
+            "deny",
+            Json::Arr(deny.iter().map(|d| Json::Str(d.clone())).collect()),
+        );
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut o = Json::obj();
+                o.set("rule", f.rule).set("file", f.file.as_str());
+                o.set("line", f.line as f64).set("message", f.message.as_str());
+                match &f.allowed {
+                    Some(reason) => o.set("allowed", reason.as_str()),
+                    None => o.set("allowed", Json::Null),
+                };
+                o
+            })
+            .collect();
+        root.set("findings", Json::Arr(findings));
+        let inventory: Vec<Json> = self
+            .unsafe_inventory
+            .iter()
+            .map(|u| {
+                let mut o = Json::obj();
+                o.set("file", u.file.as_str()).set("line", u.line as f64);
+                o.set("kind", u.kind);
+                match &u.safety {
+                    Some(s) => o.set("safety", s.as_str()),
+                    None => o.set("safety", Json::Null),
+                };
+                o
+            })
+            .collect();
+        root.set("unsafe_inventory", Json::Arr(inventory));
+        let edges: Vec<Json> = self
+            .lock_edges
+            .iter()
+            .map(|e| {
+                let mut o = Json::obj();
+                o.set("held", e.held.as_str()).set("acquired", e.acquired.as_str());
+                o.set("file", e.file.as_str());
+                o.set("held_line", e.held_line as f64).set("line", e.line as f64);
+                o.set("allowed", e.allowed.is_some());
+                o
+            })
+            .collect();
+        root.set("lock_graph_edges", Json::Arr(edges));
+        root
+    }
+
+    /// Human-readable summary; `verbose` also prints annotated findings.
+    pub fn render_text(&self, deny: &[String], verbose: bool) -> String {
+        let mut s = String::new();
+        let denied: Vec<&Finding> = self.denied(deny).collect();
+        for f in &denied {
+            s.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+        }
+        if verbose {
+            for f in self.findings.iter().filter(|f| f.allowed.is_some()) {
+                if denied.iter().any(|d| std::ptr::eq(*d, f)) {
+                    continue;
+                }
+                let reason = f.allowed.as_deref().unwrap_or("");
+                s.push_str(&format!(
+                    "{}:{}: [{}] allowed ({reason}): {}\n",
+                    f.file, f.line, f.rule, f.message
+                ));
+            }
+        }
+        let justified = self
+            .unsafe_inventory
+            .iter()
+            .filter(|u| u.safety.is_some())
+            .count();
+        s.push_str(&format!(
+            "analyzed {} files: {} finding(s) denied, {} allowed by annotation\n",
+            self.files_scanned,
+            denied.len(),
+            self.allowed_count(),
+        ));
+        s.push_str(&format!(
+            "unsafe inventory: {} site(s), {justified} with SAFETY justification; \
+             lock graph: {} edge(s)\n",
+            self.unsafe_inventory.len(),
+            self.lock_edges.len(),
+        ));
+        s
+    }
+}

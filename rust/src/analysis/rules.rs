@@ -1,0 +1,550 @@
+//! The four token-pattern rules: lock-discipline, panic-freedom,
+//! atomic-ordering and unsafe-inventory. (lock-order, which needs guard
+//! scopes and a cross-file graph, lives in [`super::lockorder`].)
+
+use super::report::{Finding, UnsafeSite};
+use super::scan::SourceModel;
+use crate::analysis::lexer::Kind;
+
+/// Build a finding, resolving any covering `analyze: allow` escape.
+pub(crate) fn finding(m: &SourceModel, rule: &'static str, line: u32, message: String) -> Finding {
+    Finding {
+        rule,
+        file: m.path.clone(),
+        line,
+        message,
+        allowed: m.allow_for(rule, line).map(|a| a.reason.clone()),
+    }
+}
+
+/// Index of the `)` matching the `(` at `open` (or the last token).
+pub(crate) fn matching_paren(toks: &[crate::analysis::lexer::Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// **lock-discipline** — bare `.lock().unwrap()` / `.lock().expect(…)` is
+/// banned everywhere (tests included: a poisoned fixture mutex aborts the
+/// whole suite instead of the one test). The only exemption is the body of
+/// `lock_recover` itself, which is the blessed wrapper.
+pub fn lock_discipline(m: &SourceModel, out: &mut Vec<Finding>) {
+    let toks = &m.toks;
+    for i in 0..toks.len() {
+        if !toks[i].is_ident("lock") {
+            continue;
+        }
+        let dotted = i > 0 && toks[i - 1].is_punct('.');
+        let called = toks.get(i + 1).is_some_and(|t| t.is_punct('('))
+            && toks.get(i + 2).is_some_and(|t| t.is_punct(')'));
+        if !(dotted && called) {
+            continue;
+        }
+        let Some(next) = toks.get(i + 4) else { continue };
+        if !(toks[i + 3].is_punct('.') && (next.is_ident("unwrap") || next.is_ident("expect"))) {
+            continue;
+        }
+        if !toks.get(i + 5).is_some_and(|t| t.is_punct('(')) {
+            continue;
+        }
+        if m.enclosing_fn(i).is_some_and(|f| f.name == "lock_recover") {
+            continue;
+        }
+        out.push(finding(
+            m,
+            "lock-discipline",
+            toks[i].line,
+            format!(
+                "bare `.lock().{}()` — route through `util::lock_recover` so a \
+                 poisoned mutex degrades instead of cascading panics",
+                next.text
+            ),
+        ));
+    }
+}
+
+/// Hot-path modules governed by panic-freedom (path suffix match).
+const HOT_MODULES: [&str; 6] = [
+    "serving/queue.rs",
+    "serving/worker.rs",
+    "serving/registry.rs",
+    "serving/backend.rs",
+    "kernels/plan.rs",
+    "kernels/registry.rs",
+];
+
+/// Keywords that can legally precede `[` without it being an index
+/// expression (`&mut [f32]`, `let [a, b] = …`, `dyn [T]`-ish positions).
+const KEYWORDS: [&str; 33] = [
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut", "pub",
+    "ref", "return", "static", "struct", "trait", "type", "unsafe", "use", "where",
+];
+
+/// **panic-freedom** — no `unwrap`/`expect`/`panic!`/`unreachable!` or
+/// unchecked indexing in the designated hot-path modules. `#[cfg(test)]`
+/// spans are exempt: a test asserting its own fixture may panic.
+pub fn panic_freedom(m: &SourceModel, out: &mut Vec<Finding>) {
+    if !HOT_MODULES.iter().any(|s| m.path.ends_with(s)) {
+        return;
+    }
+    let toks = &m.toks;
+    for i in 0..toks.len() {
+        if m.in_test(i) {
+            continue;
+        }
+        let t = &toks[i];
+        let msg = if (t.is_ident("unwrap") || t.is_ident("expect"))
+            && i > 0
+            && toks[i - 1].is_punct('.')
+            && toks.get(i + 1).is_some_and(|n| n.is_punct('('))
+        {
+            format!("`.{}()` in a hot-path module — return an error instead", t.text)
+        } else if (t.is_ident("panic") || t.is_ident("unreachable"))
+            && toks.get(i + 1).is_some_and(|n| n.is_punct('!'))
+        {
+            format!("`{}!` in a hot-path module — return an error instead", t.text)
+        } else if t.is_punct('[')
+            && i > 0
+            && (toks[i - 1].is_punct(')')
+                || toks[i - 1].is_punct(']')
+                || (toks[i - 1].kind == Kind::Ident
+                    && !KEYWORDS.contains(&toks[i - 1].text.as_str())))
+        {
+            "unchecked indexing in a hot-path module — use `get`/iterators or \
+             annotate the bounds argument"
+                .to_string()
+        } else {
+            continue;
+        };
+        out.push(finding(m, "panic-freedom", t.line, msg));
+    }
+}
+
+const ATOMIC_METHODS: [&str; 15] = [
+    "load",
+    "store",
+    "swap",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_nand",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_max",
+    "fetch_min",
+    "fetch_update",
+    "compare_exchange",
+    "compare_exchange_weak",
+    "compare_and_swap",
+];
+
+const ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+struct AtomicOp {
+    field: String,
+    method: String,
+    line: u32,
+    orderings: Vec<String>,
+    discarded: bool,
+}
+
+fn collect_atomic_ops(m: &SourceModel) -> Vec<AtomicOp> {
+    let toks = &m.toks;
+    let mut ops = Vec::new();
+    for i in 0..toks.len() {
+        if m.in_test(i) {
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind != Kind::Ident || !ATOMIC_METHODS.contains(&t.text.as_str()) {
+            continue;
+        }
+        if !(i > 0 && toks[i - 1].is_punct('.') && i > 1 && toks[i - 2].kind == Kind::Ident) {
+            continue;
+        }
+        if !toks.get(i + 1).is_some_and(|n| n.is_punct('(')) {
+            continue;
+        }
+        let close = matching_paren(toks, i + 1);
+        let orderings: Vec<String> = toks[i + 1..close]
+            .iter()
+            .filter(|a| a.kind == Kind::Ident && ORDERINGS.contains(&a.text.as_str()))
+            .map(|a| a.text.clone())
+            .collect();
+        if orderings.is_empty() {
+            continue; // `.load(path)` on a non-atomic: not ours
+        }
+        ops.push(AtomicOp {
+            field: toks[i - 2].text.clone(),
+            method: t.text.clone(),
+            line: t.line,
+            orderings,
+            discarded: toks.get(close + 1).is_some_and(|n| n.is_punct(';')),
+        });
+    }
+    ops
+}
+
+/// **atomic-ordering** — three checks over the per-file atomic ops:
+///  1. `SeqCst` anywhere is flagged: nothing in this crate needs a total
+///     order, and SeqCst hides the author's actual intent.
+///  2. A *pure counter* — only `fetch_*` ops whose results are discarded,
+///     never stored/swapped/CAS'd, and only ever loaded `Relaxed` — must
+///     use `Relaxed` throughout. (An `Acquire` load reclassifies the
+///     field as an RMW-publish handoff, e.g. the registry's epochs.)
+///  3. A *handoff* field must pair a releasing write (Release/AcqRel
+///     store or RMW) with Acquire loads; a one-sided or Relaxed/Relaxed
+///     pair is flagged with both sites.
+pub fn atomic_ordering(m: &SourceModel, out: &mut Vec<Finding>) {
+    let ops = collect_atomic_ops(m);
+    for op in &ops {
+        if op.orderings.iter().any(|o| o == "SeqCst") {
+            out.push(finding(
+                m,
+                "atomic-ordering",
+                op.line,
+                format!(
+                    "`SeqCst` on `{}` — use the weakest correct ordering \
+                     (Relaxed for counters, Acquire/Release for handoff)",
+                    op.field
+                ),
+            ));
+        }
+    }
+    let mut fields: Vec<&String> = ops.iter().map(|o| &o.field).collect();
+    fields.sort();
+    fields.dedup();
+    for field in fields {
+        let fo: Vec<&AtomicOp> = ops.iter().filter(|o| &o.field == field).collect();
+        let strong = |o: &AtomicOp, want: &str| {
+            o.orderings.iter().any(|x| x == want || x == "AcqRel" || x == "SeqCst")
+        };
+        let fetches: Vec<&&AtomicOp> =
+            fo.iter().filter(|o| o.method.starts_with("fetch_")).collect();
+        let stores: Vec<&&AtomicOp> = fo.iter().filter(|o| o.method == "store").collect();
+        let loads: Vec<&&AtomicOp> = fo.iter().filter(|o| o.method == "load").collect();
+        let cas = fo.iter().any(|o| {
+            matches!(
+                o.method.as_str(),
+                "swap" | "compare_exchange" | "compare_exchange_weak" | "compare_and_swap"
+            )
+        });
+        let acq_load = loads.iter().any(|o| strong(o, "Acquire"));
+        let rel_write = fo
+            .iter()
+            .filter(|o| o.method != "load")
+            .any(|o| strong(o, "Release"));
+        if !fetches.is_empty()
+            && fetches.iter().all(|o| o.discarded)
+            && stores.is_empty()
+            && !cas
+            && !acq_load
+        {
+            // Pure counter: every op, loads included, must be Relaxed.
+            for o in &fo {
+                if o.orderings.iter().any(|x| x != "Relaxed" && x != "SeqCst") {
+                    out.push(finding(
+                        m,
+                        "atomic-ordering",
+                        o.line,
+                        format!(
+                            "monotonic counter `{field}` uses `{}` — counters \
+                             synchronize nothing; use Relaxed",
+                            o.orderings.join("/"),
+                        ),
+                    ));
+                }
+            }
+            continue;
+        }
+        let writes_exist = !stores.is_empty() || !fetches.is_empty() || cas;
+        if acq_load && writes_exist && !rel_write {
+            let load = loads.iter().find(|o| strong(o, "Acquire")).unwrap_or(&loads[0]);
+            let write = fo.iter().find(|o| o.method != "load").map_or(0, |o| o.line);
+            out.push(finding(
+                m,
+                "atomic-ordering",
+                load.line,
+                format!(
+                    "`{field}` is loaded with Acquire (line {}) but no write \
+                     releases it (e.g. line {write}) — the pair publishes nothing",
+                    load.line,
+                ),
+            ));
+            continue;
+        }
+        if stores.is_empty() || loads.is_empty() {
+            continue;
+        }
+        if !rel_write && !acq_load {
+            out.push(finding(
+                m,
+                "atomic-ordering",
+                loads[0].line,
+                format!(
+                    "store/load pair on `{field}` is Relaxed on both sides \
+                     (store line {}, load line {}) — a cross-thread handoff \
+                     needs Release/Acquire",
+                    stores[0].line, loads[0].line,
+                ),
+            ));
+        } else if rel_write && !acq_load {
+            let write = fo
+                .iter()
+                .find(|o| o.method != "load" && strong(o, "Release"))
+                .map_or(stores[0].line, |o| o.line);
+            out.push(finding(
+                m,
+                "atomic-ordering",
+                loads[0].line,
+                format!(
+                    "`{field}` is written with Release (line {write}) but loaded \
+                     Relaxed (line {}) — the pair publishes nothing",
+                    loads[0].line,
+                ),
+            ));
+        }
+    }
+}
+
+/// **unsafe-inventory** — every `unsafe` site needs a `// SAFETY:` line
+/// comment immediately above (or trailing on the same line), and all sites
+/// are exported into the machine-readable report whether justified or not.
+pub fn unsafe_inventory(m: &SourceModel, out: &mut Vec<Finding>, inv: &mut Vec<UnsafeSite>) {
+    let toks = &m.toks;
+    for i in 0..toks.len() {
+        if !toks[i].is_ident("unsafe") {
+            continue;
+        }
+        let kind = match toks.get(i + 1) {
+            Some(n) if n.is_ident("impl") => "unsafe impl",
+            Some(n) if n.is_ident("fn") => "unsafe fn",
+            Some(n) if n.is_ident("trait") => "unsafe trait",
+            Some(n) if n.is_punct('{') => "unsafe block",
+            _ => "unsafe",
+        };
+        let line = toks[i].line;
+        let safety = safety_comment(m, line);
+        if safety.is_none() {
+            out.push(finding(
+                m,
+                "unsafe-inventory",
+                line,
+                format!("{kind} without an adjacent `// SAFETY:` justification"),
+            ));
+        }
+        inv.push(UnsafeSite {
+            file: m.path.clone(),
+            line,
+            kind,
+            safety,
+        });
+    }
+}
+
+/// The `// SAFETY:` text covering an unsafe site at `line`: a trailing
+/// comment on the line itself, or the comment block directly above (walked
+/// upward through contiguous own-line comments, so a multi-line
+/// justification starting with `SAFETY:` counts).
+fn safety_comment(m: &SourceModel, line: u32) -> Option<String> {
+    let grab = |text: &str| {
+        let at = text.find("SAFETY:")?;
+        Some(text[at + "SAFETY:".len()..].trim().to_string())
+    };
+    if let Some(c) = m.comments.iter().find(|c| c.line == line && c.text.contains("SAFETY:")) {
+        return grab(&c.text);
+    }
+    let mut l = line.saturating_sub(1);
+    while l > 0 {
+        let on_line: Vec<_> = m.comments.iter().filter(|c| c.line == l && !c.trailing).collect();
+        if on_line.is_empty() {
+            return None; // code or blank: the comment block (if any) ended
+        }
+        if let Some(c) = on_line.iter().find(|c| c.text.contains("SAFETY:")) {
+            return grab(&c.text);
+        }
+        l -= 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(src: &str, rule: fn(&SourceModel, &mut Vec<Finding>)) -> Vec<Finding> {
+        let m = SourceModel::build("src/coordinator/serving/queue.rs", src);
+        let mut out = Vec::new();
+        rule(&m, &mut out);
+        out
+    }
+
+    #[test]
+    fn lock_discipline_fires_and_clears() {
+        let bad = "fn f(m: &std::sync::Mutex<u32>) { let _ = m.lock().unwrap(); }";
+        let got = run(bad, lock_discipline);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].allowed.is_none());
+        let bad2 = "fn f(m: &std::sync::Mutex<u32>) { let _ = m.lock().expect(\"x\"); }";
+        assert_eq!(run(bad2, lock_discipline).len(), 1);
+        let fixed = "fn f(m: &std::sync::Mutex<u32>) { let _ = lock_recover(m); }";
+        assert!(run(fixed, lock_discipline).is_empty());
+        // The blessed wrapper itself is exempt.
+        let wrapper = concat!(
+            "fn lock_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {\n",
+            "    m.lock().unwrap()\n",
+            "}\n",
+        );
+        assert!(run(wrapper, lock_discipline).is_empty());
+    }
+
+    #[test]
+    fn lock_discipline_allow_escape() {
+        let src = concat!(
+            "fn f(m: &std::sync::Mutex<u32>) {\n",
+            "    // analyze: allow(lock-discipline, reason=\"poison fixture\")\n",
+            "    let _ = m.lock().unwrap();\n",
+            "}\n",
+        );
+        let got = run(src, lock_discipline);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].allowed.as_deref(), Some("poison fixture"));
+    }
+
+    #[test]
+    fn panic_freedom_fires_on_each_shape() {
+        let src = concat!(
+            "fn f(v: &[f32], o: Option<u32>) -> f32 {\n",
+            "    let _a = o.unwrap();\n",
+            "    let _b = o.expect(\"x\");\n",
+            "    if v.is_empty() { panic!(\"empty\"); }\n",
+            "    v[0]\n",
+            "}\n",
+        );
+        let got = run(src, panic_freedom);
+        assert_eq!(got.len(), 4, "{got:?}");
+    }
+
+    #[test]
+    fn panic_freedom_ignores_types_tests_and_cold_modules() {
+        let src = concat!(
+            "fn f(v: &mut [f32]) -> Option<f32> { v.first().copied() }\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn t(v: &[f32]) -> f32 { v[0] }\n",
+            "}\n",
+        );
+        assert!(run(src, panic_freedom).is_empty());
+        // Same violating code in a non-hot module: out of scope.
+        let m = SourceModel::build("src/formats.rs", "fn f(v: &[f32]) -> f32 { v[0] }");
+        let mut out = Vec::new();
+        panic_freedom(&m, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn atomic_ordering_flags_seqcst_and_counter_misuse() {
+        let src = concat!(
+            "fn f(c: &Ctrs) {\n",
+            "    c.hits.fetch_add(1, Ordering::SeqCst);\n",
+            "    c.misses.fetch_add(1, Ordering::Acquire);\n",
+            "    c.good.fetch_add(1, Ordering::Relaxed);\n",
+            "}\n",
+        );
+        let got = run(src, atomic_ordering);
+        assert_eq!(got.len(), 2, "{got:?}");
+        assert!(got.iter().any(|f| f.message.contains("SeqCst")));
+        assert!(got.iter().any(|f| f.message.contains("monotonic counter")));
+    }
+
+    #[test]
+    fn atomic_ordering_flags_relaxed_handoff_pairs() {
+        let bad = concat!(
+            "fn publish(s: &S) { s.ready.store(true, Ordering::Relaxed); }\n",
+            "fn consume(s: &S) -> bool { s.ready.load(Ordering::Relaxed) }\n",
+        );
+        let got = run(bad, atomic_ordering);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("Relaxed on both sides"));
+        let one_sided = concat!(
+            "fn publish(s: &S) { s.ready.store(true, Ordering::Release); }\n",
+            "fn consume(s: &S) -> bool { s.ready.load(Ordering::Relaxed) }\n",
+        );
+        assert_eq!(run(one_sided, atomic_ordering).len(), 1);
+        let fixed = concat!(
+            "fn publish(s: &S) { s.ready.store(true, Ordering::Release); }\n",
+            "fn consume(s: &S) -> bool { s.ready.load(Ordering::Acquire) }\n",
+        );
+        assert!(run(fixed, atomic_ordering).is_empty());
+    }
+
+    #[test]
+    fn atomic_ordering_treats_acquire_loaded_epochs_as_handoffs() {
+        // The registry epoch shape: discarded fetch_add + Acquire load is
+        // an RMW publish, not a counter — AcqRel bumps are correct…
+        let good = concat!(
+            "fn bump(s: &S) { s.epoch.fetch_add(1, Ordering::AcqRel); }\n",
+            "fn read(s: &S) -> usize { s.epoch.load(Ordering::Acquire) }\n",
+        );
+        assert!(run(good, atomic_ordering).is_empty());
+        // …but a Relaxed bump under an Acquire load publishes nothing.
+        let bad = concat!(
+            "fn bump(s: &S) { s.epoch.fetch_add(1, Ordering::Relaxed); }\n",
+            "fn read(s: &S) -> usize { s.epoch.load(Ordering::Acquire) }\n",
+        );
+        let got = run(bad, atomic_ordering);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("no write"), "{}", got[0].message);
+    }
+
+    #[test]
+    fn atomic_ordering_accepts_rmw_handoff_and_used_results() {
+        // `fetch_sub(..) == 1` with AcqRel is the drain handoff: the result
+        // is used, so the field is not a "pure counter".
+        let src = concat!(
+            "fn drop_claim(e: &E) {\n",
+            "    if e.in_flight.fetch_sub(1, Ordering::AcqRel) == 1 { e.notify(); }\n",
+            "}\n",
+            "fn wait(e: &E) -> bool { e.in_flight.load(Ordering::Acquire) == 0 }\n",
+        );
+        assert!(run(src, atomic_ordering).is_empty());
+    }
+
+    #[test]
+    fn unsafe_inventory_requires_safety_comment() {
+        let bad = "fn f(p: *mut f32) { let _ = unsafe { *p }; }";
+        let m = SourceModel::build("x.rs", bad);
+        let (mut out, mut inv) = (Vec::new(), Vec::new());
+        unsafe_inventory(&m, &mut out, &mut inv);
+        assert_eq!(out.len(), 1);
+        assert_eq!(inv.len(), 1);
+        assert!(inv[0].safety.is_none());
+
+        let good = concat!(
+            "fn f(p: *mut f32) {\n",
+            "    // SAFETY: p is valid for writes; caller guarantees it.\n",
+            "    // (second justification line)\n",
+            "    let _ = unsafe { *p };\n",
+            "}\n",
+            "// SAFETY: no shared mutation.\n",
+            "unsafe impl Sync for W {}\n",
+        );
+        let m = SourceModel::build("x.rs", good);
+        let (mut out, mut inv) = (Vec::new(), Vec::new());
+        unsafe_inventory(&m, &mut out, &mut inv);
+        assert!(out.is_empty(), "{out:?}");
+        assert_eq!(inv.len(), 2);
+        assert_eq!(inv[1].kind, "unsafe impl");
+        assert!(inv[0].safety.as_deref().unwrap().starts_with("p is valid"));
+    }
+}

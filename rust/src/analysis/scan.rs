@@ -1,0 +1,386 @@
+//! Structural scanner: turns a lexed file into the shape the rules consume.
+//!
+//! Three lightweight structures are extracted from the token stream:
+//!  * **function spans** — `fn name … { … }` token ranges, so rules can ask
+//!    "which function am I in" (the `lock_recover` exemption, guard scopes);
+//!  * **test spans** — token ranges covered by a `#[cfg(test)]` item, so
+//!    rules that only govern production code can skip fixtures;
+//!  * **allow annotations** — `// analyze: allow(rule, reason="…")` escapes
+//!    with their resolved line scope (the next statement or block; the same
+//!    line when trailing). A malformed annotation — unknown shape, missing
+//!    or empty reason — is itself reported, and can never be suppressed.
+
+use super::lexer::{lex, Comment, Kind, Tok};
+
+/// A function body: `name` plus the inclusive token range of `fn … }`.
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    pub name: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// A parsed `analyze: allow(rule, reason="…")` escape covering `lines`.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub rule: String,
+    pub reason: String,
+    pub lines: (u32, u32),
+}
+
+/// One file, scanned: tokens plus the structural overlays above.
+#[derive(Debug)]
+pub struct SourceModel {
+    pub path: String,
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+    pub fns: Vec<FnSpan>,
+    test_spans: Vec<(usize, usize)>,
+    allows: Vec<Allow>,
+    /// (line, error) for annotations that parsed as `analyze:` but are
+    /// malformed — surfaced as unsuppressible findings.
+    pub bad_annotations: Vec<(u32, String)>,
+}
+
+impl SourceModel {
+    pub fn build(path: &str, src: &str) -> SourceModel {
+        let lexed = lex(src);
+        let toks = lexed.toks;
+        let fns = collect_fns(&toks);
+        let test_spans = collect_test_spans(&toks);
+        let mut allows = Vec::new();
+        let mut bad_annotations = Vec::new();
+        collect_allows(&toks, &lexed.comments, &mut allows, &mut bad_annotations);
+        SourceModel {
+            path: path.to_string(),
+            toks,
+            comments: lexed.comments,
+            fns,
+            test_spans,
+            allows,
+            bad_annotations,
+        }
+    }
+
+    /// Is token `ix` inside a `#[cfg(test)]` item?
+    pub fn in_test(&self, ix: usize) -> bool {
+        self.test_spans.iter().any(|&(s, e)| ix >= s && ix <= e)
+    }
+
+    /// Innermost function containing token `ix`.
+    pub fn enclosing_fn(&self, ix: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| ix >= f.start && ix <= f.end)
+            .min_by_key(|f| f.end - f.start)
+    }
+
+    /// The annotation escape covering `rule` at `line`, if any.
+    pub fn allow_for(&self, rule: &str, line: u32) -> Option<&Allow> {
+        self.allows
+            .iter()
+            .find(|a| a.rule == rule && line >= a.lines.0 && line <= a.lines.1)
+    }
+
+    /// All parsed allows (for reporting).
+    pub fn allows(&self) -> &[Allow] {
+        &self.allows
+    }
+}
+
+/// End of the statement (or item) starting at token `start`: the first `;`
+/// at the statement's own depth, or the close of a block it heads —
+/// continuing through `else` chains and a trailing `;` after a block.
+pub fn statement_end(toks: &[Tok], start: usize) -> usize {
+    let mut depth = 0i32;
+    let mut i = start;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind == Kind::Punct {
+            match t.text.as_bytes()[0] {
+                b'{' | b'(' | b'[' => depth += 1,
+                b')' | b']' => depth -= 1,
+                b';' if depth == 0 => return i,
+                b'}' => {
+                    depth -= 1;
+                    if depth < 0 {
+                        // Enclosing block closed: the statement was its tail.
+                        return i.saturating_sub(1);
+                    }
+                    if depth == 0 {
+                        match toks.get(i + 1) {
+                            Some(n) if n.is_ident("else") => {}
+                            Some(n) if n.is_punct(';') => return i + 1,
+                            Some(n) if n.is_punct('.') || n.is_punct('?') => {}
+                            _ => return i,
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+fn collect_fns(toks: &[Tok]) -> Vec<FnSpan> {
+    let mut fns = Vec::new();
+    for i in 0..toks.len() {
+        if !toks[i].is_ident("fn") {
+            continue;
+        }
+        let Some(name_tok) = toks.get(i + 1) else { continue };
+        if name_tok.kind != Kind::Ident {
+            continue; // `fn(...)` pointer type
+        }
+        // Body: first `{` at paren depth 0; a `;` first means a declaration.
+        let mut depth = 0i32;
+        let mut j = i + 2;
+        let mut body_start = None;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.kind == Kind::Punct {
+                match t.text.as_bytes()[0] {
+                    b'(' | b'[' => depth += 1,
+                    b')' | b']' => depth -= 1,
+                    b'{' if depth == 0 => {
+                        body_start = Some(j);
+                        break;
+                    }
+                    b';' if depth == 0 => break,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        let Some(open) = body_start else { continue };
+        let close = matching_close(toks, open);
+        fns.push(FnSpan {
+            name: name_tok.text.clone(),
+            start: i,
+            end: close,
+        });
+    }
+    fns
+}
+
+/// Index of the `}` matching the `{` at `open` (or the last token).
+pub fn matching_close(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.kind == Kind::Punct {
+            match t.text.as_bytes()[0] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return j;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+fn collect_test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    let mut i = 0;
+    while i + 1 < toks.len() {
+        if !(toks[i].is_punct('#') && toks[i + 1].is_punct('[')) {
+            i += 1;
+            continue;
+        }
+        // Attribute content up to the matching `]`.
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        let mut has_cfg = false;
+        let mut has_test = false;
+        let mut has_not = false;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.is_punct('[') {
+                depth += 1;
+            } else if t.is_punct(']') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if t.is_ident("cfg") {
+                has_cfg = true;
+            } else if t.is_ident("test") {
+                has_test = true;
+            } else if t.is_ident("not") {
+                has_not = true;
+            }
+            j += 1;
+        }
+        if !(has_cfg && has_test && !has_not) {
+            i = j + 1;
+            continue;
+        }
+        // Skip any further attributes, then take the item's full extent.
+        let mut k = j + 1;
+        while k + 1 < toks.len() && toks[k].is_punct('#') && toks[k + 1].is_punct('[') {
+            let mut d = 0i32;
+            while k < toks.len() {
+                if toks[k].is_punct('[') {
+                    d += 1;
+                } else if toks[k].is_punct(']') {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            k += 1;
+        }
+        let end = statement_end(toks, k);
+        spans.push((i, end));
+        i = j + 1; // nested #[cfg(test)] under a test mod is subsumed
+    }
+    spans
+}
+
+fn collect_allows(
+    toks: &[Tok],
+    comments: &[Comment],
+    allows: &mut Vec<Allow>,
+    bad: &mut Vec<(u32, String)>,
+) {
+    for c in comments {
+        let body = c
+            .text
+            .trim_start_matches('/')
+            .trim_start_matches('*')
+            .trim_end_matches('/')
+            .trim_end_matches('*')
+            .trim();
+        let Some(directive) = body.strip_prefix("analyze:") else {
+            continue;
+        };
+        match parse_allow(directive.trim()) {
+            Ok((rule, reason)) => {
+                let lines = if c.trailing {
+                    (c.line, c.line)
+                } else {
+                    match toks.iter().position(|t| t.line > c.line) {
+                        Some(first) => {
+                            let end = statement_end(toks, first);
+                            (c.line, toks[end].line)
+                        }
+                        None => (c.line, c.line),
+                    }
+                };
+                allows.push(Allow { rule, reason, lines });
+            }
+            Err(e) => bad.push((c.line, e)),
+        }
+    }
+}
+
+/// Parse `allow(rule, reason="…")`. The reason is mandatory and non-empty:
+/// an escape without a recorded justification is a finding, not a waiver.
+fn parse_allow(s: &str) -> Result<(String, String), String> {
+    let inner = s
+        .strip_prefix("allow(")
+        .and_then(|r| r.strip_suffix(')'))
+        .ok_or_else(|| {
+            format!("malformed analyze directive '{s}' (want allow(rule, reason=\"…\"))")
+        })?;
+    let (rule, rest) = inner
+        .split_once(',')
+        .ok_or_else(|| "allow() is missing the mandatory reason=\"…\"".to_string())?;
+    let rule = rule.trim();
+    if rule.is_empty() || !rule.bytes().all(|b| b.is_ascii_lowercase() || b == b'-') {
+        return Err(format!("'{rule}' is not a rule name (kebab-case)"));
+    }
+    let reason = rest
+        .trim()
+        .strip_prefix("reason=")
+        .map(str::trim)
+        .and_then(|r| r.strip_prefix('"'))
+        .and_then(|r| r.strip_suffix('"'))
+        .ok_or_else(|| "allow() reason must be reason=\"…\"".to_string())?;
+    if reason.trim().is_empty() {
+        return Err("allow() reason must not be empty".to_string());
+    }
+    Ok((rule.to_string(), reason.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fn_spans_and_enclosing() {
+        let m = SourceModel::build(
+            "x.rs",
+            "fn outer() { let f = |x: u32| x; inner(); }\nfn inner() {}\n",
+        );
+        assert_eq!(m.fns.len(), 2);
+        let ix = m.toks.iter().position(|t| t.is_ident("inner")).unwrap();
+        assert_eq!(m.enclosing_fn(ix).unwrap().name, "outer");
+    }
+
+    #[test]
+    fn cfg_test_spans_cover_the_module() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n fn t() { x.lock().unwrap(); }\n}\n";
+        let m = SourceModel::build("x.rs", src);
+        let unwrap_ix = m.toks.iter().position(|t| t.is_ident("unwrap")).unwrap();
+        let live_ix = m.toks.iter().position(|t| t.is_ident("live")).unwrap();
+        assert!(m.in_test(unwrap_ix));
+        assert!(!m.in_test(live_ix));
+    }
+
+    #[test]
+    fn allow_scope_covers_next_statement_and_blocks() {
+        let src = "\
+fn f(v: &[f32]) -> f32 {
+    // analyze: allow(panic-freedom, reason=\"indices bounded by caller\")
+    for i in 0..4 {
+        let _ = v[i];
+    }
+    v[9]
+}
+";
+        let m = SourceModel::build("x.rs", src);
+        assert_eq!(m.allows().len(), 1);
+        let a = &m.allows()[0];
+        assert_eq!(a.rule, "panic-freedom");
+        assert_eq!(a.lines, (2, 5), "covers the whole for block: {a:?}");
+        assert!(m.allow_for("panic-freedom", 4).is_some());
+        assert!(m.allow_for("panic-freedom", 6).is_none(), "v[9] is outside");
+        assert!(m.allow_for("lock-discipline", 4).is_none(), "other rules unaffected");
+    }
+
+    #[test]
+    fn trailing_allow_covers_only_its_line() {
+        let src = concat!(
+            "fn f() {\n",
+            "    x.lock().unwrap(); // analyze: allow(lock-discipline, reason=\"pt\")\n",
+            "    y.lock().unwrap();\n",
+            "}\n",
+        );
+        let m = SourceModel::build("x.rs", src);
+        assert!(m.allow_for("lock-discipline", 2).is_some());
+        assert!(m.allow_for("lock-discipline", 3).is_none());
+    }
+
+    #[test]
+    fn malformed_allows_are_reported() {
+        for bad in [
+            "// analyze: allow(panic-freedom)",
+            "// analyze: allow(panic-freedom, reason=\"\")",
+            "// analyze: allow(Panic, reason=\"x\")",
+            "// analyze: deny(panic-freedom)",
+        ] {
+            let m = SourceModel::build("x.rs", &format!("{bad}\nfn f() {{}}\n"));
+            assert_eq!(m.bad_annotations.len(), 1, "{bad}");
+            assert!(m.allows().is_empty(), "{bad}");
+        }
+    }
+}

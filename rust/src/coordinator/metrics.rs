@@ -859,7 +859,7 @@ mod tests {
         let m = Arc::new(Mutex::new(7usize));
         let m2 = Arc::clone(&m);
         let _ = std::thread::spawn(move || {
-            let _guard = m2.lock().unwrap();
+            let _guard = lock_recover(&m2);
             panic!("poison the mutex");
         })
         .join();

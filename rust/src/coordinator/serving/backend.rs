@@ -354,6 +354,7 @@ impl BatchModel for NativeSparseModel {
         anyhow::ensure!(x.len() == b * d, "batch input length mismatch");
         self.resolve_plans()?;
         // (batch × d) → (d × batch): kernels consume column-major batches.
+        // analyze: allow(panic-freedom, reason="xt is sized b*d at construction and x.len()==b*d is ensured above")
         for r in 0..b {
             for col in 0..d {
                 self.xt[col * b + r] = x[r * d + col];
@@ -364,11 +365,15 @@ impl BatchModel for NativeSparseModel {
         // flush path — concurrent workers never contend here.
         let kernel1 = self.registry.for_matrix(&self.w1)?;
         let kernel2 = self.registry.for_matrix(&self.w2)?;
-        let plan1 = self.plan1.as_mut().expect("resolved above");
+        let plan1 = self
+            .plan1
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("layer-1 plan missing after resolve_plans"))?;
         let t1 = std::time::Instant::now();
         kernel1.execute(&self.w1, plan1, &self.xt, &mut self.hid, b)?;
         let secs1 = t1.elapsed().as_secs_f64();
         self.perf1.observe(self.w1.flops(b) / secs1.max(1e-12) / 1e9);
+        // analyze: allow(panic-freedom, reason="hid is sized h*b and b1 is sized h at construction; r<h, j<b")
         for r in 0..h {
             let bias = self.b1[r];
             for j in 0..b {
@@ -376,13 +381,17 @@ impl BatchModel for NativeSparseModel {
                 self.hid[r * b + j] = if v > 0.0 { v } else { 0.0 };
             }
         }
-        let plan2 = self.plan2.as_mut().expect("resolved above");
+        let plan2 = self
+            .plan2
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("layer-2 plan missing after resolve_plans"))?;
         let t2 = std::time::Instant::now();
         kernel2.execute(&self.w2, plan2, &self.hid, &mut self.logits, b)?;
         let secs2 = t2.elapsed().as_secs_f64();
         self.perf2.observe(self.w2.flops(b) / secs2.max(1e-12) / 1e9);
         // (c × batch) + bias → (batch × c) row-major for the batcher.
         let mut out = vec![0.0f32; b * c];
+        // analyze: allow(panic-freedom, reason="out allocated b*c on the previous line; logits is c*b and b2 is c by construction")
         for j in 0..b {
             for r in 0..c {
                 out[j * c + r] = self.logits[r * b + j] + self.b2[r];
@@ -425,6 +434,7 @@ pub(crate) mod xla_backend {
             let init = crate::util::json::Json::parse(&init_text)?;
             let mut params = Vec::new();
             for (idx, name) in meta.param_order.iter().enumerate() {
+                // analyze: allow(panic-freedom, reason="ModuleMeta keeps param_order and inputs the same length")
                 let sig = &meta.inputs[idx];
                 let vals: Vec<f32> = init
                     .req_arr(name)?
@@ -460,6 +470,7 @@ pub(crate) mod xla_backend {
             let mut inputs = self.params.clone();
             inputs.push(HostTensor::new(x.to_vec(), &[self.batch, self.in_dim]));
             let out = self.exe.run(&inputs)?;
+            // analyze: allow(panic-freedom, reason="XLA executables always produce at least one output tensor")
             Ok(out[0].data.clone())
         }
     }

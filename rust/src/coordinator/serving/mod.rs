@@ -1070,7 +1070,7 @@ mod tests {
             1
         }
         fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
-            self.log.lock().unwrap().push(x[0]);
+            lock_recover(&self.log).push(x[0]);
             let _ = self.gate.recv(); // blocks until the test releases (or drops) the gate
             Ok(x.to_vec())
         }
@@ -1092,7 +1092,7 @@ mod tests {
         let factory_log = Arc::clone(&log);
         let server = InferenceServer::start_model(
             move || {
-                let gate = slot.lock().unwrap().take().expect("single worker");
+                let gate = lock_recover(&slot).take().expect("single worker");
                 Ok(Box::new(GatedModel {
                     gate,
                     log: Arc::clone(&factory_log),
@@ -1119,7 +1119,7 @@ mod tests {
         // Occupy the single worker: wait until it has popped the request
         // and entered forward (the log records it just before blocking).
         let rx1 = server.submit(vec![1.0]).unwrap();
-        while log.lock().unwrap().is_empty() {
+        while lock_recover(&log).is_empty() {
             std::thread::yield_now();
         }
         // Worker blocked; these three sit in the queue in submit order.
@@ -1146,7 +1146,7 @@ mod tests {
         assert_eq!(rx_norm.recv().unwrap().unwrap(), vec![4.0]);
         assert_eq!(rx_low.recv().unwrap().unwrap(), vec![2.0]);
         // The queue released them high → normal → low.
-        assert_eq!(*log.lock().unwrap(), vec![1.0, 3.0, 4.0, 2.0]);
+        assert_eq!(*lock_recover(&log), vec![1.0, 3.0, 4.0, 2.0]);
 
         // Graceful shutdown: queue rejects new work afterwards.
         server.shutdown();
@@ -1160,7 +1160,7 @@ mod tests {
         let (server, gate_tx, log) = gated_server_with(64, ModelQuota::Absolute(2));
         // Occupy the worker so subsequent submits stay queued.
         let rx0 = server.submit(vec![0.0]).unwrap();
-        while log.lock().unwrap().is_empty() {
+        while lock_recover(&log).is_empty() {
             std::thread::yield_now();
         }
         let rx1 = server.submit(vec![1.0]).unwrap();
@@ -1356,7 +1356,7 @@ mod tests {
     fn shutdown_drains_queued_requests() {
         let (server, gate_tx, log) = gated_server(64);
         let rx_first = server.submit(vec![10.0]).unwrap();
-        while log.lock().unwrap().is_empty() {
+        while lock_recover(&log).is_empty() {
             std::thread::yield_now();
         }
         let pending: Vec<_> = (0..5)

@@ -298,20 +298,24 @@ impl QueueState {
     /// tombstone. Keeps the per-model live count exact and drops the
     /// model's index when it empties.
     fn remove(&mut self, seq: u64, class: usize, via_primary: bool) -> QueuedRequest {
+        // analyze: allow(panic-freedom, reason="seq was peeked from a live front under the same lock hold")
         let e = self
             .entries
             .remove(&seq)
             .expect("chosen candidate is live under the queue lock");
         debug_assert_eq!(e.class, class, "entry filed under a different class");
+        // analyze: allow(panic-freedom, reason="class is the entry's stored rank, always < CLASSES")
         if via_primary {
             let popped = self.classes[class].pop_front();
             debug_assert_eq!(popped, Some(seq));
         }
         let model = e.req.claim.id();
+        // analyze: allow(panic-freedom, reason="push keeps a by_model index alive for every live entry")
         let ix = self
             .by_model
             .get_mut(model)
             .expect("every live entry has a model index");
+        // analyze: allow(panic-freedom, reason="class is the entry's stored rank, always < CLASSES")
         if !via_primary {
             let popped = ix.classes[class].pop_front();
             debug_assert_eq!(popped, Some(seq));
@@ -425,10 +429,12 @@ impl RequestQueue {
             s.next_seq += 1;
             s.pushed += 1;
             let class = priority.rank();
+            // analyze: allow(panic-freedom, reason="Priority::rank() is bounded below CLASSES")
             s.classes[class].push_back(seq);
             // The common case — the model already has backlog — must not
             // allocate its id again under the lock; only the first entry
             // of a burst pays the `String` key.
+            // analyze: allow(panic-freedom, reason="class is Priority::rank(), bounded below CLASSES")
             if let Some(ix) = s.by_model.get_mut(model) {
                 ix.classes[class].push_back(seq);
                 ix.queued += 1;
@@ -471,6 +477,7 @@ impl RequestQueue {
         let now = Instant::now();
         let mut best: Option<(usize, u64, usize)> = None; // (eff, seq, class)
         for class in 0..CLASSES {
+            // analyze: allow(panic-freedom, reason="class iterates 0..CLASSES and both deque arrays have CLASSES slots")
             let front = match model {
                 None => front_live(&mut s.classes[class], &s.entries, &mut s.tombstones_cleaned),
                 Some(m) => match s.by_model.get_mut(m) {
@@ -481,6 +488,7 @@ impl RequestQueue {
                 },
             };
             let Some(seq) = front else { continue };
+            // analyze: allow(panic-freedom, reason="front_live only returns seqs that are live in entries")
             let enqueued = s.entries[&seq].req.enqueued;
             let eff = self.effective_rank(class, now, enqueued);
             if best.is_none_or(|(be, bs, _)| (eff, seq) < (be, bs)) {

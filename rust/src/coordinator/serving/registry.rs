@@ -549,7 +549,10 @@ impl ModelRegistry {
             .clone();
         let like_spec = st.entries.get(&like).and_then(|e| e.spec());
         Self::check_target(&st, alias, target, like_spec)?;
-        let route = st.aliases.get_mut(alias).expect("checked above");
+        let route = st
+            .aliases
+            .get_mut(alias)
+            .ok_or_else(|| anyhow::anyhow!("'{alias}' is not an alias"))?;
         route.target = target.to_string();
         route.canary = None;
         route.shadow = None;
@@ -581,8 +584,10 @@ impl ModelRegistry {
             .clone();
         let like = st.entries.get(&primary).and_then(|e| e.spec());
         Self::check_target(&st, alias, target, like)?;
-        st.aliases.get_mut(alias).expect("checked above").canary =
-            Some((target.to_string(), percent));
+        st.aliases
+            .get_mut(alias)
+            .ok_or_else(|| anyhow::anyhow!("'{alias}' is not an alias"))?
+            .canary = Some((target.to_string(), percent));
         Ok(())
     }
 
@@ -608,7 +613,10 @@ impl ModelRegistry {
             .clone();
         let like = st.entries.get(&primary).and_then(|e| e.spec());
         Self::check_target(&st, alias, target, like)?;
-        st.aliases.get_mut(alias).expect("checked above").shadow = Some(target.to_string());
+        st.aliases
+            .get_mut(alias)
+            .ok_or_else(|| anyhow::anyhow!("'{alias}' is not an alias"))?
+            .shadow = Some(target.to_string());
         Ok(())
     }
 

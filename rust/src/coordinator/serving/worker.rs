@@ -331,6 +331,7 @@ fn flush(set: &mut ModelSet, ctx: &WorkerContext, model_id: &str, pending: &mut 
         return;
     }
     wm.x.fill(0.0);
+    // analyze: allow(panic-freedom, reason="x is sized batch*in_dim and pending.len() <= batch by the flush trigger")
     for (s, req) in pending.iter().enumerate() {
         wm.x[s * in_dim..(s + 1) * in_dim].copy_from_slice(&req.x);
     }
@@ -339,6 +340,7 @@ fn flush(set: &mut ModelSet, ctx: &WorkerContext, model_id: &str, pending: &mut 
             ctx.metrics.record_flush(ctx.id, pending.len(), batch);
             ctx.metrics.record_model_flush(model_id, pending.len(), batch);
             for (s, req) in pending.drain(..).enumerate() {
+                // analyze: allow(panic-freedom, reason="this match arm guarantees logits.len() >= batch*classes and s < batch")
                 let row = &logits[s * classes..(s + 1) * classes];
                 match &req.route {
                     // The mirror's only output is its divergence deposit:
@@ -521,6 +523,7 @@ fn next_live_model(ctx: &WorkerContext, model: &str, until: Instant) -> ModelPop
 mod tests {
     use super::*;
     use crate::coordinator::serving::queue::Priority;
+    use crate::util::lock_recover;
     use crate::coordinator::serving::registry::ModelClaim;
     use std::sync::mpsc;
 
@@ -542,7 +545,7 @@ mod tests {
             1
         }
         fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
-            self.seen.lock().unwrap().extend_from_slice(x);
+            lock_recover(&self.seen).extend_from_slice(x);
             Ok(x.to_vec())
         }
     }
@@ -631,9 +634,9 @@ mod tests {
         }
         assert_eq!(rx_live.recv().unwrap().unwrap(), vec![7.0]);
         assert!(
-            !seen.lock().unwrap().contains(&5.0),
+            !lock_recover(&seen).contains(&5.0),
             "expired sample must not reach forward: {:?}",
-            seen.lock().unwrap()
+            lock_recover(&seen)
         );
         assert_eq!(metrics.rejected(), (0, 1));
         assert_eq!(metrics.totals(), (1, 1), "one served request, one batch");
@@ -671,7 +674,7 @@ mod tests {
         }
         queue.close();
         let seen = handle.join().unwrap();
-        assert!(seen.lock().unwrap().is_empty(), "expired request must not execute");
+        assert!(lock_recover(&seen).is_empty(), "expired request must not execute");
         assert_eq!(metrics.rejected(), (0, 1));
         assert_eq!(metrics.totals(), (0, 0), "no batch was executed");
     }
@@ -695,7 +698,7 @@ mod tests {
         }
         // The worker survived and served the well-formed request.
         assert_eq!(rx_ok.recv().unwrap().unwrap(), vec![9.0]);
-        assert!(!seen.lock().unwrap().contains(&2.0));
+        assert!(!lock_recover(&seen).contains(&2.0));
         assert_eq!(metrics.totals(), (1, 1));
     }
 

@@ -561,6 +561,7 @@ pub fn balanced_row_ranges(indptr: &[usize], threads: usize) -> Vec<(usize, usiz
         return Vec::new();
     }
     let threads = threads.max(1).min(rows);
+    // analyze: allow(panic-freedom, reason="indptr is a CSR row pointer of len rows+1, so rows is in bounds")
     let total = indptr[rows];
     let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(threads);
     let mut r0 = 0usize;
@@ -571,6 +572,7 @@ pub fn balanced_row_ranges(indptr: &[usize], threads: usize) -> Vec<(usize, usiz
         // Cumulative-nnz boundary this chunk should reach.
         let target = total * (t + 1) / threads;
         let mut r1 = r0 + 1;
+        // analyze: allow(panic-freedom, reason="r1 < rows is checked first and indptr has rows+1 entries")
         while r1 < rows && indptr[r1] < target {
             r1 += 1;
         }
@@ -581,6 +583,7 @@ pub fn balanced_row_ranges(indptr: &[usize], threads: usize) -> Vec<(usize, usiz
         // when either side carries no non-zeros (an empty head range is
         // extended by its non-empty successor, an empty tail absorbed by
         // its predecessor).
+        // analyze: allow(panic-freedom, reason="r0, r1, and stored range bounds never exceed rows, and indptr has rows+1 entries")
         match ranges.last_mut() {
             Some(prev) if indptr[r1] == indptr[r0] || indptr[prev.1] == indptr[prev.0] => {
                 prev.1 = r1;
@@ -799,7 +802,7 @@ mod tests {
         // A builder/executor dies while holding the plan lock.
         let poisoner = Arc::clone(&shared);
         let _ = std::thread::spawn(move || {
-            let _guard = poisoner.lock().unwrap();
+            let _guard = lock_recover(&poisoner);
             panic!("die mid-execute");
         })
         .join();

@@ -605,7 +605,13 @@ pub fn rbgp4mm_parallel_with_plan(
                 if uo >= m_o {
                     break;
                 }
-                // Safety: each uo owns rows [uo*TM, (uo+1)*TM) — disjoint.
+                // SAFETY: `o` has exactly `m_o * tile_rows` elements (the
+                // caller sized it to the padded output), and `uo < m_o`
+                // here, so `[uo*tile_rows, (uo+1)*tile_rows)` is in bounds.
+                // The `fetch_add` hands each `uo` to exactly one worker,
+                // so no two live slices alias: every packed-panel write
+                // lands in this worker's disjoint output rows, and the
+                // `&mut [f32]` borrow of `o` outlives the thread scope.
                 let ochunk = unsafe {
                     std::slice::from_raw_parts_mut(o_ptr.0.add(uo * tile_rows), tile_rows)
                 };
@@ -625,6 +631,10 @@ pub fn rbgp4mm_parallel(w: &Rbgp4Matrix, i: &[f32], o: &mut [f32], n: usize, thr
 }
 
 struct SendPtr(*mut f32);
+// SAFETY: SendPtr is only shared across the scoped workers above, which
+// never dereference the same offset twice: the dynamic `uo` counter
+// partitions the pointee into disjoint tile-row slices, so concurrent
+// `&SendPtr` access never produces aliasing writes.
 unsafe impl Sync for SendPtr {}
 
 /// Compute one output tile row (all rows with this `u_o`) into `ochunk`

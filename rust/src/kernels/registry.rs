@@ -136,6 +136,7 @@ fn tuned_build(
                 // (cheap, one execute) before being trusted; bit-identical
                 // winners need nothing.
                 let (_, mut winner) = candidates.swap_remove(ix);
+                // analyze: allow(panic-freedom, reason="candidates[0] is the heuristic seed; a reordering winner has ix > 0, so slot 0 survives the swap_remove")
                 let valid = if reorders_reduction(&winner.state) {
                     let tol = req.reduce_tol.unwrap_or(0.0);
                     let input = autotune::synth_input(w.cols() * n);
@@ -165,9 +166,11 @@ fn tuned_build(
             // the heuristic's output under the caller's tolerance before
             // it may enter the timed race at all.
             let mut admitted = vec![true; candidates.len()];
+            // analyze: allow(panic-freedom, reason="every ix ranges over 0..candidates.len()")
             let check: Vec<usize> = (0..candidates.len())
                 .filter(|&ix| reorders_reduction(&candidates[ix].1.state))
                 .collect();
+            // analyze: allow(panic-freedom, reason="check holds indices from 0..candidates.len() and admitted has candidates.len() slots")
             if !check.is_empty() {
                 let tol = req.reduce_tol.unwrap_or(0.0);
                 kernel.execute(w, &mut candidates[0].1, &input, &mut output, n)?;
@@ -183,6 +186,7 @@ fn tuned_build(
             let mut best_secs = f64::INFINITY;
             let mut best_ix = 0usize;
             for (ix, (_, cand)) in candidates.iter_mut().enumerate() {
+                // analyze: allow(panic-freedom, reason="admitted was sized to candidates.len() and ix enumerates candidates")
                 if !admitted[ix] {
                     continue;
                 }

@@ -15,6 +15,7 @@
 //!   training/serving drivers (Python never runs at request time).
 //! * [`bench_harness`] — regenerates every table of the paper's evaluation.
 
+pub mod analysis;
 pub mod bench_harness;
 pub mod coordinator;
 pub mod data;

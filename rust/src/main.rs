@@ -9,6 +9,7 @@
 //!   table1/2/3  regenerate the paper's evaluation tables
 //!   train       run the AOT train-step artifact on CIFAR-like data
 //!   serve       batched inference server demo over the forward artifact
+//!   analyze     static-analysis pass enforcing the crate's concurrency invariants
 
 use rbgp::bench_harness::{table1, table2, table3};
 use rbgp::coordinator::{InferenceServer, ServeError, ServerConfig, SubmitOptions};
@@ -59,6 +60,8 @@ COMMANDS
              [--tune off|quick|full] [--tune-cache FILE]
              [--retune-threshold 0.7]                          (native only)
              [--artifacts DIR] [--checkpoint ckpt.json]        (xla only)
+  analyze    [PATHS]... [--json] [--out FILE] [--deny RULE]... [--verbose]
+             lint the crate sources against the serving-core invariants
 
 With the `xla` feature, train/serve execute AOT artifacts on PJRT (run
 `make artifacts` first). Without it, they run the native plan-cached
@@ -93,7 +96,16 @@ on spare capacity and records max-abs logit divergence (the client is
 always answered by the primary), and --promote runs a full zero-downtime
 rollout after the traffic phase: atomically flip the alias to the named
 model, drain the old primary and retire it, printing exact eviction
-counters.";
+counters.
+
+`analyze` runs the built-in static-analysis pass (lock-discipline,
+lock-order, panic-freedom, atomic-ordering, unsafe-inventory) over
+src/benches/tests (or the given PATHS), exits non-zero on any finding
+not waived by an inline `// analyze: allow(rule, reason=\"...\")`, and
+with --json also writes the machine-readable report (findings, unsafe
+inventory, lock graph) to --out (default analysis_report.json).
+--deny RULE ignores that rule's waivers; --verbose lists waived
+findings in text mode.";
 
 fn main() {
     let args = Args::from_env();
@@ -147,11 +159,45 @@ fn run(args: &Args) -> anyhow::Result<()> {
         }
         Some("train") => train_cmd(args),
         Some("serve") => serve_cmd(args),
+        Some("analyze") => analyze_cmd(args),
         _ => {
             println!("{USAGE}");
             Ok(())
         }
     }
+}
+
+/// `rbgp analyze [PATHS]... [--json] [--out FILE] [--deny RULE]...` — the
+/// static-analysis pass over the crate's own sources. Exits non-zero when
+/// any finding is not covered by an `analyze: allow` waiver (or when its
+/// rule is denied, which ignores waivers).
+fn analyze_cmd(args: &Args) -> anyhow::Result<()> {
+    let roots: Vec<PathBuf> = if args.positional().len() > 1 {
+        args.positional()[1..].iter().map(PathBuf::from).collect()
+    } else {
+        rbgp::analysis::default_roots()
+    };
+    let deny: Vec<String> = args.get_all("deny").into_iter().map(str::to_string).collect();
+    for d in &deny {
+        anyhow::ensure!(
+            d == "all" || rbgp::analysis::RULES.contains(&d.as_str()),
+            "--deny {d}: unknown rule (known: {}, all)",
+            rbgp::analysis::RULES.join(", ")
+        );
+    }
+    let opts = rbgp::analysis::AnalysisOptions { roots, deny };
+    let report = rbgp::analysis::analyze_tree(&opts)?;
+    if args.flag("json") {
+        let text = report.to_json(&opts.deny).to_string_pretty();
+        let out = args.get_str("out", "analysis_report.json");
+        std::fs::write(&out, &text)?;
+        println!("{text}");
+    } else {
+        print!("{}", report.render_text(&opts.deny, args.flag("verbose")));
+    }
+    let denied = report.denied(&opts.deny).count();
+    anyhow::ensure!(denied == 0, "analyze: {denied} denied finding(s)");
+    Ok(())
 }
 
 fn gen_graph(args: &Args) -> anyhow::Result<()> {

@@ -31,7 +31,7 @@ impl ThreadPool {
                     .name(format!("rbgp-worker-{i}"))
                     .spawn(move || loop {
                         let job = {
-                            let guard = rx.lock().unwrap();
+                            let guard = super::lock_recover(&rx);
                             guard.recv()
                         };
                         match job {

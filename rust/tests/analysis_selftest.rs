@@ -1,0 +1,89 @@
+//! Repo-wide self-test for `rbgp analyze`: the same pass CI runs as a
+//! blocking step must come back clean over this crate's own sources, so
+//! a plain `cargo test` catches new invariant violations before CI does.
+
+use std::path::PathBuf;
+
+use rbgp::analysis::{analyze_tree, AnalysisOptions, Report};
+
+fn manifest_roots() -> Vec<PathBuf> {
+    let base = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    ["src", "benches", "tests"]
+        .iter()
+        .map(|d| base.join(d))
+        .filter(|p| p.is_dir())
+        .collect()
+}
+
+fn run_pass() -> Report {
+    analyze_tree(&AnalysisOptions {
+        roots: manifest_roots(),
+        deny: Vec::new(),
+    })
+    .expect("analysis pass runs over the crate tree")
+}
+
+#[test]
+fn repo_tree_has_no_unannotated_findings() {
+    let report = run_pass();
+    assert!(
+        report.files_scanned > 20,
+        "expected the whole crate, scanned only {} files",
+        report.files_scanned
+    );
+    let denied: Vec<String> = report
+        .denied(&[])
+        .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+        .collect();
+    assert!(
+        denied.is_empty(),
+        "unannotated findings (fix or add `// analyze: allow(rule, reason=\"…\")`):\n{}",
+        denied.join("\n")
+    );
+}
+
+#[test]
+fn every_waiver_carries_a_reason() {
+    let report = run_pass();
+    assert!(
+        report.allowed_count() > 0,
+        "the tree carries annotated debt; an empty waiver set means the scan missed it"
+    );
+    for f in report.findings.iter().filter(|f| f.allowed.is_some()) {
+        let reason = f.allowed.as_deref().unwrap_or("");
+        assert!(
+            !reason.trim().is_empty(),
+            "{}:{} [{}] waived without a reason",
+            f.file,
+            f.line,
+            f.rule
+        );
+    }
+}
+
+#[test]
+fn unsafe_inventory_is_fully_justified() {
+    let report = run_pass();
+    assert!(
+        !report.unsafe_inventory.is_empty(),
+        "the packed-panel kernel has unsafe sites; an empty inventory means the scan missed them"
+    );
+    for site in &report.unsafe_inventory {
+        assert!(
+            site.safety.is_some(),
+            "{}:{} `{}` lacks an adjacent // SAFETY: comment",
+            site.file,
+            site.line,
+            site.kind
+        );
+    }
+}
+
+#[test]
+fn report_artifact_says_clean() {
+    let report = run_pass();
+    let json = report.to_json(&[]).to_string_pretty();
+    assert!(json.contains("\"clean\": true"), "report not clean:\n{json}");
+    assert!(json.contains("\"unsafe_inventory\""));
+    assert!(json.contains("\"lock_graph_edges\""));
+}

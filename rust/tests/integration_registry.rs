@@ -14,6 +14,7 @@ use rbgp::coordinator::{
 use rbgp::kernels::plan::SparseMatrix;
 use rbgp::kernels::PlanCache;
 use rbgp::sparsity::memory::Pattern;
+use rbgp::util::lock_recover;
 use rbgp::train_native::{GradualSchedule, NativeTrainConfig};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -417,7 +418,7 @@ impl BatchModel for GatedTagModel {
         1
     }
     fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
-        self.log.lock().unwrap().extend_from_slice(x);
+        lock_recover(&self.log).extend_from_slice(x);
         let _ = self.gate.recv(); // blocks until the test drops the gate
         Ok(x.to_vec())
     }
@@ -434,7 +435,7 @@ fn gated_server(
     let server = InferenceServer::start_model_as(
         "slow",
         move || {
-            let gate = slot.lock().unwrap().take().expect("single worker");
+            let gate = lock_recover(&slot).take().expect("single worker");
             Ok(Box::new(GatedTagModel {
                 gate,
                 batch,
@@ -627,7 +628,7 @@ fn saturated_hot_model_never_blocks_cold_submits() {
     let rx0 = server
         .submit_with(vec![0.5], SubmitOptions::default().with_model("slow"))
         .unwrap();
-    while log.lock().unwrap().is_empty() {
+    while lock_recover(&log).is_empty() {
         std::thread::yield_now();
     }
     // Fill the hot model's quota with queued requests.

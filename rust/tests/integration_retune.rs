@@ -48,7 +48,7 @@ impl BatchModel for DriftingModel {
             .collect())
     }
     fn drift(&self) -> Option<f64> {
-        if self.epoch == 0 && self.drifted.load(Ordering::SeqCst) {
+        if self.epoch == 0 && self.drifted.load(Ordering::Acquire) {
             Some(0.3) // below any sane threshold
         } else {
             Some(1.0) // healthy: achieved == tuned expectation
@@ -60,7 +60,7 @@ impl BatchModel for DriftingModel {
         // never rejected.
         std::thread::sleep(Duration::from_millis(50));
         self.epoch += 1;
-        self.retunes.fetch_add(1, Ordering::SeqCst);
+        self.retunes.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 }
@@ -110,7 +110,7 @@ fn drift_retune_swaps_plans_without_rejecting_traffic() {
     // requests separated by idle windows longer than the worker's idle
     // tick, so drifted instances get re-tuned *between* serving work.
     // Every response across the whole timeline must be Ok.
-    drifted.store(true, Ordering::SeqCst);
+    drifted.store(true, Ordering::Release);
     let bursts = 4;
     let per_burst = 25;
     let mut served = Vec::new();
@@ -127,7 +127,7 @@ fn drift_retune_swaps_plans_without_rejecting_traffic() {
 
     // Every worker instance re-tuned exactly once, then reported healthy.
     assert_eq!(
-        retunes.load(Ordering::SeqCst),
+        retunes.load(Ordering::Relaxed),
         workers,
         "each worker's drifted instance re-tunes once and only once"
     );
@@ -203,7 +203,7 @@ fn disabled_threshold_never_retunes() {
     let deadline = Instant::now() + Duration::from_millis(1200);
     while Instant::now() < deadline {
         std::thread::sleep(Duration::from_millis(100));
-        assert_eq!(retunes.load(Ordering::SeqCst), 0, "disabled check must not fire");
+        assert_eq!(retunes.load(Ordering::Relaxed), 0, "disabled check must not fire");
     }
     assert_eq!(server.retunes(), 0);
     server.shutdown();
