@@ -1,0 +1,230 @@
+//! Network front-end benchmarks: what the TCP reactor costs over the
+//! in-process submit path, how it scales with connections, and what the
+//! bounded write buffer does to a reader that stops reading.
+//!
+//! Two parts on one RBGP4 demo pool (two models, one plan cache):
+//!
+//! * a **connections × skew grid** of closed-loop network clients — each
+//!   connection round-trips requests through the reactor, either spread
+//!   uniformly across both models or 90%-hot on one. Per cell:
+//!   throughput, p50/p99 round-trip latency, and the front-end's
+//!   accepted/rejected/shed accounting.
+//! * a **slow reader**: a connection that sends a burst and never reads
+//!   a byte, against a deliberately tiny write-buffer cap. Every
+//!   completed response must be *shed* (bounded memory, counted in
+//!   `frontend_totals`) instead of growing the buffer without bound.
+//!
+//! Results are written to `BENCH_frontend.json` (in the cargo package
+//! root, where `cargo bench` runs) so later front-end PRs can diff the
+//! trajectory the same way serving PRs diff `BENCH_server.json`.
+//!
+//! `cargo bench --bench frontend_bench` (RBGP_BENCH_FAST=1 quick pass)
+
+use rbgp::coordinator::{
+    BatchModel, Frontend, FrontendClient, FrontendConfig, InferenceServer, NativeSparseModel,
+    Priority, Request, ServerConfig, Status,
+};
+use rbgp::data::CifarLike;
+use rbgp::kernels::PlanCache;
+use rbgp::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const OUT_PATH: &str = "BENCH_frontend.json";
+const WORKERS: usize = 2;
+const BATCH: usize = 16;
+const CLASSES: usize = 16;
+const SLOW_READER_BURST: usize = 64;
+const SLOW_WRITE_CAP: usize = 64; // smaller than any response frame
+
+fn demo_factory(
+    seed: u64,
+    cache: Arc<PlanCache>,
+) -> impl Fn() -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static {
+    move || {
+        let mut m = NativeSparseModel::rbgp4_demo(CLASSES, BATCH, 1, seed, Arc::clone(&cache))?;
+        m.warm()?;
+        Ok(Box::new(m) as Box<dyn BatchModel>)
+    }
+}
+
+fn start_pool(total: usize) -> InferenceServer {
+    let cache = Arc::new(PlanCache::new());
+    let server = InferenceServer::start_model_as(
+        "v1",
+        demo_factory(0, Arc::clone(&cache)),
+        ServerConfig {
+            workers: WORKERS,
+            queue_cap: 4 * total.max(1),
+            max_wait: Duration::from_millis(2),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("server start");
+    server.register_model("v2", demo_factory(1, Arc::clone(&cache))).expect("register v2");
+    server
+}
+
+/// Route for request `r` on connection `c` under the given hot-model
+/// fraction (percent of traffic pinned to "v1").
+fn route(hot_pct: usize, c: usize, r: usize) -> &'static str {
+    if (c * 7919 + r * 104729) % 100 < hot_pct {
+        "v1"
+    } else {
+        "v2"
+    }
+}
+
+/// Closed-loop network load: `connections` clients, each round-tripping
+/// its share of `total` requests through the reactor. Returns wall
+/// seconds and per-request round-trip latencies in milliseconds.
+fn drive(addr: std::net::SocketAddr, server: &InferenceServer, connections: usize, hot_pct: usize, total: usize) -> (f64, Vec<f64>) {
+    let t0 = Instant::now();
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(total);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..connections)
+            .map(|c| {
+                let server = server.clone();
+                scope.spawn(move || {
+                    let mut client = FrontendClient::connect(addr).expect("connect");
+                    let mut data = CifarLike::new(server.in_dim, server.classes, 100 + c as u64);
+                    let mut lat = Vec::with_capacity(total / connections);
+                    for r in 0..total / connections {
+                        let b = data.test_batch(1);
+                        let t = Instant::now();
+                        let resp = client
+                            .infer(b.x, Some(route(hot_pct, c, r)), Priority::Normal, "bench", 0)
+                            .expect("round trip");
+                        assert_eq!(resp.status, Status::Ok, "bench request failed: {}", resp.detail);
+                        assert_eq!(resp.payload.len(), server.classes);
+                        lat.push(t.elapsed().as_secs_f64() * 1e3);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        for h in handles {
+            lat_ms.extend(h.join().expect("client thread"));
+        }
+    });
+    (t0.elapsed().as_secs_f64(), lat_ms)
+}
+
+fn pct(sorted_ms: &[f64], p: f64) -> f64 {
+    let idx = (p / 100.0 * (sorted_ms.len() - 1) as f64) as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+fn main() {
+    let fast = std::env::var("RBGP_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let total = if fast { 256 } else { 2048 };
+    println!(
+        "frontend bench — RBGP4 demo pool ({WORKERS} workers, batch {BATCH}), \
+         TCP reactor, {total} requests per cell\n"
+    );
+
+    let server = start_pool(total);
+    let fe = Frontend::start(server.clone(), FrontendConfig::default()).expect("frontend start");
+    let addr = fe.local_addr();
+
+    // ── connections × skew grid ─────────────────────────────────────────
+    let mut cells: Vec<Json> = Vec::new();
+    for &connections in &[2usize, 8] {
+        for &(skew, hot_pct) in &[("uniform", 50usize), ("hot90", 90)] {
+            let before = server.frontend_totals();
+            let (wall_s, mut lat_ms) = drive(addr, &server, connections, hot_pct, total);
+            let after = server.frontend_totals();
+            let n = lat_ms.len();
+            lat_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+            let rps = n as f64 / wall_s.max(1e-9);
+            let (p50, p99) = (pct(&lat_ms, 50.0), pct(&lat_ms, 99.0));
+            let (accepted, rejected, shed) =
+                (after.0 - before.0, after.1 - before.1, after.2 - before.2);
+            assert_eq!(accepted, n, "closed-loop Ok responses all count as accepted");
+            assert_eq!((rejected, shed), (0, 0), "nothing rejects or sheds under closed loop");
+            println!(
+                "{connections:>2} conns, {skew:<7}: {rps:>8.1} req/s  p50 {p50:.3} ms  \
+                 p99 {p99:.3} ms  ({accepted} accepted)"
+            );
+            let mut cell = Json::obj();
+            cell.set("connections", connections)
+                .set("skew", skew)
+                .set("hot_pct", hot_pct)
+                .set("requests", n)
+                .set("wall_s", wall_s)
+                .set("throughput_rps", rps)
+                .set("p50_ms", p50)
+                .set("p99_ms", p99)
+                .set("accepted", accepted)
+                .set("rejected", rejected)
+                .set("shed", shed);
+            cells.push(cell);
+        }
+    }
+    fe.shutdown();
+
+    // ── slow reader: bounded write buffer sheds, memory stays flat ──────
+    // A dedicated front-end whose write-buffer cap is smaller than one
+    // response frame: a peer that never reads gets every completed
+    // response shed (and counted) instead of an unbounded buffer.
+    let fe2 = Frontend::start(
+        server.clone(),
+        FrontendConfig { write_buf_cap: SLOW_WRITE_CAP, ..FrontendConfig::default() },
+    )
+    .expect("slow-reader frontend");
+    let before = server.frontend_totals();
+    let mut sink = FrontendClient::connect(fe2.local_addr()).expect("connect slow reader");
+    let mut data = CifarLike::new(server.in_dim, server.classes, 999);
+    for r in 0..SLOW_READER_BURST {
+        let b = data.test_batch(1);
+        sink.send(&Request {
+            req_id: r as u64 + 1,
+            priority: Priority::Normal,
+            deadline_ms: 0,
+            tenant: "sink".to_string(),
+            model: Some("v1".to_string()),
+            payload: b.x,
+        })
+        .expect("send burst");
+    }
+    // Never read a byte; wait for every response to complete and shed.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let shed = loop {
+        let now = server.frontend_totals();
+        if now.2 - before.2 >= SLOW_READER_BURST || Instant::now() >= deadline {
+            break now.2 - before.2;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    assert_eq!(
+        shed, SLOW_READER_BURST,
+        "every response to a never-reading peer must shed against a {SLOW_WRITE_CAP}-byte cap"
+    );
+    println!(
+        "\nslow reader: {SLOW_READER_BURST} requests, 0 bytes read — {shed} responses shed \
+         (write buffer capped at {SLOW_WRITE_CAP} B)"
+    );
+    drop(sink);
+    fe2.shutdown();
+    server.shutdown();
+
+    let mut doc = Json::obj();
+    let mut meta = Json::obj();
+    meta.set("batch", BATCH)
+        .set("classes", CLASSES)
+        .set("workers", WORKERS)
+        .set("requests_per_cell", total)
+        .set("fast_mode", fast);
+    let mut slow = Json::obj();
+    slow.set("requests", SLOW_READER_BURST)
+        .set("write_buf_cap", SLOW_WRITE_CAP)
+        .set("shed", shed);
+    doc.set("bench", "frontend_bench")
+        .set("config", meta)
+        .set("grid", Json::Arr(cells))
+        .set("slow_reader", slow);
+    match std::fs::write(OUT_PATH, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {OUT_PATH}"),
+        Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),
+    }
+}

@@ -73,13 +73,16 @@ pub fn lock_discipline(m: &SourceModel, out: &mut Vec<Finding>) {
 }
 
 /// Hot-path modules governed by panic-freedom (path suffix match).
-const HOT_MODULES: [&str; 6] = [
+const HOT_MODULES: [&str; 9] = [
     "serving/queue.rs",
     "serving/worker.rs",
     "serving/registry.rs",
     "serving/backend.rs",
     "kernels/plan.rs",
     "kernels/registry.rs",
+    "frontend/mod.rs",
+    "frontend/protocol.rs",
+    "frontend/conn.rs",
 ];
 
 /// Keywords that can legally precede `[` without it being an index

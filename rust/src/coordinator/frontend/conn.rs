@@ -1,0 +1,212 @@
+//! Per-connection state for the reactor: a non-blocking socket, an
+//! accumulating read buffer the framer slices complete frames out of, a
+//! **bounded** write buffer (slow readers shed responses instead of
+//! growing it without bound), and the connection's in-flight requests.
+
+use crate::coordinator::serving::ServeError;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+
+/// One request this connection has submitted into the queue and not yet
+/// answered on the wire.
+pub(crate) struct InFlight {
+    pub req_id: u64,
+    /// Tenant key charged for this request; the reactor decrements the
+    /// tenant's in-flight count when the request settles (or the
+    /// connection dies with it outstanding).
+    pub tenant: String,
+    pub rx: mpsc::Receiver<Result<Vec<f32>, ServeError>>,
+}
+
+pub(crate) struct Conn {
+    pub stream: TcpStream,
+    /// Unparsed request bytes; frames are drained from the front.
+    read_buf: Vec<u8>,
+    /// Encoded response bytes not yet accepted by the socket.
+    write_buf: Vec<u8>,
+    /// How much of `write_buf` the socket has taken (drained lazily so
+    /// steady-state flushes never memmove).
+    written: usize,
+    pub inflight: Vec<InFlight>,
+    /// Peer closed its write side (EOF on read): no more requests, but
+    /// in-flight responses still drain.
+    pub read_closed: bool,
+    /// Fatal socket or framing error: reap the connection, dropping any
+    /// in-flight work.
+    pub dead: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            read_buf: Vec::new(),
+            write_buf: Vec::new(),
+            written: 0,
+            inflight: Vec::new(),
+            read_closed: false,
+            dead: false,
+        }
+    }
+
+    /// Pull whatever the socket has ready into `read_buf`. Returns true
+    /// if any bytes arrived. A would-block is "nothing ready"; EOF marks
+    /// the read side closed; other errors kill the connection.
+    pub fn read_ready(&mut self) -> bool {
+        if self.read_closed || self.dead {
+            return false;
+        }
+        let mut progressed = false;
+        let mut chunk = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.read_closed = true;
+                    return progressed;
+                }
+                Ok(n) => {
+                    if let Some(head) = chunk.get(..n) {
+                        self.read_buf.extend_from_slice(head);
+                        progressed = true;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return progressed,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return progressed;
+                }
+            }
+        }
+    }
+
+    /// Slice one complete frame body out of the read buffer, if present.
+    /// A frame longer than `max_frame` is unrecoverable (the framer can't
+    /// resync) — the connection is marked dead and the oversize length
+    /// returned as the error.
+    pub fn take_frame(&mut self, max_frame: usize) -> Result<Option<Vec<u8>>, usize> {
+        let Some(len_bytes) = self.read_buf.get(..4) else {
+            return Ok(None);
+        };
+        let body_len = len_bytes
+            .iter()
+            .enumerate()
+            .fold(0usize, |acc, (i, b)| acc | ((*b as usize) << (8 * i)));
+        if body_len > max_frame {
+            self.dead = true;
+            return Err(body_len);
+        }
+        if self.read_buf.len() < 4 + body_len {
+            return Ok(None);
+        }
+        let body = self.read_buf.get(4..4 + body_len).map(<[u8]>::to_vec);
+        self.read_buf.drain(..4 + body_len);
+        Ok(body)
+    }
+
+    /// Queue encoded response bytes, bounded by `cap`: a slow reader
+    /// whose buffered backlog would exceed the cap has this response
+    /// *shed* (dropped; the connection survives). Returns false on shed.
+    pub fn enqueue_write(&mut self, bytes: &[u8], cap: usize) -> bool {
+        if self.pending_write() + bytes.len() > cap {
+            return false;
+        }
+        self.write_buf.extend_from_slice(bytes);
+        true
+    }
+
+    pub fn pending_write(&self) -> usize {
+        self.write_buf.len() - self.written
+    }
+
+    /// Push buffered response bytes into the socket without blocking.
+    /// Returns true if any bytes moved.
+    pub fn flush_ready(&mut self) -> bool {
+        if self.dead {
+            return false;
+        }
+        let mut progressed = false;
+        while self.written < self.write_buf.len() {
+            let pending = self.write_buf.get(self.written..).unwrap_or(&[]);
+            match self.stream.write(pending) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.written += n;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.written == self.write_buf.len() && self.written > 0 {
+            self.write_buf.clear();
+            self.written = 0;
+        }
+        progressed
+    }
+
+    /// Nothing left to do: peer finished sending, all submitted work
+    /// answered, all bytes on the wire.
+    pub fn drained(&self) -> bool {
+        self.read_closed && self.inflight.is_empty() && self.pending_write() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        (server, client)
+    }
+
+    #[test]
+    fn framer_reassembles_split_frames_and_rejects_oversize() {
+        let (server, mut client) = pair();
+        let mut conn = Conn::new(server);
+        // A 6-byte body arriving in two halves.
+        let frame = [6u8, 0, 0, 0, 1, 2, 3, 4, 5, 6];
+        client.write_all(&frame[..5]).unwrap();
+        while !conn.read_ready() {
+            std::thread::yield_now();
+        }
+        assert_eq!(conn.take_frame(64).unwrap(), None, "half a frame is no frame");
+        client.write_all(&frame[5..]).unwrap();
+        while conn.take_frame(64).unwrap().is_none() {
+            conn.read_ready();
+            std::thread::yield_now();
+        }
+        // Oversize length prefix kills the connection.
+        let mut conn2 = Conn::new(pair_stream());
+        conn2.read_buf.extend_from_slice(&[255, 255, 255, 255]);
+        assert!(conn2.take_frame(64).is_err());
+        assert!(conn2.dead);
+    }
+
+    fn pair_stream() -> TcpStream {
+        pair().0
+    }
+
+    #[test]
+    fn bounded_write_buffer_sheds_on_overflow() {
+        let (server, _client) = pair();
+        let mut conn = Conn::new(server);
+        assert!(conn.enqueue_write(&[0u8; 10], 16));
+        assert!(!conn.enqueue_write(&[0u8; 10], 16), "over cap: shed");
+        assert_eq!(conn.pending_write(), 10, "shed responses are not buffered");
+    }
+}

@@ -1,0 +1,375 @@
+//! Network front-end: a hand-rolled non-blocking TCP reactor that puts
+//! the serving core's admission machinery — bounded priority queue,
+//! deadlines, per-model quotas, typed backpressure — on a socket.
+//!
+//! One reactor thread owns every connection (no locks on the data path):
+//! it accepts, reads and decodes length-prefixed request frames
+//! ([`protocol`]), admits each request against its tenant's quota class,
+//! submits into the existing [`InferenceServer`] queue, then sweeps the
+//! per-request completion channels and writes responses back **out of
+//! order** as workers finish them. Every typed [`ServeError`] surfaces
+//! as a distinct protocol [`Status`] code instead of a dropped
+//! connection, and a slow reader gets a bounded write buffer whose
+//! overflow sheds responses (counted in `ServingMetrics`) rather than
+//! ballooning memory.
+//!
+//! Shutdown is drain-clean: stop accepting, finish every in-flight
+//! request, flush every write buffer, then close.
+
+pub mod conn;
+pub mod protocol;
+
+pub use protocol::{FrontendClient, Request, Response, Status};
+
+#[cfg(doc)]
+use crate::coordinator::serving::ServeError;
+
+use self::conn::{Conn, InFlight};
+use crate::coordinator::metrics::ServingMetrics;
+use crate::coordinator::serving::{InferenceServer, ModelQuota, SubmitOptions};
+use std::collections::HashMap;
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::TryRecvError;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How long a drain-clean shutdown waits on peers that stop reading;
+/// past this, remaining buffered responses are abandoned so `shutdown`
+/// cannot hang on a dead-but-open socket.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Front-end tuning knobs.
+#[derive(Clone, Debug)]
+pub struct FrontendConfig {
+    /// Bind address, e.g. `127.0.0.1:7777`; port 0 picks a free port
+    /// (see [`Frontend::local_addr`]).
+    pub listen: String,
+    /// Tenant quota classes: each key resolves to a max-in-flight cap
+    /// against the server's queue capacity, exactly like a model quota
+    /// ([`ModelQuota::limit`]). Unlisted tenants are unlimited.
+    pub tenants: Vec<(String, ModelQuota)>,
+    /// Per-connection write-buffer bound; responses that would grow a
+    /// slow reader's backlog past this are shed (dropped + counted).
+    pub write_buf_cap: usize,
+    /// Largest accepted request frame body; an oversize length prefix is
+    /// unrecoverable framing and closes the connection.
+    pub max_frame: usize,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        FrontendConfig {
+            listen: "127.0.0.1:0".to_string(),
+            tenants: Vec::new(),
+            write_buf_cap: 256 * 1024,
+            max_frame: 1 << 20,
+        }
+    }
+}
+
+/// Handle to a running front-end; [`Frontend::shutdown`] (or drop)
+/// drains and joins the reactor.
+pub struct Frontend {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    reactor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Frontend {
+    /// Bind `config.listen` and start the reactor thread over `server`'s
+    /// queue. The server handle is cloned in; shutting the front-end
+    /// down does not stop the server (or vice versa — a stopped server
+    /// turns every submit into a typed `Stopped` response).
+    pub fn start(server: InferenceServer, config: FrontendConfig) -> anyhow::Result<Frontend> {
+        let listener = TcpListener::bind(&config.listen)
+            .map_err(|e| anyhow::anyhow!("frontend bind {}: {e}", config.listen))?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let reactor = {
+            let stop = Arc::clone(&stop);
+            // Tenant quotas resolve once against the queue capacity —
+            // tenants are config, not registry members, so there is no
+            // membership to track.
+            let tenant_caps: HashMap<String, usize> = config
+                .tenants
+                .iter()
+                .filter_map(|(k, q)| q.limit(server.queue_capacity()).map(|l| (k.clone(), l)))
+                .collect();
+            let metrics = Arc::clone(server.metrics());
+            let cfg = config.clone();
+            std::thread::Builder::new()
+                .name("rbgp-frontend".to_string())
+                .spawn(move || reactor_loop(listener, server, metrics, tenant_caps, cfg, stop))?
+        };
+        Ok(Frontend { local_addr, stop, reactor: Some(reactor) })
+    }
+
+    /// The bound address (the actual port when `listen` used port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Drain-clean shutdown: stop accepting, answer everything in
+    /// flight, flush every connection, join the reactor. Idempotent via
+    /// drop.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.reactor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Frontend {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// The reactor: single-threaded owner of every connection. Runs until
+/// `stop` is raised *and* all in-flight work has drained.
+fn reactor_loop(
+    listener: TcpListener,
+    server: InferenceServer,
+    metrics: Arc<ServingMetrics>,
+    tenant_caps: HashMap<String, usize>,
+    cfg: FrontendConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    // Requests in flight per tenant key, reactor-private (one thread).
+    let mut tenant_inflight: HashMap<String, usize> = HashMap::new();
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        let stopping = stop.load(Ordering::Acquire);
+        if stopping && drain_deadline.is_none() {
+            drain_deadline = Some(Instant::now() + DRAIN_TIMEOUT);
+        }
+        let mut progressed = false;
+
+        if !stopping {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let _ = stream.set_nodelay(true);
+                        if stream.set_nonblocking(true).is_ok() {
+                            conns.push(Conn::new(stream));
+                            progressed = true;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => break,
+                }
+            }
+        }
+
+        for conn in &mut conns {
+            // Read + decode new requests. During a drain we stop reading:
+            // anything the peer sent after shutdown began is dropped with
+            // the connection rather than admitted to a stopping server.
+            if !stopping && conn.read_ready() {
+                progressed = true;
+            }
+            if !stopping {
+                progressed |= pump_requests(
+                    conn,
+                    &server,
+                    &metrics,
+                    &tenant_caps,
+                    &mut tenant_inflight,
+                    &cfg,
+                );
+            }
+            progressed |= sweep_completions(conn, &metrics, &mut tenant_inflight, &cfg);
+            if conn.flush_ready() {
+                progressed = true;
+            }
+        }
+
+        // Reap finished and dead connections, refunding the tenant
+        // accounting for any work a dead peer abandoned in flight.
+        conns.retain_mut(|c| {
+            if c.dead || c.drained() {
+                for inflight in c.inflight.drain(..) {
+                    release_tenant(&mut tenant_inflight, &inflight.tenant);
+                }
+                false
+            } else {
+                true
+            }
+        });
+
+        if stopping {
+            // Drained: every admitted request answered and every response
+            // byte handed to the kernel. Peers may keep their connections
+            // open — we do not wait for their EOF, and a peer that stops
+            // reading only holds shutdown until the drain timeout.
+            let drained =
+                conns.iter().all(|c| c.inflight.is_empty() && c.pending_write() == 0);
+            let expired = drain_deadline.map(|d| Instant::now() >= d).unwrap_or(false);
+            if drained || expired {
+                return;
+            }
+        }
+        if !progressed {
+            // Nothing moved anywhere: sleep a beat instead of spinning.
+            std::thread::sleep(Duration::from_micros(300));
+        }
+    }
+}
+
+/// Decode every complete frame buffered on `conn` and submit it.
+fn pump_requests(
+    conn: &mut Conn,
+    server: &InferenceServer,
+    metrics: &ServingMetrics,
+    tenant_caps: &HashMap<String, usize>,
+    tenant_inflight: &mut HashMap<String, usize>,
+    cfg: &FrontendConfig,
+) -> bool {
+    let mut progressed = false;
+    loop {
+        let body = match conn.take_frame(cfg.max_frame) {
+            Ok(Some(body)) => body,
+            Ok(None) => return progressed,
+            Err(oversize) => {
+                // Framing is lost; tell the peer why before closing.
+                metrics.record_frontend_rejected();
+                let frame = protocol::encode_response_err(
+                    0,
+                    Status::BadFrame,
+                    &format!("frame body {oversize} exceeds max {}", cfg.max_frame),
+                );
+                let _ = conn.enqueue_write(&frame, cfg.write_buf_cap);
+                let _ = conn.flush_ready();
+                return true;
+            }
+        };
+        progressed = true;
+        let req = match protocol::decode_request(&body) {
+            Ok(req) => req,
+            Err(detail) => {
+                metrics.record_frontend_rejected();
+                respond_err(conn, metrics, cfg, 0, Status::BadFrame, &detail);
+                continue;
+            }
+        };
+
+        // Tenant admission: a saturated quota class is back-pressured
+        // here, before the request can occupy shared queue capacity.
+        let in_use = tenant_inflight.get(&req.tenant).copied().unwrap_or(0);
+        if let Some(cap) = tenant_caps.get(&req.tenant) {
+            if in_use >= *cap {
+                metrics.record_frontend_rejected();
+                respond_err(
+                    conn,
+                    metrics,
+                    cfg,
+                    req.req_id,
+                    Status::TenantQuotaExceeded,
+                    &format!("tenant '{}' at quota ({cap} in flight)", req.tenant),
+                );
+                continue;
+            }
+        }
+
+        let mut opts = SubmitOptions::default().with_priority(req.priority);
+        if req.deadline_ms > 0 {
+            opts = opts.with_deadline(Duration::from_millis(req.deadline_ms as u64));
+        }
+        if let Some(model) = &req.model {
+            opts = opts.with_model(model.clone());
+        }
+        match server.submit_with(req.payload, opts) {
+            Ok(rx) => {
+                metrics.record_frontend_accepted();
+                *tenant_inflight.entry(req.tenant.clone()).or_insert(0) += 1;
+                conn.inflight.push(InFlight { req_id: req.req_id, tenant: req.tenant, rx });
+            }
+            Err(e) => {
+                metrics.record_frontend_rejected();
+                respond_err(
+                    conn,
+                    metrics,
+                    cfg,
+                    req.req_id,
+                    Status::from_error(&e),
+                    &e.to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// Poll every in-flight completion channel on `conn`, encoding finished
+/// responses in completion order (out of request order by design).
+fn sweep_completions(
+    conn: &mut Conn,
+    metrics: &ServingMetrics,
+    tenant_inflight: &mut HashMap<String, usize>,
+    cfg: &FrontendConfig,
+) -> bool {
+    if conn.inflight.is_empty() {
+        return false;
+    }
+    let mut progressed = false;
+    // Taking the vec lets us write into `conn` while polling; pending
+    // entries are pushed straight back.
+    let inflight = std::mem::take(&mut conn.inflight);
+    for entry in inflight {
+        let frame = match entry.rx.try_recv() {
+            Err(TryRecvError::Empty) => {
+                conn.inflight.push(entry);
+                continue;
+            }
+            Ok(Ok(logits)) => protocol::encode_response_ok(entry.req_id, &logits),
+            Ok(Err(e)) => {
+                protocol::encode_response_err(entry.req_id, Status::from_error(&e), &e.to_string())
+            }
+            // A dropped sender without a value is a worker pool that died
+            // mid-request: same contract as a stopped server.
+            Err(TryRecvError::Disconnected) => {
+                protocol::encode_response_err(entry.req_id, Status::Stopped, "server stopped")
+            }
+        };
+        progressed = true;
+        release_tenant(tenant_inflight, &entry.tenant);
+        if !conn.enqueue_write(&frame, cfg.write_buf_cap) {
+            metrics.record_frontend_shed();
+        }
+    }
+    progressed
+}
+
+/// Encode an error response into the connection, shedding (with
+/// accounting) if the write buffer is full.
+fn respond_err(
+    conn: &mut Conn,
+    metrics: &ServingMetrics,
+    cfg: &FrontendConfig,
+    req_id: u64,
+    status: Status,
+    detail: &str,
+) {
+    let frame = protocol::encode_response_err(req_id, status, detail);
+    if !conn.enqueue_write(&frame, cfg.write_buf_cap) {
+        metrics.record_frontend_shed();
+    }
+}
+
+fn release_tenant(tenant_inflight: &mut HashMap<String, usize>, tenant: &str) {
+    if let Some(n) = tenant_inflight.get_mut(tenant) {
+        *n = n.saturating_sub(1);
+        if *n == 0 {
+            tenant_inflight.remove(tenant);
+        }
+    }
+}

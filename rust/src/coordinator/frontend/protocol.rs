@@ -1,0 +1,464 @@
+//! Wire protocol for the network front-end: length-prefixed binary
+//! frames over TCP, little-endian throughout.
+//!
+//! A **frame** is a `u32` body length followed by the body. Request body:
+//!
+//! ```text
+//! req_id      u64   client-chosen correlation id (echoed verbatim)
+//! priority    u8    0 = High, 1 = Normal, 2 = Low
+//! deadline_ms u32   0 = server default deadline
+//! tenant_len  u16   then that many UTF-8 bytes (quota-class key)
+//! model_len   u16   then that many UTF-8 bytes (empty = default model)
+//! payload     rest  f32 LE samples (len must be a multiple of 4)
+//! ```
+//!
+//! Response body:
+//!
+//! ```text
+//! req_id      u64
+//! status      u8    Status code; 0 = Ok
+//! Ok:   payload     f32 LE logits
+//! Err:  detail_len  u16, then that many UTF-8 bytes of human detail
+//! ```
+//!
+//! Responses complete **out of order**: the server answers each request
+//! as its worker finishes it, and the client correlates by `req_id`.
+
+use crate::coordinator::serving::{Priority, ServeError};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+/// Protocol status codes — one per reachable [`ServeError`] variant plus
+/// the front-end's own admission/framing outcomes. Codes are wire ABI:
+/// append, never renumber.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    /// Request served; body carries the logits.
+    Ok,
+    /// Shared queue at capacity ([`ServeError::QueueFull`]).
+    QueueFull,
+    /// Target model at its admission quota
+    /// ([`ServeError::ModelQuotaExceeded`]).
+    ModelQuotaExceeded,
+    /// Deadline lapsed before a worker served it
+    /// ([`ServeError::DeadlineExceeded`]).
+    DeadlineExceeded,
+    /// No such model or alias ([`ServeError::UnknownModel`]).
+    UnknownModel,
+    /// Registration probe still pending ([`ServeError::ModelNotReady`]).
+    ModelNotReady,
+    /// Payload width does not match the target model
+    /// ([`ServeError::WrongInputWidth`]).
+    WrongInputWidth,
+    /// Server shut down ([`ServeError::Stopped`]).
+    Stopped,
+    /// Model execution failed ([`ServeError::Backend`]).
+    Backend,
+    /// The tenant key's in-flight quota is saturated (front-end
+    /// admission, before the request reaches the queue).
+    TenantQuotaExceeded,
+    /// The frame could not be decoded; detail says why.
+    BadFrame,
+}
+
+impl Status {
+    pub fn code(self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::QueueFull => 1,
+            Status::ModelQuotaExceeded => 2,
+            Status::DeadlineExceeded => 3,
+            Status::UnknownModel => 4,
+            Status::ModelNotReady => 5,
+            Status::WrongInputWidth => 6,
+            Status::Stopped => 7,
+            Status::Backend => 8,
+            Status::TenantQuotaExceeded => 9,
+            Status::BadFrame => 10,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<Status> {
+        Some(match code {
+            0 => Status::Ok,
+            1 => Status::QueueFull,
+            2 => Status::ModelQuotaExceeded,
+            3 => Status::DeadlineExceeded,
+            4 => Status::UnknownModel,
+            5 => Status::ModelNotReady,
+            6 => Status::WrongInputWidth,
+            7 => Status::Stopped,
+            8 => Status::Backend,
+            9 => Status::TenantQuotaExceeded,
+            10 => Status::BadFrame,
+            _ => return None,
+        })
+    }
+
+    /// The protocol code for a typed serving error — total over
+    /// [`ServeError`], so no error can reach the socket without a
+    /// distinct status.
+    pub fn from_error(e: &ServeError) -> Status {
+        match e {
+            ServeError::QueueFull { .. } => Status::QueueFull,
+            ServeError::ModelQuotaExceeded { .. } => Status::ModelQuotaExceeded,
+            ServeError::DeadlineExceeded { .. } => Status::DeadlineExceeded,
+            ServeError::UnknownModel { .. } => Status::UnknownModel,
+            ServeError::ModelNotReady { .. } => Status::ModelNotReady,
+            ServeError::WrongInputWidth { .. } => Status::WrongInputWidth,
+            ServeError::Stopped => Status::Stopped,
+            ServeError::Backend(_) => Status::Backend,
+        }
+    }
+}
+
+impl std::fmt::Display for Status {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+pub(crate) fn priority_code(p: Priority) -> u8 {
+    match p {
+        Priority::High => 0,
+        Priority::Normal => 1,
+        Priority::Low => 2,
+    }
+}
+
+pub(crate) fn priority_from_code(code: u8) -> Option<Priority> {
+    Some(match code {
+        0 => Priority::High,
+        1 => Priority::Normal,
+        2 => Priority::Low,
+        _ => return None,
+    })
+}
+
+/// One decoded request frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub req_id: u64,
+    pub priority: Priority,
+    /// Per-request deadline in milliseconds; `0` defers to the server's
+    /// configured default.
+    pub deadline_ms: u32,
+    /// Tenant quota-class key; empty = anonymous (unlimited).
+    pub tenant: String,
+    /// Target model or alias; `None` = the server's default model.
+    pub model: Option<String>,
+    pub payload: Vec<f32>,
+}
+
+/// Byte-cursor over a frame body; every `take` is bounds-checked so a
+/// truncated or hostile frame decodes to an error, never a panic.
+struct Cursor<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.buf.len() < n {
+            return Err(format!(
+                "truncated frame: wanted {n} more bytes, have {}",
+                self.buf.len()
+            ));
+        }
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Ok(head)
+    }
+
+    /// Little-endian unsigned int of `n` bytes (n ≤ 8).
+    fn le(&mut self, n: usize) -> Result<u64, String> {
+        let bytes = self.take(n)?;
+        let mut v = 0u64;
+        for (i, b) in bytes.iter().enumerate() {
+            v |= (*b as u64) << (8 * i);
+        }
+        Ok(v)
+    }
+
+    fn utf8(&mut self, n: usize) -> Result<String, String> {
+        String::from_utf8(self.take(n)?.to_vec()).map_err(|_| "non-UTF-8 string field".to_string())
+    }
+}
+
+fn put_le(out: &mut Vec<u8>, v: u64, n: usize) {
+    for i in 0..n {
+        out.push((v >> (8 * i)) as u8);
+    }
+}
+
+/// Encode a full request frame (length prefix included).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let model = req.model.as_deref().unwrap_or("");
+    let body_len = 8 + 1 + 4 + 2 + req.tenant.len() + 2 + model.len() + 4 * req.payload.len();
+    let mut out = Vec::with_capacity(4 + body_len);
+    put_le(&mut out, body_len as u64, 4);
+    put_le(&mut out, req.req_id, 8);
+    out.push(priority_code(req.priority));
+    put_le(&mut out, req.deadline_ms as u64, 4);
+    put_le(&mut out, req.tenant.len() as u64, 2);
+    out.extend_from_slice(req.tenant.as_bytes());
+    put_le(&mut out, model.len() as u64, 2);
+    out.extend_from_slice(model.as_bytes());
+    for x in &req.payload {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Decode one request frame body (the length prefix already consumed).
+/// Errors are human-readable details for a [`Status::BadFrame`] response.
+pub fn decode_request(body: &[u8]) -> Result<Request, String> {
+    let mut c = Cursor { buf: body };
+    let req_id = c.le(8)?;
+    let pcode = c.le(1)? as u8;
+    let priority =
+        priority_from_code(pcode).ok_or_else(|| format!("bad priority code {pcode} (0|1|2)"))?;
+    let deadline_ms = c.le(4)? as u32;
+    let tenant_len = c.le(2)? as usize;
+    let tenant = c.utf8(tenant_len)?;
+    let model_len = c.le(2)? as usize;
+    let model = c.utf8(model_len)?;
+    if c.buf.len() % 4 != 0 {
+        return Err(format!("payload length {} is not a multiple of 4", c.buf.len()));
+    }
+    let payload = c
+        .buf
+        .chunks_exact(4)
+        .map(|ch| {
+            // LE f32: fold the 4 bytes most-significant-first into the bits.
+            f32::from_bits(ch.iter().rev().fold(0u32, |acc, b| (acc << 8) | *b as u32))
+        })
+        .collect();
+    Ok(Request {
+        req_id,
+        priority,
+        deadline_ms,
+        tenant,
+        model: if model.is_empty() { None } else { Some(model) },
+        payload,
+    })
+}
+
+/// Encode a full `Ok` response frame (length prefix included).
+pub fn encode_response_ok(req_id: u64, logits: &[f32]) -> Vec<u8> {
+    let body_len = 8 + 1 + 4 * logits.len();
+    let mut out = Vec::with_capacity(4 + body_len);
+    put_le(&mut out, body_len as u64, 4);
+    put_le(&mut out, req_id, 8);
+    out.push(Status::Ok.code());
+    for x in logits {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Encode a full error response frame (length prefix included). The
+/// detail is truncated to fit its u16 length field.
+pub fn encode_response_err(req_id: u64, status: Status, detail: &str) -> Vec<u8> {
+    let detail = detail.as_bytes();
+    let detail = detail.get(..detail.len().min(u16::MAX as usize)).unwrap_or(detail);
+    let body_len = 8 + 1 + 2 + detail.len();
+    let mut out = Vec::with_capacity(4 + body_len);
+    put_le(&mut out, body_len as u64, 4);
+    put_le(&mut out, req_id, 8);
+    out.push(status.code());
+    put_le(&mut out, detail.len() as u64, 2);
+    out.extend_from_slice(detail);
+    out
+}
+
+/// One decoded response frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub req_id: u64,
+    pub status: Status,
+    /// Logits when `status == Ok`, empty otherwise.
+    pub payload: Vec<f32>,
+    /// Human-readable error detail, empty on `Ok`.
+    pub detail: String,
+}
+
+/// Decode one response frame body (length prefix already consumed).
+pub fn decode_response(body: &[u8]) -> Result<Response, String> {
+    let mut c = Cursor { buf: body };
+    let req_id = c.le(8)?;
+    let code = c.le(1)? as u8;
+    let status = Status::from_code(code).ok_or_else(|| format!("bad status code {code}"))?;
+    if status == Status::Ok {
+        if c.buf.len() % 4 != 0 {
+            return Err(format!("logit bytes {} not a multiple of 4", c.buf.len()));
+        }
+        let payload = c
+            .buf
+            .chunks_exact(4)
+            .map(|ch| {
+                f32::from_bits(ch.iter().rev().fold(0u32, |acc, b| (acc << 8) | *b as u32))
+            })
+            .collect();
+        return Ok(Response { req_id, status, payload, detail: String::new() });
+    }
+    let detail_len = c.le(2)? as usize;
+    let detail = c.utf8(detail_len)?;
+    Ok(Response { req_id, status, payload: Vec::new(), detail })
+}
+
+/// Blocking client for tests, benches and the CLI demo: one TCP
+/// connection, synchronous `send`/`recv` (responses may interleave out of
+/// request order — correlate by [`Response::req_id`]).
+pub struct FrontendClient {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl FrontendClient {
+    pub fn connect(addr: SocketAddr) -> std::io::Result<FrontendClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(FrontendClient { stream, next_id: 1 })
+    }
+
+    /// Send one request frame; returns the request id used.
+    pub fn send(&mut self, req: &Request) -> std::io::Result<u64> {
+        self.stream.write_all(&encode_request(req))?;
+        Ok(req.req_id)
+    }
+
+    /// Read exactly one response frame (blocking).
+    pub fn recv(&mut self) -> anyhow::Result<Response> {
+        let mut len = [0u8; 4];
+        self.stream.read_exact(&mut len)?;
+        let n = u32::from_le_bytes(len) as usize;
+        let mut body = vec![0u8; n];
+        self.stream.read_exact(&mut body)?;
+        decode_response(&body).map_err(|e| anyhow::anyhow!("bad response frame: {e}"))
+    }
+
+    /// Round-trip convenience: send one request with an auto-assigned id
+    /// and block for its response (valid on a connection with no other
+    /// requests outstanding, where no interleaving is possible).
+    pub fn infer(
+        &mut self,
+        payload: Vec<f32>,
+        model: Option<&str>,
+        priority: Priority,
+        tenant: &str,
+        deadline_ms: u32,
+    ) -> anyhow::Result<Response> {
+        let req_id = self.next_id;
+        self.next_id += 1;
+        self.send(&Request {
+            req_id,
+            priority,
+            deadline_ms,
+            tenant: tenant.to_string(),
+            model: model.map(str::to_string),
+            payload,
+        })?;
+        let resp = self.recv()?;
+        anyhow::ensure!(
+            resp.req_id == req_id,
+            "response id {} for request {req_id} on a serial connection",
+            resp.req_id
+        );
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_preserves_every_field() {
+        let req = Request {
+            req_id: 0xDEAD_BEEF_CAFE,
+            priority: Priority::Low,
+            deadline_ms: 250,
+            tenant: "team-a".to_string(),
+            model: Some("prod".to_string()),
+            payload: vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE],
+        };
+        let frame = encode_request(&req);
+        let (len, body) = frame.split_at(4);
+        assert_eq!(u32::from_le_bytes(len.try_into().unwrap()) as usize, body.len());
+        assert_eq!(decode_request(body).unwrap(), req);
+
+        // Empty model field decodes to the default route.
+        let anon = Request { model: None, tenant: String::new(), ..req };
+        let frame = encode_request(&anon);
+        assert_eq!(decode_request(&frame[4..]).unwrap(), anon);
+    }
+
+    #[test]
+    fn response_roundtrip_ok_and_err() {
+        let frame = encode_response_ok(42, &[0.5, -0.5]);
+        let got = decode_response(&frame[4..]).unwrap();
+        assert_eq!((got.req_id, got.status), (42, Status::Ok));
+        assert_eq!(got.payload, vec![0.5, -0.5]);
+
+        let frame = encode_response_err(7, Status::QueueFull, "queue full (cap 8)");
+        let got = decode_response(&frame[4..]).unwrap();
+        assert_eq!((got.req_id, got.status), (7, Status::QueueFull));
+        assert_eq!(got.detail, "queue full (cap 8)");
+    }
+
+    #[test]
+    fn truncated_and_malformed_frames_decode_to_errors_not_panics() {
+        assert!(decode_request(&[]).is_err());
+        assert!(decode_request(&[1, 2, 3]).is_err());
+        // Bad priority code.
+        let mut frame = encode_request(&Request {
+            req_id: 1,
+            priority: Priority::Normal,
+            deadline_ms: 0,
+            tenant: String::new(),
+            model: None,
+            payload: vec![],
+        });
+        frame[4 + 8] = 9; // priority byte
+        assert!(decode_request(&frame[4..]).unwrap_err().contains("priority"));
+        // Payload not a multiple of 4.
+        let good = encode_request(&Request {
+            req_id: 1,
+            priority: Priority::Normal,
+            deadline_ms: 0,
+            tenant: String::new(),
+            model: None,
+            payload: vec![1.0],
+        });
+        assert!(decode_request(&good[4..good.len() - 1]).is_err());
+        assert!(decode_response(&[0; 8]).is_err());
+    }
+
+    #[test]
+    fn every_serve_error_maps_to_a_distinct_status_code() {
+        use std::time::Duration;
+        let errors = [
+            ServeError::QueueFull { cap: 1 },
+            ServeError::ModelQuotaExceeded { model: "m".into(), quota: 1 },
+            ServeError::DeadlineExceeded { waited: Duration::ZERO },
+            ServeError::UnknownModel { model: "m".into() },
+            ServeError::ModelNotReady { model: "m".into() },
+            ServeError::WrongInputWidth { got: 1, want: 2 },
+            ServeError::Stopped,
+            ServeError::Backend("boom".into()),
+        ];
+        let mut codes: Vec<u8> = errors.iter().map(|e| Status::from_error(e).code()).collect();
+        // Front-end-originated codes share the same namespace.
+        codes.push(Status::Ok.code());
+        codes.push(Status::TenantQuotaExceeded.code());
+        codes.push(Status::BadFrame.code());
+        let mut dedup = codes.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), codes.len(), "status codes must be pairwise distinct");
+        // And every code survives the wire roundtrip.
+        for c in codes {
+            assert_eq!(Status::from_code(c).unwrap().code(), c);
+        }
+    }
+}

@@ -369,6 +369,19 @@ pub struct ServingMetrics {
     rejected_deadline: AtomicUsize,
     rejected_quota: AtomicUsize,
     peak_queue_depth: AtomicUsize,
+    /// Shadow pairs created but not yet settled (gauge). A pair settles
+    /// when its last leg's request drops, on any path; a steady-state
+    /// nonzero floor here means pairs are leaking.
+    shadow_pending: AtomicUsize,
+    /// Requests the network front-end admitted into the queue.
+    frontend_accepted: AtomicUsize,
+    /// Typed-error responses the front-end sent instead of admitting
+    /// (submit rejections, tenant quota, malformed frames).
+    frontend_rejected: AtomicUsize,
+    /// Responses dropped because a slow reader's bounded write buffer was
+    /// full (shed-on-overflow: the connection survives, the reply does
+    /// not).
+    frontend_shed: AtomicUsize,
 }
 
 impl ServingMetrics {
@@ -383,6 +396,10 @@ impl ServingMetrics {
             rejected_deadline: AtomicUsize::new(0),
             rejected_quota: AtomicUsize::new(0),
             peak_queue_depth: AtomicUsize::new(0),
+            shadow_pending: AtomicUsize::new(0),
+            frontend_accepted: AtomicUsize::new(0),
+            frontend_rejected: AtomicUsize::new(0),
+            frontend_shed: AtomicUsize::new(0),
         }
     }
 
@@ -520,6 +537,50 @@ impl ServingMetrics {
             .entry(alias.to_string())
             .or_default()
             .shadow_dropped += 1;
+    }
+
+    /// One shadow pair created (raises the pending gauge).
+    pub(crate) fn record_shadow_begun(&self) {
+        self.shadow_pending.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One shadow pair settled — completed or abandoned — on its last
+    /// leg's drop (lowers the pending gauge).
+    pub(crate) fn record_shadow_settled(&self) {
+        self.shadow_pending.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Shadow pairs currently awaiting at least one leg. Returns to zero
+    /// whenever shadow traffic drains — including when mirror legs die
+    /// with backend errors (the complete-or-expire contract).
+    pub fn shadow_pending(&self) -> usize {
+        self.shadow_pending.load(Ordering::Relaxed)
+    }
+
+    /// One socket request admitted into the queue by the front-end.
+    pub(crate) fn record_frontend_accepted(&self) {
+        self.frontend_accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One socket request answered with a typed error status instead of
+    /// being admitted.
+    pub(crate) fn record_frontend_rejected(&self) {
+        self.frontend_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One response shed because the connection's bounded write buffer
+    /// was full (slow reader).
+    pub(crate) fn record_frontend_shed(&self) {
+        self.frontend_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(accepted, rejected, shed)` totals for the network front-end.
+    pub fn frontend_totals(&self) -> (usize, usize, usize) {
+        (
+            self.frontend_accepted.load(Ordering::Relaxed),
+            self.frontend_rejected.load(Ordering::Relaxed),
+            self.frontend_shed.load(Ordering::Relaxed),
+        )
     }
 
     /// Per-alias rollout telemetry snapshots, sorted by alias. Tallies

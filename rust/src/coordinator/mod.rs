@@ -9,11 +9,13 @@
 //! plans from one shared [`PlanCache`](crate::kernels::plan::PlanCache).
 
 pub mod config;
+pub mod frontend;
 pub mod metrics;
 pub mod serving;
 pub mod trainer;
 
 pub use config::TrainConfig;
+pub use frontend::{Frontend, FrontendClient, FrontendConfig, Request, Response, Status};
 pub use metrics::{
     AliasStats, LatencyStats, Metrics, ModelStats, ServingMetrics, TunedStatus, WorkerStats,
 };

@@ -129,8 +129,10 @@ impl std::error::Error for ServeError {}
 /// entire bounded queue and starve every other model's submits into
 /// [`ServeError::QueueFull`]; a quota converts that into per-model
 /// backpressure ([`ServeError::ModelQuotaExceeded`]) while cold models
-/// keep submitting. Resolved to an absolute limit against the queue
-/// capacity at registration time ([`ModelQuota::limit`]).
+/// keep submitting. The registry stores the *policy* and re-resolves the
+/// absolute limit whenever registry membership changes
+/// ([`ModelQuota::resolve`]), so fair shares track the live model count
+/// instead of going stale after the first registration.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub enum ModelQuota {
     /// No per-model bound; only the shared queue capacity applies.
@@ -139,23 +141,34 @@ pub enum ModelQuota {
     /// At most this many queued requests (clamped to ≥ 1 — a model with
     /// zero admission could never be served at all).
     Absolute(usize),
-    /// At most this fraction of the queue capacity (clamped to `[0, 1]`,
-    /// at least 1 slot). `FairShare(0.5)` leaves half the queue to the
-    /// other models no matter how hot this one runs.
+    /// At most this fraction of the queue capacity, split evenly across
+    /// the models currently live in the registry (clamped to `[0, 1]`, at
+    /// least 1 slot). With two live models, `FairShare(0.5)` admits a
+    /// quarter of the queue each; a third registration shrinks every
+    /// fair-share cap, and a retirement widens them again.
     FairShare(f64),
 }
 
 impl ModelQuota {
-    /// Resolve to an absolute queued-request limit against `queue_cap`;
-    /// `None` means unlimited.
-    pub fn limit(&self, queue_cap: usize) -> Option<usize> {
+    /// Resolve to an absolute queued-request limit against `queue_cap`
+    /// and the number of currently live models; `None` means unlimited.
+    /// `Unlimited` and `Absolute` ignore membership; `FairShare` divides
+    /// its fraction of the queue across `live_models`.
+    pub fn resolve(&self, queue_cap: usize, live_models: usize) -> Option<usize> {
         match *self {
             ModelQuota::Unlimited => None,
             ModelQuota::Absolute(n) => Some(n.max(1)),
             ModelQuota::FairShare(f) => {
-                Some(((f.clamp(0.0, 1.0) * queue_cap as f64).floor() as usize).max(1))
+                let share = (f.clamp(0.0, 1.0) * queue_cap as f64).floor() as usize;
+                Some((share / live_models.max(1)).max(1))
             }
         }
+    }
+
+    /// Resolve as if this model were the only one live — the cap a
+    /// fair-share model starts from before anyone else registers.
+    pub fn limit(&self, queue_cap: usize) -> Option<usize> {
+        self.resolve(queue_cap, 1)
     }
 }
 
@@ -303,7 +316,7 @@ impl InferenceServer {
             config.max_starvation,
         ));
         let metrics = Arc::new(ServingMetrics::new(workers));
-        let registry = Arc::new(ModelRegistry::new(default_id));
+        let registry = Arc::new(ModelRegistry::new(default_id, queue.capacity()));
         // Open the persistent tuning cache once (fail-soft by
         // construction) and attach it to every model the pool builds: a
         // factory that warms *after* the attach searches warm, and every
@@ -327,7 +340,7 @@ impl InferenceServer {
             default_id,
             Arc::new(factory),
             None,
-            config.model_quota.limit(queue.capacity()),
+            config.model_quota,
         )?;
         // Liveness counter for the whole pool: each worker's context
         // decrements it on exit (including panic unwind); the last one out
@@ -501,12 +514,7 @@ impl InferenceServer {
             cache: probe.plan_cache(),
         };
         drop(probe);
-        self.inner.registry.register(
-            id,
-            factory,
-            Some(info),
-            quota.limit(self.inner.queue.capacity()),
-        )?;
+        self.inner.registry.register(id, factory, Some(info), quota)?;
         Ok(())
     }
 
@@ -696,7 +704,7 @@ impl InferenceServer {
         let (route, mirror) = match res.alias {
             Some((alias, canary)) => match res.shadow {
                 Some(shadow_claim) => {
-                    let pair = ShadowPair::new();
+                    let pair = ShadowPair::new(&alias, &self.inner.metrics);
                     let mirror_quota = shadow_claim.quota_limit();
                     let mirror_req = QueuedRequest {
                         x: x.clone(),
@@ -711,11 +719,11 @@ impl InferenceServer {
                     };
                     (
                         Some(RouteTag::Alias {
-                            alias: alias.clone(),
+                            alias,
                             canary,
                             shadow: Some(pair),
                         }),
-                        Some((mirror_req, mirror_quota, alias)),
+                        Some((mirror_req, mirror_quota)),
                     )
                 }
                 None => (
@@ -761,11 +769,11 @@ impl InferenceServer {
         // The mirror is enqueued only after the primary was accepted, at
         // Low priority against the shadow model's own quota. A rejected
         // mirror is a dropped divergence sample, never a client-visible
-        // rejection.
-        if let Some((req, mirror_quota, alias)) = mirror {
-            if self.inner.queue.push(req, Priority::Low, mirror_quota).is_err() {
-                self.inner.metrics.record_shadow_dropped(&alias);
-            }
+        // rejection — dropping the rejected request here releases its leg
+        // of the `ShadowPair`, whose `Drop` settles the incomplete pair as
+        // `shadow_dropped`.
+        if let Some((req, mirror_quota)) = mirror {
+            let _ = self.inner.queue.push(req, Priority::Low, mirror_quota);
         }
         Ok(rrx)
     }
@@ -848,6 +856,26 @@ impl InferenceServer {
 
     pub fn workers(&self) -> usize {
         self.inner.workers
+    }
+
+    /// Shadow pairs begun but not yet settled (both legs still in flight
+    /// somewhere). A healthy steady state hovers near zero; a monotonic
+    /// climb is the pair-leak regression this gauge exists to catch.
+    pub fn shadow_pending(&self) -> usize {
+        self.inner.metrics.shadow_pending()
+    }
+
+    /// `(accepted, rejected, shed)` totals for the network front-end, all
+    /// connections; zero until a
+    /// [`Frontend`](crate::coordinator::frontend::Frontend) is attached.
+    pub fn frontend_totals(&self) -> (usize, usize, usize) {
+        self.inner.metrics.frontend_totals()
+    }
+
+    /// Shared metrics sink — the network front-end records its
+    /// accept/reject/shed accounting here.
+    pub(crate) fn metrics(&self) -> &Arc<ServingMetrics> {
+        &self.inner.metrics
     }
 
     /// Graceful shutdown: stop accepting submits, drain every queued
@@ -1371,5 +1399,130 @@ mod tests {
             assert_eq!(rx.recv().unwrap().unwrap(), vec![i as f32]);
         }
         assert!(matches!(server.submit(vec![0.0]), Err(ServeError::Stopped)));
+    }
+
+    #[test]
+    fn fairshare_quota_shrinks_when_third_model_registers() {
+        // Regression: fair-share caps were resolved once at registration,
+        // so later registrations left the hot model's limit stale at its
+        // sole-model share. The effective cap must shrink as membership
+        // grows — observable end to end as the quota in the typed error.
+        let (server, gate_tx, log) = gated_server_with(16, ModelQuota::FairShare(0.5));
+        // Occupy the single worker so submits stay queued.
+        let rx0 = server.submit(vec![0.0]).unwrap();
+        while lock_recover(&log).is_empty() {
+            std::thread::yield_now();
+        }
+        // Sole model: cap = 0.5 × 16 = 8, so five queued submits all fit.
+        let pending: Vec<_> = (0..5)
+            .map(|i| server.submit(vec![i as f32]).unwrap())
+            .collect();
+        assert_eq!(server.model_queue_depth(DEFAULT_MODEL), 5);
+
+        // A second model halves the share (8 / 2 = 4): the backlog of 5
+        // already exceeds the shrunk cap, so the next submit is rejected
+        // with the *current* limit. Already-queued entries are never
+        // evicted by a shrink.
+        server
+            .register_model("cold", || Ok(Box::new(PanickyModel) as Box<dyn BatchModel>))
+            .unwrap();
+        match server.submit(vec![9.0]) {
+            Err(ServeError::ModelQuotaExceeded { model, quota }) => {
+                assert_eq!((model.as_str(), quota), (DEFAULT_MODEL, 4));
+            }
+            other => panic!("expected ModelQuotaExceeded, got {:?}", other.map(|_| ())),
+        }
+        // A third registration shrinks it again (8 / 3 = 2).
+        server
+            .register_model("cold2", || Ok(Box::new(PanickyModel) as Box<dyn BatchModel>))
+            .unwrap();
+        match server.submit(vec![9.0]) {
+            Err(ServeError::ModelQuotaExceeded { quota, .. }) => assert_eq!(quota, 2),
+            other => panic!("expected ModelQuotaExceeded, got {:?}", other.map(|_| ())),
+        }
+
+        drop(gate_tx);
+        assert!(rx0.recv().unwrap().is_ok());
+        for rx in pending {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        server.shutdown();
+    }
+
+    /// A model whose forward always fails — a shadow candidate that dies
+    /// with a Backend error on every mirrored request.
+    struct AlwaysFailingModel;
+
+    impl BatchModel for AlwaysFailingModel {
+        fn batch(&self) -> usize {
+            1
+        }
+        fn in_dim(&self) -> usize {
+            1
+        }
+        fn classes(&self) -> usize {
+            1
+        }
+        fn forward(&mut self, _x: &[f32]) -> anyhow::Result<Vec<f32>> {
+            anyhow::bail!("candidate kernel exploded")
+        }
+    }
+
+    #[test]
+    fn failing_shadow_candidate_settles_every_pair_no_leak() {
+        // Regression: a ShadowPair whose mirror leg died with a Backend
+        // error never received its second deposit and was retained
+        // forever. Pairs must settle complete-or-expire: the incomplete
+        // pair counts as shadow_dropped and its slot frees — under
+        // sustained shadow traffic the pending gauge returns to zero.
+        struct EchoModel;
+        impl BatchModel for EchoModel {
+            fn batch(&self) -> usize {
+                1
+            }
+            fn in_dim(&self) -> usize {
+                1
+            }
+            fn classes(&self) -> usize {
+                1
+            }
+            fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+                Ok(x.to_vec())
+            }
+        }
+        let server = InferenceServer::start_model(
+            || Ok(Box::new(EchoModel) as Box<dyn BatchModel>),
+            ServerConfig {
+                workers: 1,
+                max_wait: Duration::from_millis(1),
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        server
+            .register_model("bad", || Ok(Box::new(AlwaysFailingModel) as Box<dyn BatchModel>))
+            .unwrap();
+        server.set_alias("prod", DEFAULT_MODEL).unwrap();
+        server.set_shadow("prod", "bad").unwrap();
+
+        // Sustained shadow traffic: every primary answers, every mirror
+        // leg dies in the candidate's forward.
+        for i in 0..32 {
+            let got = server
+                .infer_with(vec![i as f32], SubmitOptions::default().with_model("prod"))
+                .unwrap();
+            assert_eq!(got, vec![i as f32], "clients always answered by the primary");
+        }
+        // Shutdown drains the remaining Low-priority mirrors; afterwards
+        // every pair must have settled — no pair-map growth.
+        server.shutdown();
+        assert_eq!(server.shadow_pending(), 0, "no leaked shadow pairs");
+        let stats = server.alias_stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].alias, "prod");
+        assert_eq!(
+            stats[0].shadow_dropped, 32,
+            "every incomplete pair is counted exactly once"
+        );
     }
 }

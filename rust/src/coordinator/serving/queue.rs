@@ -64,6 +64,7 @@
 
 use super::registry::ModelClaim;
 use super::ServeError;
+use crate::coordinator::metrics::ServingMetrics;
 use crate::util::lock_recover;
 use std::collections::{HashMap, VecDeque};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -136,15 +137,29 @@ impl SubmitOptions {
 /// and either leg may never flush at all (deadline, shutdown) — the pair
 /// then simply never yields a sample. Exactly one caller can observe
 /// `Some`, so a divergence sample is recorded at most once per request.
+///
+/// Pairs complete-or-expire: creation raises the `shadow_pending` gauge,
+/// and the `Drop` impl settles the accounting when the *last* leg's
+/// [`QueuedRequest`] goes away — answered, deadline-expired, failed by a
+/// backend error, or discarded at shutdown. A pair that never saw both
+/// deposits files `shadow_dropped` exactly once. No path can leak a pair:
+/// any leak would be visible as a nonzero `shadow_pending` floor.
 pub struct ShadowPair {
     /// `(primary logits, mirror logits)` — each written once.
     slots: Mutex<(Option<Vec<f32>>, Option<Vec<f32>>)>,
+    /// Alias whose rollout experiment this pair samples (metrics key).
+    alias: String,
+    /// Sink for the settle accounting in `Drop`.
+    metrics: Arc<ServingMetrics>,
 }
 
 impl ShadowPair {
-    pub(crate) fn new() -> Arc<ShadowPair> {
+    pub(crate) fn new(alias: &str, metrics: &Arc<ServingMetrics>) -> Arc<ShadowPair> {
+        metrics.record_shadow_begun();
         Arc::new(ShadowPair {
             slots: Mutex::new((None, None)),
+            alias: alias.to_string(),
+            metrics: Arc::clone(metrics),
         })
     }
 
@@ -168,6 +183,26 @@ impl ShadowPair {
             ),
             _ => None,
         }
+    }
+}
+
+impl Drop for ShadowPair {
+    fn drop(&mut self) {
+        // Runs when the last Arc drops — both legs' requests are gone, on
+        // whatever path they took (answered, expired, backend failure,
+        // mirror push rejected, queue shutdown). `get_mut` needs no lock:
+        // exclusive access is what Drop means.
+        let complete = match self.slots.get_mut() {
+            Ok(s) => s.0.is_some() && s.1.is_some(),
+            Err(poisoned) => {
+                let s = poisoned.into_inner();
+                s.0.is_some() && s.1.is_some()
+            }
+        };
+        if !complete {
+            self.metrics.record_shadow_dropped(&self.alias);
+        }
+        self.metrics.record_shadow_settled();
     }
 }
 
@@ -335,7 +370,9 @@ pub struct RequestQueue {
     state: Mutex<QueueState>,
     available: Condvar,
     cap: usize,
-    /// Age-promotion period; `None` disables promotion (strict priority).
+    /// Age-promotion period; `None` disables promotion (strict priority),
+    /// `Duration::ZERO` promotes immediately (pops degrade to pure arrival
+    /// order across classes).
     max_starvation: Option<Duration>,
 }
 
@@ -353,7 +390,7 @@ impl RequestQueue {
             }),
             available: Condvar::new(),
             cap: cap.max(1),
-            max_starvation: max_starvation.filter(|s| !s.is_zero()),
+            max_starvation,
         }
     }
 
@@ -457,6 +494,13 @@ impl RequestQueue {
     /// waited, saturating at High.
     fn effective_rank(&self, class: usize, now: Instant, enqueued: Instant) -> usize {
         match self.max_starvation {
+            // A zero period promotes immediately — every live entry
+            // competes at the top class and the seq tie-break makes pops
+            // pure arrival order. Guarded here so the division below is
+            // never by zero (a `Duration::ZERO` config used to be
+            // silently coerced to strict priority, the opposite of what
+            // "promote after zero wait" means).
+            Some(period) if period.is_zero() => 0,
             Some(period) => {
                 let waited = now.saturating_duration_since(enqueued);
                 class.saturating_sub((waited.as_nanos() / period.as_nanos()) as usize)
@@ -984,14 +1028,15 @@ mod tests {
 
     #[test]
     fn shadow_pair_yields_exactly_one_divergence_sample() {
+        let metrics = Arc::new(ServingMetrics::new(1));
         // Second depositor computes the divergence, whichever order the
         // legs land in.
-        let p = ShadowPair::new();
+        let p = ShadowPair::new("prod", &metrics);
         assert!(p.record(false, &[1.0, 2.0]).is_none());
         let d = p.record(true, &[1.0, 2.5]).expect("pair completed");
         assert!((d - 0.5).abs() < 1e-9);
 
-        let p = ShadowPair::new();
+        let p = ShadowPair::new("prod", &metrics);
         assert!(p.record(true, &[0.0, -3.0]).is_none());
         let d = p.record(false, &[0.0, 1.0]).expect("pair completed");
         assert!((d - 4.0).abs() < 1e-9);
@@ -999,5 +1044,64 @@ mod tests {
         // A duplicate flush of the same leg never yields a second sample.
         assert!(p.record(false, &[9.0, 9.0]).is_none());
         assert!(p.record(true, &[9.0, 9.0]).is_none());
+    }
+
+    #[test]
+    fn shadow_pair_drop_settles_gauge_and_counts_incomplete_as_dropped() {
+        let metrics = Arc::new(ServingMetrics::new(1));
+
+        // Completed pair: gauge returns to zero, nothing dropped.
+        let p = ShadowPair::new("prod", &metrics);
+        assert_eq!(metrics.shadow_pending(), 1);
+        assert!(p.record(false, &[1.0]).is_none());
+        assert!(p.record(true, &[1.0]).is_some());
+        drop(p);
+        assert_eq!(metrics.shadow_pending(), 0);
+        assert!(
+            metrics.alias_stats().iter().all(|a| a.shadow_dropped == 0),
+            "a completed pair is never dropped coverage"
+        );
+
+        // One-deposit pair (the other leg died): dropped coverage.
+        let p = ShadowPair::new("prod", &metrics);
+        assert!(p.record(false, &[1.0]).is_none());
+        drop(p);
+        // Zero-deposit pair (both legs died): still exactly one drop.
+        drop(ShadowPair::new("prod", &metrics));
+        assert_eq!(metrics.shadow_pending(), 0);
+        assert_eq!(metrics.alias_stats()[0].shadow_dropped, 2);
+    }
+
+    #[test]
+    fn zero_starvation_period_promotes_immediately() {
+        // Regression: `Duration::ZERO` used to be silently filtered to
+        // `None` (strict priority — the opposite of promote-immediately),
+        // and feeding it to `effective_rank` unfiltered would divide by
+        // zero. With the guard, a zero period serves in arrival order.
+        let q = RequestQueue::new(16, Some(Duration::ZERO));
+        for (id, p) in [
+            (1.0, Priority::Low),
+            (2.0, Priority::High),
+            (3.0, Priority::Normal),
+        ] {
+            let (r, _rx) = req(id);
+            q.push(r, p, None).unwrap();
+        }
+        let order: Vec<f32> = (0..3).map(|_| q.pop_blocking().unwrap().x[0]).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0], "zero period = pure arrival order");
+        q.check_invariants();
+
+        // Control: the same traffic under strict priority pops High first.
+        let q = RequestQueue::new(16, None);
+        for (id, p) in [
+            (1.0, Priority::Low),
+            (2.0, Priority::High),
+            (3.0, Priority::Normal),
+        ] {
+            let (r, _rx) = req(id);
+            q.push(r, p, None).unwrap();
+        }
+        let order: Vec<f32> = (0..3).map(|_| q.pop_blocking().unwrap().x[0]).collect();
+        assert_eq!(order, vec![2.0, 3.0, 1.0]);
     }
 }

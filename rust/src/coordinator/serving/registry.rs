@@ -34,7 +34,7 @@
 //! cache — reporting exact eviction counters.
 
 use super::backend::BatchModel;
-use super::ServeError;
+use super::{ModelQuota, ServeError};
 use crate::kernels::plan::PlanCache;
 use crate::util::lock_recover;
 use std::collections::HashMap;
@@ -79,11 +79,16 @@ pub(crate) struct ModelEntry {
     pub id: String,
     pub factory: ModelFactory,
     info: OnceLock<ModelInfo>,
-    /// Resolved per-model admission cap: the max entries this model may
-    /// have *queued* at once (`None` = unlimited, only the shared queue
-    /// cap applies). Fixed at registration — see
-    /// [`super::ModelQuota::limit`].
-    quota: Option<usize>,
+    /// Admission policy as configured. [`ModelQuota::FairShare`] is
+    /// membership-dependent, so the registry re-resolves `quota` from this
+    /// policy whenever a model registers or finishes retiring.
+    quota_policy: ModelQuota,
+    /// Currently-resolved per-model admission cap: the max entries this
+    /// model may have *queued* at once (`usize::MAX` = unlimited, only the
+    /// shared queue cap applies). Read per push via
+    /// [`ModelClaim::quota_limit`]; already-queued entries are never
+    /// re-checked when it shrinks — they drain normally.
+    quota: AtomicUsize,
     /// Accepted-but-unanswered requests holding a [`ModelClaim`] on this
     /// entry.
     in_flight: AtomicUsize,
@@ -105,12 +110,15 @@ pub(crate) struct ModelEntry {
 }
 
 impl ModelEntry {
-    fn new(id: &str, factory: ModelFactory, quota: Option<usize>) -> ModelEntry {
+    fn new(id: &str, factory: ModelFactory, quota_policy: ModelQuota) -> ModelEntry {
         ModelEntry {
             id: id.to_string(),
             factory,
             info: OnceLock::new(),
-            quota,
+            quota_policy,
+            // Placeholder until the registering `reresolve_quotas` pass
+            // runs (detached test claims keep it: unlimited).
+            quota: AtomicUsize::new(usize::MAX),
             in_flight: AtomicUsize::new(0),
             retired: AtomicBool::new(false),
             retuning: AtomicBool::new(false),
@@ -140,6 +148,22 @@ impl ModelEntry {
 
     pub fn in_flight(&self) -> usize {
         self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// The currently-resolved admission cap (`None` = unlimited). Relaxed
+    /// is enough: the value is a self-contained limit, not a handoff — a
+    /// push racing a re-resolve is admitted under one of the two caps,
+    /// exactly as if it had arrived a moment earlier or later.
+    pub fn quota_limit(&self) -> Option<usize> {
+        match self.quota.load(Ordering::Relaxed) {
+            usize::MAX => None,
+            n => Some(n),
+        }
+    }
+
+    /// Install a freshly resolved cap (`None` = unlimited).
+    fn set_quota_limit(&self, limit: Option<usize>) {
+        self.quota.store(limit.unwrap_or(usize::MAX), Ordering::Relaxed);
     }
 
     /// Claim the exclusive right to run this model's drift re-tune; the
@@ -210,7 +234,7 @@ impl ModelClaim {
         let entry = Arc::new(ModelEntry::new(
             id,
             Arc::new(|| anyhow::bail!("detached claim has no factory")),
-            None,
+            ModelQuota::Unlimited,
         ));
         let spec = ModelSpec {
             batch,
@@ -247,10 +271,13 @@ impl ModelClaim {
         self.spec
     }
 
-    /// The resolved admission cap of the claimed model (max queued
-    /// entries), threaded into `RequestQueue::push` at submit time.
+    /// The claimed model's *current* admission cap (max queued entries),
+    /// threaded into `RequestQueue::push` at submit time. Reads the live
+    /// value, not a registration-time snapshot: fair-share caps move when
+    /// registry membership changes, and every push must observe the cap
+    /// in force at that moment.
     pub(crate) fn quota_limit(&self) -> Option<usize> {
-        self.entry.quota
+        self.entry.quota_limit()
     }
 }
 
@@ -356,10 +383,12 @@ pub(crate) struct ModelRegistry {
     /// generation matches has an exact mirror of the entry map.
     generation: AtomicUsize,
     default_id: String,
+    /// Shared queue capacity fair-share quotas resolve against.
+    queue_cap: usize,
 }
 
 impl ModelRegistry {
-    pub fn new(default_id: &str) -> ModelRegistry {
+    pub fn new(default_id: &str, queue_cap: usize) -> ModelRegistry {
         ModelRegistry {
             state: Mutex::new(RegistryState {
                 entries: HashMap::new(),
@@ -367,6 +396,23 @@ impl ModelRegistry {
             }),
             generation: AtomicUsize::new(0),
             default_id: default_id.to_string(),
+            queue_cap: queue_cap.max(1),
+        }
+    }
+
+    /// Re-resolve every live entry's admission cap from its policy. Runs
+    /// under the state lock at each membership change (register, retire
+    /// completion) — the same points that bump `generation`. Fixed
+    /// policies (`Unlimited`, `Absolute`) are idempotent here; fair
+    /// shares shrink as live models join and widen as they leave.
+    fn reresolve_quotas(&self, st: &RegistryState) {
+        let live = st
+            .entries
+            .values()
+            .filter(|e| !e.retired.load(Ordering::Acquire))
+            .count();
+        for e in st.entries.values() {
+            e.set_quota_limit(e.quota_policy.resolve(self.queue_cap, live));
         }
     }
 
@@ -382,13 +428,15 @@ impl ModelRegistry {
     /// whose first worker instance reports it before the server constructor
     /// returns; a submit that races that window is rejected with the typed
     /// [`ServeError::ModelNotReady`], never a panic. `quota` is the
-    /// resolved per-model admission cap ([`super::ModelQuota::limit`]).
+    /// admission *policy*; the registry resolves it against the queue
+    /// capacity and current membership, and keeps re-resolving fair shares
+    /// as membership changes.
     pub fn register(
         &self,
         id: &str,
         factory: ModelFactory,
         info: Option<ModelInfo>,
-        quota: Option<usize>,
+        quota: ModelQuota,
     ) -> anyhow::Result<Arc<ModelEntry>> {
         anyhow::ensure!(!id.is_empty(), "model id must be non-empty");
         let entry = {
@@ -406,6 +454,11 @@ impl ModelRegistry {
                 entry.set_info(info);
             }
             st.entries.insert(id.to_string(), Arc::clone(&entry));
+            // Membership grew: every fair-share cap (including the new
+            // entry's own) shrinks to its new split, atomically with the
+            // insert — no push can observe the new member under a stale
+            // cap.
+            self.reresolve_quotas(&st);
             entry
         };
         self.generation.fetch_add(1, Ordering::AcqRel);
@@ -714,6 +767,9 @@ impl ModelRegistry {
         let live: Vec<u64> = {
             let mut st = lock_recover(&self.state);
             st.entries.remove(&entry.id);
+            // Membership shrank: surviving fair-share caps widen to the
+            // new split.
+            self.reresolve_quotas(&st);
             st.entries
                 .values()
                 .filter_map(|e| e.info())
@@ -761,14 +817,14 @@ mod tests {
 
     #[test]
     fn register_resolve_and_duplicate_rejection() {
-        let r = ModelRegistry::new(DEFAULT_MODEL);
+        let r = ModelRegistry::new(DEFAULT_MODEL, 64);
         let gen0 = r.generation();
-        r.register(DEFAULT_MODEL, noop_factory(), Some(info(8, vec![1])), None)
+        r.register(DEFAULT_MODEL, noop_factory(), Some(info(8, vec![1])), ModelQuota::Unlimited)
             .unwrap();
-        r.register("b", noop_factory(), Some(info(4, vec![2])), Some(16))
+        r.register("b", noop_factory(), Some(info(4, vec![2])), ModelQuota::Absolute(16))
             .unwrap();
         assert_eq!(r.generation(), gen0 + 2);
-        assert!(r.register("b", noop_factory(), None, None).is_err());
+        assert!(r.register("b", noop_factory(), None, ModelQuota::Unlimited).is_err());
         assert_eq!(r.models(), vec!["b".to_string(), DEFAULT_MODEL.to_string()]);
 
         let claim = r.resolve(None).unwrap();
@@ -789,8 +845,10 @@ mod tests {
         // Regression: a submit racing a registration whose probe had not
         // set `info` yet used to panic in `ModelEntry::spec()`; it must be
         // the typed ModelNotReady instead.
-        let r = Arc::new(ModelRegistry::new(DEFAULT_MODEL));
-        let entry = r.register("late", noop_factory(), None, None).unwrap();
+        let r = Arc::new(ModelRegistry::new(DEFAULT_MODEL, 64));
+        let entry = r
+            .register("late", noop_factory(), None, ModelQuota::Unlimited)
+            .unwrap();
         match r.resolve(Some("late")) {
             Err(ServeError::ModelNotReady { model }) => assert_eq!(model, "late"),
             other => panic!("expected ModelNotReady, got {:?}", other.map(|_| ())),
@@ -824,9 +882,9 @@ mod tests {
 
     #[test]
     fn claims_gate_the_drain_and_retire_blocks_resolves() {
-        let r = ModelRegistry::new(DEFAULT_MODEL);
+        let r = ModelRegistry::new(DEFAULT_MODEL, 64);
         let entry = r
-            .register("m", noop_factory(), Some(info(2, vec![7, 9])), None)
+            .register("m", noop_factory(), Some(info(2, vec![7, 9])), ModelQuota::Unlimited)
             .unwrap();
         let c1 = r.resolve(Some("m")).unwrap();
         let c2 = r.resolve(Some("m")).unwrap();
@@ -856,7 +914,7 @@ mod tests {
         assert_eq!(report.evicted_plans, 0);
         assert!(r.snapshot().is_empty());
         // The id is free again.
-        r.register("m", noop_factory(), Some(info(2, vec![7])), None).unwrap();
+        r.register("m", noop_factory(), Some(info(2, vec![7])), ModelQuota::Unlimited).unwrap();
     }
 
     #[test]
@@ -872,7 +930,7 @@ mod tests {
         cache.plan_for(&kernels, &shared, &req).unwrap();
         cache.plan_for(&kernels, &own, &req).unwrap();
 
-        let r = ModelRegistry::new(DEFAULT_MODEL);
+        let r = ModelRegistry::new(DEFAULT_MODEL, 64);
         let mk_info = |structures: Vec<u64>| ModelInfo {
             spec: ModelSpec {
                 batch: 2,
@@ -886,7 +944,7 @@ mod tests {
             "keep",
             noop_factory(),
             Some(mk_info(vec![shared.structure_hash()])),
-            None,
+            ModelQuota::Unlimited,
         )
         .unwrap();
         let retired = r
@@ -894,7 +952,7 @@ mod tests {
                 "kill",
                 noop_factory(),
                 Some(mk_info(vec![shared.structure_hash(), own.structure_hash()])),
-                None,
+                ModelQuota::Unlimited,
             )
             .unwrap();
 
@@ -910,16 +968,16 @@ mod tests {
 
     #[test]
     fn alias_flip_is_atomic_and_namespaces_are_disjoint() {
-        let r = ModelRegistry::new(DEFAULT_MODEL);
-        r.register("v1", noop_factory(), Some(info(8, vec![])), None).unwrap();
-        r.register("v2", noop_factory(), Some(info(4, vec![])), None).unwrap();
+        let r = ModelRegistry::new(DEFAULT_MODEL, 64);
+        r.register("v1", noop_factory(), Some(info(8, vec![])), ModelQuota::Unlimited).unwrap();
+        r.register("v2", noop_factory(), Some(info(4, vec![])), ModelQuota::Unlimited).unwrap();
         assert!(r.set_alias("prod", "ghost").is_err(), "unregistered target");
         r.set_alias("prod", "v1").unwrap();
         assert_eq!(r.alias_target("prod").as_deref(), Some("v1"));
         // Disjoint namespaces, both directions.
         assert!(r.set_alias("v2", "v1").is_err(), "alias may not shadow a model id");
         assert!(
-            r.register("prod", noop_factory(), Some(info(2, vec![])), None).is_err(),
+            r.register("prod", noop_factory(), Some(info(2, vec![])), ModelQuota::Unlimited).is_err(),
             "model id may not shadow an alias"
         );
         // Alias resolution pins the concrete model.
@@ -938,9 +996,9 @@ mod tests {
 
     #[test]
     fn canary_split_is_deterministic_in_the_request_key() {
-        let r = ModelRegistry::new(DEFAULT_MODEL);
-        r.register("v1", noop_factory(), Some(info(8, vec![])), None).unwrap();
-        r.register("v2", noop_factory(), Some(info(8, vec![])), None).unwrap();
+        let r = ModelRegistry::new(DEFAULT_MODEL, 64);
+        r.register("v1", noop_factory(), Some(info(8, vec![])), ModelQuota::Unlimited).unwrap();
+        r.register("v2", noop_factory(), Some(info(8, vec![])), ModelQuota::Unlimited).unwrap();
         r.set_alias("prod", "v1").unwrap();
         assert!(r.set_canary("prod", "v2", 0).is_err(), "percent 0 rejected");
         assert!(r.set_canary("prod", "v2", 101).is_err());
@@ -964,9 +1022,9 @@ mod tests {
 
     #[test]
     fn shadow_claims_ride_along_and_never_fail_the_primary() {
-        let r = ModelRegistry::new(DEFAULT_MODEL);
-        r.register("v1", noop_factory(), Some(info(8, vec![])), None).unwrap();
-        r.register("v2", noop_factory(), Some(info(8, vec![])), None).unwrap();
+        let r = ModelRegistry::new(DEFAULT_MODEL, 64);
+        r.register("v1", noop_factory(), Some(info(8, vec![])), ModelQuota::Unlimited).unwrap();
+        r.register("v2", noop_factory(), Some(info(8, vec![])), ModelQuota::Unlimited).unwrap();
         r.set_alias("prod", "v1").unwrap();
         r.set_shadow("prod", "v2").unwrap();
         let res = r.resolve_request(Some("prod"), 7).unwrap();
@@ -985,8 +1043,8 @@ mod tests {
 
     #[test]
     fn alias_legs_must_match_the_primary_geometry() {
-        let r = ModelRegistry::new(DEFAULT_MODEL);
-        r.register("v1", noop_factory(), Some(info(8, vec![])), None).unwrap();
+        let r = ModelRegistry::new(DEFAULT_MODEL, 64);
+        r.register("v1", noop_factory(), Some(info(8, vec![])), ModelQuota::Unlimited).unwrap();
         let wide = ModelInfo {
             spec: ModelSpec {
                 batch: 8,
@@ -996,7 +1054,7 @@ mod tests {
             structures: vec![],
             cache: None,
         };
-        r.register("wide", noop_factory(), Some(wide), None).unwrap();
+        r.register("wide", noop_factory(), Some(wide), ModelQuota::Unlimited).unwrap();
         r.set_alias("prod", "v1").unwrap();
         assert!(r.set_canary("prod", "wide", 10).is_err(), "in_dim mismatch");
         assert!(r.set_shadow("prod", "wide").is_err());
@@ -1006,8 +1064,8 @@ mod tests {
 
     #[test]
     fn retune_guard_admits_exactly_one_worker_per_drift_event() {
-        let r = ModelRegistry::new(DEFAULT_MODEL);
-        let entry = r.register("m", noop_factory(), Some(info(2, vec![])), None).unwrap();
+        let r = ModelRegistry::new(DEFAULT_MODEL, 64);
+        let entry = r.register("m", noop_factory(), Some(info(2, vec![])), ModelQuota::Unlimited).unwrap();
         assert_eq!(entry.retune_epoch(), 0);
         assert!(entry.try_begin_retune(), "first claimant wins");
         assert!(!entry.try_begin_retune(), "second claimant must skip");
@@ -1020,12 +1078,47 @@ mod tests {
 
     #[test]
     fn duplicate_claims_share_one_entry_accounting() {
-        let r = ModelRegistry::new(DEFAULT_MODEL);
-        r.register("m", noop_factory(), Some(info(2, vec![])), None).unwrap();
+        let r = ModelRegistry::new(DEFAULT_MODEL, 64);
+        r.register("m", noop_factory(), Some(info(2, vec![])), ModelQuota::Unlimited).unwrap();
         let c1 = r.resolve(Some("m")).unwrap();
         let c2 = c1.duplicate();
         assert_eq!(c1.in_flight(), 2, "duplicate charges the same concrete entry");
         drop(c2);
         assert_eq!(c1.in_flight(), 1);
+    }
+
+    #[test]
+    fn fairshare_cap_reresolves_on_membership_change() {
+        // Regression: fair-share quotas used to be resolved to an absolute
+        // number once at registration, so later registrations (and
+        // retirements) left every other model's cap stale. The cap must
+        // track *current* membership.
+        let r = ModelRegistry::new(DEFAULT_MODEL, 64);
+        r.register("hot", noop_factory(), Some(info(2, vec![])), ModelQuota::FairShare(0.5))
+            .unwrap();
+        let hot = r.resolve(Some("hot")).unwrap();
+        assert_eq!(hot.quota_limit(), Some(32), "sole model: 0.5 × 64");
+
+        r.register("b", noop_factory(), Some(info(2, vec![])), ModelQuota::Unlimited)
+            .unwrap();
+        assert_eq!(
+            hot.quota_limit(),
+            Some(16),
+            "an existing claim observes the shrunk cap after a second model registers"
+        );
+
+        r.register("c", noop_factory(), Some(info(2, vec![])), ModelQuota::Absolute(5))
+            .unwrap();
+        assert_eq!(hot.quota_limit(), Some(10), "third model shrinks it again");
+        // Fixed policies never move with membership.
+        assert_eq!(r.resolve(Some("b")).unwrap().quota_limit(), None);
+        assert_eq!(r.resolve(Some("c")).unwrap().quota_limit(), Some(5));
+
+        // Retiring a member widens the survivors' shares again — the
+        // re-resolve runs at retire *completion*, when the slot frees.
+        let retiring = r.begin_retire("c").unwrap();
+        retiring.wait_drained();
+        r.finish_retire(&retiring);
+        assert_eq!(hot.quota_limit(), Some(16), "membership shrank back to two");
     }
 }

@@ -276,8 +276,9 @@ fn flush(set: &mut ModelSet, ctx: &WorkerContext, model_id: &str, pending: &mut 
             // coverage, never a client-facing failure: the primary leg
             // answers (or already has), so the rejection counters the
             // rollout invariants assert zero on must stay untouched.
-            if let Some(RouteTag::Shadow { alias, .. }) = &req.route {
-                ctx.metrics.record_shadow_dropped(alias);
+            // Dropping the request releases its leg of the `ShadowPair`,
+            // whose `Drop` counts the incomplete pair as shadow-dropped.
+            if let Some(RouteTag::Shadow { .. }) = &req.route {
             } else {
                 ctx.metrics.record_rejected_deadline();
                 ctx.metrics.record_model_rejected_deadline(model_id);
@@ -474,10 +475,10 @@ fn fail_batch(
 /// Reject one expired request with the typed error and counters; it never
 /// reaches [`BatchModel::forward`] and never occupies a batch slot. An
 /// expired shadow mirror is dropped coverage, not a client failure — it
-/// files `shadow_dropped` instead of the rejection counters.
+/// skips the rejection counters; dropping it releases its `ShadowPair`
+/// leg, whose `Drop` files the incomplete pair as shadow-dropped.
 fn reject_expired(ctx: &WorkerContext, req: QueuedRequest) {
-    if let Some(RouteTag::Shadow { alias, .. }) = &req.route {
-        ctx.metrics.record_shadow_dropped(alias);
+    if let Some(RouteTag::Shadow { .. }) = &req.route {
         return;
     }
     ctx.metrics.record_rejected_deadline();
@@ -566,7 +567,7 @@ mod tests {
             metrics: Arc::clone(metrics),
             // Generation 0 matches the test ModelSet: sync is a no-op and
             // the dummy factories are never invoked.
-            registry: Arc::new(ModelRegistry::new("m")),
+            registry: Arc::new(ModelRegistry::new("m", 16)),
             max_wait: Duration::from_millis(1),
             retune_threshold: None,
             live: Arc::new(AtomicUsize::new(1)),
@@ -900,7 +901,7 @@ mod tests {
         // ran the search, double-invalidating the TuneCache entry,
         // double-evicting the plan namespace and double-counting
         // `ModelStats::retunes`.
-        let registry = Arc::new(ModelRegistry::new("m"));
+        let registry = Arc::new(ModelRegistry::new("m", 16));
         registry
             .register(
                 "m",
@@ -914,7 +915,7 @@ mod tests {
                     structures: Vec::new(),
                     cache: None,
                 }),
-                None,
+                crate::coordinator::serving::ModelQuota::Unlimited,
             )
             .unwrap();
         let queue = Arc::new(RequestQueue::new(4, None));
@@ -1034,7 +1035,7 @@ mod tests {
             ],
             0,
         );
-        let pair = ShadowPair::new();
+        let pair = ShadowPair::new("prod", &metrics);
         let now = Instant::now();
         let (tx, rx_primary) = mpsc::channel();
         queue
@@ -1086,7 +1087,7 @@ mod tests {
                     claim: ModelClaim::detached("v2", 1, 1, 1),
                     route: Some(RouteTag::Shadow {
                         alias: "prod".to_string(),
-                        pair: ShadowPair::new(),
+                        pair: ShadowPair::new("prod", &metrics),
                     }),
                 },
                 Priority::Low,
@@ -1150,5 +1151,84 @@ mod tests {
         assert_eq!(metrics.worker_stats()[0].errors, 1);
         assert_eq!(metrics.totals(), (0, 0), "failed batches are not throughput");
         assert_eq!(metrics.model_stats()[0].errors, 1);
+    }
+
+    #[test]
+    fn failing_mirror_leg_settles_pair_and_counts_dropped() {
+        // Regression: a ShadowPair whose mirror leg died with a backend
+        // error never got its second deposit and was retained forever.
+        // The pair must settle complete-or-expire when both legs' requests
+        // are gone — counted once as shadow_dropped, pending gauge back to
+        // zero.
+        let queue = queue();
+        let metrics = Arc::new(ServingMetrics::new(1));
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut set = ModelSet::with_models(
+            vec![
+                (
+                    "v1",
+                    Box::new(IdentityModel {
+                        batch: 1,
+                        seen: Arc::clone(&seen),
+                    }) as Box<dyn BatchModel>,
+                ),
+                ("v2", Box::new(FailingModel) as Box<dyn BatchModel>),
+            ],
+            0,
+        );
+        let now = Instant::now();
+        let pair = ShadowPair::new("prod", &metrics);
+        assert_eq!(metrics.shadow_pending(), 1, "begun pair is pending");
+        let (tx, rx_primary) = mpsc::channel();
+        queue
+            .push(
+                QueuedRequest {
+                    x: vec![5.0],
+                    enqueued: now,
+                    deadline: None,
+                    respond: tx,
+                    claim: ModelClaim::detached("v1", 1, 1, 1),
+                    route: Some(RouteTag::Alias {
+                        alias: "prod".to_string(),
+                        canary: false,
+                        shadow: Some(Arc::clone(&pair)),
+                    }),
+                },
+                Priority::Normal,
+                None,
+            )
+            .unwrap();
+        let (tx_mirror, rx_mirror) = mpsc::channel();
+        queue
+            .push(
+                QueuedRequest {
+                    x: vec![5.0],
+                    enqueued: now,
+                    deadline: None,
+                    respond: tx_mirror,
+                    claim: ModelClaim::detached("v2", 1, 1, 1),
+                    route: Some(RouteTag::Shadow {
+                        alias: "prod".to_string(),
+                        pair: Arc::clone(&pair),
+                    }),
+                },
+                Priority::Low,
+                None,
+            )
+            .unwrap();
+        queue.close();
+        drop(pair); // only the queued legs keep the pair alive now
+        worker_loop(&mut set, ctx(&queue, &metrics));
+        // The client still got its primary answer; the mirror died in the
+        // candidate's forward and never answers anyone.
+        assert_eq!(rx_primary.recv().unwrap().unwrap(), vec![5.0]);
+        assert!(matches!(rx_mirror.try_recv(), Err(mpsc::TryRecvError::Disconnected)));
+        // Both legs are gone: the pair settled — no leak — and the
+        // incomplete pair was filed as dropped coverage exactly once.
+        assert_eq!(metrics.shadow_pending(), 0, "no retained pair after both legs died");
+        let alias_stats = metrics.alias_stats();
+        assert_eq!(alias_stats.len(), 1);
+        assert_eq!(alias_stats[0].shadow_dropped, 1);
+        assert_eq!(alias_stats[0].shadow_samples, 0, "no divergence from a dead mirror");
     }
 }

@@ -12,7 +12,10 @@
 //!   analyze     static-analysis pass enforcing the crate's concurrency invariants
 
 use rbgp::bench_harness::{table1, table2, table3};
-use rbgp::coordinator::{InferenceServer, ServeError, ServerConfig, SubmitOptions};
+use rbgp::coordinator::{
+    Frontend, FrontendClient, FrontendConfig, InferenceServer, ServeError, ServerConfig, Status,
+    SubmitOptions,
+};
 use rbgp::data::CifarLike;
 use rbgp::graph::{product_many, ramanujan, spectral, BipartiteGraph};
 use rbgp::gpusim::explain_fig1;
@@ -59,6 +62,7 @@ COMMANDS
              [--shadow alias=model] [--promote alias=model]
              [--tune off|quick|full] [--tune-cache FILE]
              [--retune-threshold 0.7]                          (native only)
+             [--listen ADDR] [--tenant key=quota]...
              [--artifacts DIR] [--checkpoint ckpt.json]        (xla only)
   analyze    [PATHS]... [--json] [--out FILE] [--deny RULE]... [--verbose]
              lint the crate sources against the serving-core invariants
@@ -96,7 +100,12 @@ on spare capacity and records max-abs logit divergence (the client is
 always answered by the primary), and --promote runs a full zero-downtime
 rollout after the traffic phase: atomically flip the alias to the named
 model, drain the old primary and retire it, printing exact eviction
-counters.
+counters. --listen ADDR additionally binds the non-blocking TCP
+front-end on ADDR (port 0 picks a free port) and routes the demo
+traffic through it as real network clients speaking the length-prefixed
+binary protocol; each --tenant key=quota (same Q grammar as model
+quotas) caps that tenant key's in-flight requests, rejected with a
+typed TenantQuotaExceeded status before they touch the shared queue.
 
 `analyze` runs the built-in static-analysis pass (lock-discipline,
 lock-order, panic-freedom, atomic-ordering, unsafe-inventory) over
@@ -478,6 +487,30 @@ fn parse_quota(text: &str, flag: &str) -> anyhow::Result<rbgp::coordinator::Mode
     }
 }
 
+/// Parse `--max-starvation-ms`. `0` used to *silently disable* aging
+/// promotion while reading like "promote immediately" — and worse, some
+/// period math divided by it. It is now rejected at parse time; pass a
+/// period ≥ 1 ms (or a very large one to approximate strict priority
+/// with no promotion). The queue itself treats a literal
+/// `Duration::ZERO` as promote-immediately, so embedders that want pure
+/// arrival order can opt in programmatically.
+fn parse_max_starvation_ms(ms: u64) -> anyhow::Result<Option<Duration>> {
+    anyhow::ensure!(
+        ms > 0,
+        "--max-starvation-ms 0 is ambiguous (it used to silently disable aging \
+         promotion): pass a period ≥ 1 ms, or a very large period to approximate \
+         strict priority"
+    );
+    Ok(Some(Duration::from_millis(ms)))
+}
+
+/// Split a `--tenant` spec `key=quota` into the tenant key and its quota
+/// class (same grammar as `--model-quota`).
+fn parse_tenant_spec(spec: &str) -> anyhow::Result<(String, rbgp::coordinator::ModelQuota)> {
+    let (key, quota) = split_assign("tenant", spec)?;
+    Ok((key.to_string(), parse_quota(quota, "--tenant quota")?))
+}
+
 /// Split a `--model` spec `name=path[@quota]`. A trailing `@Q` is a quota
 /// override only when `Q` parses as a quota; otherwise the `@` belongs to
 /// the path.
@@ -505,10 +538,7 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
         0 => None,
         ms => Some(Duration::from_millis(ms)),
     };
-    let max_starvation = match args.get_u64("max-starvation-ms", 1000)? {
-        0 => None,
-        ms => Some(Duration::from_millis(ms)),
-    };
+    let max_starvation = parse_max_starvation_ms(args.get_u64("max-starvation-ms", 1000)?)?;
     let model_quota = match args.get("model-quota") {
         Some(text) => parse_quota(text, "--model-quota")?,
         None => rbgp::coordinator::ModelQuota::Unlimited,
@@ -693,6 +723,47 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
         server.set_shadow(alias, target)?;
         println!("shadow '{alias}' → '{target}'");
     }
+    // Network front-end: with --listen the demo clients become real TCP
+    // connections speaking the binary protocol; without it they submit
+    // in-process exactly as before.
+    let tenants = args
+        .get_all("tenant")
+        .iter()
+        .map(|s| parse_tenant_spec(s))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let listen = args.get("listen");
+    anyhow::ensure!(
+        tenants.is_empty() || listen.is_some(),
+        "--tenant quotas apply to the network front-end; add --listen ADDR"
+    );
+    let frontend = match listen {
+        Some(addr) => {
+            let fe = Frontend::start(
+                server.clone(),
+                FrontendConfig {
+                    listen: addr.to_string(),
+                    tenants: tenants.clone(),
+                    ..FrontendConfig::default()
+                },
+            )?;
+            println!(
+                "front-end listening on {} ({} tenant quota classes)",
+                fe.local_addr(),
+                tenants.len()
+            );
+            Some(fe)
+        }
+        None => None,
+    };
+    let fe_addr = frontend.as_ref().map(|f| f.local_addr());
+    // Each client thread submits under one tenant key, cycling through the
+    // configured classes so quota admission actually gets exercised.
+    let tenant_keys: Vec<String> = if tenants.is_empty() {
+        vec!["demo".to_string()]
+    } else {
+        tenants.iter().map(|(k, _)| k.clone()).collect()
+    };
+    let deadline_ms_wire = deadline.map(|d| d.as_millis() as u32).unwrap_or(0);
     println!(
         "default model: in_dim {}, classes {}, max batch {} × {} workers, queue cap {}",
         server.in_dim,
@@ -706,7 +777,10 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
         for c in 0..clients {
             let server = server.clone();
             let routes = &routes;
+            let tenant = tenant_keys[c % tenant_keys.len()].clone();
             scope.spawn(move || {
+                let mut net =
+                    fe_addr.map(|addr| FrontendClient::connect(addr).expect("connect front-end"));
                 let mut data: Vec<CifarLike> = routes
                     .iter()
                     .map(|(_, in_dim, classes)| CifarLike::new(*in_dim, *classes, c as u64))
@@ -718,6 +792,29 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
                     let route = (c + r) % routes.len();
                     let (model, _, classes) = &routes[route];
                     let b = data[route].test_batch(1);
+                    if let Some(net) = net.as_mut() {
+                        let resp = net
+                            .infer(
+                                b.x,
+                                model.as_deref(),
+                                rbgp::coordinator::Priority::Normal,
+                                &tenant,
+                                deadline_ms_wire,
+                            )
+                            .expect("front-end io");
+                        match resp.status {
+                            Status::Ok => assert_eq!(resp.payload.len(), *classes),
+                            // Backpressure statuses mirror the in-process
+                            // arm's tolerated rejections, plus the
+                            // front-end-only tenant class.
+                            Status::QueueFull
+                            | Status::DeadlineExceeded
+                            | Status::ModelQuotaExceeded
+                            | Status::TenantQuotaExceeded => {}
+                            s => panic!("front-end infer failed: {s}: {}", resp.detail),
+                        }
+                        continue;
+                    }
                     let opts = match model {
                         Some(m) => SubmitOptions::default().with_model(m.clone()),
                         None => SubmitOptions::default(),
@@ -854,6 +951,47 @@ fn serve_cmd(args: &Args) -> anyhow::Result<()> {
             report.evicted_plans
         );
     }
+    // Drain the front-end before the server: open connections finish
+    // their in-flight responses while workers are still alive to answer.
+    if let Some(fe) = frontend {
+        let (accepted, rejected, shed) = server.frontend_totals();
+        println!("  front-end: {accepted} accepted, {rejected} rejected, {shed} shed");
+        fe.shutdown();
+    }
     server.shutdown();
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use rbgp::coordinator::ModelQuota;
+
+    #[test]
+    fn zero_starvation_period_is_rejected_at_parse_time() {
+        let err = parse_max_starvation_ms(0).expect_err("0 must be rejected");
+        assert!(
+            err.to_string().contains("ambiguous"),
+            "rejection should explain the former silent-disable: {err}"
+        );
+        assert_eq!(
+            parse_max_starvation_ms(250).expect("valid period"),
+            Some(Duration::from_millis(250))
+        );
+    }
+
+    #[test]
+    fn tenant_spec_parses_every_quota_class() {
+        let (key, quota) = parse_tenant_spec("team-a=0.5").expect("fair share");
+        assert_eq!(key, "team-a");
+        assert_eq!(quota, ModelQuota::FairShare(0.5));
+        let (key, quota) = parse_tenant_spec("team-b=16").expect("absolute");
+        assert_eq!(key, "team-b");
+        assert_eq!(quota, ModelQuota::Absolute(16));
+        let (key, quota) = parse_tenant_spec("team-c=0").expect("unlimited");
+        assert_eq!(key, "team-c");
+        assert_eq!(quota, ModelQuota::Unlimited);
+        assert!(parse_tenant_spec("no-quota").is_err(), "missing '=' must be rejected");
+        assert!(parse_tenant_spec("team-d=1.5").is_err(), "fractional >1 must be rejected");
+    }
 }

@@ -1,0 +1,314 @@
+//! Integration tests for the TCP front-end over the public API: real
+//! sockets speaking the length-prefixed binary protocol against a live
+//! worker pool. Covers echo conformance versus in-process submits, the
+//! full reachable status-code surface under saturation (queue, model
+//! quota, tenant quota, deadline, unknown model, wrong width, bad
+//! frame), out-of-order completion on one connection, and drain-clean
+//! shutdown with connections still open.
+//!
+//! These run on the default (native) build — no artifacts, no `xla`.
+
+use rbgp::coordinator::frontend::protocol;
+use rbgp::coordinator::{
+    BatchModel, Frontend, FrontendClient, FrontendConfig, InferenceServer, ModelQuota, Priority,
+    Request, Response, ServerConfig, Status,
+};
+use rbgp::util::lock_recover;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const IN_DIM: usize = 8;
+
+/// Identity model: logits are the sample itself, so a network response
+/// can be compared bit-for-bit against the in-process result.
+struct EchoModel {
+    batch: usize,
+    in_dim: usize,
+}
+
+impl BatchModel for EchoModel {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+    fn classes(&self) -> usize {
+        self.in_dim
+    }
+    fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        Ok(x.to_vec())
+    }
+}
+
+/// Width-1 model that blocks inside `forward` until the gate channel
+/// drops — pins the single worker so tests build queue backlogs
+/// deterministically. Logs each batch so tests can tell when the worker
+/// is actually inside `forward`.
+struct GatedModel {
+    gate: mpsc::Receiver<()>,
+    log: Arc<Mutex<Vec<f32>>>,
+}
+
+impl BatchModel for GatedModel {
+    fn batch(&self) -> usize {
+        1
+    }
+    fn in_dim(&self) -> usize {
+        1
+    }
+    fn classes(&self) -> usize {
+        1
+    }
+    fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        lock_recover(&self.log).extend_from_slice(x);
+        let _ = self.gate.recv(); // blocks until the test drops the gate
+        Ok(x.to_vec())
+    }
+}
+
+fn echo_server(workers: usize) -> InferenceServer {
+    InferenceServer::start_model(
+        || Ok(Box::new(EchoModel { batch: 4, in_dim: IN_DIM }) as Box<dyn BatchModel>),
+        ServerConfig { workers, max_wait: Duration::from_millis(1), ..ServerConfig::default() },
+    )
+    .expect("server start")
+}
+
+fn gated_server(config: ServerConfig) -> (InferenceServer, mpsc::Sender<()>, Arc<Mutex<Vec<f32>>>) {
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let slot = Arc::new(Mutex::new(Some(gate_rx)));
+    let factory_log = Arc::clone(&log);
+    let server = InferenceServer::start_model_as(
+        "slow",
+        move || {
+            let gate = lock_recover(&slot).take().expect("single worker");
+            Ok(Box::new(GatedModel { gate, log: Arc::clone(&factory_log) }) as Box<dyn BatchModel>)
+        },
+        config,
+    )
+    .expect("server start");
+    (server, gate_tx, log)
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn request(req_id: u64, priority: Priority, payload: Vec<f32>) -> Request {
+    Request { req_id, priority, deadline_ms: 0, tenant: "free".to_string(), model: None, payload }
+}
+
+/// Read responses off one connection until every wanted id has arrived
+/// (responses interleave out of request order).
+fn collect(client: &mut FrontendClient, want: &[u64]) -> HashMap<u64, Response> {
+    let mut got = HashMap::new();
+    while want.iter().any(|id| !got.contains_key(id)) {
+        let resp = client.recv().expect("response frame");
+        got.insert(resp.req_id, resp);
+    }
+    got
+}
+
+#[test]
+fn network_echo_matches_in_process_submit() {
+    let server = echo_server(2);
+    let fe = Frontend::start(server.clone(), FrontendConfig::default()).expect("frontend start");
+    let mut client = FrontendClient::connect(fe.local_addr()).expect("connect");
+    for r in 0..16 {
+        let payload: Vec<f32> = (0..IN_DIM).map(|i| (i + r) as f32 / 7.0 - 1.0).collect();
+        let resp = client
+            .infer(payload.clone(), None, Priority::Normal, "team-a", 0)
+            .expect("round trip");
+        assert_eq!(resp.status, Status::Ok, "echo request failed: {}", resp.detail);
+        // The network path and the in-process path must produce the same
+        // logits for the same sample — the socket adds transport, not math.
+        let local = server.infer(payload).expect("in-process infer");
+        assert_eq!(resp.payload, local);
+    }
+    let (accepted, rejected, shed) = server.frontend_totals();
+    assert_eq!(accepted, 16);
+    assert_eq!((rejected, shed), (0, 0));
+    fe.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn every_reachable_error_surfaces_as_its_status_code() {
+    // Single gated worker, tiny queue, a quota'd second model and a
+    // capped tenant class: every reachable rejection fires and each must
+    // come back as its own distinct protocol status.
+    let (server, gate_tx, log) = gated_server(ServerConfig {
+        workers: 1,
+        queue_cap: 4,
+        max_wait: Duration::from_millis(1),
+        ..ServerConfig::default()
+    });
+    server
+        .register_model_with_quota("quoted", ModelQuota::Absolute(1), || {
+            Ok(Box::new(EchoModel { batch: 1, in_dim: 1 }) as Box<dyn BatchModel>)
+        })
+        .expect("register quoted");
+    let fe = Frontend::start(
+        server.clone(),
+        FrontendConfig {
+            tenants: vec![("limited".to_string(), ModelQuota::Absolute(1))],
+            ..FrontendConfig::default()
+        },
+    )
+    .expect("frontend start");
+    let accepted = |n: usize| {
+        let server = server.clone();
+        move || server.frontend_totals().0 == n
+    };
+    let rejected = |n: usize| {
+        let server = server.clone();
+        move || server.frontend_totals().1 == n
+    };
+
+    let mut a = FrontendClient::connect(fe.local_addr()).expect("connect a");
+    // Plug: occupies the lone worker inside `forward`, so everything
+    // after it queues (or rejects) deterministically.
+    a.send(&request(1, Priority::Normal, vec![1.0])).expect("send plug");
+    wait_until("worker inside forward", || !lock_recover(&log).is_empty());
+
+    // Synchronous rejections while the queue is still empty.
+    a.send(&request(2, Priority::Normal, vec![0.5; 3])).expect("send wrong width");
+    a.send(&Request { model: Some("nope".to_string()), ..request(3, Priority::Normal, vec![1.0]) })
+        .expect("send unknown model");
+    wait_until("both synchronous rejects", rejected(2));
+
+    // Tenant class "limited" caps at 1 in flight: the second request on
+    // tenant B is rejected at the front door, before the shared queue.
+    let mut b = FrontendClient::connect(fe.local_addr()).expect("connect b");
+    let tenant_b = |req_id| Request { tenant: "limited".to_string(), ..request(req_id, Priority::Normal, vec![2.0]) };
+    b.send(&tenant_b(100)).expect("send b1");
+    wait_until("tenant request admitted", accepted(2));
+    b.send(&tenant_b(101)).expect("send b2");
+    wait_until("tenant quota reject", rejected(3));
+
+    // Model quota: "quoted" allows one queued request; the second is
+    // back-pressured for that model only (the queue still has space).
+    a.send(&Request { model: Some("quoted".to_string()), ..request(4, Priority::Normal, vec![3.0]) })
+        .expect("send quoted 1");
+    wait_until("quoted request admitted", accepted(3));
+    a.send(&Request { model: Some("quoted".to_string()), ..request(5, Priority::Normal, vec![4.0]) })
+        .expect("send quoted 2");
+    wait_until("model quota reject", rejected(4));
+
+    // Fill the shared queue to its cap, one request carrying a 1 ms
+    // deadline that will lapse long before the gate opens.
+    a.send(&Request { deadline_ms: 1, ..request(6, Priority::Normal, vec![5.0]) })
+        .expect("send deadline");
+    a.send(&request(7, Priority::Normal, vec![6.0])).expect("send filler");
+    wait_until("queue full", accepted(5));
+    a.send(&request(8, Priority::Normal, vec![7.0])).expect("send overflow");
+    wait_until("queue-full reject", rejected(5));
+
+    // A frame that parses as a length prefix but whose body is garbage:
+    // typed BadFrame response (req_id 0 — the id was unreadable).
+    let mut c = std::net::TcpStream::connect(fe.local_addr()).expect("connect c");
+    c.write_all(&[2, 0, 0, 0, 0xFF, 0xFF]).expect("send garbage");
+    let mut len = [0u8; 4];
+    c.read_exact(&mut len).expect("bad-frame response length");
+    let mut body = vec![0u8; u32::from_le_bytes(len) as usize];
+    c.read_exact(&mut body).expect("bad-frame response body");
+    let bad = protocol::decode_response(&body).expect("decode bad-frame response");
+    assert_eq!((bad.req_id, bad.status), (0, Status::BadFrame), "detail: {}", bad.detail);
+
+    // Let the 1 ms deadline lapse, then open the gate and drain.
+    std::thread::sleep(Duration::from_millis(30));
+    drop(gate_tx);
+
+    let got = collect(&mut a, &[1, 2, 3, 4, 5, 6, 7, 8]);
+    let status = |id: u64| got.get(&id).map(|r| r.status).expect("collected");
+    assert_eq!(status(1), Status::Ok);
+    assert_eq!(status(2), Status::WrongInputWidth);
+    assert_eq!(status(3), Status::UnknownModel);
+    assert_eq!(status(4), Status::Ok);
+    assert_eq!(status(5), Status::ModelQuotaExceeded);
+    assert_eq!(status(6), Status::DeadlineExceeded);
+    assert_eq!(status(7), Status::Ok);
+    assert_eq!(status(8), Status::QueueFull);
+    // Error details ride along for the humans.
+    assert!(got.get(&5).map(|r| r.detail.contains("quota")).unwrap_or(false));
+
+    let got_b = collect(&mut b, &[100, 101]);
+    assert_eq!(got_b.get(&100).map(|r| r.status), Some(Status::Ok));
+    assert_eq!(got_b.get(&101).map(|r| r.status), Some(Status::TenantQuotaExceeded));
+
+    let (accepted, rejected, shed) = server.frontend_totals();
+    assert_eq!(accepted, 5, "plug + tenant + quoted + deadline + filler");
+    assert_eq!(rejected, 6, "width, unknown, tenant, quota, queue-full, bad frame");
+    assert_eq!(shed, 0);
+    fe.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn responses_complete_out_of_order_on_one_connection() {
+    let (server, gate_tx, log) = gated_server(ServerConfig {
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        ..ServerConfig::default()
+    });
+    let fe = Frontend::start(server.clone(), FrontendConfig::default()).expect("frontend start");
+
+    // Pin the worker from a separate connection so the test connection's
+    // two requests are both queued before anything pops.
+    let mut plug = FrontendClient::connect(fe.local_addr()).expect("connect plug");
+    plug.send(&request(1, Priority::Normal, vec![0.0])).expect("send plug");
+    wait_until("worker inside forward", || !lock_recover(&log).is_empty());
+
+    let mut client = FrontendClient::connect(fe.local_addr()).expect("connect");
+    client.send(&request(10, Priority::Low, vec![1.0])).expect("send low");
+    client.send(&request(11, Priority::High, vec![2.0])).expect("send high");
+    wait_until("both queued", || server.frontend_totals().0 == 3);
+    drop(gate_tx);
+
+    // The High request was sent second but pops first: its response must
+    // arrive on the wire before the Low one — same connection, reordered.
+    let first = client.recv().expect("first response");
+    assert_eq!((first.req_id, first.status), (11, Status::Ok));
+    assert_eq!(first.payload, vec![2.0]);
+    let second = client.recv().expect("second response");
+    assert_eq!((second.req_id, second.status), (10, Status::Ok));
+    assert_eq!(second.payload, vec![1.0]);
+
+    assert_eq!(collect(&mut plug, &[1]).get(&1).map(|r| r.status), Some(Status::Ok));
+    fe.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_open_connections() {
+    let server = echo_server(2);
+    let fe = Frontend::start(server.clone(), FrontendConfig::default()).expect("frontend start");
+    let mut client = FrontendClient::connect(fe.local_addr()).expect("connect");
+    let payloads: Vec<Vec<f32>> =
+        (0..8).map(|r| (0..IN_DIM).map(|i| (r * IN_DIM + i) as f32).collect()).collect();
+    for (r, p) in payloads.iter().enumerate() {
+        client.send(&request(r as u64 + 1, Priority::Normal, p.clone())).expect("send");
+    }
+    // Shut down with all eight in flight and the connection wide open:
+    // the drain must answer every admitted request and flush it out
+    // before the reactor exits.
+    wait_until("all admitted", || server.frontend_totals().0 == 8);
+    fe.shutdown();
+    let got = collect(&mut client, &[1, 2, 3, 4, 5, 6, 7, 8]);
+    for (r, p) in payloads.iter().enumerate() {
+        let resp = got.get(&(r as u64 + 1)).expect("drained response");
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(&resp.payload, p, "drained response carries the right logits");
+    }
+    // The reactor is gone; the socket is closed, not wedged.
+    assert!(client.recv().is_err(), "connection closes after the drain");
+    server.shutdown();
+}

@@ -514,6 +514,220 @@ fn prop_alias_resolved_submits_charge_the_concrete_model() {
     });
 }
 
+/// Quota re-resolution satellite (sequential oracle): the registry
+/// re-resolves fair-share limits whenever membership changes, which the
+/// queue sees as a *different* `Some(limit)` on later pushes. Admission
+/// must track exactly the limit in force at each push: backlog already
+/// queued above a shrunken limit is grandfathered (accepted entries are
+/// never evicted), but new pushes reject until pops bring the backlog
+/// under the new limit — and a later widening admits again.
+#[test]
+fn prop_quota_reresolution_tracks_the_limit_at_push_time() {
+    check("quota re-resolution, sequential", 25, |rng| {
+        let lo = gen::range(rng, 1, 4);
+        let hi = lo + gen::range(rng, 1, 4);
+        let cap = hi + gen::range(rng, 2, 6); // quota binds before capacity
+        let q = RequestQueue::new(cap, None);
+        let mut receivers: Vec<Rx> = Vec::new();
+        let mut id = 0u32;
+        let mut submit = |q: &RequestQueue, limit: usize| {
+            let mut age = 0;
+            let (req, rx) = make_req("a", id, &mut age, false);
+            id += 1;
+            (q.push(req, Priority::Normal, Some(limit)), rx)
+        };
+
+        // Fill to the wide limit, then the wide limit itself rejects.
+        for _ in 0..hi {
+            let (res, rx) = submit(&q, hi);
+            prop_assert!(res.is_ok(), "push below the wide limit must be accepted");
+            receivers.push(rx);
+        }
+        let (res, _) = submit(&q, hi);
+        prop_assert!(
+            matches!(res, Err(ServeError::ModelQuotaExceeded { quota, .. }) if quota == hi),
+            "push at the wide limit must reject with that limit"
+        );
+
+        // Membership grows → the share shrinks to `lo`. The backlog of
+        // `hi` is grandfathered but every new push sees the narrow limit.
+        let (res, _) = submit(&q, lo);
+        prop_assert!(
+            matches!(res, Err(ServeError::ModelQuotaExceeded { quota, .. }) if quota == lo),
+            "a shrunken limit must reject immediately (backlog {hi} > {lo})"
+        );
+
+        // Pop below the narrow limit: exactly one slot opens.
+        for _ in 0..(hi - lo + 1) {
+            let r = q.pop_until(Instant::now()).ok_or("queue drained early")?;
+            let _ = r.respond.send(Ok(r.x.clone()));
+        }
+        prop_assert_eq!(q.model_backlog("a"), lo - 1, "backlog after the draw-down");
+        let (res, rx) = submit(&q, lo);
+        prop_assert!(res.is_ok(), "one slot under the narrow limit must admit");
+        receivers.push(rx);
+        let (res, _) = submit(&q, lo);
+        prop_assert!(
+            matches!(res, Err(ServeError::ModelQuotaExceeded { quota, .. }) if quota == lo),
+            "the narrow limit must bind again at {lo} queued"
+        );
+
+        // Membership shrinks back → the share widens: admits up to `hi`.
+        for _ in 0..(hi - lo) {
+            let (res, rx) = submit(&q, hi);
+            prop_assert!(res.is_ok(), "re-widened limit must admit back up to {hi}");
+            receivers.push(rx);
+        }
+        let (res, _) = submit(&q, hi);
+        prop_assert!(
+            matches!(res, Err(ServeError::ModelQuotaExceeded { quota, .. }) if quota == hi),
+            "re-widened limit must still bind at {hi}"
+        );
+        prop_assert_eq!(q.model_backlog("a"), hi, "final backlog");
+
+        // Conservation across the whole shrink/grow history: the popped
+        // draw-down was answered Ok, everything still queued fails at
+        // close, rejected pushes are answered zero times (their channels
+        // just disconnect).
+        q.close_and_fail_pending();
+        let (mut served, mut failed) = (0usize, 0usize);
+        let total = receivers.len();
+        for rx in receivers {
+            match rx.try_recv().map_err(|e| format!("request lost: {e}"))? {
+                Ok(_) => served += 1,
+                Err(ServeError::Stopped) => failed += 1,
+                other => return Err(format!("unexpected outcome: {other:?}")),
+            }
+            prop_assert!(rx.try_recv().is_err(), "a request was answered twice");
+        }
+        prop_assert_eq!(served, hi - lo + 1, "exactly the draw-down was served");
+        prop_assert_eq!(served + failed, total, "conservation across re-resolution");
+        Ok(())
+    });
+}
+
+/// Quota re-resolution satellite (concurrent): a membership thread keeps
+/// re-resolving the limit (wide ⇄ narrow) while producers push with
+/// whatever limit is in force at their submit — the race the registry's
+/// under-lock re-resolution closes at the serving layer. The queue's own
+/// guarantees must hold under any interleaving: the model backlog never
+/// exceeds the widest limit ever in force, every quota rejection names a
+/// limit that was genuinely live, and conservation stays exact.
+#[test]
+fn prop_concurrent_quota_reresolution_bounds_backlog() {
+    const LO: usize = 2;
+    const HI: usize = 6;
+    const CAP: usize = 16; // > HI: quota, not capacity, is the binding bound
+    const PRODUCERS: usize = 2;
+    const PUSHES_PER_PRODUCER: usize = 300;
+
+    let q = Arc::new(RequestQueue::new(CAP, None));
+    let limit = Arc::new(AtomicUsize::new(HI));
+    let answered = Arc::new(AtomicUsize::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    std::thread::scope(|scope| {
+        let popper = {
+            let q = Arc::clone(&q);
+            let answered = Arc::clone(&answered);
+            scope.spawn(move || {
+                while let Some(r) = q.pop_blocking() {
+                    let _ = r.respond.send(Ok(r.x.clone()));
+                    answered.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+        };
+        // Membership churn: flip the resolved limit as fast as possible.
+        let flipper = {
+            let limit = Arc::clone(&limit);
+            let stop = Arc::clone(&stop);
+            scope.spawn(move || {
+                let mut wide = false;
+                while !stop.load(Ordering::Acquire) {
+                    limit.store(if wide { HI } else { LO }, Ordering::Relaxed);
+                    wide = !wide;
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let sampler = {
+            let q = Arc::clone(&q);
+            let stop = Arc::clone(&stop);
+            scope.spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    let backlog = q.model_backlog("a");
+                    assert!(
+                        backlog <= HI,
+                        "backlog {backlog} exceeded the widest limit {HI} mid-race"
+                    );
+                    std::thread::yield_now();
+                }
+            })
+        };
+
+        let mut producer_handles = Vec::new();
+        for p in 0..PRODUCERS {
+            let q = Arc::clone(&q);
+            let limit = Arc::clone(&limit);
+            producer_handles.push(scope.spawn(move || {
+                let mut rng = Rng::new(0xFA15_BACC + p as u64);
+                let mut accepted: Vec<(f32, Rx)> = Vec::new();
+                for i in 0..PUSHES_PER_PRODUCER {
+                    let id = (p * PUSHES_PER_PRODUCER + i) as f32;
+                    let (tx, rx) = mpsc::channel();
+                    let req = QueuedRequest {
+                        x: vec![id],
+                        enqueued: Instant::now(),
+                        deadline: None,
+                        respond: tx,
+                        claim: ModelClaim::detached("a", 1, 1, 1),
+                        route: None,
+                    };
+                    // Read the limit the way a submit path would: whatever
+                    // the latest re-resolution published.
+                    let live = limit.load(Ordering::Relaxed);
+                    match q.push(req, priority_of(rng.below_usize(3)), Some(live)) {
+                        Ok(_) => accepted.push((id, rx)),
+                        Err(ServeError::ModelQuotaExceeded { quota, .. }) => {
+                            assert_eq!(quota, live, "rejection must cite the limit it enforced");
+                        }
+                        Err(e) => panic!("unexpected push error: {e:?}"),
+                    }
+                    if rng.below(4) == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+                accepted
+            }));
+        }
+
+        let mut all_accepted: Vec<(f32, Rx)> = Vec::new();
+        for h in producer_handles {
+            all_accepted.extend(h.join().unwrap());
+        }
+        q.close();
+        popper.join().unwrap();
+        stop.store(true, Ordering::Release);
+        flipper.join().unwrap();
+        sampler.join().unwrap();
+
+        q.check_invariants();
+        assert_eq!(q.len(), 0, "closed queue must drain to empty");
+        assert_eq!(
+            answered.load(Ordering::Relaxed),
+            all_accepted.len(),
+            "every accepted entry popped exactly once"
+        );
+        for (id, rx) in &all_accepted {
+            match rx.try_recv() {
+                Ok(Ok(x)) => assert_eq!(x[0], *id, "answer routed to the wrong receiver"),
+                other => panic!("request {id} lost or failed: {other:?}"),
+            }
+            assert!(rx.try_recv().is_err(), "request {id} answered twice");
+        }
+    });
+}
+
 #[test]
 fn prop_concurrent_conservation_and_quota_1_thread() {
     run_concurrent_case(1, 0xC0FFEE01);
